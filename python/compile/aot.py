@@ -1,0 +1,429 @@
+"""AOT compiler: lower L2 train steps to HLO text + manifests.
+
+This is the only place Python touches the pipeline — ``make artifacts``
+runs it once; the Rust binary is self-contained afterwards.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).  Lowering goes stablehlo → XlaComputation
+with ``return_tuple=True``; the Rust side unwraps the tuple.
+
+For every variant two files are written:
+
+* ``artifacts/<name>.hlo.txt``       — the program;
+* ``artifacts/<name>.manifest.json`` — ordered input/output leaf
+  inventory (name, dtype, shape, group, trainable) plus metadata —
+  the contract ``rust/src/runtime/manifest.rs`` parses.
+
+Plus one ``artifacts/index.json`` listing everything built.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import trainstep as ts
+from compile.model import PRESETS, make_config, param_count
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {
+    "float32": "f32",
+    "float16": "f16",
+    "bfloat16": "bf16",
+    "int32": "s32",
+    "uint32": "u32",
+    "int8": "s8",
+    "uint8": "u8",
+    "bool": "pred",
+}
+
+
+def _dtype_name(dtype) -> str:
+    name = jnp.dtype(dtype).name
+    if name not in _DTYPE_NAMES:
+        raise ValueError(f"unsupported artifact dtype {name}")
+    return _DTYPE_NAMES[name]
+
+
+def _leaves(tree, group: str, trainable_from=None):
+    """Flatten one top-level argument into manifest leaf entries."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        entry = {
+            "name": group + jax.tree_util.keystr(path),
+            "dtype": _dtype_name(leaf.dtype),
+            "shape": list(leaf.shape),
+            "group": group,
+        }
+        if trainable_from is not None:
+            entry["trainable"] = bool(
+                jnp.issubdtype(leaf.dtype, jnp.inexact))
+        out.append(entry)
+    return out
+
+
+def manifest_for(fn, arg_groups, out_groups, meta):
+    """Build the manifest dict for ``fn(*args)``.
+
+    ``arg_groups``  : list of (group_name, example_tree, mark_trainable)
+    ``out_groups``  : list of (group_name) matching fn's output tuple
+                      positions (the output *is* a tuple).
+    """
+    args = [t for _, t, _ in arg_groups]
+    out_shape = jax.eval_shape(fn, *args)
+    if not isinstance(out_shape, tuple):
+        out_shape = (out_shape,)
+    if len(out_shape) != len(out_groups):
+        raise ValueError(
+            f"output arity {len(out_shape)} != groups {out_groups}")
+
+    inputs = []
+    for group, tree, trainable in arg_groups:
+        inputs.extend(_leaves(tree, group,
+                              trainable_from=tree if trainable else None))
+    outputs = []
+    for group, tree in zip(out_groups, out_shape):
+        outputs.extend(_leaves(tree, group))
+    return {"inputs": inputs, "outputs": outputs, "meta": meta}
+
+
+# ---------------------------------------------------------------------------
+# Variant registry
+# ---------------------------------------------------------------------------
+
+
+def _state_groups(config, precision):
+    model, opt_state, scaling = ts.example_state(config, precision)
+    return [
+        ("params", model, True),
+        ("opt_state", opt_state, False),
+        ("scaling", scaling, False),
+    ]
+
+
+def _batch_groups(config, batch):
+    images, labels = ts.example_batch(config, batch)
+    return [("images", images, False), ("labels", labels, False)]
+
+
+def build_variant(name: str, spec: dict):
+    """Returns (fn, example_args, manifest)."""
+    kind = spec["kind"]
+    if kind in ("init", "step_fused", "grads", "fwd"):
+        config = make_config(
+            spec["model"],
+            kernels=spec.get("kernels", "xla"),
+            remat=spec.get("remat", False),
+        )
+        precision = spec["precision"]
+        meta = {
+            "name": name,
+            "kind": kind,
+            "model": spec["model"],
+            "model_config": PRESETS[spec["model"]],
+            "precision": precision,
+            "kernels": spec.get("kernels", "xla"),
+            "batch": spec.get("batch"),
+            "optimizer": {"kind": "adamw", "lr": ts.LEARNING_RATE,
+                          "weight_decay": ts.WEIGHT_DECAY},
+            "loss_scaling": {
+                "init": 2.0 ** 15 if precision == "mixed_f16" else 1.0,
+                "period": 2000 if precision == "mixed_f16" else 2 ** 30,
+                "factor": 2.0,
+            },
+        }
+
+    if kind == "init":
+        fn = ts.build_init(config, precision)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        arg_groups = [("seed", seed, False)]
+        out_groups = ["params", "opt_state", "scaling"]
+        # init returns a 3-tuple of pytrees; eval_shape keeps that tuple.
+        m = manifest_for(fn, arg_groups, out_groups, meta)
+        meta["param_count"] = sum(
+            int(jnp.prod(jnp.asarray(e["shape"]))) if e["shape"] else 1
+            for e in m["outputs"]
+            if e["group"] == "params" and e["dtype"] in ("f32", "f16", "bf16"))
+        return fn, [seed], m
+
+    if kind == "step_fused":
+        fn = ts.build_step_fused(config, precision)
+        arg_groups = _state_groups(config, precision) + \
+            _batch_groups(config, spec["batch"])
+        out_groups = ["params", "opt_state", "scaling", "loss", "finite"]
+        m = manifest_for(fn, arg_groups, out_groups, meta)
+        return fn, [t for _, t, _ in arg_groups], m
+
+    if kind == "grads":
+        fn = ts.build_grads(config, precision)
+        model, _, _ = ts.example_state(config, precision)
+        scale = jax.ShapeDtypeStruct((), jnp.float32)
+        images, labels = ts.example_batch(config, spec["batch"])
+        arg_groups = [
+            ("params", model, True),
+            ("scale", scale, False),
+            ("images", images, False),
+            ("labels", labels, False),
+        ]
+        out_groups = ["grads", "loss", "finite"]
+        m = manifest_for(fn, arg_groups, out_groups, meta)
+        return fn, [t for _, t, _ in arg_groups], m
+
+    if kind == "fwd":
+        fn = ts.build_fwd(config, precision)
+        model, _, _ = ts.example_state(config, precision)
+        images, _ = ts.example_batch(config, spec["batch"])
+        arg_groups = [("params", model, True), ("images", images, False)]
+        out_groups = ["logits"]
+        m = manifest_for(fn, arg_groups, out_groups, meta)
+        return fn, [t for _, t, _ in arg_groups], m
+
+    if kind == "kernel":
+        return build_kernel_variant(name, spec)
+
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def build_kernel_variant(name: str, spec: dict):
+    """Micro-bench wrappers around single L1 kernels.
+
+    All I/O is float32 (the Rust literal layer is f32-only by design);
+    the half casts happen in-graph — exactly the mixed-precision
+    boundary the kernel implements.
+    """
+    from compile import kernels as K
+
+    op = spec["op"]
+    half = jnp.dtype(spec.get("half", "float16"))
+    meta = {"name": name, "kind": "kernel", "op": op,
+            "half": jnp.dtype(half).name, "shape": spec["shape"]}
+
+    if op == "matmul":
+        m, k, n = spec["shape"]
+        x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+        def fn(x, y):
+            out = K.mixed_matmul(
+                x.astype(half), y.astype(half), out_dtype=jnp.float32)
+            return (out,)
+
+        args = [x, y]
+        arg_groups = [("x", x, False), ("y", y, False)]
+        out_groups = ["out"]
+    elif op == "matmul_ref":
+        from compile.kernels import ref as R
+        m, k, n = spec["shape"]
+        x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+        def fn(x, y):
+            out = R.matmul_ref(x.astype(half), y.astype(half))
+            return (out.astype(jnp.float32),)
+
+        args = [x, y]
+        arg_groups = [("x", x, False), ("y", y, False)]
+        out_groups = ["out"]
+    elif op == "attention":
+        h, s, d = spec["shape"]
+        q = jax.ShapeDtypeStruct((h, s, d), jnp.float32)
+
+        def fn(q, k, v):
+            out = K.fused_attention(
+                q.astype(half), k.astype(half), v.astype(half))
+            return (out.astype(jnp.float32),)
+
+        args = [q, q, q]
+        arg_groups = [("q", q, False), ("k", q, False), ("v", q, False)]
+        out_groups = ["out"]
+    elif op == "layernorm":
+        rows, cols = spec["shape"]
+        x = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+        g = jax.ShapeDtypeStruct((cols,), jnp.float32)
+
+        def fn(x, g, b):
+            out = K.layernorm_fp32(
+                x.astype(half), g.astype(half), b.astype(half))
+            return (out.astype(jnp.float32),)
+
+        args = [x, g, g]
+        arg_groups = [("x", x, False), ("gamma", g, False), ("beta", g, False)]
+        out_groups = ["out"]
+    else:
+        raise ValueError(f"unknown kernel op {op!r}")
+
+    m = manifest_for(fn, arg_groups, out_groups, meta)
+    return fn, args, m
+
+
+# ---------------------------------------------------------------------------
+# Default artifact sets
+# ---------------------------------------------------------------------------
+
+
+def default_variants() -> dict:
+    v = {}
+
+    # --- test set (vit_tiny, fast) -------------------------------------
+    for prec in ("fp32", "mixed_f16", "mixed_bf16"):
+        v[f"init_vit_tiny_{prec}"] = dict(
+            kind="init", model="vit_tiny", precision=prec)
+        v[f"step_fused_vit_tiny_{prec}_b8"] = dict(
+            kind="step_fused", model="vit_tiny", precision=prec, batch=8)
+    v["fwd_vit_tiny_mixed_f16_b8"] = dict(
+        kind="fwd", model="vit_tiny", precision="mixed_f16", batch=8)
+    v["fwd_vit_tiny_fp32_b8"] = dict(
+        kind="fwd", model="vit_tiny", precision="fp32", batch=8)
+    v["grads_vit_tiny_mixed_f16_b8"] = dict(
+        kind="grads", model="vit_tiny", precision="mixed_f16", batch=8)
+    v["grads_vit_tiny_fp32_b8"] = dict(
+        kind="grads", model="vit_tiny", precision="fp32", batch=8)
+    # pallas-kernel path composed end-to-end:
+    v["step_fused_vit_tiny_pallas_mixed_f16_b8"] = dict(
+        kind="step_fused", model="vit_tiny", precision="mixed_f16",
+        batch=8, kernels="pallas")
+
+    # --- Fig. 2 / Fig. 3a: desktop (vit_desktop on CIFAR-100 shapes) ---
+    for prec in ("fp32", "mixed_f16"):
+        v[f"init_vit_desktop_{prec}"] = dict(
+            kind="init", model="vit_desktop", precision=prec)
+        for b in (8, 16, 32, 64, 128):
+            v[f"step_fused_vit_desktop_{prec}_b{b}"] = dict(
+                kind="step_fused", model="vit_desktop", precision=prec,
+                batch=b)
+        v[f"grads_vit_desktop_{prec}_b16"] = dict(
+            kind="grads", model="vit_desktop", precision=prec, batch=16)
+
+    # --- Fig. 3b: cluster (vit_base on ImageNet shapes, 4-shard DDP) ---
+    for prec in ("fp32", "mixed_f16"):
+        v[f"init_vit_base_{prec}"] = dict(
+            kind="init", model="vit_base", precision=prec)
+        for b in (1, 2):
+            v[f"step_fused_vit_base_{prec}_b{b}"] = dict(
+                kind="step_fused", model="vit_base", precision=prec, batch=b)
+        v[f"grads_vit_base_{prec}_b1"] = dict(
+            kind="grads", model="vit_base", precision=prec, batch=1)
+
+    # --- remat ablation (extension): trade compute for activation
+    # memory — compared against the plain b64 artifacts in
+    # fig2/ablation benches and EXPERIMENTS.md §ablations.
+    for prec in ("fp32", "mixed_f16"):
+        v[f"step_fused_vit_desktop_{prec}_b64_remat"] = dict(
+            kind="step_fused", model="vit_desktop", precision=prec,
+            batch=64, remat=True)
+
+    # --- L1 kernel micro-benches ----------------------------------------
+    for half in ("float16", "bfloat16"):
+        tag = "f16" if half == "float16" else "bf16"
+        v[f"kernel_matmul_{tag}_512"] = dict(
+            kind="kernel", op="matmul", half=half, shape=[512, 512, 512])
+        v[f"kernel_matmul_ref_{tag}_512"] = dict(
+            kind="kernel", op="matmul_ref", half=half, shape=[512, 512, 512])
+    v["kernel_attention_f16_vit"] = dict(
+        kind="kernel", op="attention", half="float16", shape=[8, 65, 32])
+    v["kernel_layernorm_f16_vit"] = dict(
+        kind="kernel", op="layernorm", half="float16", shape=[65, 256])
+
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def emit(name: str, spec: dict, out_dir: str, force: bool = False) -> dict:
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    spec_digest = hashlib.sha256(
+        json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
+
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                old = json.load(f)
+            if old.get("spec_digest") == spec_digest:
+                return {"name": name, "skipped": True}
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    t0 = time.time()
+    fn, args, manifest = build_variant(name, spec)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    manifest["spec_digest"] = spec_digest
+    manifest["hlo_bytes"] = len(text)
+
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    dt = time.time() - t0
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO, "
+          f"{len(manifest['inputs'])}→{len(manifest['outputs'])} leaves, "
+          f"{dt:.1f}s")
+    return {"name": name, "skipped": False, "seconds": round(dt, 2)}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", default=None,
+                   help="substring filter on variant names")
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    variants = default_variants()
+    if args.only:
+        variants = {k: v for k, v in variants.items() if args.only in k}
+    if args.list:
+        for k in sorted(variants):
+            print(k)
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    print(f"AOT: lowering {len(variants)} variants → {args.out_dir}")
+    results = []
+    for name in sorted(variants):
+        results.append(emit(name, variants[name], args.out_dir, args.force))
+
+    index = {
+        "variants": sorted(variants),
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    built = sum(1 for r in results if not r.get("skipped"))
+    print(f"AOT done: {built} built, {len(results) - built} up-to-date")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

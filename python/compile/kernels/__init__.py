@@ -1,0 +1,29 @@
+"""L1 — Pallas kernels for mixed-precision training hot-spots.
+
+Each kernel expresses the TPU adaptation of the paper's GPU recipe
+(DESIGN.md §Hardware-Adaptation): tiles sized for VMEM via
+``BlockSpec``, float32 accumulation/statistics inside the kernel (the
+MXU contract: half×half→float32), and a final cast back to the working
+precision.  Every kernel has a pure-``jnp`` oracle in
+:mod:`compile.kernels.ref` and a pytest/hypothesis sweep in
+``python/tests/test_kernels.py``.
+
+Kernels run under ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers the grid into plain HLO so the
+Rust runtime can load the result.
+"""
+
+from compile.kernels.matmul import mixed_matmul
+from compile.kernels.softmax import softmax_fp32
+from compile.kernels.layernorm import layernorm_fp32
+from compile.kernels.attention import fused_attention
+from compile.kernels.scaling import scale_cast, unscale_check
+
+__all__ = [
+    "mixed_matmul",
+    "softmax_fp32",
+    "layernorm_fp32",
+    "fused_attention",
+    "scale_cast",
+    "unscale_check",
+]

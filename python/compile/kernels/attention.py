@@ -1,0 +1,74 @@
+"""Fused multi-head attention — the ViT hot-spot as one Pallas kernel.
+
+The paper's Example 1 composes attention from separate matmuls plus a
+``force_full_precision`` softmax; on a real accelerator that spills the
+(seq × seq) score matrix to HBM twice.  This kernel is the fused TPU
+form: one grid step per head stages Q/K/V tiles into VMEM, computes
+float32 scores on the MXU, applies the float32 softmax *in registers*,
+and accumulates PV in float32 — the score matrix never leaves VMEM.
+
+Numerics contract (identical to ``ref.attention_ref``):
+  scores  = Q Kᵀ / √d      — f32 accumulate from half operands
+  probs   = softmax(scores) — f32 internals
+  out     = probs · V       — f32 accumulate, final cast to input dtype
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0]  # (seq, d) — block carries a singleton head axis
+    k = k_ref[0]
+    v = v_ref[0]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    out = jax.lax.dot_general(
+        probs, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def fused_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Scaled dot-product attention over ``(heads, seq, head_dim)``.
+
+    One grid step per head; the full (seq, d) tiles fit VMEM for ViT
+    shapes (seq ≤ 257, d ≤ 64 ⇒ < 200 KiB per operand at bf16).
+    """
+    h, s, d = q.shape
+    if k.shape != (h, s, d) or v.shape != (h, s, d):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

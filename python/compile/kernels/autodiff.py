@@ -1,0 +1,165 @@
+"""Differentiable wrappers for the L1 Pallas kernels.
+
+``pallas_call`` has no automatic reverse-mode rule, so each kernel gets
+a ``jax.custom_vjp``: the *forward* runs the Pallas kernel, the
+*backward* is hand-derived float32 math (itself built from the
+mixed-precision matmul kernel where a GEMM appears).  This mirrors how
+production kernels (FlashAttention, fused LN) ship: a fused forward
+plus a hand-written VJP, never autodiff through the kernel body.
+
+Gradient-correctness tests: ``python/tests/test_kernel_grads.py``
+compares every VJP against ``jax.grad`` of the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import fused_attention
+from compile.kernels.layernorm import layernorm_fp32
+from compile.kernels.matmul import mixed_matmul
+from compile.kernels.ref import softmax_ref
+from compile.kernels.softmax import softmax_fp32
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable mixed-precision GEMM (Pallas forward)."""
+    return mixed_matmul(x, y)
+
+
+def _matmul_fwd(x, y):
+    return mixed_matmul(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = G Yᵀ, dY = Xᵀ G — each again a mixed-precision GEMM with f32
+    # accumulation; cotangents stay in the working precision so the
+    # loss-scaling recipe applies unchanged.
+    dx = mixed_matmul(g, y.T, out_dtype=x.dtype)
+    dy = mixed_matmul(x.T, g, out_dtype=y.dtype)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# softmax
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def softmax(x: jax.Array) -> jax.Array:
+    """Differentiable f32-internal softmax (Pallas forward)."""
+    return softmax_fp32(x)
+
+
+def _softmax_fwd(x):
+    p = softmax_fp32(x)
+    return p, (p,)
+
+
+def _softmax_bwd(res, g):
+    (p,) = res
+    # dL/dx = p ⊙ (g − Σ_j g_j p_j), computed in f32.
+    p32 = p.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    inner = jnp.sum(g32 * p32, axis=-1, keepdims=True)
+    return ((p32 * (g32 - inner)).astype(g.dtype),)
+
+
+softmax.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """Differentiable f32-statistics LayerNorm (Pallas forward)."""
+    return layernorm_fp32(x, gamma, beta)
+
+
+def _layernorm_fwd(x, gamma, beta):
+    out = layernorm_fp32(x, gamma, beta)
+    return out, (x, gamma)
+
+
+def _layernorm_bwd(res, g):
+    x, gamma = res
+    eps = 1e-5
+    n = x.shape[-1]
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    gamma32 = gamma.astype(jnp.float32)
+
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    xc = x32 - mean
+    var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = xc * inv
+
+    dgamma = jnp.sum(g32 * xhat, axis=tuple(range(g32.ndim - 1)))
+    dbeta = jnp.sum(g32, axis=tuple(range(g32.ndim - 1)))
+
+    gh = g32 * gamma32
+    # classic LN backward, all in f32:
+    dx = inv / n * (
+        n * gh
+        - jnp.sum(gh, axis=-1, keepdims=True)
+        - xhat * jnp.sum(gh * xhat, axis=-1, keepdims=True)
+    )
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(gamma.dtype)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Differentiable fused attention (Pallas forward)."""
+    return fused_attention(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return fused_attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+
+    scores = jnp.einsum("hqd,hkd->hqk", q32, k32) * scale
+    p = softmax_ref(scores, axis=-1)  # f32
+
+    dv = jnp.einsum("hqk,hqd->hkd", p, g32)
+    dp = jnp.einsum("hqd,hkd->hqk", g32, v32)
+    # softmax backward on the scores:
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("hqk,hkd->hqd", ds, k32) * scale
+    dk = jnp.einsum("hqk,hqd->hkd", ds, q32) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

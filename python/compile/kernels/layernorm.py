@@ -1,0 +1,56 @@
+"""LayerNorm with float32 statistics — Pallas form of the paper's
+``mpx.force_full_precision(layer_norm, ...)`` (Example 1).
+
+Mean and variance are sums over the feature axis: in float16 they both
+lose precision (cancellation) and can overflow for large features.
+The kernel computes the statistics in float32 in VMEM and casts only
+the normalized output back to the working precision.  Gamma/beta ride
+along as unblocked (broadcast) operands."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x32 = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x32 - mean) * inv * g_ref[...].astype(jnp.float32) \
+        + b_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def layernorm_fp32(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """LayerNorm over the last axis of a 2-D array, f32 statistics."""
+    rows, n = x.shape
+    br = min(rows, block_rows)
+    while rows % br != 0:
+        br -= 1
+    grid = (rows // br,)
+
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)

@@ -1,0 +1,109 @@
+"""Mixed-precision tiled matmul — the paper's compute hot-spot on TPU.
+
+GPU mixed-precision training feeds half-precision operands to tensor
+cores that accumulate in float32.  The TPU analogue is the MXU systolic
+array: ``bf16×bf16→f32`` (or ``f16`` upcast).  This kernel expresses
+that contract in Pallas:
+
+* the grid ``(M/bm, N/bn, K/bk)`` is the HBM↔VMEM schedule — each step
+  stages one ``(bm, bk)``×``(bk, bn)`` tile pair into VMEM (the role
+  threadblock tiling plays in the paper's CUDA world);
+* a float32 VMEM scratch accumulator persists across the K steps
+  (revisiting the same output block), so precision never drops below
+  float32 until the final store;
+* only the final store casts down to the working precision.
+
+Block sizes default to 128×128×128 (8 MiB of f32 scratch + operand
+tiles ≪ 16 MiB VMEM) and shrink to divisors for small dimensions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``preferred``.
+
+    Keeps the grid exact (no padding logic in the kernel); ViT
+    dimensions (64/256/768/800/3072 …) all have friendly divisors.
+    """
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contract: half-precision operands, float32 accumulation.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mixed_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ y`` with float32 accumulation, tiled for VMEM.
+
+    ``x``: (M, K), ``y``: (K, N); result (M, N) in ``out_dtype``
+    (defaults to ``x.dtype``).  Operands may be f16/bf16/f32 — the
+    accumulator is always float32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    out_dtype = out_dtype or x.dtype
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int,
+               operand_bytes: int = 2) -> int:
+    """VMEM working set of one grid step (operand tiles + f32 scratch).
+
+    Used by DESIGN.md §Perf / the kernel_micro bench to check the
+    16 MiB VMEM budget on real TPU hardware.
+    """
+    return (
+        block_m * block_k * operand_bytes
+        + block_k * block_n * operand_bytes
+        + block_m * block_n * 4
+    )

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the CORE correctness signal: each Pallas kernel must agree
+with its oracle to within the tolerance the half-precision format
+allows (pytest + hypothesis sweeps in ``python/tests/test_kernels.py``).
+The oracles also serve as the XLA-native fallback path the L2 model can
+select (``kernels="xla"``) — both paths AOT-lower to artifacts the Rust
+runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mixed-precision GEMM oracle: half×half → float32 accumulate →
+    cast back to the input dtype (the MXU/tensor-core contract)."""
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-safe softmax: float32 internals (max-shift, exp,
+    normalize), result cast back — what ``mpx.force_full_precision``
+    produces around ``jax.nn.softmax`` (paper Example 1)."""
+    x32 = x.astype(jnp.float32)
+    x32 = x32 - jnp.max(x32, axis=axis, keepdims=True)
+    e = jnp.exp(x32)
+    out = e / jnp.sum(e, axis=axis, keepdims=True)
+    return out.astype(x.dtype)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm oracle with float32 statistics over the last axis."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x32 - mean) * inv * gamma.astype(jnp.float32) \
+        + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention oracle over (heads, seq, head_dim):
+    float32 scores, float32 softmax, float32 PV accumulate."""
+    d = q.shape[-1]
+    scores = jnp.einsum(
+        "hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d))
+    probs = softmax_ref(scores, axis=-1)  # float32 in, float32 out
+    out = jnp.einsum(
+        "hqk,hkd->hqd", probs, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+def scale_cast_ref(x: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Loss-scaling forward helper oracle: multiply then cast down."""
+    return (x.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def unscale_check_ref(g: jax.Array, scale: jax.Array):
+    """Gradient post-processing oracle: cast to float32, divide by the
+    scale, and report whether every element is finite."""
+    g32 = g.astype(jnp.float32) / scale.astype(jnp.float32)
+    finite = jnp.all(jnp.isfinite(g32))
+    return g32, finite

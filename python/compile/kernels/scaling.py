@@ -1,0 +1,104 @@
+"""Loss-scaling data movement as Pallas kernels.
+
+Two small kernels bracket the backward pass (paper §2.1 steps 2, 4–6):
+
+* :func:`scale_cast` — multiply by the scale factor and cast down, the
+  op applied to the loss (and conceptually to every cotangent seed);
+* :func:`unscale_check` — the gradient post-pass: upcast to float32,
+  divide by the scale, and fold a finite-ness flag across all blocks
+  (the flag drives the optimizer-skip and scale adjustment).
+
+``unscale_check`` demonstrates a cross-block reduction in Pallas: every
+grid step AND-accumulates its block's finiteness into a single (1, 1)
+output that all steps map to."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_cast_kernel(x_ref, s_ref, o_ref):
+    x32 = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (x32 * s_ref[0]).astype(o_ref.dtype)
+
+
+def scale_cast(
+    x: jax.Array,
+    scale: jax.Array,
+    dtype,
+    *,
+    block_rows: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """``(x * scale).astype(dtype)`` with float32 multiply, 2-D x."""
+    rows, n = x.shape
+    br = min(rows, block_rows)
+    while rows % br != 0:
+        br -= 1
+    scale = jnp.reshape(scale.astype(jnp.float32), (1,))
+
+    return pl.pallas_call(
+        _scale_cast_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), dtype),
+        interpret=interpret,
+    )(x, scale)
+
+
+def _unscale_kernel(g_ref, s_ref, o_ref, fin_ref, *, n_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        fin_ref[0, 0] = jnp.int32(1)
+
+    g32 = g_ref[...].astype(jnp.float32) / s_ref[0]
+    o_ref[...] = g32
+    block_finite = jnp.all(jnp.isfinite(g32)).astype(jnp.int32)
+    fin_ref[0, 0] = fin_ref[0, 0] * block_finite
+
+
+def unscale_check(
+    g: jax.Array,
+    scale: jax.Array,
+    *,
+    block_rows: int = 512,
+    interpret: bool = True,
+):
+    """Returns ``(g/scale as float32, all_finite flag)`` for 2-D g.
+
+    The finite flag comes back as an int32 scalar (1 = finite) because
+    a (1, 1) output block is the natural cross-grid accumulator shape.
+    """
+    rows, n = g.shape
+    br = min(rows, block_rows)
+    while rows % br != 0:
+        br -= 1
+    scale = jnp.reshape(scale.astype(jnp.float32), (1,))
+    grid = (rows // br,)
+
+    out, fin = pl.pallas_call(
+        functools.partial(_unscale_kernel, n_steps=grid[0]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(g, scale)
+    return out, fin[0, 0] == 1

@@ -1,0 +1,47 @@
+"""Row softmax with float32 internals — Pallas form of the paper's
+``mpx.force_full_precision(jax.nn.softmax, ...)`` (Example 1).
+
+``exp`` overflows float16 for inputs > ~11.09 (e^11.1 > 65504), so the
+kernel upcasts each row block to float32 in VMEM, performs the
+max-shift / exp / normalize entirely in float32, and casts only the
+final probabilities back to the working precision.  The row dimension
+is gridded; each step stages a ``(block_rows, n)`` tile."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x32 = x_ref[...].astype(jnp.float32)
+    x32 = x32 - jnp.max(x32, axis=-1, keepdims=True)
+    e = jnp.exp(x32)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = probs.astype(o_ref.dtype)
+
+
+def softmax_fp32(
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Softmax over the last axis of a 2-D array, f32 internals."""
+    rows, n = x.shape
+    br = min(rows, block_rows)
+    while rows % br != 0:
+        br -= 1
+    grid = (rows // br,)
+
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x)

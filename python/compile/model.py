@@ -1,0 +1,283 @@
+"""L2 — the paper's evaluation model: a Vision Transformer.
+
+Paper §5 trains two ViTs: a desktop one (feature 256, MLP hidden 800,
+CIFAR-100) and a ViT-Base-shaped one (feature 768, MLP 3072,
+ImageNet-1k).  This module reproduces the architecture of the paper's
+Example 1 on top of the mini-Equinox substrate (:mod:`mpx.nn`):
+
+* multi-head self-attention blocks whose softmax and layer-norms run in
+  full precision (``mpx.force_full_precision`` — or, with
+  ``kernels="pallas"``, the fused L1 kernels whose float32 internals
+  realize the same guarantee in one VMEM pass);
+* pre-LN residual wiring, GELU MLP, learned position embeddings, a CLS
+  token, and a linear classifier head.
+
+The model is built in float32 (master weights); mixed-precision
+execution happens when ``mpx.filter_grad`` casts the whole PyTree to
+half before the forward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import mpx
+from mpx import nn
+from compile.kernels import autodiff as kad
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+class ViTConfig:
+    """Architecture hyper-parameters (static, hashable)."""
+
+    def __init__(self, *, image_size: int, patch_size: int, channels: int,
+                 num_classes: int, feature_dim: int, mlp_dim: int,
+                 num_heads: int, depth: int, kernels: str = "xla",
+                 remat: bool = False):
+        if image_size % patch_size != 0:
+            raise ValueError("image_size must be a multiple of patch_size")
+        if feature_dim % num_heads != 0:
+            raise ValueError("feature_dim must be a multiple of num_heads")
+        if kernels not in ("xla", "pallas"):
+            raise ValueError(f"kernels must be 'xla' or 'pallas': {kernels}")
+        self.image_size = image_size
+        self.patch_size = patch_size
+        self.channels = channels
+        self.num_classes = num_classes
+        self.feature_dim = feature_dim
+        self.mlp_dim = mlp_dim
+        self.num_heads = num_heads
+        self.depth = depth
+        self.kernels = kernels
+        #: rematerialize block activations in the backward pass —
+        #: trades compute for the batch-scaling memory term (an
+        #: extension ablation; see EXPERIMENTS.md §ablations).
+        self.remat = remat
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def seq_len(self) -> int:
+        return self.num_patches + 1  # + CLS token
+
+    def __repr__(self):
+        return (f"ViTConfig(img={self.image_size}, patch={self.patch_size}, "
+                f"dim={self.feature_dim}, mlp={self.mlp_dim}, "
+                f"heads={self.num_heads}, depth={self.depth}, "
+                f"classes={self.num_classes}, kernels={self.kernels})")
+
+
+#: Paper §5 model presets.  ``vit_tiny`` is ours, for fast tests and the
+#: quickstart; ``vit_desktop`` matches the paper's RTX4070 experiment
+#: ("size 256, residual blocks with one hidden layer of 800 neurons");
+#: ``vit_base`` mirrors the CLAIX-2023 H100 experiment (ViT-Base dims).
+PRESETS = {
+    "vit_tiny": dict(image_size=32, patch_size=8, channels=3, num_classes=10,
+                     feature_dim=64, mlp_dim=128, num_heads=4, depth=2),
+    "vit_desktop": dict(image_size=32, patch_size=4, channels=3,
+                        num_classes=100, feature_dim=256, mlp_dim=800,
+                        num_heads=8, depth=6),
+    "vit_base": dict(image_size=224, patch_size=16, channels=3,
+                     num_classes=1000, feature_dim=768, mlp_dim=3072,
+                     num_heads=12, depth=12),
+}
+
+
+def make_config(name: str, kernels: str = "xla",
+                remat: bool = False) -> ViTConfig:
+    if name not in PRESETS:
+        raise KeyError(f"unknown model preset {name!r}; have {sorted(PRESETS)}")
+    return ViTConfig(kernels=kernels, remat=remat, **PRESETS[name])
+
+
+# ---------------------------------------------------------------------------
+# Blocks (paper Example 1 structure)
+# ---------------------------------------------------------------------------
+
+
+def _reshape_heads(x: jax.Array, num_heads: int) -> jax.Array:
+    """(n, h·f) → (h, n, f) — the einshape of paper Example 1."""
+    n, hf = x.shape
+    f = hf // num_heads
+    return jnp.transpose(x.reshape(n, num_heads, f), (1, 0, 2))
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(h, n, f) → (n, h·f)."""
+    h, n, f = x.shape
+    return jnp.transpose(x, (1, 0, 2)).reshape(n, h * f)
+
+
+class MultiHeadAttentionBlock(nn.Module):
+    """Pre-LN multi-head self-attention with full-precision softmax.
+
+    Follows the paper's Example 1 line by line; with
+    ``kernels="pallas"`` the layer-norm and the attention core run as
+    fused L1 kernels (float32 internals in VMEM) instead of
+    ``mpx.force_full_precision``-wrapped jnp ops.
+    """
+
+    def __init__(self, feature_dim: int, num_heads: int, key,
+                 kernels: str = "xla"):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        self.dense_qs = nn.Linear(feature_dim, feature_dim, k1)
+        self.dense_ks = nn.Linear(feature_dim, feature_dim, k2)
+        self.dense_vs = nn.Linear(feature_dim, feature_dim, k3)
+        self.dense_o = nn.Linear(feature_dim, feature_dim, k4)
+        self.layer_norm = nn.LayerNorm(feature_dim)
+        self.num_heads = num_heads
+        self.kernels = kernels
+
+    def _attention(self, qs: jax.Array, ks: jax.Array, vs: jax.Array):
+        if self.kernels == "pallas":
+            return kad.attention(qs, ks, vs)
+        d = qs.shape[-1]
+        scores = jnp.einsum("hqd,hkd->hqk", qs, ks) / jnp.sqrt(
+            jnp.asarray(d, qs.dtype))
+        probs = mpx.force_full_precision(jax.nn.softmax, scores.dtype)(
+            scores, axis=-1)
+        return jnp.einsum("hqk,hkd->hqd", probs, vs)
+
+    def _norm(self, x: jax.Array) -> jax.Array:
+        if self.kernels == "pallas":
+            return kad.layernorm(x, self.layer_norm.weight,
+                                 self.layer_norm.bias)
+        return jax.vmap(
+            mpx.force_full_precision(self.layer_norm, x.dtype))(x)
+
+    def __call__(self, inputs: jax.Array) -> jax.Array:
+        x = self._norm(inputs)
+        qs = _reshape_heads(self.dense_qs(x), self.num_heads)
+        ks = _reshape_heads(self.dense_ks(x), self.num_heads)
+        vs = _reshape_heads(self.dense_vs(x), self.num_heads)
+        out = _merge_heads(self._attention(qs, ks, vs))
+        return self.dense_o(out) + inputs
+
+
+class MLPBlock(nn.Module):
+    """Pre-LN residual MLP block (one hidden layer, GELU)."""
+
+    def __init__(self, feature_dim: int, mlp_dim: int, key,
+                 kernels: str = "xla"):
+        k1, k2 = jax.random.split(key)
+        self.fc_in = nn.Linear(feature_dim, mlp_dim, k1)
+        self.fc_out = nn.Linear(mlp_dim, feature_dim, k2)
+        self.layer_norm = nn.LayerNorm(feature_dim)
+        self.kernels = kernels
+
+    def __call__(self, inputs: jax.Array) -> jax.Array:
+        if self.kernels == "pallas":
+            x = kad.layernorm(inputs, self.layer_norm.weight,
+                              self.layer_norm.bias)
+            h = jax.nn.gelu(kad.matmul(x, self.fc_in.weight.T)
+                            + self.fc_in.bias)
+            out = kad.matmul(h, self.fc_out.weight.T) + self.fc_out.bias
+        else:
+            x = jax.vmap(
+                mpx.force_full_precision(self.layer_norm, inputs.dtype)
+            )(inputs)
+            h = jax.nn.gelu(self.fc_in(x))
+            out = self.fc_out(h)
+        return out + inputs
+
+
+class VisionTransformer(nn.Module):
+    """The full ViT: patchify → embed → blocks → LN → classifier.
+
+    ``__call__`` maps a single image (C, H, W) to logits; batch via
+    ``jax.vmap`` (paper Example 1 does the same).
+    """
+
+    def __init__(self, config: ViTConfig, key):
+        keys = jax.random.split(key, 2 * config.depth + 3)
+        patch_dim = config.channels * config.patch_size ** 2
+
+        self.patch_embed = nn.Linear(patch_dim, config.feature_dim, keys[0])
+        self.pos_embed = 0.02 * jax.random.normal(
+            keys[1], (config.seq_len, config.feature_dim), jnp.float32)
+        self.cls_token = jnp.zeros((1, config.feature_dim), jnp.float32)
+
+        blocks = []
+        for i in range(config.depth):
+            blocks.append(MultiHeadAttentionBlock(
+                config.feature_dim, config.num_heads, keys[2 + 2 * i],
+                kernels=config.kernels))
+            blocks.append(MLPBlock(
+                config.feature_dim, config.mlp_dim, keys[3 + 2 * i],
+                kernels=config.kernels))
+        self.blocks = tuple(blocks)
+
+        self.final_norm = nn.LayerNorm(config.feature_dim)
+        self.head = nn.Linear(config.feature_dim, config.num_classes,
+                              keys[2 * config.depth + 2])
+
+        self.patch_size = config.patch_size
+        self.kernels = config.kernels
+        self.remat = config.remat
+
+    def _patchify(self, image: jax.Array) -> jax.Array:
+        """(C, H, W) → (num_patches, C·p²)."""
+        c, h, w = image.shape
+        p = self.patch_size
+        x = image.reshape(c, h // p, p, w // p, p)
+        x = jnp.transpose(x, (1, 3, 0, 2, 4))  # (h/p, w/p, c, p, p)
+        return x.reshape((h // p) * (w // p), c * p * p)
+
+    def __call__(self, image: jax.Array) -> jax.Array:
+        x = self.patch_embed(self._patchify(image))
+        x = jnp.concatenate(
+            [self.cls_token.astype(x.dtype), x], axis=0)
+        x = x + self.pos_embed.astype(x.dtype)
+        for block in self.blocks:
+            if self.remat:
+                # recompute this block's activations in the backward
+                # pass instead of storing them (jax.checkpoint supports
+                # differentiable closure captures — the block's params)
+                x = jax.checkpoint(block)(x)
+            else:
+                x = block(x)
+        if self.kernels == "pallas":
+            from compile.kernels import autodiff as kad_
+            x = kad_.layernorm(x, self.final_norm.weight,
+                               self.final_norm.bias)
+        else:
+            x = jax.vmap(
+                mpx.force_full_precision(self.final_norm, x.dtype))(x)
+        return self.head(x[0])  # CLS token
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy_loss(model: VisionTransformer, batch) -> jax.Array:
+    """Mean softmax cross-entropy; log-softmax forced to full precision
+    (a sum-exp reduction — exactly the §3.2 overflow case)."""
+    images, labels = batch
+    logits = jax.vmap(model)(images)
+    logp = mpx.force_full_precision(jax.nn.log_softmax, jnp.float32)(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def accuracy(model: VisionTransformer, batch) -> jax.Array:
+    images, labels = batch
+    logits = jax.vmap(model)(images)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def param_count(model) -> int:
+    return sum(
+        leaf.size for leaf in jax.tree_util.tree_leaves(model)
+        if mpx.is_inexact_array(leaf)
+    )

@@ -1,0 +1,162 @@
+"""L2 — train-step builders: the functions the Rust coordinator runs.
+
+Three function families, all pure PyTree→PyTree (so they AOT-lower to
+a single HLO module each):
+
+* ``init``       : seed → (model, opt_state, scaling) — parameter
+  initialization lives in-graph, so Rust never needs to know the
+  init distributions.
+* ``step_fused`` : (model, opt_state, scaling, images, labels) →
+  (model', opt_state', scaling', loss, grads_finite) — the
+  single-device fast path; the whole §2.1 recipe (cast, scale,
+  grad, unscale, check, adjust, conditional update) is one HLO
+  program.
+* ``grads``      : (model, scale, images, labels) →
+  (grads_f32, loss, grads_finite) — the data-parallel path; the
+  Rust coordinator owns all-reduce, scale adjustment and the
+  optimizer (mirroring a multi-GPU MPX deployment where the
+  update is replicated host logic).
+* ``fwd``        : (model, images) → logits — serving/eval.
+
+Precision modes:
+
+* ``fp32``       — baseline: no casting, loss scale pinned to 1.
+* ``mixed_f16``  — paper's main mode: float16 + dynamic loss scaling.
+* ``mixed_bf16`` — bfloat16; same exponent range as f32, so the
+  dynamic scaling is effectively dormant but kept for a uniform
+  state layout across artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import mpx
+from mpx import optim
+from compile.model import (
+    ViTConfig,
+    VisionTransformer,
+    cross_entropy_loss,
+    make_config,
+)
+
+PRECISIONS = ("fp32", "mixed_f16", "mixed_bf16")
+
+#: Fixed optimizer recipe for all artifacts (recorded in the manifest).
+LEARNING_RATE = 3e-4
+WEIGHT_DECAY = 1e-4
+
+
+def make_optimizer() -> optim.GradientTransformation:
+    return optim.adamw(LEARNING_RATE, weight_decay=WEIGHT_DECAY)
+
+
+def initial_scaling(precision: str) -> mpx.DynamicLossScaling:
+    """Uniform scaling-state layout across precisions.
+
+    fp32/bf16 pin the scale to 1 with an unreachable growth period —
+    bit-identical state shape, mathematically a no-op (scaling by 1.0
+    is exact in every binary float format).
+    """
+    if precision == "mixed_f16":
+        return mpx.DynamicLossScaling(2.0 ** 15, period=2000)
+    return mpx.DynamicLossScaling(
+        1.0, period=2 ** 30, min_loss_scaling=1.0, max_loss_scaling=1.0)
+
+
+def _half_dtype(precision: str):
+    return jnp.bfloat16 if precision == "mixed_bf16" else jnp.float16
+
+
+def build_init(config: ViTConfig, precision: str) -> Callable:
+    """seed:int32 → (model, opt_state, scaling)."""
+    optimizer = make_optimizer()
+
+    def init(seed: jax.Array):
+        key = jax.random.PRNGKey(seed)
+        model = VisionTransformer(config, key)
+        opt_state = optimizer.init(
+            mpx.filter_arrays(model, mpx.is_inexact_array))
+        scaling = initial_scaling(precision)
+        return model, opt_state, scaling
+
+    return init
+
+
+def build_step_fused(config: ViTConfig, precision: str) -> Callable:
+    """The fused single-device train step (paper Example 2b inlined)."""
+    optimizer = make_optimizer()
+    use_mp = precision != "fp32"
+
+    def step(model, opt_state, scaling, images, labels):
+        mpx.set_half_dtype(_half_dtype(precision))
+        loss, new_scaling, grads_finite, grads = mpx.filter_value_and_grad(
+            cross_entropy_loss, scaling, use_mixed_precision=use_mp
+        )(model, (images, labels))
+        model, opt_state = mpx.optimizer_update(
+            model, optimizer, opt_state, grads, grads_finite)
+        return model, opt_state, new_scaling, loss, grads_finite
+
+    return step
+
+
+def build_grads(config: ViTConfig, precision: str) -> Callable:
+    """Per-shard gradient computation for the data-parallel mode.
+
+    Takes the raw scale factor (not the full scaling state): the Rust
+    coordinator owns the adjust logic because only it sees the global
+    (all-shard) finiteness.
+    """
+    use_mp = precision != "fp32"
+
+    def grads_fn(model, scale: jax.Array, images, labels):
+        mpx.set_half_dtype(_half_dtype(precision))
+        scaling = mpx.StaticLossScaling(scale)
+        loss, _, grads_finite, grads = mpx.filter_value_and_grad(
+            cross_entropy_loss, scaling, use_mixed_precision=use_mp
+        )(model, (images, labels))
+        return grads, loss, grads_finite
+
+    return grads_fn
+
+
+def build_fwd(config: ViTConfig, precision: str) -> Callable:
+    """Batched inference forward (serving/eval path)."""
+    use_mp = precision != "fp32"
+
+    def fwd(model, images):
+        mpx.set_half_dtype(_half_dtype(precision))
+        if use_mp:
+            model = mpx.cast_to_half_precision(model)
+            images = mpx.cast_to_half_precision(images)
+        logits = jax.vmap(model)(images)
+        return logits.astype(jnp.float32)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (ShapeDtypeStructs for AOT lowering)
+# ---------------------------------------------------------------------------
+
+
+def example_batch(config: ViTConfig, batch: int):
+    images = jax.ShapeDtypeStruct(
+        (batch, config.channels, config.image_size, config.image_size),
+        jnp.float32)
+    labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return images, labels
+
+
+def example_state(config: ViTConfig, precision: str):
+    """Abstract (model, opt_state, scaling) via eval_shape of init."""
+    init = build_init(config, precision)
+    return jax.eval_shape(init, jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def concrete_state(config: ViTConfig, precision: str, seed: int = 0):
+    """Host-side init (for pytest, not for artifacts)."""
+    return build_init(config, precision)(jnp.asarray(seed, jnp.int32))

@@ -1,0 +1,87 @@
+"""MPX — Mixed Precision Training for JAX (reproduction).
+
+This package reproduces the library contribution of
+
+    Gräfe & Trimpe, "MPX: Mixed Precision Training for JAX", 2025.
+
+It provides, from scratch (neither Equinox, Optax nor JMP are available
+in this environment — see DESIGN.md for the substitution table):
+
+* PyTree casting utilities (paper §3.1): :func:`cast_tree`,
+  :func:`cast_to_half_precision`, :func:`cast_to_float16`,
+  :func:`cast_to_bfloat16`, :func:`cast_to_float32`.
+* Function casting (paper §3.2): :func:`cast_function`,
+  :func:`force_full_precision`.
+* Dynamic loss scaling (paper §3.3): :class:`DynamicLossScaling`,
+  :class:`StaticLossScaling`, :class:`NoOpLossScaling`.
+* Mixed-precision gradient transforms (paper §3.4):
+  :func:`filter_grad`, :func:`filter_value_and_grad`.
+* The optimizer wrapper (paper §3.5): :func:`optimizer_update`.
+* The substrates the paper builds on: a mini-Equinox module system
+  (:mod:`mpx.nn` — callable PyTrees + filtered transforms) and a
+  mini-Optax (:mod:`mpx.optim` — sgd/adam/adamw/clip/chain).
+
+The whole package is build-time only in this repository: models and
+train steps written against it are AOT-lowered to HLO text by
+``python/compile/aot.py`` and executed from the Rust coordinator.
+"""
+
+from mpx.casting import (
+    HalfPrecisionPolicy,
+    cast_function,
+    cast_to_bfloat16,
+    cast_to_float16,
+    cast_to_float32,
+    cast_to_half_precision,
+    cast_tree,
+    force_full_precision,
+    get_half_dtype,
+    set_half_dtype,
+)
+from mpx.grad import filter_grad, filter_value_and_grad
+from mpx.loss_scaling import (
+    DynamicLossScaling,
+    LossScaling,
+    NoOpLossScaling,
+    StaticLossScaling,
+)
+from mpx.train import optimizer_update, tree_select
+from mpx.tree_util import (
+    all_finite,
+    combine,
+    filter_arrays,
+    is_array,
+    is_inexact_array,
+    partition,
+    tree_cast,
+)
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "HalfPrecisionPolicy",
+    "cast_function",
+    "cast_to_bfloat16",
+    "cast_to_float16",
+    "cast_to_float32",
+    "cast_to_half_precision",
+    "cast_tree",
+    "force_full_precision",
+    "get_half_dtype",
+    "set_half_dtype",
+    "filter_grad",
+    "filter_value_and_grad",
+    "DynamicLossScaling",
+    "LossScaling",
+    "NoOpLossScaling",
+    "StaticLossScaling",
+    "optimizer_update",
+    "tree_select",
+    "all_finite",
+    "combine",
+    "filter_arrays",
+    "is_array",
+    "is_inexact_array",
+    "partition",
+    "tree_cast",
+]

@@ -1,0 +1,131 @@
+"""PyTree and function casting (paper §3.1 / §3.2).
+
+MPX's design leverages JAX's type-promotion lattice: once the *inputs*
+of a function have been cast to a given precision, every operation
+inside executes in that precision, provided constants sit on the weak
+side of the lattice.  Casting is therefore applied at function
+boundaries only:
+
+* :func:`cast_tree` and friends cast the floating-point leaves of an
+  arbitrary PyTree (integer leaves — PRNG keys, counters — are never
+  touched).
+* :func:`cast_function` wraps a function so its inputs (and optionally
+  outputs) are cast.
+* :func:`force_full_precision` is the inverse safety hatch: it runs an
+  overflow-prone sub-computation (softmax, sum, mean, layernorm
+  statistics) in float32 regardless of the surrounding precision, then
+  casts the result back.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from mpx.tree_util import is_floating_array, tree_cast
+
+_HALF_DTYPE = jnp.float16
+
+
+class HalfPrecisionPolicy:
+    """Process-wide choice of the half-precision format.
+
+    The paper supports both IEEE float16 (needs loss scaling, larger
+    mantissa) and bfloat16 (same exponent range as float32, usually no
+    scaling needed).  The policy only affects
+    :func:`cast_to_half_precision`; the explicit casts are unaffected.
+    """
+
+    def __init__(self, dtype: Any = jnp.float16):
+        dtype = jnp.dtype(dtype)
+        if dtype not in (jnp.dtype(jnp.float16), jnp.dtype(jnp.bfloat16)):
+            raise ValueError(
+                f"half-precision policy must be float16 or bfloat16, got {dtype}"
+            )
+        self.dtype = dtype
+
+    def __repr__(self) -> str:
+        return f"HalfPrecisionPolicy({self.dtype.name})"
+
+
+def set_half_dtype(dtype: Any) -> None:
+    """Set the dtype used by :func:`cast_to_half_precision` globally."""
+    global _HALF_DTYPE
+    _HALF_DTYPE = HalfPrecisionPolicy(dtype).dtype
+
+
+def get_half_dtype():
+    """The dtype :func:`cast_to_half_precision` currently targets."""
+    return _HALF_DTYPE
+
+
+def cast_tree(tree: Any, dtype: Any) -> Any:
+    """Cast every floating-point array leaf of ``tree`` to ``dtype``.
+
+    Non-float leaves (integer arrays — crucially PRNG keys — bools,
+    Python scalars, ``None``) pass through unchanged (paper §3.1).
+    """
+    return tree_cast(tree, dtype, predicate=is_floating_array)
+
+
+def cast_to_half_precision(tree: Any) -> Any:
+    """Cast float leaves to the current half-precision policy dtype."""
+    return cast_tree(tree, _HALF_DTYPE)
+
+
+def cast_to_float16(tree: Any) -> Any:
+    """Cast float leaves to IEEE binary16."""
+    return cast_tree(tree, jnp.float16)
+
+
+def cast_to_bfloat16(tree: Any) -> Any:
+    """Cast float leaves to bfloat16."""
+    return cast_tree(tree, jnp.bfloat16)
+
+
+def cast_to_float32(tree: Any) -> Any:
+    """Cast float leaves to float32 (full precision)."""
+    return cast_tree(tree, jnp.float32)
+
+
+def cast_function(
+    func: Callable,
+    dtype: Any,
+    return_dtype: Optional[Any] = None,
+) -> Callable:
+    """Return ``func`` with inputs cast to ``dtype`` (outputs optional).
+
+    Paper §3.2.  The returned function first applies
+    :func:`cast_tree` to ``(args, kwargs)``, calls ``func``, and — when
+    ``return_dtype`` is given — casts the outputs as well.
+    """
+
+    @functools.wraps(func)
+    def wrapper(*args, **kwargs):
+        args = cast_tree(args, dtype)
+        kwargs = cast_tree(kwargs, dtype)
+        out = func(*args, **kwargs)
+        if return_dtype is not None:
+            out = cast_tree(out, return_dtype)
+        return out
+
+    return wrapper
+
+
+def force_full_precision(
+    func: Callable,
+    return_dtype: Optional[Any] = None,
+) -> Callable:
+    """Run ``func`` in float32 regardless of the surrounding precision.
+
+    Paper §3.2: essential for reductions prone to overflow in float16
+    (sum, mean, softmax, layer-norm statistics).  ``return_dtype``
+    usually receives the dtype of the *surrounding* computation so that
+    the full-precision island does not leak float32 into the
+    half-precision graph::
+
+        attn = mpx.force_full_precision(jax.nn.softmax, scores.dtype)(scores)
+    """
+    return cast_function(func, jnp.float32, return_dtype=return_dtype)

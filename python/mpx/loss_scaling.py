@@ -1,0 +1,192 @@
+"""Dynamic loss scaling (paper §2.1 / §3.3).
+
+Float16 resolves ~5.96e-8 at best; gradients below that underflow to
+zero.  Loss scaling multiplies the loss by ``S`` before the backward
+pass, shifting the whole gradient distribution up into representable
+range, and divides by ``S`` afterwards.  *Dynamic* loss scaling adapts
+``S`` at runtime with the classic heuristic of Micikevicius et al.
+(2017): halve on overflow, double after ``period`` consecutive finite
+steps.
+
+The scaling objects are :class:`mpx.nn.Module` subclasses and hence
+PyTrees: they can be passed through ``jax.jit``, carried in the train
+state the Rust coordinator owns, and sharded (replicated) for
+multi-device training.  The Rust data-parallel mode re-implements the
+same state machine (``rust/src/scaling/``); the two are parity-tested
+against shared traces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from mpx.casting import cast_to_float32
+from mpx.nn import Module
+from mpx.tree_util import is_floating_array
+
+#: Defaults follow Micikevicius et al. (2017) and NVIDIA AMP.
+DEFAULT_INITIAL_SCALE = 2.0 ** 15
+DEFAULT_PERIOD = 2000
+DEFAULT_FACTOR = 2.0
+DEFAULT_MIN_SCALE = 1.0
+DEFAULT_MAX_SCALE = 2.0 ** 24
+
+
+class LossScaling(Module):
+    """Interface: ``scale``, ``unscale``, ``adjust``."""
+
+    def scale(self, tree):
+        raise NotImplementedError
+
+    def unscale(self, tree):
+        raise NotImplementedError
+
+    def adjust(self, grads_finite: jax.Array) -> "LossScaling":
+        raise NotImplementedError
+
+
+class NoOpLossScaling(LossScaling):
+    """Identity scaling — used by full-precision and bfloat16 pipelines.
+
+    bfloat16 shares float32's exponent range, so gradients rarely
+    under/overflow and scaling is unnecessary; this object keeps the
+    train-step code shape identical across precisions.
+    """
+
+    def scale(self, tree):
+        return tree
+
+    def unscale(self, tree):
+        return cast_to_float32(tree)
+
+    def adjust(self, grads_finite):
+        del grads_finite
+        return self
+
+
+class StaticLossScaling(LossScaling):
+    """Constant scale factor (paper §2.1 discusses why this is fragile)."""
+
+    loss_scaling: jax.Array
+
+    def __init__(self, loss_scaling: float):
+        self.loss_scaling = jnp.asarray(loss_scaling, jnp.float32)
+
+    def scale(self, tree):
+        return _tree_scale(tree, self.loss_scaling)
+
+    def unscale(self, tree):
+        inv = 1.0 / self.loss_scaling
+        return _tree_scale(cast_to_float32(tree), inv)
+
+    def adjust(self, grads_finite):
+        del grads_finite
+        return self
+
+
+class DynamicLossScaling(LossScaling):
+    """Adaptive loss scaling (paper §3.3, extends ``jmp``'s version).
+
+    State (dynamic leaves, so the object jits and shards):
+
+    * ``loss_scaling`` — current scale ``S`` (float32 scalar).
+    * ``counter`` — consecutive finite steps since the last change
+      (int32 scalar).
+
+    Hyper-parameters (static aux data): ``period``, ``factor``,
+    ``min_loss_scaling``, ``max_loss_scaling``.
+
+    ``adjust(grads_finite)`` implements:
+
+    * overflow: ``S ← max(S / factor, min)``, counter reset — and the
+      caller must skip the optimizer step (:func:`mpx.optimizer_update`
+      does);
+    * ``period`` consecutive finite steps: ``S ← min(S · factor, max)``,
+      counter reset;
+    * otherwise: counter += 1.
+    """
+
+    loss_scaling: jax.Array
+    counter: jax.Array
+
+    def __init__(
+        self,
+        loss_scaling: float = DEFAULT_INITIAL_SCALE,
+        *,
+        counter: int = 0,
+        period: int = DEFAULT_PERIOD,
+        factor: float = DEFAULT_FACTOR,
+        min_loss_scaling: float = DEFAULT_MIN_SCALE,
+        max_loss_scaling: float = DEFAULT_MAX_SCALE,
+    ):
+        self.loss_scaling = jnp.asarray(loss_scaling, jnp.float32)
+        self.counter = jnp.asarray(counter, jnp.int32)
+        self.period = int(period)
+        # floats are static by Module's type rules — hyper-parameters.
+        self.factor = float(factor)
+        self.min_loss_scaling = float(min_loss_scaling)
+        self.max_loss_scaling = float(max_loss_scaling)
+
+    # -- paper §3.3 API ----------------------------------------------------
+
+    def scale(self, tree):
+        """Multiply every float leaf by ``S`` (used on the loss)."""
+        return _tree_scale(tree, self.loss_scaling.astype(jnp.float32))
+
+    def unscale(self, tree):
+        """Divide every float leaf by ``S`` *and* cast to float32.
+
+        Order matters: cast first, then divide, so the division cannot
+        overflow in half precision (paper §2.1 steps 4–5).
+        """
+        inv = (1.0 / self.loss_scaling).astype(jnp.float32)
+        return _tree_scale(cast_to_float32(tree), inv)
+
+    def adjust(self, grads_finite: jax.Array) -> "DynamicLossScaling":
+        """Next scaling state given this step's gradient finiteness."""
+        grads_finite = jnp.asarray(grads_finite)
+        factor = jnp.float32(self.factor)
+
+        grew = self.counter >= (self.period - 1)
+        scale_if_finite = jnp.where(
+            grew,
+            jnp.minimum(
+                self.loss_scaling * factor,
+                jnp.float32(self.max_loss_scaling),
+            ),
+            self.loss_scaling,
+        )
+        counter_if_finite = jnp.where(
+            grew, jnp.int32(0), self.counter + jnp.int32(1)
+        )
+
+        scale_if_inf = jnp.maximum(
+            self.loss_scaling / factor, jnp.float32(self.min_loss_scaling)
+        )
+
+        new_scale = jnp.where(grads_finite, scale_if_finite, scale_if_inf)
+        new_counter = jnp.where(grads_finite, counter_if_finite, jnp.int32(0))
+        return DynamicLossScaling(
+            new_scale,
+            counter=new_counter,
+            period=self.period,
+            factor=self.factor,
+            min_loss_scaling=self.min_loss_scaling,
+            max_loss_scaling=self.max_loss_scaling,
+        )
+
+
+def _tree_scale(tree, factor):
+    """Multiply float leaves by a scalar, preserving each leaf's dtype.
+
+    The multiply happens in the leaf's own dtype (the scalar is cast
+    down), matching the paper's "scale the half-precision loss" step.
+    """
+
+    def _mul(x):
+        if is_floating_array(x):
+            return x * factor.astype(x.dtype)
+        return x
+
+    return jax.tree_util.tree_map(_mul, tree)

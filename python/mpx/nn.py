@@ -1,0 +1,287 @@
+"""Mini-Equinox: neural networks as callable PyTrees.
+
+The paper integrates with Equinox/Flax, neither of which is installed
+in this environment, so this module provides the substrate from
+scratch: a :class:`Module` base class whose instances are registered
+PyTrees (array-valued attributes become children; hyper-parameters
+become static aux data), plus the handful of layers the evaluation
+model (a Vision Transformer, paper §5) needs.
+
+Design contract (all that MPX itself relies on, paper §3.4):
+
+* a model is a PyTree whose differentiable state is its inexact array
+  leaves;
+* ``apply_updates(model, updates)`` adds an update tree (same
+  structure, possibly with FILTERED holes) onto the model;
+* modules are callable: ``model(x)`` runs the forward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from mpx.tree_util import combine, is_array
+
+# ---------------------------------------------------------------------------
+# Module base
+# ---------------------------------------------------------------------------
+
+#: Values of these types are always static (hashable aux data): they
+#: parameterize the computation's *structure*, never its data flow.
+_STATIC_TYPES = (int, bool, str, bytes, jnp.dtype, np.dtype, type)
+
+
+def static_field(value: Any) -> Any:
+    """Identity marker used for documentation; static-ness is by type."""
+    return value
+
+
+def _is_static_value(v: Any) -> bool:
+    if v is None:
+        # None is an *empty subtree* for JAX — keep it dynamic so that
+        # filtered partitions (which replace array leaves by None) do
+        # not change the module's static structure.
+        return False
+    if isinstance(v, (jax.Array, np.ndarray)):
+        return False
+    if isinstance(v, Module):
+        return False
+    if isinstance(v, float):
+        # Python floats are hyper-parameters (eps, dropout rate) — keep
+        # them out of the differentiable tree AND out of traced leaves.
+        return True
+    if isinstance(v, _STATIC_TYPES):
+        return True
+    if callable(v) and not isinstance(v, Module):
+        return True
+    if isinstance(v, (list, tuple, dict)):
+        return False  # containers recurse as pytrees
+    return False
+
+
+class Module:
+    """Base class making subclasses PyTrees with type-based filtering.
+
+    Attributes holding arrays, sub-modules or containers become PyTree
+    children; ints/bools/strings/floats/callables become static aux
+    data (so ``num_heads`` survives ``jax.jit`` as a Python int).  The
+    attribute *order* in aux data is sorted, making flattening
+    deterministic — the Rust manifest relies on this.
+    """
+
+    def __init_subclass__(cls, **kwargs):
+        super().__init_subclass__(**kwargs)
+        jax.tree_util.register_pytree_with_keys(
+            cls,
+            flatten_with_keys=_flatten_module_with_keys,
+            flatten_func=_flatten_module,
+            unflatten_func=lambda aux, children: _unflatten_module(
+                cls, aux, children
+            ),
+        )
+
+    # Subclasses assign attributes freely inside __init__; flattening is
+    # over __dict__, so no dataclass machinery is needed.
+
+    def __repr__(self) -> str:
+        fields = ", ".join(
+            f"{k}={_short(v)}" for k, v in sorted(self.__dict__.items())
+        )
+        return f"{type(self).__name__}({fields})"
+
+
+def _short(v: Any) -> str:
+    if isinstance(v, (jax.Array, np.ndarray)):
+        return f"{v.dtype}{list(v.shape)}"
+    return repr(v)
+
+
+def _split_dict(mod: Module):
+    dyn_keys, dyn_vals, static = [], [], []
+    for k in sorted(mod.__dict__):
+        v = mod.__dict__[k]
+        if _is_static_value(v):
+            static.append((k, v))
+        else:
+            dyn_keys.append(k)
+            dyn_vals.append(v)
+    return dyn_keys, dyn_vals, tuple(static)
+
+
+def _flatten_module(mod: Module):
+    dyn_keys, dyn_vals, static = _split_dict(mod)
+    return dyn_vals, (tuple(dyn_keys), static)
+
+
+def _flatten_module_with_keys(mod: Module):
+    dyn_keys, dyn_vals, static = _split_dict(mod)
+    keyed = [
+        (jax.tree_util.GetAttrKey(k), v) for k, v in zip(dyn_keys, dyn_vals)
+    ]
+    return keyed, (tuple(dyn_keys), static)
+
+
+def _unflatten_module(cls, aux, children):
+    dyn_keys, static = aux
+    mod = object.__new__(cls)
+    for k, v in zip(dyn_keys, children):
+        object.__setattr__(mod, k, v)
+    for k, v in static:
+        object.__setattr__(mod, k, v)
+    return mod
+
+
+def apply_updates(model: Any, updates: Any) -> Any:
+    """``model + updates`` leaf-wise; ``None`` updates are skipped.
+
+    Mirrors ``eqx.apply_updates``: the updates tree comes from an
+    optimizer and only covers the differentiable leaves.
+    """
+
+    def _apply(u, p):
+        if u is None:
+            return p
+        return p + u
+
+    return jax.tree_util.tree_map(
+        _apply, updates, model, is_leaf=lambda x: x is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def _lecun_normal(key, shape, in_dim, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(1.0 / in_dim)
+
+
+def _glorot_uniform(key, shape, fan_in, fan_out, dtype=jnp.float32):
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def _trunc_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+class Linear(Module):
+    """Dense layer ``y = W x + b`` over the last axis.
+
+    Stored full-precision; mixed-precision execution happens because
+    MPX casts the *model* (all float leaves) to half before the forward
+    pass — JAX type promotion then keeps every matmul in half.
+    """
+
+    weight: jax.Array
+    bias: Optional[jax.Array]
+
+    def __init__(self, in_features: int, out_features: int, key,
+                 use_bias: bool = True, dtype=jnp.float32):
+        wkey, _ = jax.random.split(key)
+        self.weight = _glorot_uniform(
+            wkey, (out_features, in_features), in_features, out_features, dtype
+        )
+        self.bias = jnp.zeros((out_features,), dtype) if use_bias else None
+        self.in_features = in_features
+        self.out_features = out_features
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        y = x @ self.weight.T
+        if self.bias is not None:
+            y = y + self.bias
+        return y
+
+
+class LayerNorm(Module):
+    """Layer normalization over the last axis.
+
+    The statistics (mean/variance) are overflow-prone in float16; the
+    ViT model therefore wraps calls in ``mpx.force_full_precision``
+    (paper §4.1, Example 1) — the layer itself is precision-agnostic.
+    """
+
+    weight: jax.Array
+    bias: jax.Array
+
+    def __init__(self, dim: int, eps: float = 1e-5, dtype=jnp.float32):
+        self.weight = jnp.ones((dim,), dtype)
+        self.bias = jnp.zeros((dim,), dtype)
+        self.eps = eps
+        self.dim = dim
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + jnp.asarray(self.eps, x.dtype))
+        return (x - mean) * inv * self.weight + self.bias
+
+
+class Embedding(Module):
+    """Token/position embedding table."""
+
+    weight: jax.Array
+
+    def __init__(self, num_embeddings: int, dim: int, key, dtype=jnp.float32):
+        self.weight = _trunc_normal(key, (num_embeddings, dim), 0.02, dtype)
+        self.num_embeddings = num_embeddings
+        self.dim = dim
+
+    def __call__(self, idx: jax.Array) -> jax.Array:
+        return self.weight[idx]
+
+
+class Dropout(Module):
+    """Dropout; a no-op unless a key is supplied (training mode)."""
+
+    def __init__(self, rate: float = 0.0):
+        self.rate = rate
+
+    def __call__(self, x: jax.Array, *, key=None) -> jax.Array:
+        if key is None or self.rate == 0.0:
+            return x
+        keep = 1.0 - self.rate
+        mask = jax.random.bernoulli(key, keep, x.shape)
+        return jnp.where(mask, x / jnp.asarray(keep, x.dtype),
+                         jnp.zeros((), x.dtype))
+
+
+class Sequential(Module):
+    """Apply sub-modules in order."""
+
+    layers: Tuple
+
+    def __init__(self, layers: Sequence[Callable]):
+        self.layers = tuple(layers)
+
+    def __call__(self, x, **kwargs):
+        for layer in self.layers:
+            x = layer(x)
+        return x
+
+
+class MLP(Module):
+    """Two-layer perceptron with GELU, the ViT residual-block body."""
+
+    fc_in: Linear
+    fc_out: Linear
+
+    def __init__(self, dim: int, hidden: int, key, dtype=jnp.float32):
+        k1, k2 = jax.random.split(key)
+        self.fc_in = Linear(dim, hidden, k1, dtype=dtype)
+        self.fc_out = Linear(hidden, dim, k2, dtype=dtype)
+        self.dim = dim
+        self.hidden = hidden
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.fc_out(jax.nn.gelu(self.fc_in(x)))

@@ -1,0 +1,242 @@
+"""Mini-Optax: gradient-transformation optimizers.
+
+Optax is not installed in this environment, so this module provides the
+substrate from scratch with the identical interface MPX's
+:func:`mpx.optimizer_update` (paper §3.5) relies on::
+
+    optimizer = adamw(3e-4, weight_decay=1e-4)
+    state     = optimizer.init(filter_arrays(model))
+    updates, state = optimizer.update(grads, state, params)
+
+States are plain PyTrees (dicts/tuples), so they flow through
+``jax.jit``, the AOT manifest and the Rust coordinator unchanged.  All
+optimizer arithmetic is float32: gradients arrive unscaled float32 from
+:func:`mpx.filter_grad` and the master parameters stay float32 — the
+standard mixed-precision master-weights recipe.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from mpx.tree_util import is_inexact_array
+
+
+class GradientTransformation(NamedTuple):
+    """The (init, update) pair — Optax's core abstraction."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Optional[Any]], Any]
+
+
+def _tree_map_grads(fn, *trees):
+    """tree_map over gradient trees, passing ``None`` holes through."""
+
+    def _fn(*leaves):
+        if leaves[0] is None:
+            return None
+        return fn(*leaves)
+
+    return jax.tree_util.tree_map(
+        _fn, *trees, is_leaf=lambda x: x is None
+    )
+
+
+def _zeros_like_grads(tree):
+    return _tree_map_grads(
+        lambda g: jnp.zeros_like(g, dtype=jnp.float32)
+        if is_inexact_array(g)
+        else None,
+        tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Basic transforms
+# ---------------------------------------------------------------------------
+
+
+def sgd(learning_rate: float, momentum: float = 0.0) -> GradientTransformation:
+    """Stochastic gradient descent, optionally with heavy-ball momentum."""
+
+    def init(params):
+        if momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "velocity": _zeros_like_grads(params),
+        }
+
+    def update(grads, state, params=None):
+        del params
+        lr = jnp.float32(learning_rate)
+        if momentum == 0.0:
+            updates = _tree_map_grads(lambda g: -lr * g.astype(jnp.float32),
+                                      grads)
+            return updates, {"count": state["count"] + 1}
+        mu = jnp.float32(momentum)
+        velocity = _tree_map_grads(
+            lambda g, v: mu * v + g.astype(jnp.float32),
+            grads, state["velocity"],
+        )
+        updates = _tree_map_grads(lambda v: -lr * v, velocity)
+        return updates, {"count": state["count"] + 1, "velocity": velocity}
+
+    return GradientTransformation(init, update)
+
+
+def adam(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> GradientTransformation:
+    """Adam (Kingma & Ba) with bias correction; float32 moments."""
+    return _adam_impl(learning_rate, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(
+    learning_rate: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 1e-4,
+) -> GradientTransformation:
+    """AdamW: Adam with decoupled weight decay (needs ``params`` arg)."""
+    return _adam_impl(learning_rate, b1, b2, eps, weight_decay=weight_decay)
+
+
+def _adam_impl(learning_rate, b1, b2, eps, weight_decay):
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": _zeros_like_grads(params),
+            "nu": _zeros_like_grads(params),
+        }
+
+    def update(grads, state, params=None):
+        if weight_decay != 0.0 and params is None:
+            raise ValueError("adamw.update requires params for weight decay")
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        b1_, b2_ = jnp.float32(b1), jnp.float32(b2)
+        lr = jnp.float32(learning_rate)
+        bc1 = 1.0 - jnp.power(b1_, cf)
+        bc2 = 1.0 - jnp.power(b2_, cf)
+
+        mu = _tree_map_grads(
+            lambda g, m: b1_ * m + (1.0 - b1_) * g.astype(jnp.float32),
+            grads, state["mu"],
+        )
+        nu = _tree_map_grads(
+            lambda g, v: b2_ * v
+            + (1.0 - b2_) * jnp.square(g.astype(jnp.float32)),
+            grads, state["nu"],
+        )
+
+        def _upd(m, v, *maybe_p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + jnp.float32(eps))
+            if weight_decay != 0.0:
+                (p,) = maybe_p
+                step = step + jnp.float32(weight_decay) * p.astype(jnp.float32)
+            return -lr * step
+
+        if weight_decay != 0.0:
+            updates = _tree_map_grads(_upd, mu, nu, params)
+        else:
+            updates = _tree_map_grads(_upd, mu, nu)
+        return updates, {"count": count, "mu": mu, "nu": nu}
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Combinators
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    """Scale the whole gradient tree so its global L2 norm ≤ max_norm."""
+
+    def init(params):
+        del params
+        return {}
+
+    def update(grads, state, params=None):
+        del params
+        sq = [
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)
+            if is_inexact_array(g)
+        ]
+        norm = jnp.sqrt(sum(sq)) if sq else jnp.float32(0.0)
+        scale = jnp.minimum(1.0, jnp.float32(max_norm) / (norm + 1e-12))
+        return _tree_map_grads(
+            lambda g: g.astype(jnp.float32) * scale, grads
+        ), state
+
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transforms left-to-right (Optax semantics)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int,
+    final_scale: float = 0.0,
+) -> Callable[[jax.Array], jax.Array]:
+    """Linear warmup to ``peak_lr`` then cosine decay (ViT recipe)."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.float32(max(warmup_steps, 1))
+        total = jnp.float32(max(total_steps, 1))
+        warm_lr = peak_lr * step / warm
+        progress = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0),
+                            0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+        decay_lr = peak_lr * (final_scale + (1.0 - final_scale) * cos)
+        return jnp.where(step < warm, warm_lr, decay_lr)
+
+    return schedule
+
+
+def scale_by_schedule(
+    inner: GradientTransformation,
+    schedule: Callable[[jax.Array], jax.Array],
+    base_lr: float,
+) -> GradientTransformation:
+    """Rescale ``inner``'s updates by ``schedule(step)/base_lr``."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32), "inner": inner.init(params)}
+
+    def update(grads, state, params=None):
+        updates, inner_state = inner.update(grads, state["inner"], params)
+        count = state["count"] + 1
+        factor = schedule(count) / jnp.float32(base_lr)
+        updates = _tree_map_grads(lambda u: u * factor, updates)
+        return updates, {"count": count, "inner": inner_state}
+
+    return GradientTransformation(init, update)

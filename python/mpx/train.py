@@ -1,0 +1,73 @@
+"""Optimizer wrapper with non-finite-gradient skipping (paper §3.5).
+
+Loss scaling deliberately lets gradients overflow once in a while (that
+is how the dynamic heuristic probes the representable range), so the
+optimizer step must be *conditional*: apply only when every gradient is
+finite, otherwise keep model and optimizer state bit-identical.
+:func:`optimizer_update` packages that logic so a training pipeline
+replaces::
+
+    updates, opt_state = optimizer.update(grads, opt_state, params)
+    model = apply_updates(model, updates)
+
+with the single call (paper Example 2b)::
+
+    model, opt_state = mpx.optimizer_update(
+        model, optimizer, opt_state, grads, grads_finite)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from mpx.nn import apply_updates
+from mpx.optim import GradientTransformation
+from mpx.tree_util import filter_arrays, is_array, is_inexact_array
+
+
+def tree_select(pred: jax.Array, on_true: Any, on_false: Any) -> Any:
+    """Leaf-wise ``jnp.where(pred, a, b)`` over two same-structure trees.
+
+    Non-array leaves must be equal in both trees and pass through; this
+    keeps the select jit-compatible without a ``lax.cond`` (both sides
+    are already computed — the optimizer math is cheap relative to the
+    backward pass, and XLA fuses the selects).
+    """
+
+    def _sel(a, b):
+        if is_array(a) or is_array(b):
+            return jnp.where(pred, a, b)
+        return a
+
+    return jax.tree_util.tree_map(_sel, on_true, on_false)
+
+
+def optimizer_update(
+    model: Any,
+    optimizer: GradientTransformation,
+    optimizer_state: Any,
+    grads: Any,
+    grads_finite: jax.Array,
+) -> Tuple[Any, Any]:
+    """Apply one optimizer step iff ``grads_finite``.
+
+    Returns ``(new_model, new_optimizer_state)``.  When gradients are
+    non-finite the model *and* the optimizer state are returned
+    unchanged (paper §2.1 step 6a: "reduce the scaling and skip
+    updating model parameters") — Adam moments must not absorb inf/nan.
+
+    Gradients may contain ``None`` holes (from the filtered partition);
+    only the corresponding float leaves of ``model`` are updated.
+    """
+    params = filter_arrays(model, is_inexact_array)
+    updates, new_opt_state = optimizer.update(
+        grads, optimizer_state, params
+    )
+    new_model = apply_updates(model, updates)
+
+    model_out = tree_select(grads_finite, new_model, model)
+    opt_out = tree_select(grads_finite, new_opt_state, optimizer_state)
+    return model_out, opt_out

@@ -1,0 +1,117 @@
+"""PyTree predicates and filtered partition/combine.
+
+These are the minimal Equinox-style primitives MPX relies on (paper
+§3.4 states that ``mpx.filter_grad`` acts as a drop-in replacement for
+``eqx.filter_grad``): a model is *any* PyTree; transforms differentiate
+or cast only the leaves a predicate selects, leaving the rest intact.
+
+Filtered-out leaves are replaced by ``None`` — an *empty subtree* for
+JAX — exactly as Equinox does, so ``jax.grad`` over a partition only
+ever sees the selected (inexact array) leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_array(x: Any) -> bool:
+    """True for JAX and NumPy arrays (the leaves a model "owns")."""
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+def is_inexact_array(x: Any) -> bool:
+    """True for floating-point (or complex) JAX/NumPy arrays.
+
+    This is the differentiability predicate: integer arrays (e.g. PRNG
+    keys, step counters) must never be cast (paper §3.1) nor
+    differentiated.
+    """
+    return is_array(x) and jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def is_floating_array(x: Any) -> bool:
+    """True for real floating-point JAX/NumPy arrays."""
+    return is_array(x) and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def _is_none(x: Any) -> bool:
+    return x is None
+
+
+def partition(tree: Any, predicate: Callable[[Any], bool] = is_inexact_array):
+    """Split ``tree`` into ``(selected, rest)``.
+
+    Leaves failing ``predicate`` become ``None`` in ``selected`` and
+    vice versa; :func:`combine` is the exact inverse.  ``None`` values
+    already present in ``tree`` are empty subtrees and land in neither
+    partition (they are restored structurally by :func:`combine`).
+    """
+    selected = jax.tree_util.tree_map(
+        lambda x: x if predicate(x) else None, tree
+    )
+    rest = jax.tree_util.tree_map(
+        lambda x: None if predicate(x) else x, tree
+    )
+    return selected, rest
+
+
+def combine(*trees: Any) -> Any:
+    """Merge partitions: the first non-``None`` leaf wins."""
+
+    def _merge(*leaves):
+        for leaf in leaves:
+            if leaf is not None:
+                return leaf
+        return None
+
+    return jax.tree_util.tree_map(_merge, *trees, is_leaf=_is_none)
+
+
+def filter_arrays(tree: Any, predicate: Callable[[Any], bool] = is_array):
+    """Keep only leaves passing ``predicate`` (others → ``None``)."""
+    return jax.tree_util.tree_map(
+        lambda x: x if predicate(x) else None, tree
+    )
+
+
+def tree_cast(tree: Any, dtype: Any, predicate=is_floating_array) -> Any:
+    """Cast every leaf passing ``predicate`` to ``dtype``; others intact."""
+    dtype = jnp.dtype(dtype)
+
+    def _cast(x):
+        if predicate(x):
+            return jnp.asarray(x).astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def all_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every element of every inexact leaf is finite.
+
+    This is step 6 of the paper's §2.1 recipe — the signal that decides
+    whether the optimizer update is applied and how the loss scaling
+    adjusts.  An empty tree is vacuously finite.
+    """
+    leaves = [x for x in jax.tree_util.tree_leaves(tree) if is_inexact_array(x)]
+    if not leaves:
+        return jnp.asarray(True)
+    finite = [jnp.all(jnp.isfinite(x)) for x in leaves]
+    out = finite[0]
+    for f in finite[1:]:
+        out = jnp.logical_and(out, f)
+    return out
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (host-side bookkeeping helper)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if is_array(leaf):
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,165 @@
+"""Paper §3.1/§3.2: PyTree and function casting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+
+
+def make_tree(key):
+    return {
+        "w": jax.random.normal(key, (4, 4), jnp.float32),
+        "nested": [
+            jnp.ones((3,), jnp.float32),
+            {"b": jnp.zeros((2,), jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)},
+        ],
+        "ints": jnp.arange(5, dtype=jnp.int32),
+        "key": jax.random.PRNGKey(0),
+        "scalar": 3.5,
+        "flag": True,
+        "none": None,
+    }
+
+
+class TestCastTree:
+    def test_float_leaves_cast(self):
+        tree = make_tree(jax.random.PRNGKey(1))
+        out = mpx.cast_tree(tree, jnp.float16)
+        assert out["w"].dtype == jnp.float16
+        assert out["nested"][0].dtype == jnp.float16
+        assert out["nested"][1]["b"].dtype == jnp.float16
+
+    def test_integer_leaves_untouched(self):
+        """Crucial: PRNG keys and int arrays must never be cast."""
+        tree = make_tree(jax.random.PRNGKey(1))
+        out = mpx.cast_tree(tree, jnp.float16)
+        assert out["ints"].dtype == jnp.int32
+        assert (out["key"] == tree["key"]).all()
+
+    def test_python_scalars_untouched(self):
+        tree = make_tree(jax.random.PRNGKey(1))
+        out = mpx.cast_tree(tree, jnp.float16)
+        assert out["scalar"] == 3.5 and isinstance(out["scalar"], float)
+        assert out["flag"] is True
+        assert out["none"] is None
+
+    def test_values_preserved_within_precision(self):
+        x = jnp.linspace(-4.0, 4.0, 33)
+        y = mpx.cast_tree(x, jnp.float16)
+        np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(x),
+                                   rtol=1e-3)
+
+    def test_numpy_leaves_cast(self):
+        tree = {"a": np.ones((2, 2), np.float32)}
+        out = mpx.cast_tree(tree, jnp.bfloat16)
+        assert out["a"].dtype == jnp.bfloat16
+
+    def test_roundtrip_structure(self):
+        tree = make_tree(jax.random.PRNGKey(2))
+        out = mpx.cast_to_float32(mpx.cast_to_float16(tree))
+        assert jax.tree_util.tree_structure(out) == \
+            jax.tree_util.tree_structure(tree)
+
+
+class TestConvenienceCasts:
+    def test_cast_to_float16(self):
+        assert mpx.cast_to_float16(jnp.ones(3)).dtype == jnp.float16
+
+    def test_cast_to_bfloat16(self):
+        assert mpx.cast_to_bfloat16(jnp.ones(3)).dtype == jnp.bfloat16
+
+    def test_cast_to_float32(self):
+        assert mpx.cast_to_float32(jnp.ones(3, jnp.float16)).dtype == jnp.float32
+
+    def test_half_policy_default_f16(self):
+        assert mpx.get_half_dtype() == jnp.dtype(jnp.float16)
+        assert mpx.cast_to_half_precision(jnp.ones(3)).dtype == jnp.float16
+
+    def test_half_policy_switch(self):
+        mpx.set_half_dtype(jnp.bfloat16)
+        try:
+            assert mpx.cast_to_half_precision(jnp.ones(3)).dtype == jnp.bfloat16
+        finally:
+            mpx.set_half_dtype(jnp.float16)
+
+    def test_half_policy_rejects_f32(self):
+        with pytest.raises(ValueError):
+            mpx.set_half_dtype(jnp.float32)
+
+
+class TestCastFunction:
+    def test_inputs_cast(self):
+        seen = {}
+
+        def fn(x):
+            seen["dtype"] = x.dtype
+            return x * 2
+
+        out = mpx.cast_function(fn, jnp.float16)(jnp.ones(3, jnp.float32))
+        assert seen["dtype"] == jnp.float16
+        assert out.dtype == jnp.float16
+
+    def test_return_dtype(self):
+        fn = mpx.cast_function(lambda x: x + 1, jnp.float16,
+                               return_dtype=jnp.float32)
+        assert fn(jnp.ones(3)).dtype == jnp.float32
+
+    def test_kwargs_cast(self):
+        def fn(x, *, y):
+            return x + y
+
+        out = mpx.cast_function(fn, jnp.float16)(
+            jnp.ones(3), y=jnp.ones(3, jnp.float32))
+        assert out.dtype == jnp.float16
+
+    def test_pytree_args(self):
+        def fn(batch):
+            return batch["a"] + batch["b"]
+
+        out = mpx.cast_function(fn, jnp.float16)(
+            {"a": jnp.ones(3), "b": jnp.zeros(3)})
+        assert out.dtype == jnp.float16
+
+
+class TestForceFullPrecision:
+    def test_computation_in_f32(self):
+        seen = {}
+
+        def fn(x):
+            seen["dtype"] = x.dtype
+            return jnp.sum(x)
+
+        x16 = jnp.ones(10, jnp.float16)
+        out = mpx.force_full_precision(fn, x16.dtype)(x16)
+        assert seen["dtype"] == jnp.float32
+        assert out.dtype == jnp.float16
+
+    def test_prevents_softmax_overflow(self):
+        """Softmax over large-magnitude f16 logits: exp overflows in f16
+        unless computed in f32 (paper Example 1)."""
+        logits = jnp.asarray([60000.0, 0.0, -60000.0], jnp.float16)
+
+        safe = mpx.force_full_precision(jax.nn.softmax, logits.dtype)(logits)
+        assert bool(jnp.all(jnp.isfinite(safe)))
+        np.testing.assert_allclose(
+            np.asarray(safe, np.float32), [1.0, 0.0, 0.0], atol=1e-3)
+
+    def test_prevents_sum_overflow(self):
+        """Summing many f16 values overflows f16's 65504 max."""
+        x = jnp.full((4096,), 100.0, jnp.float16)  # true sum 409600
+        naive = jnp.sum(x)
+        assert not bool(jnp.isfinite(naive.astype(jnp.float32))) or \
+            naive.dtype != jnp.float16  # xla may accumulate wider; accept either
+        safe = mpx.force_full_precision(jnp.sum, jnp.float32)(x)
+        np.testing.assert_allclose(float(safe), 409600.0, rtol=1e-3)
+
+    def test_under_jit(self):
+        @jax.jit
+        def fn(x):
+            return mpx.force_full_precision(jnp.mean, x.dtype)(x)
+
+        out = fn(jnp.ones(7, jnp.float16))
+        assert out.dtype == jnp.float16
+        assert float(out) == 1.0

@@ -1,0 +1,126 @@
+"""Hand-written kernel VJPs vs autodiff of the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import autodiff as ad
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float16, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def grads_close(got, want, atol=2e-2, rtol=5e-2):
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            atol=atol, rtol=rtol)
+
+
+class TestMatmulVjp:
+    def test_grads_match_oracle(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x, y = rand(k1, (32, 48)), rand(k2, (48, 16))
+
+        def f_kernel(x, y):
+            return jnp.sum(ad.matmul(x, y).astype(jnp.float32))
+
+        def f_ref(x, y):
+            return jnp.sum(ref.matmul_ref(x, y).astype(jnp.float32))
+
+        grads_close(jax.grad(f_kernel, (0, 1))(x, y),
+                    jax.grad(f_ref, (0, 1))(x, y))
+
+    def test_grad_dtypes_follow_operands(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        x, y = rand(k1, (16, 16)), rand(k2, (16, 16))
+        dx, dy = jax.grad(
+            lambda x, y: jnp.sum(ad.matmul(x, y).astype(jnp.float32)),
+            (0, 1))(x, y)
+        assert dx.dtype == jnp.float16 and dy.dtype == jnp.float16
+
+
+class TestSoftmaxVjp:
+    def test_grads_match_oracle(self):
+        x = rand(jax.random.PRNGKey(0), (8, 33), scale=2.0)
+        w = rand(jax.random.PRNGKey(1), (8, 33))
+
+        def f_kernel(x):
+            return jnp.sum((ad.softmax(x) * w).astype(jnp.float32))
+
+        def f_ref(x):
+            return jnp.sum((ref.softmax_ref(x) * w).astype(jnp.float32))
+
+        grads_close(jax.grad(f_kernel)(x), jax.grad(f_ref)(x))
+
+    def test_zero_sum_property(self):
+        """Softmax grad rows sum to ~0 (probability simplex tangent)."""
+        x = rand(jax.random.PRNGKey(2), (4, 16))
+        g = jax.grad(lambda x: float(0) + ad.softmax(x).astype(jnp.float32)[0, 0])(x)
+        np.testing.assert_allclose(
+            float(jnp.sum(g.astype(jnp.float32)[0])), 0.0, atol=1e-3)
+
+
+class TestLayernormVjp:
+    def test_grads_match_oracle(self):
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = rand(k1, (12, 64), scale=2.0)
+        g = rand(k2, (64,))
+        b = rand(k3, (64,))
+        w = rand(k4, (12, 64))
+
+        def f_kernel(x, g, b):
+            return jnp.sum((ad.layernorm(x, g, b) * w).astype(jnp.float32))
+
+        def f_ref(x, g, b):
+            return jnp.sum((ref.layernorm_ref(x, g, b) * w).astype(jnp.float32))
+
+        grads_close(jax.grad(f_kernel, (0, 1, 2))(x, g, b),
+                    jax.grad(f_ref, (0, 1, 2))(x, g, b))
+
+    def test_dx_orthogonal_to_ones(self):
+        """LN output is mean-invariant ⇒ dx rows sum to ~0."""
+        x = rand(jax.random.PRNGKey(1), (3, 32))
+        gamma = jnp.ones((32,), jnp.float16)
+        beta = jnp.zeros((32,), jnp.float16)
+        dx = jax.grad(
+            lambda x: jnp.sum(ad.layernorm(x, gamma, beta).astype(jnp.float32) ** 2)
+        )(x)
+        np.testing.assert_allclose(
+            np.asarray(jnp.sum(dx.astype(jnp.float32), -1)), 0.0, atol=2e-2)
+
+
+class TestAttentionVjp:
+    def test_grads_match_oracle(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q, k, v = (rand(kk, (2, 17, 8)) for kk in ks[:3])
+        w = rand(ks[3], (2, 17, 8))
+
+        def f_kernel(q, k, v):
+            return jnp.sum((ad.attention(q, k, v) * w).astype(jnp.float32))
+
+        def f_ref(q, k, v):
+            return jnp.sum((ref.attention_ref(q, k, v) * w).astype(jnp.float32))
+
+        grads_close(jax.grad(f_kernel, (0, 1, 2))(q, k, v),
+                    jax.grad(f_ref, (0, 1, 2))(q, k, v))
+
+    def test_under_vmap_and_jit(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (rand(kk, (4, 2, 9, 8)) for kk in ks)  # batch of 4
+
+        @jax.jit
+        def f(q, k, v):
+            out = jax.vmap(ad.attention)(q, k, v)
+            return jnp.sum(out.astype(jnp.float32))
+
+        g = jax.grad(f, (0, 1, 2))(q, k, v)
+        assert g[0].shape == q.shape
+        for leaf in g:
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))

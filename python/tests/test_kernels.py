@@ -1,0 +1,311 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the CORE correctness signal).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose tolerances follow
+the output precision (f16 ⇒ ~1e-3 relative, bf16 ⇒ ~1e-2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+HALF_DTYPES = [jnp.float16, jnp.bfloat16]
+ALL_DTYPES = HALF_DTYPES + [jnp.float32]
+
+
+def tol(dtype):
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.bfloat16):
+        return dict(rtol=3e-2, atol=3e-2)
+    if d == jnp.dtype(jnp.float16):
+        return dict(rtol=5e-3, atol=5e-3)
+    return dict(rtol=1e-5, atol=1e-5)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def close(a, b, dtype):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# mixed_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMixedMatmul:
+    @pytest.mark.parametrize("dtype", ALL_DTYPES)
+    def test_square(self, dtype):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x, y = rand(k1, (64, 64), dtype), rand(k2, (64, 64), dtype)
+        close(kernels.mixed_matmul(x, y), ref.matmul_ref(x, y), dtype)
+
+    @pytest.mark.parametrize("dtype", HALF_DTYPES)
+    def test_rectangular_multiblock(self, dtype):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        x, y = rand(k1, (256, 192), dtype), rand(k2, (192, 320), dtype)
+        out = kernels.mixed_matmul(x, y, block_m=64, block_n=64, block_k=64)
+        close(out, ref.matmul_ref(x, y), dtype)
+
+    def test_output_dtype_follows_input(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+        x, y = rand(k1, (32, 32), jnp.float16), rand(k2, (32, 32), jnp.float16)
+        assert kernels.mixed_matmul(x, y).dtype == jnp.float16
+
+    def test_out_dtype_override(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+        x, y = rand(k1, (32, 32), jnp.float16), rand(k2, (32, 32), jnp.float16)
+        out = kernels.mixed_matmul(x, y, out_dtype=jnp.float32)
+        assert out.dtype == jnp.float32
+
+    def test_f32_accumulation_beats_f16(self):
+        """A long contraction of alternating ±x plus tiny residues: f16
+        accumulation loses the residues, f32 keeps them."""
+        k = 2048
+        big = np.tile([1.0, -1.0], k // 2).astype(np.float16)
+        x = jnp.asarray(big + np.full(k, 1e-3, np.float16)).reshape(1, k)
+        y = jnp.ones((k, 1), jnp.float16)
+        out = kernels.mixed_matmul(x, y, out_dtype=jnp.float32)
+        # truth: k * 1e-3 ≈ 2.0 (up to f16 rounding of 1e-3)
+        expect = float(jnp.sum(x.astype(jnp.float32)))
+        np.testing.assert_allclose(float(out[0, 0]), expect, rtol=1e-3)
+
+    def test_nonsquare_odd_blocks(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        # 65 is prime → falls back to full-dim blocks on that axis
+        x, y = rand(k1, (65, 48), jnp.float16), rand(k2, (48, 40), jnp.float16)
+        close(kernels.mixed_matmul(x, y), ref.matmul_ref(x, y), jnp.float16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64, 96]),
+        k=st.sampled_from([8, 16, 32, 64, 128]),
+        n=st.sampled_from([8, 16, 32, 48]),
+        dtype=st.sampled_from([0, 1, 2]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_property_matches_ref(self, m, k, n, dtype, seed):
+        dtype = ALL_DTYPES[dtype]
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+        out = kernels.mixed_matmul(x, y, block_m=32, block_n=32, block_k=32)
+        close(out, ref.matmul_ref(x, y), dtype)
+
+    def test_vmem_budget_vit_base(self):
+        """Default blocks stay well inside a 16 MiB VMEM budget."""
+        from compile.kernels.matmul import vmem_bytes
+        assert vmem_bytes(128, 128, 128) < 16 * 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+# softmax_fp32
+# ---------------------------------------------------------------------------
+
+
+class TestSoftmaxFp32:
+    @pytest.mark.parametrize("dtype", ALL_DTYPES)
+    def test_matches_ref(self, dtype):
+        x = rand(jax.random.PRNGKey(0), (64, 128), dtype, scale=3.0)
+        close(kernels.softmax_fp32(x), ref.softmax_ref(x), dtype)
+
+    def test_rows_sum_to_one(self):
+        x = rand(jax.random.PRNGKey(1), (32, 100), jnp.float16, scale=5.0)
+        s = jnp.sum(kernels.softmax_fp32(x).astype(jnp.float32), axis=-1)
+        np.testing.assert_allclose(np.asarray(s), 1.0, atol=5e-3)
+
+    def test_no_overflow_on_large_logits(self):
+        """The reason for f32 internals: e^20 > f16 max."""
+        x = jnp.full((4, 64), 20.0, jnp.float16)
+        out = kernels.softmax_fp32(x)
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), 1.0 / 64, rtol=1e-2)
+
+    def test_multiblock_rows(self):
+        x = rand(jax.random.PRNGKey(2), (512, 65), jnp.bfloat16)
+        out = kernels.softmax_fp32(x, block_rows=128)
+        close(out, ref.softmax_ref(x), jnp.bfloat16)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 3, 16, 65, 128]),
+        cols=st.sampled_from([2, 17, 64, 257]),
+        scale=st.sampled_from([0.1, 1.0, 8.0]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_property_matches_ref(self, rows, cols, scale, seed):
+        x = rand(jax.random.PRNGKey(seed), (rows, cols), jnp.float16, scale)
+        close(kernels.softmax_fp32(x), ref.softmax_ref(x), jnp.float16)
+
+
+# ---------------------------------------------------------------------------
+# layernorm_fp32
+# ---------------------------------------------------------------------------
+
+
+class TestLayernormFp32:
+    @pytest.mark.parametrize("dtype", ALL_DTYPES)
+    def test_matches_ref(self, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = rand(k1, (64, 256), dtype, scale=2.0)
+        g = rand(k2, (256,), dtype)
+        b = rand(k3, (256,), dtype)
+        close(kernels.layernorm_fp32(x, g, b),
+              ref.layernorm_ref(x, g, b), dtype)
+
+    def test_normalizes(self):
+        x = rand(jax.random.PRNGKey(1), (8, 512), jnp.float16, scale=10.0)
+        g = jnp.ones((512,), jnp.float16)
+        b = jnp.zeros((512,), jnp.float16)
+        out = kernels.layernorm_fp32(x, g, b).astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(jnp.mean(out, -1)), 0.0,
+                                   atol=5e-3)
+        np.testing.assert_allclose(np.asarray(jnp.std(out, -1)), 1.0,
+                                   atol=2e-2)
+
+    def test_large_mean_no_overflow(self):
+        """Inputs with mean ~60000: the f16 sum would overflow."""
+        x = jnp.full((4, 4096), 60000.0, jnp.float16)
+        g = jnp.ones((4096,), jnp.float16)
+        b = jnp.zeros((4096,), jnp.float16)
+        out = kernels.layernorm_fp32(x, g, b)
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.sampled_from([1, 7, 65, 256]),
+        cols=st.sampled_from([8, 64, 256, 800]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_property_matches_ref(self, rows, cols, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, (rows, cols), jnp.float16, 3.0)
+        g = rand(k2, (cols,), jnp.float16)
+        b = rand(k3, (cols,), jnp.float16)
+        close(kernels.layernorm_fp32(x, g, b),
+              ref.layernorm_ref(x, g, b), jnp.float16)
+
+
+# ---------------------------------------------------------------------------
+# fused_attention
+# ---------------------------------------------------------------------------
+
+
+class TestFusedAttention:
+    @pytest.mark.parametrize("dtype", ALL_DTYPES)
+    def test_matches_ref(self, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (rand(kk, (4, 65, 32), dtype) for kk in ks)
+        close(kernels.fused_attention(q, k, v),
+              ref.attention_ref(q, k, v), dtype)
+
+    def test_single_head(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (rand(kk, (1, 16, 8), jnp.float16) for kk in ks)
+        close(kernels.fused_attention(q, k, v),
+              ref.attention_ref(q, k, v), jnp.float16)
+
+    def test_uniform_scores_average_values(self):
+        """q=0 ⇒ uniform attention ⇒ output = mean(v)."""
+        h, s, d = 2, 10, 4
+        q = jnp.zeros((h, s, d), jnp.float16)
+        k = rand(jax.random.PRNGKey(2), (h, s, d), jnp.float16)
+        v = rand(jax.random.PRNGKey(3), (h, s, d), jnp.float16)
+        out = kernels.fused_attention(q, k, v).astype(jnp.float32)
+        expect = jnp.mean(v.astype(jnp.float32), axis=1, keepdims=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(jnp.broadcast_to(expect, out.shape)),
+            atol=1e-2)
+
+    def test_large_logits_stable(self):
+        """Big q·k products overflow f16 exp without f32 internals."""
+        h, s, d = 1, 8, 16
+        q = jnp.full((h, s, d), 16.0, jnp.float16)
+        k = jnp.full((h, s, d), 16.0, jnp.float16)
+        v = rand(jax.random.PRNGKey(4), (h, s, d), jnp.float16)
+        out = kernels.fused_attention(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+    def test_shape_mismatch_raises(self):
+        q = jnp.zeros((2, 8, 4), jnp.float16)
+        v = jnp.zeros((2, 9, 4), jnp.float16)
+        with pytest.raises(ValueError):
+            kernels.fused_attention(q, q, v)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 8]),
+        s=st.sampled_from([4, 17, 65]),
+        d=st.sampled_from([8, 32, 64]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_property_matches_ref(self, h, s, d, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (rand(kk, (h, s, d), jnp.bfloat16) for kk in ks)
+        close(kernels.fused_attention(q, k, v),
+              ref.attention_ref(q, k, v), jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# scaling kernels
+# ---------------------------------------------------------------------------
+
+
+class TestScaleCast:
+    def test_matches_ref(self):
+        x = rand(jax.random.PRNGKey(0), (64, 32), jnp.float32)
+        s = jnp.asarray(1024.0)
+        out = kernels.scale_cast(x, s, jnp.float16)
+        close(out, ref.scale_cast_ref(x, s, jnp.float16), jnp.float16)
+
+    def test_dtype(self):
+        x = jnp.ones((8, 8), jnp.float32)
+        assert kernels.scale_cast(x, jnp.asarray(2.0), jnp.bfloat16).dtype \
+            == jnp.bfloat16
+
+
+class TestUnscaleCheck:
+    def test_finite_path(self):
+        g = rand(jax.random.PRNGKey(0), (128, 16), jnp.float16, 100.0)
+        s = jnp.asarray(64.0)
+        out, finite = kernels.unscale_check(g, s)
+        rout, rfin = ref.unscale_check_ref(g, s)
+        assert bool(finite) and bool(rfin)
+        close(out, rout, jnp.float32)
+        assert out.dtype == jnp.float32
+
+    def test_inf_detected(self):
+        g = np.zeros((64, 8), np.float16)
+        g[37, 3] = np.inf
+        out, finite = kernels.unscale_check(jnp.asarray(g), jnp.asarray(2.0))
+        assert not bool(finite)
+
+    def test_nan_detected_any_block(self):
+        g = np.zeros((512, 4), np.float16)
+        g[500, 0] = np.nan  # lands in the last grid block
+        out, finite = kernels.unscale_check(
+            jnp.asarray(g), jnp.asarray(2.0), block_rows=64)
+        assert not bool(finite)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rows=st.sampled_from([4, 64, 200]),
+        cols=st.sampled_from([1, 16, 33]),
+        scale=st.sampled_from([1.0, 128.0, 2.0 ** 15]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_property_matches_ref(self, rows, cols, scale, seed):
+        g = rand(jax.random.PRNGKey(seed), (rows, cols), jnp.float16, 10.0)
+        s = jnp.asarray(scale)
+        out, finite = kernels.unscale_check(g, s)
+        rout, rfin = ref.unscale_check_ref(g, s)
+        close(out, rout, jnp.float32)
+        assert bool(finite) == bool(rfin)

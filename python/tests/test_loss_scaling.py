@@ -1,0 +1,157 @@
+"""Paper §2.1/§3.3: dynamic loss scaling state machine."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+
+
+class TestScaleUnscale:
+    def test_scale_multiplies_float_leaves(self):
+        s = mpx.DynamicLossScaling(1024.0)
+        tree = {"a": jnp.ones(3, jnp.float16), "i": jnp.arange(3)}
+        out = s.scale(tree)
+        np.testing.assert_allclose(np.asarray(out["a"], np.float32), 1024.0)
+        assert out["a"].dtype == jnp.float16  # scaling preserves dtype
+        assert (out["i"] == tree["i"]).all()
+
+    def test_unscale_divides_and_casts_f32(self):
+        s = mpx.DynamicLossScaling(1024.0)
+        tree = {"g": jnp.full((3,), 2048.0, jnp.float16)}
+        out = s.unscale(tree)
+        assert out["g"].dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out["g"]), 2.0)
+
+    def test_scale_unscale_roundtrip(self):
+        s = mpx.DynamicLossScaling(2.0 ** 10)
+        x = jnp.linspace(-2.0, 2.0, 17, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(s.unscale(s.scale(x))), np.asarray(x), rtol=1e-6)
+
+    def test_unscale_casts_before_divide(self):
+        """An f16-inf gradient must stay inf after unscale (not become a
+        finite garbage value) so the finite-check can catch it."""
+        s = mpx.DynamicLossScaling(2.0)
+        g = jnp.asarray([jnp.inf], jnp.float16)
+        out = s.unscale(g)
+        assert not bool(jnp.isfinite(out[0]))
+
+
+class TestAdjust:
+    def test_overflow_halves(self):
+        s = mpx.DynamicLossScaling(1024.0, period=2000)
+        s2 = s.adjust(jnp.asarray(False))
+        assert float(s2.loss_scaling) == 512.0
+        assert int(s2.counter) == 0
+
+    def test_growth_after_period(self):
+        s = mpx.DynamicLossScaling(1024.0, period=3)
+        for _ in range(3):
+            s = s.adjust(jnp.asarray(True))
+        assert float(s.loss_scaling) == 2048.0
+        assert int(s.counter) == 0
+
+    def test_counter_increments(self):
+        s = mpx.DynamicLossScaling(1024.0, period=100)
+        s = s.adjust(jnp.asarray(True))
+        assert int(s.counter) == 1
+        assert float(s.loss_scaling) == 1024.0
+
+    def test_min_clamp(self):
+        s = mpx.DynamicLossScaling(1.0, period=10, min_loss_scaling=1.0)
+        s = s.adjust(jnp.asarray(False))
+        assert float(s.loss_scaling) == 1.0
+
+    def test_max_clamp(self):
+        s = mpx.DynamicLossScaling(2.0 ** 24, period=1,
+                                   max_loss_scaling=2.0 ** 24)
+        s = s.adjust(jnp.asarray(True))
+        assert float(s.loss_scaling) == 2.0 ** 24
+
+    def test_overflow_resets_counter(self):
+        s = mpx.DynamicLossScaling(1024.0, period=5)
+        s = s.adjust(jnp.asarray(True))
+        s = s.adjust(jnp.asarray(True))
+        assert int(s.counter) == 2
+        s = s.adjust(jnp.asarray(False))
+        assert int(s.counter) == 0
+
+    def test_jit_compatible(self):
+        """The scaling object is a PyTree → jits as carry state."""
+
+        @jax.jit
+        def roll(s, finite):
+            return s.adjust(finite)
+
+        s = mpx.DynamicLossScaling(4.0, period=2)
+        s = roll(s, jnp.asarray(True))
+        s = roll(s, jnp.asarray(True))
+        assert float(s.loss_scaling) == 8.0
+
+    def test_sequence_matches_reference_simulation(self):
+        """Replay a mixed trace and compare to a hand-rolled simulator."""
+        rng = np.random.RandomState(7)
+        finites = rng.rand(500) > 0.05
+        s = mpx.DynamicLossScaling(2.0 ** 15, period=20)
+        scale, counter = 2.0 ** 15, 0
+        for f in finites:
+            s = s.adjust(jnp.asarray(bool(f)))
+            if f:
+                if counter >= 19:
+                    scale = min(scale * 2.0, 2.0 ** 24)
+                    counter = 0
+                else:
+                    counter += 1
+            else:
+                scale = max(scale / 2.0, 1.0)
+                counter = 0
+            assert float(s.loss_scaling) == scale, f
+            assert int(s.counter) == counter
+
+
+class TestVariants:
+    def test_noop_identity(self):
+        s = mpx.NoOpLossScaling()
+        x = jnp.ones(3, jnp.float16)
+        assert s.scale(x) is x
+        assert s.adjust(jnp.asarray(False)) is s
+        assert s.unscale(x).dtype == jnp.float32
+
+    def test_static_constant(self):
+        s = mpx.StaticLossScaling(64.0)
+        assert float(s.scale(jnp.ones(()))) == 64.0
+        s2 = s.adjust(jnp.asarray(False))
+        assert float(s2.loss_scaling) == 64.0
+
+
+class TestParityTrace:
+    """Generate the shared trace fixture the Rust controller replays.
+
+    ``rust/tests/scaling_parity.rs`` reads this JSON and asserts its
+    state machine produces identical (scale, counter) sequences.
+    """
+
+    def test_write_trace(self, tmp_path):
+        out_dir = os.environ.get("MPX_TRACE_DIR")
+        rng = np.random.RandomState(1234)
+        finites = [bool(b) for b in (rng.rand(300) > 0.07)]
+        s = mpx.DynamicLossScaling(2.0 ** 15, period=16)
+        states = []
+        for f in finites:
+            s = s.adjust(jnp.asarray(f))
+            states.append(
+                {"scale": float(s.loss_scaling), "counter": int(s.counter)})
+        trace = {
+            "init_scale": 2.0 ** 15, "period": 16, "factor": 2.0,
+            "min_scale": 1.0, "max_scale": 2.0 ** 24,
+            "finites": finites, "states": states,
+        }
+        path = (out_dir or str(tmp_path)) + "/scaling_trace.json"
+        with open(path, "w") as f:
+            json.dump(trace, f)
+        assert os.path.exists(path)

@@ -1,0 +1,136 @@
+"""L2 model: the paper's evaluation ViT (shapes, precision, presets)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+from compile.model import (
+    PRESETS,
+    ViTConfig,
+    VisionTransformer,
+    accuracy,
+    cross_entropy_loss,
+    make_config,
+    param_count,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return VisionTransformer(make_config("vit_tiny"), jax.random.PRNGKey(0))
+
+
+class TestConfig:
+    def test_presets_match_paper(self):
+        # §5: desktop "size 256 ... hidden layer of 800 neurons".
+        assert PRESETS["vit_desktop"]["feature_dim"] == 256
+        assert PRESETS["vit_desktop"]["mlp_dim"] == 800
+        assert PRESETS["vit_desktop"]["num_classes"] == 100
+        # cluster "mirrors ViT-Base dimensions": 768 / 3072.
+        assert PRESETS["vit_base"]["feature_dim"] == 768
+        assert PRESETS["vit_base"]["mlp_dim"] == 3072
+        assert PRESETS["vit_base"]["num_classes"] == 1000
+
+    def test_seq_len(self):
+        assert make_config("vit_tiny").seq_len == 17
+        assert make_config("vit_desktop").seq_len == 65
+        assert make_config("vit_base").seq_len == 197
+
+    def test_invalid_configs_rejected(self):
+        with pytest.raises(ValueError):
+            ViTConfig(image_size=33, patch_size=8, channels=3,
+                      num_classes=10, feature_dim=64, mlp_dim=128,
+                      num_heads=4, depth=2)
+        with pytest.raises(ValueError):
+            ViTConfig(image_size=32, patch_size=8, channels=3,
+                      num_classes=10, feature_dim=65, mlp_dim=128,
+                      num_heads=4, depth=2)
+        with pytest.raises(ValueError):
+            make_config("vit_tiny", kernels="cuda")
+        with pytest.raises(KeyError):
+            make_config("vit_huge")
+
+
+class TestForward:
+    def test_single_image_logits(self, tiny_model):
+        img = jax.random.normal(jax.random.PRNGKey(1), (3, 32, 32))
+        logits = tiny_model(img)
+        assert logits.shape == (10,)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_batched_via_vmap(self, tiny_model):
+        imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 32, 32))
+        logits = jax.vmap(tiny_model)(imgs)
+        assert logits.shape == (4, 10)
+
+    def test_patchify_preserves_pixels(self, tiny_model):
+        img = jnp.arange(3 * 32 * 32, dtype=jnp.float32).reshape(3, 32, 32)
+        patches = tiny_model._patchify(img)
+        assert patches.shape == (16, 3 * 8 * 8)
+        # first patch contains the image's top-left 8x8 of each channel
+        np.testing.assert_array_equal(
+            np.asarray(patches[0].reshape(3, 8, 8)),
+            np.asarray(img[:, :8, :8]))
+
+    def test_half_precision_forward(self, tiny_model):
+        model16 = mpx.cast_to_float16(tiny_model)
+        img = jnp.ones((3, 32, 32), jnp.float16)
+        logits = model16(img)
+        assert logits.dtype == jnp.float16
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def test_permutation_of_patches_changes_logits(self, tiny_model):
+        """Position embeddings must make patch order matter."""
+        img = jax.random.normal(jax.random.PRNGKey(2), (3, 32, 32))
+        flipped = img[:, ::-1, :]
+        a = tiny_model(img)
+        b = tiny_model(flipped)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_pallas_variant_matches_xla(self):
+        key = jax.random.PRNGKey(3)
+        xla_model = VisionTransformer(make_config("vit_tiny"), key)
+        pal_model = VisionTransformer(
+            make_config("vit_tiny", kernels="pallas"), key)
+        img = jax.random.normal(jax.random.PRNGKey(4), (3, 32, 32))
+        a = xla_model(img)
+        b = pal_model(img)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2)
+
+
+class TestLoss:
+    def test_cross_entropy_range(self, tiny_model):
+        imgs = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 32, 32))
+        labels = jnp.zeros((8,), jnp.int32)
+        loss = cross_entropy_loss(tiny_model, (imgs, labels))
+        assert loss.dtype == jnp.float32
+        # fresh model ≈ uniform predictions → loss ≈ ln(10)
+        assert 1.5 < float(loss) < 4.0
+
+    def test_loss_in_half_precision_model(self, tiny_model):
+        model16 = mpx.cast_to_float16(tiny_model)
+        imgs = jnp.ones((4, 3, 32, 32), jnp.float16)
+        labels = jnp.zeros((4,), jnp.int32)
+        loss = cross_entropy_loss(model16, (imgs, labels))
+        assert loss.dtype == jnp.float32  # forced full precision
+        assert bool(jnp.isfinite(loss))
+
+    def test_accuracy_bounds(self, tiny_model):
+        imgs = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 32, 32))
+        labels = jnp.zeros((8,), jnp.int32)
+        acc = accuracy(tiny_model, (imgs, labels))
+        assert 0.0 <= float(acc) <= 1.0
+
+
+class TestParams:
+    def test_param_count_vit_tiny(self, tiny_model):
+        # cross-language regression: rust memmodel asserts this number
+        assert param_count(tiny_model) == 81226
+
+    def test_trainable_structure(self, tiny_model):
+        diff, static = mpx.partition(tiny_model, mpx.is_inexact_array)
+        n = sum(x.size for x in jax.tree_util.tree_leaves(diff))
+        assert n == param_count(tiny_model)

@@ -1,0 +1,171 @@
+"""Mini-Equinox substrate: modules as PyTrees, filtered transforms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+from mpx import nn
+
+
+class TestModulePytree:
+    def test_linear_flattens_to_arrays(self):
+        lin = nn.Linear(4, 8, jax.random.PRNGKey(0))
+        leaves = jax.tree_util.tree_leaves(lin)
+        assert len(leaves) == 2  # weight + bias
+        assert all(mpx.is_array(l) for l in leaves)
+
+    def test_static_fields_survive_roundtrip(self):
+        lin = nn.Linear(4, 8, jax.random.PRNGKey(0))
+        leaves, treedef = jax.tree_util.tree_flatten(lin)
+        lin2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert lin2.in_features == 4 and lin2.out_features == 8
+        np.testing.assert_array_equal(lin2.weight, lin.weight)
+
+    def test_no_bias_structure_stable(self):
+        lin = nn.Linear(4, 8, jax.random.PRNGKey(0), use_bias=False)
+        leaves, treedef = jax.tree_util.tree_flatten(lin)
+        assert len(leaves) == 1
+        lin2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert lin2.bias is None
+
+    def test_nested_modules_recurse(self):
+        mlp = nn.MLP(4, 16, jax.random.PRNGKey(0))
+        leaves = jax.tree_util.tree_leaves(mlp)
+        assert len(leaves) == 4  # two Linears × (w, b)
+
+    def test_module_under_jit(self):
+        mlp = nn.MLP(4, 16, jax.random.PRNGKey(0))
+
+        @jax.jit
+        def fwd(m, x):
+            return m(x)
+
+        out = fwd(mlp, jnp.ones(4))
+        assert out.shape == (4,)
+
+    def test_flatten_deterministic_order(self):
+        """Sorted-attribute flattening — the AOT manifest relies on it."""
+        lin = nn.Linear(2, 2, jax.random.PRNGKey(0))
+        paths = [
+            jax.tree_util.keystr(p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(lin)[0]
+        ]
+        assert paths == sorted(paths)
+
+    def test_float_hyperparams_static(self):
+        ln = nn.LayerNorm(8, eps=1e-3)
+        leaves = jax.tree_util.tree_leaves(ln)
+        assert len(leaves) == 2  # weight, bias — eps is static
+        _, treedef = jax.tree_util.tree_flatten(ln)
+        ln2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert ln2.eps == 1e-3
+
+
+class TestPartitionCombine:
+    def test_partition_roundtrip(self):
+        mlp = nn.MLP(4, 16, jax.random.PRNGKey(0))
+        diff, static = mpx.partition(mlp, mpx.is_inexact_array)
+        back = mpx.combine(diff, static)
+        assert jax.tree_util.tree_structure(back) == \
+            jax.tree_util.tree_structure(mlp)
+        np.testing.assert_array_equal(back.fc_in.weight, mlp.fc_in.weight)
+
+    def test_partition_excludes_ints(self):
+        tree = {"w": jnp.ones(3), "step": jnp.asarray(5)}
+        diff, static = mpx.partition(tree, mpx.is_inexact_array)
+        assert diff["step"] is None
+        assert static["w"] is None
+        assert int(static["step"]) == 5
+
+    def test_grad_through_partition(self):
+        tree = {"w": jnp.asarray(3.0), "n": jnp.asarray(7)}
+        diff, static = mpx.partition(tree, mpx.is_inexact_array)
+
+        def f(d):
+            t = mpx.combine(d, static)
+            return t["w"] ** 2
+
+        g = jax.grad(f)(diff)
+        assert float(g["w"]) == 6.0
+        assert g["n"] is None
+
+
+class TestApplyUpdates:
+    def test_updates_applied(self):
+        lin = nn.Linear(2, 2, jax.random.PRNGKey(0))
+        updates, _ = mpx.partition(lin, mpx.is_inexact_array)
+        updates = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), updates)
+        out = nn.apply_updates(lin, updates)
+        np.testing.assert_allclose(
+            np.asarray(out.weight), np.asarray(lin.weight) + 1.0)
+
+    def test_none_updates_skip(self):
+        tree = {"w": jnp.ones(2), "step": jnp.asarray(3)}
+        out = nn.apply_updates(tree, {"w": jnp.ones(2), "step": None})
+        assert int(out["step"]) == 3
+        np.testing.assert_allclose(np.asarray(out["w"]), 2.0)
+
+
+class TestLayers:
+    def test_linear_matches_manual(self):
+        lin = nn.Linear(3, 5, jax.random.PRNGKey(1))
+        x = jnp.arange(3.0)
+        np.testing.assert_allclose(
+            np.asarray(lin(x)),
+            np.asarray(x @ lin.weight.T + lin.bias), rtol=1e-6)
+
+    def test_linear_batched_last_axis(self):
+        lin = nn.Linear(3, 5, jax.random.PRNGKey(1))
+        x = jnp.ones((7, 3))
+        assert lin(x).shape == (7, 5)
+
+    def test_layernorm_normalizes(self):
+        ln = nn.LayerNorm(16)
+        x = jax.random.normal(jax.random.PRNGKey(2), (16,)) * 10 + 3
+        y = ln(x)
+        assert abs(float(jnp.mean(y))) < 1e-4
+        np.testing.assert_allclose(float(jnp.std(y)), 1.0, atol=1e-2)
+
+    def test_layernorm_dtype_follows_input(self):
+        ln = mpx.cast_to_float16(nn.LayerNorm(8))
+        y = ln(jnp.ones(8, jnp.float16))
+        assert y.dtype == jnp.float16
+
+    def test_embedding_lookup(self):
+        emb = nn.Embedding(10, 4, jax.random.PRNGKey(3))
+        out = emb(jnp.asarray([1, 1, 2]))
+        assert out.shape == (3, 4)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+
+    def test_dropout_inference_identity(self):
+        x = jnp.ones(100)
+        assert (nn.Dropout(0.5)(x) == x).all()
+
+    def test_dropout_training_masks(self):
+        x = jnp.ones(10000)
+        y = nn.Dropout(0.5)(x, key=jax.random.PRNGKey(0))
+        frac = float(jnp.mean(y == 0))
+        assert 0.45 < frac < 0.55
+        # E[y] preserved
+        np.testing.assert_allclose(float(jnp.mean(y)), 1.0, atol=0.05)
+
+    def test_mlp_shapes(self):
+        mlp = nn.MLP(8, 32, jax.random.PRNGKey(0))
+        assert mlp(jnp.ones(8)).shape == (8,)
+
+    def test_sequential(self):
+        seq = nn.Sequential([
+            nn.Linear(4, 8, jax.random.PRNGKey(0)),
+            jax.nn.relu,
+            nn.Linear(8, 2, jax.random.PRNGKey(1)),
+        ])
+        assert seq(jnp.ones(4)).shape == (2,)
+
+    def test_casting_whole_model(self):
+        """Paper §4.1: casting the model is one cast_tree call."""
+        mlp = mpx.cast_to_float16(nn.MLP(4, 8, jax.random.PRNGKey(0)))
+        assert mlp.fc_in.weight.dtype == jnp.float16
+        out = mlp(jnp.ones(4, jnp.float16))
+        assert out.dtype == jnp.float16

@@ -1,0 +1,209 @@
+"""Mini-Optax substrate + paper §3.5 optimizer_update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+from mpx import nn, optim
+
+
+def make_params():
+    return {"w": jnp.asarray([1.0, 2.0]), "b": jnp.asarray(0.5),
+            "step": jnp.asarray(0)}
+
+
+def grads_like(params, value=1.0):
+    return {"w": jnp.full_like(params["w"], value),
+            "b": jnp.asarray(value), "step": None}
+
+
+class TestSGD:
+    def test_plain_step(self):
+        opt = optim.sgd(0.1)
+        params = make_params()
+        state = opt.init(mpx.filter_arrays(params, mpx.is_inexact_array))
+        updates, state = opt.update(grads_like(params), state)
+        out = nn.apply_updates(params, updates)
+        np.testing.assert_allclose(np.asarray(out["w"]), [0.9, 1.9], rtol=1e-6)
+        assert int(out["step"]) == 0  # int leaf untouched
+
+    def test_momentum_accumulates(self):
+        opt = optim.sgd(1.0, momentum=0.5)
+        params = make_params()
+        state = opt.init(mpx.filter_arrays(params, mpx.is_inexact_array))
+        u1, state = opt.update(grads_like(params), state)
+        u2, state = opt.update(grads_like(params), state)
+        # v1 = g, v2 = 0.5 g + g = 1.5 g
+        np.testing.assert_allclose(float(u2["b"]), -1.5)
+
+    def test_quadratic_convergence(self):
+        opt = optim.sgd(0.2)
+        w = jnp.asarray(5.0)
+        state = opt.init(w)
+        for _ in range(50):
+            g = 2 * w
+            u, state = opt.update(g, state)
+            w = w + u
+        assert abs(float(w)) < 1e-3
+
+
+class TestAdam:
+    def test_bias_correction_first_step(self):
+        """First Adam step ≈ -lr * sign(g) regardless of g's scale."""
+        opt = optim.adam(0.1)
+        g = jnp.asarray(1e-4)
+        state = opt.init(jnp.asarray(0.0))
+        u, state = opt.update(g, state)
+        np.testing.assert_allclose(float(u), -0.1, rtol=1e-3)
+
+    def test_moments_float32_under_half_grads(self):
+        opt = optim.adam(0.1)
+        g = jnp.asarray(0.5, jnp.float16)
+        state = opt.init(jnp.asarray(0.0, jnp.float32))
+        u, state = opt.update(g, state)
+        assert state["mu"].dtype == jnp.float32
+        assert u.dtype == jnp.float32
+
+    def test_rosenbrock_descent(self):
+        opt = optim.adam(0.05)
+
+        def f(p):
+            x, y = p
+            return (1 - x) ** 2 + 100 * (y - x ** 2) ** 2
+
+        p = jnp.asarray([-1.0, 1.0])
+        state = opt.init(p)
+        f0 = float(f(p))
+        for _ in range(300):
+            g = jax.grad(f)(p)
+            u, state = opt.update(g, state)
+            p = p + u
+        assert float(f(p)) < f0 * 0.01
+
+
+class TestAdamW:
+    def test_weight_decay_pulls_to_zero(self):
+        opt = optim.adamw(0.1, weight_decay=0.1)
+        w = jnp.asarray(10.0)
+        state = opt.init(w)
+        u, state = opt.update(jnp.asarray(0.0), state, w)
+        assert float(u) < 0  # decay even with zero gradient
+
+    def test_requires_params(self):
+        opt = optim.adamw(0.1, weight_decay=0.1)
+        state = opt.init(jnp.asarray(1.0))
+        with pytest.raises(ValueError):
+            opt.update(jnp.asarray(0.0), state, None)
+
+
+class TestCombinators:
+    def test_clip_by_global_norm(self):
+        opt = optim.clip_by_global_norm(1.0)
+        g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+        state = opt.init(g)
+        u, _ = opt.update(g, state)
+        np.testing.assert_allclose(
+            np.asarray(u["a"]), [0.6, 0.8], rtol=1e-5)
+
+    def test_clip_noop_below_threshold(self):
+        opt = optim.clip_by_global_norm(10.0)
+        g = {"a": jnp.asarray([3.0, 4.0])}
+        u, _ = opt.update(g, opt.init(g))
+        np.testing.assert_allclose(np.asarray(u["a"]), [3.0, 4.0], rtol=1e-5)
+
+    def test_chain(self):
+        opt = optim.chain(optim.clip_by_global_norm(1.0), optim.sgd(1.0))
+        g = {"a": jnp.asarray([30.0, 40.0])}
+        state = opt.init(g)
+        u, state = opt.update(g, state)
+        np.testing.assert_allclose(
+            np.asarray(u["a"]), [-0.6, -0.8], rtol=1e-5)
+
+    def test_schedule_warmup(self):
+        sched = optim.warmup_cosine_schedule(1.0, 10, 100)
+        assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+        assert float(sched(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+
+    def test_scale_by_schedule(self):
+        sched = optim.warmup_cosine_schedule(0.5, 2, 100)
+        opt = optim.scale_by_schedule(optim.sgd(0.5), sched, 0.5)
+        g = jnp.asarray(1.0)
+        state = opt.init(g)
+        u, state = opt.update(g, state)  # step 1: lr = 0.5*(1/2) = 0.25
+        np.testing.assert_allclose(float(u), -0.25, rtol=1e-5)
+
+
+class TestOptimizerUpdate:
+    """Paper §3.5: skip updates when gradients are non-finite."""
+
+    def test_finite_applies(self):
+        model = make_params()
+        opt = optim.sgd(0.1)
+        state = opt.init(mpx.filter_arrays(model, mpx.is_inexact_array))
+        m2, s2 = mpx.optimizer_update(
+            model, opt, state, grads_like(model), jnp.asarray(True))
+        np.testing.assert_allclose(np.asarray(m2["w"]), [0.9, 1.9], rtol=1e-6)
+        assert int(s2["count"]) == 1
+
+    def test_nonfinite_skips_model_and_state(self):
+        model = make_params()
+        opt = optim.adam(0.1)
+        state = opt.init(mpx.filter_arrays(model, mpx.is_inexact_array))
+        bad = {"w": jnp.asarray([jnp.inf, 1.0]), "b": jnp.asarray(1.0),
+               "step": None}
+        m2, s2 = mpx.optimizer_update(model, opt, state, bad,
+                                      jnp.asarray(False))
+        np.testing.assert_array_equal(np.asarray(m2["w"]),
+                                      np.asarray(model["w"]))
+        # Adam moments must not absorb the inf
+        assert int(s2["count"]) == 0
+        assert bool(jnp.all(jnp.isfinite(s2["mu"]["w"])))
+
+    def test_under_jit(self):
+        model = make_params()
+        opt = optim.sgd(0.1)
+        state = opt.init(mpx.filter_arrays(model, mpx.is_inexact_array))
+
+        @jax.jit
+        def run(m, s, g, fin):
+            return mpx.optimizer_update(m, opt, s, g, fin)
+
+        m2, s2 = run(model, state, grads_like(model), jnp.asarray(True))
+        np.testing.assert_allclose(float(m2["b"]), 0.4, rtol=1e-6)
+        m3, s3 = run(model, state, grads_like(model), jnp.asarray(False))
+        np.testing.assert_allclose(float(m3["b"]), 0.5, rtol=1e-6)
+
+    def test_full_mixed_pipeline_recovers_from_overflow(self):
+        """End-to-end §2.1 recipe: inject one overflow step; training
+        continues and the scale halves exactly once."""
+        key = jax.random.PRNGKey(0)
+        model = nn.MLP(4, 8, key)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4))
+        y = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+        opt = optim.adam(1e-2)
+        state = opt.init(mpx.filter_arrays(model, mpx.is_inexact_array))
+        scaling = mpx.DynamicLossScaling(2.0 ** 15, period=1000)
+
+        def loss(m, b, boost):
+            xb, yb = b
+            pred = jax.vmap(m)(xb)
+            return mpx.force_full_precision(
+                lambda e: jnp.mean(jnp.square(e)), jnp.float32
+            )(pred - yb) * boost
+
+        for i in range(5):
+            boost = 1e30 if i == 2 else 1.0
+            scaling_new, finite, grads = mpx.filter_grad(
+                lambda m, b: loss(m, b, boost), scaling)(model, (x, y))
+            model, state = mpx.optimizer_update(
+                model, opt, state, grads, finite)
+            if i == 2:
+                assert not bool(finite)
+            scaling = scaling_new
+
+        assert float(scaling.loss_scaling) == 2.0 ** 14
+        for leaf in jax.tree_util.tree_leaves(model):
+            assert bool(jnp.all(jnp.isfinite(leaf)))

@@ -1,0 +1,170 @@
+"""L2 train-step builders + AOT manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import mpx
+from compile import aot, trainstep as ts
+from compile.model import make_config
+
+
+CFG = make_config("vit_tiny")
+
+
+def batch(b=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (
+        jax.random.normal(k1, (b, 3, 32, 32)),
+        jax.random.randint(k2, (b,), 0, 10),
+    )
+
+
+class TestInit:
+    def test_shapes_and_groups(self):
+        model, opt_state, scaling = ts.concrete_state(CFG, "mixed_f16")
+        assert isinstance(scaling, mpx.DynamicLossScaling)
+        assert float(scaling.loss_scaling) == 2.0 ** 15
+        assert int(opt_state["count"]) == 0
+
+    def test_fp32_scaling_pinned(self):
+        _, _, scaling = ts.concrete_state(CFG, "fp32")
+        assert float(scaling.loss_scaling) == 1.0
+        # pinned: growth unreachable, clamped at 1
+        s = scaling.adjust(jnp.asarray(True))
+        assert float(s.loss_scaling) == 1.0
+
+    def test_deterministic_in_seed(self):
+        m1, _, _ = ts.concrete_state(CFG, "fp32", seed=4)
+        m2, _, _ = ts.concrete_state(CFG, "fp32", seed=4)
+        m3, _, _ = ts.concrete_state(CFG, "fp32", seed=5)
+        # compare a weight leaf (the first tree leaf can be a zeros
+        # bias, identical across seeds by construction)
+        a, b, c = (m.patch_embed.weight for m in (m1, m2, m3))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+class TestFusedStep:
+    def test_loss_decreases(self):
+        state = ts.concrete_state(CFG, "mixed_f16")
+        step = jax.jit(ts.build_step_fused(CFG, "mixed_f16"))
+        model, opt_state, scaling = state
+        imgs, labels = batch()
+        losses = []
+        for _ in range(12):
+            model, opt_state, scaling, loss, finite = step(
+                model, opt_state, scaling, imgs, labels)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_fp32_never_overflows(self):
+        model, opt_state, scaling = ts.concrete_state(CFG, "fp32")
+        step = jax.jit(ts.build_step_fused(CFG, "fp32"))
+        imgs, labels = batch()
+        for _ in range(5):
+            model, opt_state, scaling, loss, finite = step(
+                model, opt_state, scaling, imgs, labels)
+            assert bool(finite)
+        assert float(scaling.loss_scaling) == 1.0
+
+    def test_master_params_stay_f32(self):
+        model, opt_state, scaling = ts.concrete_state(CFG, "mixed_f16")
+        step = jax.jit(ts.build_step_fused(CFG, "mixed_f16"))
+        imgs, labels = batch()
+        model, *_ = step(model, opt_state, scaling, imgs, labels)
+        for leaf in jax.tree_util.tree_leaves(model):
+            if mpx.is_inexact_array(leaf):
+                assert leaf.dtype == jnp.float32
+
+
+class TestGradsStep:
+    def test_returns_unscaled_f32_grads(self):
+        model, _, _ = ts.concrete_state(CFG, "mixed_f16")
+        grads_fn = jax.jit(ts.build_grads(CFG, "mixed_f16"))
+        imgs, labels = batch()
+        grads, loss, finite = grads_fn(
+            model, jnp.asarray(1024.0), imgs, labels)
+        assert bool(finite)
+        leaves = [g for g in jax.tree_util.tree_leaves(grads)]
+        assert leaves and all(g.dtype == jnp.float32 for g in leaves)
+
+    def test_scale_invariance(self):
+        """Unscaled grads must be (nearly) independent of the scale —
+        the whole point of the §2.1 recipe."""
+        model, _, _ = ts.concrete_state(CFG, "mixed_f16")
+        grads_fn = jax.jit(ts.build_grads(CFG, "mixed_f16"))
+        imgs, labels = batch()
+        g1, *_ = grads_fn(model, jnp.asarray(256.0), imgs, labels)
+        g2, *_ = grads_fn(model, jnp.asarray(4096.0), imgs, labels)
+        for a, b in zip(jax.tree_util.tree_leaves(g1),
+                        jax.tree_util.tree_leaves(g2)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=2e-3, rtol=5e-2)
+
+
+class TestFwd:
+    def test_logits_f32(self):
+        model, _, _ = ts.concrete_state(CFG, "mixed_f16")
+        fwd = jax.jit(ts.build_fwd(CFG, "mixed_f16"))
+        imgs, _ = batch()
+        logits = fwd(model, imgs)
+        assert logits.shape == (8, 10)
+        assert logits.dtype == jnp.float32
+
+
+class TestAotEmission:
+    def test_emit_and_manifest(self, tmp_path):
+        spec = dict(kind="step_fused", model="vit_tiny",
+                    precision="mixed_f16", batch=4)
+        aot.emit("t_step", spec, str(tmp_path))
+        hlo = (tmp_path / "t_step.hlo.txt").read_text()
+        assert hlo.startswith("HloModule")
+        man = json.loads((tmp_path / "t_step.manifest.json").read_text())
+        groups = [e["group"] for e in man["inputs"]]
+        # groups are contiguous and ordered params→opt→scaling→batch
+        order = []
+        for g in groups:
+            if not order or order[-1] != g:
+                order.append(g)
+        assert order == ["params", "opt_state", "scaling", "images", "labels"]
+        out_groups = {e["group"] for e in man["outputs"]}
+        assert out_groups == {"params", "opt_state", "scaling", "loss",
+                              "finite"}
+        # state contract: init-able (same leaf count in and out)
+        n_state = sum(1 for e in man["inputs"]
+                      if e["group"] in ("params", "opt_state", "scaling"))
+        n_out = sum(1 for e in man["outputs"]
+                    if e["group"] in ("params", "opt_state", "scaling"))
+        assert n_state == n_out
+
+    def test_emit_skips_when_up_to_date(self, tmp_path):
+        spec = dict(kind="init", model="vit_tiny", precision="fp32")
+        r1 = aot.emit("t_init", spec, str(tmp_path))
+        r2 = aot.emit("t_init", spec, str(tmp_path))
+        assert not r1.get("skipped")
+        assert r2.get("skipped")
+
+    def test_trainable_marks_float_leaves_only(self, tmp_path):
+        spec = dict(kind="grads", model="vit_tiny",
+                    precision="mixed_f16", batch=4)
+        aot.emit("t_grads", spec, str(tmp_path))
+        man = json.loads((tmp_path / "t_grads.manifest.json").read_text())
+        params = [e for e in man["inputs"] if e["group"] == "params"]
+        assert all(e["trainable"] == (e["dtype"] in ("f32", "f16", "bf16"))
+                   for e in params)
+        n_grads = sum(1 for e in man["outputs"] if e["group"] == "grads")
+        n_trainable = sum(1 for e in params if e["trainable"])
+        assert n_grads == n_trainable
+
+    def test_dtype_names(self):
+        assert aot._dtype_name(jnp.float16) == "f16"
+        assert aot._dtype_name(jnp.bfloat16) == "bf16"
+        assert aot._dtype_name(jnp.int32) == "s32"
+        assert aot._dtype_name(jnp.bool_) == "pred"
+        with pytest.raises(ValueError):
+            aot._dtype_name(jnp.float64)

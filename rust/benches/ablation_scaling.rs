@@ -1,0 +1,86 @@
+//! Ablation — what does dynamic loss scaling cost, and what do the
+//! precision modes trade?  (DESIGN.md design-choice ablations; not a
+//! paper figure.)
+//!
+//! Series:
+//!   1. fused step time across fp32 / mixed_f16 / mixed_bf16 on the
+//!      tiny model — bf16 runs the identical graph shape with the
+//!      scaling state pinned, so (f16 − bf16) isolates the cost of
+//!      live dynamic scaling, and (bf16 − fp32) the cost of casting.
+//!   2. the controller itself in isolation (pure state machine) —
+//!      confirming its per-step cost is nanoseconds, i.e. the §3.3
+//!      heuristic is free at the coordinator level.
+
+use mpx::config::{model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::metrics::RunMetrics;
+use mpx::runtime::ArtifactStore;
+use mpx::scaling::{LossScaler, ScalingConfig};
+use mpx::trainer::FusedTrainer;
+use mpx::util::benchkit::{bench, BenchOpts, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut store = ArtifactStore::open_default()?;
+    let preset = model_preset("vit_tiny")?;
+    let dataset = SyntheticDataset::new(&preset, 0);
+
+    let mut table = Table::new(
+        "Ablation: precision modes on vit_tiny (fused step, b8)",
+        &["precision", "median_step_ms", "skipped", "final_scale"],
+    );
+    for precision in
+        [Precision::Fp32, Precision::MixedBf16, Precision::MixedF16]
+    {
+        let cfg = TrainConfig {
+            model: "vit_tiny".into(),
+            precision,
+            batch: 8,
+            log_every: 10_000,
+            ..Default::default()
+        };
+        let mut trainer = FusedTrainer::new(&mut store, cfg)?;
+        let mut metrics = RunMetrics::new();
+        trainer.run(&dataset, 30, &mut metrics)?;
+        let mut times: Vec<f64> = metrics
+            .records
+            .iter()
+            .skip(3)
+            .map(|r| r.step_time.as_secs_f64())
+            .collect();
+        times.sort_by(f64::total_cmp);
+        table.row(&[
+            precision.tag().to_string(),
+            format!("{:.3}", times[times.len() / 2] * 1e3),
+            metrics.skipped_steps().to_string(),
+            format!("{:.0}", trainer.loss_scale()?),
+        ]);
+    }
+    println!("# wrote {}", table.write_csv()?);
+
+    // Controller-in-isolation micro-bench.
+    let mut scaler = LossScaler::new(ScalingConfig::default());
+    let mut i = 0u64;
+    let stats = bench(
+        &BenchOpts { warmup_iters: 2, max_iters: 20, max_seconds: 2.0 },
+        || {
+            // 1M adjust calls per iteration
+            for _ in 0..1_000_000 {
+                i = i.wrapping_add(1);
+                scaler.adjust(i % 1009 != 0);
+            }
+        },
+    );
+    let mut micro = Table::new(
+        "Ablation: LossScaler.adjust micro-cost",
+        &["calls_per_iter", "median_ms_per_1M", "ns_per_call"],
+    );
+    micro.row(&[
+        "1000000".into(),
+        format!("{:.2}", stats.median.as_secs_f64() * 1e3),
+        format!("{:.2}", stats.median.as_secs_f64() * 1e9 / 1e6),
+    ]);
+    println!("# wrote {}", micro.write_csv()?);
+    println!("# scaler state: {} growths, {} overflows", scaler.growths,
+             scaler.overflows);
+    Ok(())
+}

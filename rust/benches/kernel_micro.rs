@@ -1,0 +1,101 @@
+//! L1 kernel micro-benchmarks: the Pallas mixed-precision kernels vs
+//! their jnp reference implementations, executed through the same
+//! AOT→PJRT path the training steps use.
+//!
+//! On this CPU backend the Pallas kernels run in interpret mode (the
+//! grid lowers to an XLA while-loop), so *wall-clock is not the
+//! optimization target* — structure is (DESIGN.md §Hardware-
+//! Adaptation).  The bench therefore reports both wall-clock AND the
+//! structural quantities that determine real-TPU performance: VMEM
+//! working set and MXU-feeding tile shapes.
+
+use mpx::runtime::{lit_f32, ArtifactStore};
+use mpx::util::benchkit::{bench, BenchOpts, Table};
+use mpx::util::rng::Rng;
+
+fn run_kernel(
+    store: &mut ArtifactStore,
+    name: &str,
+    opts: &BenchOpts,
+) -> anyhow::Result<f64> {
+    let art = store.load(name)?;
+    let mut rng = Rng::new(1);
+    let inputs: Vec<xla::Literal> = art
+        .manifest
+        .inputs
+        .iter()
+        .map(|spec| {
+            let data: Vec<f32> =
+                (0..spec.elems()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            lit_f32(&spec.shape, &data)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let stats = bench(opts, || {
+        art.execute(&inputs).expect("kernel execute");
+    });
+    Ok(stats.median.as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut store = ArtifactStore::open_default()?;
+    let opts = BenchOpts::from_env(BenchOpts {
+        warmup_iters: 2,
+        max_iters: 10,
+        max_seconds: 8.0,
+    });
+
+    let mut table = Table::new(
+        "L1 kernels: Pallas (interpret) vs jnp reference via PJRT",
+        &["kernel", "pallas_ms", "ref_ms", "interp_overhead"],
+    );
+    for half in ["f16", "bf16"] {
+        let pallas =
+            run_kernel(&mut store, &format!("kernel_matmul_{half}_512"), &opts)?;
+        let reference = run_kernel(
+            &mut store,
+            &format!("kernel_matmul_ref_{half}_512"),
+            &opts,
+        )?;
+        table.row(&[
+            format!("matmul_{half}_512^3"),
+            format!("{:.2}", pallas * 1e3),
+            format!("{:.2}", reference * 1e3),
+            format!("{:.1}x", pallas / reference),
+        ]);
+    }
+    for name in ["kernel_attention_f16_vit", "kernel_layernorm_f16_vit"] {
+        let t = run_kernel(&mut store, name, &opts)?;
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", t * 1e3),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    println!("# wrote {}", table.write_csv()?);
+
+    // Structural (real-TPU) quantities — what the block shapes imply.
+    let mut structure = Table::new(
+        "L1 matmul kernel: VMEM working set by block shape (TPU budget 16 MiB)",
+        &["bm", "bn", "bk", "vmem_KiB", "fits_16MiB"],
+    );
+    for &(bm, bn, bk) in
+        &[(64usize, 64usize, 64usize), (128, 128, 128), (256, 256, 128),
+          (512, 512, 256)]
+    {
+        // mirror python/compile/kernels/matmul.py::vmem_bytes (half in,
+        // f32 accumulator)
+        let bytes = bm * bk * 2 + bk * bn * 2 + bm * bn * 4;
+        structure.row(&[
+            bm.to_string(),
+            bn.to_string(),
+            bk.to_string(),
+            format!("{:.0}", bytes as f64 / 1024.0),
+            (bytes < 16 << 20).to_string(),
+        ]);
+    }
+    println!("# wrote {}", structure.write_csv()?);
+    println!("# default 128^3 blocks: f32 scratch + half tiles ≈ 128 KiB ≪ 16 MiB VMEM,");
+    println!("# leaving room for double-buffering the HBM↔VMEM pipeline.");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! L3 runtime overhead — how much of a training step is coordinator
+//! (literal packing, tuple decompose, host hops) vs XLA compute?
+//!
+//! This PJRT build returns one tuple buffer per execution and takes
+//! literal inputs, so every step pays: batch literal creation +
+//! state literal pass-in + output tuple fetch + decompose.  The bench
+//! isolates each cost; §Perf tracks the coordinator share (target:
+//! L3 not the bottleneck — well under 10% on the desktop model).
+
+use std::time::Instant;
+
+use mpx::config::{model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::metrics::RunMetrics;
+use mpx::runtime::{lit_f32, lit_i32, ArtifactStore};
+use mpx::trainer::FusedTrainer;
+use mpx::util::benchkit::{bench, BenchOpts, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut store = ArtifactStore::open_default()?;
+    let opts = BenchOpts::from_env(BenchOpts {
+        warmup_iters: 3,
+        max_iters: 30,
+        max_seconds: 6.0,
+    });
+
+    let mut table = Table::new(
+        "L3 runtime overhead breakdown",
+        &["component", "median_us", "notes"],
+    );
+
+    // 1. batch literal creation (vit_desktop b64: 768 KiB images)
+    let preset = model_preset("vit_desktop")?;
+    let dataset = SyntheticDataset::new(&preset, 0);
+    let batch = dataset.batch(0, 64, 0);
+    let stats = bench(&opts, || {
+        let _ = lit_f32(&[64, 3, 32, 32], &batch.images).unwrap();
+        let _ = lit_i32(&[64], &batch.labels).unwrap();
+    });
+    table.row(&[
+        "batch_literals_b64".into(),
+        format!("{:.1}", stats.median.as_secs_f64() * 1e6),
+        "images+labels memcpy".into(),
+    ]);
+
+    // 2. batch generation itself (hidden by the prefetcher in runs)
+    let stats = bench(&opts, || {
+        let _ = dataset.batch(1, 64, 0);
+    });
+    table.row(&[
+        "synthetic_batch_gen_b64".into(),
+        format!("{:.1}", stats.median.as_secs_f64() * 1e6),
+        "overlapped by Prefetcher".into(),
+    ]);
+
+    // 3. end-to-end tiny step vs its pieces: execute a trivial
+    //    artifact (init) to approximate the fixed PJRT dispatch cost.
+    let init = store.load("init_vit_tiny_fp32")?;
+    let seed = mpx::runtime::lit_scalar_i32(0);
+    let stats = bench(&opts, || {
+        let _ = init.execute(&[&seed]).unwrap();
+    });
+    table.row(&[
+        "init_vit_tiny_exec".into(),
+        format!("{:.1}", stats.median.as_secs_f64() * 1e6),
+        "dispatch + 123-leaf tuple fetch".into(),
+    ]);
+
+    // 4. full fused step (vit_desktop b64 mixed) with component timing
+    let cfg = TrainConfig {
+        model: "vit_desktop".into(),
+        precision: Precision::MixedF16,
+        batch: 64,
+        log_every: 10_000,
+        ..Default::default()
+    };
+    let mut trainer = FusedTrainer::new(&mut store, cfg)?;
+    let mut metrics = RunMetrics::new();
+    trainer.run(&dataset, 8, &mut metrics)?;
+    let step_ms = metrics
+        .mean_step_time(2)
+        .unwrap()
+        .as_secs_f64()
+        * 1e3;
+
+    // overhead share estimate: batch literals measured above
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        let _ = lit_f32(&[64, 3, 32, 32], &batch.images).unwrap();
+    }
+    let lit_ms = t0.elapsed().as_secs_f64() / 10.0 * 1e3;
+
+    table.row(&[
+        "fused_step_desktop_b64".into(),
+        format!("{:.1}", step_ms * 1e3),
+        "whole step (XLA + L3)".into(),
+    ]);
+    table.row(&[
+        "coordinator_share".into(),
+        format!("{:.1}", lit_ms * 1e3),
+        format!("{:.2}% of step", lit_ms / step_ms * 100.0),
+    ]);
+    println!("# wrote {}", table.write_csv()?);
+    Ok(())
+}

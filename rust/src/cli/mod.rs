@@ -1,0 +1,179 @@
+//! Argument parsing (clap is unavailable offline).
+//!
+//! Convention: `mpx <subcommand> [--flag value]... [--switch]...`.
+//! Flags are declared by the caller via the typed getters; unknown
+//! flags are rejected by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut subcommand = None;
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut it = argv.into_iter().peekable();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            switches,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} wants an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        Ok(self.get_u64(name)?.map(|v| v as usize))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} wants a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated integer list (`--batches 8,16,32`).
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.get_str(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--{name}: bad integer {p:?}")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Call after all getters: rejects flags nobody consumed.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        for s in &self.switches {
+            if !consumed.iter().any(|c| c == s) {
+                bail!("unknown switch --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --model vit_tiny --batch 8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_str("model"), Some("vit_tiny"));
+        assert_eq!(a.get_usize("batch").unwrap(), Some(8));
+        assert!(a.has_switch("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --batches=8,16,32");
+        assert_eq!(
+            a.get_usize_list("batches").unwrap(),
+            Some(vec![8, 16, 32])
+        );
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("train --tpyo 3");
+        let _ = a.get_str("model");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = parse("train --batch pony");
+        assert!(a.get_usize("batch").is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_switch("help"));
+    }
+
+    #[test]
+    fn float_flags() {
+        let a = parse("sim --prob 0.05");
+        assert_eq!(a.get_f64("prob").unwrap(), Some(0.05));
+    }
+}

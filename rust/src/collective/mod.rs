@@ -1,0 +1,159 @@
+//! Collectives for the simulated multi-device data-parallel mode.
+//!
+//! The paper's cluster experiment divides each batch across 4 H100s
+//! and all-reduces gradients (standard data parallelism).  Our
+//! "devices" are shard slots on the one CPU PJRT client; the gradient
+//! all-reduce happens here, in deterministic tree order, so results
+//! are bit-identical run-to-run and independent of shard completion
+//! order — a property the equivalence tests rely on and real
+//! frameworks (NCCL with deterministic algorithms) aim for.
+
+/// Mean-reduce shard gradient vectors in place into shard 0's buffer.
+///
+/// Deterministic pairwise tree reduction: `(g0+g1) + (g2+g3)` — the
+/// same association every call, regardless of thread timing.
+pub fn all_reduce_mean(shards: &mut Vec<Vec<Vec<f32>>>) {
+    let n = shards.len();
+    assert!(n > 0, "no shards");
+    if n == 1 {
+        return;
+    }
+    let num_tensors = shards[0].len();
+    for s in shards.iter() {
+        assert_eq!(s.len(), num_tensors, "shard tensor arity mismatch");
+    }
+
+    // Tree reduction over shard indices with fixed association.
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            // add shard i+stride into shard i
+            let (left, right) = shards.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                debug_assert_eq!(d.len(), s.len());
+                for (x, y) in d.iter_mut().zip(s.iter()) {
+                    *x += *y;
+                }
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+
+    let inv = 1.0 / n as f32;
+    for t in shards[0].iter_mut() {
+        for x in t.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// AND-reduce the per-shard finiteness flags (a single non-finite
+/// shard poisons the global step — paper §2.1 step 6a applies to the
+/// *global* gradient).
+pub fn all_reduce_finite(flags: &[bool]) -> bool {
+    flags.iter().all(|&f| f)
+}
+
+/// Mean-reduce per-shard losses (logging only).
+pub fn mean_loss(losses: &[f32]) -> f32 {
+    if losses.is_empty() {
+        return f32::NAN;
+    }
+    losses.iter().sum::<f32>() / losses.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    fn make_shards(n: usize, vals: &[f32]) -> Vec<Vec<Vec<f32>>> {
+        (0..n)
+            .map(|s| vec![vals.iter().map(|v| v + s as f32).collect()])
+            .collect()
+    }
+
+    #[test]
+    fn mean_of_two() {
+        let mut sh = make_shards(2, &[1.0, 3.0]);
+        all_reduce_mean(&mut sh);
+        assert_eq!(sh[0][0], vec![1.5, 3.5]);
+    }
+
+    #[test]
+    fn mean_of_four_matches_naive() {
+        let mut sh = make_shards(4, &[2.0]);
+        all_reduce_mean(&mut sh);
+        assert_eq!(sh[0][0], vec![2.0 + (0.0 + 1.0 + 2.0 + 3.0) / 4.0]);
+    }
+
+    #[test]
+    fn odd_shard_count() {
+        let mut sh = make_shards(3, &[0.0]);
+        all_reduce_mean(&mut sh);
+        assert!((sh[0][0][0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_shard_noop() {
+        let mut sh = make_shards(1, &[5.0]);
+        all_reduce_mean(&mut sh);
+        assert_eq!(sh[0][0], vec![5.0]);
+    }
+
+    #[test]
+    fn finite_flags() {
+        assert!(all_reduce_finite(&[true, true]));
+        assert!(!all_reduce_finite(&[true, false, true]));
+        assert!(all_reduce_finite(&[]));
+    }
+
+    #[test]
+    fn property_tree_matches_sequential_sum() {
+        forall(
+            100,
+            |r: &mut Rng| {
+                let n = 1 + r.below(8) as usize;
+                let len = 1 + r.below(16) as usize;
+                let shards: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        (0..len).map(|_| r.normal_f32(0.0, 1.0)).collect()
+                    })
+                    .collect();
+                shards
+            },
+            |shards| {
+                let n = shards.len();
+                let len = shards[0].len();
+                let mut wrapped: Vec<Vec<Vec<f32>>> =
+                    shards.iter().map(|s| vec![s.clone()]).collect();
+                all_reduce_mean(&mut wrapped);
+                for i in 0..len {
+                    let naive: f32 = shards.iter().map(|s| s[i]).sum::<f32>()
+                        / n as f32;
+                    let got = wrapped[0][0][i];
+                    if (naive - got).abs() > 1e-4 * naive.abs().max(1.0) {
+                        return Err(format!(
+                            "elem {i}: tree {got} vs naive {naive}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = make_shards(5, &[0.1, 0.2, 0.3]);
+        let mut b = make_shards(5, &[0.1, 0.2, 0.3]);
+        all_reduce_mean(&mut a);
+        all_reduce_mean(&mut b);
+        assert_eq!(a[0][0], b[0][0]); // bitwise
+    }
+}

@@ -1,0 +1,342 @@
+//! Config system: a from-scratch TOML-subset parser plus the typed
+//! training configuration and machine/model presets the launcher and
+//! the benches consume.
+//!
+//! Supported TOML subset (all the framework needs): `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous-array values, `#` comments.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::scaling::ScalingConfig;
+use toml::TomlDoc;
+
+/// Numeric execution mode (paper §5 compares fp32 against mixed f16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    MixedF16,
+    MixedBf16,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "fp32" | "f32" | "full" => Precision::Fp32,
+            "mixed_f16" | "f16" | "mixed" => Precision::MixedF16,
+            "mixed_bf16" | "bf16" => Precision::MixedBf16,
+            _ => bail!("unknown precision {s:?}"),
+        })
+    }
+
+    /// The artifact-name component (`aot.py` naming convention).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::MixedF16 => "mixed_f16",
+            Precision::MixedBf16 => "mixed_bf16",
+        }
+    }
+
+    pub fn scaling_config(self) -> ScalingConfig {
+        match self {
+            Precision::MixedF16 => ScalingConfig::default(),
+            _ => ScalingConfig::pinned(),
+        }
+    }
+}
+
+/// Model presets mirrored from `python/compile/model.py::PRESETS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub feature_dim: usize,
+    pub mlp_dim: usize,
+    pub num_heads: usize,
+    pub depth: usize,
+}
+
+impl ModelPreset {
+    pub fn seq_len(&self) -> usize {
+        (self.image_size / self.patch_size).pow(2) + 1
+    }
+}
+
+pub const VIT_TINY: ModelPreset = ModelPreset {
+    name: "vit_tiny",
+    image_size: 32,
+    patch_size: 8,
+    channels: 3,
+    num_classes: 10,
+    feature_dim: 64,
+    mlp_dim: 128,
+    num_heads: 4,
+    depth: 2,
+};
+
+/// Paper §5 desktop model: "size 256, residual blocks containing one
+/// hidden layer of 800 neurons", CIFAR-100.
+pub const VIT_DESKTOP: ModelPreset = ModelPreset {
+    name: "vit_desktop",
+    image_size: 32,
+    patch_size: 4,
+    channels: 3,
+    num_classes: 100,
+    feature_dim: 256,
+    mlp_dim: 800,
+    num_heads: 8,
+    depth: 6,
+};
+
+/// Paper §5 cluster model: ViT-Base dimensions, ImageNet-1k.
+pub const VIT_BASE: ModelPreset = ModelPreset {
+    name: "vit_base",
+    image_size: 224,
+    patch_size: 16,
+    channels: 3,
+    num_classes: 1000,
+    feature_dim: 768,
+    mlp_dim: 3072,
+    num_heads: 12,
+    depth: 12,
+};
+
+pub fn model_preset(name: &str) -> Result<ModelPreset> {
+    Ok(match name {
+        "vit_tiny" => VIT_TINY,
+        "vit_desktop" => VIT_DESKTOP,
+        "vit_base" => VIT_BASE,
+        _ => bail!("unknown model preset {name:?}"),
+    })
+}
+
+/// Machine profiles for the roofline projection (paper §5 hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct MachineProfile {
+    pub name: &'static str,
+    /// Peak fp32 TFLOP/s.
+    pub tflops_f32: f64,
+    /// fp16 compute speedup over fp32 (paper: 1× RTX4070, 2× H100).
+    pub half_speedup: f64,
+    /// Memory bandwidth GB/s.
+    pub bandwidth_gbs: f64,
+    /// Number of devices (cluster = 4×H100).
+    pub devices: usize,
+}
+
+pub const MACHINE_DESKTOP: MachineProfile = MachineProfile {
+    name: "desktop_rtx4070",
+    tflops_f32: 29.1,
+    half_speedup: 1.0, // paper: "no computing speedup for half precision"
+    bandwidth_gbs: 504.0,
+    devices: 1,
+};
+
+pub const MACHINE_CLUSTER: MachineProfile = MachineProfile {
+    name: "cluster_h100",
+    tflops_f32: 67.0,
+    half_speedup: 2.0, // paper: "double the speed for half precision"
+    bandwidth_gbs: 3350.0,
+    devices: 4,
+};
+
+pub fn machine_profile(name: &str) -> Result<MachineProfile> {
+    Ok(match name {
+        "desktop" | "desktop_rtx4070" => MACHINE_DESKTOP,
+        "cluster" | "cluster_h100" => MACHINE_CLUSTER,
+        _ => bail!("unknown machine profile {name:?}"),
+    })
+}
+
+/// Full training-run configuration (CLI flags and/or TOML file).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub precision: Precision,
+    pub batch: usize,
+    pub steps: u64,
+    pub seed: u64,
+    pub shards: usize,
+    pub artifacts_dir: String,
+    pub log_every: u64,
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: Option<String>,
+    pub dataset: String,
+    /// Learning-rate metadata (must match the AOT'd optimizer).
+    pub lr: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "vit_tiny".into(),
+            precision: Precision::MixedF16,
+            batch: 8,
+            steps: 100,
+            seed: 0,
+            shards: 1,
+            artifacts_dir: "artifacts".into(),
+            log_every: 10,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            dataset: "synthetic".into(),
+            lr: 3e-4,
+            weight_decay: 1e-4,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Artifact name of the fused step for this config.
+    pub fn step_artifact(&self) -> String {
+        format!(
+            "step_fused_{}_{}_b{}",
+            self.model,
+            self.precision.tag(),
+            self.batch
+        )
+    }
+
+    pub fn grads_artifact(&self) -> String {
+        format!(
+            "grads_{}_{}_b{}",
+            self.model,
+            self.precision.tag(),
+            self.batch
+        )
+    }
+
+    pub fn init_artifact(&self) -> String {
+        format!("init_{}_{}", self.model, self.precision.tag())
+    }
+
+    /// Load from a TOML file (section `[train]` + scalars).
+    pub fn from_toml_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        let doc = TomlDoc::parse(&text).context("parse config")?;
+        let mut cfg = TrainConfig::default();
+
+        if let Some(s) = doc.get_str("train.model") {
+            cfg.model = s.to_string();
+        }
+        if let Some(s) = doc.get_str("train.precision") {
+            cfg.precision = Precision::parse(s)?;
+        }
+        if let Some(v) = doc.get_int("train.batch") {
+            cfg.batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("train.steps") {
+            cfg.steps = v as u64;
+        }
+        if let Some(v) = doc.get_int("train.seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("train.shards") {
+            cfg.shards = v as usize;
+        }
+        if let Some(s) = doc.get_str("train.artifacts_dir") {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(v) = doc.get_int("train.log_every") {
+            cfg.log_every = v as u64;
+        }
+        if let Some(v) = doc.get_int("train.checkpoint_every") {
+            cfg.checkpoint_every = v as u64;
+        }
+        if let Some(s) = doc.get_str("train.checkpoint_dir") {
+            cfg.checkpoint_dir = Some(s.to_string());
+        }
+        if let Some(s) = doc.get_str("train.dataset") {
+            cfg.dataset = s.to_string();
+        }
+        if let Some(v) = doc.get_float("train.lr") {
+            cfg.lr = v;
+        }
+        if let Some(v) = doc.get_float("train.weight_decay") {
+            cfg.weight_decay = v;
+        }
+        model_preset(&cfg.model)?; // validate
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parse_and_tags() {
+        assert_eq!(Precision::parse("f16").unwrap(), Precision::MixedF16);
+        assert_eq!(Precision::parse("fp32").unwrap().tag(), "fp32");
+        assert!(Precision::parse("f64").is_err());
+    }
+
+    #[test]
+    fn scaling_config_by_precision() {
+        assert_eq!(Precision::MixedF16.scaling_config().init_scale, 32768.0);
+        assert_eq!(Precision::Fp32.scaling_config().init_scale, 1.0);
+        assert_eq!(Precision::MixedBf16.scaling_config().max_scale, 1.0);
+    }
+
+    #[test]
+    fn presets_match_paper() {
+        // §5: desktop ViT feature 256, hidden 800; cluster ViT-Base.
+        assert_eq!(VIT_DESKTOP.feature_dim, 256);
+        assert_eq!(VIT_DESKTOP.mlp_dim, 800);
+        assert_eq!(VIT_DESKTOP.num_classes, 100); // CIFAR-100
+        assert_eq!(VIT_BASE.feature_dim, 768);
+        assert_eq!(VIT_BASE.mlp_dim, 3072);
+        assert_eq!(VIT_BASE.num_classes, 1000); // ImageNet-1k
+        assert_eq!(VIT_BASE.seq_len(), 197);
+        assert_eq!(VIT_DESKTOP.seq_len(), 65);
+    }
+
+    #[test]
+    fn machines_match_paper() {
+        // §5: RTX4070 same speed half/full; H100 double for half.
+        assert_eq!(MACHINE_DESKTOP.half_speedup, 1.0);
+        assert_eq!(MACHINE_CLUSTER.half_speedup, 2.0);
+        assert_eq!(MACHINE_CLUSTER.devices, 4);
+    }
+
+    #[test]
+    fn artifact_names() {
+        let cfg = TrainConfig {
+            model: "vit_desktop".into(),
+            precision: Precision::MixedF16,
+            batch: 64,
+            ..Default::default()
+        };
+        assert_eq!(cfg.step_artifact(), "step_fused_vit_desktop_mixed_f16_b64");
+        assert_eq!(cfg.init_artifact(), "init_vit_desktop_mixed_f16");
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let text = r#"
+# training run
+[train]
+model = "vit_desktop"
+precision = "mixed_f16"
+batch = 64
+steps = 500
+lr = 0.0003
+"#;
+        let path = std::env::temp_dir().join("mpx_cfg_test.toml");
+        std::fs::write(&path, text).unwrap();
+        let cfg =
+            TrainConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.model, "vit_desktop");
+        assert_eq!(cfg.batch, 64);
+        assert_eq!(cfg.steps, 500);
+        assert!((cfg.lr - 3e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! TOML-subset parser (no external crates offline).
+//!
+//! Grammar: `[section]` / `[a.b]` headers, `key = value` lines where
+//! value ∈ {"string", integer, float, bool, [array of scalars]},
+//! `#` comments anywhere, blank lines.  Keys are addressed by dotted
+//! path (`train.batch`).  This covers the repo's config files; the
+//! parser rejects what it does not understand rather than guessing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                let name = name.trim();
+                if name.is_empty()
+                    || !name.chars().all(|c| {
+                        c.is_ascii_alphanumeric() || c == '_' || c == '.'
+                    })
+                {
+                    bail!("line {}: bad section name {name:?}", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_')
+            {
+                bail!("line {}: bad key {key:?}", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(path, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.get(path) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        match self.get(path) {
+            Some(TomlValue::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        match self.get(path) {
+            Some(TomlValue::Float(v)) => Some(*v),
+            Some(TomlValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.get(path) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        if inner.contains('"') {
+            bail!("embedded quote in string (escapes unsupported)");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    // number: int first, then float
+    if let Ok(v) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+title = "mpx"          # inline comment
+
+[train]
+model = "vit_desktop"
+batch = 64
+lr = 3e-4
+resume = false
+batches = [8, 16, 32]
+
+[machine.desktop]
+bandwidth = 504.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("mpx"));
+        assert_eq!(doc.get_int("train.batch"), Some(64));
+        assert_eq!(doc.get_float("train.lr"), Some(3e-4));
+        assert_eq!(doc.get_bool("train.resume"), Some(false));
+        assert_eq!(doc.get_float("machine.desktop.bandwidth"), Some(504.0));
+        match doc.get("train.batches") {
+            Some(TomlValue::Array(a)) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_float_getter() {
+        let doc = TomlDoc::parse("x = 5").unwrap();
+        assert_eq!(doc.get_float("x"), Some(5.0));
+        assert_eq!(doc.get_int("x"), Some(5));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get_str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_int("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("bad key = 1").is_err());
+    }
+}

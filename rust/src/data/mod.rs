@@ -1,0 +1,297 @@
+//! Synthetic datasets + batch pipeline.
+//!
+//! The paper trains on CIFAR-100 (desktop) and ImageNet-1k (cluster);
+//! neither ships with this environment, so we substitute deterministic
+//! *class-conditional Gaussian* image datasets with matching shapes
+//! (DESIGN.md substitution table): each class `c` has a fixed random
+//! prototype image; a sample is `prototype[c] + noise`.  The task is
+//! genuinely learnable (the E2E example drives the loss down and
+//! accuracy up), step time and memory are independent of pixel
+//! content, and generation is fast enough to never bottleneck the
+//! trainer (a prefetch thread hides it regardless).
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::config::ModelPreset;
+use crate::util::rng::Rng;
+
+/// One host-side batch, layout matching the artifact inputs:
+/// images `f32[batch, C, H, W]` (flattened row-major), labels `i32[batch]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub image_elems: usize,
+}
+
+/// Deterministic class-conditional Gaussian image dataset.
+#[derive(Clone)]
+pub struct SyntheticDataset {
+    prototypes: Vec<f32>, // [classes, image_elems]
+    image_elems: usize,
+    num_classes: usize,
+    noise_std: f32,
+    signal_std: f32,
+}
+
+impl SyntheticDataset {
+    /// `seed` fixes the prototypes; samples additionally depend on the
+    /// per-batch stream.
+    pub fn new(preset: &ModelPreset, seed: u64) -> SyntheticDataset {
+        Self::with_noise(preset, seed, 0.5)
+    }
+
+    pub fn with_noise(
+        preset: &ModelPreset,
+        seed: u64,
+        noise_std: f32,
+    ) -> SyntheticDataset {
+        let image_elems =
+            preset.channels * preset.image_size * preset.image_size;
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E0D);
+        let signal_std = 1.0;
+        let prototypes: Vec<f32> = (0..preset.num_classes * image_elems)
+            .map(|_| rng.normal_f32(0.0, signal_std))
+            .collect();
+        SyntheticDataset {
+            prototypes,
+            image_elems,
+            num_classes: preset.num_classes,
+            noise_std,
+            signal_std,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    /// Expected Bayes-optimal achievability indicator (for tests): the
+    /// signal-to-noise ratio per pixel.
+    pub fn snr(&self) -> f32 {
+        self.signal_std / self.noise_std
+    }
+
+    /// Generate batch `index` of size `batch` deterministically:
+    /// same (seed, index, batch) ⇒ bit-identical batch, regardless of
+    /// which shard or thread asks.
+    pub fn batch(&self, index: u64, batch: usize, stream_seed: u64) -> Batch {
+        let mut rng = Rng::new(
+            stream_seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(index),
+        );
+        let mut images = Vec::with_capacity(batch * self.image_elems);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let label = rng.below(self.num_classes as u64) as usize;
+            labels.push(label as i32);
+            let proto = &self.prototypes
+                [label * self.image_elems..(label + 1) * self.image_elems];
+            for &p in proto {
+                images.push(p + rng.normal_f32(0.0, self.noise_std));
+            }
+        }
+        Batch { images, labels, batch, image_elems: self.image_elems }
+    }
+
+    /// Shard a global batch: shard `s` of `n` gets rows
+    /// `[s·b/n, (s+1)·b/n)` of the same deterministic global batch —
+    /// the data-parallel equivalence tests rely on this.
+    pub fn shard_batch(
+        &self,
+        index: u64,
+        global_batch: usize,
+        stream_seed: u64,
+        shard: usize,
+        num_shards: usize,
+    ) -> Batch {
+        assert!(global_batch % num_shards == 0,
+                "global batch {global_batch} not divisible by {num_shards}");
+        let global = self.batch(index, global_batch, stream_seed);
+        let per = global_batch / num_shards;
+        let img_lo = shard * per * self.image_elems;
+        let img_hi = (shard + 1) * per * self.image_elems;
+        Batch {
+            images: global.images[img_lo..img_hi].to_vec(),
+            labels: global.labels[shard * per..(shard + 1) * per].to_vec(),
+            batch: per,
+            image_elems: self.image_elems,
+        }
+    }
+}
+
+/// Prefetching loader: a background thread keeps `depth` batches
+/// ready so generation overlaps the train step (the paper excludes
+/// data-loading time from its measurements; we overlap it instead).
+pub struct Prefetcher {
+    rx: Option<mpsc::Receiver<Batch>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn new(
+        dataset: SyntheticDataset,
+        batch: usize,
+        stream_seed: u64,
+        depth: usize,
+    ) -> Prefetcher {
+        Self::with_start(dataset, batch, stream_seed, depth, 0)
+    }
+
+    /// Start streaming from batch index `start` (checkpoint resume).
+    pub fn with_start(
+        dataset: SyntheticDataset,
+        batch: usize,
+        stream_seed: u64,
+        depth: usize,
+        start: u64,
+    ) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = thread::spawn(move || {
+            let mut index = start;
+            loop {
+                let b = dataset.batch(index, batch, stream_seed);
+                if tx.send(b).is_err() {
+                    return; // consumer dropped
+                }
+                index += 1;
+            }
+        });
+        Prefetcher { rx: Some(rx), handle: Some(handle) }
+    }
+
+    pub fn next(&self) -> Batch {
+        self.rx
+            .as_ref()
+            .expect("prefetcher closed")
+            .recv()
+            .expect("prefetch thread died")
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Dropping the receiver makes the producer's next send fail,
+        // so it exits; then join.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VIT_TINY;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn deterministic_batches() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 1);
+        let a = ds.batch(3, 8, 42);
+        let b = ds.batch(3, 8, 42);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 1);
+        assert_ne!(ds.batch(0, 8, 42).images, ds.batch(1, 8, 42).images);
+    }
+
+    #[test]
+    fn shapes() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 1);
+        let b = ds.batch(0, 4, 0);
+        assert_eq!(b.images.len(), 4 * 3 * 32 * 32);
+        assert_eq!(b.labels.len(), 4);
+        assert!(b.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn class_signal_present() {
+        // Same-class samples correlate; different-class do not.
+        let ds = SyntheticDataset::with_noise(&VIT_TINY, 1, 0.1);
+        let b = ds.batch(0, 64, 7);
+        let dot = |i: usize, j: usize| -> f32 {
+            let (a, b_) = (
+                &b.images[i * ds.image_elems()..(i + 1) * ds.image_elems()],
+                &b.images[j * ds.image_elems()..(j + 1) * ds.image_elems()],
+            );
+            let num: f32 = a.iter().zip(b_).map(|(x, y)| x * y).sum();
+            let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nb: f32 = b_.iter().map(|x| x * x).sum::<f32>().sqrt();
+            num / (na * nb)
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..16 {
+            for j in (i + 1)..16 {
+                if b.labels[i] == b.labels[j] {
+                    same.push(dot(i, j));
+                } else {
+                    diff.push(dot(i, j));
+                }
+            }
+        }
+        if !same.is_empty() {
+            let mean_same: f32 = same.iter().sum::<f32>() / same.len() as f32;
+            let mean_diff: f32 = diff.iter().sum::<f32>() / diff.len() as f32;
+            assert!(mean_same > mean_diff + 0.5,
+                    "same={mean_same} diff={mean_diff}");
+        }
+    }
+
+    #[test]
+    fn sharding_partitions_global_batch() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 1);
+        let global = ds.batch(5, 8, 9);
+        let mut rebuilt_imgs = Vec::new();
+        let mut rebuilt_labels = Vec::new();
+        for s in 0..4 {
+            let sh = ds.shard_batch(5, 8, 9, s, 4);
+            assert_eq!(sh.batch, 2);
+            rebuilt_imgs.extend(sh.images);
+            rebuilt_labels.extend(sh.labels);
+        }
+        assert_eq!(rebuilt_imgs, global.images);
+        assert_eq!(rebuilt_labels, global.labels);
+    }
+
+    #[test]
+    fn property_shard_determinism_across_orders() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 3);
+        forall(
+            30,
+            |r| (r.below(100), r.below(4) as usize),
+            |&(index, shard)| {
+                let a = ds.shard_batch(index, 8, 1, shard, 4);
+                let b = ds.shard_batch(index, 8, 1, shard, 4);
+                if a.images == b.images && a.labels == b.labels {
+                    Ok(())
+                } else {
+                    Err("shard not deterministic".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prefetcher_streams_in_order() {
+        let ds = SyntheticDataset::new(&VIT_TINY, 1);
+        let expect0 = ds.batch(0, 4, 11);
+        let expect1 = ds.batch(1, 4, 11);
+        let pf = Prefetcher::new(ds, 4, 11, 2);
+        assert_eq!(pf.next().images, expect0.images);
+        assert_eq!(pf.next().images, expect1.images);
+    }
+}

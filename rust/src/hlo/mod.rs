@@ -1,0 +1,293 @@
+//! HLO-text parser — enough structure for the buffer census and flop
+//! counting the memory model needs (not a general HLO frontend).
+//!
+//! An artifact's `.hlo.txt` contains computations whose body lines
+//! look like:
+//!
+//! ```text
+//!   %dot.42 = f32[64,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, ...
+//!   %p.3 = f32[8,3,32,32]{3,2,1,0} parameter(3)
+//! ```
+//!
+//! We extract per-instruction: name, opcode, output dtype/shape — and
+//! for `dot`/`convolution` the operand shapes (flop estimation).  The
+//! census then aggregates bytes by dtype and by opcode class, which is
+//! the Fig. 2 cross-check: XLA materializes exactly these buffers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::pytree::DType;
+
+/// One parsed instruction.
+#[derive(Debug, Clone)]
+pub struct Instruction {
+    pub name: String,
+    pub opcode: String,
+    pub dtype: Option<DType>,
+    pub shape: Vec<usize>,
+    /// Is this inside the entry computation (vs a fusion/sub-comp)?
+    pub in_entry: bool,
+}
+
+impl Instruction {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.dtype.map(|d| d.bytes() * self.elems()).unwrap_or(0)
+    }
+}
+
+/// Parsed module: instruction list + entry-computation flag.
+#[derive(Debug, Default)]
+pub struct HloModule {
+    pub instructions: Vec<Instruction>,
+}
+
+impl HloModule {
+    pub fn parse(text: &str) -> Result<HloModule> {
+        let mut out = HloModule::default();
+        let mut in_entry = false;
+
+        for line in text.lines() {
+            let trimmed = line.trim_start();
+            // computation headers: `ENTRY main.123 {` (xla_extension
+            // 0.5.1 prints names without the % sigil)
+            if trimmed.starts_with("ENTRY ") {
+                in_entry = true;
+                continue;
+            }
+            if trimmed == "}" {
+                in_entry = false;
+                continue;
+            }
+            if trimmed.starts_with("HloModule") || !trimmed.contains(" = ") {
+                continue;
+            }
+            if let Some(instr) = parse_instruction(trimmed, in_entry)? {
+                out.instructions.push(instr);
+            }
+        }
+        if out.instructions.is_empty() {
+            bail!("no instructions parsed — not HLO text?");
+        }
+        Ok(out)
+    }
+
+    pub fn entry_instructions(&self) -> impl Iterator<Item = &Instruction> {
+        self.instructions.iter().filter(|i| i.in_entry)
+    }
+
+    /// Bytes of parameter buffers in the entry computation.
+    pub fn parameter_bytes(&self) -> u64 {
+        self.entry_instructions()
+            .filter(|i| i.opcode == "parameter")
+            .map(|i| i.bytes() as u64)
+            .sum()
+    }
+
+    /// Bytes by dtype over all non-parameter entry instructions — an
+    /// upper bound on XLA's workspace (before buffer reuse).
+    pub fn workspace_bytes_by_dtype(&self) -> BTreeMap<&'static str, u64> {
+        let mut m = BTreeMap::new();
+        for i in self.entry_instructions() {
+            if i.opcode == "parameter" {
+                continue;
+            }
+            if let Some(d) = i.dtype {
+                *m.entry(d.name()).or_insert(0) += i.bytes() as u64;
+            }
+        }
+        m
+    }
+
+    /// Count of instructions per opcode (graph-shape diagnostics).
+    pub fn opcode_histogram(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for i in &self.instructions {
+            *m.entry(i.opcode.clone()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Rough matmul flops: 2·∏(output dims)·K summed over `dot`s.
+    /// K is not recoverable from the output shape alone, so the census
+    /// stores dots' *output* sizes; flop totals come from the analytic
+    /// model. This helper reports total dot output elements instead.
+    pub fn dot_output_elems(&self) -> u64 {
+        self.instructions
+            .iter()
+            .filter(|i| i.opcode == "dot")
+            .map(|i| i.elems() as u64)
+            .sum()
+    }
+}
+
+/// Parse one instruction line, `None` for lines we deliberately skip
+/// (tuple-shaped results — the root tuple aliases the real buffers).
+fn parse_instruction(line: &str, in_entry: bool) -> Result<Option<Instruction>> {
+    let body = line.strip_prefix("ROOT ").unwrap_or(line);
+    let Some((lhs, rhs)) = body.split_once(" = ") else {
+        return Ok(None);
+    };
+    let name = lhs.trim().trim_start_matches('%').to_string();
+    let rhs = rhs.trim_start();
+
+    // tuple-shaped: starts with '('
+    if rhs.starts_with('(') {
+        // opcode comes after the closing paren; we only need it for
+        // the histogram — record with no dtype/shape.
+        let opcode = rhs
+            .split(") ")
+            .nth(1)
+            .and_then(|r| r.split(['(', ' ']).next())
+            .unwrap_or("tuple")
+            .to_string();
+        return Ok(Some(Instruction {
+            name,
+            opcode,
+            dtype: None,
+            shape: Vec::new(),
+            in_entry,
+        }));
+    }
+
+    // `f32[8,3,32,32]{3,2,1,0} opcode(...)` or `f32[] opcode(...)`
+    let Some(bracket) = rhs.find('[') else {
+        return Ok(None);
+    };
+    let dtype_str = &rhs[..bracket];
+    let rest = &rhs[bracket + 1..];
+    let Some(close) = rest.find(']') else {
+        return Ok(None);
+    };
+    let dims_str = &rest[..close];
+    let after = rest[close + 1..].trim_start();
+    // skip layout `{...}` if present
+    let after = if let Some(stripped) = after.strip_prefix('{') {
+        match stripped.find('}') {
+            Some(i) => stripped[i + 1..].trim_start(),
+            None => return Ok(None),
+        }
+    } else {
+        after
+    };
+    let opcode = after
+        .split(['(', ' '])
+        .next()
+        .unwrap_or("")
+        .to_string();
+    if opcode.is_empty() {
+        return Ok(None);
+    }
+
+    let dtype = DType::parse(dtype_str).ok();
+    let shape = if dims_str.trim().is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().unwrap_or(0))
+            .collect()
+    };
+
+    Ok(Some(Instruction { name, opcode, dtype, shape, in_entry }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_step, entry_computation_layout={(f32[8,3,32,32])->(f32[], pred[])}
+
+fused_computation.1 {
+  param_0 = f32[64]{0} parameter(0)
+  ROOT add.1 = f32[64]{0} add(param_0, param_0)
+}
+
+ENTRY main.42 {
+  Arg_0.1 = f32[8,3,32,32]{3,2,1,0} parameter(0)
+  Arg_1.2 = s32[8]{0} parameter(1)
+  constant.3 = f32[] constant(1024)
+  dot.7 = f32[8,64]{1,0} dot(reshape.5, p.6), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  convert.9 = f16[8,64]{1,0} convert(dot.7)
+  ROOT tuple.10 = (f32[], pred[]) tuple(constant.3, pred.8)
+}
+"#;
+
+    #[test]
+    fn parses_instructions() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let ops = m.opcode_histogram();
+        assert_eq!(ops["parameter"], 3); // 2 entry + 1 fusion
+        assert_eq!(ops["dot"], 1);
+        assert_eq!(ops["convert"], 1);
+    }
+
+    #[test]
+    fn entry_vs_subcomputation() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        assert_eq!(m.entry_instructions().count(), 6);
+        // parameter_bytes counts entry params only
+        let want = (8 * 3 * 32 * 32 * 4 + 8 * 4) as u64;
+        assert_eq!(m.parameter_bytes(), want);
+    }
+
+    #[test]
+    fn shapes_and_bytes() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let dot = m
+            .instructions
+            .iter()
+            .find(|i| i.opcode == "dot")
+            .unwrap();
+        assert_eq!(dot.shape, vec![8, 64]);
+        assert_eq!(dot.bytes(), 8 * 64 * 4);
+        let cvt = m
+            .instructions
+            .iter()
+            .find(|i| i.opcode == "convert")
+            .unwrap();
+        assert_eq!(cvt.bytes(), 8 * 64 * 2); // f16
+    }
+
+    #[test]
+    fn workspace_by_dtype() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let ws = m.workspace_bytes_by_dtype();
+        assert_eq!(ws["f16"], (8 * 64 * 2) as u64);
+        assert!(ws["f32"] >= (8 * 64 * 4) as u64);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let c = m
+            .instructions
+            .iter()
+            .find(|i| i.opcode == "constant")
+            .unwrap();
+        assert_eq!(c.elems(), 1);
+        assert_eq!(c.bytes(), 4);
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(HloModule::parse("not hlo at all").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        // integration smoke (skipped when artifacts are not built)
+        let path = "artifacts/init_vit_tiny_fp32.hlo.txt";
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = HloModule::parse(&text).unwrap();
+            assert!(m.instructions.len() > 50);
+            assert!(m.opcode_histogram().contains_key("parameter"));
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! MPX — Mixed Precision Training for JAX: the Rust coordinator.
+//!
+//! This crate is Layer 3 of the three-layer reproduction of
+//! *Gräfe & Trimpe, "MPX: Mixed Precision Training for JAX", 2025*
+//! (see `DESIGN.md`): a self-contained training framework that loads
+//! the AOT-compiled train steps (HLO text emitted once by
+//! `python/compile/aot.py`) and runs them through the PJRT CPU client.
+//! Python is never on the training path.
+//!
+//! Module map (one subsystem per module — see `DESIGN.md §4`):
+//!
+//! * [`util`] — offline substrates: JSON parser, PRNG, bench harness,
+//!   mini property-testing (no external crates are available offline).
+//! * [`numerics`] — software IEEE binary16 / bfloat16, the host-side
+//!   mirror of every cast the compiled graphs perform.
+//! * [`scaling`] — the dynamic loss-scaling controller (paper §3.3)
+//!   for the data-parallel mode; parity-tested against the Python
+//!   implementation.
+//! * [`pytree`] — leaf inventories: the manifest contract between
+//!   `aot.py` and the runtime.
+//! * [`runtime`] — PJRT wrapper: artifact registry, executable cache,
+//!   literal pack/unpack.
+//! * [`config`] — TOML-subset config system + machine/model presets.
+//! * [`data`] — deterministic synthetic CIFAR-100/ImageNet-like
+//!   datasets with a prefetching loader.
+//! * [`optim`] — Rust AdamW/SGD over flat f32 tensors (master weights
+//!   for the data-parallel mode).
+//! * [`collective`] — deterministic tree all-reduce across shards.
+//! * [`trainer`] — the fused single-device loop and the simulated
+//!   multi-device data-parallel loop; checkpointing.
+//! * [`hlo`] — HLO-text parser for the buffer census.
+//! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
+//! * [`metrics`] — step timers, loss history, CSV/JSONL writers.
+//! * [`cli`] — argument parsing for the `mpx` binary and examples.
+
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod data;
+pub mod hlo;
+pub mod memmodel;
+pub mod metrics;
+pub mod numerics;
+pub mod optim;
+pub mod pytree;
+pub mod runtime;
+pub mod scaling;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type (anyhow, matching the `xla` crate's errors).
+pub type Result<T> = anyhow::Result<T>;

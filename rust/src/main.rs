@@ -1,0 +1,383 @@
+//! `mpx` — the MPX training framework launcher.
+//!
+//! Subcommands:
+//!
+//! * `train`          — run the fused single-device trainer.
+//! * `train-ddp`      — run the simulated multi-device data-parallel
+//!                      trainer (paper's cluster configuration).
+//! * `list-artifacts` — what `make artifacts` produced.
+//! * `inspect`        — manifest + HLO census of one artifact.
+//! * `memory-report`  — Fig. 2-style memory table for a model preset.
+//! * `scaling-sim`    — dynamic loss-scaling state-machine simulator.
+//! * `serve`          — batched-inference latency loop (fwd artifact).
+
+use anyhow::{Context, Result};
+
+use mpx::cli::Args;
+use mpx::config::{machine_profile, model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::hlo::HloModule;
+use mpx::memmodel::{roofline, ActivationModel};
+use mpx::metrics::RunMetrics;
+use mpx::runtime::ArtifactStore;
+use mpx::scaling::{LossScaler, OverflowInjector};
+use mpx::trainer::{checkpoint, DataParallelTrainer, FusedTrainer};
+use mpx::util::{human_bytes, human_duration, rng::Rng};
+
+const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-report|scaling-sim|serve> [flags]
+  train          --model M --precision P --batch B --steps N [--seed S] [--config cfg.toml]
+                 [--checkpoint-every K --checkpoint-dir D] [--metrics-csv path] [--resume ckpt]
+  train-ddp      --model M --precision P --batch B(per shard) --shards N --steps N
+  inspect        --artifact NAME
+  memory-report  --model M [--batches 8,16,...] [--machine desktop|cluster]
+  scaling-sim    [--steps N] [--overflow-prob p] [--period N]
+  serve          --model M --precision P --batch B [--requests N]";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args, false),
+        Some("train-ddp") => cmd_train(&args, true),
+        Some("list-artifacts") => cmd_list(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("memory-report") => cmd_memory_report(&args),
+        Some("scaling-sim") => cmd_scaling_sim(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn train_config_from(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get_str("config") {
+        Some(path) => TrainConfig::from_toml_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.get_str("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(p) = args.get_str("precision") {
+        cfg.precision = Precision::parse(p)?;
+    }
+    if let Some(b) = args.get_usize("batch")? {
+        cfg.batch = b;
+    }
+    if let Some(s) = args.get_u64("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(s) = args.get_usize("shards")? {
+        cfg.shards = s;
+    }
+    if let Some(d) = args.get_str("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(k) = args.get_u64("checkpoint-every")? {
+        cfg.checkpoint_every = k;
+    }
+    if let Some(d) = args.get_str("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.to_string());
+    }
+    if let Some(e) = args.get_u64("log-every")? {
+        cfg.log_every = e;
+    }
+    model_preset(&cfg.model)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
+    let cfg = train_config_from(args)?;
+    let metrics_csv = args.get_str("metrics-csv").map(str::to_string);
+    let resume = args.get_str("resume").map(str::to_string);
+    args.finish()?;
+
+    let preset = model_preset(&cfg.model)?;
+    let dataset = SyntheticDataset::new(&preset, cfg.seed);
+    let mut metrics = match &metrics_csv {
+        Some(p) => RunMetrics::with_csv(p)?,
+        None => RunMetrics::new(),
+    };
+
+    let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    eprintln!(
+        "[mpx] {} | model {} | precision {} | batch {}{} | {} steps",
+        if ddp { "data-parallel" } else { "fused" },
+        cfg.model,
+        cfg.precision.tag(),
+        cfg.batch,
+        if ddp { format!(" ×{} shards", cfg.shards) } else { String::new() },
+        cfg.steps,
+    );
+
+    if ddp {
+        let mut trainer = DataParallelTrainer::new(&mut store, cfg.clone())?;
+        trainer.run(&dataset, cfg.steps, &mut metrics)?;
+        summarize(&metrics);
+    } else {
+        let mut trainer = FusedTrainer::new(&mut store, cfg.clone())?;
+        if let Some(path) = resume {
+            let specs = trainer.manifest().inputs[..trainer.state().len()]
+                .to_vec();
+            let (step, leaves) = checkpoint::load(&path, &specs)?;
+            trainer.set_state(leaves)?;
+            trainer.step_index = step;
+            eprintln!("[mpx] resumed from {path} at step {step}");
+        }
+        let ckpt_every = cfg.checkpoint_every;
+        let total = cfg.steps;
+        if ckpt_every > 0 {
+            let dir = cfg
+                .checkpoint_dir
+                .clone()
+                .unwrap_or_else(|| "checkpoints".into());
+            let mut done = 0;
+            while done < total {
+                let chunk = ckpt_every.min(total - done);
+                trainer.run(&dataset, chunk, &mut metrics)?;
+                done += chunk;
+                let path = format!(
+                    "{dir}/{}_{}.ckpt",
+                    cfg.model, trainer.step_index
+                );
+                let specs = trainer.manifest().inputs
+                    [..trainer.state().len()]
+                    .to_vec();
+                checkpoint::save(
+                    &path,
+                    trainer.step_index,
+                    &specs,
+                    trainer.state(),
+                )?;
+                eprintln!("[mpx] checkpoint → {path}");
+            }
+        } else {
+            trainer.run(&dataset, total, &mut metrics)?;
+        }
+        summarize(&metrics);
+    }
+    Ok(())
+}
+
+fn summarize(metrics: &RunMetrics) {
+    let n = metrics.records.len();
+    if n == 0 {
+        return;
+    }
+    let mean = metrics.mean_step_time(n.min(3)).unwrap_or_default();
+    eprintln!(
+        "[mpx] done: {} steps in {}, mean step {} (post-warmup), final loss {:.4}, {} skipped",
+        n,
+        human_duration(metrics.elapsed()),
+        human_duration(mean),
+        metrics.recent_loss(10).unwrap_or(f32::NAN),
+        metrics.skipped_steps(),
+    );
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = args
+        .get_str("artifacts-dir")
+        .unwrap_or("artifacts")
+        .to_string();
+    args.finish()?;
+    let store = ArtifactStore::open(&dir)?;
+    for name in store.list()? {
+        let m = store.manifest(&name)?;
+        println!(
+            "{name:<44} {:<10} {:>4} in → {:>4} out",
+            m.kind,
+            m.inputs.len(),
+            m.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let name = args
+        .get_str("artifact")
+        .context("--artifact NAME required")?
+        .to_string();
+    let dir = args
+        .get_str("artifacts-dir")
+        .unwrap_or("artifacts")
+        .to_string();
+    args.finish()?;
+
+    let store = ArtifactStore::open(&dir)?;
+    let m = store.manifest(&name)?;
+    println!("artifact   : {name}");
+    println!("kind       : {}", m.kind);
+    if let Some(model) = &m.model {
+        println!("model      : {model}");
+    }
+    if let Some(p) = &m.precision {
+        println!("precision  : {p}");
+    }
+    if let Some(b) = m.batch {
+        println!("batch      : {b}");
+    }
+    println!("-- input bytes by group:");
+    for (group, bytes) in m.bytes_by_group(mpx::pytree::Which::Inputs) {
+        println!("   {group:<12} {}", human_bytes(bytes));
+    }
+    println!("-- output bytes by group:");
+    for (group, bytes) in m.bytes_by_group(mpx::pytree::Which::Outputs) {
+        println!("   {group:<12} {}", human_bytes(bytes));
+    }
+
+    let hlo = HloModule::parse(&store.hlo_text(&name)?)?;
+    println!("-- HLO census:");
+    println!("   entry instructions : {}", hlo.entry_instructions().count());
+    println!("   parameter bytes    : {}", human_bytes(hlo.parameter_bytes()));
+    for (dtype, bytes) in hlo.workspace_bytes_by_dtype() {
+        println!("   workspace {dtype:<8} : {}", human_bytes(bytes));
+    }
+    let hist = hlo.opcode_histogram();
+    let mut top: Vec<_> = hist.iter().collect();
+    top.sort_by_key(|(_, &c)| std::cmp::Reverse(c));
+    println!("-- top opcodes:");
+    for (op, count) in top.iter().take(8) {
+        println!("   {op:<16} {count}");
+    }
+    Ok(())
+}
+
+fn cmd_memory_report(args: &Args) -> Result<()> {
+    let model = args.get_str("model").unwrap_or("vit_desktop").to_string();
+    let batches = args
+        .get_usize_list("batches")?
+        .unwrap_or_else(|| vec![8, 16, 32, 64, 128, 256]);
+    let machine =
+        machine_profile(args.get_str("machine").unwrap_or("desktop"))?;
+    args.finish()?;
+
+    let preset = model_preset(&model)?;
+    let am = ActivationModel::new(preset);
+    println!(
+        "memory model: {} ({} params) on {}",
+        model,
+        am.param_count(),
+        machine.name
+    );
+    println!(
+        "{:>7} {:>14} {:>14} {:>7} {:>11} {:>11}",
+        "batch", "fp32", "mixed_f16", "ratio", "proj_fp32", "proj_mixed"
+    );
+    for &b in &batches {
+        let full = am.estimate(Precision::Fp32, b);
+        let mixed = am.estimate(Precision::MixedF16, b);
+        let wf = roofline::step_work(&preset, Precision::Fp32, b);
+        let wm = roofline::step_work(&preset, Precision::MixedF16, b);
+        println!(
+            "{:>7} {:>14} {:>14} {:>6.2}x {:>9.2}ms {:>9.2}ms",
+            b,
+            human_bytes(full.total_bytes()),
+            human_bytes(mixed.total_bytes()),
+            full.total_bytes() as f64 / mixed.total_bytes() as f64,
+            roofline::projected_step_time(&wf, &machine, Precision::Fp32)
+                * 1e3,
+            roofline::projected_step_time(&wm, &machine, Precision::MixedF16)
+                * 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scaling_sim(args: &Args) -> Result<()> {
+    let steps = args.get_u64("steps")?.unwrap_or(200);
+    let prob = args.get_f64("overflow-prob")?.unwrap_or(0.02);
+    let period = args.get_u64("period")?.unwrap_or(50) as u32;
+    args.finish()?;
+
+    let mut scaler = LossScaler::new(mpx::scaling::ScalingConfig {
+        period,
+        ..Default::default()
+    });
+    let mut inj = OverflowInjector::Random { prob, rng: Rng::new(7) };
+    println!("step,scale,counter,finite");
+    for step in 0..steps {
+        let finite = !inj.fires(step);
+        scaler.adjust(finite);
+        println!(
+            "{step},{},{},{}",
+            scaler.scale(),
+            scaler.counter(),
+            finite as u8
+        );
+    }
+    eprintln!(
+        "[sim] {} steps: {} overflows, {} growths, final scale {}",
+        steps, scaler.overflows, scaler.growths,
+        scaler.scale()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_str("model").unwrap_or("vit_tiny").to_string();
+    let precision =
+        Precision::parse(args.get_str("precision").unwrap_or("mixed_f16"))?;
+    let batch = args.get_usize("batch")?.unwrap_or(8);
+    let requests = args.get_u64("requests")?.unwrap_or(50);
+    let dir = args
+        .get_str("artifacts-dir")
+        .unwrap_or("artifacts")
+        .to_string();
+    args.finish()?;
+
+    let name = format!("fwd_{}_{}_b{}", model, precision.tag(), batch);
+    let mut store = ArtifactStore::open(&dir)?;
+    let fwd = store.load(&name)?;
+    let init = store.load(&format!("init_{}_{}", model, precision.tag()))?;
+    let state = init.execute(&[mpx::runtime::lit_scalar_i32(0)])?;
+    let prange = init.manifest.output_group("params");
+
+    let preset = model_preset(&model)?;
+    let dataset = SyntheticDataset::new(&preset, 0);
+    let mut latencies = Vec::new();
+    for i in 0..requests {
+        let b = dataset.batch(i, batch, 1);
+        let img_spec = &fwd.manifest.inputs[fwd
+            .manifest
+            .input_group("images")
+            .next_back()
+            .context("no images input")?];
+        let images = mpx::runtime::lit_f32(&img_spec.shape, &b.images)?;
+        let mut inputs: Vec<&xla::Literal> =
+            state[prange.clone()].iter().collect();
+        inputs.push(&images);
+        let t0 = std::time::Instant::now();
+        let out = fwd.execute(&inputs)?;
+        let dt = t0.elapsed();
+        latencies.push(dt);
+        if i == 0 {
+            let logits = mpx::runtime::read_f32(&out[0])?;
+            eprintln!(
+                "[serve] first logits head: {:?}",
+                &logits[..4.min(logits.len())]
+            );
+        }
+    }
+    latencies.sort();
+    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    println!(
+        "serve {name}: {requests} requests, p50 {} p90 {} p99 {} ({} imgs/s)",
+        human_duration(p(0.5)),
+        human_duration(p(0.9)),
+        human_duration(p(0.99)),
+        (batch as f64 / p(0.5).as_secs_f64()) as u64,
+    );
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Roofline projection — the Fig. 3 explanatory model.
+//!
+//! The paper's measured speedups (desktop 1.7×, cluster ≤1.57×) come
+//! from two mechanisms it names explicitly in §5: halved memory
+//! traffic (both machines) and doubled half-precision compute (H100
+//! only).  We *measure* CPU step times honestly in the benches; this
+//! module projects the same workloads onto the paper's machines so
+//! the bench output can display measured-vs-paper-vs-model side by
+//! side: `t = max(flops / peak_flops, bytes / bandwidth)`.
+
+use crate::config::{MachineProfile, ModelPreset, Precision};
+use crate::memmodel::ActivationModel;
+
+/// Work performed by one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepWork {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// HBM crossings per stored-activation element per training step.
+///
+/// A stored activation is not touched just twice (fwd write + bwd
+/// read): in an unfused XLA schedule every fusion boundary re-reads
+/// and re-writes it — fwd producer write, fwd consumer read, bwd
+/// cotangent write/read, elementwise epilogues.  7 crossings/element
+/// reproduces the paper's desktop observation (memory-bound at fp32,
+/// mixed 1.7× faster with no half-compute advantage); the value and
+/// its calibration are recorded in EXPERIMENTS.md §Fig3.
+pub const ACTIVATION_TRAFFIC_FACTOR: f64 = 7.0;
+
+/// Estimate one train step's work for a ViT at (precision, batch).
+///
+/// FLOPs: matmul-dominated — forward ≈ 2·N·T (N = matmul params,
+/// T = tokens), backward ≈ 2× forward ⇒ 6·N·T total, plus the
+/// attention score/context matmuls 2·(2·s²·d)·heads·depth per sample,
+/// tripled for backward.
+///
+/// Bytes: every stored activation is written once (fwd) and read once
+/// (bwd); parameters+grads+moments are read/written once per step;
+/// the working precision sets the activation element size.
+pub fn step_work(
+    preset: &ModelPreset,
+    precision: Precision,
+    batch: usize,
+) -> StepWork {
+    let model = ActivationModel::new(*preset);
+    let n = model.param_count() as f64;
+    let seq = preset.seq_len() as f64;
+    let d = preset.feature_dim as f64;
+    let heads = preset.num_heads as f64;
+    let depth = preset.depth as f64;
+    let b = batch as f64;
+
+    let dense_flops = 6.0 * n * seq * b;
+    let head_dim = d / heads;
+    let attn_flops =
+        3.0 * 2.0 * 2.0 * seq * seq * head_dim * heads * depth * b;
+    let flops = dense_flops + attn_flops;
+
+    let act_elem_bytes = match precision {
+        Precision::Fp32 => 4.0,
+        _ => 2.0,
+    };
+    let act_bytes = model.activation_elems_per_sample() as f64
+        * b
+        * act_elem_bytes
+        * ACTIVATION_TRAFFIC_FACTOR;
+    let state_bytes = (4.0 + 4.0 + 8.0) * n // params+grads+moments r/w
+        + match precision {
+            Precision::Fp32 => 0.0,
+            _ => 2.0 * n, // half copy of weights
+        };
+    StepWork { flops, bytes: act_bytes + state_bytes }
+}
+
+/// Projected step time on a machine profile (per device).
+pub fn projected_step_time(
+    work: &StepWork,
+    machine: &MachineProfile,
+    precision: Precision,
+) -> f64 {
+    let peak = machine.tflops_f32
+        * 1e12
+        * match precision {
+            Precision::Fp32 => 1.0,
+            _ => machine.half_speedup,
+        };
+    let t_compute = work.flops / peak;
+    let t_memory = work.bytes / (machine.bandwidth_gbs * 1e9);
+    t_compute.max(t_memory)
+}
+
+/// Projected fp32/mixed speedup for a (model, machine, batch) point —
+/// the number Fig. 3's caption reports.
+pub fn projected_speedup(
+    preset: &ModelPreset,
+    machine: &MachineProfile,
+    batch: usize,
+) -> f64 {
+    let full = projected_step_time(
+        &step_work(preset, Precision::Fp32, batch),
+        machine,
+        Precision::Fp32,
+    );
+    let mixed = projected_step_time(
+        &step_work(preset, Precision::MixedF16, batch),
+        machine,
+        Precision::MixedF16,
+    );
+    full / mixed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MACHINE_CLUSTER, MACHINE_DESKTOP, VIT_BASE, VIT_DESKTOP};
+
+    #[test]
+    fn work_scales_with_batch() {
+        let w1 = step_work(&VIT_DESKTOP, Precision::Fp32, 8);
+        let w2 = step_work(&VIT_DESKTOP, Precision::Fp32, 16);
+        assert!(w2.flops > 1.9 * w1.flops && w2.flops < 2.1 * w1.flops);
+    }
+
+    #[test]
+    fn mixed_moves_fewer_bytes() {
+        let f = step_work(&VIT_DESKTOP, Precision::Fp32, 64);
+        let h = step_work(&VIT_DESKTOP, Precision::MixedF16, 64);
+        assert!(h.bytes < 0.62 * f.bytes, "{} vs {}", h.bytes, f.bytes);
+        assert_eq!(h.flops, f.flops); // same math
+    }
+
+    #[test]
+    fn cluster_roofline_upper_bounds_paper() {
+        // With a 2× half-compute ceiling the pure roofline saturates
+        // at 2.0×; the paper measured 1.57× (Amdahl: non-matmul
+        // kernels).  The projection must stay a (finite) upper bound.
+        let s = projected_speedup(&VIT_BASE, &MACHINE_CLUSTER, 64);
+        assert!(s >= 1.57 && s <= 2.0, "cluster projection {s}");
+    }
+
+    #[test]
+    fn desktop_speedup_in_paper_band() {
+        // Paper: 1.7× on the RTX4070, driven purely by memory traffic
+        // (half compute speedup = 1×).  The projection should land in
+        // a credible band around that.
+        let s = projected_speedup(&VIT_DESKTOP, &MACHINE_DESKTOP, 128);
+        assert!(s > 1.3 && s <= 2.0, "desktop speedup {s}");
+    }
+
+    #[test]
+    fn cluster_speedup_in_paper_band() {
+        // Paper: up to 1.57× on H100s (compute-rich ⇒ memory-bound
+        // fraction smaller than the naive 2×).
+        let s = projected_speedup(&VIT_BASE, &MACHINE_CLUSTER, 64);
+        assert!(s > 1.2 && s <= 2.0, "cluster speedup {s}");
+    }
+
+    #[test]
+    fn memory_bound_on_desktop() {
+        // The paper attributes the desktop speedup to loads, which
+        // requires the workload to be memory-bound there.
+        let w = step_work(&VIT_DESKTOP, Precision::Fp32, 64);
+        let t_mem = w.bytes / (MACHINE_DESKTOP.bandwidth_gbs * 1e9);
+        let t_cmp = w.flops / (MACHINE_DESKTOP.tflops_f32 * 1e12);
+        assert!(t_mem > t_cmp, "t_mem={t_mem} t_cmp={t_cmp}");
+    }
+}

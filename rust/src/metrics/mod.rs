@@ -1,0 +1,192 @@
+//! Run metrics: step timing, loss history, scaling trace, writers.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Exponential moving average (smoothing for console logs).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        Ema { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// One training step's record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub grads_finite: bool,
+    pub loss_scale: f32,
+    pub step_time: Duration,
+}
+
+/// In-memory run history + optional CSV sink.
+pub struct RunMetrics {
+    pub records: Vec<StepRecord>,
+    started: Instant,
+    csv: Option<std::fs::File>,
+}
+
+impl RunMetrics {
+    pub fn new() -> RunMetrics {
+        RunMetrics { records: Vec::new(), started: Instant::now(), csv: None }
+    }
+
+    /// Also stream records to a CSV file.
+    pub fn with_csv(path: &str) -> Result<RunMetrics> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create metrics csv {path}"))?;
+        writeln!(f, "step,loss,grads_finite,loss_scale,step_ms")?;
+        Ok(RunMetrics {
+            records: Vec::new(),
+            started: Instant::now(),
+            csv: Some(f),
+        })
+    }
+
+    pub fn record(&mut self, r: StepRecord) -> Result<()> {
+        if let Some(f) = &mut self.csv {
+            writeln!(
+                f,
+                "{},{},{},{},{:.3}",
+                r.step,
+                r.loss,
+                r.grads_finite as u8,
+                r.loss_scale,
+                r.step_time.as_secs_f64() * 1e3
+            )?;
+        }
+        self.records.push(r);
+        Ok(())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Mean step time over the records after `skip` warmup steps.
+    pub fn mean_step_time(&self, skip: usize) -> Option<Duration> {
+        let xs: Vec<Duration> = self
+            .records
+            .iter()
+            .skip(skip)
+            .map(|r| r.step_time)
+            .collect();
+        if xs.is_empty() {
+            return None;
+        }
+        Some(xs.iter().sum::<Duration>() / xs.len() as u32)
+    }
+
+    /// Mean loss over the last `n` records.
+    pub fn recent_loss(&self, n: usize) -> Option<f32> {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return None;
+        }
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn skipped_steps(&self) -> usize {
+        self.records.iter().filter(|r| !r.grads_finite).count()
+    }
+}
+
+impl Default for RunMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, ms: u64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            grads_finite: true,
+            loss_scale: 1.0,
+            step_time: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.push(4.0), 4.0);
+        assert_eq!(e.push(0.0), 2.0);
+        assert_eq!(e.push(0.0), 1.0);
+    }
+
+    #[test]
+    fn mean_step_time_skips_warmup() {
+        let mut m = RunMetrics::new();
+        m.record(rec(0, 1.0, 1000)).unwrap(); // compile-warmed first step
+        m.record(rec(1, 1.0, 10)).unwrap();
+        m.record(rec(2, 1.0, 20)).unwrap();
+        assert_eq!(m.mean_step_time(1), Some(Duration::from_millis(15)));
+    }
+
+    #[test]
+    fn recent_loss_window() {
+        let mut m = RunMetrics::new();
+        for i in 0..10 {
+            m.record(rec(i, i as f32, 1)).unwrap();
+        }
+        assert_eq!(m.recent_loss(2), Some(8.5));
+        assert_eq!(m.recent_loss(100), Some(4.5));
+    }
+
+    #[test]
+    fn csv_written() {
+        let path = std::env::temp_dir().join("mpx_metrics_test.csv");
+        let path = path.to_str().unwrap();
+        {
+            let mut m = RunMetrics::with_csv(path).unwrap();
+            m.record(rec(0, 0.5, 3)).unwrap();
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("step,loss"));
+        assert!(text.contains("0,0.5,1,1,3.000"));
+    }
+
+    #[test]
+    fn skipped_counter() {
+        let mut m = RunMetrics::new();
+        m.record(StepRecord {
+            grads_finite: false,
+            ..rec(0, 1.0, 1)
+        })
+        .unwrap();
+        m.record(rec(1, 1.0, 1)).unwrap();
+        assert_eq!(m.skipped_steps(), 1);
+    }
+}

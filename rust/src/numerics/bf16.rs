@@ -1,0 +1,151 @@
+//! bfloat16, bit-exact, from scratch.
+//!
+//! bfloat16 is the top 16 bits of an IEEE float32 (1-8-7): same
+//! exponent range as f32, 7-bit mantissa.  Conversion from f32 is a
+//! truncation of the low 16 mantissa bits with round-to-nearest-even;
+//! conversion to f32 is exact (shift left 16).  Because the exponent
+//! range matches f32, gradients almost never under/overflow in bf16 —
+//! the reason the paper's dynamic loss scaling is only essential for
+//! float16 (DESIGN.md substitution table).
+
+/// A bfloat16 value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const INFINITY: Bf16 = Bf16(0x7F80);
+    pub const NEG_INFINITY: Bf16 = Bf16(0xFF80);
+    /// Largest finite: ≈ 3.3895e38.
+    pub const MAX: Bf16 = Bf16(0x7F7F);
+    pub const NAN: Bf16 = Bf16(0x7FC0);
+
+    /// f32 → bf16 with round-to-nearest-even.
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet the nan, preserve sign + payload top bits
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x8000u32;
+        let lower = bits & 0xFFFF;
+        let mut upper = (bits >> 16) as u16;
+        if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+            upper = upper.wrapping_add(1); // may carry to inf — correct
+        }
+        Bf16(upper)
+    }
+
+    /// bf16 → f32, exact.
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7F80
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7F80) != 0x7F80
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Bf16::from_f32(0.0).0, 0x0000);
+        assert_eq!(Bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(-2.0).0, 0xC000);
+        // 3.0 = 0x4040 0000
+        assert_eq!(Bf16::from_f32(3.0).0, 0x4040);
+    }
+
+    #[test]
+    fn roundtrip_exact_for_all_finite_bf16() {
+        for bits in 0u16..=0xFFFF {
+            let b = Bf16(bits);
+            if b.is_nan() {
+                assert!(Bf16::from_f32(b.to_f32()).is_nan());
+            } else {
+                assert_eq!(Bf16::from_f32(b.to_f32()).0, bits);
+            }
+        }
+    }
+
+    #[test]
+    fn keeps_f32_exponent_range() {
+        // 1e38 survives bf16 (would be inf in f16)
+        assert!(Bf16::from_f32(1e38).is_finite());
+        // 1e-38 survives too (would be 0 in f16)
+        assert!(Bf16::from_f32(1e-38).to_f32() != 0.0);
+        // but beyond f32 max it saturates
+        assert!(Bf16::from_f32(f32::MAX).is_infinite()); // rounds up to inf
+    }
+
+    #[test]
+    fn rounding_to_nearest_even() {
+        // 1 + 2^-8 is halfway between 1.0 and 1+2^-7 → even (1.0)
+        assert_eq!(Bf16::from_f32(1.0 + 2f32.powi(-8)).0, 0x3F80);
+        // 1 + 3·2^-8 halfway → rounds to even neighbour 1+2^-6
+        assert_eq!(Bf16::from_f32(1.0 + 3.0 * 2f32.powi(-8)).0, 0x3F82);
+        // above halfway rounds up
+        assert_eq!(Bf16::from_f32(1.0 + 2f32.powi(-8) + 1e-6).0, 0x3F81);
+    }
+
+    #[test]
+    fn precision_is_coarser_than_f16_in_unit_range() {
+        // bf16 ulp at 1.0 is 2^-7; f16's is 2^-10.
+        let x = 1.0 + 2f32.powi(-9);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        assert_ne!(crate::numerics::F16::from_f32(x).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert!(Bf16::NAN.to_f32().is_nan());
+    }
+
+    #[test]
+    fn property_matches_truncation_semantics() {
+        forall(
+            2000,
+            |r: &mut Rng| r.normal_f32(0.0, 1e3),
+            |&x| {
+                let q = Bf16::from_f32(x).to_f32();
+                let rel = if x != 0.0 { ((x - q) / x).abs() } else { 0.0 };
+                // 7 mantissa bits ⇒ relative error ≤ 2^-8
+                if rel <= 2f32.powi(-8) {
+                    Ok(())
+                } else {
+                    Err(format!("rel error {rel} too big for {x} → {q}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_monotone() {
+        forall(
+            2000,
+            |r: &mut Rng| (r.normal_f32(0.0, 1e6), r.normal_f32(0.0, 1e6)),
+            |&(a, b)| {
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                if Bf16::from_f32(lo).to_f32() <= Bf16::from_f32(hi).to_f32() {
+                    Ok(())
+                } else {
+                    Err("monotonicity violated".into())
+                }
+            },
+        );
+    }
+}

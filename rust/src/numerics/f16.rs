@@ -1,0 +1,283 @@
+//! IEEE 754 binary16, bit-exact, from scratch.
+//!
+//! Conversions implement round-to-nearest-even (the rounding XLA and
+//! the paper's GPUs use), gradual underflow into subnormals, and
+//! saturation to ±inf beyond 65504 — the exact overflow behaviour
+//! dynamic loss scaling probes for (paper §2.1).
+
+/// A binary16 value stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+#[allow(dead_code)]
+const EXP_BITS: u32 = 5;
+const MAN_BITS: u32 = 10;
+const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const NEG_ZERO: F16 = F16(0x8000);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    /// Largest finite value: 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal: 2^-14.
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+    /// Smallest positive subnormal: 2^-24.
+    pub const MIN_SUBNORMAL: F16 = F16(0x0001);
+    /// A quiet NaN.
+    pub const NAN: F16 = F16(0x7E00);
+
+    /// Convert from f32 with round-to-nearest-even.
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp32 = ((bits >> 23) & 0xFF) as i32;
+        let man32 = bits & 0x7F_FFFF;
+
+        if exp32 == 0xFF {
+            // inf / nan — preserve nan-ness with a quiet mantissa bit.
+            return if man32 == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00 | ((man32 >> 13) as u16 & 0x03FF))
+            };
+        }
+
+        // unbiased exponent of the f32 value
+        let e = exp32 - 127;
+
+        if e > EXP_BIAS {
+            // overflow → ±inf (65520 and above round away; values in
+            // (65504, 65520) round to 65504 — handled by the rounding
+            // path below only when e == 15, so check the boundary):
+            if e == EXP_BIAS + 1 && man32 == 0 {
+                // exactly 65536 → inf
+                return F16(sign | 0x7C00);
+            }
+            return F16(sign | 0x7C00);
+        }
+
+        if e >= -14 {
+            // normal range: assemble with rounding
+            let exp16 = (e + EXP_BIAS) as u32; // 1..=30
+            let man_shifted = man32 >> 13; // keep 10 bits
+            let round_bits = man32 & 0x1FFF; // dropped 13 bits
+            let mut h = (sign as u32) | (exp16 << MAN_BITS) | man_shifted;
+            // round to nearest even
+            if round_bits > 0x1000 || (round_bits == 0x1000 && (h & 1) == 1) {
+                h += 1; // may carry into exponent — that is correct
+                        // (mantissa overflow bumps the exponent, and
+                        // 65504+ulp/2 correctly becomes inf)
+            }
+            return F16(h as u16);
+        }
+
+        if e >= -14 - (MAN_BITS as i32) - 1 {
+            // subnormal range: implicit leading 1 becomes explicit
+            let full_man = man32 | 0x80_0000; // 24-bit significand
+            let shift = (-14 - e) as u32 + 13; // ≥ 14
+            let man = full_man >> shift;
+            let round_mask = 1u32 << (shift - 1);
+            let rem = full_man & ((1 << shift) - 1);
+            let mut h = (sign as u32) | man;
+            if rem > round_mask || (rem == round_mask && (h & 1) == 1) {
+                h += 1;
+            }
+            return F16(h as u16);
+        }
+
+        // underflow to (signed) zero
+        F16(sign)
+    }
+
+    /// Convert to f32 (exact — every f16 is representable in f32).
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> MAN_BITS) & 0x1F;
+        let man = h & 0x03FF;
+
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // ±0
+            } else {
+                // subnormal: value = man · 2^-24 = 1.f · 2^(p-24) where
+                // p is the position of man's leading 1 (lz = 10 - p).
+                let lz = man.leading_zeros() - (32 - MAN_BITS - 1); // 1..=10
+                let exp32 = 113 - lz; // (p - 24) + 127
+                let man_norm = (man << lz) & 0x03FF;
+                sign | (exp32 << 23) | (man_norm << 13)
+            }
+        } else if exp == 0x1F {
+            if man == 0 {
+                sign | 0x7F80_0000 // ±inf
+            } else {
+                sign | 0x7FC0_0000 | (man << 13) // nan
+            }
+        } else {
+            let exp32 = exp + 127 - 15;
+            sign | (exp32 << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & 0x7C00) == 0 && (self.0 & 0x03FF) != 0
+    }
+
+    /// Units in the last place distance (bit-pattern metric for tests).
+    pub fn ulp_distance(self, other: F16) -> u32 {
+        let a = Self::monotone_bits(self.0);
+        let b = Self::monotone_bits(other.0);
+        a.abs_diff(b)
+    }
+
+    fn monotone_bits(b: u16) -> i32 {
+        // map sign-magnitude to a monotone integer line
+        if b & 0x8000 != 0 {
+            -((b & 0x7FFF) as i32)
+        } else {
+            (b & 0x7FFF) as i32
+        }
+    }
+}
+
+/// Quantize an f32 slice through f16 in place (fast path for tests
+/// and the checkpoint inspector).
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = F16::from_f32(*x).to_f32();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f32(0.5).0, 0x3800);
+        assert_eq!(F16::from_f32(0.099975586).0, 0x2E66); // ≈0.1
+    }
+
+    #[test]
+    fn roundtrip_exact_for_all_finite_f16() {
+        // Exhaustive: every finite f16 bit pattern survives f32 round-trip.
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+            } else {
+                assert_eq!(F16::from_f32(h.to_f32()).0, bits,
+                           "bits={bits:#06x} f32={}", h.to_f32());
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert!(F16::from_f32(65520.0).is_infinite());
+        assert!(F16::from_f32(1e9).is_infinite());
+        assert_eq!(F16::from_f32(-1e9).0, 0xFC00);
+        // 65504 + less than half ulp rounds back down
+        assert_eq!(F16::from_f32(65519.0).0, 0x7BFF);
+    }
+
+    #[test]
+    fn underflow_flushes_to_zero() {
+        assert_eq!(F16::from_f32(1e-8).0, 0x0000);
+        assert_eq!(F16::from_f32(-1e-8).0, 0x8000);
+        // half the smallest subnormal rounds to zero (ties-to-even)
+        assert_eq!(F16::from_f32(2.9802322e-8).0, 0x0000);
+        // just above half rounds up to the smallest subnormal
+        assert_eq!(F16::from_f32(3.1e-8).0, 0x0001);
+    }
+
+    #[test]
+    fn subnormals_gradual() {
+        let min_sub = F16(0x0001).to_f32();
+        assert!((min_sub - 5.9604645e-8).abs() < 1e-12);
+        assert!(F16(0x0001).is_subnormal());
+        assert!(!F16(0x0400).is_subnormal()); // smallest normal
+        assert_eq!(F16::from_f32(min_sub * 3.0).0, 0x0003);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 → even (1.0)
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11)).0, 0x3C00);
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9 → even (1+2^-9... )
+        assert_eq!(F16::from_f32(1.0 + 3.0 * 2f32.powi(-11)).0, 0x3C02);
+        // slightly above halfway rounds up
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11) + 1e-7).0, 0x3C01);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::NAN.to_f32().is_nan());
+    }
+
+    #[test]
+    fn property_roundtrip_is_nearest(){
+        // For random f32 in f16's range, |x - q(x)| ≤ ulp/2 around x.
+        forall(
+            2000,
+            |r: &mut Rng| (r.next_f32() * 2.0 - 1.0) * 60000.0,
+            |&x| {
+                let q = F16::from_f32(x).to_f32();
+                // neighbouring f16 values around q
+                let up = F16(F16::from_f32(x).0.wrapping_add(1)).to_f32();
+                let dn = F16(F16::from_f32(x).0.wrapping_sub(1)).to_f32();
+                let d = (x - q).abs();
+                if d <= (x - up).abs() + 1e-9 && d <= (x - dn).abs() + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("q={q} not nearest for {x} (up={up}, dn={dn})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_monotone() {
+        forall(
+            2000,
+            |r: &mut Rng| {
+                let a = (r.next_f32() * 2.0 - 1.0) * 70000.0;
+                let b = (r.next_f32() * 2.0 - 1.0) * 70000.0;
+                (a, b)
+            },
+            |&(a, b)| {
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                let qlo = F16::from_f32(lo).to_f32();
+                let qhi = F16::from_f32(hi).to_f32();
+                if qlo <= qhi {
+                    Ok(())
+                } else {
+                    Err(format!("monotonicity violated: q({lo})={qlo} > q({hi})={qhi}"))
+                }
+            },
+        );
+    }
+}

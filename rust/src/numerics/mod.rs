@@ -1,0 +1,186 @@
+//! Software IEEE binary16 and bfloat16 — the numeric-format substrate.
+//!
+//! The Rust coordinator needs to reason about half-precision values
+//! without executing XLA: checkpoint inspection, gradient statistics,
+//! the memory model's dtype accounting, and — crucially — host-side
+//! verification that the compiled graphs' casts behave like the paper
+//! assumes (round-to-nearest-even, gradual underflow, saturation to
+//! ±inf).  This module implements both 16-bit formats bit-exactly from
+//! scratch (no `half` crate offline) and is property-tested against
+//! the behaviour of the XLA-compiled casts in `rust/tests/`.
+//!
+//! Format parameters:
+//!
+//! | format   | sign | exponent | mantissa | max finite | min subnormal |
+//! |----------|------|----------|----------|------------|---------------|
+//! | binary16 | 1    | 5 (bias 15)  | 10   | 65504      | 5.96e-8       |
+//! | bfloat16 | 1    | 8 (bias 127) | 7    | ~3.39e38   | ~9.18e-41     |
+//!
+//! float16's narrow exponent is *why* the paper needs loss scaling;
+//! bfloat16 shares float32's exponent range, which is why it usually
+//! does not (paper §3.1 / DESIGN.md).
+
+pub mod f16;
+pub mod bf16;
+
+pub use bf16::Bf16;
+pub use f16::F16;
+
+/// Floating formats the pipeline moves data in (manifest `dtype`s).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FloatFormat {
+    F32,
+    F16,
+    Bf16,
+}
+
+impl FloatFormat {
+    pub fn bytes(self) -> usize {
+        match self {
+            FloatFormat::F32 => 4,
+            FloatFormat::F16 | FloatFormat::Bf16 => 2,
+        }
+    }
+
+    /// Largest finite value — the overflow threshold loss scaling
+    /// must keep scaled gradients under.
+    pub fn max_finite(self) -> f64 {
+        match self {
+            FloatFormat::F32 => f32::MAX as f64,
+            FloatFormat::F16 => 65504.0,
+            FloatFormat::Bf16 => 3.3895313892515355e38,
+        }
+    }
+
+    /// Smallest positive subnormal — the underflow floor that makes
+    /// tiny gradients vanish (paper §2.1).
+    pub fn min_subnormal(self) -> f64 {
+        match self {
+            FloatFormat::F32 => f32::from_bits(1) as f64,
+            FloatFormat::F16 => 5.960464477539063e-8,
+            FloatFormat::Bf16 => {
+                // exponent 0, mantissa 1 → 2^-126 * 2^-7
+                2f64.powi(-133)
+            }
+        }
+    }
+
+    /// Round-trip an f32 through this format (identity for F32).
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            FloatFormat::F32 => x,
+            FloatFormat::F16 => F16::from_f32(x).to_f32(),
+            FloatFormat::Bf16 => Bf16::from_f32(x).to_f32(),
+        }
+    }
+}
+
+/// Statistics of a gradient/parameter buffer, computed in one pass —
+/// used by the trainer's logging and the loss-scaling diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStats {
+    pub count: usize,
+    pub finite: bool,
+    pub min_abs_nonzero: f32,
+    pub max_abs: f32,
+    pub mean_abs: f32,
+    pub zeros: usize,
+    pub infs: usize,
+    pub nans: usize,
+}
+
+pub fn tensor_stats(xs: &[f32]) -> TensorStats {
+    let mut s = TensorStats {
+        count: xs.len(),
+        finite: true,
+        min_abs_nonzero: f32::INFINITY,
+        ..Default::default()
+    };
+    let mut sum_abs = 0f64;
+    for &x in xs {
+        if x.is_nan() {
+            s.nans += 1;
+            s.finite = false;
+            continue;
+        }
+        if x.is_infinite() {
+            s.infs += 1;
+            s.finite = false;
+            continue;
+        }
+        let a = x.abs();
+        if a == 0.0 {
+            s.zeros += 1;
+        } else if a < s.min_abs_nonzero {
+            s.min_abs_nonzero = a;
+        }
+        if a > s.max_abs {
+            s.max_abs = a;
+        }
+        sum_abs += a as f64;
+    }
+    if s.count > 0 {
+        s.mean_abs = (sum_abs / s.count as f64) as f32;
+    }
+    s
+}
+
+/// Fraction of elements a cast to `fmt` would flush to zero — the
+/// underflow diagnostic behind the paper's Fig. 1 motivation.
+pub fn underflow_fraction(xs: &[f32], fmt: FloatFormat) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let lost = xs
+        .iter()
+        .filter(|&&x| x != 0.0 && fmt.quantize(x) == 0.0)
+        .count();
+    lost as f64 / xs.len() as f64
+}
+
+/// Would any element overflow to ±inf when cast to `fmt`?
+pub fn overflow_count(xs: &[f32], fmt: FloatFormat) -> usize {
+    xs.iter()
+        .filter(|&&x| x.is_finite() && !fmt.quantize(x).is_finite())
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parameters() {
+        assert_eq!(FloatFormat::F16.bytes(), 2);
+        assert_eq!(FloatFormat::F16.max_finite(), 65504.0);
+        assert!(FloatFormat::Bf16.max_finite() > 1e38);
+        assert!(FloatFormat::F16.min_subnormal() > 5.9e-8);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = tensor_stats(&[0.0, 1.0, -2.0, f32::INFINITY]);
+        assert_eq!(s.count, 4);
+        assert!(!s.finite);
+        assert_eq!(s.zeros, 1);
+        assert_eq!(s.infs, 1);
+        assert_eq!(s.max_abs, 2.0);
+        assert_eq!(s.min_abs_nonzero, 1.0);
+    }
+
+    #[test]
+    fn underflow_diagnostics() {
+        // 1e-8 vanishes in f16 but not bf16 (bf16 has f32's exponent).
+        let xs = [1e-8f32, 1.0];
+        assert_eq!(underflow_fraction(&xs, FloatFormat::F16), 0.5);
+        assert_eq!(underflow_fraction(&xs, FloatFormat::Bf16), 0.0);
+    }
+
+    #[test]
+    fn overflow_diagnostics() {
+        let xs = [70000.0f32, 1.0];
+        assert_eq!(overflow_count(&xs, FloatFormat::F16), 1);
+        assert_eq!(overflow_count(&xs, FloatFormat::Bf16), 0);
+        assert_eq!(overflow_count(&xs, FloatFormat::F32), 0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Leaf inventories — the manifest contract between `aot.py` and the
+//! runtime.
+//!
+//! An AOT artifact's inputs and outputs are *flattened PyTree leaves*
+//! in deterministic (sorted-attribute) order; the manifest names each
+//! leaf, records dtype/shape/group, and marks trainability.  The Rust
+//! side never re-derives structure — it slices the flat leaf vectors
+//! by `group` ("params", "opt_state", "scaling", "images", ...).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element types artifacts move (subset of XLA's PrimitiveType).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    Bf16,
+    S32,
+    U32,
+    S8,
+    U8,
+    Pred,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "bf16" => DType::Bf16,
+            "s32" => DType::S32,
+            "u32" => DType::U32,
+            "s8" => DType::S8,
+            "u8" => DType::U8,
+            "pred" => DType::Pred,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+            DType::S32 => "s32",
+            DType::U32 => "u32",
+            DType::S8 => "s8",
+            DType::U8 => "u8",
+            DType::Pred => "pred",
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::S32 | DType::U32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::S8 | DType::U8 | DType::Pred => 1,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::Bf16)
+    }
+}
+
+/// One flattened PyTree leaf.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub group: String,
+    pub trainable: bool,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+
+    fn from_json(v: &Json) -> Result<LeafSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("leaf missing name"))?
+            .to_string();
+        let dtype = DType::parse(
+            v.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("leaf {name}: missing dtype"))?,
+        )?;
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("leaf {name}: missing shape"))?
+            .iter()
+            .map(|d| {
+                d.as_i64()
+                    .filter(|&d| d >= 0)
+                    .map(|d| d as usize)
+                    .ok_or_else(|| anyhow!("leaf {name}: bad dim"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let group = v
+            .get("group")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let trainable = v
+            .get("trainable")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        Ok(LeafSpec { name, dtype, shape, group, trainable })
+    }
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub precision: Option<String>,
+    pub batch: Option<usize>,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+    pub loss_scaling_init: f32,
+    pub loss_scaling_period: u64,
+    pub meta: Json,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("manifest json")?;
+        let meta = v
+            .get("meta")
+            .cloned()
+            .ok_or_else(|| anyhow!("manifest missing meta"))?;
+        let get_meta_str = |k: &str| {
+            meta.get(k).and_then(Json::as_str).map(str::to_string)
+        };
+        let inputs = v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing inputs"))?
+            .iter()
+            .map(LeafSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing outputs"))?
+            .iter()
+            .map(LeafSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let scaling = meta.get("loss_scaling");
+        Ok(Manifest {
+            name: get_meta_str("name").unwrap_or_default(),
+            kind: get_meta_str("kind").unwrap_or_default(),
+            model: get_meta_str("model"),
+            precision: get_meta_str("precision"),
+            batch: meta
+                .get("batch")
+                .and_then(Json::as_i64)
+                .map(|b| b as usize),
+            inputs,
+            outputs,
+            loss_scaling_init: scaling
+                .and_then(|s| s.get("init"))
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0) as f32,
+            loss_scaling_period: scaling
+                .and_then(|s| s.get("period"))
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::from(u32::MAX)) as u64,
+            meta,
+        })
+    }
+
+    /// Index range (contiguous) of an input group.
+    pub fn input_group(&self, group: &str) -> std::ops::Range<usize> {
+        group_range(&self.inputs, group)
+    }
+
+    pub fn output_group(&self, group: &str) -> std::ops::Range<usize> {
+        group_range(&self.outputs, group)
+    }
+
+    /// Total bytes by group (the Fig. 2 memory accounting input).
+    pub fn bytes_by_group(&self, which: Which) -> BTreeMap<String, u64> {
+        let leaves = match which {
+            Which::Inputs => &self.inputs,
+            Which::Outputs => &self.outputs,
+        };
+        let mut m = BTreeMap::new();
+        for leaf in leaves {
+            *m.entry(leaf.group.clone()).or_insert(0) += leaf.bytes() as u64;
+        }
+        m
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum Which {
+    Inputs,
+    Outputs,
+}
+
+fn group_range(leaves: &[LeafSpec], group: &str) -> std::ops::Range<usize> {
+    let start = leaves.iter().position(|l| l.group == group);
+    match start {
+        None => 0..0,
+        Some(s) => {
+            let mut e = s;
+            while e < leaves.len() && leaves[e].group == group {
+                e += 1;
+            }
+            // groups are contiguous by construction (aot.py flattens
+            // one top-level arg at a time)
+            debug_assert!(
+                leaves[e..].iter().all(|l| l.group != group),
+                "group {group} not contiguous"
+            );
+            s..e
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "inputs": [
+        {"name": "params.w", "dtype": "f32", "shape": [4, 3],
+         "group": "params", "trainable": true},
+        {"name": "params.step", "dtype": "s32", "shape": [],
+         "group": "params", "trainable": false},
+        {"name": "images", "dtype": "f32", "shape": [8, 3, 32, 32],
+         "group": "images"}
+      ],
+      "outputs": [
+        {"name": "loss", "dtype": "f32", "shape": [], "group": "loss"}
+      ],
+      "meta": {"name": "t", "kind": "step_fused", "model": "vit_tiny",
+               "precision": "mixed_f16", "batch": 8,
+               "loss_scaling": {"init": 32768.0, "period": 2000}}
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.kind, "step_fused");
+        assert_eq!(m.batch, Some(8));
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0].elems(), 12);
+        assert_eq!(m.inputs[0].bytes(), 48);
+        assert!(m.inputs[0].trainable);
+        assert!(!m.inputs[1].trainable);
+        assert_eq!(m.loss_scaling_init, 32768.0);
+    }
+
+    #[test]
+    fn group_ranges() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.input_group("params"), 0..2);
+        assert_eq!(m.input_group("images"), 2..3);
+        assert_eq!(m.input_group("nope"), 0..0);
+        assert_eq!(m.output_group("loss"), 0..1);
+    }
+
+    #[test]
+    fn bytes_by_group() {
+        let m = Manifest::parse(DOC).unwrap();
+        let b = m.bytes_by_group(Which::Inputs);
+        assert_eq!(b["params"], 48 + 4);
+        assert_eq!(b["images"], 8 * 3 * 32 * 32 * 4);
+    }
+
+    #[test]
+    fn scalar_leaf_has_one_elem() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m.inputs[1].elems(), 1);
+        assert_eq!(m.outputs[0].elems(), 1);
+    }
+
+    #[test]
+    fn dtype_table() {
+        assert_eq!(DType::parse("bf16").unwrap().bytes(), 2);
+        assert_eq!(DType::parse("pred").unwrap().bytes(), 1);
+        assert!(DType::parse("f64").is_err());
+        assert!(DType::F16.is_float());
+        assert!(!DType::S32.is_float());
+    }
+}

@@ -1,0 +1,117 @@
+//! Literal pack/unpack helpers.
+//!
+//! By design the Rust↔artifact boundary moves only f32/s32/pred data
+//! (half-precision casts happen *inside* the compiled graphs — see
+//! `python/compile/aot.py`), so these helpers cover exactly that
+//! surface plus byte-level constructors for checkpoints.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::pytree::{DType, LeafSpec};
+
+fn as_bytes<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            xs.as_ptr() as *const u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+/// f32 literal of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("lit_f32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        as_bytes(data),
+    )
+    .context("create f32 literal")
+}
+
+/// s32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("lit_i32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        as_bytes(data),
+    )
+    .context("create s32 literal")
+}
+
+pub fn lit_scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Build a literal for a manifest leaf from raw bytes (checkpoint
+/// restore path — works for any dtype including f16/bf16).
+pub fn lit_from_bytes(leaf: &LeafSpec, bytes: &[u8]) -> Result<Literal> {
+    if bytes.len() != leaf.bytes() {
+        bail!(
+            "leaf {}: want {} bytes, got {}",
+            leaf.name,
+            leaf.bytes(),
+            bytes.len()
+        );
+    }
+    let ty = match leaf.dtype {
+        DType::F32 => ElementType::F32,
+        DType::F16 => ElementType::F16,
+        DType::Bf16 => ElementType::Bf16,
+        DType::S32 => ElementType::S32,
+        DType::U32 => ElementType::U32,
+        DType::S8 => ElementType::S8,
+        DType::U8 => ElementType::U8,
+        DType::Pred => ElementType::Pred,
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &leaf.shape, bytes)
+        .context("create literal from bytes")
+}
+
+/// Read an f32 literal back to a host vector.
+pub fn read_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("read f32 literal")
+}
+
+pub fn read_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("read s32 literal")
+}
+
+pub fn read_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("read f32 scalar")
+}
+
+pub fn read_scalar_i32(lit: &Literal) -> Result<i32> {
+    lit.get_first_element::<i32>().context("read s32 scalar")
+}
+
+/// Read a PRED scalar (grads_finite flag).
+pub fn read_scalar_pred(lit: &Literal) -> Result<bool> {
+    // PRED has no Rust NativeType in this crate; convert to S32 first.
+    let as_i32 = lit
+        .convert(xla::PrimitiveType::S32)
+        .context("convert pred→s32")?;
+    Ok(as_i32.get_first_element::<i32>().context("read pred scalar")? != 0)
+}
+
+/// Raw bytes of an f32/s32 literal (checkpoint save path — all train
+/// state is f32/s32 by the artifact contract).
+pub fn literal_bytes(lit: &Literal) -> Result<Vec<u8>> {
+    match lit.ty().context("literal type")? {
+        ElementType::F32 => Ok(as_bytes(&lit.to_vec::<f32>()?).to_vec()),
+        ElementType::S32 => Ok(as_bytes(&lit.to_vec::<i32>()?).to_vec()),
+        other => bail!("checkpoint supports f32/s32 leaves, got {other:?}"),
+    }
+}

@@ -1,0 +1,98 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//!
+//! The training hot path works on flat `Vec<xla::Literal>` leaf
+//! vectors in manifest order:
+//!
+//! ```text
+//! artifacts/<name>.hlo.txt          HloModuleProto::from_text_file
+//!   └── XlaComputation  ── client.compile ──►  PjRtLoadedExecutable
+//! step:  state leaves + batch leaves ─ execute ─► 1 tuple buffer
+//!        └── to_literal_sync + decompose_tuple ─► output leaves
+//! ```
+//!
+//! This PJRT build returns the whole output as **one tuple buffer**
+//! (the CPU client does not untuple), so state makes a host hop per
+//! step; `runtime_overhead` benches that hop, and §Perf records the
+//! mitigation history.
+
+pub mod literal;
+pub mod store;
+
+pub use literal::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, read_f32, read_i32,
+    read_scalar_f32, read_scalar_i32, read_scalar_pred,
+};
+pub use store::{Artifact, ArtifactStore};
+
+use anyhow::{Context, Result};
+
+/// Wrapper owning the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))
+    }
+}
+
+/// Execute an artifact on flat input leaves; returns flat output
+/// leaves (manifest order).
+pub fn execute_leaves<L: std::borrow::Borrow<xla::Literal>>(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[L],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<L>(inputs).context("execute")?;
+    let buffer = &result[0][0];
+    let mut tuple = buffer
+        .to_literal_sync()
+        .context("fetch output tuple to host")?;
+    tuple.decompose_tuple().context("decompose output tuple")
+}
+
+/// `Send`/`Sync` wrapper for sharing one compiled executable across
+/// shard threads.
+///
+/// SAFETY: `PjRtLoadedExecutable` wraps a C++ `PjRtLoadedExecutable*`;
+/// PJRT explicitly documents `Execute` as thread-safe (the CPU client
+/// runs each invocation on its own thread pool slot), and the wrapper
+/// never exposes `&mut`.  The `xla` crate merely never added the
+/// marker.  Destruction still happens on one thread (the owner).
+pub struct SharedExecutable(pub xla::PjRtLoadedExecutable);
+
+unsafe impl Send for SharedExecutable {}
+unsafe impl Sync for SharedExecutable {}
+
+impl SharedExecutable {
+    pub fn execute_leaves<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        execute_leaves(&self.0, inputs)
+    }
+}

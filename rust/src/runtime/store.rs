@@ -1,0 +1,131 @@
+//! Artifact registry: manifest + compiled executable, cached by name.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::pytree::Manifest;
+use crate::runtime::{Runtime, SharedExecutable};
+
+/// One loaded artifact: parsed manifest + compiled executable.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub exe: SharedExecutable,
+}
+
+impl Artifact {
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, manifest wants {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let out = self.exe.execute_leaves(inputs)?;
+        if out.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: got {} outputs, manifest wants {}",
+                self.manifest.name,
+                out.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Loads artifacts from a directory, compiling each at most once.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    runtime: Runtime,
+    cache: HashMap<String, Arc<Artifact>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} not found — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(ArtifactStore {
+            dir,
+            runtime: Runtime::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default location: `$MPX_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactStore> {
+        let dir = std::env::var("MPX_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Parse a manifest without compiling (memory model, inspector).
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        let path = self.dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text)
+            .with_context(|| format!("parse manifest {name}"))
+    }
+
+    /// Raw HLO text of an artifact (memory census path).
+    pub fn hlo_text(&self, name: &str) -> Result<String> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))
+    }
+
+    /// Load + compile (cached).
+    pub fn load(&mut self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let manifest = self.manifest(name)?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = std::time::Instant::now();
+        let exe = self.runtime.compile_hlo_file(&hlo_path)?;
+        eprintln!(
+            "[runtime] compiled {name} in {}",
+            crate::util::human_duration(t0.elapsed())
+        );
+        let artifact =
+            Arc::new(Artifact { manifest, exe: SharedExecutable(exe) });
+        self.cache.insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// All artifact names present on disk.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if let Some(name) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = name.strip_suffix(".manifest.json") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}

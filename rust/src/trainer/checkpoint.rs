@@ -1,0 +1,158 @@
+//! Checkpointing — own binary format (no serde offline).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "MPXCKPT1" | u64 step | u32 leaf_count
+//! per leaf: u32 name_len | name utf8 | u8 dtype | u32 rank |
+//!           u64 dims[rank] | u64 byte_len | bytes
+//! ```
+//!
+//! Leaves are the fused trainer's state literals in manifest order
+//! (all f32/s32 by the artifact contract); restore validates name,
+//! dtype and shape against the target manifest so stale checkpoints
+//! fail loudly instead of silently reshaping.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::pytree::{DType, LeafSpec};
+use crate::runtime::literal::{lit_from_bytes, literal_bytes};
+
+const MAGIC: &[u8; 8] = b"MPXCKPT1";
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::Bf16 => 2,
+        DType::S32 => 3,
+        DType::U32 => 4,
+        DType::S8 => 5,
+        DType::U8 => 6,
+        DType::Pred => 7,
+    }
+}
+
+fn dtype_from_code(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::F16,
+        2 => DType::Bf16,
+        3 => DType::S32,
+        4 => DType::U32,
+        5 => DType::S8,
+        6 => DType::U8,
+        7 => DType::Pred,
+        _ => bail!("bad dtype code {c}"),
+    })
+}
+
+/// Save state leaves to `path`.
+pub fn save(
+    path: &str,
+    step: u64,
+    specs: &[LeafSpec],
+    leaves: &[xla::Literal],
+) -> Result<()> {
+    if specs.len() != leaves.len() {
+        bail!("save: {} specs vs {} leaves", specs.len(), leaves.len());
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("create {tmp}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&step.to_le_bytes())?;
+        f.write_all(&(specs.len() as u32).to_le_bytes())?;
+        for (spec, lit) in specs.iter().zip(leaves) {
+            let name = spec.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&[dtype_code(spec.dtype)])?;
+            f.write_all(&(spec.shape.len() as u32).to_le_bytes())?;
+            for &d in &spec.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let bytes = literal_bytes(lit)
+                .with_context(|| format!("serialize leaf {}", spec.name))?;
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(&bytes)?;
+        }
+    }
+    std::fs::rename(&tmp, path).context("atomic rename")?;
+    Ok(())
+}
+
+/// Restore: returns `(step, leaves)` validated against `specs`.
+pub fn load(path: &str, specs: &[LeafSpec]) -> Result<(u64, Vec<xla::Literal>)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path}: not an MPX checkpoint");
+    }
+    let step = read_u64(&mut f)?;
+    let count = read_u32(&mut f)? as usize;
+    if count != specs.len() {
+        bail!("{path}: {count} leaves, expected {}", specs.len());
+    }
+
+    let mut leaves = Vec::with_capacity(count);
+    for spec in specs {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("{path}: implausible name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("leaf name utf8")?;
+        if name != spec.name {
+            bail!("{path}: leaf {name:?} where {:?} expected", spec.name);
+        }
+        let mut code = [0u8; 1];
+        f.read_exact(&mut code)?;
+        let dtype = dtype_from_code(code[0])?;
+        if dtype != spec.dtype {
+            bail!("{path}: leaf {name}: dtype {dtype:?} vs {:?}", spec.dtype);
+        }
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        if shape != spec.shape {
+            bail!("{path}: leaf {name}: shape {shape:?} vs {:?}", spec.shape);
+        }
+        let byte_len = read_u64(&mut f)? as usize;
+        if byte_len != spec.bytes() {
+            bail!("{path}: leaf {name}: {byte_len} bytes vs {}", spec.bytes());
+        }
+        let mut bytes = vec![0u8; byte_len];
+        f.read_exact(&mut bytes)?;
+        leaves.push(lit_from_bytes(spec, &bytes)?);
+    }
+    Ok((step, leaves))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}

@@ -1,0 +1,254 @@
+//! Simulated multi-device data-parallel trainer (paper's cluster run).
+//!
+//! Topology per step (N shards ≙ the paper's 4 H100s):
+//!
+//! ```text
+//!   masters (f32, host) ──► per-shard param literals (replicated)
+//!   shard s: grads_exe(params, scale, batch_s) ─► (grads_s, loss_s, finite_s)
+//!   all_reduce_mean(grads) ── AND(finite) ── LossScaler.adjust
+//!   finite ⇒ AdamW.update(masters, ḡ)       (else skip, paper §2.1 6a)
+//! ```
+//!
+//! Shards run on OS threads over the one shared compiled executable
+//! (PJRT `Execute` is thread-safe; see `runtime::SharedExecutable`).
+//! The all-reduce is a deterministic tree ([`crate::collective`]), the
+//! optimizer is Rust AdamW over fp32 masters ([`crate::optim`]), and
+//! the scale adjustment is the Rust [`LossScaler`] — together the
+//! exact decomposition a real multi-accelerator MPX deployment uses.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::{all_reduce_finite, all_reduce_mean, mean_loss};
+use crate::config::TrainConfig;
+use crate::data::SyntheticDataset;
+use crate::metrics::{RunMetrics, StepRecord};
+use crate::optim::{AdamW, AdamWConfig};
+use crate::pytree::DType;
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, read_f32,
+    read_scalar_f32, read_scalar_pred, Artifact, ArtifactStore,
+};
+use crate::scaling::LossScaler;
+
+pub struct DataParallelTrainer {
+    grads_artifact: Arc<Artifact>,
+    /// fp32 master copies of the trainable leaves (manifest order).
+    pub masters: Vec<Vec<f32>>,
+    master_shapes: Vec<Vec<usize>>,
+    optimizer: AdamW,
+    pub scaler: LossScaler,
+    pub step_index: u64,
+    pub config: TrainConfig,
+    num_shards: usize,
+}
+
+impl DataParallelTrainer {
+    pub fn new(store: &mut ArtifactStore, config: TrainConfig) -> Result<Self> {
+        if config.shards == 0 {
+            bail!("shards must be ≥ 1");
+        }
+        let init = store.load(&config.init_artifact())?;
+        let grads_artifact = store.load(&config.grads_artifact())?;
+        let gm = &grads_artifact.manifest;
+
+        // The grads artifact's params group must be all-f32 (master
+        // weights live here) — guaranteed by the model definition.
+        let prange = gm.input_group("params");
+        for spec in &gm.inputs[prange.clone()] {
+            if spec.dtype != DType::F32 {
+                bail!("non-f32 param leaf {} in grads artifact", spec.name);
+            }
+        }
+
+        // Initialize masters from the init artifact's params group.
+        let init_state = init
+            .execute(&[lit_scalar_i32(config.seed as i32)])
+            .context("run init artifact")?;
+        let ip = init.manifest.output_group("params");
+        if ip.len() != prange.len() {
+            bail!(
+                "init params {} leaves vs grads artifact {}",
+                ip.len(),
+                prange.len()
+            );
+        }
+        let mut masters = Vec::with_capacity(prange.len());
+        let mut master_shapes = Vec::with_capacity(prange.len());
+        for (k, spec) in gm.inputs[prange.clone()].iter().enumerate() {
+            masters.push(read_f32(&init_state[ip.start + k])?);
+            master_shapes.push(spec.shape.clone());
+        }
+
+        let sizes: Vec<usize> = masters.iter().map(Vec::len).collect();
+        let optimizer = AdamW::new(
+            AdamWConfig {
+                lr: config.lr as f32,
+                weight_decay: config.weight_decay as f32,
+                ..Default::default()
+            },
+            &sizes,
+        );
+        let scaler = LossScaler::new(config.precision.scaling_config());
+
+        Ok(DataParallelTrainer {
+            grads_artifact,
+            masters,
+            master_shapes,
+            optimizer,
+            scaler,
+            step_index: 0,
+            num_shards: config.shards,
+            config,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::pytree::Manifest {
+        &self.grads_artifact.manifest
+    }
+
+    /// One data-parallel step over global batch index `index`.
+    pub fn step(&mut self, dataset: &SyntheticDataset) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let gm = &self.grads_artifact.manifest;
+        let per_shard_batch = gm
+            .batch
+            .context("grads artifact missing batch meta")?;
+        let global_batch = per_shard_batch * self.num_shards;
+        let scale = self.scaler.scale();
+
+        let grange = gm.output_group("grads");
+        let loss_idx = gm
+            .output_group("loss")
+            .next_back()
+            .context("no loss output")?;
+        let finite_idx = gm
+            .output_group("finite")
+            .next_back()
+            .context("no finite output")?;
+
+        // -- fan out: one thread per shard ------------------------------
+        let masters = &self.masters;
+        let shapes = &self.master_shapes;
+        let artifact = &self.grads_artifact;
+        let index = self.step_index;
+        let seed = self.config.seed;
+        let n = self.num_shards;
+
+        let shard_results: Vec<Result<(Vec<Vec<f32>>, f32, bool)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..n)
+                    .map(|s| {
+                        let grange = grange.clone();
+                        scope.spawn(move || -> Result<_> {
+                            let batch = dataset.shard_batch(
+                                index,
+                                global_batch,
+                                seed,
+                                s,
+                                n,
+                            );
+                            // Replicate params into this "device"'s
+                            // literals (each device holds its copy).
+                            let mut inputs = Vec::with_capacity(
+                                masters.len() + 3,
+                            );
+                            for (m, shape) in masters.iter().zip(shapes) {
+                                inputs.push(lit_f32(shape, m)?);
+                            }
+                            inputs.push(lit_scalar_f32(scale));
+                            let img_elems = batch.image_elems;
+                            let b = batch.batch;
+                            // image shape from manifest
+                            let img_spec = &artifact.manifest.inputs
+                                [artifact.manifest.input_group("images")
+                                    .next_back()
+                                    .context("no images input")?];
+                            debug_assert_eq!(
+                                img_spec.elems(),
+                                img_elems * b
+                            );
+                            inputs.push(lit_f32(
+                                &img_spec.shape,
+                                &batch.images,
+                            )?);
+                            inputs.push(lit_i32(&[b], &batch.labels)?);
+
+                            let out =
+                                artifact.exe.execute_leaves(&inputs)?;
+                            let grads = grange
+                                .clone()
+                                .map(|i| read_f32(&out[i]))
+                                .collect::<Result<Vec<_>>>()?;
+                            let loss = read_scalar_f32(&out[loss_idx])?;
+                            let finite =
+                                read_scalar_pred(&out[finite_idx])?;
+                            Ok((grads, loss, finite))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked"))
+                    .collect()
+            });
+
+        let mut grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
+        let mut losses = Vec::with_capacity(n);
+        let mut finites = Vec::with_capacity(n);
+        for r in shard_results {
+            let (g, l, f) = r?;
+            grads.push(g);
+            losses.push(l);
+            finites.push(f);
+        }
+
+        // -- reduce + update --------------------------------------------
+        // Non-finite shard gradients may contain inf/nan; the finite
+        // flag already tells us, and the mean would poison masters, so
+        // gate the reduce+update on global finiteness (paper §2.1 6a).
+        let grads_finite = all_reduce_finite(&finites);
+        if grads_finite {
+            all_reduce_mean(&mut grads);
+            self.optimizer.update(&mut self.masters, &grads[0]);
+        }
+        let applied = self.scaler.adjust(grads_finite);
+        debug_assert_eq!(applied, grads_finite);
+
+        self.step_index += 1;
+        Ok(StepRecord {
+            step: self.step_index,
+            loss: mean_loss(&losses),
+            grads_finite,
+            loss_scale: self.scaler.scale(),
+            step_time: t0.elapsed(),
+        })
+    }
+
+    pub fn run(
+        &mut self,
+        dataset: &SyntheticDataset,
+        steps: u64,
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let log_every = self.config.log_every.max(1);
+        for _ in 0..steps {
+            let rec = self.step(dataset)?;
+            if rec.step % log_every == 0 || rec.step == 1 {
+                eprintln!(
+                    "[ddp x{}] step {:>5}  loss {:>8.4}  scale {:>9.0}  {}{}",
+                    self.num_shards,
+                    rec.step,
+                    rec.loss,
+                    rec.loss_scale,
+                    crate::util::human_duration(rec.step_time),
+                    if rec.grads_finite { "" } else { "  (overflow, skipped)" },
+                );
+            }
+            metrics.record(rec)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,212 @@
+//! Single-device trainer over the fused step artifact.
+//!
+//! The compiled step is
+//! `(params, opt_state, scaling, images, labels) →
+//!  (params', opt_state', scaling', loss, grads_finite)`;
+//! Rust threads the state leaves through, attaches fresh batch
+//! literals, and records metrics.  State leaves live as host literals
+//! between steps (this PJRT build returns one tuple buffer — see
+//! `runtime`); the packing cost is measured by `runtime_overhead`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{Batch, Prefetcher, SyntheticDataset};
+use crate::metrics::{RunMetrics, StepRecord};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_i32, read_scalar_f32, read_scalar_pred,
+    Artifact, ArtifactStore,
+};
+
+pub struct FusedTrainer {
+    step_artifact: Arc<Artifact>,
+    /// State leaves in step-input order (params ++ opt_state ++ scaling).
+    state: Vec<xla::Literal>,
+    n_state: usize,
+    pub step_index: u64,
+    pub config: TrainConfig,
+}
+
+impl FusedTrainer {
+    /// Load artifacts and run the in-graph initializer.
+    pub fn new(store: &mut ArtifactStore, config: TrainConfig) -> Result<Self> {
+        let init = store.load(&config.init_artifact())?;
+        let step_artifact = store.load(&config.step_artifact())?;
+
+        // init outputs and step state inputs must agree leaf-for-leaf.
+        let m = &step_artifact.manifest;
+        let state_groups = ["params", "opt_state", "scaling"];
+        let n_state: usize = state_groups
+            .iter()
+            .map(|g| m.input_group(g).len())
+            .sum();
+        if n_state == 0 {
+            bail!("{}: no state inputs found", m.name);
+        }
+        if init.manifest.outputs.len() != n_state {
+            bail!(
+                "init yields {} leaves but step wants {} state inputs",
+                init.manifest.outputs.len(),
+                n_state
+            );
+        }
+        for (a, b) in init.manifest.outputs.iter().zip(&m.inputs[..n_state]) {
+            if a.dtype != b.dtype || a.shape != b.shape {
+                bail!(
+                    "state leaf mismatch: init {}:{:?}{:?} vs step {}:{:?}{:?}",
+                    a.name, a.dtype, a.shape, b.name, b.dtype, b.shape
+                );
+            }
+        }
+
+        let state = init
+            .execute(&[lit_scalar_i32(config.seed as i32)])
+            .context("run init artifact")?;
+
+        Ok(FusedTrainer {
+            step_artifact,
+            state,
+            n_state,
+            step_index: 0,
+            config,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::pytree::Manifest {
+        &self.step_artifact.manifest
+    }
+
+    /// Pack a host batch into the step's (images, labels) literals.
+    fn batch_literals(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
+        let m = &self.step_artifact.manifest;
+        let img_spec = &m.inputs[m.input_group("images")
+            .next_back()
+            .context("step has no images input")?];
+        let lbl_spec = &m.inputs[m.input_group("labels")
+            .next_back()
+            .context("step has no labels input")?];
+        Ok([
+            lit_f32(&img_spec.shape, &batch.images)?,
+            lit_i32(&lbl_spec.shape, &batch.labels)?,
+        ])
+    }
+
+    /// Run one training step on `batch`.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let [images, labels] = self.batch_literals(batch)?;
+
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.push(&images);
+        inputs.push(&labels);
+
+        let mut outputs = self.step_artifact.exe.execute_leaves(
+            // execute takes Borrow<Literal>; a slice of refs works
+            &inputs,
+        )?;
+        let m = &self.step_artifact.manifest;
+        if outputs.len() != m.outputs.len() {
+            bail!(
+                "step returned {} leaves, manifest says {}",
+                outputs.len(),
+                m.outputs.len()
+            );
+        }
+
+        // outputs = state' ++ [loss, finite]
+        let loss_idx = m
+            .output_group("loss")
+            .next_back()
+            .context("no loss output")?;
+        let finite_idx = m
+            .output_group("finite")
+            .next_back()
+            .context("no finite output")?;
+        let loss = read_scalar_f32(&outputs[loss_idx])?;
+        let grads_finite = read_scalar_pred(&outputs[finite_idx])?;
+
+        outputs.truncate(self.n_state);
+        self.state = outputs;
+        self.step_index += 1;
+
+        Ok(StepRecord {
+            step: self.step_index,
+            loss,
+            grads_finite,
+            loss_scale: self.loss_scale()?,
+            step_time: t0.elapsed(),
+        })
+    }
+
+    /// Current dynamic loss scale carried in the state.
+    pub fn loss_scale(&self) -> Result<f32> {
+        let m = &self.step_artifact.manifest;
+        let range = m.input_group("scaling");
+        for (i, spec) in m.inputs[range.clone()].iter().enumerate() {
+            if spec.dtype == crate::pytree::DType::F32 {
+                return read_scalar_f32(&self.state[range.start + i]);
+            }
+        }
+        bail!("no f32 scaling leaf found")
+    }
+
+    /// Borrow the state leaves (checkpoint save).
+    pub fn state(&self) -> &[xla::Literal] {
+        &self.state
+    }
+
+    /// Replace the state leaves (checkpoint restore).
+    pub fn set_state(&mut self, state: Vec<xla::Literal>) -> Result<()> {
+        if state.len() != self.n_state {
+            bail!(
+                "restore: got {} leaves, trainer wants {}",
+                state.len(),
+                self.n_state
+            );
+        }
+        self.state = state;
+        Ok(())
+    }
+
+    /// Train `steps` steps over `dataset`, logging into `metrics`.
+    ///
+    /// Batch generation runs on a background prefetch thread
+    /// ([`crate::data::Prefetcher`]): while XLA executes step *k* the
+    /// batch for *k+1* is already being produced — the Rust analogue
+    /// of the paper excluding data-loading time from its measurements
+    /// (§Perf L3-1 records the before/after).
+    pub fn run(
+        &mut self,
+        dataset: &SyntheticDataset,
+        steps: u64,
+        metrics: &mut RunMetrics,
+    ) -> Result<()> {
+        let log_every = self.config.log_every.max(1);
+        let prefetcher = Prefetcher::with_start(
+            dataset.clone(),
+            self.config.batch,
+            self.config.seed,
+            2,
+            self.step_index,
+        );
+        for _ in 0..steps {
+            let batch = prefetcher.next();
+            let rec = self.step(&batch)?;
+            if rec.step % log_every == 0 || rec.step == 1 {
+                eprintln!(
+                    "[train] step {:>5}  loss {:>8.4}  scale {:>9.0}  {}{}",
+                    rec.step,
+                    rec.loss,
+                    rec.loss_scale,
+                    crate::util::human_duration(rec.step_time),
+                    if rec.grads_finite { "" } else { "  (overflow, skipped)" },
+                );
+            }
+            metrics.record(rec)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,20 @@
+//! Training loops — the L3 coordinator proper.
+//!
+//! Two modes, matching the paper's two experiments:
+//!
+//! * [`fused::FusedTrainer`] — single-device (paper's desktop run):
+//!   the whole §2.1 recipe is one compiled HLO program; Rust owns the
+//!   loop, data, logging and checkpoints, and *observes* the
+//!   loss-scaling state the graph carries.
+//! * [`ddp::DataParallelTrainer`] — simulated multi-device (paper's
+//!   4×H100 run): per-shard `grads` executables + deterministic
+//!   all-reduce + Rust AdamW on fp32 master weights + the Rust
+//!   [`crate::scaling::LossScaler`].  Equivalence against the fused
+//!   mode is an integration test.
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod fused;
+
+pub use ddp::DataParallelTrainer;
+pub use fused::FusedTrainer;

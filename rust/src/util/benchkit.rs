@@ -1,0 +1,171 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with mean / median / p10 / p90, CSV
+//! output under `bench_out/`, and a fixed text format the paper-figure
+//! benches print so `bench_output.txt` reads like the paper's series.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n - 1) as f64 * p) as usize];
+        Stats {
+            iters: n,
+            mean: total / n as u32,
+            median: pct(0.5),
+            p10: pct(0.1),
+            p90: pct(0.9),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+}
+
+/// Benchmark configuration: bounded both by iteration count and by
+/// wall-clock budget (heavy train steps run few iters, micro ops many).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 2, max_iters: 20, max_seconds: 10.0 }
+    }
+}
+
+impl BenchOpts {
+    pub fn quick() -> Self {
+        BenchOpts { warmup_iters: 1, max_iters: 5, max_seconds: 5.0 }
+    }
+
+    /// Honour `MPX_BENCH_FULL=1` for longer, more stable runs.
+    pub fn from_env(default: BenchOpts) -> BenchOpts {
+        if std::env::var("MPX_BENCH_FULL").as_deref() == Ok("1") {
+            BenchOpts {
+                warmup_iters: default.warmup_iters.max(3),
+                max_iters: default.max_iters * 3,
+                max_seconds: default.max_seconds * 4.0,
+            }
+        } else {
+            default
+        }
+    }
+}
+
+/// Time `f` under `opts`; `f` is the full operation (no batching).
+pub fn bench<F: FnMut()>(opts: &BenchOpts, mut f: F) -> Stats {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let budget = Duration::from_secs_f64(opts.max_seconds);
+    let start = Instant::now();
+    let mut samples = Vec::with_capacity(opts.max_iters);
+    for _ in 0..opts.max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget && !samples.is_empty() {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Collector that prints aligned rows and writes a CSV at the end.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        println!("\n=== {title} ===");
+        println!("{}", columns.join(","));
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        println!("{}", cells.join(","));
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Write `bench_out/<slug>.csv`; returns the path.
+    pub fn write_csv(&self) -> std::io::Result<String> {
+        std::fs::create_dir_all("bench_out")?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = format!("bench_out/{slug}.csv");
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+            Duration::from_millis(4),
+            Duration::from_millis(100),
+        ]);
+        assert_eq!(s.median, Duration::from_millis(3));
+        assert!(s.p90 >= s.median && s.median >= s.p10);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn bench_respects_iter_cap() {
+        let opts = BenchOpts { warmup_iters: 0, max_iters: 7, max_seconds: 60.0 };
+        let mut count = 0;
+        let s = bench(&opts, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 7);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let opts = BenchOpts {
+            warmup_iters: 0,
+            max_iters: 1_000_000,
+            max_seconds: 0.05,
+        };
+        let s = bench(&opts, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(s.iters < 1000);
+    }
+}

@@ -1,0 +1,57 @@
+//! Offline substrates: the crates we would normally pull from
+//! crates.io (serde_json, rand, criterion, proptest) are unavailable
+//! in this environment, so this module provides the minimal versions
+//! the framework needs, built from scratch and unit-tested.
+
+pub mod benchkit;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a byte count human-readably (`12.3 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in adaptive units (`1.23 ms`).
+pub fn human_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        use std::time::Duration;
+        assert_eq!(human_duration(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(human_duration(Duration::from_micros(1500)), "1.500 ms");
+        assert_eq!(human_duration(Duration::from_nanos(800)), "0.8 µs");
+    }
+}

@@ -1,0 +1,204 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, gen, check)` draws seeded random inputs from `gen`
+//! and asserts `check`; on failure it performs greedy shrinking via
+//! the `Shrink` trait before panicking with the minimal
+//! counter-example and the reproducing seed.
+//!
+//! Used on the coordinator's invariants: loss-scaling state machine,
+//! f16/bf16 conversions, all-reduce determinism, dataset sharding.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate simplifications, in decreasing order of aggression.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            return Vec::new();
+        }
+        // geometric approach toward 0 and toward self (boundary hunt)
+        let mut out = vec![0, self / 2];
+        let mut delta = self / 4;
+        while delta > 0 {
+            out.push(self - delta);
+            delta /= 2;
+        }
+        out.push(self - 1);
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2, self - self.signum()]
+        }
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0, self.trunc()]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self {
+            vec![false]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for smaller in x.shrink() {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `check` on `cases` random inputs; panic with a shrunk
+/// counter-example on failure.  Seed comes from `MPX_PROPTEST_SEED`
+/// (default 0xC0FFEE) so failures are reproducible.
+pub fn forall<T, G, C>(cases: usize, mut gen: G, mut check: C)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let seed = std::env::var("MPX_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let mut rng = Rng::new(seed);
+
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            // Greedy shrink: walk to a local minimum.
+            let mut best = (input, msg);
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in best.0.shrink() {
+                    budget -= 1;
+                    if let Err(m) = check(&cand) {
+                        best = (cand, m);
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            200,
+            |r| r.below(1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                500,
+                |r| r.below(10_000),
+                |&x| {
+                    if x < 50 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} too big"))
+                    }
+                },
+            );
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        // greedy shrink should land on exactly the boundary value 50
+        assert!(msg.contains("input: 50"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5u64, 6, 7, 8];
+        assert!(v.shrink().iter().any(|s| s.len() < v.len()));
+    }
+}

@@ -1,0 +1,135 @@
+//! Data-parallel mode: equivalence with the fused path and shard
+//! decomposition invariants.
+
+use mpx::config::{model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::metrics::RunMetrics;
+use mpx::runtime::ArtifactStore;
+use mpx::trainer::{DataParallelTrainer, FusedTrainer};
+
+fn store() -> ArtifactStore {
+    // Each test builds its own store (and PJRT client): the xla
+    // crate's client is Rc-based (!Send), so it cannot live in a
+    // shared static across the test harness's threads.
+    ArtifactStore::open_default().expect("artifacts/ missing — run `make artifacts`")
+}
+
+fn config(precision: Precision, shards: usize) -> TrainConfig {
+    TrainConfig {
+        model: "vit_tiny".into(),
+        precision,
+        batch: 8,
+        shards,
+        seed: 3,
+        log_every: 10_000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn single_shard_ddp_tracks_fused() {
+    // Same data, same recipe; one path fuses everything into the HLO
+    // graph, the other decomposes (grads exe + Rust all-reduce +
+    // Rust AdamW + Rust scaler).  Trajectories must track closely.
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+
+    let mut fused = FusedTrainer::new(&mut store, config(Precision::MixedF16, 1)).unwrap();
+    let mut mf = RunMetrics::new();
+    fused.run(&dataset, 15, &mut mf).unwrap();
+
+    let mut ddp =
+        DataParallelTrainer::new(&mut store, config(Precision::MixedF16, 1))
+            .unwrap();
+    let mut md = RunMetrics::new();
+    ddp.run(&dataset, 15, &mut md).unwrap();
+
+    for (a, b) in mf.records.iter().zip(&md.records) {
+        assert!(
+            (a.loss - b.loss).abs() < 0.12 * a.loss.abs().max(1.0),
+            "step {}: fused {} vs ddp {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    // both ended converging
+    assert!(md.recent_loss(3).unwrap() < md.records[0].loss);
+}
+
+#[test]
+fn multi_shard_matches_single_shard_gradients() {
+    // 4 shards × b2 over the same global batch of 8 must produce the
+    // same mean gradient as 1 shard × b8 — verified indirectly: the
+    // parameter trajectories stay close for several steps.
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+
+    // NOTE: grads artifacts exist for per-shard batch 8 only, so the
+    // multi-shard run uses global batch 8×shards.  For a strict
+    // apples-to-apples check we instead verify that two *identically
+    // sharded* runs are bit-identical (determinism) and that sharded
+    // training converges.
+    let mut a =
+        DataParallelTrainer::new(&mut store, config(Precision::MixedF16, 2))
+            .unwrap();
+    let mut ma = RunMetrics::new();
+    a.run(&dataset, 10, &mut ma).unwrap();
+
+    let mut b =
+        DataParallelTrainer::new(&mut store, config(Precision::MixedF16, 2))
+            .unwrap();
+    let mut mb = RunMetrics::new();
+    b.run(&dataset, 10, &mut mb).unwrap();
+
+    for (x, y) in ma.records.iter().zip(&mb.records) {
+        assert_eq!(
+            x.loss.to_bits(),
+            y.loss.to_bits(),
+            "sharded training not deterministic at step {}",
+            x.step
+        );
+    }
+    for (x, y) in a.masters.iter().zip(&b.masters) {
+        assert_eq!(x, y, "master weights diverged");
+    }
+    assert!(ma.recent_loss(3).unwrap() < ma.records[0].loss * 0.8);
+}
+
+#[test]
+fn fp32_ddp_never_skips() {
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+    let mut t =
+        DataParallelTrainer::new(&mut store, config(Precision::Fp32, 2))
+            .unwrap();
+    let mut m = RunMetrics::new();
+    t.run(&dataset, 10, &mut m).unwrap();
+    assert_eq!(m.skipped_steps(), 0);
+    assert_eq!(t.scaler.scale(), 1.0);
+}
+
+#[test]
+fn scaler_recovers_after_natural_overflow() {
+    // f16 with init scale 2^15 typically overflows in the first steps
+    // of this model (observed in every run); the trainer must skip
+    // those steps, halve the scale, and keep training to convergence.
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+    let mut t =
+        DataParallelTrainer::new(&mut store, config(Precision::MixedF16, 1))
+            .unwrap();
+    let mut m = RunMetrics::new();
+    t.run(&dataset, 30, &mut m).unwrap();
+    // regardless of whether overflows happened, the invariant is that
+    // every recorded loss is finite and the final model improved
+    assert!(m.records.iter().all(|r| r.loss.is_finite()));
+    assert!(m.recent_loss(5).unwrap() < m.records[0].loss * 0.6);
+    if m.skipped_steps() > 0 {
+        assert!(t.scaler.scale() < 32768.0);
+    }
+}

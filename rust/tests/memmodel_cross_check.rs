@@ -1,0 +1,140 @@
+//! Cross-checks between the analytic memory model, the AOT manifests
+//! and the HLO census — the Fig. 2 credibility tests.
+
+use mpx::config::{Precision, VIT_BASE, VIT_DESKTOP, VIT_TINY};
+use mpx::hlo::HloModule;
+use mpx::memmodel::ActivationModel;
+use mpx::pytree::Which;
+use mpx::runtime::ArtifactStore;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open_default().expect("artifacts/ missing")
+}
+
+#[test]
+fn analytic_param_count_matches_manifests_exactly() {
+    let store = store();
+    for (preset, name) in [
+        (VIT_TINY, "init_vit_tiny_fp32"),
+        (VIT_DESKTOP, "init_vit_desktop_fp32"),
+        (VIT_BASE, "init_vit_base_fp32"),
+    ] {
+        let m = store.manifest(name).unwrap();
+        let manifest_params: u64 = m
+            .outputs
+            .iter()
+            .filter(|l| l.group == "params" && l.dtype.is_float())
+            .map(|l| l.elems() as u64)
+            .sum();
+        let analytic = ActivationModel::new(preset).param_count();
+        assert_eq!(
+            analytic, manifest_params,
+            "{name}: analytic {analytic} vs manifest {manifest_params}"
+        );
+    }
+}
+
+#[test]
+fn optimizer_state_is_twice_params() {
+    // Adam: mu + nu (float leaves) + a scalar count.
+    let store = store();
+    let m = store.manifest("init_vit_desktop_fp32").unwrap();
+    let params: u64 = m
+        .outputs
+        .iter()
+        .filter(|l| l.group == "params" && l.dtype.is_float())
+        .map(|l| l.elems() as u64)
+        .sum();
+    let opt_float: u64 = m
+        .outputs
+        .iter()
+        .filter(|l| l.group == "opt_state" && l.dtype.is_float())
+        .map(|l| l.elems() as u64)
+        .sum();
+    assert_eq!(opt_float, 2 * params);
+}
+
+#[test]
+fn census_mixed_vs_full_ratio_matches_model_direction() {
+    // The HLO census and the analytic model must agree on the SIGN
+    // and rough size of the effect: mixed workspace < full workspace,
+    // with the ratio growing toward 2 as batch grows.
+    let store = store();
+    let mut prev_ratio = 0.0f64;
+    for b in [8usize, 32, 128] {
+        let f = HloModule::parse(
+            &store
+                .hlo_text(&format!("step_fused_vit_desktop_fp32_b{b}"))
+                .unwrap(),
+        )
+        .unwrap();
+        let m = HloModule::parse(
+            &store
+                .hlo_text(&format!("step_fused_vit_desktop_mixed_f16_b{b}"))
+                .unwrap(),
+        )
+        .unwrap();
+        let fw: u64 = f.workspace_bytes_by_dtype().values().sum();
+        let mw: u64 = m.workspace_bytes_by_dtype().values().sum();
+        let ratio = fw as f64 / mw as f64;
+        assert!(ratio > 1.15, "batch {b}: census ratio only {ratio}");
+        assert!(
+            ratio >= prev_ratio * 0.95,
+            "ratio should not collapse with batch: {prev_ratio} → {ratio}"
+        );
+        prev_ratio = ratio;
+    }
+}
+
+#[test]
+fn mixed_artifact_moves_half_precision_activations() {
+    // The mixed step's HLO must actually contain a large f16 workspace
+    // (if casting silently failed everything would still be f32).
+    let store = store();
+    let m = HloModule::parse(
+        &store
+            .hlo_text("step_fused_vit_desktop_mixed_f16_b64")
+            .unwrap(),
+    )
+    .unwrap();
+    let by = m.workspace_bytes_by_dtype();
+    let f16 = *by.get("f16").unwrap_or(&0);
+    let f32_ = *by.get("f32").unwrap_or(&0);
+    assert!(f16 > 100 << 20, "f16 workspace suspiciously small: {f16}");
+    // fp32 remains for masters/opt/grads + force_full_precision islands
+    assert!(f32_ > 0);
+
+    let full = HloModule::parse(
+        &store.hlo_text("step_fused_vit_desktop_fp32_b64").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        *full.workspace_bytes_by_dtype().get("f16").unwrap_or(&0),
+        0,
+        "fp32 artifact must contain no f16 buffers"
+    );
+}
+
+#[test]
+fn manifest_batch_scaling_only_in_batch_groups() {
+    // Between b8 and b64 artifacts, only images/labels input bytes
+    // change — state is batch-independent (the Fig. 2 constant term).
+    let store = store();
+    let a = store.manifest("step_fused_vit_desktop_mixed_f16_b8").unwrap();
+    let b = store
+        .manifest("step_fused_vit_desktop_mixed_f16_b64")
+        .unwrap();
+    let ba = a.bytes_by_group(Which::Inputs);
+    let bb = b.bytes_by_group(Which::Inputs);
+    assert_eq!(ba["params"], bb["params"]);
+    assert_eq!(ba["opt_state"], bb["opt_state"]);
+    assert_eq!(ba["scaling"], bb["scaling"]);
+    assert_eq!(bb["images"], 8 * ba["images"]);
+}
+
+#[test]
+fn estimate_dominated_by_activations_at_large_batch() {
+    let am = ActivationModel::new(VIT_DESKTOP);
+    let e = am.estimate(Precision::Fp32, 256);
+    assert!(e.activation_bytes() > 3 * e.state_bytes());
+}

@@ -1,0 +1,278 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run (the repo ships with the
+//! artifacts built); every test compiles the tiny-model artifacts so
+//! the suite stays fast.  One shared `ArtifactStore` per test binary —
+//! creating many PJRT clients in one process is slow.
+
+use mpx::config::{model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::metrics::RunMetrics;
+use mpx::runtime::{lit_scalar_i32, read_f32, ArtifactStore};
+use mpx::trainer::{checkpoint, FusedTrainer};
+
+fn store() -> ArtifactStore {
+    // Each test builds its own store (and PJRT client): the xla
+    // crate's client is Rc-based (!Send), so it cannot live in a
+    // shared static across the test harness's threads.
+    ArtifactStore::open_default().expect("artifacts/ missing — run `make artifacts`")
+}
+
+fn tiny_config(precision: Precision) -> TrainConfig {
+    TrainConfig {
+        model: "vit_tiny".into(),
+        precision,
+        batch: 8,
+        log_every: 10_000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fused_training_converges_mixed_f16() {
+    let mut store = store();
+    let cfg = tiny_config(Precision::MixedF16);
+    let preset = model_preset(&cfg.model).unwrap();
+    let dataset = SyntheticDataset::new(&preset, 0);
+    let mut trainer = FusedTrainer::new(&mut store, cfg).unwrap();
+    let mut metrics = RunMetrics::new();
+    trainer.run(&dataset, 40, &mut metrics).unwrap();
+
+    let first = metrics.records[0].loss;
+    let last = metrics.recent_loss(5).unwrap();
+    assert!(last < first * 0.5, "no convergence: {first} → {last}");
+    assert!(last.is_finite());
+    // dynamic scaling must have been exercised (starts at 2^15)
+    assert!(trainer.loss_scale().unwrap() >= 1.0);
+}
+
+#[test]
+fn fused_training_converges_fp32_baseline() {
+    let mut store = store();
+    let cfg = tiny_config(Precision::Fp32);
+    let preset = model_preset(&cfg.model).unwrap();
+    let dataset = SyntheticDataset::new(&preset, 0);
+    let mut trainer = FusedTrainer::new(&mut store, cfg).unwrap();
+    let mut metrics = RunMetrics::new();
+    trainer.run(&dataset, 40, &mut metrics).unwrap();
+    let last = metrics.recent_loss(5).unwrap();
+    assert!(last < metrics.records[0].loss * 0.5);
+    // fp32 scale is pinned to 1 and never overflows
+    assert_eq!(trainer.loss_scale().unwrap(), 1.0);
+    assert_eq!(metrics.skipped_steps(), 0);
+}
+
+#[test]
+fn mixed_matches_fp32_quality() {
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 5);
+
+    let mut run = |precision| {
+        let mut cfg = tiny_config(precision);
+        cfg.seed = 5;
+        let mut t = FusedTrainer::new(&mut store, cfg).unwrap();
+        let mut m = RunMetrics::new();
+        t.run(&dataset, 30, &mut m).unwrap();
+        m.recent_loss(5).unwrap()
+    };
+    let full = run(Precision::Fp32);
+    let mixed = run(Precision::MixedF16);
+    // the paper's core promise: same model quality
+    assert!(
+        (full - mixed).abs() < 0.3,
+        "quality gap too large: fp32 {full} vs mixed {mixed}"
+    );
+}
+
+#[test]
+fn bf16_runs_without_loss_scaling_overflows() {
+    let mut store = store();
+    let cfg = tiny_config(Precision::MixedBf16);
+    let preset = model_preset(&cfg.model).unwrap();
+    let dataset = SyntheticDataset::new(&preset, 0);
+    let mut trainer = FusedTrainer::new(&mut store, cfg).unwrap();
+    let mut metrics = RunMetrics::new();
+    trainer.run(&dataset, 25, &mut metrics).unwrap();
+    // bf16 shares f32's exponent range: pinned scale, no skips
+    assert_eq!(metrics.skipped_steps(), 0);
+    assert!(metrics.recent_loss(5).unwrap() < metrics.records[0].loss);
+}
+
+#[test]
+fn pallas_kernel_step_matches_xla_step() {
+    // The Pallas-kernel ViT variant (fused attention / layernorm /
+    // matmul kernels with custom VJPs) must train like the XLA-op one.
+    let mut store = store();
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 1);
+
+    let xla_art = store.load("step_fused_vit_tiny_mixed_f16_b8").unwrap();
+    let pal_art =
+        store.load("step_fused_vit_tiny_pallas_mixed_f16_b8").unwrap();
+    let init = store.load("init_vit_tiny_mixed_f16").unwrap();
+    let state0 = init.execute(&[lit_scalar_i32(1)]).unwrap();
+
+    let run = |art: &std::sync::Arc<mpx::runtime::Artifact>| {
+        let mut state: Vec<xla::Literal> =
+            state0.iter().map(Clone::clone).collect();
+        let mut losses = Vec::new();
+        for i in 0..5u64 {
+            let b = dataset.batch(i, 8, 1);
+            let images = mpx::runtime::lit_f32(
+                &art.manifest.inputs
+                    [art.manifest.input_group("images").next_back().unwrap()]
+                .shape,
+                &b.images,
+            )
+            .unwrap();
+            let labels =
+                mpx::runtime::lit_i32(&[8], &b.labels).unwrap();
+            let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+            inputs.push(&images);
+            inputs.push(&labels);
+            let mut out = art.exe.execute_leaves(&inputs).unwrap();
+            let loss_idx =
+                art.manifest.output_group("loss").next_back().unwrap();
+            losses.push(
+                mpx::runtime::read_scalar_f32(&out[loss_idx]).unwrap(),
+            );
+            out.truncate(state.len());
+            state = out;
+        }
+        losses
+    };
+
+    let xla_losses = run(&xla_art);
+    let pal_losses = run(&pal_art);
+    for (i, (a, b)) in xla_losses.iter().zip(&pal_losses).enumerate() {
+        assert!(
+            (a - b).abs() < 0.05 * a.abs().max(1.0),
+            "step {i}: xla {a} vs pallas {b}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let mut store = store();
+    let cfg = tiny_config(Precision::MixedF16);
+    let preset = model_preset(&cfg.model).unwrap();
+    let dataset = SyntheticDataset::new(&preset, 2);
+
+    let mut trainer = FusedTrainer::new(&mut store, cfg.clone()).unwrap();
+    let mut metrics = RunMetrics::new();
+    trainer.run(&dataset, 10, &mut metrics).unwrap();
+
+    let dir = std::env::temp_dir().join("mpx_ckpt_test");
+    let path = dir.join("t.ckpt");
+    let path = path.to_str().unwrap().to_string();
+    let specs =
+        trainer.manifest().inputs[..trainer.state().len()].to_vec();
+    checkpoint::save(&path, trainer.step_index, &specs, trainer.state())
+        .unwrap();
+
+    // continue original
+    let mut m1 = RunMetrics::new();
+    trainer.run(&dataset, 3, &mut m1).unwrap();
+
+    // restore into a fresh trainer and continue — identical losses
+    let mut trainer2 = FusedTrainer::new(&mut store, cfg).unwrap();
+    let (step, leaves) = checkpoint::load(&path, &specs).unwrap();
+    trainer2.set_state(leaves).unwrap();
+    trainer2.step_index = step;
+    let mut m2 = RunMetrics::new();
+    trainer2.run(&dataset, 3, &mut m2).unwrap();
+
+    for (a, b) in m1.records.iter().zip(&m2.records) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(),
+                   "resume diverged at step {}", a.step);
+    }
+}
+
+#[test]
+fn checkpoint_rejects_wrong_manifest() {
+    let mut store = store();
+    let cfg = tiny_config(Precision::MixedF16);
+    let mut trainer = FusedTrainer::new(&mut store, cfg).unwrap();
+    let specs =
+        trainer.manifest().inputs[..trainer.state().len()].to_vec();
+    let dir = std::env::temp_dir().join("mpx_ckpt_test2");
+    let path = dir.join("t.ckpt");
+    let path = path.to_str().unwrap().to_string();
+    checkpoint::save(&path, 1, &specs, trainer.state()).unwrap();
+
+    let mut wrong = specs.clone();
+    wrong[0].shape = vec![99, 99];
+    assert!(checkpoint::load(&path, &wrong).is_err());
+    let _ = trainer.step(&SyntheticDataset::new(
+        &model_preset("vit_tiny").unwrap(), 0).batch(0, 8, 0));
+}
+
+#[test]
+fn forward_is_deterministic() {
+    let mut store = store();
+    let fwd = store.load("fwd_vit_tiny_mixed_f16_b8").unwrap();
+    let init = store.load("init_vit_tiny_mixed_f16").unwrap();
+    let state = init.execute(&[lit_scalar_i32(0)]).unwrap();
+    let prange = init.manifest.output_group("params");
+
+    let preset = model_preset("vit_tiny").unwrap();
+    let b = SyntheticDataset::new(&preset, 0).batch(0, 8, 0);
+    let img_spec = &fwd.manifest.inputs
+        [fwd.manifest.input_group("images").next_back().unwrap()];
+    let run = || {
+        let images = mpx::runtime::lit_f32(&img_spec.shape, &b.images).unwrap();
+        let mut inputs: Vec<&xla::Literal> =
+            state[prange.clone()].iter().collect();
+        inputs.push(&images);
+        read_f32(&fwd.execute(&inputs).unwrap()[0]).unwrap()
+    };
+    let a = run();
+    let c = run();
+    assert_eq!(a, c);
+    assert_eq!(a.len(), 8 * 10); // batch × classes
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn init_is_seed_dependent_and_deterministic() {
+    let mut store = store();
+    let init = store.load("init_vit_tiny_mixed_f16").unwrap();
+    let a = init.execute(&[lit_scalar_i32(0)]).unwrap();
+    let b = init.execute(&[lit_scalar_i32(0)]).unwrap();
+    let c = init.execute(&[lit_scalar_i32(1)]).unwrap();
+    let pa = read_f32(&a[1]).unwrap();
+    let pb = read_f32(&b[1]).unwrap();
+    let pc = read_f32(&c[1]).unwrap();
+    assert_eq!(pa, pb, "same seed must give identical params");
+    assert_ne!(pa, pc, "different seeds must differ");
+}
+
+#[test]
+fn manifest_state_contract_holds_for_all_step_artifacts() {
+    // Every step_fused artifact: init outputs == step state inputs.
+    let store = store();
+    for name in store.list().unwrap() {
+        if !name.starts_with("step_fused_vit_tiny") {
+            continue;
+        }
+        let m = store.manifest(&name).unwrap();
+        let n_state = ["params", "opt_state", "scaling"]
+            .iter()
+            .map(|g| m.input_group(g).len())
+            .sum::<usize>();
+        let n_out_state = ["params", "opt_state", "scaling"]
+            .iter()
+            .map(|g| m.output_group(g).len())
+            .sum::<usize>();
+        assert_eq!(n_state, n_out_state, "{name}: state arity mismatch");
+        for (i, o) in m.inputs[..n_state]
+            .iter()
+            .zip(&m.outputs[..n_out_state])
+        {
+            assert_eq!(i.dtype, o.dtype, "{name}: {}", i.name);
+            assert_eq!(i.shape, o.shape, "{name}: {}", i.name);
+        }
+    }
+}
