@@ -1,138 +1,64 @@
-//! Batched inference serving on the AOT forward artifact.
+//! Batched inference serving on the AOT forward artifacts — now a
+//! thin driver over the [`mpx::serve`] engine.
 //!
-//! Simulates a small online-serving deployment: Poisson-ish request
-//! arrivals are queued, batched up to the artifact's batch size
-//! (padding with repeats when the queue runs short), executed on the
-//! mixed-precision forward, and per-request latency percentiles are
-//! reported for fp32 vs f16 — inference is where mixed precision has
-//! no loss-scaling caveats at all.
+//! Simulates a small online-serving deployment per precision mode:
+//! deterministic Poisson-ish arrivals are queued, dynamically batched
+//! (size buckets, padding, flush-on-timeout), executed by a worker
+//! pool sharing the compiled forward, and per-request latency
+//! quantiles come from the shared rank-interpolated
+//! [`LatencyHistogram`](mpx::metrics::LatencyHistogram) — inference
+//! is where mixed precision has no loss-scaling caveats at all.
 //!
 //! ```bash
 //! cargo run --release --example serve_inference -- [requests]
 //! ```
 
-use std::collections::VecDeque;
-use std::time::{Duration, Instant};
-
-use mpx::config::{model_preset, Precision};
-use mpx::data::SyntheticDataset;
-use mpx::runtime::{lit_f32, ArtifactStore};
-use mpx::util::{human_duration, rng::Rng};
-
-struct Request {
-    image: Vec<f32>,
-    enqueued: Instant,
-}
-
-fn percentile(sorted: &[Duration], q: f64) -> Duration {
-    sorted[((sorted.len() - 1) as f64 * q) as usize]
-}
-
-fn serve(
-    store: &mut ArtifactStore,
-    precision: Precision,
-    total_requests: usize,
-) -> anyhow::Result<(Vec<Duration>, f64)> {
-    let batch = 8usize;
-    let name = format!("fwd_vit_tiny_{}_b{batch}", precision.tag());
-    let fwd = store.load(&name)?;
-    let init = store.load(&format!("init_vit_tiny_{}", precision.tag()))?;
-    let state = init.execute(&[mpx::runtime::lit_scalar_i32(0)])?;
-    let prange = init.manifest.output_group("params");
-    let img_spec = fwd.manifest.inputs[fwd
-        .manifest
-        .input_group("images")
-        .next_back()
-        .unwrap()]
-    .clone();
-
-    let preset = model_preset("vit_tiny")?;
-    let dataset = SyntheticDataset::new(&preset, 0);
-    let image_elems = dataset.image_elems();
-    let mut rng = Rng::new(42);
-
-    // Pre-generate the request stream.
-    let source = dataset.batch(0, total_requests, 9);
-    let mut pending: VecDeque<Request> = VecDeque::new();
-    let mut latencies = Vec::with_capacity(total_requests);
-    let mut issued = 0usize;
-    let t_start = Instant::now();
-
-    while latencies.len() < total_requests {
-        // arrivals: 1..=4 new requests per tick
-        let arrivals = (1 + rng.below(4) as usize)
-            .min(total_requests - issued);
-        for k in 0..arrivals {
-            let i = issued + k;
-            pending.push_back(Request {
-                image: source.images
-                    [i * image_elems..(i + 1) * image_elems]
-                    .to_vec(),
-                enqueued: Instant::now(),
-            });
-        }
-        issued += arrivals;
-        if pending.is_empty() {
-            continue;
-        }
-
-        // form one batch (pad by repeating the last request's image)
-        let take = pending.len().min(batch);
-        let mut flat = Vec::with_capacity(batch * image_elems);
-        let mut stamps = Vec::with_capacity(take);
-        for _ in 0..take {
-            let r = pending.pop_front().unwrap();
-            flat.extend_from_slice(&r.image);
-            stamps.push(r.enqueued);
-        }
-        while flat.len() < batch * image_elems {
-            let start = flat.len() - image_elems;
-            let pad: Vec<f32> = flat[start..].to_vec();
-            flat.extend_from_slice(&pad);
-        }
-
-        let images = lit_f32(&img_spec.shape, &flat)?;
-        let mut inputs: Vec<&xla::Literal> =
-            state[prange.clone()].iter().collect();
-        inputs.push(&images);
-        fwd.execute(&inputs)?;
-        let done = Instant::now();
-        for s in stamps {
-            latencies.push(done - s);
-        }
-    }
-    let throughput = total_requests as f64 / t_start.elapsed().as_secs_f64();
-    latencies.sort();
-    Ok((latencies, throughput))
-}
+use mpx::config::{Precision, ServeConfig};
+use mpx::runtime::ArtifactStore;
+use mpx::serve;
+use mpx::util::human_duration;
 
 fn main() -> anyhow::Result<()> {
-    let total: usize = std::env::args()
+    let total: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(400);
     let mut store = ArtifactStore::open_default()?;
 
-    println!("serving {total} requests (batch ≤ 8, vit_tiny):\n");
+    println!("serving {total} requests (batch ≤ 8, vit_tiny, 2 workers):\n");
     println!(
         "{:>10} {:>10} {:>10} {:>10} {:>12}",
         "precision", "p50", "p90", "p99", "req/s"
     );
     let mut p50s = Vec::new();
     for precision in [Precision::Fp32, Precision::MixedF16] {
-        let (lat, thr) = serve(&mut store, precision, total)?;
+        let cfg = ServeConfig {
+            precision,
+            requests: total,
+            workers: 2,
+            // closed loop, back-to-back: measure service capacity
+            arrival_rate: 0.0,
+            open_loop: false,
+            ..ServeConfig::default()
+        };
+        let report = serve::run_with_artifacts(&mut store, &cfg)?;
+        let q = report
+            .latency
+            .quantiles(&[0.5, 0.9, 0.99])
+            .expect("no completed requests");
         println!(
             "{:>10} {:>10} {:>10} {:>10} {:>12.0}",
             precision.tag(),
-            human_duration(percentile(&lat, 0.5)),
-            human_duration(percentile(&lat, 0.9)),
-            human_duration(percentile(&lat, 0.99)),
-            thr
+            human_duration(q[0]),
+            human_duration(q[1]),
+            human_duration(q[2]),
+            report.throughput_rps(),
         );
-        p50s.push(percentile(&lat, 0.5));
+        p50s.push(q[0]);
     }
+    // p50s[0] is fp32, p50s[1] is mixed: >1 means mixed is faster.
     println!(
-        "\nmixed/full p50 ratio: {:.2}x",
+        "\nfull/mixed p50 speedup: {:.2}x",
         p50s[0].as_secs_f64() / p50s[1].as_secs_f64()
     );
     Ok(())

@@ -1,0 +1,119 @@
+//! Serving throughput — fp32 vs mixed_f16 vs mixed_bf16 at bounded
+//! tail latency.
+//!
+//! Protocol per precision:
+//!
+//! 1. *Calibrate*: a closed-loop back-to-back run measures the
+//!    service capacity (achievable req/s) and its p50.
+//! 2. *Sweep*: open-loop Poisson runs at 50/70/90 % of that capacity;
+//!    each reports achieved throughput and p50/p95/p99 from the
+//!    rank-interpolated histogram.
+//! 3. *Headline*: the highest offered load whose p99 stays under
+//!    3× the calibrated p50 — "throughput at fixed p99".
+//!
+//! Precisions whose artifacts are missing (e.g. no bf16 forwards
+//! built) are skipped with a note, not failed.
+
+use mpx::config::{Precision, ServeConfig};
+use mpx::runtime::ArtifactStore;
+use mpx::serve;
+use mpx::util::benchkit::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut store = ArtifactStore::open_default()?;
+    let requests: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let mut table = Table::new(
+        "serve throughput by precision",
+        &[
+            "precision",
+            "mode",
+            "offered_rps",
+            "achieved_rps",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "rejected",
+        ],
+    );
+
+    for precision in
+        [Precision::Fp32, Precision::MixedF16, Precision::MixedBf16]
+    {
+        let base = ServeConfig {
+            precision,
+            requests,
+            workers: 2,
+            arrival_rate: 0.0,
+            open_loop: false,
+            ..ServeConfig::default()
+        };
+
+        // 1. closed-loop calibration
+        let cal = match serve::run_with_artifacts(&mut store, &base) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("# skip {}: {e:#}", precision.tag());
+                continue;
+            }
+        };
+        let capacity = cal.throughput_rps();
+        let Some(cs) = cal.latency.summary() else { continue };
+        table.row(&[
+            precision.tag().into(),
+            "closed".into(),
+            "-".into(),
+            format!("{capacity:.1}"),
+            format!("{:.2}", cs.p50.as_secs_f64() * 1e3),
+            format!("{:.2}", cs.p95.as_secs_f64() * 1e3),
+            format!("{:.2}", cs.p99.as_secs_f64() * 1e3),
+            format!("{}", cal.queue.rejected),
+        ]);
+
+        // 2. open-loop sweep at fractions of capacity
+        let p99_bound = cs.p50.as_secs_f64() * 3.0;
+        let mut headline: Option<(f64, f64)> = None;
+        for frac in [0.5, 0.7, 0.9] {
+            let cfg = ServeConfig {
+                open_loop: true,
+                arrival_rate: capacity * frac,
+                ..base.clone()
+            };
+            let rep = serve::run_with_artifacts(&mut store, &cfg)?;
+            let Some(s) = rep.latency.summary() else { continue };
+            table.row(&[
+                precision.tag().into(),
+                format!("open@{:.0}%", frac * 100.0),
+                format!("{:.1}", cfg.arrival_rate),
+                format!("{:.1}", rep.throughput_rps()),
+                format!("{:.2}", s.p50.as_secs_f64() * 1e3),
+                format!("{:.2}", s.p95.as_secs_f64() * 1e3),
+                format!("{:.2}", s.p99.as_secs_f64() * 1e3),
+                format!("{}", rep.queue.rejected),
+            ]);
+            if s.p99.as_secs_f64() <= p99_bound {
+                headline = Some((frac, rep.throughput_rps()));
+            }
+        }
+
+        // 3. headline
+        match headline {
+            Some((frac, thr)) => println!(
+                "# {}: sustains {:.1} req/s at {:.0}% load with p99 ≤ 3×p50",
+                precision.tag(),
+                thr,
+                frac * 100.0
+            ),
+            None => println!(
+                "# {}: no swept load held p99 ≤ 3×p50 ({:.2} ms)",
+                precision.tag(),
+                p99_bound * 1e3
+            ),
+        }
+    }
+    println!("# wrote {}", table.write_csv()?);
+    Ok(())
+}

@@ -8,6 +8,8 @@
 
 pub mod toml;
 
+use std::time::Duration;
+
 use anyhow::{bail, Context, Result};
 
 use crate::scaling::ScalingConfig;
@@ -268,6 +270,147 @@ impl TrainConfig {
     }
 }
 
+/// Serving-engine configuration (`[serve]` TOML section + CLI
+/// overrides — see [`crate::serve`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub precision: Precision,
+    /// Largest batch the batcher may form (the artifact batch size).
+    pub max_batch: usize,
+    /// Executor threads; each replicates the model state (ddp-style).
+    pub workers: usize,
+    /// Admission bound: requests beyond this queue depth are rejected
+    /// (open loop) or block the generator (closed loop).
+    pub queue_capacity: usize,
+    /// Max time the oldest queued request waits before a partial
+    /// batch is flushed — bounds tail latency under light load.
+    pub flush_timeout_ms: u64,
+    /// Per-request end-to-end deadline (reported, not enforced).
+    pub deadline_ms: u64,
+    /// Total requests the load generator offers.
+    pub requests: u64,
+    /// Poisson arrival rate in requests/s; ≤ 0 means back-to-back.
+    pub arrival_rate: f64,
+    /// Open loop drops on a full queue; closed loop blocks instead.
+    pub open_loop: bool,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "vit_tiny".into(),
+            precision: Precision::MixedF16,
+            max_batch: 8,
+            workers: 2,
+            queue_capacity: 64,
+            flush_timeout_ms: 5,
+            deadline_ms: 100,
+            requests: 200,
+            arrival_rate: 0.0,
+            open_loop: false,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn flush_timeout(&self) -> Duration {
+        Duration::from_millis(self.flush_timeout_ms)
+    }
+
+    pub fn deadline(&self) -> Duration {
+        Duration::from_millis(self.deadline_ms)
+    }
+
+    /// Name of the forward artifact serving batches of size `batch`.
+    pub fn fwd_artifact(&self, batch: usize) -> String {
+        format!(
+            "fwd_{}_{}_b{}",
+            self.model,
+            self.precision.tag(),
+            batch
+        )
+    }
+
+    pub fn init_artifact(&self) -> String {
+        format!("init_{}_{}", self.model, self.precision.tag())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        model_preset(&self.model)?;
+        if self.workers == 0 {
+            bail!("serve: workers must be ≥ 1");
+        }
+        if self.max_batch == 0 {
+            bail!("serve: batch must be ≥ 1");
+        }
+        if self.queue_capacity < self.max_batch {
+            bail!(
+                "serve: queue capacity {} smaller than batch {} — the \
+                 batcher could never fill a full batch",
+                self.queue_capacity,
+                self.max_batch
+            );
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file's `[serve]` section (missing keys keep
+    /// their defaults).
+    pub fn from_toml_file(path: &str) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        let doc = TomlDoc::parse(&text).context("parse config")?;
+        let mut cfg = ServeConfig::default();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(s) = doc.get_str("serve.model") {
+            self.model = s.to_string();
+        }
+        if let Some(s) = doc.get_str("serve.precision") {
+            self.precision = Precision::parse(s)?;
+        }
+        if let Some(v) = doc.get_int("serve.batch") {
+            self.max_batch = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve.workers") {
+            self.workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve.queue_capacity") {
+            self.queue_capacity = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve.flush_timeout_ms") {
+            self.flush_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("serve.deadline_ms") {
+            self.deadline_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("serve.requests") {
+            self.requests = v as u64;
+        }
+        if let Some(v) = doc.get_float("serve.arrival_rate") {
+            self.arrival_rate = v;
+        }
+        if let Some(b) = doc.get_bool("serve.open_loop") {
+            self.open_loop = b;
+        }
+        if let Some(v) = doc.get_int("serve.seed") {
+            self.seed = v as u64;
+        }
+        if let Some(s) = doc.get_str("serve.artifacts_dir") {
+            self.artifacts_dir = s.to_string();
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,5 +481,53 @@ lr = 0.0003
         assert_eq!(cfg.batch, 64);
         assert_eq!(cfg.steps, 500);
         assert!((cfg.lr - 3e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_section_roundtrip() {
+        let text = r#"
+[serve]
+model = "vit_tiny"
+precision = "mixed_bf16"
+batch = 16
+workers = 4
+queue_capacity = 128
+flush_timeout_ms = 3
+arrival_rate = 120.5
+open_loop = true
+"#;
+        let path = std::env::temp_dir().join("mpx_serve_cfg_test.toml");
+        std::fs::write(&path, text).unwrap();
+        let cfg =
+            ServeConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.model, "vit_tiny");
+        assert_eq!(cfg.precision, Precision::MixedBf16);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.queue_capacity, 128);
+        assert_eq!(cfg.flush_timeout_ms, 3);
+        assert!((cfg.arrival_rate - 120.5).abs() < 1e-9);
+        assert!(cfg.open_loop);
+        // untouched keys keep defaults
+        assert_eq!(cfg.requests, ServeConfig::default().requests);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_config_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        cfg.workers = 2;
+        cfg.queue_capacity = cfg.max_batch - 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn serve_artifact_names() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.fwd_artifact(8), "fwd_vit_tiny_mixed_f16_b8");
+        assert_eq!(cfg.init_artifact(), "init_vit_tiny_mixed_f16");
     }
 }

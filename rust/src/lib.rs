@@ -28,9 +28,15 @@
 //! * [`collective`] — deterministic tree all-reduce across shards.
 //! * [`trainer`] — the fused single-device loop and the simulated
 //!   multi-device data-parallel loop; checkpointing.
+//! * [`serve`] — batched-inference serving engine: bounded request
+//!   queue with admission control, size-bucketed dynamic batcher
+//!   (padding-aware, flush-on-timeout), multi-worker executor pool
+//!   over the shared compiled artifacts, deterministic Poisson load
+//!   generator.
 //! * [`hlo`] — HLO-text parser for the buffer census.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
-//! * [`metrics`] — step timers, loss history, CSV/JSONL writers.
+//! * [`metrics`] — step timers, loss history, latency histograms
+//!   (rank-interpolated quantiles), CSV/JSONL writers.
 //! * [`cli`] — argument parsing for the `mpx` binary and examples.
 
 pub mod cli;
@@ -45,6 +51,7 @@ pub mod optim;
 pub mod pytree;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod trainer;
 pub mod util;
 

@@ -9,12 +9,16 @@
 //! * `inspect`        — manifest + HLO census of one artifact.
 //! * `memory-report`  — Fig. 2-style memory table for a model preset.
 //! * `scaling-sim`    — dynamic loss-scaling state-machine simulator.
-//! * `serve`          — batched-inference latency loop (fwd artifact).
+//! * `serve`          — batched-inference serving engine
+//!                      ([`mpx::serve`]): request queue, dynamic
+//!                      batching, worker pool, latency report.
 
 use anyhow::{Context, Result};
 
 use mpx::cli::Args;
-use mpx::config::{machine_profile, model_preset, Precision, TrainConfig};
+use mpx::config::{
+    machine_profile, model_preset, Precision, ServeConfig, TrainConfig,
+};
 use mpx::data::SyntheticDataset;
 use mpx::hlo::HloModule;
 use mpx::memmodel::{roofline, ActivationModel};
@@ -31,7 +35,9 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
   inspect        --artifact NAME
   memory-report  --model M [--batches 8,16,...] [--machine desktop|cluster]
   scaling-sim    [--steps N] [--overflow-prob p] [--period N]
-  serve          --model M --precision P --batch B [--requests N]";
+  serve          --model M --precision P [--batch B --workers W --requests N]
+                 [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
+                 [--deadline-ms T] [--seed S] [--config cfg.toml]";
 
 fn main() {
     if let Err(e) = run() {
@@ -325,59 +331,78 @@ fn cmd_scaling_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Thin shim over [`mpx::serve`]: flags/TOML → `ServeConfig`, then
+/// the subsystem does the queueing, batching, and reporting.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get_str("model").unwrap_or("vit_tiny").to_string();
-    let precision =
-        Precision::parse(args.get_str("precision").unwrap_or("mixed_f16"))?;
-    let batch = args.get_usize("batch")?.unwrap_or(8);
-    let requests = args.get_u64("requests")?.unwrap_or(50);
-    let dir = args
-        .get_str("artifacts-dir")
-        .unwrap_or("artifacts")
-        .to_string();
-    args.finish()?;
-
-    let name = format!("fwd_{}_{}_b{}", model, precision.tag(), batch);
-    let mut store = ArtifactStore::open(&dir)?;
-    let fwd = store.load(&name)?;
-    let init = store.load(&format!("init_{}_{}", model, precision.tag()))?;
-    let state = init.execute(&[mpx::runtime::lit_scalar_i32(0)])?;
-    let prange = init.manifest.output_group("params");
-
-    let preset = model_preset(&model)?;
-    let dataset = SyntheticDataset::new(&preset, 0);
-    let mut latencies = Vec::new();
-    for i in 0..requests {
-        let b = dataset.batch(i, batch, 1);
-        let img_spec = &fwd.manifest.inputs[fwd
-            .manifest
-            .input_group("images")
-            .next_back()
-            .context("no images input")?];
-        let images = mpx::runtime::lit_f32(&img_spec.shape, &b.images)?;
-        let mut inputs: Vec<&xla::Literal> =
-            state[prange.clone()].iter().collect();
-        inputs.push(&images);
-        let t0 = std::time::Instant::now();
-        let out = fwd.execute(&inputs)?;
-        let dt = t0.elapsed();
-        latencies.push(dt);
-        if i == 0 {
-            let logits = mpx::runtime::read_f32(&out[0])?;
-            eprintln!(
-                "[serve] first logits head: {:?}",
-                &logits[..4.min(logits.len())]
-            );
-        }
+    let mut cfg = match args.get_str("config") {
+        Some(path) => ServeConfig::from_toml_file(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(m) = args.get_str("model") {
+        cfg.model = m.to_string();
     }
-    latencies.sort();
-    let p = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
-    println!(
-        "serve {name}: {requests} requests, p50 {} p90 {} p99 {} ({} imgs/s)",
-        human_duration(p(0.5)),
-        human_duration(p(0.9)),
-        human_duration(p(0.99)),
-        (batch as f64 / p(0.5).as_secs_f64()) as u64,
+    if let Some(p) = args.get_str("precision") {
+        cfg.precision = Precision::parse(p)?;
+    }
+    if let Some(b) = args.get_usize("batch")? {
+        cfg.max_batch = b;
+    }
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(n) = args.get_u64("requests")? {
+        cfg.requests = n;
+    }
+    if let Some(r) = args.get_f64("rate")? {
+        cfg.arrival_rate = r;
+    }
+    if let Some(c) = args.get_usize("queue-cap")? {
+        cfg.queue_capacity = c;
+    }
+    if let Some(t) = args.get_u64("flush-ms")? {
+        cfg.flush_timeout_ms = t;
+    }
+    if let Some(d) = args.get_u64("deadline-ms")? {
+        cfg.deadline_ms = d;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(d) = args.get_str("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if args.has_switch("open-loop") {
+        cfg.open_loop = true;
+    }
+    args.finish()?;
+    cfg.validate()?;
+
+    eprintln!(
+        "[mpx] serve | model {} | precision {} | batch ≤{} | {} workers | {} \
+         requests {}",
+        cfg.model,
+        cfg.precision.tag(),
+        cfg.max_batch,
+        cfg.workers,
+        cfg.requests,
+        if cfg.arrival_rate > 0.0 {
+            format!(
+                "| {} {:.0} req/s",
+                if cfg.open_loop { "open-loop" } else { "closed-loop" },
+                cfg.arrival_rate
+            )
+        } else {
+            "| back-to-back".to_string()
+        },
     );
+    let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let report = mpx::serve::run_with_artifacts(&mut store, &cfg)?;
+    report.print(&format!(
+        "{} {} b{}×{}w",
+        cfg.model,
+        cfg.precision.tag(),
+        cfg.max_batch,
+        cfg.workers
+    ));
     Ok(())
 }

@@ -1,9 +1,109 @@
-//! Run metrics: step timing, loss history, scaling trace, writers.
+//! Run metrics: step timing, loss history, scaling trace, latency
+//! histograms, writers.
 
 use std::io::Write;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+
+use crate::util::benchkit::quantile_ns;
+
+/// Latency distribution with rank-interpolated quantiles.
+///
+/// Exact-sample implementation (no bucketing error): every recorded
+/// duration is kept as integer nanoseconds, quantiles sort on demand.
+/// Quantile estimation is the shared rank-interpolated
+/// [`quantile_ns`] (Hyndman–Fan type 7) — truncating the rank
+/// instead (the bug this type replaced) under-reports upper tails on
+/// small samples: p99 of 10 samples would return the 9th of 10.
+///
+/// Per-worker histograms are recorded independently and [`merge`]d
+/// for the serving report; merging is exact (sample concatenation).
+///
+/// [`merge`]: LatencyHistogram::merge
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples_ns: Vec<u64>,
+}
+
+/// Precomputed summary of a [`LatencyHistogram`] (one sort).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { samples_ns: Vec::new() }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ns.push(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    /// Fold another histogram in (per-worker → run aggregate).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples_ns.extend_from_slice(&other.samples_ns);
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.samples_ns.is_empty() {
+            return None;
+        }
+        let total: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
+        Some(Duration::from_nanos(
+            (total / self.samples_ns.len() as u128) as u64,
+        ))
+    }
+
+    pub fn max(&self) -> Option<Duration> {
+        self.samples_ns.iter().max().map(|&x| Duration::from_nanos(x))
+    }
+
+    /// Rank-interpolated quantile, `q` ∈ [0, 1].
+    pub fn quantile(&self, q: f64) -> Option<Duration> {
+        self.quantiles(&[q]).map(|v| v[0])
+    }
+
+    /// Several quantiles with a single sort.
+    pub fn quantiles(&self, qs: &[f64]) -> Option<Vec<Duration>> {
+        if self.samples_ns.is_empty() {
+            return None;
+        }
+        let mut xs = self.samples_ns.clone();
+        xs.sort_unstable();
+        Some(qs.iter().map(|&q| quantile_ns(&xs, q)).collect())
+    }
+
+    pub fn summary(&self) -> Option<LatencySummary> {
+        if self.samples_ns.is_empty() {
+            return None;
+        }
+        let mut xs = self.samples_ns.clone();
+        xs.sort_unstable();
+        Some(LatencySummary {
+            count: xs.len(),
+            mean: self.mean().unwrap(),
+            p50: quantile_ns(&xs, 0.5),
+            p95: quantile_ns(&xs, 0.95),
+            p99: quantile_ns(&xs, 0.99),
+            max: Duration::from_nanos(*xs.last().unwrap()),
+        })
+    }
+}
 
 /// Exponential moving average (smoothing for console logs).
 #[derive(Debug, Clone)]
@@ -176,6 +276,85 @@ mod tests {
         let text = std::fs::read_to_string(path).unwrap();
         assert!(text.contains("step,loss"));
         assert!(text.contains("0,0.5,1,1,3.000"));
+    }
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn histogram_exact_quantiles_on_known_distribution() {
+        // 0..=100 ms: every quantile lands exactly on a sample.
+        let mut h = LatencyHistogram::new();
+        for v in 0..=100u64 {
+            h.record(ms(v));
+        }
+        assert_eq!(h.quantile(0.0), Some(ms(0)));
+        assert_eq!(h.quantile(0.5), Some(ms(50)));
+        assert_eq!(h.quantile(0.95), Some(ms(95)));
+        assert_eq!(h.quantile(0.99), Some(ms(99)));
+        assert_eq!(h.quantile(1.0), Some(ms(100)));
+        assert_eq!(h.mean(), Some(ms(50)));
+        assert_eq!(h.max(), Some(ms(100)));
+    }
+
+    #[test]
+    fn histogram_interpolates_between_ranks() {
+        let mut h = LatencyHistogram::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(ms(v));
+        }
+        // h = 0.5·3 = 1.5 → 20 + 0.5·(30-20) = 25 ms.
+        assert_eq!(h.quantile(0.5), Some(ms(25)));
+        // h = 0.99·3 = 2.97 → 30 + 0.97·10 = 39.7 ms.
+        assert_eq!(h.quantile(0.99), Some(Duration::from_micros(39_700)));
+    }
+
+    #[test]
+    fn histogram_p99_not_truncated_on_small_samples() {
+        // Regression for the old `((n-1) as f64 * q) as usize` rank:
+        // on 1..=10 ms it truncates 8.91 → index 8 and reports 9 ms.
+        let mut h = LatencyHistogram::new();
+        for v in 1..=10u64 {
+            h.record(ms(v));
+        }
+        let p99 = h.quantile(0.99).unwrap();
+        assert!(p99 > ms(9), "p99 {p99:?} truncated toward zero");
+        assert!(p99 <= ms(10));
+    }
+
+    #[test]
+    fn histogram_merge_matches_pooled_samples() {
+        // Per-worker histograms merged == one histogram of all samples.
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut pooled = LatencyHistogram::new();
+        for v in 0..50u64 {
+            a.record(ms(v));
+            pooled.record(ms(v));
+        }
+        for v in 50..=100u64 {
+            b.record(ms(v));
+            pooled.record(ms(v));
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), pooled.count());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), pooled.quantile(q), "q={q}");
+        }
+        let s = merged.summary().unwrap();
+        assert_eq!(s.count, 101);
+        assert_eq!(s.p50, ms(50));
+    }
+
+    #[test]
+    fn histogram_empty_is_none() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), None);
+        assert!(h.summary().is_none());
+        assert!(h.mean().is_none());
+        assert_eq!(h.count(), 0);
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Dynamic batching policy: size buckets, padding, flush-on-timeout.
+//!
+//! The policy is a pure function ([`decide`]) over queue depth and the
+//! oldest request's age, so it is unit-testable with synthetic clocks;
+//! the threaded wait loop that applies it lives in
+//! [`RequestQueue::next_batch`](crate::serve::queue::RequestQueue::next_batch).
+//!
+//! Forward artifacts are AOT-compiled per batch size, so a batch must
+//! be dispatched at one of the available sizes (`buckets`).  A partial
+//! batch is rounded up to the smallest bucket that fits and padded by
+//! repeating the last real request's image; padded rows are
+//! compute-only ballast and never enter the latency accounting
+//! ([`FormedBatch::requests`] holds only real requests).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::serve::queue::Request;
+
+/// Static batching parameters (derived from the artifact set).
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Dispatchable batch sizes, strictly ascending; the last entry
+    /// is the maximum batch and the size-trigger threshold.
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before a partial batch is
+    /// flushed.
+    pub flush_timeout: Duration,
+}
+
+impl BatcherConfig {
+    pub fn new(buckets: Vec<usize>, flush_timeout: Duration) -> Result<Self> {
+        let cfg = BatcherConfig { buckets, flush_timeout };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.buckets.is_empty() {
+            bail!("batcher: no batch-size buckets");
+        }
+        if self.buckets[0] == 0 {
+            bail!("batcher: zero-sized bucket");
+        }
+        if !self.buckets.windows(2).all(|w| w[0] < w[1]) {
+            bail!(
+                "batcher: buckets {:?} not strictly ascending",
+                self.buckets
+            );
+        }
+        Ok(())
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.buckets.last().expect("validated non-empty")
+    }
+
+    /// Smallest bucket that fits `take` real requests (`take` must be
+    /// ≤ `max_batch`, which every dispatch path guarantees).
+    pub fn bucket_for(&self, take: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= take)
+            .unwrap_or_else(|| self.max_batch())
+    }
+}
+
+/// What a worker should do given the queue's current shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Pop this many requests and dispatch them now.
+    Dispatch(usize),
+    /// Partial batch pending: sleep until the flush deadline (or an
+    /// arrival) and re-decide.
+    WaitUntil(Instant),
+    /// Queue empty: wait for an arrival.
+    WaitForWork,
+}
+
+/// The batching policy.  Pure in (config, depth, oldest-enqueue, now).
+pub fn decide(
+    cfg: &BatcherConfig,
+    pending: usize,
+    oldest_enqueued: Option<Instant>,
+    now: Instant,
+) -> Decision {
+    let Some(oldest) = oldest_enqueued else {
+        debug_assert_eq!(pending, 0);
+        return Decision::WaitForWork;
+    };
+    let max = cfg.max_batch();
+    if pending >= max {
+        return Decision::Dispatch(max);
+    }
+    let flush_at = oldest + cfg.flush_timeout;
+    if now >= flush_at {
+        Decision::Dispatch(pending)
+    } else {
+        Decision::WaitUntil(flush_at)
+    }
+}
+
+/// A dispatched batch: `requests.len()` real rows padded up to
+/// `bucket` rows for the compiled executable.
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub requests: Vec<Request>,
+    pub bucket: usize,
+}
+
+impl FormedBatch {
+    /// Number of compute-only padding rows.
+    pub fn padding(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+
+    /// Flat `f32[bucket, image_elems]` tensor; padding repeats the
+    /// last real request's image.
+    pub fn padded_images(&self) -> Vec<f32> {
+        let elems = self.requests[0].image.len();
+        let mut flat = Vec::with_capacity(self.bucket * elems);
+        for r in &self.requests {
+            debug_assert_eq!(r.image.len(), elems);
+            flat.extend_from_slice(&r.image);
+        }
+        let last = &self.requests[self.requests.len() - 1].image;
+        for _ in self.requests.len()..self.bucket {
+            flat.extend_from_slice(last);
+        }
+        flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(buckets: &[usize], flush_ms: u64) -> BatcherConfig {
+        BatcherConfig::new(
+            buckets.to_vec(),
+            Duration::from_millis(flush_ms),
+        )
+        .unwrap()
+    }
+
+    fn req(id: u64, elems: usize) -> Request {
+        Request::new(id, vec![id as f32; elems], Duration::from_secs(1))
+    }
+
+    #[test]
+    fn config_rejects_bad_buckets() {
+        assert!(BatcherConfig::new(vec![], Duration::ZERO).is_err());
+        assert!(BatcherConfig::new(vec![0], Duration::ZERO).is_err());
+        assert!(BatcherConfig::new(vec![4, 2], Duration::ZERO).is_err());
+        assert!(BatcherConfig::new(vec![2, 2], Duration::ZERO).is_err());
+        assert!(BatcherConfig::new(vec![1, 2, 8], Duration::ZERO).is_ok());
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        let c = cfg(&[1, 2, 4, 8], 5);
+        assert_eq!(c.bucket_for(1), 1);
+        assert_eq!(c.bucket_for(3), 4);
+        assert_eq!(c.bucket_for(4), 4);
+        assert_eq!(c.bucket_for(5), 8);
+        assert_eq!(c.bucket_for(8), 8);
+        assert_eq!(c.max_batch(), 8);
+    }
+
+    #[test]
+    fn empty_queue_waits_for_work() {
+        let c = cfg(&[8], 5);
+        assert_eq!(decide(&c, 0, None, Instant::now()), Decision::WaitForWork);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let c = cfg(&[8], 5);
+        let now = Instant::now();
+        // Even a brand-new full batch goes out at once.
+        assert_eq!(decide(&c, 8, Some(now), now), Decision::Dispatch(8));
+        // More than a batch waiting: still dispatch max, rest stays.
+        assert_eq!(decide(&c, 13, Some(now), now), Decision::Dispatch(8));
+    }
+
+    #[test]
+    fn partial_batch_waits_until_flush_deadline() {
+        let c = cfg(&[8], 5);
+        let t0 = Instant::now();
+        let flush_at = t0 + Duration::from_millis(5);
+        // Before the deadline: wait exactly until it.
+        match decide(&c, 3, Some(t0), t0 + Duration::from_millis(2)) {
+            Decision::WaitUntil(at) => assert_eq!(at, flush_at),
+            other => panic!("expected WaitUntil, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flush_fires_at_the_deadline() {
+        let c = cfg(&[8], 5);
+        let t0 = Instant::now();
+        let flush_at = t0 + Duration::from_millis(5);
+        // At and after the deadline: flush the partial batch.
+        assert_eq!(decide(&c, 3, Some(t0), flush_at), Decision::Dispatch(3));
+        assert_eq!(
+            decide(&c, 3, Some(t0), flush_at + Duration::from_millis(7)),
+            Decision::Dispatch(3)
+        );
+    }
+
+    #[test]
+    fn padded_images_repeat_last_real_row() {
+        let batch = FormedBatch {
+            requests: vec![req(0, 4), req(1, 4), req(2, 4)],
+            bucket: 8,
+        };
+        assert_eq!(batch.padding(), 5);
+        let flat = batch.padded_images();
+        assert_eq!(flat.len(), 8 * 4);
+        assert_eq!(&flat[..4], &[0.0; 4]);
+        assert_eq!(&flat[4..8], &[1.0; 4]);
+        // rows 2..8 all repeat request 2's image
+        for row in 2..8 {
+            assert_eq!(&flat[row * 4..(row + 1) * 4], &[2.0; 4]);
+        }
+    }
+
+    #[test]
+    fn exact_batch_has_no_padding() {
+        let batch = FormedBatch {
+            requests: (0..4).map(|i| req(i, 2)).collect(),
+            bucket: 4,
+        };
+        assert_eq!(batch.padding(), 0);
+        assert_eq!(batch.padded_images().len(), 8);
+    }
+}

@@ -1,0 +1,69 @@
+//! Deterministic load generation for closed- and open-loop runs.
+//!
+//! Arrivals follow a Poisson process: inter-arrival gaps are sampled
+//! from Exp(rate) by inverse CDF over the repo's deterministic
+//! [`Rng`] — the same (rate, seed) always offers bit-identical load,
+//! so serving benchmarks are reproducible run to run.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Arrival offsets (from generator start) for `n` requests at
+/// `rate_per_s` requests/second.  `rate_per_s <= 0` means
+/// back-to-back arrivals (all offsets zero — the closed-loop
+/// saturation case).
+pub fn poisson_offsets(n: u64, rate_per_s: f64, seed: u64) -> Vec<Duration> {
+    let n = n as usize;
+    if rate_per_s <= 0.0 {
+        return vec![Duration::ZERO; n];
+    }
+    let mut rng = Rng::new(seed ^ 0x5E4E_0A7E_11FE_ED5D);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // 1-U ∈ (0, 1] keeps ln away from 0.
+        let u = 1.0 - rng.next_f64();
+        t += -u.ln() / rate_per_s;
+        out.push(Duration::from_secs_f64(t));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(poisson_offsets(50, 100.0, 7), poisson_offsets(50, 100.0, 7));
+        assert_ne!(poisson_offsets(50, 100.0, 7), poisson_offsets(50, 100.0, 8));
+    }
+
+    #[test]
+    fn monotonically_increasing() {
+        let offs = poisson_offsets(200, 500.0, 3);
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(offs[0] > Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_rate_matches() {
+        let rate = 1000.0;
+        let n = 20_000u64;
+        let offs = poisson_offsets(n, rate, 11);
+        // Last offset ≈ n/rate seconds (law of large numbers).
+        let expect = n as f64 / rate;
+        let got = offs.last().unwrap().as_secs_f64();
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "expected ≈{expect}s of arrivals, got {got}s"
+        );
+    }
+
+    #[test]
+    fn zero_rate_is_back_to_back() {
+        let offs = poisson_offsets(5, 0.0, 1);
+        assert_eq!(offs, vec![Duration::ZERO; 5]);
+    }
+}

@@ -1,0 +1,305 @@
+//! `mpx::serve` — batched-inference serving engine.
+//!
+//! Inference is where mixed precision pays off with no loss-scaling
+//! caveats at all (paper §3): the f16/bf16 forward artifacts can be
+//! driven straight at traffic.  This subsystem turns the AOT forward
+//! artifacts into a measurable throughput/latency story:
+//!
+//! ```text
+//!   loadgen (deterministic Poisson arrivals, open or closed loop)
+//!      │ admission control (bounded queue; reject or backpressure)
+//!      ▼
+//!   RequestQueue ── next_batch: size-bucketed dynamic batching,
+//!      │            padding-aware, flush-on-timeout
+//!      ▼
+//!   worker pool (N threads, shared compiled executables, per-worker
+//!      │         parameter replicas — ddp-style replication)
+//!      ▼
+//!   per-worker LatencyHistogram ── merge ──► ServeReport
+//!                                            (p50/p95/p99, rank-
+//!                                             interpolated)
+//! ```
+//!
+//! Module layout:
+//!
+//! * [`queue`] — bounded MPMC request queue + admission control; owns
+//!   the batching wait loop.
+//! * [`batcher`] — the pure batching policy (size buckets, padding,
+//!   flush-on-timeout) and [`FormedBatch`].
+//! * [`worker`] — [`BatchExecutor`] trait, the worker loop, and the
+//!   PJRT-artifact executor.
+//! * [`loadgen`] — deterministic Poisson arrival schedules.
+//!
+//! Entry points: [`run`] (any executor — tests use a fake) and
+//! [`run_with_artifacts`] (the real PJRT path `mpx serve` drives).
+
+pub mod batcher;
+pub mod loadgen;
+pub mod queue;
+pub mod worker;
+
+pub use batcher::{decide, BatcherConfig, Decision, FormedBatch};
+pub use queue::{QueueStats, Request, RequestQueue};
+pub use worker::{ArtifactExecutor, BatchExecutor, WorkerReport};
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{model_preset, ServeConfig};
+use crate::data::SyntheticDataset;
+use crate::metrics::LatencyHistogram;
+use crate::runtime::ArtifactStore;
+use crate::util::human_duration;
+use worker::worker_loop;
+
+/// Aggregate result of one serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Wall clock from generator start to full drain.
+    pub wall: Duration,
+    /// Requests the load generator offered (accepted + rejected).
+    pub offered: u64,
+    pub queue: QueueStats,
+    /// All workers' latencies merged (real requests only).
+    pub latency: LatencyHistogram,
+    pub workers: Vec<WorkerReport>,
+}
+
+impl ServeReport {
+    pub fn completed(&self) -> u64 {
+        self.latency.count() as u64
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.workers.iter().map(|w| w.batches).sum()
+    }
+
+    pub fn padded(&self) -> u64 {
+        self.workers.iter().map(|w| w.padded).sum()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.workers.iter().map(|w| w.deadline_misses).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Share of executed rows that were padding ballast.
+    pub fn padding_fraction(&self) -> f64 {
+        let real = self.completed();
+        let pad = self.padded();
+        if real + pad == 0 {
+            0.0
+        } else {
+            pad as f64 / (real + pad) as f64
+        }
+    }
+
+    /// Human-readable run summary on stdout.
+    pub fn print(&self, label: &str) {
+        println!(
+            "[serve] {label}: {} offered, {} completed, {} rejected, wall {}",
+            self.offered,
+            self.completed(),
+            self.queue.rejected,
+            human_duration(self.wall),
+        );
+        println!(
+            "        throughput {:.1} req/s | peak queue depth {} | {} \
+             batches, {:.1}% padding | {} deadline misses",
+            self.throughput_rps(),
+            self.queue.peak_depth,
+            self.batches(),
+            self.padding_fraction() * 100.0,
+            self.deadline_misses(),
+        );
+        if let Some(s) = self.latency.summary() {
+            println!(
+                "        latency p50 {}  p95 {}  p99 {}  max {}",
+                human_duration(s.p50),
+                human_duration(s.p95),
+                human_duration(s.p99),
+                human_duration(s.max),
+            );
+        }
+        for w in &self.workers {
+            println!(
+                "        worker {}: {} requests in {} batches, busy {}",
+                w.worker,
+                w.requests,
+                w.batches,
+                human_duration(w.busy),
+            );
+        }
+    }
+}
+
+/// Run the serving engine with a caller-supplied executor factory.
+///
+/// `make_executor(worker_id)` is called once *inside* each worker
+/// thread (PJRT literals are thread-local); `make_image(request_id)`
+/// produces each request's flattened image row on the generator
+/// thread.  `buckets` are the dispatchable batch sizes (ascending;
+/// the last is the max batch — see [`BatcherConfig`]).
+pub fn run<E, F, G>(
+    cfg: &ServeConfig,
+    buckets: Vec<usize>,
+    make_executor: F,
+    mut make_image: G,
+) -> Result<ServeReport>
+where
+    E: BatchExecutor,
+    F: Fn(usize) -> Result<E> + Sync,
+    G: FnMut(u64) -> Vec<f32>,
+{
+    cfg.validate()?;
+    let bcfg = BatcherConfig::new(buckets, cfg.flush_timeout())?;
+    let queue = RequestQueue::new(cfg.queue_capacity);
+    let schedule =
+        loadgen::poisson_offsets(cfg.requests, cfg.arrival_rate, cfg.seed);
+    let deadline = cfg.deadline();
+    // Workers build their executors (compiles are already cached, but
+    // per-worker param replication runs the init artifact) *behind*
+    // this barrier, so startup cost never pollutes the measured
+    // latencies or throughput.
+    let ready = std::sync::Barrier::new(cfg.workers + 1);
+
+    let (workers, t_start) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.workers)
+            .map(|w| {
+                let queue = &queue;
+                let bcfg = &bcfg;
+                let make_executor = &make_executor;
+                let ready = &ready;
+                scope.spawn(move || {
+                    let exec = make_executor(w);
+                    // Always pass the barrier — success or not — or
+                    // the producer would wait forever.
+                    ready.wait();
+                    let out = match exec {
+                        Ok(mut exec) => {
+                            worker_loop(w, &mut exec, queue, bcfg)
+                        }
+                        Err(e) => Err(e),
+                    };
+                    if out.is_err() {
+                        // A dead worker must not wedge the producer or
+                        // starve its peers: stop arrivals, let the
+                        // rest drain what is queued.
+                        queue.close();
+                    }
+                    out
+                })
+            })
+            .collect();
+
+        ready.wait();
+        let t_start = Instant::now();
+
+        // This thread is the arrival process.
+        for (i, off) in schedule.iter().enumerate() {
+            let at = t_start + *off;
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+            let req = Request::new(i as u64, make_image(i as u64), deadline);
+            let admitted = if cfg.open_loop {
+                queue.try_enqueue(req)
+            } else {
+                queue.enqueue(req)
+            };
+            // Closed-loop enqueue only fails when the queue closed;
+            // open-loop rejects on a full queue too, so check which.
+            // Either way a closed queue (worker failure) means no
+            // arrival can ever land again — stop generating.
+            if !admitted && queue.is_closed() {
+                break;
+            }
+        }
+        queue.close();
+
+        let reports = handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok::<_, anyhow::Error>((reports, t_start))
+    })?;
+
+    let mut latency = LatencyHistogram::new();
+    for w in &workers {
+        latency.merge(&w.latency);
+    }
+    Ok(ServeReport {
+        wall: t_start.elapsed(),
+        offered: cfg.requests,
+        queue: queue.stats(),
+        latency,
+        workers,
+    })
+}
+
+/// Which forward artifacts exist for power-of-two bucket sizes up to
+/// `cfg.max_batch` (manifest presence only — nothing is compiled).
+pub fn discover_buckets(
+    store: &ArtifactStore,
+    cfg: &ServeConfig,
+) -> Vec<usize> {
+    let mut buckets = Vec::new();
+    let mut b = 1usize;
+    loop {
+        if b >= cfg.max_batch {
+            b = cfg.max_batch;
+        }
+        if store.manifest(&cfg.fwd_artifact(b)).is_ok() {
+            buckets.push(b);
+        }
+        if b == cfg.max_batch {
+            break;
+        }
+        b *= 2;
+    }
+    buckets
+}
+
+/// The real serving path: discover + compile the forward artifacts,
+/// replicate parameters per worker, and drive synthetic traffic
+/// through the engine.
+pub fn run_with_artifacts(
+    store: &mut ArtifactStore,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    cfg.validate()?;
+    let buckets = discover_buckets(store, cfg);
+    if buckets.is_empty() {
+        bail!(
+            "no forward artifacts for model {} precision {} (expected \
+             e.g. {} in {}) — run `make artifacts`",
+            cfg.model,
+            cfg.precision.tag(),
+            cfg.fwd_artifact(cfg.max_batch),
+            store.dir().display()
+        );
+    }
+    let fwd_by_bucket = buckets
+        .iter()
+        .map(|&b| Ok((b, store.load(&cfg.fwd_artifact(b))?)))
+        .collect::<Result<Vec<_>>>()?;
+    let init = store.load(&cfg.init_artifact())?;
+
+    let preset = model_preset(&cfg.model)?;
+    let dataset = SyntheticDataset::new(&preset, cfg.seed);
+    let seed = cfg.seed as i32;
+
+    let make_executor = |_worker: usize| {
+        ArtifactExecutor::new(&init, fwd_by_bucket.clone(), seed)
+    };
+    // One fresh synthetic image per request (request id = batch index
+    // of a single-row batch, so the stream is deterministic).
+    let make_image = |i: u64| dataset.batch(i, 1, 7).images;
+
+    run(cfg, buckets, make_executor, make_image)
+}

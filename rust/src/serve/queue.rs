@@ -1,0 +1,182 @@
+//! Bounded request queue with admission control.
+//!
+//! Producers (the load generator) stamp each request on admission;
+//! consumers (workers) pull whole batches via
+//! [`RequestQueue::next_batch`], which owns the batching wait logic
+//! (size-triggered dispatch, flush-on-timeout, drain-on-close) so all
+//! locking lives in one place.  The batching *policy* itself is the
+//! pure [`decide`](crate::serve::batcher::decide) function.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::batcher::{decide, BatcherConfig, Decision, FormedBatch};
+
+/// One queued inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Flattened image row (`image_elems` f32s).
+    pub image: Vec<f32>,
+    /// Admission timestamp — latency is measured from here.  Set at
+    /// construction and re-stamped by the queue on admission, so a
+    /// closed-loop producer's backpressure wait is not billed to the
+    /// request.
+    pub enqueued: Instant,
+    /// End-to-end budget from admission; misses are reported, not
+    /// enforced.
+    pub deadline: Duration,
+}
+
+impl Request {
+    pub fn new(id: u64, image: Vec<f32>, deadline: Duration) -> Request {
+        Request { id, image, enqueued: Instant::now(), deadline }
+    }
+
+    /// Has the admission→`done` latency blown the budget?
+    pub fn missed_deadline(&self, done: Instant) -> bool {
+        done.duration_since(self.enqueued) > self.deadline
+    }
+}
+
+/// Counters the queue maintains under its lock.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub peak_depth: usize,
+}
+
+struct State {
+    deque: VecDeque<Request>,
+    closed: bool,
+    stats: QueueStats,
+}
+
+/// MPMC queue: one load generator, `workers` batch consumers.
+pub struct RequestQueue {
+    capacity: usize,
+    state: Mutex<State>,
+    /// Signalled on enqueue/close — wakes waiting workers.
+    work: Condvar,
+    /// Signalled on dequeue/close — wakes a blocked producer.
+    space: Condvar,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            capacity: capacity.max(1),
+            state: Mutex::new(State {
+                deque: VecDeque::new(),
+                closed: false,
+                stats: QueueStats::default(),
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    fn admit(&self, st: &mut State, mut req: Request) {
+        req.enqueued = Instant::now();
+        st.deque.push_back(req);
+        st.stats.accepted += 1;
+        st.stats.peak_depth = st.stats.peak_depth.max(st.deque.len());
+        self.work.notify_one();
+    }
+
+    /// Open-loop admission: reject (and count) when at capacity.
+    pub fn try_enqueue(&self, req: Request) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.deque.len() >= self.capacity {
+            st.stats.rejected += 1;
+            return false;
+        }
+        self.admit(&mut st, req);
+        true
+    }
+
+    /// Closed-loop admission: block until there is space (backpressure
+    /// throttles the offered load instead of dropping).
+    pub fn enqueue(&self, req: Request) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while !st.closed && st.deque.len() >= self.capacity {
+            st = self.space.wait(st).unwrap();
+        }
+        if st.closed {
+            st.stats.rejected += 1;
+            return false;
+        }
+        self.admit(&mut st, req);
+        true
+    }
+
+    /// No more arrivals; workers drain what is queued and then stop.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().deque.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Block until a batch is ready under `cfg`, or `None` once the
+    /// queue is closed and drained.  Dispatch triggers:
+    ///
+    /// * a full `max_batch` is waiting — dispatch immediately;
+    /// * the oldest request has waited `flush_timeout` — flush the
+    ///   partial batch (bounded tail latency);
+    /// * the queue is closed — drain in `max_batch` chunks.
+    ///
+    /// Requests are popped front-first, so FIFO order is preserved
+    /// through dispatch.
+    pub fn next_batch(&self, cfg: &BatcherConfig) -> Option<FormedBatch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed && st.deque.is_empty() {
+                return None;
+            }
+            let take = if st.closed {
+                st.deque.len().min(cfg.max_batch())
+            } else {
+                let oldest = st.deque.front().map(|r| r.enqueued);
+                match decide(cfg, st.deque.len(), oldest, Instant::now()) {
+                    Decision::Dispatch(take) => take,
+                    Decision::WaitUntil(at) => {
+                        let dur =
+                            at.saturating_duration_since(Instant::now());
+                        let (g, _) =
+                            self.work.wait_timeout(st, dur).unwrap();
+                        st = g;
+                        continue;
+                    }
+                    Decision::WaitForWork => {
+                        st = self.work.wait(st).unwrap();
+                        continue;
+                    }
+                }
+            };
+            debug_assert!(take > 0, "dispatch of an empty batch");
+            let mut requests = Vec::with_capacity(take);
+            for _ in 0..take {
+                requests.push(st.deque.pop_front().unwrap());
+            }
+            self.space.notify_all();
+            let bucket = cfg.bucket_for(requests.len());
+            return Some(FormedBatch { requests, bucket });
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Executor pool: per-worker model replicas driving the shared
+//! compiled executables.
+//!
+//! Each worker thread builds its own [`BatchExecutor`] *inside the
+//! thread* (PJRT literals are not `Send`), pulls formed batches from
+//! the shared queue, and accounts per-request latency into its own
+//! [`LatencyHistogram`]; the server merges the histograms afterwards.
+//! The compiled executables themselves are shared across workers via
+//! [`SharedExecutable`](crate::runtime::SharedExecutable) — one
+//! compile, N replicas of the (cheap) parameter literals, exactly the
+//! replication scheme `trainer::ddp` uses for shards.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::runtime::{lit_f32, lit_scalar_i32, read_f32, Artifact};
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::queue::RequestQueue;
+
+/// A loaded model replica that can run one padded batch.
+pub trait BatchExecutor {
+    /// Run the forward on `images` (`f32[batch, image_elems]`, already
+    /// padded to a supported bucket); returns the flat logits.
+    fn execute(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>>;
+}
+
+/// Per-worker accounting, merged into the run report.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub batches: u64,
+    pub requests: u64,
+    pub padded: u64,
+    pub deadline_misses: u64,
+    /// Wall time spent inside `execute` (utilisation numerator).
+    pub busy: Duration,
+    pub latency: LatencyHistogram,
+}
+
+impl WorkerReport {
+    fn new(worker: usize) -> WorkerReport {
+        WorkerReport {
+            worker,
+            batches: 0,
+            requests: 0,
+            padded: 0,
+            deadline_misses: 0,
+            busy: Duration::ZERO,
+            latency: LatencyHistogram::new(),
+        }
+    }
+}
+
+/// One worker's life: pull batches until the queue closes and drains.
+///
+/// Latency is measured admission → batch completion, for *real*
+/// requests only — padding rows are ballast and never recorded (the
+/// padded-batch accounting the tests pin down).
+pub fn worker_loop<E: BatchExecutor>(
+    worker: usize,
+    exec: &mut E,
+    queue: &RequestQueue,
+    cfg: &BatcherConfig,
+) -> Result<WorkerReport> {
+    let mut rep = WorkerReport::new(worker);
+    while let Some(batch) = queue.next_batch(cfg) {
+        let images = batch.padded_images();
+        let t0 = Instant::now();
+        exec.execute(&images, batch.bucket).with_context(|| {
+            format!("worker {worker}: batch of {}", batch.bucket)
+        })?;
+        let done = Instant::now();
+        rep.busy += done - t0;
+        rep.batches += 1;
+        rep.padded += batch.padding() as u64;
+        for r in &batch.requests {
+            rep.latency.record(done.duration_since(r.enqueued));
+            if r.missed_deadline(done) {
+                rep.deadline_misses += 1;
+            }
+            rep.requests += 1;
+        }
+    }
+    Ok(rep)
+}
+
+/// [`BatchExecutor`] over the AOT forward artifacts: one compiled
+/// executable per bucket size (all shared), one parameter replica per
+/// worker.
+///
+/// The replica is materialised by re-running the deterministic init
+/// artifact with the worker-shared seed — identical weights on every
+/// worker without moving literals across threads.
+pub struct ArtifactExecutor {
+    /// `(bucket, fwd artifact)`, ascending by bucket.
+    fwd_by_bucket: Vec<(usize, Arc<Artifact>)>,
+    /// Init-artifact outputs (this thread's literals).
+    state: Vec<xla::Literal>,
+    /// Slice of `state` holding the parameter leaves.
+    prange: std::ops::Range<usize>,
+}
+
+impl ArtifactExecutor {
+    /// Build inside the worker thread.
+    pub fn new(
+        init: &Artifact,
+        fwd_by_bucket: Vec<(usize, Arc<Artifact>)>,
+        seed: i32,
+    ) -> Result<ArtifactExecutor> {
+        if fwd_by_bucket.is_empty() {
+            bail!("no forward artifacts to serve");
+        }
+        let state = init
+            .execute(&[lit_scalar_i32(seed)])
+            .context("replicate params via init artifact")?;
+        let prange = init.manifest.output_group("params");
+        if prange.is_empty() {
+            bail!(
+                "init artifact {} has no params output group",
+                init.manifest.name
+            );
+        }
+        Ok(ArtifactExecutor { fwd_by_bucket, state, prange })
+    }
+}
+
+impl BatchExecutor for ArtifactExecutor {
+    fn execute(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (_, fwd) = self
+            .fwd_by_bucket
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .with_context(|| {
+                format!("no forward artifact for batch {batch}")
+            })?;
+        let img_idx = fwd
+            .manifest
+            .input_group("images")
+            .next_back()
+            .context("forward artifact has no images input")?;
+        let img_spec = &fwd.manifest.inputs[img_idx];
+        if img_spec.elems() != images.len() {
+            bail!(
+                "batch {batch}: artifact wants {} image elems, got {}",
+                img_spec.elems(),
+                images.len()
+            );
+        }
+        let images = lit_f32(&img_spec.shape, images)?;
+        let mut inputs: Vec<&xla::Literal> =
+            self.state[self.prange.clone()].iter().collect();
+        inputs.push(&images);
+        let out = fwd.execute(&inputs)?;
+        read_f32(&out[0])
+    }
+}

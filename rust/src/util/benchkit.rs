@@ -23,7 +23,11 @@ impl Stats {
         samples.sort();
         let n = samples.len();
         let total: Duration = samples.iter().sum();
-        let pct = |p: f64| samples[((n - 1) as f64 * p) as usize];
+        let ns: Vec<u64> = samples
+            .iter()
+            .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+            .collect();
+        let pct = |p: f64| quantile_ns(&ns, p);
         Stats {
             iters: n,
             mean: total / n as u32,
@@ -34,6 +38,27 @@ impl Stats {
             max: samples[n - 1],
         }
     }
+}
+
+/// Rank-interpolated quantile over ascending integer-nanosecond
+/// samples (Hyndman–Fan type 7, NumPy's `"linear"`): the rank of
+/// quantile `q` over `n` samples is `h = q·(n-1)` and the value
+/// interpolates between `x[⌊h⌋]` and `x[⌊h⌋+1]`.  Truncating `h`
+/// instead under-reports upper tails on small samples.  Shared by
+/// [`Stats`] and `metrics::LatencyHistogram` so the repo has exactly
+/// one quantile definition.
+///
+/// `sorted_ns` must be non-empty and ascending.
+pub fn quantile_ns(sorted_ns: &[u64], q: f64) -> Duration {
+    let q = q.clamp(0.0, 1.0);
+    let n = sorted_ns.len();
+    let h = q * (n - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = (lo + 1).min(n - 1);
+    let frac = h - lo as f64;
+    let v = sorted_ns[lo] as f64
+        + frac * (sorted_ns[hi] as f64 - sorted_ns[lo] as f64);
+    Duration::from_nanos(v.round() as u64)
 }
 
 /// Benchmark configuration: bounded both by iteration count and by

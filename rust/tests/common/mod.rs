@@ -1,0 +1,21 @@
+//! Shared helpers for the integration test binaries (`mod common;`).
+
+use mpx::runtime::ArtifactStore;
+
+/// Open the artifact store, or `None` when the artifacts have not
+/// been built — the caller's test skips with a note, which keeps
+/// `cargo test` meaningful on fresh clones and in CI where
+/// `make artifacts` has not run.
+///
+/// Each test builds its own store (and PJRT client): the xla crate's
+/// client is Rc-based (!Send), so it cannot live in a shared static
+/// across the test harness's threads.
+pub fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping: artifacts unavailable ({e:#})");
+            None
+        }
+    }
+}

@@ -4,15 +4,10 @@
 use mpx::config::{model_preset, Precision, TrainConfig};
 use mpx::data::SyntheticDataset;
 use mpx::metrics::RunMetrics;
-use mpx::runtime::ArtifactStore;
 use mpx::trainer::{DataParallelTrainer, FusedTrainer};
 
-fn store() -> ArtifactStore {
-    // Each test builds its own store (and PJRT client): the xla
-    // crate's client is Rc-based (!Send), so it cannot live in a
-    // shared static across the test harness's threads.
-    ArtifactStore::open_default().expect("artifacts/ missing — run `make artifacts`")
-}
+mod common;
+use common::store;
 
 fn config(precision: Precision, shards: usize) -> TrainConfig {
     TrainConfig {
@@ -31,7 +26,7 @@ fn single_shard_ddp_tracks_fused() {
     // Same data, same recipe; one path fuses everything into the HLO
     // graph, the other decomposes (grads exe + Rust all-reduce +
     // Rust AdamW + Rust scaler).  Trajectories must track closely.
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 3);
 
@@ -63,7 +58,7 @@ fn multi_shard_matches_single_shard_gradients() {
     // 4 shards × b2 over the same global batch of 8 must produce the
     // same mean gradient as 1 shard × b8 — verified indirectly: the
     // parameter trajectories stay close for several steps.
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 3);
 
@@ -100,7 +95,7 @@ fn multi_shard_matches_single_shard_gradients() {
 
 #[test]
 fn fp32_ddp_never_skips() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 3);
     let mut t =
@@ -117,7 +112,7 @@ fn scaler_recovers_after_natural_overflow() {
     // f16 with init scale 2^15 typically overflows in the first steps
     // of this model (observed in every run); the trainer must skip
     // those steps, halve the scale, and keep training to convergence.
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 3);
     let mut t =

@@ -5,15 +5,13 @@ use mpx::config::{Precision, VIT_BASE, VIT_DESKTOP, VIT_TINY};
 use mpx::hlo::HloModule;
 use mpx::memmodel::ActivationModel;
 use mpx::pytree::Which;
-use mpx::runtime::ArtifactStore;
 
-fn store() -> ArtifactStore {
-    ArtifactStore::open_default().expect("artifacts/ missing")
-}
+mod common;
+use common::store;
 
 #[test]
 fn analytic_param_count_matches_manifests_exactly() {
-    let store = store();
+    let Some(store) = store() else { return };
     for (preset, name) in [
         (VIT_TINY, "init_vit_tiny_fp32"),
         (VIT_DESKTOP, "init_vit_desktop_fp32"),
@@ -37,7 +35,7 @@ fn analytic_param_count_matches_manifests_exactly() {
 #[test]
 fn optimizer_state_is_twice_params() {
     // Adam: mu + nu (float leaves) + a scalar count.
-    let store = store();
+    let Some(store) = store() else { return };
     let m = store.manifest("init_vit_desktop_fp32").unwrap();
     let params: u64 = m
         .outputs
@@ -59,7 +57,7 @@ fn census_mixed_vs_full_ratio_matches_model_direction() {
     // The HLO census and the analytic model must agree on the SIGN
     // and rough size of the effect: mixed workspace < full workspace,
     // with the ratio growing toward 2 as batch grows.
-    let store = store();
+    let Some(store) = store() else { return };
     let mut prev_ratio = 0.0f64;
     for b in [8usize, 32, 128] {
         let f = HloModule::parse(
@@ -90,7 +88,7 @@ fn census_mixed_vs_full_ratio_matches_model_direction() {
 fn mixed_artifact_moves_half_precision_activations() {
     // The mixed step's HLO must actually contain a large f16 workspace
     // (if casting silently failed everything would still be f32).
-    let store = store();
+    let Some(store) = store() else { return };
     let m = HloModule::parse(
         &store
             .hlo_text("step_fused_vit_desktop_mixed_f16_b64")
@@ -119,7 +117,7 @@ fn mixed_artifact_moves_half_precision_activations() {
 fn manifest_batch_scaling_only_in_batch_groups() {
     // Between b8 and b64 artifacts, only images/labels input bytes
     // change — state is batch-independent (the Fig. 2 constant term).
-    let store = store();
+    let Some(store) = store() else { return };
     let a = store.manifest("step_fused_vit_desktop_mixed_f16_b8").unwrap();
     let b = store
         .manifest("step_fused_vit_desktop_mixed_f16_b64")

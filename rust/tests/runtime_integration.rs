@@ -8,15 +8,11 @@
 use mpx::config::{model_preset, Precision, TrainConfig};
 use mpx::data::SyntheticDataset;
 use mpx::metrics::RunMetrics;
-use mpx::runtime::{lit_scalar_i32, read_f32, ArtifactStore};
+use mpx::runtime::{lit_scalar_i32, read_f32};
 use mpx::trainer::{checkpoint, FusedTrainer};
 
-fn store() -> ArtifactStore {
-    // Each test builds its own store (and PJRT client): the xla
-    // crate's client is Rc-based (!Send), so it cannot live in a
-    // shared static across the test harness's threads.
-    ArtifactStore::open_default().expect("artifacts/ missing — run `make artifacts`")
-}
+mod common;
+use common::store;
 
 fn tiny_config(precision: Precision) -> TrainConfig {
     TrainConfig {
@@ -30,7 +26,7 @@ fn tiny_config(precision: Precision) -> TrainConfig {
 
 #[test]
 fn fused_training_converges_mixed_f16() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let cfg = tiny_config(Precision::MixedF16);
     let preset = model_preset(&cfg.model).unwrap();
     let dataset = SyntheticDataset::new(&preset, 0);
@@ -48,7 +44,7 @@ fn fused_training_converges_mixed_f16() {
 
 #[test]
 fn fused_training_converges_fp32_baseline() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let cfg = tiny_config(Precision::Fp32);
     let preset = model_preset(&cfg.model).unwrap();
     let dataset = SyntheticDataset::new(&preset, 0);
@@ -64,7 +60,7 @@ fn fused_training_converges_fp32_baseline() {
 
 #[test]
 fn mixed_matches_fp32_quality() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 5);
 
@@ -87,7 +83,7 @@ fn mixed_matches_fp32_quality() {
 
 #[test]
 fn bf16_runs_without_loss_scaling_overflows() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let cfg = tiny_config(Precision::MixedBf16);
     let preset = model_preset(&cfg.model).unwrap();
     let dataset = SyntheticDataset::new(&preset, 0);
@@ -103,7 +99,7 @@ fn bf16_runs_without_loss_scaling_overflows() {
 fn pallas_kernel_step_matches_xla_step() {
     // The Pallas-kernel ViT variant (fused attention / layernorm /
     // matmul kernels with custom VJPs) must train like the XLA-op one.
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let preset = model_preset("vit_tiny").unwrap();
     let dataset = SyntheticDataset::new(&preset, 1);
 
@@ -155,7 +151,7 @@ fn pallas_kernel_step_matches_xla_step() {
 
 #[test]
 fn checkpoint_roundtrip_resumes_identically() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let cfg = tiny_config(Precision::MixedF16);
     let preset = model_preset(&cfg.model).unwrap();
     let dataset = SyntheticDataset::new(&preset, 2);
@@ -192,7 +188,7 @@ fn checkpoint_roundtrip_resumes_identically() {
 
 #[test]
 fn checkpoint_rejects_wrong_manifest() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let cfg = tiny_config(Precision::MixedF16);
     let mut trainer = FusedTrainer::new(&mut store, cfg).unwrap();
     let specs =
@@ -211,7 +207,7 @@ fn checkpoint_rejects_wrong_manifest() {
 
 #[test]
 fn forward_is_deterministic() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let fwd = store.load("fwd_vit_tiny_mixed_f16_b8").unwrap();
     let init = store.load("init_vit_tiny_mixed_f16").unwrap();
     let state = init.execute(&[lit_scalar_i32(0)]).unwrap();
@@ -237,7 +233,7 @@ fn forward_is_deterministic() {
 
 #[test]
 fn init_is_seed_dependent_and_deterministic() {
-    let mut store = store();
+    let Some(mut store) = store() else { return };
     let init = store.load("init_vit_tiny_mixed_f16").unwrap();
     let a = init.execute(&[lit_scalar_i32(0)]).unwrap();
     let b = init.execute(&[lit_scalar_i32(0)]).unwrap();
@@ -252,7 +248,7 @@ fn init_is_seed_dependent_and_deterministic() {
 #[test]
 fn manifest_state_contract_holds_for_all_step_artifacts() {
     // Every step_fused artifact: init outputs == step state inputs.
-    let store = store();
+    let Some(store) = store() else { return };
     for name in store.list().unwrap() {
         if !name.starts_with("step_fused_vit_tiny") {
             continue;

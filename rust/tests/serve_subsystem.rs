@@ -1,0 +1,212 @@
+//! Serving-subsystem tests that run without AOT artifacts: a fake
+//! executor stands in for PJRT, so queueing, dynamic batching,
+//! padding accounting, and latency aggregation are exercised on any
+//! machine.  The artifact-backed path is covered by `mpx serve` and
+//! the runtime integration suite.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mpx::config::ServeConfig;
+use mpx::serve::{self, BatchExecutor, BatcherConfig, Request, RequestQueue};
+
+const IMG_ELEMS: usize = 4;
+
+/// Stand-in executor: checks shapes, optionally sleeps, logs buckets.
+struct FakeExecutor {
+    delay: Duration,
+    calls: Arc<Mutex<Vec<usize>>>,
+}
+
+impl BatchExecutor for FakeExecutor {
+    fn execute(&mut self, images: &[f32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(
+            images.len(),
+            batch * IMG_ELEMS,
+            "executor got a non-padded or mis-shaped batch"
+        );
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.calls.lock().unwrap().push(batch);
+        Ok(vec![0.0; batch])
+    }
+}
+
+fn fake_factory(
+    delay: Duration,
+) -> (Arc<Mutex<Vec<usize>>>, impl Fn(usize) -> anyhow::Result<FakeExecutor> + Sync)
+{
+    let calls = Arc::new(Mutex::new(Vec::new()));
+    let calls2 = calls.clone();
+    let factory = move |_worker: usize| {
+        Ok(FakeExecutor { delay, calls: calls2.clone() })
+    };
+    (calls, factory)
+}
+
+fn image(i: u64) -> Vec<f32> {
+    vec![i as f32; IMG_ELEMS]
+}
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        requests: 5,
+        workers: 1,
+        queue_capacity: 64,
+        flush_timeout_ms: 1000,
+        deadline_ms: 10_000,
+        arrival_rate: 0.0,
+        open_loop: false,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn padded_batch_requests_counted_once() {
+    // 5 requests into a bucket-8 artifact: one batch, 3 padding rows,
+    // and exactly 5 latency samples — padding must not double-count.
+    let cfg = base_cfg();
+    let (calls, factory) = fake_factory(Duration::ZERO);
+    let report = serve::run(&cfg, vec![8], factory, image).unwrap();
+
+    assert_eq!(report.completed(), 5);
+    assert_eq!(report.latency.count(), 5, "padded rows leaked into stats");
+    assert_eq!(report.batches(), 1);
+    assert_eq!(report.padded(), 3);
+    assert_eq!(*calls.lock().unwrap(), vec![8]);
+    assert_eq!(report.queue.accepted, 5);
+    assert_eq!(report.queue.rejected, 0);
+    assert!((report.padding_fraction() - 3.0 / 8.0).abs() < 1e-12);
+}
+
+#[test]
+fn size_buckets_avoid_padding_when_available() {
+    // Same 5 requests, but with 1/2/4/8 buckets the close-drain takes
+    // all 5 and rounds up to 8; a 4-request run rounds to exactly 4.
+    let mut cfg = base_cfg();
+    cfg.requests = 4;
+    let (calls, factory) = fake_factory(Duration::ZERO);
+    let report = serve::run(&cfg, vec![1, 2, 4, 8], factory, image).unwrap();
+    assert_eq!(report.completed(), 4);
+    assert_eq!(report.padded(), 0);
+    assert_eq!(*calls.lock().unwrap(), vec![4]);
+}
+
+#[test]
+fn flush_on_timeout_fires_at_the_deadline() {
+    // 3 requests sit in a bucket-8 queue with no close and no more
+    // arrivals: next_batch must block ~flush_timeout, then flush.
+    let q = RequestQueue::new(64);
+    let t0 = Instant::now();
+    for i in 0..3u64 {
+        assert!(q.try_enqueue(Request::new(i, image(i), Duration::from_secs(1))));
+    }
+    let bcfg =
+        BatcherConfig::new(vec![8], Duration::from_millis(40)).unwrap();
+    let batch = q.next_batch(&bcfg).expect("flush should dispatch");
+    let waited = t0.elapsed();
+    assert_eq!(batch.requests.len(), 3);
+    assert_eq!(batch.bucket, 8);
+    assert_eq!(batch.padding(), 5);
+    assert!(
+        waited >= Duration::from_millis(35),
+        "flushed before the deadline: {waited:?}"
+    );
+    assert!(waited < Duration::from_secs(5), "flush never fired");
+    assert_eq!(q.depth(), 0);
+}
+
+#[test]
+fn fifo_order_preserved_within_and_across_batches() {
+    let q = RequestQueue::new(64);
+    for i in 0..20u64 {
+        assert!(q.try_enqueue(Request::new(i, image(i), Duration::from_secs(1))));
+    }
+    q.close();
+    let bcfg = BatcherConfig::new(
+        vec![1, 2, 4, 8],
+        Duration::from_millis(100),
+    )
+    .unwrap();
+    let mut ids = Vec::new();
+    let mut padding = 0;
+    while let Some(batch) = q.next_batch(&bcfg) {
+        assert!(batch.bucket >= batch.requests.len());
+        padding += batch.padding();
+        ids.extend(batch.requests.iter().map(|r| r.id));
+    }
+    // 20 → batches of 8, 8, 4: strict FIFO, no padding needed.
+    assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+    assert_eq!(padding, 0);
+}
+
+#[test]
+fn per_worker_histograms_merge_into_run_aggregate() {
+    let mut cfg = base_cfg();
+    cfg.requests = 40;
+    cfg.workers = 2;
+    cfg.flush_timeout_ms = 1;
+    let (_calls, factory) = fake_factory(Duration::from_millis(1));
+    let report = serve::run(&cfg, vec![1, 2, 4, 8], factory, image).unwrap();
+
+    assert_eq!(report.completed(), 40);
+    let per_worker: usize =
+        report.workers.iter().map(|w| w.latency.count()).sum();
+    assert_eq!(report.latency.count(), per_worker);
+    let s = report.latency.summary().unwrap();
+    assert_eq!(s.count, 40);
+    assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    // every latency is at least the executor delay
+    assert!(s.p50 >= Duration::from_millis(1));
+}
+
+#[test]
+fn open_loop_admission_control_rejects_when_full() {
+    // A burst of 40 instant arrivals against capacity 8 and a slow
+    // single worker: the bound must hold and the excess be rejected.
+    let mut cfg = base_cfg();
+    cfg.requests = 40;
+    cfg.queue_capacity = 8;
+    cfg.open_loop = true;
+    cfg.flush_timeout_ms = 50;
+    let (_calls, factory) = fake_factory(Duration::from_millis(20));
+    let report = serve::run(&cfg, vec![8], factory, image).unwrap();
+
+    assert_eq!(report.queue.accepted + report.queue.rejected, 40);
+    assert!(report.queue.rejected > 0, "admission control never engaged");
+    assert_eq!(report.completed(), report.queue.accepted);
+    assert!(report.queue.peak_depth <= 8);
+}
+
+#[test]
+fn closed_loop_backpressure_never_drops() {
+    let mut cfg = base_cfg();
+    cfg.requests = 30;
+    cfg.queue_capacity = 8;
+    cfg.flush_timeout_ms = 2;
+    let (_calls, factory) = fake_factory(Duration::from_millis(2));
+    let report = serve::run(&cfg, vec![8], factory, image).unwrap();
+    assert_eq!(report.queue.rejected, 0);
+    assert_eq!(report.completed(), 30);
+}
+
+#[test]
+fn deadline_misses_are_reported() {
+    let mut cfg = base_cfg();
+    cfg.requests = 10;
+    cfg.deadline_ms = 0; // everything misses
+    let (_calls, factory) = fake_factory(Duration::from_millis(2));
+    let report = serve::run(&cfg, vec![8], factory, image).unwrap();
+    assert_eq!(report.deadline_misses(), report.completed());
+}
+
+#[test]
+fn worker_factory_failure_propagates_without_hanging() {
+    let cfg = base_cfg();
+    let factory = |_worker: usize| -> anyhow::Result<FakeExecutor> {
+        anyhow::bail!("executor construction failed")
+    };
+    let res = serve::run(&cfg, vec![8], factory, image);
+    assert!(res.is_err());
+}
