@@ -7,6 +7,18 @@
 //! are bit-identical run-to-run and independent of shard completion
 //! order — a property the equivalence tests rely on and real
 //! frameworks (NCCL with deterministic algorithms) aim for.
+//!
+//! The elementwise adds and the final mean scale run through the
+//! chunk-parallel [`crate::hostkernel::reduce`] kernels: large
+//! tensors are reduced over contiguous chunk ranges across worker
+//! threads, while the pairwise *association* — which shard is added
+//! into which, in which order — stays exactly the fixed tree below.
+//! Per-element arithmetic is unchanged by the chunking, so the result
+//! is still bitwise-deterministic across runs **and across thread
+//! counts** (property-tested here and in
+//! `rust/tests/hostkernel_props.rs`).
+
+use crate::hostkernel::reduce::{add_assign, scale_in_place};
 
 /// Mean-reduce shard gradient vectors in place into shard 0's buffer.
 ///
@@ -23,7 +35,9 @@ pub fn all_reduce_mean(shards: &mut Vec<Vec<Vec<f32>>>) {
         assert_eq!(s.len(), num_tensors, "shard tensor arity mismatch");
     }
 
-    // Tree reduction over shard indices with fixed association.
+    // Tree reduction over shard indices with fixed association; the
+    // elementwise work inside each pair fans out over threads for
+    // large tensors (hostkernel determinism contract).
     let mut stride = 1;
     while stride < n {
         let mut i = 0;
@@ -34,6 +48,34 @@ pub fn all_reduce_mean(shards: &mut Vec<Vec<Vec<f32>>>) {
             let src = &right[0];
             for (d, s) in dst.iter_mut().zip(src.iter()) {
                 debug_assert_eq!(d.len(), s.len());
+                add_assign(d, s);
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+
+    let inv = 1.0 / n as f32;
+    for t in shards[0].iter_mut() {
+        scale_in_place(t, inv);
+    }
+}
+
+/// The pre-`hostkernel` scalar tree reduction: identical fixed
+/// pairwise association, single-threaded elementwise adds.  This is
+/// the *semantic reference* [`all_reduce_mean`] must match bitwise —
+/// kept in one place so the property tests and the `kernel_micro`
+/// bench baseline can never drift apart.
+#[doc(hidden)]
+pub fn sequential_all_reduce_reference(shards: &mut [Vec<Vec<f32>>]) {
+    let n = shards.len();
+    assert!(n > 0, "no shards");
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = shards.split_at_mut(i + stride);
+            for (d, s) in left[i].iter_mut().zip(right[0].iter()) {
                 for (x, y) in d.iter_mut().zip(s.iter()) {
                     *x += *y;
                 }
@@ -42,7 +84,6 @@ pub fn all_reduce_mean(shards: &mut Vec<Vec<Vec<f32>>>) {
         }
         stride *= 2;
     }
-
     let inv = 1.0 / n as f32;
     for t in shards[0].iter_mut() {
         for x in t.iter_mut() {
@@ -53,8 +94,10 @@ pub fn all_reduce_mean(shards: &mut Vec<Vec<Vec<f32>>>) {
 
 /// AND-reduce the per-shard finiteness flags (a single non-finite
 /// shard poisons the global step — paper §2.1 step 6a applies to the
-/// *global* gradient).
+/// *global* gradient).  Panics on an empty shard list, like
+/// [`all_reduce_mean`]: "no shards" must never read as "all finite".
 pub fn all_reduce_finite(flags: &[bool]) -> bool {
+    assert!(!flags.is_empty(), "no shards");
     flags.iter().all(|&f| f)
 }
 
@@ -110,7 +153,12 @@ mod tests {
     fn finite_flags() {
         assert!(all_reduce_finite(&[true, true]));
         assert!(!all_reduce_finite(&[true, false, true]));
-        assert!(all_reduce_finite(&[]));
+    }
+
+    #[test]
+    #[should_panic(expected = "no shards")]
+    fn finite_flags_empty_panics() {
+        all_reduce_finite(&[]);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::sync::mpsc;
 use std::thread;
 
 use crate::config::ModelPreset;
+use crate::hostkernel::BufferPool;
 use crate::util::rng::Rng;
 
 /// One host-side batch, layout matching the artifact inputs:
@@ -24,6 +25,17 @@ pub struct Batch {
     pub labels: Vec<i32>,
     pub batch: usize,
     pub image_elems: usize,
+}
+
+impl Batch {
+    /// Return the backing buffers to the shared [`BufferPool`] once
+    /// the batch is packed into literals — the step loops cycle the
+    /// same buffers instead of allocating per step.
+    pub fn recycle(self) {
+        let pool = BufferPool::global();
+        pool.put_f32(self.images);
+        pool.put_i32(self.labels);
+    }
 }
 
 /// Deterministic class-conditional Gaussian image dataset.
@@ -87,8 +99,9 @@ impl SyntheticDataset {
                 .wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 .wrapping_add(index),
         );
-        let mut images = Vec::with_capacity(batch * self.image_elems);
-        let mut labels = Vec::with_capacity(batch);
+        let pool = BufferPool::global();
+        let mut images = pool.take_f32(batch * self.image_elems);
+        let mut labels = pool.take_i32(batch);
         for _ in 0..batch {
             let label = rng.below(self.num_classes as u64) as usize;
             labels.push(label as i32);
@@ -118,12 +131,15 @@ impl SyntheticDataset {
         let per = global_batch / num_shards;
         let img_lo = shard * per * self.image_elems;
         let img_hi = (shard + 1) * per * self.image_elems;
-        Batch {
-            images: global.images[img_lo..img_hi].to_vec(),
-            labels: global.labels[shard * per..(shard + 1) * per].to_vec(),
-            batch: per,
-            image_elems: self.image_elems,
-        }
+        let pool = BufferPool::global();
+        let mut images = pool.take_f32(per * self.image_elems);
+        images.extend_from_slice(&global.images[img_lo..img_hi]);
+        let mut labels = pool.take_i32(per);
+        labels.extend_from_slice(
+            &global.labels[shard * per..(shard + 1) * per],
+        );
+        global.recycle();
+        Batch { images, labels, batch: per, image_elems: self.image_elems }
     }
 }
 

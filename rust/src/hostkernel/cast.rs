@@ -1,0 +1,342 @@
+//! Batch f32 ↔ f16/bf16 casts: branchless bit-twiddling over `u32`
+//! lanes.
+//!
+//! The scalar converters in [`crate::numerics`] are the *semantic
+//! reference* — round-to-nearest-even, gradual underflow, saturation
+//! to ±inf — but they branch per element, which defeats both the
+//! auto-vectorizer and the branch predictor on mixed-magnitude
+//! gradient data.  The lane functions here compute every range's
+//! candidate (normal, subnormal, inf/nan) with straight-line integer
+//! arithmetic and select by mask, so one iteration is the same
+//! instruction sequence for every input; LLVM can unroll and
+//! vectorize the chunked loops, and large buffers additionally fan
+//! out over threads (a pure per-element map — bitwise identical for
+//! any thread count, see the module determinism contract).
+//!
+//! Bit-exactness against `F16::from_f32` / `Bf16::from_f32` /
+//! `.to_f32()` is enforced by `rust/tests/hostkernel_props.rs`
+//! (exhaustive over all 2^16 half patterns in the up-cast direction;
+//! every-exponent property sweeps plus directed specials — NaN
+//! payloads, ±inf, subnormals, both rounding-tie directions — in the
+//! down-cast direction).
+
+use super::{par_zip, thread_count};
+
+/// `-1` mask when `c` is true, `0` otherwise (branchless select).
+#[inline(always)]
+fn mask(c: bool) -> u32 {
+    0u32.wrapping_sub(c as u32)
+}
+
+/// f32 bits → f16 bits, round-to-nearest-even; bit-identical to
+/// [`crate::numerics::F16::from_f32`].
+#[inline(always)]
+pub fn f16_lane(x: u32) -> u16 {
+    let sign = (x >> 16) & 0x8000;
+    let ax = x & 0x7FFF_FFFF;
+
+    // Normal range [2^-14, 65536): rebias exponent by (127-15) and
+    // round the 13 dropped mantissa bits to nearest-even.  The
+    // round-up carry propagates into the exponent, which is exactly
+    // the RTNE behaviour at binade boundaries and at 65504→inf.
+    let base = (ax >> 13).wrapping_sub(112 << 10);
+    let rnd = ax & 0x1FFF;
+    let normal = base.wrapping_add(
+        rnd.wrapping_add(0x0FFF).wrapping_add(base & 1) >> 13,
+    );
+
+    // Subnormal range [2^-25, 2^-14): shift the 24-bit significand
+    // right by 14..=24 and round-to-nearest-even on the remainder.
+    // (Outside the range the shift expression is meaningless; the
+    // lane is masked out below.)
+    let exp32 = ax >> 23;
+    let m = (ax & 0x7F_FFFF) | 0x80_0000;
+    let shift = 126u32.wrapping_sub(exp32) & 31;
+    let man = m >> shift;
+    let round_mask = 1u32 << (shift.wrapping_sub(1) & 31);
+    let rem = m & (1u32 << shift).wrapping_sub(1);
+    let sub = man.wrapping_add(
+        rem.wrapping_add(round_mask)
+            .wrapping_sub(1)
+            .wrapping_add(man & 1)
+            >> shift,
+    );
+
+    // [65536, ∞]∪NaN: saturate to inf; NaN keeps its top payload bits
+    // and is quieted (0x0200), matching the scalar path.
+    let nan = mask(ax > 0x7F80_0000);
+    let big = 0x7C00 | (nan & (0x0200 | ((ax >> 13) & 0x03FF)));
+
+    let m_big = mask(ax >= 0x4780_0000);
+    let m_norm = mask(ax >= 0x3880_0000);
+    let m_sub = mask(ax >= 0x3300_0000);
+
+    let mag = (m_big & big)
+        | (!m_big & m_norm & normal)
+        | (!m_big & !m_norm & m_sub & sub);
+    (sign | (mag & 0xFFFF)) as u16
+}
+
+/// f16 bits → f32 bits, exact; bit-identical to
+/// [`crate::numerics::F16::to_f32`].
+///
+/// Subnormals are renormalized by an (exact) float multiply with
+/// 2^112 instead of a leading-zero count — straight-line and
+/// vectorizable.  Inf/NaN get their exponent forced to 0xFF and NaNs
+/// are quieted, matching the scalar path.
+#[inline(always)]
+pub fn f16_to_f32_lane(h: u16) -> u32 {
+    let h = h as u32;
+    let sign = (h & 0x8000) << 16;
+    let payload = (h & 0x7FFF) << 13;
+    let magic = f32::from_bits(0x7780_0000); // 2^112
+    let v = (f32::from_bits(payload) * magic).to_bits();
+    let infnan = mask((h & 0x7C00) == 0x7C00);
+    let nan = infnan & mask((h & 0x03FF) != 0);
+    sign | v | (infnan & 0x7F80_0000) | (nan & 0x0040_0000)
+}
+
+/// f32 bits → bf16 bits, round-to-nearest-even; bit-identical to
+/// [`crate::numerics::Bf16::from_f32`].
+#[inline(always)]
+pub fn bf16_lane(x: u32) -> u16 {
+    let ax = x & 0x7FFF_FFFF;
+    let upper = x >> 16;
+    let inc = (x & 0xFFFF).wrapping_add(0x7FFF).wrapping_add(upper & 1) >> 16;
+    let normal = upper.wrapping_add(inc);
+    let nanv = upper | 0x0040;
+    let nan = mask(ax > 0x7F80_0000);
+    ((nan & nanv) | (!nan & normal)) as u16
+}
+
+/// bf16 bits → f32 bits, exact (bf16 is f32's top half).
+#[inline(always)]
+pub fn bf16_to_f32_lane(b: u16) -> u32 {
+    (b as u32) << 16
+}
+
+/// Cast a whole f32 slice to f16 bit patterns.
+pub fn f32_to_f16_slice(src: &[f32], dst: &mut [u16]) {
+    par_zip(dst, src, thread_count(src.len()), |d, s| {
+        for (o, x) in d.iter_mut().zip(s) {
+            *o = f16_lane(x.to_bits());
+        }
+    });
+}
+
+/// Cast f16 bit patterns back to f32 (exact).
+pub fn f16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+    par_zip(dst, src, thread_count(src.len()), |d, s| {
+        for (o, h) in d.iter_mut().zip(s) {
+            *o = f32::from_bits(f16_to_f32_lane(*h));
+        }
+    });
+}
+
+/// Cast a whole f32 slice to bf16 bit patterns.
+pub fn f32_to_bf16_slice(src: &[f32], dst: &mut [u16]) {
+    par_zip(dst, src, thread_count(src.len()), |d, s| {
+        for (o, x) in d.iter_mut().zip(s) {
+            *o = bf16_lane(x.to_bits());
+        }
+    });
+}
+
+/// Cast bf16 bit patterns back to f32 (exact).
+pub fn bf16_to_f32_slice(src: &[u16], dst: &mut [f32]) {
+    par_zip(dst, src, thread_count(src.len()), |d, s| {
+        for (o, b) in d.iter_mut().zip(s) {
+            *o = f32::from_bits(bf16_to_f32_lane(*b));
+        }
+    });
+}
+
+/// Round-trip every element through f16 in place (fused down+up —
+/// one traversal, no staging buffer).
+pub fn quantize_f16_slice(xs: &mut [f32]) {
+    super::par_map(xs, thread_count(xs.len()), |c| {
+        for x in c {
+            *x = f32::from_bits(f16_to_f32_lane(f16_lane(x.to_bits())));
+        }
+    });
+}
+
+/// Round-trip every element through bf16 in place.
+pub fn quantize_bf16_slice(xs: &mut [f32]) {
+    super::par_map(xs, thread_count(xs.len()), |c| {
+        for x in c {
+            *x = f32::from_bits(bf16_to_f32_lane(bf16_lane(x.to_bits())));
+        }
+    });
+}
+
+/// Append `src` cast to little-endian f16 bytes onto `out`
+/// (checkpoint save path).
+pub fn f32_to_f16_bytes(src: &[f32], out: &mut Vec<u8>) {
+    out.reserve(src.len() * 2);
+    for x in src {
+        out.extend_from_slice(&f16_lane(x.to_bits()).to_le_bytes());
+    }
+}
+
+/// Append `src` cast to little-endian bf16 bytes onto `out`.
+pub fn f32_to_bf16_bytes(src: &[f32], out: &mut Vec<u8>) {
+    out.reserve(src.len() * 2);
+    for x in src {
+        out.extend_from_slice(&bf16_lane(x.to_bits()).to_le_bytes());
+    }
+}
+
+/// `(underflows, overflows)` a cast to f16 would produce: nonzero
+/// finite values that flush to ±0, and finite values that saturate to
+/// ±inf.  One branchless counting pass — the diagnostics kernel
+/// behind [`crate::numerics::underflow_fraction`] /
+/// [`crate::numerics::overflow_count`].
+pub fn f16_under_overflow_counts(xs: &[f32]) -> (usize, usize) {
+    count_under_overflow(xs, |bits| {
+        let h = f16_lane(bits) as u32;
+        ((h & 0x7FFF) == 0, (h & 0x7C00) == 0x7C00)
+    })
+}
+
+/// f16 counterpart for bf16 — see [`f16_under_overflow_counts`].
+pub fn bf16_under_overflow_counts(xs: &[f32]) -> (usize, usize) {
+    count_under_overflow(xs, |bits| {
+        let b = bf16_lane(bits) as u32;
+        ((b & 0x7FFF) == 0, (b & 0x7F80) == 0x7F80)
+    })
+}
+
+/// Shared counting loop: `classify(bits)` returns (is_zero_after_cast,
+/// is_nonfinite_after_cast) for the half format.  Integer counts are
+/// associative, so chunk partials sum deterministically in chunk
+/// order regardless of thread count.
+fn count_under_overflow<C>(xs: &[f32], classify: C) -> (usize, usize)
+where
+    C: Fn(u32) -> (bool, bool) + Send + Sync + Copy,
+{
+    let chunk_counts = |c: &[f32]| -> (usize, usize) {
+        let (mut under, mut over) = (0usize, 0usize);
+        for x in c {
+            let bits = x.to_bits();
+            let ax = bits & 0x7FFF_FFFF;
+            let (casts_to_zero, casts_to_nonfinite) = classify(bits);
+            under += (casts_to_zero && ax != 0) as usize;
+            over += (casts_to_nonfinite && ax < 0x7F80_0000) as usize;
+        }
+        (under, over)
+    };
+    let threads = thread_count(xs.len());
+    if threads <= 1 {
+        return chunk_counts(xs);
+    }
+    let chunk = xs.len().div_ceil(threads);
+    let partials: Vec<(usize, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = xs
+            .chunks(chunk)
+            .map(|c| s.spawn(move || chunk_counts(c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("count thread panicked"))
+            .collect()
+    });
+    partials
+        .into_iter()
+        .fold((0, 0), |(u, o), (cu, co)| (u + cu, o + co))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::{Bf16, F16};
+
+    #[test]
+    fn lane_matches_scalar_on_specials() {
+        for &f in &[
+            0.0f32,
+            -0.0,
+            1.0,
+            -2.0,
+            0.5,
+            65504.0,
+            65519.0,
+            65520.0,
+            65536.0,
+            1e9,
+            -1e9,
+            1e-8,
+            -1e-8,
+            3.1e-8,
+            2.9802322e-8,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            1.0 + 2f32.powi(-11),
+            1.0 + 3.0 * 2f32.powi(-11),
+        ] {
+            let bits = f.to_bits();
+            assert_eq!(
+                f16_lane(bits),
+                F16::from_f32(f).0,
+                "f16 lane mismatch for {f} ({bits:#010x})"
+            );
+            assert_eq!(
+                bf16_lane(bits),
+                Bf16::from_f32(f).0,
+                "bf16 lane mismatch for {f} ({bits:#010x})"
+            );
+        }
+    }
+
+    #[test]
+    fn upcast_exhaustive_matches_scalar() {
+        for h in 0u16..=u16::MAX {
+            assert_eq!(
+                f16_to_f32_lane(h),
+                F16(h).to_f32().to_bits(),
+                "f16→f32 mismatch at {h:#06x}"
+            );
+            assert_eq!(
+                bf16_to_f32_lane(h),
+                Bf16(h).to_f32().to_bits(),
+                "bf16→f32 mismatch at {h:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let mut half = vec![0u16; xs.len()];
+        let mut back = vec![0f32; xs.len()];
+        f32_to_f16_slice(&xs, &mut half);
+        f16_to_f32_slice(&half, &mut back);
+        for (x, b) in xs.iter().zip(&back) {
+            assert_eq!(F16::from_f32(*x).to_f32().to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn counting_kernels_match_reference() {
+        let xs = [1e-8f32, 1.0, 70000.0, 0.0, f32::INFINITY, f32::NAN, -1e-9];
+        let (u16_, o16) = f16_under_overflow_counts(&xs);
+        assert_eq!(u16_, 2); // 1e-8 and -1e-9 flush in f16
+        assert_eq!(o16, 1); // 70000 saturates in f16
+        let (ub, ob) = bf16_under_overflow_counts(&xs);
+        assert_eq!(ub, 0);
+        assert_eq!(ob, 0);
+    }
+
+    #[test]
+    fn bytes_are_little_endian_pairs() {
+        let mut out = Vec::new();
+        f32_to_f16_bytes(&[1.0, -2.0], &mut out);
+        assert_eq!(out, vec![0x00, 0x3C, 0x00, 0xC0]);
+        out.clear();
+        f32_to_bf16_bytes(&[1.0], &mut out);
+        assert_eq!(out, vec![0x80, 0x3F]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Vectorized host-compute kernels: the coordinator's hot byte paths.
+//!
+//! Mixed precision only pays when the conversion and scaling machinery
+//! is essentially free (Micikevicius et al. 2017; paper §2).  The
+//! compiled graphs get that for free from XLA; the *host* side of this
+//! reproduction — checkpoint casts, gradient scans, the DDP
+//! all-reduce, serve-batch packing — originally walked every buffer
+//! one `f32` at a time through branchy scalar code and allocated fresh
+//! vectors each step.  This module is the replacement substrate:
+//!
+//! * [`cast`] — whole-slice f32↔f16/bf16 conversions as branchless
+//!   bit-twiddling over `u32` lanes (auto-vectorizable chunked loops),
+//!   bit-identical to the scalar [`crate::numerics::F16`] /
+//!   [`crate::numerics::Bf16`] round-to-nearest-even implementations
+//!   (property-tested in `rust/tests/hostkernel_props.rs`).
+//! * [`scan`] — the fused gradient scan: unscale by `1/S`, accumulate
+//!   [`crate::numerics::TensorStats`] and the finiteness flag in one
+//!   traversal instead of an unscale pass followed by a stats pass.
+//! * [`reduce`] — chunk-parallel elementwise add/scale used by the
+//!   tree all-reduce in [`crate::collective`].
+//! * [`pool`] — a [`pool::BufferPool`] arena of reusable buffers so
+//!   steady-state step/serve loops stop allocating.
+//!
+//! # Determinism contract
+//!
+//! Every kernel here is **bitwise-deterministic across runs and across
+//! thread counts**:
+//!
+//! * Casts and elementwise add/scale are pure per-element maps — each
+//!   output element depends only on its own inputs, so any contiguous
+//!   chunking over any number of worker threads produces identical
+//!   bytes.
+//! * Reductions keep a *fixed association*.  The all-reduce keeps the
+//!   pairwise tree order over shards (`(g0+g1) + (g2+g3)`) and only
+//!   parallelizes the elementwise adds inside a pair, which preserves
+//!   per-element association exactly.  The fused gradient scan
+//!   accumulates its `f64` mean in strict element order on one thread
+//!   (a chunked mean would round differently), which is why it is the
+//!   one kernel without a threaded path — its win is halving the
+//!   number of traversals, not threading.
+//!
+//! Threaded paths engage only above [`PAR_MIN_ELEMS`] elements so
+//! small tensors never pay thread-spawn latency; the cut-over and the
+//! thread count change *which cores* compute an element, never *what*
+//! is computed.
+
+pub mod cast;
+pub mod pool;
+pub mod reduce;
+pub mod scan;
+
+pub use cast::{
+    bf16_to_f32_slice, f16_to_f32_slice, f32_to_bf16_slice,
+    f32_to_f16_slice, quantize_bf16_slice, quantize_f16_slice,
+};
+pub use pool::{BufferPool, PoolStats};
+pub use reduce::{add_assign, scale_in_place};
+pub use scan::{
+    fused_unscale_stats, fused_unscale_stats_tensors, stats_tensors,
+};
+
+/// Minimum slice length before a kernel considers fanning out over
+/// threads; below this, thread-spawn latency dwarfs the work.
+pub const PAR_MIN_ELEMS: usize = 1 << 18;
+
+/// Worker threads to use for `len` elements: 1 below the threshold,
+/// otherwise the hardware parallelism capped so every thread keeps at
+/// least half a threshold's worth of work.
+pub(crate) fn thread_count(len: usize) -> usize {
+    if len < PAR_MIN_ELEMS {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.min(8).min(len / (PAR_MIN_ELEMS / 2)).max(1)
+}
+
+/// Apply `f` to equal contiguous chunks of `dst`/`src` on `threads`
+/// scoped threads.  `f` must be a pure per-element map for the
+/// determinism contract to hold (it is, for every caller here).
+pub(crate) fn par_zip<A, B, F>(dst: &mut [A], src: &[B], threads: usize, f: F)
+where
+    A: Send,
+    B: Sync,
+    F: Fn(&mut [A], &[B]) + Send + Sync + Copy,
+{
+    assert_eq!(dst.len(), src.len(), "par_zip length mismatch");
+    if threads <= 1 || dst.len() < 2 {
+        f(dst, src);
+        return;
+    }
+    let chunk = dst.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (d, sr) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
+            s.spawn(move || f(d, sr));
+        }
+    });
+}
+
+/// In-place variant of [`par_zip`] for unary per-element maps.
+pub(crate) fn par_map<A, F>(xs: &mut [A], threads: usize, f: F)
+where
+    A: Send,
+    F: Fn(&mut [A]) + Send + Sync + Copy,
+{
+    if threads <= 1 || xs.len() < 2 {
+        f(xs);
+        return;
+    }
+    let chunk = xs.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for c in xs.chunks_mut(chunk) {
+            s.spawn(move || f(c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_small_is_one() {
+        assert_eq!(thread_count(0), 1);
+        assert_eq!(thread_count(PAR_MIN_ELEMS - 1), 1);
+    }
+
+    #[test]
+    fn thread_count_large_bounded() {
+        let t = thread_count(1 << 24);
+        assert!(t >= 1 && t <= 8);
+    }
+
+    #[test]
+    fn par_zip_covers_every_element() {
+        for threads in 1..=5 {
+            let mut dst = vec![0u32; 1000];
+            let src: Vec<u32> = (0..1000).collect();
+            par_zip(&mut dst, &src, threads, |d, s| {
+                for (x, y) in d.iter_mut().zip(s) {
+                    *x = y + 1;
+                }
+            });
+            assert!(dst.iter().enumerate().all(|(i, &x)| x == i as u32 + 1));
+        }
+    }
+
+    #[test]
+    fn par_map_covers_every_element() {
+        for threads in 1..=5 {
+            let mut xs = vec![1u32; 777];
+            par_map(&mut xs, threads, |c| {
+                for x in c {
+                    *x += 1;
+                }
+            });
+            assert!(xs.iter().all(|&x| x == 2));
+        }
+    }
+}

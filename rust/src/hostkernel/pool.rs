@@ -1,0 +1,233 @@
+//! Buffer pool: reusable host buffers for steady-state loops.
+//!
+//! The DDP step loop, the checkpoint writer and the serve batcher all
+//! stage data through short-lived `Vec`s — per step, per leaf, per
+//! batch.  Those allocations are individually cheap but recur at
+//! request/step rate and fragment the heap under sustained load.  The
+//! [`BufferPool`] is a trivially simple arena: typed stacks of
+//! retired buffers, handed back out *empty but with their capacity
+//! intact*, so a loop that cycles same-sized buffers stops touching
+//! the allocator after warm-up.
+//!
+//! Buffers carry their natural element alignment (4 bytes for
+//! f32/i32, 2 for u16) — exactly what the chunked hostkernel loops
+//! and `Literal::create_from_shape_and_untyped_data` require.
+//!
+//! `take_*` returns an **empty** vector with at least the requested
+//! capacity (callers push/extend into it); `put_*` retires a buffer
+//! for reuse.  The pool is `Mutex`-guarded and shared freely across
+//! threads; each stack is capped so a burst cannot pin unbounded
+//! memory.
+
+use std::sync::{Mutex, OnceLock};
+
+/// Retired buffers kept per type — beyond this, returned buffers are
+/// simply dropped.
+const MAX_POOLED: usize = 64;
+
+/// Largest single buffer the pool will retain (bytes).  Anything
+/// bigger is dropped on `put` so a burst of huge buffers cannot pin
+/// unbounded memory in the process-global pool for the rest of the
+/// process lifetime.  64 MiB comfortably covers the largest steady
+/// buffers in the repo (a vit_base serve bucket of 64 padded 224²
+/// images ≈ 38 MiB) while bounding the worst case.
+const MAX_POOLED_BYTES: usize = 64 << 20;
+
+/// Occupancy/traffic counters (observability for the benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// `take` calls satisfied by a recycled buffer.
+    pub hits: u64,
+    /// `take` calls that had to allocate fresh.
+    pub misses: u64,
+    /// Buffers accepted back by `put`.
+    pub recycled: u64,
+}
+
+#[derive(Default)]
+struct Shelf<T> {
+    bufs: Vec<Vec<T>>,
+}
+
+impl<T> Shelf<T> {
+    fn take(&mut self, capacity: usize, stats: &mut PoolStats) -> Vec<T> {
+        // Last-in first-out keeps the hottest (cache-warm) buffer on
+        // top; capacity is grown by the caller's pushes if short.
+        match self.bufs.pop() {
+            Some(mut b) => {
+                stats.hits += 1;
+                b.clear();
+                if b.capacity() < capacity {
+                    b.reserve(capacity - b.len());
+                }
+                b
+            }
+            None => {
+                stats.misses += 1;
+                Vec::with_capacity(capacity)
+            }
+        }
+    }
+
+    fn put(&mut self, buf: Vec<T>, stats: &mut PoolStats) {
+        let bytes = buf.capacity() * std::mem::size_of::<T>();
+        if bytes > 0 && bytes <= MAX_POOLED_BYTES && self.bufs.len() < MAX_POOLED
+        {
+            stats.recycled += 1;
+            self.bufs.push(buf);
+        }
+    }
+}
+
+struct Inner {
+    f32s: Shelf<f32>,
+    i32s: Shelf<i32>,
+    u16s: Shelf<u16>,
+    bytes: Shelf<u8>,
+    stats: PoolStats,
+}
+
+/// Thread-safe arena of reusable `Vec` buffers; see the module docs.
+pub struct BufferPool {
+    inner: Mutex<Inner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            inner: Mutex::new(Inner {
+                f32s: Shelf::default(),
+                i32s: Shelf::default(),
+                u16s: Shelf::default(),
+                bytes: Shelf::default(),
+                stats: PoolStats::default(),
+            }),
+        }
+    }
+
+    /// The process-wide pool the trainers, checkpointing and serve
+    /// paths share.
+    pub fn global() -> &'static BufferPool {
+        static GLOBAL: OnceLock<BufferPool> = OnceLock::new();
+        GLOBAL.get_or_init(BufferPool::new)
+    }
+
+    pub fn take_f32(&self, capacity: usize) -> Vec<f32> {
+        let g = &mut *self.inner.lock().unwrap();
+        g.f32s.take(capacity, &mut g.stats)
+    }
+
+    pub fn put_f32(&self, buf: Vec<f32>) {
+        let g = &mut *self.inner.lock().unwrap();
+        g.f32s.put(buf, &mut g.stats);
+    }
+
+    pub fn take_i32(&self, capacity: usize) -> Vec<i32> {
+        let g = &mut *self.inner.lock().unwrap();
+        g.i32s.take(capacity, &mut g.stats)
+    }
+
+    pub fn put_i32(&self, buf: Vec<i32>) {
+        let g = &mut *self.inner.lock().unwrap();
+        g.i32s.put(buf, &mut g.stats);
+    }
+
+    pub fn take_u16(&self, capacity: usize) -> Vec<u16> {
+        let g = &mut *self.inner.lock().unwrap();
+        g.u16s.take(capacity, &mut g.stats)
+    }
+
+    pub fn put_u16(&self, buf: Vec<u16>) {
+        let g = &mut *self.inner.lock().unwrap();
+        g.u16s.put(buf, &mut g.stats);
+    }
+
+    pub fn take_u8(&self, capacity: usize) -> Vec<u8> {
+        let g = &mut *self.inner.lock().unwrap();
+        g.bytes.take(capacity, &mut g.stats)
+    }
+
+    pub fn put_u8(&self, buf: Vec<u8>) {
+        let g = &mut *self.inner.lock().unwrap();
+        g.bytes.put(buf, &mut g.stats);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_empty_with_capacity() {
+        let pool = BufferPool::new();
+        let b = pool.take_f32(100);
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 100);
+    }
+
+    #[test]
+    fn recycles_capacity() {
+        let pool = BufferPool::new();
+        let mut b = pool.take_f32(0);
+        b.extend_from_slice(&[1.0; 500]);
+        let cap = b.capacity();
+        pool.put_f32(b);
+        let again = pool.take_f32(10);
+        assert!(again.is_empty());
+        assert!(again.capacity() >= cap.min(500));
+        let s = pool.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.recycled, 1);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_dropped() {
+        let pool = BufferPool::new();
+        pool.put_u8(Vec::new());
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn shelves_are_typed() {
+        let pool = BufferPool::new();
+        let mut b = pool.take_i32(4);
+        b.push(7);
+        pool.put_i32(b);
+        // u16 shelf is independent: this take must miss.
+        let _ = pool.take_u16(4);
+        let s = pool.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 0);
+    }
+
+    #[test]
+    fn pool_cap_bounds_retention() {
+        let pool = BufferPool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            pool.put_u8(vec![0u8; 8]);
+        }
+        assert_eq!(pool.stats().recycled, MAX_POOLED as u64);
+    }
+
+    #[test]
+    fn oversized_buffers_are_not_retained() {
+        let pool = BufferPool::new();
+        pool.put_u8(Vec::with_capacity(MAX_POOLED_BYTES + 1));
+        assert_eq!(pool.stats().recycled, 0);
+        pool.put_f32(Vec::with_capacity(
+            MAX_POOLED_BYTES / std::mem::size_of::<f32>() + 1,
+        ));
+        assert_eq!(pool.stats().recycled, 0);
+    }
+}

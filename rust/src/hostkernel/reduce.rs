@@ -1,0 +1,83 @@
+//! Chunk-parallel elementwise add/scale — the inner kernels of the
+//! tree all-reduce in [`crate::collective`].
+//!
+//! Both operations are pure per-element maps: `dst[i] += src[i]` and
+//! `xs[i] *= k` depend only on index `i`, so splitting a slice into
+//! contiguous chunk ranges across worker threads changes *where* each
+//! element is computed, never *what* — the result is bitwise
+//! identical for every thread count (asserted by
+//! `rust/tests/hostkernel_props.rs`).  The pairwise association of
+//! the all-reduce tree lives one level up, in
+//! [`crate::collective::all_reduce_mean`], and is untouched by this
+//! parallelism.
+
+use super::{par_map, par_zip, thread_count};
+
+/// `dst[i] += src[i]`, fanning out over threads for large slices.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    add_assign_threads(dst, src, thread_count(dst.len()));
+}
+
+/// [`add_assign`] with an explicit thread count (tests pin this to
+/// prove bitwise determinism across counts).
+pub fn add_assign_threads(dst: &mut [f32], src: &[f32], threads: usize) {
+    assert_eq!(dst.len(), src.len(), "add_assign length mismatch");
+    par_zip(dst, src, threads, |d, s| {
+        for (x, y) in d.iter_mut().zip(s) {
+            *x += *y;
+        }
+    });
+}
+
+/// `xs[i] *= k`, fanning out over threads for large slices.
+pub fn scale_in_place(xs: &mut [f32], k: f32) {
+    scale_in_place_threads(xs, k, thread_count(xs.len()));
+}
+
+/// [`scale_in_place`] with an explicit thread count.
+pub fn scale_in_place_threads(xs: &mut [f32], k: f32, threads: usize) {
+    par_map(xs, threads, |c| {
+        for x in c {
+            *x *= k;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn add_matches_scalar_for_any_thread_count() {
+        let mut rng = Rng::new(11);
+        let a: Vec<f32> = (0..4097).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..4097).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want = a.clone();
+        add_assign_threads(&mut want, &b, 1);
+        for threads in 2..=5 {
+            let mut got = a.clone();
+            add_assign_threads(&mut got, &b, threads);
+            assert!(
+                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "thread count {threads} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_matches_scalar_for_any_thread_count() {
+        let mut rng = Rng::new(12);
+        let a: Vec<f32> = (0..999).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+        let mut want = a.clone();
+        scale_in_place_threads(&mut want, 0.25, 1);
+        for threads in 2..=5 {
+            let mut got = a.clone();
+            scale_in_place_threads(&mut got, 0.25, threads);
+            assert!(want
+                .iter()
+                .zip(&got)
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Fused gradient scan: unscale + statistics + finiteness in one
+//! traversal.
+//!
+//! The paper's §2.1 recipe needs three things from every gradient
+//! buffer after the backward pass: the gradients divided by the loss
+//! scale, a finiteness verdict, and (in diagnostics mode) magnitude
+//! statistics.  Done naively that is an unscale pass followed by a
+//! [`crate::numerics::tensor_stats`] pass — two full traversals of a
+//! buffer that usually misses cache.  This kernel does both in one
+//! pass, classifying each element from its bit pattern instead of
+//! through `is_nan`/`is_infinite` calls.
+//!
+//! # Exactness
+//!
+//! The result is **bit-identical** to `unscale-then-tensor_stats`
+//! (property-tested): the per-element operations are the same f32
+//! multiply and f32 comparisons in the same element order, and the
+//! `mean_abs` numerator accumulates in `f64` in strict element order
+//! on a single thread.  That sequential accumulation is deliberate —
+//! chunked partial sums would round differently — so this is the one
+//! hostkernel without a threaded path; its win is one traversal
+//! instead of two (see the module determinism contract).
+
+use crate::numerics::TensorStats;
+
+/// Streaming accumulator matching [`crate::numerics::tensor_stats`]'s
+/// update rules exactly; feed slices in order, then [`finish`].
+///
+/// [`finish`]: StatsAcc::finish
+#[derive(Debug, Clone)]
+pub struct StatsAcc {
+    count: usize,
+    min_abs_nonzero: f32,
+    max_abs: f32,
+    sum_abs: f64,
+    zeros: usize,
+    infs: usize,
+    nans: usize,
+}
+
+impl Default for StatsAcc {
+    fn default() -> Self {
+        StatsAcc {
+            count: 0,
+            min_abs_nonzero: f32::INFINITY,
+            max_abs: 0.0,
+            sum_abs: 0.0,
+            zeros: 0,
+            infs: 0,
+            nans: 0,
+        }
+    }
+}
+
+impl StatsAcc {
+    /// Unscale `xs` by `inv_scale` in place and fold the results into
+    /// the running statistics — one traversal.
+    pub fn feed_unscale(&mut self, xs: &mut [f32], inv_scale: f32) {
+        self.count += xs.len();
+        for x in xs.iter_mut() {
+            let y = *x * inv_scale;
+            *x = y;
+            self.fold(y);
+        }
+    }
+
+    /// Fold a read-only slice into the running statistics (no
+    /// unscale, no writes) — for stats over a buffer that must stay
+    /// untouched, e.g. the reduced gradient right before the
+    /// optimizer consumes it.
+    pub fn feed(&mut self, xs: &[f32]) {
+        self.count += xs.len();
+        for &y in xs {
+            self.fold(y);
+        }
+    }
+
+    #[inline(always)]
+    fn fold(&mut self, y: f32) {
+        let ax = y.to_bits() & 0x7FFF_FFFF;
+        if ax >= 0x7F80_0000 {
+            // non-finite: rare, so one predictable branch
+            if ax == 0x7F80_0000 {
+                self.infs += 1;
+            } else {
+                self.nans += 1;
+            }
+            return;
+        }
+        let a = f32::from_bits(ax); // |y|
+        if ax == 0 {
+            self.zeros += 1;
+        } else if a < self.min_abs_nonzero {
+            self.min_abs_nonzero = a;
+        }
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+        self.sum_abs += a as f64;
+    }
+
+    /// Close out into a [`TensorStats`] (same fields `tensor_stats`
+    /// would have produced over the concatenation of the fed slices).
+    pub fn finish(self) -> TensorStats {
+        let mean_abs = if self.count > 0 {
+            (self.sum_abs / self.count as f64) as f32
+        } else {
+            0.0
+        };
+        TensorStats {
+            count: self.count,
+            finite: self.infs == 0 && self.nans == 0,
+            min_abs_nonzero: self.min_abs_nonzero,
+            max_abs: self.max_abs,
+            mean_abs,
+            zeros: self.zeros,
+            infs: self.infs,
+            nans: self.nans,
+        }
+    }
+}
+
+/// Unscale `xs` by `inv_scale` in place and return its statistics —
+/// bit-identical to `for x in xs { *x *= inv_scale }` followed by
+/// [`crate::numerics::tensor_stats`], in one traversal.
+pub fn fused_unscale_stats(xs: &mut [f32], inv_scale: f32) -> TensorStats {
+    let mut acc = StatsAcc::default();
+    acc.feed_unscale(xs, inv_scale);
+    acc.finish()
+}
+
+/// Multi-tensor variant: unscale every tensor in place and return the
+/// statistics of their concatenation (the whole-gradient view the DDP
+/// trainer and the loss-scaling diagnostics want).
+pub fn fused_unscale_stats_tensors(
+    tensors: &mut [Vec<f32>],
+    inv_scale: f32,
+) -> TensorStats {
+    let mut acc = StatsAcc::default();
+    for t in tensors.iter_mut() {
+        acc.feed_unscale(t, inv_scale);
+    }
+    acc.finish()
+}
+
+/// Read-only multi-tensor statistics — same single-traversal
+/// accumulator without the unscale/write (identical result to
+/// [`fused_unscale_stats_tensors`] with `inv_scale = 1.0`, but the
+/// buffers are guaranteed untouched).
+pub fn stats_tensors(tensors: &[Vec<f32>]) -> TensorStats {
+    let mut acc = StatsAcc::default();
+    for t in tensors {
+        acc.feed(t);
+    }
+    acc.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::tensor_stats;
+
+    fn reference(xs: &mut [f32], inv: f32) -> TensorStats {
+        for x in xs.iter_mut() {
+            *x *= inv;
+        }
+        tensor_stats(xs)
+    }
+
+    fn assert_stats_eq(a: &TensorStats, b: &TensorStats) {
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.finite, b.finite);
+        assert_eq!(
+            a.min_abs_nonzero.to_bits(),
+            b.min_abs_nonzero.to_bits()
+        );
+        assert_eq!(a.max_abs.to_bits(), b.max_abs.to_bits());
+        assert_eq!(a.mean_abs.to_bits(), b.mean_abs.to_bits());
+        assert_eq!(a.zeros, b.zeros);
+        assert_eq!(a.infs, b.infs);
+        assert_eq!(a.nans, b.nans);
+    }
+
+    #[test]
+    fn matches_reference_with_specials() {
+        let base = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -2.5,
+            1e-38,
+            -3e38,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            65504.0,
+            5.9e-8,
+        ];
+        for inv in [1.0f32, 0.5, 2.0, 1.0 / 32768.0] {
+            let mut a = base;
+            let mut b = base;
+            let got = fused_unscale_stats(&mut a, inv);
+            let want = reference(&mut b, inv);
+            assert_eq!(a.map(f32::to_bits), b.map(f32::to_bits));
+            assert_stats_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn empty_matches_reference() {
+        let got = fused_unscale_stats(&mut [], 0.5);
+        let want = tensor_stats(&[]);
+        assert_stats_eq(&got, &want);
+    }
+
+    #[test]
+    fn read_only_feed_matches_tensor_stats() {
+        let tensors = vec![
+            vec![1.0f32, -2.0, f32::INFINITY],
+            vec![0.0, -0.0, 1e-40, f32::NAN],
+        ];
+        let flat: Vec<f32> = tensors.iter().flatten().copied().collect();
+        let got = stats_tensors(&tensors);
+        let want = tensor_stats(&flat);
+        assert_stats_eq(&got, &want);
+        // buffers untouched by construction (shared reference), and
+        // the result agrees with the mutating scan at inv=1.
+        let mut mutated = tensors.clone();
+        let also = fused_unscale_stats_tensors(&mut mutated, 1.0);
+        assert_stats_eq(&got, &also);
+    }
+
+    #[test]
+    fn multi_tensor_equals_concatenation() {
+        let mut tensors = vec![vec![1.0f32, -2.0], vec![0.0, 3e-39, 7.5]];
+        let mut flat: Vec<f32> =
+            tensors.iter().flatten().copied().collect();
+        let got = fused_unscale_stats_tensors(&mut tensors, 0.25);
+        let want = reference(&mut flat, 0.25);
+        assert_stats_eq(&got, &want);
+    }
+}

@@ -13,6 +13,11 @@
 //!   mini property-testing (no external crates are available offline).
 //! * [`numerics`] — software IEEE binary16 / bfloat16, the host-side
 //!   mirror of every cast the compiled graphs perform.
+//! * [`hostkernel`] — vectorized host-compute layer: branchless batch
+//!   f32↔f16/bf16 casts, the fused unscale+stats gradient scan,
+//!   chunk-parallel elementwise add/scale for the all-reduce, and the
+//!   steady-state [`hostkernel::BufferPool`].  Bitwise-deterministic
+//!   across runs and thread counts (see its module docs).
 //! * [`scaling`] — the dynamic loss-scaling controller (paper §3.3)
 //!   for the data-parallel mode; parity-tested against the Python
 //!   implementation.
@@ -44,6 +49,7 @@ pub mod collective;
 pub mod config;
 pub mod data;
 pub mod hlo;
+pub mod hostkernel;
 pub mod memmodel;
 pub mod metrics;
 pub mod numerics;

@@ -77,7 +77,7 @@ impl FloatFormat {
 
 /// Statistics of a gradient/parameter buffer, computed in one pass —
 /// used by the trainer's logging and the loss-scaling diagnostics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TensorStats {
     pub count: usize,
     pub finite: bool,
@@ -127,22 +127,31 @@ pub fn tensor_stats(xs: &[f32]) -> TensorStats {
 
 /// Fraction of elements a cast to `fmt` would flush to zero — the
 /// underflow diagnostic behind the paper's Fig. 1 motivation.
+/// Counts via the batch-cast kernels ([`crate::hostkernel::cast`]),
+/// which are bit-identical to the scalar [`FloatFormat::quantize`].
 pub fn underflow_fraction(xs: &[f32], fmt: FloatFormat) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let lost = xs
-        .iter()
-        .filter(|&&x| x != 0.0 && fmt.quantize(x) == 0.0)
-        .count();
+    let (lost, _over) = under_overflow_counts(xs, fmt);
     lost as f64 / xs.len() as f64
 }
 
-/// Would any element overflow to ±inf when cast to `fmt`?
+/// How many finite elements overflow to ±inf when cast to `fmt`?
+/// Batch-kernel-backed like [`underflow_fraction`].
 pub fn overflow_count(xs: &[f32], fmt: FloatFormat) -> usize {
-    xs.iter()
-        .filter(|&&x| x.is_finite() && !fmt.quantize(x).is_finite())
-        .count()
+    under_overflow_counts(xs, fmt).1
+}
+
+/// One fused counting pass over `xs`: (nonzero values that flush to
+/// ±0, finite values that saturate to ±inf) under a cast to `fmt`.
+pub fn under_overflow_counts(xs: &[f32], fmt: FloatFormat) -> (usize, usize) {
+    match fmt {
+        // f32→f32 is the identity: nothing flushes or saturates.
+        FloatFormat::F32 => (0, 0),
+        FloatFormat::F16 => crate::hostkernel::cast::f16_under_overflow_counts(xs),
+        FloatFormat::Bf16 => crate::hostkernel::cast::bf16_under_overflow_counts(xs),
+    }
 }
 
 #[cfg(test)]

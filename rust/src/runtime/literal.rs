@@ -106,12 +106,72 @@ pub fn read_scalar_pred(lit: &Literal) -> Result<bool> {
     Ok(as_i32.get_first_element::<i32>().context("read pred scalar")? != 0)
 }
 
-/// Raw bytes of an f32/s32 literal (checkpoint save path — all train
-/// state is f32/s32 by the artifact contract).
+/// Raw bytes of a literal (checkpoint save path).
+///
+/// Covers every dtype [`lit_from_bytes`] can restore, so save and
+/// restore are symmetric — mixed-precision checkpoints with f16/bf16
+/// leaves round-trip instead of bailing on save.
 pub fn literal_bytes(lit: &Literal) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    literal_bytes_into(lit, &mut out)?;
+    Ok(out)
+}
+
+/// [`literal_bytes`] into a caller-owned buffer (cleared first) — the
+/// checkpoint writer cycles one pooled buffer across all leaves.
+///
+/// Half-precision leaves go through a (convert → f32 → batch
+/// down-cast) staging path because this PJRT binding exposes no
+/// native 16-bit host type: exact for every finite and infinite
+/// value (the round-trip is bit-exact — exhaustively tested in
+/// `numerics::f16`), while NaN payloads keep their top bits but come
+/// back quieted.  Integer leaves stage through s32, which preserves
+/// bits for every width ≤ 32 (XLA integer converts are mod-2^n).
+pub fn literal_bytes_into(lit: &Literal, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
     match lit.ty().context("literal type")? {
-        ElementType::F32 => Ok(as_bytes(&lit.to_vec::<f32>()?).to_vec()),
-        ElementType::S32 => Ok(as_bytes(&lit.to_vec::<i32>()?).to_vec()),
-        other => bail!("checkpoint supports f32/s32 leaves, got {other:?}"),
+        ElementType::F32 => {
+            out.extend_from_slice(as_bytes(&lit.to_vec::<f32>()?));
+        }
+        ElementType::S32 => {
+            out.extend_from_slice(as_bytes(&lit.to_vec::<i32>()?));
+        }
+        ElementType::F16 => {
+            let wide = lit
+                .convert(xla::PrimitiveType::F32)
+                .context("convert f16→f32")?
+                .to_vec::<f32>()?;
+            crate::hostkernel::cast::f32_to_f16_bytes(&wide, out);
+        }
+        ElementType::Bf16 => {
+            let wide = lit
+                .convert(xla::PrimitiveType::F32)
+                .context("convert bf16→f32")?
+                .to_vec::<f32>()?;
+            crate::hostkernel::cast::f32_to_bf16_bytes(&wide, out);
+        }
+        ElementType::U32 => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert u32→s32")?
+                .to_vec::<i32>()?;
+            out.extend_from_slice(as_bytes(&v));
+        }
+        ElementType::S8 | ElementType::U8 => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert 8-bit→s32")?
+                .to_vec::<i32>()?;
+            out.extend(v.iter().map(|&x| x as u8));
+        }
+        ElementType::Pred => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert pred→s32")?
+                .to_vec::<i32>()?;
+            out.extend(v.iter().map(|&x| (x != 0) as u8));
+        }
+        other => bail!("checkpoint save: unsupported dtype {other:?}"),
     }
+    Ok(())
 }

@@ -19,8 +19,9 @@ pub mod literal;
 pub mod store;
 
 pub use literal::{
-    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, read_f32, read_i32,
-    read_scalar_f32, read_scalar_i32, read_scalar_pred,
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, literal_bytes,
+    literal_bytes_into, read_f32, read_i32, read_scalar_f32,
+    read_scalar_i32, read_scalar_pred,
 };
 pub use store::{Artifact, ArtifactStore};
 

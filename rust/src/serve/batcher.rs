@@ -121,6 +121,17 @@ impl FormedBatch {
     pub fn padded_images(&self) -> Vec<f32> {
         let elems = self.requests[0].image.len();
         let mut flat = Vec::with_capacity(self.bucket * elems);
+        self.padded_images_into(&mut flat);
+        flat
+    }
+
+    /// [`Self::padded_images`] into a caller-owned buffer (cleared
+    /// first) — the worker loop cycles one pooled buffer across
+    /// batches instead of allocating per dispatch.
+    pub fn padded_images_into(&self, flat: &mut Vec<f32>) {
+        flat.clear();
+        let elems = self.requests[0].image.len();
+        flat.reserve(self.bucket * elems);
         for r in &self.requests {
             debug_assert_eq!(r.image.len(), elems);
             flat.extend_from_slice(&r.image);
@@ -129,7 +140,6 @@ impl FormedBatch {
         for _ in self.requests.len()..self.bucket {
             flat.extend_from_slice(last);
         }
-        flat
     }
 }
 

@@ -66,8 +66,12 @@ pub fn worker_loop<E: BatchExecutor>(
     cfg: &BatcherConfig,
 ) -> Result<WorkerReport> {
     let mut rep = WorkerReport::new(worker);
+    // One pooled pack buffer per worker, cycled across batches — the
+    // padding/pack path allocates nothing in steady state.
+    let pool = crate::hostkernel::BufferPool::global();
+    let mut images = pool.take_f32(0);
     while let Some(batch) = queue.next_batch(cfg) {
-        let images = batch.padded_images();
+        batch.padded_images_into(&mut images);
         let t0 = Instant::now();
         exec.execute(&images, batch.bucket).with_context(|| {
             format!("worker {worker}: batch of {}", batch.bucket)
@@ -84,6 +88,7 @@ pub fn worker_loop<E: BatchExecutor>(
             rep.requests += 1;
         }
     }
+    pool.put_f32(images);
     Ok(rep)
 }
 

@@ -8,17 +8,21 @@
 //!           u64 dims[rank] | u64 byte_len | bytes
 //! ```
 //!
-//! Leaves are the fused trainer's state literals in manifest order
-//! (all f32/s32 by the artifact contract); restore validates name,
-//! dtype and shape against the target manifest so stale checkpoints
-//! fail loudly instead of silently reshaping.
+//! Leaves are the fused trainer's state literals in manifest order.
+//! Save and restore are symmetric across every manifest dtype
+//! (f32/s32 fast path; f16/bf16/u32/s8/u8/pred via the staging casts
+//! in `runtime::literal`), so mixed-precision state round-trips.
+//! Restore validates name, dtype and shape against the target
+//! manifest so stale checkpoints fail loudly instead of silently
+//! reshaping.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
+use crate::hostkernel::BufferPool;
 use crate::pytree::{DType, LeafSpec};
-use crate::runtime::literal::{lit_from_bytes, literal_bytes};
+use crate::runtime::literal::{lit_from_bytes, literal_bytes_into};
 
 const MAGIC: &[u8; 8] = b"MPXCKPT1";
 
@@ -73,6 +77,10 @@ pub fn save(
         f.write_all(MAGIC)?;
         f.write_all(&step.to_le_bytes())?;
         f.write_all(&(specs.len() as u32).to_le_bytes())?;
+        // One pooled staging buffer cycles through every leaf, so the
+        // periodic checkpoint stops allocating per leaf per save.
+        let pool = BufferPool::global();
+        let mut bytes = pool.take_u8(0);
         for (spec, lit) in specs.iter().zip(leaves) {
             let name = spec.name.as_bytes();
             f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -82,11 +90,12 @@ pub fn save(
             for &d in &spec.shape {
                 f.write_all(&(d as u64).to_le_bytes())?;
             }
-            let bytes = literal_bytes(lit)
+            literal_bytes_into(lit, &mut bytes)
                 .with_context(|| format!("serialize leaf {}", spec.name))?;
             f.write_all(&(bytes.len() as u64).to_le_bytes())?;
             f.write_all(&bytes)?;
         }
+        pool.put_u8(bytes);
     }
     std::fs::rename(&tmp, path).context("atomic rename")?;
     Ok(())

@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::collective::{all_reduce_finite, all_reduce_mean, mean_loss};
 use crate::config::TrainConfig;
 use crate::data::SyntheticDataset;
+use crate::hostkernel::scan::stats_tensors;
 use crate::metrics::{RunMetrics, StepRecord};
 use crate::optim::{AdamW, AdamWConfig};
 use crate::pytree::DType;
@@ -175,6 +176,9 @@ impl DataParallelTrainer {
                                 &batch.images,
                             )?);
                             inputs.push(lit_i32(&[b], &batch.labels)?);
+                            // Packed into literals — buffers go back
+                            // to the pool for the next step's batch.
+                            batch.recycle();
 
                             let out =
                                 artifact.exe.execute_leaves(&inputs)?;
@@ -212,7 +216,38 @@ impl DataParallelTrainer {
         let grads_finite = all_reduce_finite(&finites);
         if grads_finite {
             all_reduce_mean(&mut grads);
+            let log_every = self.config.log_every.max(1);
+            if (self.step_index + 1) % log_every == 0 {
+                // Gradient health in one read-only fused traversal of
+                // the reduced gradient (already unscaled in-graph);
+                // the buffer reaches the optimizer untouched.
+                let s = stats_tensors(&grads[0]);
+                eprintln!(
+                    "[ddp x{}] grad health: |g| in [{:.3e}, {:.3e}] \
+                     mean {:.3e}, {:.1}% zero (scale {:.0})",
+                    self.num_shards,
+                    s.min_abs_nonzero,
+                    s.max_abs,
+                    s.mean_abs,
+                    100.0 * s.zeros as f64 / s.count.max(1) as f64,
+                    scale,
+                );
+            }
             self.optimizer.update(&mut self.masters, &grads[0]);
+        } else {
+            // Overflow step: one fused scan per poisoned shard says
+            // *which* shard blew up and how — the §2.1 loss-scaling
+            // diagnostic (the buffers are discarded afterwards).
+            for (shard, g) in grads.iter().enumerate() {
+                if !finites[shard] {
+                    let s = stats_tensors(g);
+                    eprintln!(
+                        "[ddp x{}] overflow in shard {shard}: {} inf, \
+                         {} nan of {} grads (scale {:.0} → backing off)",
+                        self.num_shards, s.infs, s.nans, s.count, scale,
+                    );
+                }
+            }
         }
         let applied = self.scaler.adjust(grads_finite);
         debug_assert_eq!(applied, grads_finite);

@@ -195,6 +195,9 @@ impl FusedTrainer {
         for _ in 0..steps {
             let batch = prefetcher.next();
             let rec = self.step(&batch)?;
+            // Hand the batch buffers back for the prefetcher's next
+            // generation — the loop allocates nothing in steady state.
+            batch.recycle();
             if rec.step % log_every == 0 || rec.step == 1 {
                 eprintln!(
                     "[train] step {:>5}  loss {:>8.4}  scale {:>9.0}  {}{}",

@@ -81,9 +81,13 @@ impl BenchOpts {
         BenchOpts { warmup_iters: 1, max_iters: 5, max_seconds: 5.0 }
     }
 
-    /// Honour `MPX_BENCH_FULL=1` for longer, more stable runs.
+    /// Honour `MPX_BENCH_FULL=1` for longer, more stable runs and
+    /// `MPX_BENCH_SMOKE=1` for the CI smoke job (compile + a couple
+    /// of iterations, just enough to emit the report files).
     pub fn from_env(default: BenchOpts) -> BenchOpts {
-        if std::env::var("MPX_BENCH_FULL").as_deref() == Ok("1") {
+        if std::env::var("MPX_BENCH_SMOKE").as_deref() == Ok("1") {
+            BenchOpts { warmup_iters: 1, max_iters: 2, max_seconds: 2.0 }
+        } else if std::env::var("MPX_BENCH_FULL").as_deref() == Ok("1") {
             BenchOpts {
                 warmup_iters: default.warmup_iters.max(3),
                 max_iters: default.max_iters * 3,
@@ -155,6 +159,66 @@ impl Table {
     }
 }
 
+/// Machine-readable bench report: a flat list of named entries with
+/// numeric metrics, written as `BENCH_<bench>.json` so the perf
+/// trajectory of every kernel is diffable across PRs.
+///
+/// Hand-rolled writer (serde is unavailable offline), mirrored by the
+/// parser in [`crate::util::json`]; non-finite metric values are
+/// clamped to 0 so the output is always valid JSON.
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Add one named entry with `(metric, value)` pairs.
+    pub fn entry(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        self.entries.push((
+            name.to_string(),
+            metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    /// Write `BENCH_<bench>.json` in the current directory; returns
+    /// the path.
+    pub fn write(&self) -> std::io::Result<String> {
+        let path = format!("BENCH_{}.json", self.bench);
+        self.write_to(&path)?;
+        Ok(path)
+    }
+
+    /// Write the report to an explicit path.
+    pub fn write_to(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"bench\": \"{}\",", self.bench)?;
+        writeln!(f, "  \"entries\": [")?;
+        for (i, (name, metrics)) in self.entries.iter().enumerate() {
+            let fields: Vec<String> = metrics
+                .iter()
+                .map(|(k, v)| {
+                    let v = if v.is_finite() { *v } else { 0.0 };
+                    format!("\"{k}\": {v:.6}")
+                })
+                .collect();
+            writeln!(
+                f,
+                "    {{\"name\": \"{name}\", {}}}{}",
+                fields.join(", "),
+                if i + 1 < self.entries.len() { "," } else { "" }
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +245,31 @@ mod tests {
         let s = bench(&opts, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(s.iters, 7);
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let mut rep = JsonReport::new("unit_test");
+        rep.entry("cast_f16", &[("median_ns", 123.5), ("speedup", 4.2)]);
+        rep.entry("scan", &[("median_ns", f64::NAN)]); // clamped to 0
+        let path = std::env::temp_dir().join("BENCH_unit_test.json");
+        let path = path.to_str().unwrap();
+        rep.write_to(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("bench").and_then(|j| j.as_str()), Some("unit_test"));
+        let entries = doc.get("entries").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(
+            entries[0].get("name").and_then(|j| j.as_str()),
+            Some("cast_f16")
+        );
+        assert_eq!(
+            entries[0].get("speedup").and_then(|j| j.as_f64()),
+            Some(4.2)
+        );
+        assert_eq!(entries[1].get("median_ns").and_then(|j| j.as_f64()), Some(0.0));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

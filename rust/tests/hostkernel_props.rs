@@ -1,0 +1,444 @@
+//! Property tests for the vectorized host-kernel layer.
+//!
+//! The contract under test (see `hostkernel`'s module docs):
+//!
+//! * batch casts are **bit-identical** to the scalar `F16`/`Bf16`
+//!   round-to-nearest-even implementations — across every exponent,
+//!   NaN payloads (quiet and signaling), ±inf, subnormals, and both
+//!   rounding-tie directions;
+//! * the fused gradient scan matches `unscale-then-tensor_stats`
+//!   exactly (bitwise, including the f64-accumulated mean);
+//! * chunk-parallel add/scale and the tree all-reduce are bitwise
+//!   deterministic across thread counts and identical to the
+//!   sequential originals;
+//! * the batch-kernel-backed under/overflow diagnostics equal the
+//!   per-element `quantize` definition.
+
+use mpx::collective::{
+    all_reduce_finite, all_reduce_mean, sequential_all_reduce_reference,
+};
+use mpx::hostkernel::{cast, reduce, scan, BufferPool};
+use mpx::numerics::{
+    overflow_count, tensor_stats, underflow_fraction, Bf16, FloatFormat, F16,
+    TensorStats,
+};
+use mpx::util::proptest::forall;
+use mpx::util::rng::Rng;
+
+/// Directed down-cast inputs: every special the rounding logic
+/// branches on.
+fn directed_f32s() -> Vec<f32> {
+    let mut xs = vec![
+        0.0f32,
+        -0.0,
+        1.0,
+        -1.0,
+        0.5,
+        2.0,
+        // f16 overflow boundary: max finite, below/at/above the
+        // rounding tie at 65520, first value that is exactly inf
+        65504.0,
+        65519.0,
+        65520.0,
+        65521.0,
+        65536.0,
+        -65520.0,
+        1e9,
+        -1e9,
+        f32::MAX,
+        -f32::MAX,
+        // f16 subnormal range and the underflow ties
+        2f32.powi(-14),
+        2f32.powi(-24),
+        2f32.powi(-25),     // tie with zero → even (zero)
+        2.9802322e-8,       // half the smallest subnormal
+        3.1e-8,             // just above → smallest subnormal
+        5.9604645e-8,
+        -5.9604645e-8,
+        1e-40,              // f32 subnormal itself
+        -1e-40,
+        f32::MIN_POSITIVE,
+        // rounding ties in the normal range, both directions
+        1.0 + 2f32.powi(-11),          // tie → down (even)
+        1.0 + 3.0 * 2f32.powi(-11),    // tie → up (even)
+        1.0 + 2f32.powi(-11) + 1e-7,   // above tie → up
+        // bf16 ties
+        1.0 + 2f32.powi(-8),
+        1.0 + 3.0 * 2f32.powi(-8),
+        1.0 + 2f32.powi(-8) + 1e-6,
+        // infinities
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+    ];
+    // NaNs: quiet/signaling, varied payloads, both signs
+    for payload in [1u32, 0x1FFF, 0x2000, 0x2001, 0x200000, 0x3FFFFF, 0x7FFFFF]
+    {
+        xs.push(f32::from_bits(0x7F80_0000 | payload)); // signaling-ish
+        xs.push(f32::from_bits(0xFF80_0000 | payload));
+        xs.push(f32::from_bits(0x7FC0_0000 | payload)); // quiet
+    }
+    xs
+}
+
+fn assert_f16_batch_matches_scalar(xs: &[f32]) {
+    let mut got = vec![0u16; xs.len()];
+    cast::f32_to_f16_slice(xs, &mut got);
+    for (x, g) in xs.iter().zip(&got) {
+        let want = F16::from_f32(*x).0;
+        assert_eq!(
+            *g, want,
+            "f32→f16 mismatch for {x} ({:#010x}): got {g:#06x} want {want:#06x}",
+            x.to_bits()
+        );
+    }
+}
+
+fn assert_bf16_batch_matches_scalar(xs: &[f32]) {
+    let mut got = vec![0u16; xs.len()];
+    cast::f32_to_bf16_slice(xs, &mut got);
+    for (x, g) in xs.iter().zip(&got) {
+        let want = Bf16::from_f32(*x).0;
+        assert_eq!(
+            *g, want,
+            "f32→bf16 mismatch for {x} ({:#010x}): got {g:#06x} want {want:#06x}",
+            x.to_bits()
+        );
+    }
+}
+
+#[test]
+fn downcasts_match_scalar_on_directed_specials() {
+    let xs = directed_f32s();
+    assert_f16_batch_matches_scalar(&xs);
+    assert_bf16_batch_matches_scalar(&xs);
+}
+
+#[test]
+fn downcasts_match_scalar_across_every_exponent() {
+    // Structured sweep: for each of the 256 f32 exponents, both
+    // signs, boundary mantissas (incl. the RTNE tie patterns) plus
+    // random ones — the partition the branchless select is built on.
+    let mut rng = Rng::new(0xCA57);
+    let mut xs = Vec::new();
+    for exp in 0u32..=255 {
+        for sign in [0u32, 0x8000_0000] {
+            for man in
+                [0u32, 1, 0x0FFF, 0x1000, 0x1001, 0x1FFF, 0x2000, 0x400000,
+                 0x7FFFFF]
+            {
+                xs.push(f32::from_bits(sign | (exp << 23) | man));
+            }
+            for _ in 0..40 {
+                let man = (rng.next_u64() as u32) & 0x7FFFFF;
+                xs.push(f32::from_bits(sign | (exp << 23) | man));
+            }
+        }
+    }
+    assert_f16_batch_matches_scalar(&xs);
+    assert_bf16_batch_matches_scalar(&xs);
+}
+
+#[test]
+fn upcasts_match_scalar_exhaustively() {
+    let halves: Vec<u16> = (0u16..=u16::MAX).collect();
+    let mut f16s = vec![0f32; halves.len()];
+    let mut bf16s = vec![0f32; halves.len()];
+    cast::f16_to_f32_slice(&halves, &mut f16s);
+    cast::bf16_to_f32_slice(&halves, &mut bf16s);
+    for (h, (a, b)) in halves.iter().zip(f16s.iter().zip(&bf16s)) {
+        assert_eq!(
+            a.to_bits(),
+            F16(*h).to_f32().to_bits(),
+            "f16→f32 mismatch at {h:#06x}"
+        );
+        assert_eq!(
+            b.to_bits(),
+            Bf16(*h).to_f32().to_bits(),
+            "bf16→f32 mismatch at {h:#06x}"
+        );
+    }
+}
+
+#[test]
+fn large_buffer_engages_threads_and_stays_bit_exact() {
+    // Above hostkernel::PAR_MIN_ELEMS the slice kernels fan out over
+    // threads; the result must not change by a bit.
+    let n = mpx::hostkernel::PAR_MIN_ELEMS + 4321;
+    let mut rng = Rng::new(9);
+    let xs: Vec<f32> = (0..n)
+        .map(|_| {
+            let log10 = rng.normal_f32(-4.0, 3.0);
+            let m = 10f32.powf(log10);
+            if rng.below(2) == 0 { m } else { -m }
+        })
+        .collect();
+    assert_f16_batch_matches_scalar(&xs);
+    assert_bf16_batch_matches_scalar(&xs);
+}
+
+#[test]
+fn property_random_downcasts_match_scalar() {
+    forall(
+        300,
+        |r: &mut Rng| {
+            (0..64).map(|_| r.normal_f32(0.0, 1e4)).collect::<Vec<f32>>()
+        },
+        |xs| {
+            let mut got16 = vec![0u16; xs.len()];
+            let mut gotbf = vec![0u16; xs.len()];
+            cast::f32_to_f16_slice(xs, &mut got16);
+            cast::f32_to_bf16_slice(xs, &mut gotbf);
+            for (x, (a, b)) in xs.iter().zip(got16.iter().zip(&gotbf)) {
+                if *a != F16::from_f32(*x).0 {
+                    return Err(format!("f16 mismatch at {x}"));
+                }
+                if *b != Bf16::from_f32(*x).0 {
+                    return Err(format!("bf16 mismatch at {x}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantize_slices_match_scalar_quantize() {
+    let mut a = directed_f32s();
+    let mut b = a.clone();
+    let reference16: Vec<u32> = a
+        .iter()
+        .map(|x| FloatFormat::F16.quantize(*x).to_bits())
+        .collect();
+    let referencebf: Vec<u32> = a
+        .iter()
+        .map(|x| FloatFormat::Bf16.quantize(*x).to_bits())
+        .collect();
+    cast::quantize_f16_slice(&mut a);
+    cast::quantize_bf16_slice(&mut b);
+    for i in 0..a.len() {
+        assert_eq!(a[i].to_bits(), reference16[i], "f16 quantize elem {i}");
+        assert_eq!(b[i].to_bits(), referencebf[i], "bf16 quantize elem {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused gradient scan
+// ---------------------------------------------------------------------------
+
+fn assert_stats_bit_eq(got: &TensorStats, want: &TensorStats) {
+    assert_eq!(got.count, want.count);
+    assert_eq!(got.finite, want.finite);
+    assert_eq!(got.min_abs_nonzero.to_bits(), want.min_abs_nonzero.to_bits());
+    assert_eq!(got.max_abs.to_bits(), want.max_abs.to_bits());
+    assert_eq!(got.mean_abs.to_bits(), want.mean_abs.to_bits());
+    assert_eq!(got.zeros, want.zeros);
+    assert_eq!(got.infs, want.infs);
+    assert_eq!(got.nans, want.nans);
+}
+
+#[test]
+fn property_fused_scan_matches_double_walk() {
+    forall(
+        300,
+        |r: &mut Rng| {
+            let mut xs: Vec<f32> = (0..(1 + r.below(200) as usize))
+                .map(|_| {
+                    let log10 = r.normal_f32(-6.0, 4.0);
+                    let m = 10f32.powf(log10);
+                    if r.below(2) == 0 { m } else { -m }
+                })
+                .collect();
+            // sprinkle specials
+            for _ in 0..r.below(4) {
+                let i = r.below(xs.len() as u64) as usize;
+                xs[i] = match r.below(4) {
+                    0 => f32::INFINITY,
+                    1 => f32::NEG_INFINITY,
+                    2 => f32::NAN,
+                    _ => 0.0,
+                };
+            }
+            let inv = 2f32.powi(r.below(31) as i32 - 15);
+            (xs, inv)
+        },
+        |(xs, inv)| {
+            let mut fused_buf = xs.clone();
+            let mut ref_buf = xs.clone();
+            let got = scan::fused_unscale_stats(&mut fused_buf, *inv);
+            for x in ref_buf.iter_mut() {
+                *x *= *inv;
+            }
+            let want = tensor_stats(&ref_buf);
+            for (a, b) in fused_buf.iter().zip(&ref_buf) {
+                if a.to_bits() != b.to_bits() && !(a.is_nan() && b.is_nan()) {
+                    return Err(format!("buffer diverged: {a} vs {b}"));
+                }
+            }
+            if got != want
+                || got.mean_abs.to_bits() != want.mean_abs.to_bits()
+            {
+                return Err(format!("stats diverged: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fused_scan_multi_tensor_equals_concatenation() {
+    let mut rng = Rng::new(4);
+    let mut tensors: Vec<Vec<f32>> = (0..5)
+        .map(|_| {
+            (0..(1 + rng.below(50) as usize))
+                .map(|_| rng.normal_f32(0.0, 100.0))
+                .collect()
+        })
+        .collect();
+    let mut flat: Vec<f32> = tensors.iter().flatten().copied().collect();
+    let got = scan::fused_unscale_stats_tensors(&mut tensors, 0.125);
+    for x in flat.iter_mut() {
+        *x *= 0.125;
+    }
+    let want = tensor_stats(&flat);
+    assert_stats_bit_eq(&got, &want);
+}
+
+// ---------------------------------------------------------------------------
+// parallel reduce + all-reduce determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn add_and_scale_bitwise_deterministic_across_thread_counts() {
+    let mut rng = Rng::new(21);
+    let a: Vec<f32> = (0..100_003).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let b: Vec<f32> = (0..100_003).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut want = a.clone();
+    reduce::add_assign_threads(&mut want, &b, 1);
+    reduce::scale_in_place_threads(&mut want, 0.25, 1);
+    for threads in 2..=6 {
+        let mut got = a.clone();
+        reduce::add_assign_threads(&mut got, &b, threads);
+        reduce::scale_in_place_threads(&mut got, 0.25, threads);
+        assert!(
+            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "thread count {threads} changed bits"
+        );
+    }
+}
+
+#[test]
+fn all_reduce_matches_sequential_reference_bitwise() {
+    // Big enough that the chunk-parallel path engages on the adds.
+    let mut rng = Rng::new(33);
+    for n in [2usize, 3, 4, 5, 8] {
+        let shards: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| {
+                vec![
+                    (0..300_000)
+                        .map(|_| rng.normal_f32(0.0, 1.0))
+                        .collect(),
+                    (0..17).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                ]
+            })
+            .collect();
+        let mut a = shards.clone();
+        let mut b = shards.clone();
+        all_reduce_mean(&mut a);
+        sequential_all_reduce_reference(&mut b);
+        for (t, (x, y)) in a[0].iter().zip(b[0].iter()).enumerate() {
+            assert!(
+                x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "n={n} tensor {t} diverged from sequential reference"
+            );
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "no shards")]
+fn all_reduce_finite_empty_panics() {
+    all_reduce_finite(&[]);
+}
+
+// ---------------------------------------------------------------------------
+// batch-kernel-backed diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn under_overflow_diagnostics_match_quantize_definition() {
+    let mut rng = Rng::new(55);
+    let mut xs: Vec<f32> = (0..10_000)
+        .map(|_| {
+            let log10 = rng.normal_f32(-5.0, 4.0);
+            let m = 10f32.powf(log10);
+            if rng.below(2) == 0 { m } else { -m }
+        })
+        .collect();
+    xs.extend(directed_f32s());
+    for fmt in [FloatFormat::F32, FloatFormat::F16, FloatFormat::Bf16] {
+        let want_under = xs
+            .iter()
+            .filter(|&&x| x != 0.0 && fmt.quantize(x) == 0.0)
+            .count() as f64
+            / xs.len() as f64;
+        let want_over = xs
+            .iter()
+            .filter(|&&x| x.is_finite() && !fmt.quantize(x).is_finite())
+            .count();
+        assert_eq!(
+            underflow_fraction(&xs, fmt),
+            want_under,
+            "underflow mismatch for {fmt:?}"
+        );
+        assert_eq!(
+            overflow_count(&xs, fmt),
+            want_over,
+            "overflow mismatch for {fmt:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// buffer pool + pooled pack paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pooled_padded_images_match_allocating_path() {
+    use mpx::serve::{FormedBatch, Request};
+    use std::time::Duration;
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| {
+            Request::new(i, vec![i as f32; 8], Duration::from_secs(1))
+        })
+        .collect();
+    let batch = FormedBatch { requests: reqs, bucket: 8 };
+    let want = batch.padded_images();
+    let pool = BufferPool::new();
+    let mut buf = pool.take_f32(0);
+    batch.padded_images_into(&mut buf);
+    assert_eq!(want, buf);
+    // Cycle it: second fill must reuse the same capacity.
+    pool.put_f32(buf);
+    let mut buf = pool.take_f32(0);
+    batch.padded_images_into(&mut buf);
+    assert_eq!(want, buf);
+    assert_eq!(pool.stats().hits, 1);
+}
+
+#[test]
+fn batch_recycle_feeds_the_next_batch() {
+    use mpx::config::VIT_TINY;
+    use mpx::data::SyntheticDataset;
+    let ds = SyntheticDataset::new(&VIT_TINY, 1);
+    let want = ds.batch(0, 4, 42);
+    let again = ds.batch(0, 4, 42);
+    assert_eq!(want.images, again.images);
+    assert_eq!(want.labels, again.labels);
+    // Recycling must not perturb determinism of later batches.
+    again.recycle();
+    let third = ds.batch(0, 4, 42);
+    assert_eq!(want.images, third.images);
+    assert_eq!(want.labels, third.labels);
+    want.recycle();
+    third.recycle();
+}
