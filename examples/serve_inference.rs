@@ -1,10 +1,11 @@
-//! Batched inference serving on the AOT forward artifacts — now a
-//! thin driver over the [`mpx::serve`] engine.
+//! Batched inference serving on the AOT forward artifacts — a thin
+//! driver over the continuous-batching [`mpx::serve`] engine.
 //!
-//! Simulates a small online-serving deployment per precision mode:
-//! deterministic Poisson-ish arrivals are queued, dynamically batched
-//! (size buckets, padding, flush-on-timeout), executed by a worker
-//! pool sharing the compiled forward, and per-request latency
+//! Simulates a small online-serving deployment: the fp32 and
+//! mixed_f16 forwards run as two *lanes of one engine* (shared worker
+//! pool, weighted-deficit scheduling, per-request streamed
+//! completions), so the precision comparison happens under identical
+//! contention instead of in two separate runs.  Per-request latency
 //! quantiles come from the shared rank-interpolated
 //! [`LatencyHistogram`](mpx::metrics::LatencyHistogram) — inference
 //! is where mixed precision has no loss-scaling caveats at all.
@@ -25,40 +26,53 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(400);
     let mut store = ArtifactStore::open_default()?;
 
-    println!("serving {total} requests (batch ≤ 8, vit_tiny, 2 workers):\n");
+    let cfg = ServeConfig {
+        lane_precisions: vec![Precision::Fp32, Precision::MixedF16],
+        lane_weights: vec![1, 1],
+        requests: total,
+        workers: 2,
+        // closed loop, back-to-back: measure service capacity
+        arrival_rate: 0.0,
+        open_loop: false,
+        ..ServeConfig::default()
+    };
+
     println!(
-        "{:>10} {:>10} {:>10} {:>10} {:>12}",
-        "precision", "p50", "p90", "p99", "req/s"
+        "serving {total} requests over 2 lanes (batch ≤ {}, {}, {} workers, \
+         continuous batching):\n",
+        cfg.max_batch, cfg.model, cfg.workers
+    );
+    let report = serve::run_with_artifacts(&mut store, &cfg)?;
+
+    println!(
+        "{:>20} {:>10} {:>10} {:>10} {:>12}",
+        "lane", "p50", "p90", "p99", "completed"
     );
     let mut p50s = Vec::new();
-    for precision in [Precision::Fp32, Precision::MixedF16] {
-        let cfg = ServeConfig {
-            precision,
-            requests: total,
-            workers: 2,
-            // closed loop, back-to-back: measure service capacity
-            arrival_rate: 0.0,
-            open_loop: false,
-            ..ServeConfig::default()
-        };
-        let report = serve::run_with_artifacts(&mut store, &cfg)?;
-        let q = report
+    for lane in &report.lanes {
+        let q = lane
             .latency
             .quantiles(&[0.5, 0.9, 0.99])
-            .expect("no completed requests");
+            .expect("no completed requests in lane");
         println!(
-            "{:>10} {:>10} {:>10} {:>10} {:>12.0}",
-            precision.tag(),
+            "{:>20} {:>10} {:>10} {:>10} {:>12}",
+            lane.name,
             human_duration(q[0]),
             human_duration(q[1]),
             human_duration(q[2]),
-            report.throughput_rps(),
+            lane.completed(),
         );
         p50s.push(q[0]);
     }
-    // p50s[0] is fp32, p50s[1] is mixed: >1 means mixed is faster.
     println!(
-        "\nfull/mixed p50 speedup: {:.2}x",
+        "\noverall: {:.0} req/s, {} batches, {:.1}% padding",
+        report.throughput_rps(),
+        report.batches(),
+        report.padding_fraction() * 100.0,
+    );
+    // lanes[0] is fp32, lanes[1] is mixed: >1 means mixed is faster.
+    println!(
+        "full/mixed p50 speedup under shared contention: {:.2}x",
         p50s[0].as_secs_f64() / p50s[1].as_secs_f64()
     );
     Ok(())

@@ -13,6 +13,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::scaling::ScalingConfig;
+use crate::serve::batcher::SchedPolicy;
 use toml::TomlDoc;
 
 /// Numeric execution mode (paper §5 compares fp32 against mixed f16).
@@ -275,20 +276,39 @@ impl TrainConfig {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub model: String,
+    /// Primary lane precision (single-lane runs; the first lane when
+    /// `lane_precisions` is set).
     pub precision: Precision,
     /// Largest batch the batcher may form (the artifact batch size).
     pub max_batch: usize,
-    /// Executor threads; each replicates the model state (ddp-style).
+    /// Initial executor threads; each replicates every lane's model
+    /// state (ddp-style).
     pub workers: usize,
-    /// Admission bound: requests beyond this queue depth are rejected
-    /// (open loop) or block the generator (closed loop).
+    /// Autoscale ceiling: `> workers` lets the scheduler spawn up to
+    /// this many workers when backlog grows (and retire them as it
+    /// falls); 0 or `== workers` keeps the pool fixed.
+    pub max_workers: usize,
+    /// Queued requests one worker absorbs before the pool grows
+    /// (autoscale sensitivity); 0 ⇒ `max_batch`.
+    pub autoscale_depth: usize,
+    /// Batch refill policy: continuous batching (default) or the
+    /// PR-1 form-whole-batch-then-execute loop (A/B benchmarking).
+    pub policy: SchedPolicy,
+    /// Multi-model routing: one lane per precision listed here
+    /// (empty ⇒ a single `precision` lane).
+    pub lane_precisions: Vec<Precision>,
+    /// Weighted-deficit service weights, matching `lane_precisions`
+    /// (empty ⇒ all 1).
+    pub lane_weights: Vec<u64>,
+    /// Per-lane admission bound: requests beyond this queue depth are
+    /// rejected (open loop) or block the generator (closed loop).
     pub queue_capacity: usize,
     /// Max time the oldest queued request waits before a partial
     /// batch is flushed — bounds tail latency under light load.
     pub flush_timeout_ms: u64,
     /// Per-request end-to-end deadline (reported, not enforced).
     pub deadline_ms: u64,
-    /// Total requests the load generator offers.
+    /// Total requests the load generator offers (split across lanes).
     pub requests: u64,
     /// Poisson arrival rate in requests/s; ≤ 0 means back-to-back.
     pub arrival_rate: f64,
@@ -305,6 +325,11 @@ impl Default for ServeConfig {
             precision: Precision::MixedF16,
             max_batch: 8,
             workers: 2,
+            max_workers: 0,
+            autoscale_depth: 0,
+            policy: SchedPolicy::Continuous,
+            lane_precisions: Vec::new(),
+            lane_weights: Vec::new(),
             queue_capacity: 64,
             flush_timeout_ms: 5,
             deadline_ms: 100,
@@ -326,24 +351,56 @@ impl ServeConfig {
         Duration::from_millis(self.deadline_ms)
     }
 
-    /// Name of the forward artifact serving batches of size `batch`.
+    /// The (precision, weight) lane set this config describes: the
+    /// explicit `lane_precisions`/`lane_weights` lists, or the single
+    /// `precision` lane at weight 1.
+    pub fn effective_lanes(&self) -> Vec<(Precision, u64)> {
+        if self.lane_precisions.is_empty() {
+            return vec![(self.precision, 1)];
+        }
+        self.lane_precisions
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                (p, self.lane_weights.get(i).copied().unwrap_or(1))
+            })
+            .collect()
+    }
+
+    /// Name of the forward artifact serving batches of size `batch`
+    /// for the primary precision.
     pub fn fwd_artifact(&self, batch: usize) -> String {
-        format!(
-            "fwd_{}_{}_b{}",
-            self.model,
-            self.precision.tag(),
-            batch
-        )
+        self.fwd_artifact_for(self.precision, batch)
+    }
+
+    /// Per-lane variant of [`ServeConfig::fwd_artifact`].
+    pub fn fwd_artifact_for(
+        &self,
+        precision: Precision,
+        batch: usize,
+    ) -> String {
+        format!("fwd_{}_{}_b{}", self.model, precision.tag(), batch)
     }
 
     pub fn init_artifact(&self) -> String {
-        format!("init_{}_{}", self.model, self.precision.tag())
+        self.init_artifact_for(self.precision)
+    }
+
+    pub fn init_artifact_for(&self, precision: Precision) -> String {
+        format!("init_{}_{}", self.model, precision.tag())
     }
 
     pub fn validate(&self) -> Result<()> {
         model_preset(&self.model)?;
         if self.workers == 0 {
             bail!("serve: workers must be ≥ 1");
+        }
+        if self.max_workers != 0 && self.max_workers < self.workers {
+            bail!(
+                "serve: max_workers {} below workers {}",
+                self.max_workers,
+                self.workers
+            );
         }
         if self.max_batch == 0 {
             bail!("serve: batch must be ≥ 1");
@@ -355,6 +412,18 @@ impl ServeConfig {
                 self.queue_capacity,
                 self.max_batch
             );
+        }
+        if !self.lane_weights.is_empty()
+            && self.lane_weights.len() != self.lane_precisions.len()
+        {
+            bail!(
+                "serve: {} lane weights for {} lane precisions",
+                self.lane_weights.len(),
+                self.lane_precisions.len()
+            );
+        }
+        if self.lane_weights.iter().any(|&w| w == 0) {
+            bail!("serve: lane weights must be ≥ 1");
         }
         Ok(())
     }
@@ -382,6 +451,28 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_int("serve.workers") {
             self.workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve.max_workers") {
+            self.max_workers = v as usize;
+        }
+        if let Some(v) = doc.get_int("serve.autoscale_depth") {
+            self.autoscale_depth = v as usize;
+        }
+        if let Some(s) = doc.get_str("serve.policy") {
+            self.policy = SchedPolicy::parse(s)?;
+        }
+        if let Some(list) = doc.get_str_array("serve.precisions") {
+            self.lane_precisions = list
+                .into_iter()
+                .map(Precision::parse)
+                .collect::<Result<Vec<_>>>()?;
+            if let Some(&first) = self.lane_precisions.first() {
+                self.precision = first;
+            }
+        }
+        if let Some(list) = doc.get_int_array("serve.lane_weights") {
+            self.lane_weights =
+                list.into_iter().map(|w| w.max(0) as u64).collect();
         }
         if let Some(v) = doc.get_int("serve.queue_capacity") {
             self.queue_capacity = v as usize;
@@ -522,6 +613,56 @@ open_loop = true
         cfg.workers = 2;
         cfg.queue_capacity = cfg.max_batch - 1;
         assert!(cfg.validate().is_err());
+        cfg.queue_capacity = 64;
+        cfg.max_workers = 1; // below workers
+        assert!(cfg.validate().is_err());
+        cfg.max_workers = 8;
+        cfg.validate().unwrap();
+        cfg.lane_precisions = vec![Precision::Fp32, Precision::MixedF16];
+        cfg.lane_weights = vec![2];
+        assert!(cfg.validate().is_err(), "weight/precision length mismatch");
+        cfg.lane_weights = vec![2, 0];
+        assert!(cfg.validate().is_err(), "zero weight");
+        cfg.lane_weights = vec![2, 1];
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_lane_section_roundtrip() {
+        let text = r#"
+[serve]
+precisions = ["fp32", "mixed_f16"]
+lane_weights = [1, 2]
+max_workers = 6
+autoscale_depth = 16
+policy = "form_first"
+"#;
+        let path = std::env::temp_dir().join("mpx_serve_lane_cfg_test.toml");
+        std::fs::write(&path, text).unwrap();
+        let cfg =
+            ServeConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(
+            cfg.lane_precisions,
+            vec![Precision::Fp32, Precision::MixedF16]
+        );
+        assert_eq!(cfg.lane_weights, vec![1, 2]);
+        // primary precision follows the first lane
+        assert_eq!(cfg.precision, Precision::Fp32);
+        assert_eq!(cfg.max_workers, 6);
+        assert_eq!(cfg.autoscale_depth, 16);
+        assert_eq!(cfg.policy, SchedPolicy::FormFirst);
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.effective_lanes(),
+            vec![(Precision::Fp32, 1), (Precision::MixedF16, 2)]
+        );
+    }
+
+    #[test]
+    fn effective_lanes_default_to_single_precision() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.effective_lanes(), vec![(Precision::MixedF16, 1)]);
+        assert_eq!(cfg.policy, SchedPolicy::Continuous);
     }
 
     #[test]
@@ -529,5 +670,13 @@ open_loop = true
         let cfg = ServeConfig::default();
         assert_eq!(cfg.fwd_artifact(8), "fwd_vit_tiny_mixed_f16_b8");
         assert_eq!(cfg.init_artifact(), "init_vit_tiny_mixed_f16");
+        assert_eq!(
+            cfg.fwd_artifact_for(Precision::Fp32, 4),
+            "fwd_vit_tiny_fp32_b4"
+        );
+        assert_eq!(
+            cfg.init_artifact_for(Precision::MixedBf16),
+            "init_vit_tiny_mixed_bf16"
+        );
     }
 }

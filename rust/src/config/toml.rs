@@ -105,6 +105,35 @@ impl TomlDoc {
         }
     }
 
+    /// Homogeneous string array (`ks = ["a", "b"]`); `None` when the
+    /// key is absent, not an array, or mixes types.
+    pub fn get_str_array(&self, path: &str) -> Option<Vec<&str>> {
+        match self.get(path) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Some(s.as_str()),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Homogeneous integer array (`ns = [2, 1]`).
+    pub fn get_int_array(&self, path: &str) -> Option<Vec<i64>> {
+        match self.get(path) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
     }
@@ -198,6 +227,26 @@ bandwidth = 504.0
             Some(TomlValue::Array(a)) => assert_eq!(a.len(), 3),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn typed_array_getters() {
+        let doc = TomlDoc::parse(
+            r#"
+ss = ["fp32", "mixed_f16"]
+ns = [2, 1]
+mixed = [1, "two"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str_array("ss"), Some(vec!["fp32", "mixed_f16"]));
+        assert_eq!(doc.get_int_array("ns"), Some(vec![2, 1]));
+        // mixed or mistyped arrays are refused, not coerced
+        assert_eq!(doc.get_str_array("ns"), None);
+        assert_eq!(doc.get_int_array("ss"), None);
+        assert_eq!(doc.get_str_array("mixed"), None);
+        assert_eq!(doc.get_int_array("mixed"), None);
+        assert_eq!(doc.get_str_array("absent"), None);
     }
 
     #[test]

@@ -33,11 +33,13 @@
 //! * [`collective`] — deterministic tree all-reduce across shards.
 //! * [`trainer`] — the fused single-device loop and the simulated
 //!   multi-device data-parallel loop; checkpointing.
-//! * [`serve`] — batched-inference serving engine: bounded request
-//!   queue with admission control, size-bucketed dynamic batcher
-//!   (padding-aware, flush-on-timeout), multi-worker executor pool
-//!   over the shared compiled artifacts, deterministic Poisson load
-//!   generator.
+//! * [`serve`] — continuous-batching multi-model serving engine: one
+//!   bounded request queue per (model, precision) lane, a
+//!   weighted-deficit scheduler that refills the shared worker pool
+//!   as slots free, per-request streamed completions, autoscaling,
+//!   and a virtual-clock simulation harness; all timing flows through
+//!   the `serve::clock::Clock` trait so policy is deterministically
+//!   testable.
 //! * [`hlo`] — HLO-text parser for the buffer census.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
 //! * [`metrics`] — step timers, loss history, latency histograms
@@ -55,9 +57,13 @@ pub mod metrics;
 pub mod numerics;
 pub mod optim;
 pub mod pytree;
+// The PJRT-backed modules need the native xla_extension library;
+// everything else builds host-only (`--no-default-features`).
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scaling;
 pub mod serve;
+#[cfg(feature = "xla")]
 pub mod trainer;
 pub mod util;
 

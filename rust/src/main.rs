@@ -36,6 +36,8 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
   memory-report  --model M [--batches 8,16,...] [--machine desktop|cluster]
   scaling-sim    [--steps N] [--overflow-prob p] [--period N]
   serve          --model M --precision P [--batch B --workers W --requests N]
+                 [--max-workers W --autoscale-depth D] [--policy continuous|form_first]
+                 [--precisions p1,p2 --lane-weights w1,w2] (multi-model lanes)
                  [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
                  [--deadline-ms T] [--seed S] [--config cfg.toml]";
 
@@ -350,6 +352,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get_usize("workers")? {
         cfg.workers = w;
     }
+    if let Some(w) = args.get_usize("max-workers")? {
+        cfg.max_workers = w;
+    }
+    if let Some(d) = args.get_usize("autoscale-depth")? {
+        cfg.autoscale_depth = d;
+    }
+    if let Some(p) = args.get_str("policy") {
+        cfg.policy = mpx::serve::SchedPolicy::parse(p)?;
+    }
+    if let Some(list) = args.get_str("precisions") {
+        cfg.lane_precisions = list
+            .split(',')
+            .map(|s| Precision::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        if let Some(&first) = cfg.lane_precisions.first() {
+            cfg.precision = first;
+        }
+    }
+    if let Some(ws) = args.get_usize_list("lane-weights")? {
+        cfg.lane_weights = ws.into_iter().map(|w| w as u64).collect();
+    }
     if let Some(n) = args.get_u64("requests")? {
         cfg.requests = n;
     }
@@ -377,13 +400,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.finish()?;
     cfg.validate()?;
 
+    let lanes = cfg
+        .effective_lanes()
+        .iter()
+        .map(|(p, w)| format!("{}×{w}", p.tag()))
+        .collect::<Vec<_>>()
+        .join(",");
     eprintln!(
-        "[mpx] serve | model {} | precision {} | batch ≤{} | {} workers | {} \
-         requests {}",
+        "[mpx] serve | model {} | lanes {} | {} batching | batch ≤{} | {} \
+         workers{} | {} requests {}",
         cfg.model,
-        cfg.precision.tag(),
+        lanes,
+        cfg.policy.tag(),
         cfg.max_batch,
         cfg.workers,
+        if cfg.max_workers > cfg.workers {
+            format!(" (≤{} autoscaled)", cfg.max_workers)
+        } else {
+            String::new()
+        },
         cfg.requests,
         if cfg.arrival_rate > 0.0 {
             format!(

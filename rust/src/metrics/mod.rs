@@ -105,6 +105,71 @@ impl LatencyHistogram {
     }
 }
 
+/// A set of [`LatencyHistogram`]s keyed by name — the per-lane
+/// latency aggregation the multi-model serve report uses (one entry
+/// per (model, precision) lane).
+///
+/// Entries keep insertion order (lane order), and [`merge`] is exact
+/// sample concatenation per key, so merging per-worker sets equals
+/// recording into one shared set.
+///
+/// [`merge`]: NamedHistograms::merge
+#[derive(Debug, Clone, Default)]
+pub struct NamedHistograms {
+    entries: Vec<(String, LatencyHistogram)>,
+}
+
+impl NamedHistograms {
+    pub fn new() -> NamedHistograms {
+        NamedHistograms { entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The histogram for `name`, created empty on first use.
+    pub fn entry(&mut self, name: &str) -> &mut LatencyHistogram {
+        if let Some(i) =
+            self.entries.iter().position(|(n, _)| n == name)
+        {
+            return &mut self.entries[i].1;
+        }
+        self.entries.push((name.to_string(), LatencyHistogram::new()));
+        &mut self.entries.last_mut().unwrap().1
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Fold another set in, key by key.
+    pub fn merge(&mut self, other: &NamedHistograms) {
+        for (name, h) in &other.entries {
+            self.entry(name).merge(h);
+        }
+    }
+
+    pub fn iter(
+        &self,
+    ) -> impl Iterator<Item = (&str, &LatencyHistogram)> {
+        self.entries.iter().map(|(n, h)| (n.as_str(), h))
+    }
+
+    /// All samples pooled across names.
+    pub fn merged(&self) -> LatencyHistogram {
+        let mut all = LatencyHistogram::new();
+        for (_, h) in &self.entries {
+            all.merge(h);
+        }
+        all
+    }
+}
+
 /// Exponential moving average (smoothing for console logs).
 #[derive(Debug, Clone)]
 pub struct Ema {
@@ -346,6 +411,27 @@ mod tests {
         let s = merged.summary().unwrap();
         assert_eq!(s.count, 101);
         assert_eq!(s.p50, ms(50));
+    }
+
+    #[test]
+    fn named_histograms_merge_by_key() {
+        let mut a = NamedHistograms::new();
+        a.entry("fp32").record(ms(10));
+        a.entry("f16").record(ms(2));
+        let mut b = NamedHistograms::new();
+        b.entry("f16").record(ms(4));
+        b.entry("bf16").record(ms(3));
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get("fp32").unwrap().count(), 1);
+        assert_eq!(a.get("f16").unwrap().count(), 2);
+        assert_eq!(a.get("f16").unwrap().max(), Some(ms(4)));
+        assert_eq!(a.get("bf16").unwrap().count(), 1);
+        assert!(a.get("f64").is_none());
+        assert_eq!(a.merged().count(), 4);
+        // insertion order preserved
+        let names: Vec<&str> = a.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["fp32", "f16", "bf16"]);
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Dynamic batching policy: size buckets, padding, flush-on-timeout.
+//! Dynamic batching policy: size buckets, padding, flush-on-timeout,
+//! and the continuous-refill variant.
 //!
-//! The policy is a pure function ([`decide`]) over queue depth and the
-//! oldest request's age, so it is unit-testable with synthetic clocks;
-//! the threaded wait loop that applies it lives in
-//! [`RequestQueue::next_batch`](crate::serve::queue::RequestQueue::next_batch).
+//! The policy is a pure function over queue depth, the oldest
+//! request's enqueue time, and the current time — all plain
+//! [`Duration`]s since the engine [`Clock`](crate::serve::clock::Clock)
+//! epoch, so it is unit-testable with a virtual clock.  The lock-side
+//! wait loop that applies it lives in the scheduler
+//! ([`crate::serve::sched::Scheduler`]).
 //!
 //! Forward artifacts are AOT-compiled per batch size, so a batch must
 //! be dispatched at one of the available sizes (`buckets`).  A partial
@@ -11,8 +14,18 @@
 //! repeating the last real request's image; padded rows are
 //! compute-only ballast and never enter the latency accounting
 //! ([`FormedBatch::requests`] holds only real requests).
+//!
+//! Two refill policies ([`SchedPolicy`]):
+//!
+//! * [`SchedPolicy::FormFirst`] — the PR-1 form-whole-batch-then-
+//!   execute rule: dispatch only a full `max_batch`, or whatever is
+//!   queued once the oldest request has waited `flush_timeout`.
+//! * [`SchedPolicy::Continuous`] — continuous batching: a free worker
+//!   immediately takes the largest bucket it can fill *exactly* (zero
+//!   padding); the flush timeout only pads out remainders smaller
+//!   than the smallest bucket.  Workers never idle while work queues.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -58,12 +71,50 @@ impl BatcherConfig {
 
     /// Smallest bucket that fits `take` real requests (`take` must be
     /// ≤ `max_batch`, which every dispatch path guarantees).
+    /// Monotone non-decreasing in `take`.
     pub fn bucket_for(&self, take: usize) -> usize {
         self.buckets
             .iter()
             .copied()
             .find(|&b| b >= take)
             .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Largest bucket that `pending` requests fill *exactly* (no
+    /// padding), or `None` when even the smallest bucket is bigger
+    /// than the backlog.
+    pub fn largest_fit(&self, pending: usize) -> Option<usize> {
+        self.buckets.iter().copied().rev().find(|&b| b <= pending)
+    }
+}
+
+/// How the scheduler refills free worker slots from a lane's queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Form a whole batch before executing: dispatch on a full
+    /// `max_batch` or on flush-timeout, never earlier (PR-1
+    /// semantics; kept for A/B benchmarking).
+    FormFirst,
+    /// Continuous batching: dispatch the largest exactly-fillable
+    /// bucket the moment a worker frees a slot; flush-timeout only
+    /// governs remainders below the smallest bucket.
+    Continuous,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Result<SchedPolicy> {
+        Ok(match s {
+            "continuous" | "cb" => SchedPolicy::Continuous,
+            "form_first" | "legacy" | "batch" => SchedPolicy::FormFirst,
+            _ => bail!("unknown sched policy {s:?}"),
+        })
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            SchedPolicy::FormFirst => "form_first",
+            SchedPolicy::Continuous => "continuous",
+        }
     }
 }
 
@@ -74,17 +125,18 @@ pub enum Decision {
     Dispatch(usize),
     /// Partial batch pending: sleep until the flush deadline (or an
     /// arrival) and re-decide.
-    WaitUntil(Instant),
+    WaitUntil(Duration),
     /// Queue empty: wait for an arrival.
     WaitForWork,
 }
 
-/// The batching policy.  Pure in (config, depth, oldest-enqueue, now).
+/// The form-first batching policy.  Pure in (config, depth,
+/// oldest-enqueue, now); all times are clock-epoch offsets.
 pub fn decide(
     cfg: &BatcherConfig,
     pending: usize,
-    oldest_enqueued: Option<Instant>,
-    now: Instant,
+    oldest_enqueued: Option<Duration>,
+    now: Duration,
 ) -> Decision {
     let Some(oldest) = oldest_enqueued else {
         debug_assert_eq!(pending, 0);
@@ -99,6 +151,42 @@ pub fn decide(
         Decision::Dispatch(pending)
     } else {
         Decision::WaitUntil(flush_at)
+    }
+}
+
+/// The refill policy: what a *free worker slot* should take from a
+/// lane with `pending` queued requests.  [`SchedPolicy::FormFirst`]
+/// defers to [`decide`]; [`SchedPolicy::Continuous`] dispatches any
+/// exactly-fillable bucket immediately and only waits on remainders
+/// smaller than the smallest bucket.
+pub fn refill(
+    cfg: &BatcherConfig,
+    policy: SchedPolicy,
+    pending: usize,
+    oldest_enqueued: Option<Duration>,
+    now: Duration,
+) -> Decision {
+    match policy {
+        SchedPolicy::FormFirst => decide(cfg, pending, oldest_enqueued, now),
+        SchedPolicy::Continuous => {
+            let Some(oldest) = oldest_enqueued else {
+                debug_assert_eq!(pending, 0);
+                return Decision::WaitForWork;
+            };
+            if pending >= cfg.max_batch() {
+                return Decision::Dispatch(cfg.max_batch());
+            }
+            if let Some(b) = cfg.largest_fit(pending) {
+                // Exact fill: zero padding, no reason to wait.
+                return Decision::Dispatch(b);
+            }
+            let flush_at = oldest + cfg.flush_timeout;
+            if now >= flush_at {
+                Decision::Dispatch(pending)
+            } else {
+                Decision::WaitUntil(flush_at)
+            }
+        }
     }
 }
 
@@ -155,8 +243,17 @@ mod tests {
         .unwrap()
     }
 
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
     fn req(id: u64, elems: usize) -> Request {
-        Request::new(id, vec![id as f32; elems], Duration::from_secs(1))
+        Request::new(
+            id,
+            vec![id as f32; elems],
+            Duration::from_secs(1),
+            Duration::ZERO,
+        )
     }
 
     #[test]
@@ -180,29 +277,41 @@ mod tests {
     }
 
     #[test]
+    fn largest_fit_is_exact() {
+        let c = cfg(&[2, 4, 8], 5);
+        assert_eq!(c.largest_fit(0), None);
+        assert_eq!(c.largest_fit(1), None);
+        assert_eq!(c.largest_fit(2), Some(2));
+        assert_eq!(c.largest_fit(3), Some(2));
+        assert_eq!(c.largest_fit(7), Some(4));
+        assert_eq!(c.largest_fit(8), Some(8));
+        assert_eq!(c.largest_fit(100), Some(8));
+    }
+
+    #[test]
     fn empty_queue_waits_for_work() {
         let c = cfg(&[8], 5);
-        assert_eq!(decide(&c, 0, None, Instant::now()), Decision::WaitForWork);
+        assert_eq!(decide(&c, 0, None, ms(3)), Decision::WaitForWork);
+        for p in [SchedPolicy::FormFirst, SchedPolicy::Continuous] {
+            assert_eq!(refill(&c, p, 0, None, ms(3)), Decision::WaitForWork);
+        }
     }
 
     #[test]
     fn full_batch_dispatches_immediately() {
         let c = cfg(&[8], 5);
-        let now = Instant::now();
         // Even a brand-new full batch goes out at once.
-        assert_eq!(decide(&c, 8, Some(now), now), Decision::Dispatch(8));
+        assert_eq!(decide(&c, 8, Some(ms(10)), ms(10)), Decision::Dispatch(8));
         // More than a batch waiting: still dispatch max, rest stays.
-        assert_eq!(decide(&c, 13, Some(now), now), Decision::Dispatch(8));
+        assert_eq!(decide(&c, 13, Some(ms(10)), ms(10)), Decision::Dispatch(8));
     }
 
     #[test]
     fn partial_batch_waits_until_flush_deadline() {
         let c = cfg(&[8], 5);
-        let t0 = Instant::now();
-        let flush_at = t0 + Duration::from_millis(5);
         // Before the deadline: wait exactly until it.
-        match decide(&c, 3, Some(t0), t0 + Duration::from_millis(2)) {
-            Decision::WaitUntil(at) => assert_eq!(at, flush_at),
+        match decide(&c, 3, Some(ms(10)), ms(12)) {
+            Decision::WaitUntil(at) => assert_eq!(at, ms(15)),
             other => panic!("expected WaitUntil, got {other:?}"),
         }
     }
@@ -210,14 +319,48 @@ mod tests {
     #[test]
     fn flush_fires_at_the_deadline() {
         let c = cfg(&[8], 5);
-        let t0 = Instant::now();
-        let flush_at = t0 + Duration::from_millis(5);
         // At and after the deadline: flush the partial batch.
-        assert_eq!(decide(&c, 3, Some(t0), flush_at), Decision::Dispatch(3));
+        assert_eq!(decide(&c, 3, Some(ms(10)), ms(15)), Decision::Dispatch(3));
+        assert_eq!(decide(&c, 3, Some(ms(10)), ms(22)), Decision::Dispatch(3));
+    }
+
+    #[test]
+    fn continuous_dispatches_exact_fits_without_waiting() {
+        let c = cfg(&[2, 4, 8], 500);
+        let p = SchedPolicy::Continuous;
+        // Brand-new backlog of 5: take the exactly-fillable 4 now.
+        assert_eq!(refill(&c, p, 5, Some(ms(0)), ms(0)), Decision::Dispatch(4));
+        assert_eq!(refill(&c, p, 2, Some(ms(0)), ms(0)), Decision::Dispatch(2));
+        assert_eq!(refill(&c, p, 9, Some(ms(0)), ms(0)), Decision::Dispatch(8));
+        // Below the smallest bucket: flush semantics apply.
         assert_eq!(
-            decide(&c, 3, Some(t0), flush_at + Duration::from_millis(7)),
-            Decision::Dispatch(3)
+            refill(&c, p, 1, Some(ms(0)), ms(0)),
+            Decision::WaitUntil(ms(500))
         );
+        assert_eq!(refill(&c, p, 1, Some(ms(0)), ms(500)), Decision::Dispatch(1));
+        // FormFirst would have waited on all of these partials.
+        assert_eq!(
+            refill(&c, SchedPolicy::FormFirst, 5, Some(ms(0)), ms(0)),
+            Decision::WaitUntil(ms(500))
+        );
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(
+            SchedPolicy::parse("continuous").unwrap(),
+            SchedPolicy::Continuous
+        );
+        assert_eq!(
+            SchedPolicy::parse("form_first").unwrap(),
+            SchedPolicy::FormFirst
+        );
+        assert_eq!(
+            SchedPolicy::parse("legacy").unwrap(),
+            SchedPolicy::FormFirst
+        );
+        assert!(SchedPolicy::parse("eager").is_err());
+        assert_eq!(SchedPolicy::Continuous.tag(), "continuous");
     }
 
     #[test]

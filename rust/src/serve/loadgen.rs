@@ -4,9 +4,16 @@
 //! from Exp(rate) by inverse CDF over the repo's deterministic
 //! [`Rng`] — the same (rate, seed) always offers bit-identical load,
 //! so serving benchmarks are reproducible run to run.
+//!
+//! Multi-lane runs use [`merged_schedule`]: each lane gets its own
+//! seeded Poisson stream and the streams are merge-sorted into one
+//! timeline the single producer thread replays, pacing itself on the
+//! engine [`Clock`] via [`pace`] — which is what makes the arrival
+//! process itself virtual-clock-simulable.
 
 use std::time::Duration;
 
+use crate::serve::clock::Clock;
 use crate::util::rng::Rng;
 
 /// Arrival offsets (from generator start) for `n` requests at
@@ -30,9 +37,53 @@ pub fn poisson_offsets(n: u64, rate_per_s: f64, seed: u64) -> Vec<Duration> {
     out
 }
 
+/// One multiplexed arrival: when, which lane, and the lane-local
+/// request index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    pub at: Duration,
+    pub lane: usize,
+    /// Lane-local request index (becomes the request id).
+    pub idx: u64,
+}
+
+/// Merge independent per-lane Poisson streams — `(requests, rate)`
+/// per lane — into one ascending timeline.  Each lane's stream is
+/// seeded from `seed` and its lane index, so adding a lane never
+/// perturbs another lane's arrivals.
+pub fn merged_schedule(
+    lanes: &[(u64, f64)],
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut out = Vec::new();
+    for (lane, &(n, rate)) in lanes.iter().enumerate() {
+        let lane_seed =
+            seed.wrapping_add((lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for (idx, at) in poisson_offsets(n, rate, lane_seed)
+            .into_iter()
+            .enumerate()
+        {
+            out.push(Arrival { at, lane, idx: idx as u64 });
+        }
+    }
+    // Deterministic keyed sort; simultaneous arrivals (the rate ≤ 0
+    // back-to-back case) interleave round-robin across lanes rather
+    // than lane-major, so a saturating multi-lane offer actually
+    // contends from the first request.
+    out.sort_by_key(|a| (a.at, a.idx, a.lane));
+    out
+}
+
+/// Block on `clock` until `start + offset` (no-op when already past).
+/// The producer thread calls this between arrivals.
+pub fn pace(clock: &dyn Clock, start: Duration, offset: Duration) {
+    clock.sleep_until(start + offset);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::clock::VirtualClock;
 
     #[test]
     fn deterministic_per_seed() {
@@ -65,5 +116,51 @@ mod tests {
     fn zero_rate_is_back_to_back() {
         let offs = poisson_offsets(5, 0.0, 1);
         assert_eq!(offs, vec![Duration::ZERO; 5]);
+    }
+
+    #[test]
+    fn merged_schedule_is_sorted_and_complete() {
+        let sched = merged_schedule(&[(40, 200.0), (25, 900.0)], 5);
+        assert_eq!(sched.len(), 65);
+        assert!(sched.windows(2).all(|w| w[0].at <= w[1].at));
+        let lane0: Vec<u64> =
+            sched.iter().filter(|a| a.lane == 0).map(|a| a.idx).collect();
+        let lane1: Vec<u64> =
+            sched.iter().filter(|a| a.lane == 1).map(|a| a.idx).collect();
+        // Per-lane indices stay in order and are gap-free.
+        assert_eq!(lane0, (0..40).collect::<Vec<_>>());
+        assert_eq!(lane1, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn back_to_back_lanes_interleave() {
+        // All offsets are zero at rate 0: the merged order must
+        // round-robin the lanes, not dump lane 0 first.
+        let sched = merged_schedule(&[(3, 0.0), (3, 0.0)], 1);
+        let order: Vec<(usize, u64)> =
+            sched.iter().map(|a| (a.lane, a.idx)).collect();
+        assert_eq!(
+            order,
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]
+        );
+    }
+
+    #[test]
+    fn merged_schedule_lane_streams_are_independent() {
+        let solo = merged_schedule(&[(30, 400.0)], 9);
+        let duo = merged_schedule(&[(30, 400.0), (30, 400.0)], 9);
+        let duo_lane0: Vec<Arrival> =
+            duo.into_iter().filter(|a| a.lane == 0).collect();
+        assert_eq!(solo, duo_lane0);
+    }
+
+    #[test]
+    fn pace_uses_the_clock_not_real_sleeps() {
+        // On a virtual clock already past the target, pace returns
+        // immediately — no wall-clock wait.
+        let clock = VirtualClock::new();
+        clock.set(Duration::from_millis(10));
+        pace(&clock, Duration::ZERO, Duration::from_millis(5));
+        assert_eq!(clock.now(), Duration::from_millis(10));
     }
 }

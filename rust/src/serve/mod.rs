@@ -1,4 +1,4 @@
-//! `mpx::serve` — batched-inference serving engine.
+//! `mpx::serve` — continuous-batching, multi-model inference serving.
 //!
 //! Inference is where mixed precision pays off with no loss-scaling
 //! caveats at all (paper §3): the f16/bf16 forward artifacts can be
@@ -6,52 +6,150 @@
 //! artifacts into a measurable throughput/latency story:
 //!
 //! ```text
-//!   loadgen (deterministic Poisson arrivals, open or closed loop)
-//!      │ admission control (bounded queue; reject or backpressure)
+//!   loadgen ── merged per-lane Poisson timelines, paced on Clock
+//!      │        (open loop: reject on full; closed loop: backpressure)
 //!      ▼
-//!   RequestQueue ── next_batch: size-bucketed dynamic batching,
-//!      │            padding-aware, flush-on-timeout
+//!   lane queues ── one RequestQueue per (model, precision) lane
+//!      │ │ │        (bounded, admission-counted, Clock-stamped)
+//!      ▼ ▼ ▼
+//!   Scheduler ── weighted-deficit lane picker + continuous refill:
+//!      │          a worker slot that frees immediately takes the
+//!      │          largest exactly-fillable bucket from the picked
+//!      │          lane (flush-on-timeout pads sub-bucket remainders)
 //!      ▼
-//!   worker pool (N threads, shared compiled executables, per-worker
-//!      │         parameter replicas — ddp-style replication)
+//!   worker pool ── shared across lanes; one executor per lane per
+//!      │            worker; autoscaled (spawn/retire) off backlog
 //!      ▼
-//!   per-worker LatencyHistogram ── merge ──► ServeReport
-//!                                            (p50/p95/p99, rank-
-//!                                             interpolated)
+//!   completions ── streamed per request via CompletionFn the moment
+//!                  a batch finishes; per-lane histograms merge into
+//!                  ServeReport (rank-interpolated quantiles)
 //! ```
 //!
 //! Module layout:
 //!
-//! * [`queue`] — bounded MPMC request queue + admission control; owns
-//!   the batching wait loop.
-//! * [`batcher`] — the pure batching policy (size buckets, padding,
-//!   flush-on-timeout) and [`FormedBatch`].
+//! * [`clock`] — the [`Clock`] trait: [`WallClock`] in production,
+//!   [`VirtualClock`] in tests; every timestamp in the subsystem is a
+//!   `Duration` offset from the clock epoch.
+//! * [`queue`] — bounded per-lane MPMC request queue + admission
+//!   control, with a non-blocking poll/pop interface.
+//! * [`batcher`] — the pure batching/refill policy (size buckets,
+//!   padding, flush-on-timeout, [`SchedPolicy`]) and [`FormedBatch`].
+//! * [`sched`] — the [`Scheduler`] state machine (lane picking,
+//!   completion streaming, autoscaling) and the deterministic
+//!   [`simulate`] harness.
 //! * [`worker`] — [`BatchExecutor`] trait, the worker loop, and the
 //!   PJRT-artifact executor.
-//! * [`loadgen`] — deterministic Poisson arrival schedules.
+//! * [`loadgen`] — deterministic Poisson arrival schedules, merged
+//!   across lanes.
 //!
-//! Entry points: [`run`] (any executor — tests use a fake) and
-//! [`run_with_artifacts`] (the real PJRT path `mpx serve` drives).
+//! Entry points: [`run`] (single lane, any executor — tests use a
+//! fake), [`run_lanes`] (multi-model), and [`run_with_artifacts`]
+//! (the real PJRT path `mpx serve` drives).
+//!
+//! # Testing with `VirtualClock`
+//!
+//! Every timing-dependent policy in the subsystem is driven through
+//! plain-`Duration` timestamps, so it can be proven without a single
+//! real sleep:
+//!
+//! * *Pure decisions* — [`batcher::refill`] and
+//!   [`queue::RequestQueue::poll`] take `now` explicitly; feed them
+//!   fabricated instants.
+//! * *Whole-system replays* — [`sched::simulate`] runs the exact
+//!   production [`Scheduler`] single-threaded over an event heap on a
+//!   [`VirtualClock`]: arrivals, executions (a linear service-time
+//!   model), flush timers, deadline misses, and autoscale steps all
+//!   happen at exact virtual instants, so `rust/tests/serve_sim.rs`
+//!   asserts *equalities* (flush fires at exactly `flush_timeout`;
+//!   2:1 lane weights give exactly 2:1 service) rather than sleeping
+//!   and hoping.  Same spec in, bit-identical report out.
+//!
+//! The threaded engine below shares all of that policy code; only the
+//! blocking waits (`Condvar`) and real executors differ.
 
 pub mod batcher;
+pub mod clock;
 pub mod loadgen;
 pub mod queue;
+pub mod sched;
 pub mod worker;
 
-pub use batcher::{decide, BatcherConfig, Decision, FormedBatch};
-pub use queue::{QueueStats, Request, RequestQueue};
-pub use worker::{ArtifactExecutor, BatchExecutor, WorkerReport};
+pub use batcher::{
+    decide, refill, BatcherConfig, Decision, FormedBatch, SchedPolicy,
+};
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use queue::{QueuePoll, QueueStats, Request, RequestQueue};
+pub use sched::{
+    simulate, AutoscalePolicy, Completion, CompletionFn, LaneLoad, LaneSpec,
+    PollWork, ScaleOp, Scheduler, SimBatch, SimCompletion, SimLaneReport,
+    SimReport, SimSpec, Work,
+};
+pub use worker::{BatchExecutor, LaneTally, WorkerReport};
 
-use std::time::{Duration, Instant};
+#[cfg(feature = "xla")]
+pub use worker::ArtifactExecutor;
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
 
-use crate::config::{model_preset, ServeConfig};
-use crate::data::SyntheticDataset;
-use crate::metrics::LatencyHistogram;
-use crate::runtime::ArtifactStore;
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::metrics::{LatencyHistogram, NamedHistograms};
 use crate::util::human_duration;
 use worker::worker_loop;
+
+#[cfg(feature = "xla")]
+use anyhow::bail;
+
+#[cfg(feature = "xla")]
+use crate::config::{model_preset, Precision};
+
+#[cfg(feature = "xla")]
+use crate::data::SyntheticDataset;
+
+#[cfg(feature = "xla")]
+use crate::runtime::{Artifact, ArtifactStore};
+
+/// One lane's offered production load.
+pub struct LaneTraffic {
+    pub spec: LaneSpec,
+    /// Requests the generator offers this lane.
+    pub requests: u64,
+    /// Poisson rate (req/s); ≤ 0 means back-to-back.
+    pub arrival_rate: f64,
+}
+
+/// Engine-level knobs shared by all lanes.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOpts {
+    pub policy: SchedPolicy,
+    pub autoscale: AutoscalePolicy,
+    /// Open loop drops on a full lane; closed loop blocks instead.
+    pub open_loop: bool,
+    pub seed: u64,
+}
+
+/// Per-lane slice of a run report.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    pub name: String,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub rejected_closed: u64,
+    pub peak_depth: usize,
+    pub batches: u64,
+    pub padded: u64,
+    pub deadline_misses: u64,
+    /// Real requests only; completed = `latency.count()`.
+    pub latency: LatencyHistogram,
+}
+
+impl LaneReport {
+    pub fn completed(&self) -> u64 {
+        self.latency.count() as u64
+    }
+}
 
 /// Aggregate result of one serving run.
 #[derive(Debug)]
@@ -60,10 +158,17 @@ pub struct ServeReport {
     pub wall: Duration,
     /// Requests the load generator offered (accepted + rejected).
     pub offered: u64,
+    /// Aggregate admission stats (sums across lanes; `peak_depth` is
+    /// the max single-lane peak).
     pub queue: QueueStats,
-    /// All workers' latencies merged (real requests only).
+    /// All workers' and lanes' latencies merged (real requests only).
     pub latency: LatencyHistogram,
+    pub lanes: Vec<LaneReport>,
     pub workers: Vec<WorkerReport>,
+    /// Workers autoscaling added beyond the initial pool.
+    pub spawned: usize,
+    /// Workers autoscaling retired.
+    pub retired: usize,
 }
 
 impl ServeReport {
@@ -72,15 +177,15 @@ impl ServeReport {
     }
 
     pub fn batches(&self) -> u64 {
-        self.workers.iter().map(|w| w.batches).sum()
+        self.workers.iter().map(|w| w.batches()).sum()
     }
 
     pub fn padded(&self) -> u64 {
-        self.workers.iter().map(|w| w.padded).sum()
+        self.workers.iter().map(|w| w.padded()).sum()
     }
 
     pub fn deadline_misses(&self) -> u64 {
-        self.workers.iter().map(|w| w.deadline_misses).sum()
+        self.workers.iter().map(|w| w.deadline_misses()).sum()
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -98,6 +203,15 @@ impl ServeReport {
         }
     }
 
+    /// Per-lane latency histograms keyed by lane name.
+    pub fn lane_histograms(&self) -> NamedHistograms {
+        let mut set = NamedHistograms::new();
+        for lane in &self.lanes {
+            set.entry(&lane.name).merge(&lane.latency);
+        }
+        set
+    }
+
     /// Human-readable run summary on stdout.
     pub fn print(&self, label: &str) {
         println!(
@@ -109,12 +223,15 @@ impl ServeReport {
         );
         println!(
             "        throughput {:.1} req/s | peak queue depth {} | {} \
-             batches, {:.1}% padding | {} deadline misses",
+             batches, {:.1}% padding | {} deadline misses | {} spawned, {} \
+             retired",
             self.throughput_rps(),
             self.queue.peak_depth,
             self.batches(),
             self.padding_fraction() * 100.0,
             self.deadline_misses(),
+            self.spawned,
+            self.retired,
         );
         if let Some(s) = self.latency.summary() {
             println!(
@@ -125,25 +242,246 @@ impl ServeReport {
                 human_duration(s.max),
             );
         }
+        let lane_hists = self.lane_histograms();
+        for lane in &self.lanes {
+            let p99 = lane_hists
+                .get(&lane.name)
+                .and_then(|h| h.quantile(0.99))
+                .map(human_duration)
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "        lane {}: {} completed ({} rejected) in {} batches, \
+                 {} misses, p99 {}",
+                lane.name,
+                lane.completed(),
+                lane.rejected,
+                lane.batches,
+                lane.deadline_misses,
+                p99,
+            );
+        }
         for w in &self.workers {
             println!(
-                "        worker {}: {} requests in {} batches, busy {}",
+                "        worker {}: {} requests in {} batches, busy {}{}",
                 w.worker,
-                w.requests,
-                w.batches,
+                w.requests(),
+                w.batches(),
                 human_duration(w.busy),
+                if w.retired { " (retired)" } else { "" },
             );
         }
     }
 }
 
-/// Run the serving engine with a caller-supplied executor factory.
+/// Multi-lane serving engine with a caller-supplied executor factory.
 ///
-/// `make_executor(worker_id)` is called once *inside* each worker
-/// thread (PJRT literals are thread-local); `make_image(request_id)`
-/// produces each request's flattened image row on the generator
-/// thread.  `buckets` are the dispatchable batch sizes (ascending;
-/// the last is the max batch — see [`BatcherConfig`]).
+/// `make_executor(worker_id, lane)` is called once per lane *inside*
+/// each worker thread (PJRT literals are thread-local);
+/// `make_image(lane, request_id)` produces each request's flattened
+/// image row on the generator thread.  `on_complete` (optional)
+/// streams every request's completion as its batch finishes.
+///
+/// The initial pool is `opts.autoscale.min_workers` threads built
+/// behind a barrier (startup cost never pollutes the measured
+/// latencies); autoscaling may spawn up to `max_workers` while the
+/// generator runs, and retire them as backlog falls.
+pub fn run_lanes<E, F, G>(
+    opts: &EngineOpts,
+    lanes: Vec<LaneTraffic>,
+    clock: Arc<dyn Clock>,
+    make_executor: F,
+    mut make_image: G,
+    on_complete: Option<Box<CompletionFn>>,
+) -> Result<ServeReport>
+where
+    E: BatchExecutor,
+    F: Fn(usize, usize) -> Result<E> + Sync,
+    G: FnMut(usize, u64) -> Vec<f32>,
+{
+    let offered: u64 = lanes.iter().map(|l| l.requests).sum();
+    let deadlines: Vec<Duration> =
+        lanes.iter().map(|l| l.spec.deadline).collect();
+    let schedule = loadgen::merged_schedule(
+        &lanes
+            .iter()
+            .map(|l| (l.requests, l.arrival_rate))
+            .collect::<Vec<_>>(),
+        opts.seed,
+    );
+    let nlanes = lanes.len();
+    let sched = Scheduler::new(
+        lanes.into_iter().map(|l| l.spec).collect(),
+        opts.policy,
+        opts.autoscale,
+        clock.clone(),
+        on_complete,
+    )?;
+
+    let n0 = opts.autoscale.min_workers;
+    // Initial workers build their executors (compiles are already
+    // cached, but per-worker param replication runs the init
+    // artifact) *behind* this barrier, so startup cost never pollutes
+    // the measured latencies or throughput.
+    let ready = std::sync::Barrier::new(n0 + 1);
+
+    let (workers, wall) = std::thread::scope(|scope| {
+        let sched = &sched;
+        let make_executor = &make_executor;
+        let ready = &ready;
+        let clock_ref: &dyn Clock = &*clock;
+
+        let spawn_worker = |w: usize, with_barrier: bool| {
+            scope.spawn(move || {
+                let execs: Result<Vec<E>> =
+                    (0..nlanes).map(|lane| make_executor(w, lane)).collect();
+                // Always pass the barrier — success or not — or the
+                // producer would wait forever.
+                if with_barrier {
+                    ready.wait();
+                }
+                let out = match execs {
+                    Ok(mut execs) => {
+                        worker_loop(w, &mut execs, sched, clock_ref)
+                    }
+                    Err(e) => {
+                        sched.worker_aborted();
+                        Err(e)
+                    }
+                };
+                if out.is_err() {
+                    // A dead worker must not wedge the producer or
+                    // starve its peers: stop arrivals, let the rest
+                    // drain what is queued.
+                    sched.close_all();
+                }
+                out
+            })
+        };
+
+        sched.register_workers(n0);
+        let mut handles: Vec<_> =
+            (0..n0).map(|w| spawn_worker(w, true)).collect();
+        let mut next_worker = n0;
+
+        ready.wait();
+        let t_start = clock.now();
+
+        // This thread is the arrival process.
+        for arr in &schedule {
+            loadgen::pace(clock_ref, t_start, arr.at);
+            let req = Request::new(
+                arr.idx,
+                make_image(arr.lane, arr.idx),
+                deadlines[arr.lane],
+                clock.now(),
+            );
+            let admitted = if opts.open_loop {
+                sched.submit(arr.lane, req)
+            } else {
+                sched.submit_blocking(arr.lane, req)
+            };
+            // Closed-loop submission only fails when the lane closed;
+            // open-loop rejects on a full lane too, so check which.
+            // Either way fully-closed lanes (worker failure) mean no
+            // arrival can ever land again — stop generating.
+            if !admitted && sched.all_closed() {
+                break;
+            }
+            if let ScaleOp::Spawn(k) = sched.poll_autoscale() {
+                sched.register_workers(k);
+                for _ in 0..k {
+                    handles.push(spawn_worker(next_worker, false));
+                    next_worker += 1;
+                }
+            }
+        }
+        sched.close_all();
+
+        let reports = handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok::<_, anyhow::Error>((reports, clock.now().saturating_sub(t_start)))
+    })?;
+
+    // Aggregate: per-lane stats + tallies, all-lane latency merge.
+    let mut latency = LatencyHistogram::new();
+    let mut queue = QueueStats::default();
+    let mut lane_reports = Vec::with_capacity(nlanes);
+    for lane in 0..nlanes {
+        let qs = sched.lane_stats(lane);
+        queue.accepted += qs.accepted;
+        queue.rejected += qs.rejected;
+        queue.rejected_closed += qs.rejected_closed;
+        queue.peak_depth = queue.peak_depth.max(qs.peak_depth);
+        let mut lr = LaneReport {
+            name: sched.lane_name(lane).to_string(),
+            accepted: qs.accepted,
+            rejected: qs.rejected,
+            rejected_closed: qs.rejected_closed,
+            peak_depth: qs.peak_depth,
+            batches: 0,
+            padded: 0,
+            deadline_misses: 0,
+            latency: LatencyHistogram::new(),
+        };
+        for w in &workers {
+            let t = &w.lanes[lane];
+            lr.batches += t.batches;
+            lr.padded += t.padded;
+            lr.deadline_misses += t.deadline_misses;
+            lr.latency.merge(&t.latency);
+        }
+        latency.merge(&lr.latency);
+        lane_reports.push(lr);
+    }
+    let counters = sched.counters();
+    Ok(ServeReport {
+        wall,
+        offered,
+        queue,
+        latency,
+        lanes: lane_reports,
+        workers,
+        spawned: counters.spawned.saturating_sub(n0),
+        retired: counters.retired,
+    })
+}
+
+/// Engine options derived from a [`ServeConfig`].
+pub fn engine_opts(cfg: &ServeConfig) -> EngineOpts {
+    EngineOpts {
+        policy: cfg.policy,
+        autoscale: autoscale_policy(cfg),
+        open_loop: cfg.open_loop,
+        seed: cfg.seed,
+    }
+}
+
+/// Autoscale policy from config: `max_workers > workers` turns
+/// scaling on; `autoscale_depth` (0 ⇒ `max_batch`) is the backlog one
+/// worker absorbs before the pool grows.
+pub fn autoscale_policy(cfg: &ServeConfig) -> AutoscalePolicy {
+    if cfg.max_workers > cfg.workers {
+        AutoscalePolicy {
+            min_workers: cfg.workers,
+            max_workers: cfg.max_workers,
+            depth_per_worker: if cfg.autoscale_depth == 0 {
+                cfg.max_batch
+            } else {
+                cfg.autoscale_depth
+            },
+        }
+    } else {
+        AutoscalePolicy::fixed(cfg.workers)
+    }
+}
+
+/// Single-lane engine (the PR-1 entry point, unchanged signature):
+/// `make_executor(worker_id)` builds the one lane's executor inside
+/// each worker thread; `make_image(request_id)` produces image rows
+/// on the generator thread.  `buckets` are the dispatchable batch
+/// sizes (ascending; the last is the max batch).
 pub fn run<E, F, G>(
     cfg: &ServeConfig,
     buckets: Vec<usize>,
@@ -156,97 +494,34 @@ where
     G: FnMut(u64) -> Vec<f32>,
 {
     cfg.validate()?;
-    let bcfg = BatcherConfig::new(buckets, cfg.flush_timeout())?;
-    let queue = RequestQueue::new(cfg.queue_capacity);
-    let schedule =
-        loadgen::poisson_offsets(cfg.requests, cfg.arrival_rate, cfg.seed);
-    let deadline = cfg.deadline();
-    // Workers build their executors (compiles are already cached, but
-    // per-worker param replication runs the init artifact) *behind*
-    // this barrier, so startup cost never pollutes the measured
-    // latencies or throughput.
-    let ready = std::sync::Barrier::new(cfg.workers + 1);
-
-    let (workers, t_start) = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..cfg.workers)
-            .map(|w| {
-                let queue = &queue;
-                let bcfg = &bcfg;
-                let make_executor = &make_executor;
-                let ready = &ready;
-                scope.spawn(move || {
-                    let exec = make_executor(w);
-                    // Always pass the barrier — success or not — or
-                    // the producer would wait forever.
-                    ready.wait();
-                    let out = match exec {
-                        Ok(mut exec) => {
-                            worker_loop(w, &mut exec, queue, bcfg)
-                        }
-                        Err(e) => Err(e),
-                    };
-                    if out.is_err() {
-                        // A dead worker must not wedge the producer or
-                        // starve its peers: stop arrivals, let the
-                        // rest drain what is queued.
-                        queue.close();
-                    }
-                    out
-                })
-            })
-            .collect();
-
-        ready.wait();
-        let t_start = Instant::now();
-
-        // This thread is the arrival process.
-        for (i, off) in schedule.iter().enumerate() {
-            let at = t_start + *off;
-            let now = Instant::now();
-            if at > now {
-                std::thread::sleep(at - now);
-            }
-            let req = Request::new(i as u64, make_image(i as u64), deadline);
-            let admitted = if cfg.open_loop {
-                queue.try_enqueue(req)
-            } else {
-                queue.enqueue(req)
-            };
-            // Closed-loop enqueue only fails when the queue closed;
-            // open-loop rejects on a full queue too, so check which.
-            // Either way a closed queue (worker failure) means no
-            // arrival can ever land again — stop generating.
-            if !admitted && queue.is_closed() {
-                break;
-            }
-        }
-        queue.close();
-
-        let reports = handles
-            .into_iter()
-            .map(|h| h.join().expect("serve worker panicked"))
-            .collect::<Result<Vec<_>>>()?;
-        Ok::<_, anyhow::Error>((reports, t_start))
-    })?;
-
-    let mut latency = LatencyHistogram::new();
-    for w in &workers {
-        latency.merge(&w.latency);
-    }
-    Ok(ServeReport {
-        wall: t_start.elapsed(),
-        offered: cfg.requests,
-        queue: queue.stats(),
-        latency,
-        workers,
-    })
+    let spec = LaneSpec {
+        name: format!("{}/{}", cfg.model, cfg.precision.tag()),
+        weight: 1,
+        batcher: BatcherConfig::new(buckets, cfg.flush_timeout())?,
+        queue_capacity: cfg.queue_capacity,
+        deadline: cfg.deadline(),
+    };
+    run_lanes(
+        &engine_opts(cfg),
+        vec![LaneTraffic {
+            spec,
+            requests: cfg.requests,
+            arrival_rate: cfg.arrival_rate,
+        }],
+        Arc::new(WallClock::new()),
+        |w, _lane| make_executor(w),
+        |_lane, i| make_image(i),
+        None,
+    )
 }
 
 /// Which forward artifacts exist for power-of-two bucket sizes up to
 /// `cfg.max_batch` (manifest presence only — nothing is compiled).
+#[cfg(feature = "xla")]
 pub fn discover_buckets(
     store: &ArtifactStore,
     cfg: &ServeConfig,
+    precision: Precision,
 ) -> Vec<usize> {
     let mut buckets = Vec::new();
     let mut b = 1usize;
@@ -254,7 +529,7 @@ pub fn discover_buckets(
         if b >= cfg.max_batch {
             b = cfg.max_batch;
         }
-        if store.manifest(&cfg.fwd_artifact(b)).is_ok() {
+        if store.manifest(&cfg.fwd_artifact_for(precision, b)).is_ok() {
             buckets.push(b);
         }
         if b == cfg.max_batch {
@@ -265,41 +540,89 @@ pub fn discover_buckets(
     buckets
 }
 
-/// The real serving path: discover + compile the forward artifacts,
-/// replicate parameters per worker, and drive synthetic traffic
-/// through the engine.
+/// The real serving path: discover + compile the forward artifacts
+/// for every configured (model, precision) lane, replicate parameters
+/// per worker per lane, and drive synthetic traffic through the
+/// engine.  `cfg.requests` and `cfg.arrival_rate` are split evenly
+/// across lanes; lane weights shape the *service*, not the offer.
+#[cfg(feature = "xla")]
 pub fn run_with_artifacts(
     store: &mut ArtifactStore,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
     cfg.validate()?;
-    let buckets = discover_buckets(store, cfg);
-    if buckets.is_empty() {
-        bail!(
-            "no forward artifacts for model {} precision {} (expected \
-             e.g. {} in {}) — run `make artifacts`",
-            cfg.model,
-            cfg.precision.tag(),
-            cfg.fwd_artifact(cfg.max_batch),
-            store.dir().display()
-        );
+    struct LaneArtifacts {
+        init: Arc<Artifact>,
+        fwd: Vec<(usize, Arc<Artifact>)>,
     }
-    let fwd_by_bucket = buckets
-        .iter()
-        .map(|&b| Ok((b, store.load(&cfg.fwd_artifact(b))?)))
-        .collect::<Result<Vec<_>>>()?;
-    let init = store.load(&cfg.init_artifact())?;
+
+    let lane_precisions = cfg.effective_lanes();
+    let n = lane_precisions.len() as u64;
+    let base_requests = cfg.requests / n;
+    let rate = if cfg.arrival_rate > 0.0 {
+        cfg.arrival_rate / n as f64
+    } else {
+        0.0
+    };
+
+    let mut lane_arts = Vec::new();
+    let mut traffic = Vec::new();
+    for (i, &(precision, weight)) in lane_precisions.iter().enumerate() {
+        let buckets = discover_buckets(store, cfg, precision);
+        if buckets.is_empty() {
+            bail!(
+                "no forward artifacts for model {} precision {} (expected \
+                 e.g. {} in {}) — run `make artifacts`",
+                cfg.model,
+                precision.tag(),
+                cfg.fwd_artifact_for(precision, cfg.max_batch),
+                store.dir().display()
+            );
+        }
+        let fwd = buckets
+            .iter()
+            .map(|&b| {
+                Ok((b, store.load(&cfg.fwd_artifact_for(precision, b))?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let init = store.load(&cfg.init_artifact_for(precision))?;
+        traffic.push(LaneTraffic {
+            spec: LaneSpec {
+                name: format!("{}/{}", cfg.model, precision.tag()),
+                weight,
+                batcher: BatcherConfig::new(buckets, cfg.flush_timeout())?,
+                queue_capacity: cfg.queue_capacity,
+                deadline: cfg.deadline(),
+            },
+            // Lane 0 absorbs the division remainder.
+            requests: if i == 0 {
+                cfg.requests - base_requests * (n - 1)
+            } else {
+                base_requests
+            },
+            arrival_rate: rate,
+        });
+        lane_arts.push(LaneArtifacts { init, fwd });
+    }
 
     let preset = model_preset(&cfg.model)?;
     let dataset = SyntheticDataset::new(&preset, cfg.seed);
     let seed = cfg.seed as i32;
 
-    let make_executor = |_worker: usize| {
-        ArtifactExecutor::new(&init, fwd_by_bucket.clone(), seed)
+    let make_executor = |_worker: usize, lane: usize| {
+        let la = &lane_arts[lane];
+        ArtifactExecutor::new(&la.init, la.fwd.clone(), seed)
     };
     // One fresh synthetic image per request (request id = batch index
     // of a single-row batch, so the stream is deterministic).
-    let make_image = |i: u64| dataset.batch(i, 1, 7).images;
+    let make_image = |_lane: usize, i: u64| dataset.batch(i, 1, 7).images;
 
-    run(cfg, buckets, make_executor, make_image)
+    run_lanes(
+        &engine_opts(cfg),
+        traffic,
+        Arc::new(WallClock::new()),
+        make_executor,
+        make_image,
+        None,
+    )
 }

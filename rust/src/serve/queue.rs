@@ -1,17 +1,35 @@
-//! Bounded request queue with admission control.
+//! Bounded request queue with admission control — one per
+//! (model, precision) lane.
 //!
-//! Producers (the load generator) stamp each request on admission;
-//! consumers (workers) pull whole batches via
-//! [`RequestQueue::next_batch`], which owns the batching wait logic
-//! (size-triggered dispatch, flush-on-timeout, drain-on-close) so all
-//! locking lives in one place.  The batching *policy* itself is the
-//! pure [`decide`](crate::serve::batcher::decide) function.
+//! The queue stamps each request on admission via the engine
+//! [`Clock`] and exposes a *non-blocking* poll/pop API
+//! ([`RequestQueue::poll`] / [`RequestQueue::pop`]): the
+//! lock-and-wait coordination that used to live here (`next_batch`)
+//! moved to the [`Scheduler`](crate::serve::sched::Scheduler), which
+//! multiplexes many lanes over one worker pool.  The batching
+//! *policy* stays the pure [`refill`](crate::serve::batcher::refill)
+//! function.
+//!
+//! Explicit edge semantics (tested in `serve_subsystem`):
+//!
+//! * **Enqueue after [`close`](RequestQueue::close)** — rejected and
+//!   counted in both [`QueueStats::rejected`] and
+//!   [`QueueStats::rejected_closed`]; the blocking
+//!   [`enqueue`](RequestQueue::enqueue) never blocks on a closed
+//!   queue.
+//! * **Zero-capacity queues** — admit nothing: every enqueue is
+//!   rejected (and counted), blocking enqueue returns immediately
+//!   instead of deadlocking.  A zero-capacity lane is a valid way to
+//!   drain/disable a lane without tearing the scheduler down.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-use crate::serve::batcher::{decide, BatcherConfig, Decision, FormedBatch};
+use crate::serve::batcher::{
+    refill, BatcherConfig, Decision, FormedBatch, SchedPolicy,
+};
+use crate::serve::clock::Clock;
 
 /// One queued inference request.
 #[derive(Debug, Clone)]
@@ -19,24 +37,29 @@ pub struct Request {
     pub id: u64,
     /// Flattened image row (`image_elems` f32s).
     pub image: Vec<f32>,
-    /// Admission timestamp — latency is measured from here.  Set at
-    /// construction and re-stamped by the queue on admission, so a
-    /// closed-loop producer's backpressure wait is not billed to the
-    /// request.
-    pub enqueued: Instant,
+    /// Admission timestamp (clock-epoch offset) — latency is measured
+    /// from here.  Set at construction and re-stamped by the queue on
+    /// admission, so a closed-loop producer's backpressure wait is
+    /// not billed to the request.
+    pub enqueued: Duration,
     /// End-to-end budget from admission; misses are reported, not
     /// enforced.
     pub deadline: Duration,
 }
 
 impl Request {
-    pub fn new(id: u64, image: Vec<f32>, deadline: Duration) -> Request {
-        Request { id, image, enqueued: Instant::now(), deadline }
+    pub fn new(
+        id: u64,
+        image: Vec<f32>,
+        deadline: Duration,
+        now: Duration,
+    ) -> Request {
+        Request { id, image, enqueued: now, deadline }
     }
 
     /// Has the admission→`done` latency blown the budget?
-    pub fn missed_deadline(&self, done: Instant) -> bool {
-        done.duration_since(self.enqueued) > self.deadline
+    pub fn missed_deadline(&self, done: Duration) -> bool {
+        done.saturating_sub(self.enqueued) > self.deadline
     }
 }
 
@@ -44,8 +67,25 @@ impl Request {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct QueueStats {
     pub accepted: u64,
+    /// All rejections: full queue, zero capacity, or closed.
     pub rejected: u64,
+    /// Subset of `rejected`: arrivals after [`RequestQueue::close`].
+    pub rejected_closed: u64,
     pub peak_depth: usize,
+}
+
+/// What a free worker slot can get from this lane right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePoll {
+    /// `take` requests are dispatchable now (pop them with
+    /// [`RequestQueue::pop`]).
+    Ready(usize),
+    /// Partial batch pending — poll again at this instant.
+    WaitUntil(Duration),
+    /// Nothing queued; more may still arrive.
+    Idle,
+    /// Closed and empty — nothing will ever arrive.
+    Drained,
 }
 
 struct State {
@@ -54,70 +94,85 @@ struct State {
     stats: QueueStats,
 }
 
-/// MPMC queue: one load generator, `workers` batch consumers.
+/// MPMC queue: one load generator, many batch consumers (via the
+/// scheduler).
 pub struct RequestQueue {
     capacity: usize,
+    clock: Arc<dyn Clock>,
     state: Mutex<State>,
-    /// Signalled on enqueue/close — wakes waiting workers.
-    work: Condvar,
     /// Signalled on dequeue/close — wakes a blocked producer.
     space: Condvar,
 }
 
 impl RequestQueue {
-    pub fn new(capacity: usize) -> RequestQueue {
+    pub fn new(capacity: usize, clock: Arc<dyn Clock>) -> RequestQueue {
         RequestQueue {
-            capacity: capacity.max(1),
+            capacity,
+            clock,
             state: Mutex::new(State {
                 deque: VecDeque::new(),
                 closed: false,
                 stats: QueueStats::default(),
             }),
-            work: Condvar::new(),
             space: Condvar::new(),
         }
     }
 
     fn admit(&self, st: &mut State, mut req: Request) {
-        req.enqueued = Instant::now();
+        req.enqueued = self.clock.now();
         st.deque.push_back(req);
         st.stats.accepted += 1;
         st.stats.peak_depth = st.stats.peak_depth.max(st.deque.len());
-        self.work.notify_one();
     }
 
-    /// Open-loop admission: reject (and count) when at capacity.
+    fn reject(st: &mut State, closed: bool) -> bool {
+        st.stats.rejected += 1;
+        if closed {
+            st.stats.rejected_closed += 1;
+        }
+        false
+    }
+
+    /// Open-loop admission: reject (and count) when at capacity,
+    /// closed, or zero-capacity.
     pub fn try_enqueue(&self, req: Request) -> bool {
         let mut st = self.state.lock().unwrap();
-        if st.closed || st.deque.len() >= self.capacity {
-            st.stats.rejected += 1;
-            return false;
+        if st.closed {
+            return Self::reject(&mut st, true);
+        }
+        if st.deque.len() >= self.capacity {
+            return Self::reject(&mut st, false);
         }
         self.admit(&mut st, req);
         true
     }
 
-    /// Closed-loop admission: block until there is space (backpressure
-    /// throttles the offered load instead of dropping).
+    /// Closed-loop admission: block until there is space
+    /// (backpressure throttles the offered load instead of dropping).
+    /// Returns `false` — immediately, never blocking — on a closed or
+    /// zero-capacity queue.
     pub fn enqueue(&self, req: Request) -> bool {
         let mut st = self.state.lock().unwrap();
+        if self.capacity == 0 {
+            let closed = st.closed;
+            return Self::reject(&mut st, closed);
+        }
         while !st.closed && st.deque.len() >= self.capacity {
             st = self.space.wait(st).unwrap();
         }
         if st.closed {
-            st.stats.rejected += 1;
-            return false;
+            return Self::reject(&mut st, true);
         }
         self.admit(&mut st, req);
         true
     }
 
-    /// No more arrivals; workers drain what is queued and then stop.
+    /// No more arrivals; consumers drain what is queued and then
+    /// stop.  Further enqueues are rejected and counted.
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         drop(st);
-        self.work.notify_all();
         self.space.notify_all();
     }
 
@@ -129,54 +184,194 @@ impl RequestQueue {
         self.state.lock().unwrap().closed
     }
 
+    /// Closed *and* empty: no dispatch will ever come from this lane
+    /// again.
+    pub fn is_drained(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.closed && st.deque.is_empty()
+    }
+
     pub fn stats(&self) -> QueueStats {
         self.state.lock().unwrap().stats
     }
 
-    /// Block until a batch is ready under `cfg`, or `None` once the
-    /// queue is closed and drained.  Dispatch triggers:
-    ///
-    /// * a full `max_batch` is waiting — dispatch immediately;
-    /// * the oldest request has waited `flush_timeout` — flush the
-    ///   partial batch (bounded tail latency);
-    /// * the queue is closed — drain in `max_batch` chunks.
-    ///
-    /// Requests are popped front-first, so FIFO order is preserved
-    /// through dispatch.
-    pub fn next_batch(&self, cfg: &BatcherConfig) -> Option<FormedBatch> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.closed && st.deque.is_empty() {
-                return None;
-            }
-            let take = if st.closed {
-                st.deque.len().min(cfg.max_batch())
-            } else {
-                let oldest = st.deque.front().map(|r| r.enqueued);
-                match decide(cfg, st.deque.len(), oldest, Instant::now()) {
-                    Decision::Dispatch(take) => take,
-                    Decision::WaitUntil(at) => {
-                        let dur =
-                            at.saturating_duration_since(Instant::now());
-                        let (g, _) =
-                            self.work.wait_timeout(st, dur).unwrap();
-                        st = g;
-                        continue;
-                    }
-                    Decision::WaitForWork => {
-                        st = self.work.wait(st).unwrap();
-                        continue;
-                    }
-                }
-            };
-            debug_assert!(take > 0, "dispatch of an empty batch");
-            let mut requests = Vec::with_capacity(take);
-            for _ in 0..take {
-                requests.push(st.deque.pop_front().unwrap());
-            }
-            self.space.notify_all();
-            let bucket = cfg.bucket_for(requests.len());
-            return Some(FormedBatch { requests, bucket });
+    /// Non-blocking refill decision for this lane at `now`.  Once the
+    /// queue is closed, whatever is left is dispatchable immediately
+    /// in `max_batch` chunks.
+    pub fn poll(
+        &self,
+        cfg: &BatcherConfig,
+        policy: SchedPolicy,
+        now: Duration,
+    ) -> QueuePoll {
+        let st = self.state.lock().unwrap();
+        if st.deque.is_empty() {
+            return if st.closed { QueuePoll::Drained } else { QueuePoll::Idle };
         }
+        if st.closed {
+            return QueuePoll::Ready(st.deque.len().min(cfg.max_batch()));
+        }
+        let oldest = st.deque.front().map(|r| r.enqueued);
+        match refill(cfg, policy, st.deque.len(), oldest, now) {
+            Decision::Dispatch(take) => QueuePoll::Ready(take),
+            Decision::WaitUntil(at) => QueuePoll::WaitUntil(at),
+            Decision::WaitForWork => QueuePoll::Idle,
+        }
+    }
+
+    /// Pop up to `take` requests front-first (FIFO preserved through
+    /// dispatch) and round up to the smallest bucket that fits.
+    /// Returns `None` when the queue is empty.
+    pub fn pop(&self, cfg: &BatcherConfig, take: usize) -> Option<FormedBatch> {
+        let mut st = self.state.lock().unwrap();
+        let take = take.min(st.deque.len());
+        if take == 0 {
+            return None;
+        }
+        let mut requests = Vec::with_capacity(take);
+        for _ in 0..take {
+            requests.push(st.deque.pop_front().unwrap());
+        }
+        drop(st);
+        self.space.notify_all();
+        let bucket = cfg.bucket_for(requests.len());
+        Some(FormedBatch { requests, bucket })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::clock::VirtualClock;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![id as f32], Duration::from_secs(1), ms(0))
+    }
+
+    fn queue(capacity: usize) -> (Arc<VirtualClock>, RequestQueue) {
+        let clock = Arc::new(VirtualClock::new());
+        let q = RequestQueue::new(capacity, clock.clone());
+        (clock, q)
+    }
+
+    #[test]
+    fn admission_stamps_with_the_clock() {
+        let (clock, q) = queue(8);
+        clock.set(ms(7));
+        assert!(q.try_enqueue(req(0)));
+        let cfg = BatcherConfig::new(vec![1], ms(1)).unwrap();
+        let batch = q.pop(&cfg, 1).unwrap();
+        assert_eq!(batch.requests[0].enqueued, ms(7));
+    }
+
+    #[test]
+    fn try_enqueue_rejects_when_full() {
+        let (_clock, q) = queue(2);
+        assert!(q.try_enqueue(req(0)));
+        assert!(q.try_enqueue(req(1)));
+        assert!(!q.try_enqueue(req(2)));
+        let s = q.stats();
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.rejected_closed, 0);
+        assert_eq!(s.peak_depth, 2);
+    }
+
+    #[test]
+    fn enqueue_after_close_rejects_and_counts() {
+        let (_clock, q) = queue(8);
+        assert!(q.try_enqueue(req(0)));
+        q.close();
+        assert!(!q.try_enqueue(req(1)));
+        assert!(!q.enqueue(req(2))); // must not block either
+        let s = q.stats();
+        assert_eq!(s.accepted, 1);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.rejected_closed, 2);
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything_without_blocking() {
+        let (_clock, q) = queue(0);
+        assert!(!q.try_enqueue(req(0)));
+        assert!(!q.enqueue(req(1))); // returns, never deadlocks
+        let s = q.stats();
+        assert_eq!(s.accepted, 0);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.rejected_closed, 0);
+        q.close();
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn poll_reports_flush_deadline_and_ready_after_it() {
+        let (clock, q) = queue(64);
+        let cfg = BatcherConfig::new(vec![8], ms(40)).unwrap();
+        clock.set(ms(10));
+        for i in 0..3 {
+            assert!(q.try_enqueue(req(i)));
+        }
+        // Partial batch below the smallest bucket: wait until
+        // enqueue + flush_timeout, exactly.
+        assert_eq!(
+            q.poll(&cfg, SchedPolicy::Continuous, ms(12)),
+            QueuePoll::WaitUntil(ms(50))
+        );
+        assert_eq!(
+            q.poll(&cfg, SchedPolicy::Continuous, ms(50)),
+            QueuePoll::Ready(3)
+        );
+        let batch = q.pop(&cfg, 3).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.bucket, 8);
+        assert_eq!(batch.padding(), 5);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn close_drains_in_max_batch_chunks_fifo() {
+        let (_clock, q) = queue(64);
+        let cfg = BatcherConfig::new(vec![1, 2, 4, 8], ms(100)).unwrap();
+        for i in 0..20 {
+            assert!(q.try_enqueue(req(i)));
+        }
+        q.close();
+        let mut ids = Vec::new();
+        let mut padding = 0;
+        loop {
+            match q.poll(&cfg, SchedPolicy::Continuous, ms(0)) {
+                QueuePoll::Ready(take) => {
+                    let batch = q.pop(&cfg, take).unwrap();
+                    assert!(batch.bucket >= batch.requests.len());
+                    padding += batch.padding();
+                    ids.extend(batch.requests.iter().map(|r| r.id));
+                }
+                QueuePoll::Drained => break,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // 20 → chunks of 8, 8, 4: strict FIFO, no padding needed.
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+        assert_eq!(padding, 0);
+    }
+
+    #[test]
+    fn poll_states_for_empty_queues() {
+        let (_clock, q) = queue(8);
+        let cfg = BatcherConfig::new(vec![4], ms(5)).unwrap();
+        assert_eq!(
+            q.poll(&cfg, SchedPolicy::Continuous, ms(0)),
+            QueuePoll::Idle
+        );
+        q.close();
+        assert_eq!(
+            q.poll(&cfg, SchedPolicy::Continuous, ms(0)),
+            QueuePoll::Drained
+        );
+        assert!(q.pop(&cfg, 4).is_none());
     }
 }

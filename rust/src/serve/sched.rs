@@ -1,0 +1,1004 @@
+//! Continuous-batching multi-lane scheduler + deterministic
+//! simulation harness.
+//!
+//! One [`Scheduler`] multiplexes any number of (model, precision)
+//! *lanes* — each a [`RequestQueue`] with its own bucket set, flush
+//! timeout, and weight — over one shared worker pool:
+//!
+//! * **Continuous refill** — a worker that frees a slot immediately
+//!   asks [`Scheduler::next_work`] for the next dispatchable bucket
+//!   (policy: [`refill`](crate::serve::batcher::refill)); batches are
+//!   never formed ahead of a worker that could run them, and workers
+//!   never idle while any lane has a fillable bucket.
+//! * **Weighted-deficit lane picking** — lanes are served
+//!   deficit-round-robin: on each fresh visit a lane banks
+//!   `weight × quantum` credit and keeps dispatching while the credit
+//!   covers the batch (cost = real requests dispatched), so under
+//!   saturation lanes get service in exact proportion to their
+//!   weights, and a flushed partial in one lane is never starved by a
+//!   saturated neighbour for more than one deficit round.
+//! * **Per-request completion callbacks** — [`Scheduler::complete`]
+//!   fires the registered [`CompletionFn`] once per admitted request
+//!   (streaming responses), replacing batch-granularity completion.
+//! * **Autoscaling** — [`Scheduler::poll_autoscale`] compares total
+//!   backlog against [`AutoscalePolicy`] and tells the engine to
+//!   spawn workers or grants [`Work::Retire`] to drain them.
+//!
+//! All timing flows through the engine
+//! [`Clock`](crate::serve::clock::Clock), so the exact same scheduler
+//! state machine runs threaded under [`WallClock`]
+//! (production, [`Scheduler::next_work`] blocking on a condvar) and
+//! single-threaded under [`VirtualClock`] in [`simulate`] — an
+//! event-driven replay with no real sleeps that makes flush timing,
+//! deadline misses, fairness, and autoscaling exactly reproducible.
+//!
+//! [`WallClock`]: crate::serve::clock::WallClock
+//! [`VirtualClock`]: crate::serve::clock::VirtualClock
+
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::serve::batcher::{BatcherConfig, FormedBatch, SchedPolicy};
+use crate::serve::clock::{Clock, VirtualClock};
+use crate::serve::queue::{QueuePoll, QueueStats, Request, RequestQueue};
+
+/// Static description of one (model, precision) lane.
+#[derive(Debug, Clone)]
+pub struct LaneSpec {
+    /// Display/routing name, e.g. `"vit_tiny/mixed_f16"`.
+    pub name: String,
+    /// Deficit-round-robin weight (≥ 1): service share under
+    /// saturation is proportional to this.
+    pub weight: u64,
+    pub batcher: BatcherConfig,
+    pub queue_capacity: usize,
+    /// Per-request end-to-end budget (reported, not enforced).
+    pub deadline: Duration,
+}
+
+/// One request's completion, streamed to the registered callback the
+/// moment its batch finishes — there is no batch-granularity response.
+pub struct Completion<'a> {
+    pub lane: usize,
+    pub lane_name: &'a str,
+    pub worker: usize,
+    pub request: &'a Request,
+    /// Completion timestamp (clock-epoch offset).
+    pub done: Duration,
+    pub latency: Duration,
+    pub missed_deadline: bool,
+}
+
+/// Streaming completion callback.  Fired exactly once per *admitted*
+/// request, from the completing worker's thread, outside all
+/// scheduler locks.
+pub type CompletionFn = dyn Fn(&Completion) + Send + Sync;
+
+/// Worker-pool sizing policy, driven by total queue backlog.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Backlog one worker is expected to absorb: the pool grows
+    /// toward `ceil(depth / depth_per_worker)` workers (clamped).
+    pub depth_per_worker: usize,
+}
+
+impl AutoscalePolicy {
+    /// A fixed pool of exactly `n` workers (autoscaling off).
+    pub fn fixed(n: usize) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_workers: n,
+            max_workers: n,
+            depth_per_worker: usize::MAX,
+        }
+    }
+
+    /// Pool size this policy wants for `depth` queued requests.
+    pub fn desired(&self, depth: usize) -> usize {
+        let per = self.depth_per_worker.max(1);
+        let need = depth.saturating_add(per - 1) / per;
+        need.clamp(self.min_workers, self.max_workers)
+    }
+}
+
+/// What the engine should do about pool size right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleOp {
+    Spawn(usize),
+    Retire(usize),
+    Hold,
+}
+
+/// What [`Scheduler::next_work`] hands a worker.
+pub enum Work {
+    Batch { lane: usize, batch: FormedBatch },
+    /// Autoscale-down: this worker should exit.
+    Retire,
+    /// Every lane is closed and drained: exit.
+    Shutdown,
+}
+
+/// Non-blocking poll result (the simulation driver's interface; the
+/// blocking [`Scheduler::next_work`] loops over this).
+pub enum PollWork {
+    Batch { lane: usize, batch: FormedBatch },
+    /// A partial batch flushes at this instant; nothing sooner.
+    WaitUntil(Duration),
+    /// All lanes empty (some may still get arrivals).
+    Idle,
+    Retire,
+    Shutdown,
+}
+
+struct Lane {
+    spec: LaneSpec,
+    queue: RequestQueue,
+}
+
+struct SchedState {
+    /// Deficit-round-robin credit per lane, in request units.
+    credit: Vec<i64>,
+    /// Lane the round-robin scan starts at.
+    cursor: usize,
+    /// Has the cursor lane banked its quantum since the cursor
+    /// arrived there?
+    topped: bool,
+    /// Workers currently executing a batch.
+    busy: usize,
+    /// Live (spawned − retired/failed) workers.
+    live: usize,
+    /// Retire grants not yet handed out.
+    retiring: usize,
+    spawned: usize,
+    retired: usize,
+}
+
+/// Live/spawned/retired/busy snapshot for reports.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCounters {
+    pub live: usize,
+    pub busy: usize,
+    pub spawned: usize,
+    pub retired: usize,
+}
+
+pub struct Scheduler {
+    lanes: Vec<Lane>,
+    policy: SchedPolicy,
+    autoscale: AutoscalePolicy,
+    /// DRR quantum: the largest bucket across lanes, so one top-up
+    /// always covers at least one batch.
+    quantum: i64,
+    clock: Arc<dyn Clock>,
+    on_complete: Option<Box<CompletionFn>>,
+    state: Mutex<SchedState>,
+    /// Woken on arrivals, close, and retire grants.
+    work: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(
+        specs: Vec<LaneSpec>,
+        policy: SchedPolicy,
+        autoscale: AutoscalePolicy,
+        clock: Arc<dyn Clock>,
+        on_complete: Option<Box<CompletionFn>>,
+    ) -> Result<Scheduler> {
+        if specs.is_empty() {
+            bail!("scheduler: no lanes");
+        }
+        if autoscale.min_workers == 0
+            || autoscale.max_workers < autoscale.min_workers
+        {
+            bail!(
+                "scheduler: bad autoscale bounds [{}, {}]",
+                autoscale.min_workers,
+                autoscale.max_workers
+            );
+        }
+        let mut quantum = 0i64;
+        for s in &specs {
+            if s.weight == 0 {
+                bail!("scheduler: lane {} has zero weight", s.name);
+            }
+            s.batcher.validate()?;
+            quantum = quantum.max(s.batcher.max_batch() as i64);
+        }
+        let n = specs.len();
+        let lanes = specs
+            .into_iter()
+            .map(|spec| Lane {
+                queue: RequestQueue::new(spec.queue_capacity, clock.clone()),
+                spec,
+            })
+            .collect();
+        Ok(Scheduler {
+            lanes,
+            policy,
+            autoscale,
+            quantum,
+            clock,
+            on_complete,
+            state: Mutex::new(SchedState {
+                credit: vec![0; n],
+                cursor: 0,
+                topped: false,
+                busy: 0,
+                live: 0,
+                retiring: 0,
+                spawned: 0,
+                retired: 0,
+            }),
+            work: Condvar::new(),
+        })
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_name(&self, lane: usize) -> &str {
+        &self.lanes[lane].spec.name
+    }
+
+    pub fn lane_stats(&self, lane: usize) -> QueueStats {
+        self.lanes[lane].queue.stats()
+    }
+
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    pub fn counters(&self) -> PoolCounters {
+        let st = self.state.lock().unwrap();
+        PoolCounters {
+            live: st.live,
+            busy: st.busy,
+            spawned: st.spawned,
+            retired: st.retired,
+        }
+    }
+
+    /// Total queued (not yet dispatched) requests across lanes.
+    pub fn total_depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.depth()).sum()
+    }
+
+    /// The engine just added `n` workers to the pool.
+    pub fn register_workers(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.live += n;
+        st.spawned += n;
+    }
+
+    /// Take the scheduler lock (and release it) before notifying, so
+    /// a worker that just decided to wait cannot miss the wakeup.
+    fn kick(&self) {
+        drop(self.state.lock().unwrap());
+        self.work.notify_all();
+    }
+
+    /// Same handshake, one waiter: a single arrival can complete at
+    /// most one batch, so waking every idle worker (and paying a full
+    /// DRR scan per worker per request) would be a thundering herd.
+    fn kick_one(&self) {
+        drop(self.state.lock().unwrap());
+        self.work.notify_one();
+    }
+
+    /// Open-loop submission: rejected (and counted in the lane's
+    /// stats) when the lane is full, closed, or zero-capacity.
+    pub fn submit(&self, lane: usize, req: Request) -> bool {
+        let ok = self.lanes[lane].queue.try_enqueue(req);
+        if ok {
+            self.kick_one();
+        }
+        ok
+    }
+
+    /// Closed-loop submission: blocks for space (backpressure);
+    /// returns `false` only on a closed or zero-capacity lane.
+    pub fn submit_blocking(&self, lane: usize, req: Request) -> bool {
+        let ok = self.lanes[lane].queue.enqueue(req);
+        if ok {
+            self.kick_one();
+        }
+        ok
+    }
+
+    /// Stop arrivals on every lane; workers drain and shut down.
+    pub fn close_all(&self) {
+        for lane in &self.lanes {
+            lane.queue.close();
+        }
+        self.kick();
+    }
+
+    pub fn all_closed(&self) -> bool {
+        self.lanes.iter().all(|l| l.queue.is_closed())
+    }
+
+    fn advance(&self, st: &mut SchedState) {
+        st.cursor = (st.cursor + 1) % self.lanes.len();
+        st.topped = false;
+    }
+
+    /// One deficit-round-robin scan over the lanes at `now`.  Must be
+    /// called with the state lock held; lock order is always
+    /// scheduler-state → lane-queue.
+    fn poll_locked(&self, st: &mut SchedState, now: Duration) -> PollWork {
+        // Retire grants first, re-checked against the current backlog
+        // so a burst that arrived after the grant cancels it.
+        if st.retiring > 0 {
+            if self.autoscale.desired(self.total_depth()) < st.live {
+                st.retiring -= 1;
+                st.live -= 1;
+                st.retired += 1;
+                return PollWork::Retire;
+            }
+            st.retiring = 0;
+        }
+        if self.lanes.iter().all(|l| l.queue.is_drained()) {
+            return PollWork::Shutdown;
+        }
+        let n = self.lanes.len();
+        let mut wait: Option<Duration> = None;
+        // n + 1 visits: if the cursor lane's previous turn left it
+        // topped-up but out of credit, the scan wraps around and
+        // revisits it fresh (new top-up) instead of reporting Idle
+        // with work still queued.
+        for _ in 0..=n {
+            let i = st.cursor;
+            let lane = &self.lanes[i];
+            match lane.queue.poll(&lane.spec.batcher, self.policy, now) {
+                QueuePoll::Ready(take) => {
+                    if !st.topped {
+                        // Fresh visit: bank one quantum of credit.
+                        st.credit[i] += lane.spec.weight as i64 * self.quantum;
+                        st.topped = true;
+                    }
+                    if st.credit[i] >= take as i64 {
+                        if let Some(batch) = lane.queue.pop(&lane.spec.batcher, take)
+                        {
+                            st.credit[i] -= batch.requests.len() as i64;
+                            st.busy += 1;
+                            // Cursor sticks: the lane keeps its turn
+                            // while credit lasts.
+                            return PollWork::Batch { lane: i, batch };
+                        }
+                    }
+                    // Credit spent (or queue emptied underneath a
+                    // defensive race): next lane's turn.
+                    self.advance(st);
+                }
+                QueuePoll::WaitUntil(at) => {
+                    st.credit[i] = 0;
+                    wait = Some(wait.map_or(at, |w| w.min(at)));
+                    self.advance(st);
+                }
+                QueuePoll::Idle => {
+                    // Idle lanes bank no credit (classic DRR reset).
+                    st.credit[i] = 0;
+                    self.advance(st);
+                }
+                QueuePoll::Drained => {
+                    st.credit[i] = 0;
+                    self.advance(st);
+                }
+            }
+        }
+        match wait {
+            Some(at) => PollWork::WaitUntil(at),
+            None => PollWork::Idle,
+        }
+    }
+
+    /// Non-blocking dispatch attempt at `now` — the simulation
+    /// driver's entry point.  A returned [`PollWork::Batch`] *must*
+    /// be answered later with [`Scheduler::complete`] (or
+    /// [`Scheduler::worker_failed`]).
+    pub fn poll_work(&self, now: Duration) -> PollWork {
+        let mut st = self.state.lock().unwrap();
+        self.poll_locked(&mut st, now)
+    }
+
+    /// Blocking dispatch: waits on arrivals / flush deadlines /
+    /// close.  Production workers loop on this.
+    pub fn next_work(&self) -> Work {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = self.clock.now();
+            match self.poll_locked(&mut st, now) {
+                PollWork::Batch { lane, batch } => {
+                    return Work::Batch { lane, batch }
+                }
+                PollWork::Retire => return Work::Retire,
+                PollWork::Shutdown => return Work::Shutdown,
+                PollWork::WaitUntil(at) => {
+                    let dur = at.saturating_sub(self.clock.now());
+                    let (g, _) = self.work.wait_timeout(st, dur).unwrap();
+                    st = g;
+                }
+                PollWork::Idle => {
+                    st = self.work.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// A worker finished `batch` at `done`: free its slot and stream
+    /// each request's completion to the callback.  Returns the number
+    /// of deadline misses in the batch.
+    pub fn complete(
+        &self,
+        worker: usize,
+        lane: usize,
+        batch: &FormedBatch,
+        done: Duration,
+    ) -> u64 {
+        {
+            let mut st = self.state.lock().unwrap();
+            debug_assert!(st.busy > 0, "complete without a dispatch");
+            st.busy = st.busy.saturating_sub(1);
+        }
+        let name = &self.lanes[lane].spec.name;
+        let mut misses = 0;
+        for r in &batch.requests {
+            let missed = r.missed_deadline(done);
+            if missed {
+                misses += 1;
+            }
+            if let Some(cb) = &self.on_complete {
+                cb(&Completion {
+                    lane,
+                    lane_name: name,
+                    worker,
+                    request: r,
+                    done,
+                    latency: done.saturating_sub(r.enqueued),
+                    missed_deadline: missed,
+                });
+            }
+        }
+        misses
+    }
+
+    /// A worker died mid-batch: free its slot, drop it from the pool.
+    /// The engine should [`Scheduler::close_all`] so peers drain what
+    /// is queued instead of waiting for arrivals that already landed.
+    pub fn worker_failed(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.busy = st.busy.saturating_sub(1);
+        st.live = st.live.saturating_sub(1);
+    }
+
+    /// A worker died before taking any batch (executor construction
+    /// failed): drop it from the pool without touching `busy`.
+    pub fn worker_aborted(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.live = st.live.saturating_sub(1);
+    }
+
+    /// Compare backlog to the autoscale policy.  `Spawn(n)` asks the
+    /// engine to add workers (it must `register_workers` them);
+    /// `Retire(n)` is delivered to workers through
+    /// [`Work::Retire`] grants.
+    pub fn poll_autoscale(&self) -> ScaleOp {
+        let depth = self.total_depth();
+        let mut st = self.state.lock().unwrap();
+        let desired = self.autoscale.desired(depth);
+        if desired > st.live {
+            ScaleOp::Spawn(desired - st.live)
+        } else if desired < st.live {
+            let n = st.live - desired;
+            st.retiring = st.retiring.max(n);
+            drop(st);
+            self.kick();
+            ScaleOp::Retire(n)
+        } else {
+            ScaleOp::Hold
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic virtual-clock simulation
+// ---------------------------------------------------------------------------
+
+/// One lane's offered load in a simulation.
+#[derive(Debug, Clone)]
+pub struct LaneLoad {
+    pub spec: LaneSpec,
+    /// Arrival offsets from simulation start, ascending (e.g. from
+    /// [`crate::serve::loadgen::poisson_offsets`]).
+    pub arrivals: Vec<Duration>,
+}
+
+/// A full simulated serving scenario: lanes + load + a linear service
+/// model (`execute = overhead + per_row × bucket`), replayed on a
+/// [`VirtualClock`] with zero real sleeps.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub lanes: Vec<LaneLoad>,
+    pub policy: SchedPolicy,
+    pub autoscale: AutoscalePolicy,
+    pub exec_overhead: Duration,
+    pub exec_per_row: Duration,
+    /// Halt the replay at this virtual instant (in-flight work is
+    /// discarded); `None` runs to full drain (lanes auto-close after
+    /// their last arrival).
+    pub stop_at: Option<Duration>,
+    /// Record every completion and dispatched batch (tests).
+    pub record_detail: bool,
+}
+
+/// One streamed completion, as observed by the simulation's callback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimCompletion {
+    pub lane: usize,
+    pub id: u64,
+    pub enqueued: Duration,
+    pub done: Duration,
+    pub missed_deadline: bool,
+}
+
+/// One dispatched batch (shape only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimBatch {
+    pub lane: usize,
+    pub at: Duration,
+    pub take: usize,
+    pub bucket: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimLaneReport {
+    pub name: String,
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub deadline_misses: u64,
+    pub batches: u64,
+    pub padded: u64,
+    pub latency: LatencyHistogram,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Virtual time from start to the last completion (or `stop_at`
+    /// when the replay was truncated).
+    pub wall: Duration,
+    /// Summed virtual execute time across workers.
+    pub busy: Duration,
+    pub spawned: usize,
+    pub retired: usize,
+    pub peak_workers: usize,
+    pub lanes: Vec<SimLaneReport>,
+    /// Populated when [`SimSpec::record_detail`] is set.
+    pub completions: Vec<SimCompletion>,
+    pub batches: Vec<SimBatch>,
+}
+
+impl SimReport {
+    pub fn offered(&self) -> u64 {
+        self.lanes.iter().map(|l| l.offered).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.lanes.iter().map(|l| l.completed).sum()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.lanes.iter().map(|l| l.deadline_misses).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed() as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Mean worker utilisation over `workers` fixed slots.
+    pub fn occupancy(&self, workers: usize) -> f64 {
+        let denom = self.wall.as_secs_f64() * workers as f64;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.busy.as_secs_f64() / denom
+        }
+    }
+
+    /// All-lane latency merge.
+    pub fn latency(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for l in &self.lanes {
+            h.merge(&l.latency);
+        }
+        h
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvKind {
+    Arrival { lane: usize, idx: u64 },
+    Free { worker: usize },
+    Timer,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Ev {
+    at: Duration,
+    seq: u64,
+    kind: EvKind,
+}
+
+// Min-ordering by (time, push sequence): ties replay in push order,
+// so the whole simulation is a deterministic function of the spec.
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+struct SimTally {
+    completed: u64,
+    misses: u64,
+    latency: LatencyHistogram,
+    completions: Vec<SimCompletion>,
+}
+
+/// Replay `spec` event-by-event on a virtual clock.  No threads, no
+/// sleeps: every run with the same spec produces the same report,
+/// bit for bit.
+pub fn simulate(spec: SimSpec) -> Result<SimReport> {
+    let clock = Arc::new(VirtualClock::new());
+    let record = spec.record_detail;
+    let tally: Arc<Mutex<Vec<SimTally>>> = Arc::new(Mutex::new(
+        spec.lanes.iter().map(|_| SimTally::default()).collect(),
+    ));
+    let tally_cb = tally.clone();
+    let on_complete: Box<CompletionFn> = Box::new(move |c: &Completion| {
+        let mut t = tally_cb.lock().unwrap();
+        let t = &mut t[c.lane];
+        t.completed += 1;
+        if c.missed_deadline {
+            t.misses += 1;
+        }
+        t.latency.record(c.latency);
+        if record {
+            t.completions.push(SimCompletion {
+                lane: c.lane,
+                id: c.request.id,
+                enqueued: c.request.enqueued,
+                done: c.done,
+                missed_deadline: c.missed_deadline,
+            });
+        }
+    });
+
+    let sched = Scheduler::new(
+        spec.lanes.iter().map(|l| l.spec.clone()).collect(),
+        spec.policy,
+        spec.autoscale,
+        clock.clone(),
+        Some(on_complete),
+    )?;
+
+    // Seed the event heap with every arrival, in lane-major order.
+    let mut events = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |events: &mut BinaryHeap<Ev>, at, kind| {
+        events.push(Ev { at, seq, kind });
+        seq += 1;
+    };
+    let mut pending_arrivals = 0u64;
+    for (lane, load) in spec.lanes.iter().enumerate() {
+        for (idx, &off) in load.arrivals.iter().enumerate() {
+            push(&mut events, off, EvKind::Arrival { lane, idx: idx as u64 });
+            pending_arrivals += 1;
+        }
+    }
+
+    let workers0 = spec.autoscale.min_workers;
+    sched.register_workers(workers0);
+    // Worker slots: `busy[w]` holds the in-flight batch.  Idle slots
+    // live on a LIFO stack for deterministic assignment.
+    let mut in_flight: Vec<Option<(usize, FormedBatch)>> =
+        (0..workers0).map(|_| None).collect();
+    let mut idle: Vec<usize> = (0..workers0).rev().collect();
+    let mut live_workers = workers0;
+    let mut peak_workers = workers0;
+    let mut busy_total = Duration::ZERO;
+    let mut last_completion = Duration::ZERO;
+    let mut batches: Vec<SimBatch> = Vec::new();
+    let mut lane_batches: Vec<(u64, u64)> = vec![(0, 0); spec.lanes.len()];
+    let mut timer_scheduled: Option<Duration> = None;
+    let mut stopped = false;
+    let auto_close = spec.stop_at.is_none();
+
+    while let Some(ev) = events.pop() {
+        if let Some(stop) = spec.stop_at {
+            if ev.at > stop {
+                stopped = true;
+                break;
+            }
+        }
+        clock.set(ev.at);
+        let now = ev.at;
+        match ev.kind {
+            EvKind::Arrival { lane, idx } => {
+                pending_arrivals -= 1;
+                let req = Request::new(
+                    idx,
+                    Vec::new(),
+                    spec.lanes[lane].spec.deadline,
+                    now,
+                );
+                // Open-loop admission; rejections are counted by the
+                // lane queue's stats.
+                sched.submit(lane, req);
+                if auto_close && pending_arrivals == 0 {
+                    sched.close_all();
+                }
+            }
+            EvKind::Free { worker } => {
+                let (lane, batch) = in_flight[worker]
+                    .take()
+                    .expect("free event for an idle worker");
+                sched.complete(worker, lane, &batch, now);
+                last_completion = now;
+                idle.push(worker);
+            }
+            EvKind::Timer => {
+                timer_scheduled = None;
+            }
+        }
+
+        // Autoscale: grow the pool on backlog (retire grants are
+        // delivered through poll_work below).
+        if let ScaleOp::Spawn(k) = sched.poll_autoscale() {
+            for _ in 0..k {
+                let w = in_flight.len();
+                in_flight.push(None);
+                idle.push(w);
+            }
+            sched.register_workers(k);
+            live_workers += k;
+            peak_workers = peak_workers.max(live_workers);
+        }
+
+        // Continuous refill: hand every idle slot the next bucket.
+        while let Some(&w) = idle.last() {
+            match sched.poll_work(now) {
+                PollWork::Batch { lane, batch } => {
+                    idle.pop();
+                    let service = spec.exec_overhead
+                        + spec.exec_per_row * batch.bucket as u32;
+                    busy_total += service;
+                    lane_batches[lane].0 += 1;
+                    lane_batches[lane].1 += batch.padding() as u64;
+                    if record {
+                        batches.push(SimBatch {
+                            lane,
+                            at: now,
+                            take: batch.requests.len(),
+                            bucket: batch.bucket,
+                        });
+                    }
+                    in_flight[w] = Some((lane, batch));
+                    push(&mut events, now + service, EvKind::Free { worker: w });
+                }
+                PollWork::WaitUntil(at) => {
+                    // One pending timer is enough; earlier wins.
+                    if timer_scheduled.map_or(true, |t| at < t) {
+                        push(&mut events, at, EvKind::Timer);
+                        timer_scheduled = Some(at);
+                    }
+                    break;
+                }
+                PollWork::Retire => {
+                    // Retired slots are abandoned (never re-used);
+                    // autoscale-up later creates fresh slots.
+                    idle.pop();
+                    live_workers = live_workers.saturating_sub(1);
+                }
+                PollWork::Idle | PollWork::Shutdown => break,
+            }
+        }
+    }
+
+    let counters = sched.counters();
+    let mut tallies = tally.lock().unwrap();
+    let mut lanes = Vec::with_capacity(spec.lanes.len());
+    let mut completions = Vec::new();
+    for (i, load) in spec.lanes.iter().enumerate() {
+        let t = std::mem::take(&mut tallies[i]);
+        let qs = sched.lane_stats(i);
+        completions.extend(t.completions);
+        lanes.push(SimLaneReport {
+            name: load.spec.name.clone(),
+            offered: load.arrivals.len() as u64,
+            accepted: qs.accepted,
+            rejected: qs.rejected,
+            completed: t.completed,
+            deadline_misses: t.misses,
+            batches: lane_batches[i].0,
+            padded: lane_batches[i].1,
+            latency: t.latency,
+        });
+    }
+    // Streamed completions interleave across lanes; restore global
+    // completion order for the detail record.
+    completions.sort_by_key(|c| (c.done, c.lane, c.id));
+    Ok(SimReport {
+        wall: if stopped {
+            spec.stop_at.unwrap()
+        } else {
+            last_completion
+        },
+        busy: busy_total,
+        spawned: counters.spawned.saturating_sub(workers0),
+        retired: counters.retired,
+        peak_workers,
+        lanes,
+        completions,
+        batches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn lane(name: &str, weight: u64, buckets: &[usize]) -> LaneSpec {
+        LaneSpec {
+            name: name.into(),
+            weight,
+            batcher: BatcherConfig::new(buckets.to_vec(), ms(5)).unwrap(),
+            queue_capacity: 4096,
+            deadline: Duration::from_secs(10),
+        }
+    }
+
+    #[test]
+    fn autoscale_desired_clamps() {
+        let p = AutoscalePolicy {
+            min_workers: 2,
+            max_workers: 6,
+            depth_per_worker: 8,
+        };
+        assert_eq!(p.desired(0), 2);
+        assert_eq!(p.desired(16), 2);
+        assert_eq!(p.desired(17), 3);
+        assert_eq!(p.desired(48), 6);
+        assert_eq!(p.desired(10_000), 6);
+        let f = AutoscalePolicy::fixed(3);
+        assert_eq!(f.desired(0), 3);
+        assert_eq!(f.desired(usize::MAX), 3);
+    }
+
+    #[test]
+    fn scheduler_rejects_bad_specs() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        assert!(Scheduler::new(
+            vec![],
+            SchedPolicy::Continuous,
+            AutoscalePolicy::fixed(1),
+            clock.clone(),
+            None,
+        )
+        .is_err());
+        assert!(Scheduler::new(
+            vec![lane("a", 0, &[8])],
+            SchedPolicy::Continuous,
+            AutoscalePolicy::fixed(1),
+            clock.clone(),
+            None,
+        )
+        .is_err());
+        assert!(Scheduler::new(
+            vec![lane("a", 1, &[8])],
+            SchedPolicy::Continuous,
+            AutoscalePolicy {
+                min_workers: 2,
+                max_workers: 1,
+                depth_per_worker: 1,
+            },
+            clock,
+            None,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn drr_serves_saturated_lanes_by_weight() {
+        // Two saturated bucket-8 lanes, weights 2:1, one slot: the
+        // dispatch pattern is exactly A, A, B repeating.
+        let clock = Arc::new(VirtualClock::new());
+        let sched = Scheduler::new(
+            vec![lane("a", 2, &[8]), lane("b", 1, &[8])],
+            SchedPolicy::Continuous,
+            AutoscalePolicy::fixed(1),
+            clock.clone(),
+            None,
+        )
+        .unwrap();
+        sched.register_workers(1);
+        for i in 0..64 {
+            sched.submit(0, Request::new(i, vec![], ms(1000), ms(0)));
+            sched.submit(1, Request::new(i, vec![], ms(1000), ms(0)));
+        }
+        let mut picks = Vec::new();
+        for _ in 0..9 {
+            match sched.poll_work(ms(0)) {
+                PollWork::Batch { lane, batch } => {
+                    picks.push(lane);
+                    sched.complete(0, lane, &batch, ms(1));
+                }
+                _ => panic!("expected a batch"),
+            }
+        }
+        assert_eq!(picks, vec![0, 0, 1, 0, 0, 1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn simulate_is_deterministic() {
+        let mk = || SimSpec {
+            lanes: vec![LaneLoad {
+                spec: lane("a", 1, &[1, 2, 4, 8]),
+                arrivals: crate::serve::loadgen::poisson_offsets(
+                    200, 4000.0, 7,
+                ),
+            }],
+            policy: SchedPolicy::Continuous,
+            autoscale: AutoscalePolicy::fixed(2),
+            exec_overhead: Duration::from_micros(200),
+            exec_per_row: Duration::from_micros(100),
+            stop_at: None,
+            record_detail: true,
+        };
+        let a = simulate(mk()).unwrap();
+        let b = simulate(mk()).unwrap();
+        assert_eq!(a.completed(), 200);
+        assert_eq!(a.wall, b.wall);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.batches, b.batches);
+    }
+
+    #[test]
+    fn simulate_drains_everything_without_loss() {
+        let rep = simulate(SimSpec {
+            lanes: vec![LaneLoad {
+                spec: lane("a", 1, &[8]),
+                arrivals: vec![Duration::ZERO; 37],
+            }],
+            policy: SchedPolicy::Continuous,
+            autoscale: AutoscalePolicy::fixed(2),
+            exec_overhead: ms(1),
+            exec_per_row: Duration::ZERO,
+            stop_at: None,
+            record_detail: false,
+        })
+        .unwrap();
+        assert_eq!(rep.completed(), 37);
+        assert_eq!(rep.lanes[0].rejected, 0);
+        // 37 back-to-back into bucket 8 = 4 full + drain chunks.
+        assert!(rep.lanes[0].batches >= 5);
+        assert!(rep.wall > Duration::ZERO);
+    }
+}

@@ -1,24 +1,39 @@
 //! Executor pool: per-worker model replicas driving the shared
 //! compiled executables.
 //!
-//! Each worker thread builds its own [`BatchExecutor`] *inside the
-//! thread* (PJRT literals are not `Send`), pulls formed batches from
-//! the shared queue, and accounts per-request latency into its own
-//! [`LatencyHistogram`]; the server merges the histograms afterwards.
+//! Each worker thread builds one [`BatchExecutor`] *per lane* inside
+//! the thread (PJRT literals are not `Send`), then loops on
+//! [`Scheduler::next_work`]: the scheduler continuously refills free
+//! slots from whichever lane the weighted-deficit picker selects, so
+//! a worker serves every (model, precision) lane, not one queue.
+//! Per-request latency lands in the worker's own per-lane
+//! [`LatencyHistogram`]s (merged by the engine afterwards), and
+//! completions are streamed through the scheduler's callback the
+//! moment a batch finishes.
+//!
 //! The compiled executables themselves are shared across workers via
-//! [`SharedExecutable`](crate::runtime::SharedExecutable) — one
-//! compile, N replicas of the (cheap) parameter literals, exactly the
-//! replication scheme `trainer::ddp` uses for shards.
+//! [`SharedExecutable`] — one compile, N replicas of the (cheap)
+//! parameter literals, exactly the replication scheme `trainer::ddp`
+//! uses for shards.
+//!
+//! [`SharedExecutable`]: crate::runtime::SharedExecutable
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::metrics::LatencyHistogram;
+use crate::serve::clock::Clock;
+use crate::serve::sched::{Scheduler, Work};
+
+#[cfg(feature = "xla")]
+use std::sync::Arc;
+
+#[cfg(feature = "xla")]
+use anyhow::bail;
+
+#[cfg(feature = "xla")]
 use crate::runtime::{lit_f32, lit_scalar_i32, read_f32, Artifact};
-use crate::serve::batcher::BatcherConfig;
-use crate::serve::queue::RequestQueue;
 
 /// A loaded model replica that can run one padded batch.
 pub trait BatchExecutor {
@@ -27,65 +42,119 @@ pub trait BatchExecutor {
     fn execute(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>>;
 }
 
-/// Per-worker accounting, merged into the run report.
-#[derive(Debug, Clone)]
-pub struct WorkerReport {
-    pub worker: usize,
+/// One worker's accounting for one lane.
+#[derive(Debug, Clone, Default)]
+pub struct LaneTally {
     pub batches: u64,
     pub requests: u64,
     pub padded: u64,
     pub deadline_misses: u64,
-    /// Wall time spent inside `execute` (utilisation numerator).
-    pub busy: Duration,
     pub latency: LatencyHistogram,
 }
 
+/// Per-worker accounting, merged into the run report.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub worker: usize,
+    /// Exited via an autoscale [`Work::Retire`] grant.
+    pub retired: bool,
+    /// Wall time spent inside `execute` (utilisation numerator).
+    pub busy: Duration,
+    /// Indexed by lane.
+    pub lanes: Vec<LaneTally>,
+}
+
 impl WorkerReport {
-    fn new(worker: usize) -> WorkerReport {
+    fn new(worker: usize, lanes: usize) -> WorkerReport {
         WorkerReport {
             worker,
-            batches: 0,
-            requests: 0,
-            padded: 0,
-            deadline_misses: 0,
+            retired: false,
             busy: Duration::ZERO,
-            latency: LatencyHistogram::new(),
+            lanes: (0..lanes).map(|_| LaneTally::default()).collect(),
         }
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.lanes.iter().map(|l| l.batches).sum()
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.lanes.iter().map(|l| l.requests).sum()
+    }
+
+    pub fn padded(&self) -> u64 {
+        self.lanes.iter().map(|l| l.padded).sum()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.lanes.iter().map(|l| l.deadline_misses).sum()
+    }
+
+    /// All-lane latency merge for this worker.
+    pub fn latency(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for l in &self.lanes {
+            h.merge(&l.latency);
+        }
+        h
     }
 }
 
-/// One worker's life: pull batches until the queue closes and drains.
+/// One worker's life: pull scheduler work until every lane drains (or
+/// an autoscale retire grant arrives).
 ///
-/// Latency is measured admission → batch completion, for *real*
-/// requests only — padding rows are ballast and never recorded (the
-/// padded-batch accounting the tests pin down).
+/// `execs` holds one executor per lane, in lane order.  Latency is
+/// measured admission → batch completion, for *real* requests only —
+/// padding rows are ballast and never recorded.  On executor failure
+/// the worker frees its slot, closes all lanes (so peers drain what
+/// is queued instead of waiting forever), and propagates the error.
 pub fn worker_loop<E: BatchExecutor>(
     worker: usize,
-    exec: &mut E,
-    queue: &RequestQueue,
-    cfg: &BatcherConfig,
+    execs: &mut [E],
+    sched: &Scheduler,
+    clock: &dyn Clock,
 ) -> Result<WorkerReport> {
-    let mut rep = WorkerReport::new(worker);
+    debug_assert_eq!(execs.len(), sched.lanes());
+    let mut rep = WorkerReport::new(worker, sched.lanes());
     // One pooled pack buffer per worker, cycled across batches — the
     // padding/pack path allocates nothing in steady state.
     let pool = crate::hostkernel::BufferPool::global();
     let mut images = pool.take_f32(0);
-    while let Some(batch) = queue.next_batch(cfg) {
-        batch.padded_images_into(&mut images);
-        let t0 = Instant::now();
-        exec.execute(&images, batch.bucket).with_context(|| {
-            format!("worker {worker}: batch of {}", batch.bucket)
-        })?;
-        let done = Instant::now();
-        rep.busy += done - t0;
-        rep.batches += 1;
-        rep.padded += batch.padding() as u64;
-        for r in &batch.requests {
-            rep.latency.record(done.duration_since(r.enqueued));
-            if r.missed_deadline(done) {
-                rep.deadline_misses += 1;
+    loop {
+        match sched.next_work() {
+            Work::Shutdown => break,
+            Work::Retire => {
+                rep.retired = true;
+                break;
             }
-            rep.requests += 1;
+            Work::Batch { lane, batch } => {
+                batch.padded_images_into(&mut images);
+                let t0 = clock.now();
+                let res = execs[lane].execute(&images, batch.bucket);
+                let done = clock.now();
+                if let Err(e) = res {
+                    sched.worker_failed();
+                    sched.close_all();
+                    pool.put_f32(images);
+                    return Err(e).with_context(|| {
+                        format!(
+                            "worker {worker}: batch of {} on lane {}",
+                            batch.bucket,
+                            sched.lane_name(lane)
+                        )
+                    });
+                }
+                let misses = sched.complete(worker, lane, &batch, done);
+                let t = &mut rep.lanes[lane];
+                t.batches += 1;
+                t.padded += batch.padding() as u64;
+                t.deadline_misses += misses;
+                for r in &batch.requests {
+                    t.latency.record(done.saturating_sub(r.enqueued));
+                    t.requests += 1;
+                }
+                rep.busy += done.saturating_sub(t0);
+            }
         }
     }
     pool.put_f32(images);
@@ -94,11 +163,12 @@ pub fn worker_loop<E: BatchExecutor>(
 
 /// [`BatchExecutor`] over the AOT forward artifacts: one compiled
 /// executable per bucket size (all shared), one parameter replica per
-/// worker.
+/// worker per lane.
 ///
 /// The replica is materialised by re-running the deterministic init
 /// artifact with the worker-shared seed — identical weights on every
 /// worker without moving literals across threads.
+#[cfg(feature = "xla")]
 pub struct ArtifactExecutor {
     /// `(bucket, fwd artifact)`, ascending by bucket.
     fwd_by_bucket: Vec<(usize, Arc<Artifact>)>,
@@ -108,6 +178,7 @@ pub struct ArtifactExecutor {
     prange: std::ops::Range<usize>,
 }
 
+#[cfg(feature = "xla")]
 impl ArtifactExecutor {
     /// Build inside the worker thread.
     pub fn new(
@@ -132,6 +203,7 @@ impl ArtifactExecutor {
     }
 }
 
+#[cfg(feature = "xla")]
 impl BatchExecutor for ArtifactExecutor {
     fn execute(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
         let (_, fwd) = self

@@ -1,15 +1,72 @@
 //! Shared helpers for the integration test binaries (`mod common;`).
+//!
+//! Two access levels:
+//!
+//! * [`manifests`] — manifest/HLO-text file reads only.  Needs no
+//!   PJRT client and no `xla` feature, so manifest-level cross-checks
+//!   (e.g. `memmodel_cross_check`) run even in the host-only
+//!   `--no-default-features` build.
+//! * [`store`] — the full [`ArtifactStore`] (compiles executables via
+//!   PJRT); only exists with the `xla` feature.
+//!
+//! Both return `None` (with a note) when the artifacts have not been
+//! built, so `cargo test` stays meaningful on fresh clones and in CI
+//! where `make artifacts` has not run.
 
+use std::path::PathBuf;
+
+use mpx::pytree::Manifest;
+
+#[cfg(feature = "xla")]
 use mpx::runtime::ArtifactStore;
 
+/// Manifest-only view of the artifact directory (no PJRT client).
+#[allow(dead_code)]
+pub struct ManifestDir {
+    dir: PathBuf,
+}
+
+#[allow(dead_code)]
+impl ManifestDir {
+    pub fn manifest(&self, name: &str) -> anyhow::Result<Manifest> {
+        let path = self.dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)?;
+        Manifest::parse(&text)
+    }
+
+    pub fn hlo_text(&self, name: &str) -> anyhow::Result<String> {
+        Ok(std::fs::read_to_string(
+            self.dir.join(format!("{name}.hlo.txt")),
+        )?)
+    }
+}
+
+/// Open the artifact directory for manifest/HLO reads, or `None`
+/// (test skips with a note) when it does not exist.
+#[allow(dead_code)]
+pub fn manifests() -> Option<ManifestDir> {
+    let dir = PathBuf::from(
+        std::env::var("MPX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if dir.is_dir() {
+        Some(ManifestDir { dir })
+    } else {
+        eprintln!(
+            "skipping: artifact directory {} not found — run `make artifacts`",
+            dir.display()
+        );
+        None
+    }
+}
+
 /// Open the artifact store, or `None` when the artifacts have not
-/// been built — the caller's test skips with a note, which keeps
-/// `cargo test` meaningful on fresh clones and in CI where
-/// `make artifacts` has not run.
+/// been built — the caller's test skips with a note.
 ///
 /// Each test builds its own store (and PJRT client): the xla crate's
 /// client is Rc-based (!Send), so it cannot live in a shared static
 /// across the test harness's threads.
+#[cfg(feature = "xla")]
+#[allow(dead_code)]
 pub fn store() -> Option<ArtifactStore> {
     match ArtifactStore::open_default() {
         Ok(s) => Some(s),

@@ -408,7 +408,12 @@ fn pooled_padded_images_match_allocating_path() {
     use std::time::Duration;
     let reqs: Vec<Request> = (0..3)
         .map(|i| {
-            Request::new(i, vec![i as f32; 8], Duration::from_secs(1))
+            Request::new(
+                i,
+                vec![i as f32; 8],
+                Duration::from_secs(1),
+                Duration::ZERO,
+            )
         })
         .collect();
     let batch = FormedBatch { requests: reqs, bucket: 8 };

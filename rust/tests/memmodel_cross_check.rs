@@ -1,5 +1,9 @@
 //! Cross-checks between the analytic memory model, the AOT manifests
 //! and the HLO census — the Fig. 2 credibility tests.
+//!
+//! Everything here reads manifest/HLO *files* only (no PJRT client),
+//! so the suite runs under `--no-default-features` too — it still
+//! skips gracefully when `make artifacts` has not produced the files.
 
 use mpx::config::{Precision, VIT_BASE, VIT_DESKTOP, VIT_TINY};
 use mpx::hlo::HloModule;
@@ -7,7 +11,7 @@ use mpx::memmodel::ActivationModel;
 use mpx::pytree::Which;
 
 mod common;
-use common::store;
+use common::manifests as store;
 
 #[test]
 fn analytic_param_count_matches_manifests_exactly() {

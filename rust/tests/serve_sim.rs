@@ -1,0 +1,293 @@
+//! Virtual-clock simulation tests for the continuous-batching
+//! scheduler (`mpx::serve::sched`).
+//!
+//! Every test replays a scenario through `serve::simulate` — the
+//! exact production `Scheduler` state machine driven single-threaded
+//! over an event heap on a `VirtualClock`.  No test body sleeps, ever
+//! (`std::thread::sleep` does not appear in this file): timing
+//! assertions are *equalities* on virtual instants, not tolerances
+//! around real ones, and every run is bit-identical for a given spec.
+
+use std::time::Duration;
+
+use mpx::serve::{
+    loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
+    SchedPolicy, SimReport, SimSpec,
+};
+
+fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+fn lane(
+    name: &str,
+    weight: u64,
+    buckets: &[usize],
+    flush: Duration,
+    deadline: Duration,
+) -> LaneSpec {
+    LaneSpec {
+        name: name.into(),
+        weight,
+        batcher: BatcherConfig::new(buckets.to_vec(), flush).unwrap(),
+        queue_capacity: 10_000,
+        deadline,
+    }
+}
+
+#[test]
+fn flush_on_timeout_fires_at_exactly_flush_timeout() {
+    // Three requests trickle into a bucket-8 lane (nothing below the
+    // bucket can exact-fill) with a 5 ms flush timeout and one idle
+    // worker.  The partial batch must dispatch at *exactly*
+    // oldest-enqueue + 5 ms — not at close, not a tick late.
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("a", 1, &[8], ms(5), Duration::from_secs(1)),
+            arrivals: vec![ms(0), ms(1), ms(2)],
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: ms(1),
+        exec_per_row: Duration::ZERO,
+        // Hold the lane open well past the flush deadline so the
+        // dispatch can only come from the flush timer.
+        stop_at: Some(Duration::from_secs(1)),
+        record_detail: true,
+    })
+    .unwrap();
+
+    // One batch, dispatched at exactly t = 0 + flush_timeout.
+    assert_eq!(rep.batches.len(), 1);
+    let b = &rep.batches[0];
+    assert_eq!(b.at, ms(5), "flush fired at {:?}, want 5ms exactly", b.at);
+    assert_eq!(b.take, 3);
+    assert_eq!(b.bucket, 8);
+    assert_eq!(rep.lanes[0].padded, 5);
+
+    // All three complete together at flush + service.
+    assert_eq!(rep.completions.len(), 3);
+    for c in &rep.completions {
+        assert_eq!(c.done, ms(6));
+    }
+    // Exact per-request latencies: 6, 5, 4 ms by arrival order.
+    let lat: Vec<Duration> = rep
+        .completions
+        .iter()
+        .map(|c| c.done - c.enqueued)
+        .collect();
+    assert_eq!(lat, vec![ms(6), ms(5), ms(4)]);
+    assert_eq!(rep.wall, ms(6));
+}
+
+#[test]
+fn continuous_refill_keeps_occupancy_above_floor_under_poisson_load() {
+    // 3000 Poisson arrivals at ~77 % of full-batch capacity over a
+    // fixed 4-worker pool.  Continuous refill hands every freed slot
+    // the largest exactly-fillable bucket immediately, so workers
+    // stay saturated while the backlog lasts: mean occupancy must
+    // clear a 0.6 floor (offered utilisation is ~0.77; smaller
+    // batches only push busy time *up*).
+    let spec = SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane(
+                "a",
+                1,
+                &[1, 2, 4, 8],
+                ms(2),
+                Duration::from_secs(10),
+            ),
+            arrivals: loadgen::poisson_offsets(3000, 19_000.0, 11),
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(4),
+        exec_overhead: Duration::from_micros(100),
+        exec_per_row: Duration::from_micros(150),
+        stop_at: None,
+        record_detail: false,
+    };
+    let rep = simulate(spec.clone()).unwrap();
+    assert_eq!(rep.completed(), 3000, "under-capacity load must all finish");
+    assert_eq!(rep.lanes[0].rejected, 0);
+    let occ = rep.occupancy(4);
+    assert!(
+        occ >= 0.6,
+        "worker occupancy {occ:.3} fell below the 0.6 floor"
+    );
+    assert!(occ <= 1.0 + 1e-9, "occupancy {occ:.3} over 1 is impossible");
+
+    // And the whole replay is deterministic: same spec, same report.
+    let again = simulate(spec).unwrap();
+    assert_eq!(rep.wall, again.wall);
+    assert_eq!(rep.busy, again.busy);
+    assert_eq!(
+        rep.lanes[0].latency.quantile(0.99),
+        again.lanes[0].latency.quantile(0.99)
+    );
+}
+
+#[test]
+fn deadline_miss_accounting_is_exact() {
+    // Five simultaneous arrivals, bucket-1 lane, one worker, 10 ms
+    // service, 25 ms deadline: completions land at 10/20/30/40/50 ms,
+    // so exactly requests 3, 4, 5 miss.  Not a statistical bound —
+    // the exact set.
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("a", 1, &[1], ms(1), ms(25)),
+            arrivals: vec![ms(0); 5],
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: ms(10),
+        exec_per_row: Duration::ZERO,
+        stop_at: None,
+        record_detail: true,
+    })
+    .unwrap();
+
+    assert_eq!(rep.completed(), 5);
+    assert_eq!(rep.deadline_misses(), 3);
+    assert_eq!(rep.lanes[0].deadline_misses, 3);
+    let done: Vec<Duration> =
+        rep.completions.iter().map(|c| c.done).collect();
+    assert_eq!(done, vec![ms(10), ms(20), ms(30), ms(40), ms(50)]);
+    let missed: Vec<bool> =
+        rep.completions.iter().map(|c| c.missed_deadline).collect();
+    assert_eq!(missed, vec![false, false, true, true, true]);
+    assert_eq!(rep.wall, ms(50));
+}
+
+#[test]
+fn two_lanes_with_2_to_1_weights_get_2_to_1_service_under_saturation() {
+    // Both lanes saturated (8000 back-to-back arrivals each), one
+    // worker, 1 ms per batch, truncated at t = 600 ms: the
+    // weighted-deficit picker must produce the exact A,A,B dispatch
+    // cycle, i.e. 400 lane-a batches (3200 requests) to 200 lane-b
+    // batches (1600 requests).  Exactly 2:1 — not approximately.
+    let rep = simulate(SimSpec {
+        lanes: vec![
+            LaneLoad {
+                spec: lane("a", 2, &[8], ms(5), Duration::from_secs(10)),
+                arrivals: vec![Duration::ZERO; 8000],
+            },
+            LaneLoad {
+                spec: lane("b", 1, &[8], ms(5), Duration::from_secs(10)),
+                arrivals: vec![Duration::ZERO; 8000],
+            },
+        ],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: ms(1),
+        exec_per_row: Duration::ZERO,
+        stop_at: Some(ms(600)),
+        record_detail: true,
+    })
+    .unwrap();
+
+    // Dispatches happen at t = 0, 1, …, 600 ms (the t = 600 batch is
+    // in flight when the replay truncates, so it is dispatched but
+    // not completed): 601 dispatches = 401 A + 200 B; 600 completed
+    // batches = 400 A + 200 B — exactly 2:1 service in requests.
+    assert_eq!(rep.lanes[0].batches, 401);
+    assert_eq!(rep.lanes[1].batches, 200);
+    assert_eq!(rep.lanes[0].completed, 3200);
+    assert_eq!(rep.lanes[1].completed, 1600);
+    // The dispatch pattern itself: A, A, B repeating from the start.
+    let first9: Vec<usize> =
+        rep.batches.iter().take(9).map(|b| b.lane).collect();
+    assert_eq!(first9, vec![0, 0, 1, 0, 0, 1, 0, 0, 1]);
+    // No padding under saturation: every batch a full bucket.
+    assert_eq!(rep.lanes[0].padded + rep.lanes[1].padded, 0);
+}
+
+#[test]
+fn autoscaler_grows_the_pool_on_backlog_and_completes_everything() {
+    // A 64-request burst into a 1..4-worker pool that scales at 8
+    // queued requests per worker: the pool must grow past its
+    // initial size, never exceed the ceiling, and still drain every
+    // request.
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("a", 1, &[8], ms(2), Duration::from_secs(10)),
+            arrivals: vec![Duration::ZERO; 64],
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 4,
+            depth_per_worker: 8,
+        },
+        exec_overhead: ms(5),
+        exec_per_row: Duration::ZERO,
+        stop_at: None,
+        record_detail: false,
+    })
+    .unwrap();
+
+    assert_eq!(rep.completed(), 64);
+    assert!(rep.spawned >= 1, "backlog never grew the pool");
+    assert!(rep.peak_workers > 1);
+    assert!(rep.peak_workers <= 4, "pool exceeded max_workers");
+}
+
+#[test]
+fn continuous_beats_form_first_on_identical_simulated_load() {
+    // The bench acceptance bar, as a test: identical Poisson traffic,
+    // identical 2-worker pool — continuous batching must complete the
+    // run no slower than the old form-whole-batch-then-execute loop
+    // (it dispatches exact-fill buckets instead of idling toward
+    // flush deadlines), and cut p50 latency.  `stop_at` far in the
+    // future keeps the lanes open, so form-first pays its real flush
+    // stalls instead of being bailed out by close-drain.
+    let run = |policy: SchedPolicy| -> SimReport {
+        simulate(SimSpec {
+            lanes: vec![LaneLoad {
+                spec: lane(
+                    "a",
+                    1,
+                    &[1, 2, 4, 8],
+                    ms(20),
+                    Duration::from_secs(10),
+                ),
+                // 250 req/s < max_batch/flush_timeout (8 / 20 ms =
+                // 400 req/s): form-first cannot fill a bucket before
+                // the flush fires, so its stalls are structural, not
+                // a seed accident.
+                arrivals: loadgen::poisson_offsets(2003, 250.0, 42),
+            }],
+            policy,
+            autoscale: AutoscalePolicy::fixed(2),
+            exec_overhead: Duration::from_micros(300),
+            exec_per_row: Duration::from_micros(130),
+            stop_at: Some(Duration::from_secs(3600)),
+            record_detail: false,
+        })
+        .unwrap()
+    };
+    let form_first = run(SchedPolicy::FormFirst);
+    let continuous = run(SchedPolicy::Continuous);
+    assert_eq!(form_first.completed(), 2003);
+    assert_eq!(continuous.completed(), 2003);
+    // Below the flush-fill threshold, form-first's median request
+    // sits out most of a flush window; continuous dispatches on
+    // arrival. The gap is an order of magnitude, not a tolerance.
+    assert!(
+        continuous.wall <= form_first.wall,
+        "continuous drained in {:?}, form-first in {:?}",
+        continuous.wall,
+        form_first.wall
+    );
+    let p50_c = continuous.latency().quantile(0.5).unwrap();
+    let p50_f = form_first.latency().quantile(0.5).unwrap();
+    assert!(
+        p50_c < p50_f,
+        "continuous p50 {p50_c:?} not below form-first {p50_f:?}"
+    );
+    assert!(
+        continuous.throughput_rps() >= form_first.throughput_rps(),
+        "continuous {:.1} rps below form-first {:.1} rps",
+        continuous.throughput_rps(),
+        form_first.throughput_rps()
+    );
+}
