@@ -5,16 +5,20 @@
 //! mixed_f16 forwards run as two *lanes of one engine* (shared worker
 //! pool, weighted-deficit scheduling, per-request streamed
 //! completions), so the precision comparison happens under identical
-//! contention instead of in two separate runs.  Per-request latency
-//! quantiles come from the shared rank-interpolated
-//! [`LatencyHistogram`](mpx::metrics::LatencyHistogram) — inference
-//! is where mixed precision has no loss-scaling caveats at all.
+//! contention instead of in two separate runs.  Each lane carries its
+//! own SLO (`LaneConfig`), so the latency-aware bucket planner picks
+//! the batch sizes and flush timeout per lane before the engine
+//! starts — the plan is printed first, then measured against the real
+//! run.  Per-request latency quantiles come from the shared
+//! rank-interpolated [`LatencyHistogram`](mpx::metrics::LatencyHistogram)
+//! — inference is where mixed precision has no loss-scaling caveats
+//! at all.
 //!
 //! ```bash
 //! cargo run --release --example serve_inference -- [requests]
 //! ```
 
-use mpx::config::{Precision, ServeConfig};
+use mpx::config::{LaneConfig, Precision, ServeConfig};
 use mpx::runtime::ArtifactStore;
 use mpx::serve;
 use mpx::util::human_duration;
@@ -26,20 +30,34 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(400);
     let mut store = ArtifactStore::open_default()?;
 
+    // Two lanes with their own SLOs: both offered back-to-back
+    // (closed loop) to measure service capacity under contention, but
+    // with a tighter deadline on the mixed lane — the planner plans
+    // each lane's buckets against its own budget.
     let cfg = ServeConfig {
-        lane_precisions: vec![Precision::Fp32, Precision::MixedF16],
-        lane_weights: vec![1, 1],
+        lanes: vec![
+            LaneConfig {
+                deadline_ms: 250,
+                ..LaneConfig::named("full_fp32", Precision::Fp32)
+            },
+            LaneConfig {
+                deadline_ms: 120,
+                ..LaneConfig::named("mixed_f16", Precision::MixedF16)
+            },
+        ],
         requests: total,
         workers: 2,
-        // closed loop, back-to-back: measure service capacity
-        arrival_rate: 0.0,
         open_loop: false,
         ..ServeConfig::default()
     };
 
+    // What the planner wants to run (and AOT-compile) for this load.
+    let plan = serve::plan_for_config(&cfg)?;
+    plan.print();
+
     println!(
-        "serving {total} requests over 2 lanes (batch ≤ {}, {}, {} workers, \
-         continuous batching):\n",
+        "\nserving {total} requests over 2 lanes (batch ≤ {}, {}, {} \
+         workers, continuous batching):\n",
         cfg.max_batch, cfg.model, cfg.workers
     );
     let report = serve::run_with_artifacts(&mut store, &cfg)?;

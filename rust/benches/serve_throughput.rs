@@ -20,11 +20,17 @@
 //!    offered load whose p99 stays under 3× the calibrated p50.
 //!    Missing artifacts skip with a note, never fail.
 //!
+//! A third section replays the latency-aware bucket planner against
+//! the static bucket list on an interactive-SLO lane and records the
+//! comparison (chosen buckets, flush, predicted vs measured p99,
+//! padding) into `BENCH_planner.json`.
+//!
 //! `MPX_BENCH_SMOKE=1` shrinks the simulated request count so CI can
 //! emit the report in seconds.
 
 use std::time::Duration;
 
+use mpx::serve::planner::{self, LaneProfile, PlannerConfig, ServiceModel};
 use mpx::serve::{
     loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
     SchedPolicy, SimReport, SimSpec,
@@ -254,6 +260,131 @@ fn sim_section(report: &mut JsonReport) {
     );
 }
 
+/// Planner vs static buckets on an interactive-SLO lane, replayed on
+/// the virtual clock — the scheduling-side half of the mixed
+/// precision story: the fast artifacts only pay off when the batch
+/// plan meets the latency budget.  Writes `BENCH_planner.json`.
+fn planner_section() -> anyhow::Result<()> {
+    let mut report = JsonReport::new("planner");
+    let smoke = std::env::var("MPX_BENCH_SMOKE").as_deref() == Ok("1");
+    let requests: u64 = if smoke { 60 } else { 600 };
+
+    // Interactive lane: 20 req/s of lone requests, p99 SLO 12 ms, on
+    // the same linear service model the simulation executes
+    // (1 ms + 1 ms/row).
+    let model = ServiceModel {
+        overhead: Duration::from_millis(1),
+        per_row: Duration::from_millis(1),
+    };
+    let deadline = Duration::from_millis(12);
+    let rate = 20.0;
+    let arrivals = loadgen::poisson_offsets(requests, rate, 42);
+
+    let run = |buckets: &[usize], flush: Duration| -> SimReport {
+        simulate(SimSpec {
+            lanes: vec![LaneLoad {
+                spec: LaneSpec {
+                    name: "interactive".into(),
+                    weight: 1,
+                    batcher: BatcherConfig::new(buckets.to_vec(), flush)
+                        .unwrap(),
+                    queue_capacity: 4096,
+                    deadline,
+                },
+                arrivals: arrivals.clone(),
+            }],
+            policy: SchedPolicy::Continuous,
+            autoscale: AutoscalePolicy::fixed(1),
+            exec_overhead: model.overhead,
+            exec_per_row: model.per_row,
+            stop_at: Some(Duration::from_secs(3600)),
+            record_detail: false,
+        })
+        .expect("planner-section simulation failed")
+    };
+
+    // Static deployment: only the throughput buckets compiled, global
+    // 20 ms flush — the PR-3 shape.
+    let static_rep = run(&[4, 8], Duration::from_millis(20));
+
+    // The planner, fed the offered-load profile and SLO.
+    let plan = planner::plan(
+        &PlannerConfig {
+            candidates: vec![1, 2, 4, 8],
+            workers: 1,
+            max_compiled: 0,
+            safety: 0.9,
+            max_flush: Duration::from_millis(20),
+        },
+        &model,
+        &[LaneProfile {
+            name: "interactive".into(),
+            rate,
+            deadline,
+            weight: 1,
+            size_dist: Vec::new(),
+        }],
+    )?;
+    let lp = &plan.lanes[0];
+    assert!(lp.is_feasible(), "bench profile must be plannable");
+    let planned_rep = run(&lp.buckets, lp.flush_timeout);
+
+    println!("\n=== bucket planner vs static list (12 ms SLO lane) ===");
+    println!("variant,buckets,flush_ms,p99_ms,misses,padding_pct");
+    let mut record = |name: &str,
+                      buckets: &[usize],
+                      flush: Duration,
+                      rep: &SimReport| {
+        let p99 = rep.latency().quantile(0.99).unwrap();
+        let padded = rep.lanes[0].padded;
+        let real = rep.lanes[0].completed;
+        let pad_frac = padded as f64 / (padded + real).max(1) as f64;
+        println!(
+            "{name},{buckets:?},{:.2},{:.3},{},{:.1}",
+            flush.as_secs_f64() * 1e3,
+            p99.as_secs_f64() * 1e3,
+            rep.deadline_misses(),
+            pad_frac * 100.0,
+        );
+        report.entry(
+            &format!("planner_interactive_{name}"),
+            &[
+                ("deadline_ms", deadline.as_secs_f64() * 1e3),
+                ("offered_rps", rate),
+                ("num_buckets", buckets.len() as f64),
+                ("max_bucket", buckets.last().copied().unwrap_or(0) as f64),
+                ("min_bucket", buckets.first().copied().unwrap_or(0) as f64),
+                ("flush_ms", flush.as_secs_f64() * 1e3),
+                ("p99_ms", p99.as_secs_f64() * 1e3),
+                ("deadline_misses", rep.deadline_misses() as f64),
+                ("padding_fraction", pad_frac),
+            ],
+        );
+    };
+    record("static", &[4, 8], Duration::from_millis(20), &static_rep);
+    record("planned", &lp.buckets, lp.flush_timeout, &planned_rep);
+    report.entry(
+        "planner_prediction",
+        &[
+            ("predicted_p99_ms", lp.predicted.p99.as_secs_f64() * 1e3),
+            (
+                "measured_p99_ms",
+                planned_rep.latency().quantile(0.99).unwrap().as_secs_f64()
+                    * 1e3,
+            ),
+            ("predicted_padding_fraction", lp.predicted.padding_fraction),
+            ("predicted_utilization", lp.predicted.utilization),
+        ],
+    );
+    println!(
+        "# planner: static misses {} of {requests}; planned misses {}",
+        static_rep.deadline_misses(),
+        planned_rep.deadline_misses()
+    );
+    println!("# wrote {}", report.write()?);
+    Ok(())
+}
+
 #[cfg(feature = "xla")]
 fn artifact_section(report: &mut JsonReport) -> anyhow::Result<()> {
     let mut store = match ArtifactStore::open_default() {
@@ -384,6 +515,7 @@ fn artifact_section(report: &mut JsonReport) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     let mut report = JsonReport::new("serve");
     sim_section(&mut report);
+    planner_section()?;
     #[cfg(feature = "xla")]
     artifact_section(&mut report)?;
     #[cfg(not(feature = "xla"))]

@@ -271,6 +271,98 @@ impl TrainConfig {
     }
 }
 
+/// One explicitly configured (model, precision) serving lane with its
+/// own offered load and SLO — a TOML `[serve.lanes.<name>]` table.
+/// Replaces the legacy single-rate-split-evenly scheme: each lane
+/// declares what traffic it expects and what latency it owes, which
+/// is exactly the profile the bucket planner
+/// ([`crate::serve::planner`]) consumes.
+#[derive(Debug, Clone)]
+pub struct LaneConfig {
+    /// Table name; lanes are ordered by name (TOML tables have no
+    /// reliable file order in this parser).
+    pub name: String,
+    pub precision: Precision,
+    /// Offered Poisson arrival rate in req/s (≤ 0 ⇒ back-to-back
+    /// saturation, the closed-loop calibration case).
+    pub rate: f64,
+    /// Per-request end-to-end SLO: the p99 deadline the planner must
+    /// meet and the miss threshold the reports count against.
+    pub deadline_ms: u64,
+    /// Weighted-deficit service weight (≥ 1).
+    pub weight: u64,
+    /// Optional explicit dispatch-size distribution for the planner
+    /// (`burst_sizes[i]` arrives with probability weight
+    /// `burst_weights[i]`); empty ⇒ derived from `rate` (Poisson over
+    /// the flush window).
+    pub burst_sizes: Vec<usize>,
+    pub burst_weights: Vec<f64>,
+}
+
+impl LaneConfig {
+    /// A lane with the given name/precision and neutral defaults
+    /// (back-to-back rate, 100 ms deadline, weight 1, derived size
+    /// distribution).
+    pub fn named(name: &str, precision: Precision) -> LaneConfig {
+        LaneConfig {
+            name: name.to_string(),
+            precision,
+            rate: 0.0,
+            deadline_ms: 100,
+            weight: 1,
+            burst_sizes: Vec::new(),
+            burst_weights: Vec::new(),
+        }
+    }
+
+    pub fn deadline(&self) -> Duration {
+        Duration::from_millis(self.deadline_ms)
+    }
+
+    /// The explicit `(size, weight)` distribution, empty when the
+    /// planner should derive one from the arrival rate.
+    pub fn size_dist(&self) -> Vec<(usize, f64)> {
+        self.burst_sizes
+            .iter()
+            .copied()
+            .zip(self.burst_weights.iter().copied())
+            .collect()
+    }
+}
+
+/// Knobs for the latency-aware bucket planner (`[serve.planner]`).
+/// The linear service model (`service(b) = overhead + per_row × b`)
+/// mirrors the one `serve::simulate` executes batches with; calibrate
+/// the two constants from `BENCH_serve.json` artifact entries for a
+/// real deployment.
+#[derive(Debug, Clone)]
+pub struct PlannerSettings {
+    /// Force the planner on/off; lanes tables being present turns it
+    /// on even when false (see [`ServeConfig::use_planner`]).
+    pub enabled: bool,
+    /// Per-batch fixed service overhead, microseconds.
+    pub overhead_us: u64,
+    /// Per-row service cost, microseconds.
+    pub per_row_us: u64,
+    /// Max bucket artifacts to AOT-compile per lane (0 = unlimited).
+    pub max_compiled: usize,
+    /// Fraction of each deadline the plan may spend (headroom for
+    /// model error); must be in (0, 1].
+    pub safety: f64,
+}
+
+impl Default for PlannerSettings {
+    fn default() -> Self {
+        PlannerSettings {
+            enabled: false,
+            overhead_us: 300,
+            per_row_us: 130,
+            max_compiled: 0,
+            safety: 0.9,
+        }
+    }
+}
+
 /// Serving-engine configuration (`[serve]` TOML section + CLI
 /// overrides — see [`crate::serve`]).
 #[derive(Debug, Clone)]
@@ -300,6 +392,13 @@ pub struct ServeConfig {
     /// Weighted-deficit service weights, matching `lane_precisions`
     /// (empty ⇒ all 1).
     pub lane_weights: Vec<u64>,
+    /// Per-lane load/SLO tables (`[serve.lanes.<name>]`), ordered by
+    /// name.  Non-empty lanes supersede the flat
+    /// `lane_precisions`/`lane_weights` style (setting both is a
+    /// validation error) and turn the bucket planner on.
+    pub lanes: Vec<LaneConfig>,
+    /// Bucket-planner knobs (`[serve.planner]`).
+    pub planner: PlannerSettings,
     /// Per-lane admission bound: requests beyond this queue depth are
     /// rejected (open loop) or block the generator (closed loop).
     pub queue_capacity: usize,
@@ -330,6 +429,8 @@ impl Default for ServeConfig {
             policy: SchedPolicy::Continuous,
             lane_precisions: Vec::new(),
             lane_weights: Vec::new(),
+            lanes: Vec::new(),
+            planner: PlannerSettings::default(),
             queue_capacity: 64,
             flush_timeout_ms: 5,
             deadline_ms: 100,
@@ -365,6 +466,43 @@ impl ServeConfig {
                 (p, self.lane_weights.get(i).copied().unwrap_or(1))
             })
             .collect()
+    }
+
+    /// The full per-lane load/SLO description the engine and planner
+    /// consume: the explicit `[serve.lanes.*]` tables when present,
+    /// otherwise lanes synthesized from the legacy flat keys — one
+    /// lane per [`ServeConfig::effective_lanes`] entry, named by its
+    /// precision tag, with the single `arrival_rate` split evenly and
+    /// the single `deadline_ms` shared (exactly the PR-3 behaviour).
+    pub fn lane_configs(&self) -> Vec<LaneConfig> {
+        if !self.lanes.is_empty() {
+            return self.lanes.clone();
+        }
+        let eff = self.effective_lanes();
+        let n = eff.len() as f64;
+        eff.iter()
+            .map(|&(p, w)| LaneConfig {
+                name: p.tag().to_string(),
+                precision: p,
+                rate: if self.arrival_rate > 0.0 {
+                    self.arrival_rate / n
+                } else {
+                    0.0
+                },
+                deadline_ms: self.deadline_ms,
+                weight: w,
+                burst_sizes: Vec::new(),
+                burst_weights: Vec::new(),
+            })
+            .collect()
+    }
+
+    /// Whether the serve path should run the bucket planner: forced
+    /// on via `[serve.planner] enabled = true`, or implied by any
+    /// `[serve.lanes.*]` table (per-lane SLOs only mean something
+    /// when something plans against them).
+    pub fn use_planner(&self) -> bool {
+        self.planner.enabled || !self.lanes.is_empty()
     }
 
     /// Name of the forward artifact serving batches of size `batch`
@@ -417,13 +555,88 @@ impl ServeConfig {
             && self.lane_weights.len() != self.lane_precisions.len()
         {
             bail!(
-                "serve: {} lane weights for {} lane precisions",
+                "serve: lane_weights has {} entries but precisions has {} — \
+                 each precision lane needs exactly one weight (omit \
+                 lane_weights entirely for all-1 weights)",
                 self.lane_weights.len(),
                 self.lane_precisions.len()
             );
         }
         if self.lane_weights.iter().any(|&w| w == 0) {
             bail!("serve: lane weights must be ≥ 1");
+        }
+        if !self.lanes.is_empty() {
+            if !self.lane_precisions.is_empty()
+                || !self.lane_weights.is_empty()
+            {
+                bail!(
+                    "serve: [serve.lanes.*] tables and the flat \
+                     precisions/lane_weights keys are mutually exclusive — \
+                     describe the lanes one way"
+                );
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for l in &self.lanes {
+                if l.name.is_empty() {
+                    bail!("serve: lane with an empty name");
+                }
+                if !seen.insert(l.name.as_str()) {
+                    bail!("serve: duplicate lane {:?}", l.name);
+                }
+                if l.weight == 0 {
+                    bail!("serve: lane {:?} weight must be ≥ 1", l.name);
+                }
+                if l.deadline_ms == 0 {
+                    bail!("serve: lane {:?} needs a deadline_ms ≥ 1", l.name);
+                }
+                if !l.rate.is_finite() {
+                    bail!("serve: lane {:?} rate must be finite", l.name);
+                }
+                if l.burst_sizes.len() != l.burst_weights.len() {
+                    bail!(
+                        "serve: lane {:?} has {} burst_sizes but {} \
+                         burst_weights — the arrays pair up elementwise",
+                        l.name,
+                        l.burst_sizes.len(),
+                        l.burst_weights.len()
+                    );
+                }
+                if l.burst_sizes.iter().any(|&s| s == 0) {
+                    bail!("serve: lane {:?} burst_sizes must be ≥ 1", l.name);
+                }
+                if l.burst_weights.iter().any(|&w| !(w > 0.0) || !w.is_finite())
+                {
+                    bail!(
+                        "serve: lane {:?} burst_weights must be finite and \
+                         > 0",
+                        l.name
+                    );
+                }
+            }
+        }
+        if !(self.planner.safety > 0.0 && self.planner.safety <= 1.0) {
+            bail!(
+                "serve: planner safety {} outside (0, 1]",
+                self.planner.safety
+            );
+        }
+        if self.use_planner()
+            && self.planner.overhead_us == 0
+            && self.planner.per_row_us == 0
+        {
+            bail!(
+                "serve: planner service model is all-zero — set \
+                 [serve.planner] overhead_us / per_row_us"
+            );
+        }
+        if self.use_planner() && self.policy == SchedPolicy::FormFirst {
+            bail!(
+                "serve: the bucket planner plans for continuous batching — \
+                 policy = \"form_first\" makes lone requests wait out the \
+                 flush window, voiding the planned latency model; use \
+                 policy = \"continuous\" or drop the lane tables / \
+                 [serve.planner] enabled"
+            );
         }
         Ok(())
     }
@@ -474,6 +687,21 @@ impl ServeConfig {
             self.lane_weights =
                 list.into_iter().map(|w| w.max(0) as u64).collect();
         }
+        if let Some(b) = doc.get_bool("serve.planner.enabled") {
+            self.planner.enabled = b;
+        }
+        if let Some(v) = doc.get_int("serve.planner.overhead_us") {
+            self.planner.overhead_us = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("serve.planner.per_row_us") {
+            self.planner.per_row_us = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("serve.planner.max_compiled") {
+            self.planner.max_compiled = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get_float("serve.planner.safety") {
+            self.planner.safety = v;
+        }
         if let Some(v) = doc.get_int("serve.queue_capacity") {
             self.queue_capacity = v as usize;
         }
@@ -497,6 +725,51 @@ impl ServeConfig {
         }
         if let Some(s) = doc.get_str("serve.artifacts_dir") {
             self.artifacts_dir = s.to_string();
+        }
+        // Lane tables parse last so unset lane keys inherit the
+        // [serve] scalars (precision, deadline_ms) regardless of key
+        // order in the file.
+        let lane_names = doc.child_tables("serve.lanes");
+        if !lane_names.is_empty() {
+            self.lanes.clear();
+            for name in lane_names {
+                let base = format!("serve.lanes.{name}");
+                let nested = doc.child_tables(&base);
+                if !nested.is_empty() {
+                    bail!(
+                        "serve: [serve.lanes.{name}] has nested tables \
+                         {nested:?} — lane tables are flat (keys: precision, \
+                         rate, deadline_ms, weight, burst_sizes, \
+                         burst_weights)"
+                    );
+                }
+                let mut lane = LaneConfig::named(&name, self.precision);
+                lane.deadline_ms = self.deadline_ms;
+                if let Some(s) = doc.get_str(&format!("{base}.precision")) {
+                    lane.precision = Precision::parse(s)?;
+                }
+                if let Some(v) = doc.get_float(&format!("{base}.rate")) {
+                    lane.rate = v;
+                }
+                if let Some(v) = doc.get_int(&format!("{base}.deadline_ms")) {
+                    lane.deadline_ms = v.max(0) as u64;
+                }
+                if let Some(v) = doc.get_int(&format!("{base}.weight")) {
+                    lane.weight = v.max(0) as u64;
+                }
+                if let Some(list) =
+                    doc.get_int_array(&format!("{base}.burst_sizes"))
+                {
+                    lane.burst_sizes =
+                        list.into_iter().map(|v| v.max(0) as usize).collect();
+                }
+                if let Some(list) =
+                    doc.get_float_array(&format!("{base}.burst_weights"))
+                {
+                    lane.burst_weights = list;
+                }
+                self.lanes.push(lane);
+            }
         }
         Ok(())
     }
@@ -656,6 +929,158 @@ policy = "form_first"
             cfg.effective_lanes(),
             vec![(Precision::Fp32, 1), (Precision::MixedF16, 2)]
         );
+    }
+
+    #[test]
+    fn serve_lane_tables_roundtrip() {
+        let text = r#"
+[serve]
+batch = 8
+workers = 2
+precision = "fp32"
+deadline_ms = 150
+
+[serve.lanes.chat]
+precision = "mixed_f16"
+rate = 80.0
+deadline_ms = 20
+weight = 2
+burst_sizes = [1, 2]
+burst_weights = [0.8, 0.2]
+
+[serve.lanes.bulk]
+rate = 0.0
+
+[serve.planner]
+enabled = true
+overhead_us = 250
+per_row_us = 120
+max_compiled = 3
+safety = 0.8
+"#;
+        let path = std::env::temp_dir().join("mpx_serve_lanes_cfg_test.toml");
+        std::fs::write(&path, text).unwrap();
+        let cfg =
+            ServeConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.use_planner());
+        assert_eq!(cfg.planner.overhead_us, 250);
+        assert_eq!(cfg.planner.per_row_us, 120);
+        assert_eq!(cfg.planner.max_compiled, 3);
+        assert!((cfg.planner.safety - 0.8).abs() < 1e-12);
+        // Lanes come back ordered by name (bulk, chat).
+        assert_eq!(cfg.lanes.len(), 2);
+        let bulk = &cfg.lanes[0];
+        assert_eq!(bulk.name, "bulk");
+        // Unset lane keys inherit the section defaults.
+        assert_eq!(bulk.precision, Precision::Fp32);
+        assert_eq!(bulk.deadline_ms, 150);
+        assert_eq!(bulk.weight, 1);
+        assert_eq!(bulk.rate, 0.0);
+        let chat = &cfg.lanes[1];
+        assert_eq!(chat.name, "chat");
+        assert_eq!(chat.precision, Precision::MixedF16);
+        assert!((chat.rate - 80.0).abs() < 1e-9);
+        assert_eq!(chat.deadline_ms, 20);
+        assert_eq!(chat.weight, 2);
+        assert_eq!(chat.size_dist(), vec![(1, 0.8), (2, 0.2)]);
+        // lane_configs passes explicit tables through verbatim.
+        assert_eq!(cfg.lane_configs().len(), 2);
+        assert_eq!(cfg.lane_configs()[1].name, "chat");
+    }
+
+    #[test]
+    fn nested_lane_tables_are_rejected_not_dropped() {
+        // `[serve.lanes.us.east]` would otherwise parse as an
+        // all-defaults lane "us" with every east.* key ignored.
+        let text = r#"
+[serve.lanes.us.east]
+rate = 500.0
+deadline_ms = 20
+"#;
+        let path = std::env::temp_dir().join("mpx_serve_nested_lane.toml");
+        std::fs::write(&path, text).unwrap();
+        let err = ServeConfig::from_toml_file(path.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nested"), "got: {err}");
+    }
+
+    #[test]
+    fn lane_tables_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.lanes = vec![
+            LaneConfig::named("a", Precision::Fp32),
+            LaneConfig::named("b", Precision::MixedF16),
+        ];
+        cfg.validate().unwrap();
+        assert!(cfg.use_planner(), "lane tables imply the planner");
+
+        // Mixing lane tables with the flat keys is ambiguous.
+        let mut bad = cfg.clone();
+        bad.lane_precisions = vec![Precision::Fp32];
+        assert!(bad.validate().is_err());
+
+        let mut bad = cfg.clone();
+        bad.lanes[1].name = "a".into();
+        assert!(bad.validate().is_err(), "duplicate lane name");
+
+        let mut bad = cfg.clone();
+        bad.lanes[0].weight = 0;
+        assert!(bad.validate().is_err(), "zero weight");
+
+        let mut bad = cfg.clone();
+        bad.lanes[0].deadline_ms = 0;
+        assert!(bad.validate().is_err(), "zero deadline");
+
+        let mut bad = cfg.clone();
+        bad.lanes[0].burst_sizes = vec![1, 2];
+        bad.lanes[0].burst_weights = vec![1.0];
+        assert!(bad.validate().is_err(), "burst array length mismatch");
+
+        let mut bad = cfg.clone();
+        bad.lanes[0].burst_sizes = vec![0];
+        bad.lanes[0].burst_weights = vec![1.0];
+        assert!(bad.validate().is_err(), "zero burst size");
+
+        let mut bad = cfg.clone();
+        bad.planner.safety = 0.0;
+        assert!(bad.validate().is_err(), "safety outside (0, 1]");
+
+        let mut bad = cfg.clone();
+        bad.policy = SchedPolicy::FormFirst;
+        assert!(
+            bad.validate().is_err(),
+            "form_first voids the planner's latency model"
+        );
+
+        let mut bad = cfg;
+        bad.planner.overhead_us = 0;
+        bad.planner.per_row_us = 0;
+        assert!(bad.validate().is_err(), "all-zero service model");
+    }
+
+    #[test]
+    fn legacy_lane_configs_split_the_rate_evenly() {
+        let mut cfg = ServeConfig {
+            lane_precisions: vec![Precision::Fp32, Precision::MixedF16],
+            lane_weights: vec![1, 2],
+            arrival_rate: 100.0,
+            deadline_ms: 40,
+            ..ServeConfig::default()
+        };
+        let lanes = cfg.lane_configs();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].name, "fp32");
+        assert_eq!(lanes[1].name, "mixed_f16");
+        assert!((lanes[0].rate - 50.0).abs() < 1e-9);
+        assert!((lanes[1].rate - 50.0).abs() < 1e-9);
+        assert_eq!(lanes[0].deadline_ms, 40);
+        assert_eq!(lanes[1].weight, 2);
+        assert!(!cfg.use_planner(), "legacy flat keys stay planner-off");
+        // Back-to-back stays back-to-back per lane.
+        cfg.arrival_rate = 0.0;
+        assert_eq!(cfg.lane_configs()[0].rate, 0.0);
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub enum TomlValue {
 #[derive(Debug, Default)]
 pub struct TomlDoc {
     values: BTreeMap<String, TomlValue>,
+    /// Every `[section]` header seen, including ones with no keys —
+    /// so an all-defaults table like `[serve.lanes.bulk]` is
+    /// enumerable by [`TomlDoc::child_tables`] rather than silently
+    /// dropped.
+    sections: std::collections::BTreeSet<String>,
 }
 
 impl TomlDoc {
@@ -47,6 +52,7 @@ impl TomlDoc {
                     bail!("line {}: bad section name {name:?}", lineno + 1);
                 }
                 section = name.to_string();
+                doc.sections.insert(section.clone());
                 continue;
             }
             let Some(eq) = line.find('=') else {
@@ -132,6 +138,49 @@ impl TomlDoc {
                 .collect(),
             _ => None,
         }
+    }
+
+    /// Numeric array (`ws = [0.8, 0.2]`); integers promote to floats,
+    /// matching [`TomlDoc::get_float`].
+    pub fn get_float_array(&self, path: &str) -> Option<Vec<f64>> {
+        match self.get(path) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Float(f) => Some(*f),
+                    TomlValue::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Names of the direct child tables under `prefix`: with keys
+    /// `serve.lanes.chat.rate` and `serve.lanes.bulk.rate`,
+    /// `child_tables("serve.lanes")` is `["bulk", "chat"]`.  Sorted
+    /// and deduplicated, so table enumeration is deterministic
+    /// regardless of file order.  A bare `[prefix.name]` header with
+    /// no keys still counts — an all-defaults table is a table.
+    pub fn child_tables(&self, prefix: &str) -> Vec<String> {
+        let pre = format!("{prefix}.");
+        let mut out = std::collections::BTreeSet::new();
+        for key in self.values.keys() {
+            if let Some(rest) = key.strip_prefix(&pre) {
+                if let Some((child, _)) = rest.split_once('.') {
+                    out.insert(child.to_string());
+                }
+            }
+        }
+        for section in &self.sections {
+            if let Some(rest) = section.strip_prefix(&pre) {
+                let child = rest.split('.').next().unwrap_or(rest);
+                if !child.is_empty() {
+                    out.insert(child.to_string());
+                }
+            }
+        }
+        out.into_iter().collect()
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &String> {
@@ -254,6 +303,66 @@ mixed = [1, "two"]
         let doc = TomlDoc::parse("x = 5").unwrap();
         assert_eq!(doc.get_float("x"), Some(5.0));
         assert_eq!(doc.get_int("x"), Some(5));
+    }
+
+    #[test]
+    fn float_array_promotes_ints() {
+        let doc = TomlDoc::parse(
+            r#"
+ws = [0.8, 0.2]
+mixed_num = [1, 0.5]
+ss = ["a"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_float_array("ws"), Some(vec![0.8, 0.2]));
+        assert_eq!(doc.get_float_array("mixed_num"), Some(vec![1.0, 0.5]));
+        assert_eq!(doc.get_float_array("ss"), None);
+        assert_eq!(doc.get_float_array("absent"), None);
+    }
+
+    #[test]
+    fn child_tables_enumerates_sorted_unique_names() {
+        let doc = TomlDoc::parse(
+            r#"
+[serve]
+batch = 8
+
+[serve.lanes.chat]
+rate = 80.0
+weight = 2
+
+[serve.lanes.bulk]
+rate = 0.0
+
+[serve.planner]
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.child_tables("serve.lanes"), vec!["bulk", "chat"]);
+        // Direct keys under the prefix (no deeper segment) are not
+        // tables; unrelated prefixes see nothing.
+        assert_eq!(doc.child_tables("serve.lanes.chat"), Vec::<String>::new());
+        assert_eq!(doc.child_tables("train"), Vec::<String>::new());
+        // `serve` has child tables `lanes.*` and `planner`.
+        assert_eq!(doc.child_tables("serve"), vec!["lanes", "planner"]);
+    }
+
+    #[test]
+    fn bare_table_headers_still_enumerate() {
+        // An all-defaults table has a header but no keys — it must
+        // not vanish from enumeration.
+        let doc = TomlDoc::parse(
+            r#"
+[serve.lanes.chat]
+rate = 80.0
+
+[serve.lanes.idle]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.child_tables("serve.lanes"), vec!["chat", "idle"]);
     }
 
     #[test]

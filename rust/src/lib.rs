@@ -23,22 +23,25 @@
 //!   implementation.
 //! * [`pytree`] — leaf inventories: the manifest contract between
 //!   `aot.py` and the runtime.
-//! * [`runtime`] — PJRT wrapper: artifact registry, executable cache,
-//!   literal pack/unpack.
+//! * `runtime` (xla feature) — PJRT wrapper: artifact registry,
+//!   executable cache, literal pack/unpack.
 //! * [`config`] — TOML-subset config system + machine/model presets.
 //! * [`data`] — deterministic synthetic CIFAR-100/ImageNet-like
 //!   datasets with a prefetching loader.
 //! * [`optim`] — Rust AdamW/SGD over flat f32 tensors (master weights
 //!   for the data-parallel mode).
 //! * [`collective`] — deterministic tree all-reduce across shards.
-//! * [`trainer`] — the fused single-device loop and the simulated
-//!   multi-device data-parallel loop; checkpointing.
+//! * `trainer` (xla feature) — the fused single-device loop and the
+//!   simulated multi-device data-parallel loop; checkpointing.
 //! * [`serve`] — continuous-batching multi-model serving engine: one
 //!   bounded request queue per (model, precision) lane, a
 //!   weighted-deficit scheduler that refills the shared worker pool
 //!   as slots free, per-request streamed completions, autoscaling,
-//!   and a virtual-clock simulation harness; all timing flows through
-//!   the `serve::clock::Clock` trait so policy is deterministically
+//!   a latency-aware bucket planner (`serve::planner`: which batch
+//!   sizes to AOT-compile and which flush timeouts to run, per lane,
+//!   from an offered-load profile and per-lane SLOs), and a
+//!   virtual-clock simulation harness; all timing flows through the
+//!   `serve::clock::Clock` trait so policy is deterministically
 //!   testable.
 //! * [`hlo`] — HLO-text parser for the buffer census.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.

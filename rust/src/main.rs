@@ -39,7 +39,11 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
                  [--max-workers W --autoscale-depth D] [--policy continuous|form_first]
                  [--precisions p1,p2 --lane-weights w1,w2] (multi-model lanes)
                  [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
-                 [--deadline-ms T] [--seed S] [--config cfg.toml]";
+                 [--deadline-ms T] [--seed S] [--config cfg.toml]
+                 [--plan]  print the latency-aware bucket plan (which batch
+                           sizes to AOT-compile, per-lane flush timeouts)
+                           and exit; per-lane SLOs come from the config's
+                           [serve.lanes.*] tables";
 
 fn main() {
     if let Err(e) = run() {
@@ -397,13 +401,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has_switch("open-loop") {
         cfg.open_loop = true;
     }
+    let plan_only = args.has_switch("plan");
     args.finish()?;
     cfg.validate()?;
 
+    if plan_only {
+        return cmd_serve_plan(&cfg);
+    }
+
     let lanes = cfg
-        .effective_lanes()
+        .lane_configs()
         .iter()
-        .map(|(p, w)| format!("{}×{w}", p.tag()))
+        .map(|l| format!("{}×{}", l.name, l.weight))
         .collect::<Vec<_>>()
         .join(",");
     eprintln!(
@@ -439,5 +448,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.max_batch,
         cfg.workers
     ));
+    Ok(())
+}
+
+/// `mpx serve --plan`: run the latency-aware bucket planner over the
+/// configured lane profiles, print the chosen buckets / flush
+/// timeouts / predicted p99 per lane, check which planned artifacts
+/// are already compiled, and exit without serving.
+fn cmd_serve_plan(cfg: &ServeConfig) -> Result<()> {
+    let plan = mpx::serve::plan_for_config(cfg)?;
+    eprintln!(
+        "[mpx] serve --plan | model {} | {} lanes | {} workers | candidates \
+         up to b{}",
+        cfg.model,
+        plan.lanes.len(),
+        cfg.workers,
+        cfg.max_batch,
+    );
+    plan.print();
+    // Best-effort artifact presence report: the plan says what should
+    // exist, the store says what does.
+    match ArtifactStore::open(&cfg.artifacts_dir) {
+        Ok(store) => {
+            for (lp, lc) in plan.lanes.iter().zip(cfg.lane_configs()) {
+                let missing = mpx::serve::missing_planned_artifacts(
+                    &store,
+                    cfg,
+                    lc.precision,
+                    lp,
+                );
+                if missing.is_empty() {
+                    if !lp.buckets.is_empty() {
+                        println!(
+                            "[plan] lane {}: all planned artifacts compiled",
+                            lp.name
+                        );
+                    }
+                } else {
+                    println!(
+                        "[plan] lane {}: missing artifacts for buckets {:?} \
+                         (e.g. {}) — run `make artifacts`",
+                        lp.name,
+                        missing,
+                        cfg.fwd_artifact_for(lc.precision, missing[0]),
+                    );
+                }
+            }
+        }
+        Err(e) => {
+            println!("[plan] artifact store unavailable ({e:#}); skipping the presence check");
+        }
+    }
+    if !plan.is_feasible() {
+        anyhow::bail!(
+            "plan infeasible for at least one lane (see reasons above)"
+        );
+    }
     Ok(())
 }

@@ -86,6 +86,30 @@ impl BatcherConfig {
     pub fn largest_fit(&self, pending: usize) -> Option<usize> {
         self.buckets.iter().copied().rev().find(|&b| b <= pending)
     }
+
+    /// Compute-ballast rows the continuous policy executes to clear a
+    /// backlog of `n` requests in one go: exact-fill buckets are
+    /// taken greedily (zero padding), and the sub-`buckets[0]`
+    /// remainder is flushed padded up to the smallest bucket.  This is
+    /// the padding model the latency-aware planner
+    /// ([`crate::serve::planner`]) scores candidate bucket sets with —
+    /// the same `largest_fit`/`bucket_for` rules the dispatch path
+    /// applies.
+    ///
+    /// Taking the largest exact fit repeatedly is, per bucket in
+    /// descending order, just `n mod b` (once `n` drops below a
+    /// bucket it never comes back up), so this is O(#buckets) even
+    /// for astronomically large backlogs.
+    pub fn padded_rows(&self, mut n: usize) -> usize {
+        for &b in self.buckets.iter().rev() {
+            n %= b;
+        }
+        if n == 0 {
+            0
+        } else {
+            self.bucket_for(n) - n
+        }
+    }
 }
 
 /// How the scheduler refills free worker slots from a lane's queue.
@@ -286,6 +310,27 @@ mod tests {
         assert_eq!(c.largest_fit(7), Some(4));
         assert_eq!(c.largest_fit(8), Some(8));
         assert_eq!(c.largest_fit(100), Some(8));
+    }
+
+    #[test]
+    fn padded_rows_matches_the_greedy_dispatch_policy() {
+        let c = cfg(&[2, 4, 8], 5);
+        // Exact decompositions pad nothing: 6 = 4 + 2, 12 = 8 + 4.
+        assert_eq!(c.padded_rows(0), 0);
+        assert_eq!(c.padded_rows(2), 0);
+        assert_eq!(c.padded_rows(6), 0);
+        assert_eq!(c.padded_rows(12), 0);
+        // Sub-smallest remainders pad up to the smallest bucket.
+        assert_eq!(c.padded_rows(1), 1);
+        assert_eq!(c.padded_rows(5), 1); // 4 + (1 → 2)
+        assert_eq!(c.padded_rows(9), 1); // 8 + (1 → 2)
+        // A bucket-1 set never pads anything.
+        let c1 = cfg(&[1, 4], 5);
+        for n in 0..20 {
+            assert_eq!(c1.padded_rows(n), 0);
+        }
+        // O(#buckets): a huge backlog must not spin.
+        assert_eq!(c.padded_rows(1_000_000_001), 1); // 1e9+1 ≡ 1 mod 8,4,2
     }
 
     #[test]

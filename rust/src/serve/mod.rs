@@ -34,6 +34,11 @@
 //!   control, with a non-blocking poll/pop interface.
 //! * [`batcher`] — the pure batching/refill policy (size buckets,
 //!   padding, flush-on-timeout, [`SchedPolicy`]) and [`FormedBatch`].
+//! * [`planner`] — the latency-aware bucket planner: from a per-lane
+//!   offered-load profile (rate, size distribution, p99 deadline) it
+//!   selects which batch sizes to AOT-compile and which flush
+//!   timeouts to run, minimizing expected padding under the SLO —
+//!   replacing the static everything-that-was-compiled bucket list.
 //! * [`sched`] — the [`Scheduler`] state machine (lane picking,
 //!   completion streaming, autoscaling) and the deterministic
 //!   [`simulate`] harness.
@@ -43,8 +48,11 @@
 //!   across lanes.
 //!
 //! Entry points: [`run`] (single lane, any executor — tests use a
-//! fake), [`run_lanes`] (multi-model), and [`run_with_artifacts`]
-//! (the real PJRT path `mpx serve` drives).
+//! fake), [`run_lanes`] (multi-model), and `run_with_artifacts`
+//! (the real PJRT path `mpx serve` drives; needs the `xla` feature).
+//! [`plan_for_config`] turns a [`ServeConfig`] into a
+//! [`planner::Plan`] without touching artifacts — `mpx serve --plan`
+//! prints it, `run_with_artifacts` serves it.
 //!
 //! # Testing with `VirtualClock`
 //!
@@ -70,12 +78,17 @@
 pub mod batcher;
 pub mod clock;
 pub mod loadgen;
+pub mod planner;
 pub mod queue;
 pub mod sched;
 pub mod worker;
 
 pub use batcher::{
     decide, refill, BatcherConfig, Decision, FormedBatch, SchedPolicy,
+};
+pub use planner::{
+    LanePlan, LaneProfile, Plan, PlanEstimate, PlanVerdict, PlannerConfig,
+    ServiceModel,
 };
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use queue::{QueuePoll, QueueStats, Request, RequestQueue};
@@ -94,7 +107,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::ServeConfig;
+use crate::config::{LaneConfig, ServeConfig};
 use crate::metrics::{LatencyHistogram, NamedHistograms};
 use crate::util::human_duration;
 use worker::worker_loop;
@@ -477,6 +490,74 @@ pub fn autoscale_policy(cfg: &ServeConfig) -> AutoscalePolicy {
     }
 }
 
+/// Build the bucket [`planner::Plan`] a [`ServeConfig`] describes:
+/// candidates are the power-of-two ladder up to `max_batch` (the same
+/// ladder `discover_buckets` probes artifacts for), the service model
+/// and search knobs come from `[serve.planner]`, and one
+/// [`LaneProfile`] is derived per configured lane.  Pure computation
+/// — no artifacts, no xla — so `mpx serve --plan` and the tests can
+/// run it anywhere.
+pub fn plan_for_config(cfg: &ServeConfig) -> Result<planner::Plan> {
+    cfg.validate()?;
+    let profiles: Vec<planner::LaneProfile> = cfg
+        .lane_configs()
+        .iter()
+        .map(|lc| planner::LaneProfile {
+            name: lc.name.clone(),
+            rate: lc.rate,
+            deadline: lc.deadline(),
+            weight: lc.weight,
+            size_dist: lc.size_dist(),
+        })
+        .collect();
+    let pcfg = planner::PlannerConfig {
+        candidates: planner::pow2_candidates(cfg.max_batch),
+        workers: cfg.workers,
+        max_compiled: cfg.planner.max_compiled,
+        safety: cfg.planner.safety,
+        max_flush: cfg.flush_timeout(),
+    };
+    let model = planner::ServiceModel {
+        overhead: Duration::from_micros(cfg.planner.overhead_us),
+        per_row: Duration::from_micros(cfg.planner.per_row_us),
+    };
+    planner::plan(&pcfg, &model, &profiles)
+}
+
+/// Split a total request budget across lanes in proportion to their
+/// offered rates — the first *rated* lane absorbs the rounding
+/// remainder, so zero-rate lanes are never offered stray requests.
+/// An all-zero rate profile (back-to-back everywhere) splits evenly,
+/// lane 0 taking the remainder — the legacy behaviour.
+pub fn split_requests(total: u64, lanes: &[LaneConfig]) -> Vec<u64> {
+    let n = lanes.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let rates: Vec<f64> = lanes.iter().map(|l| l.rate.max(0.0)).collect();
+    let sum: f64 = rates.iter().sum();
+    let mut out = vec![0u64; n];
+    if sum <= 0.0 {
+        let base = total / n as u64;
+        for slot in out.iter_mut() {
+            *slot = base;
+        }
+        out[0] += total - base * n as u64;
+    } else {
+        let mut assigned = 0u64;
+        for i in 0..n {
+            out[i] = (total as f64 * rates[i] / sum).floor() as u64;
+            assigned += out[i];
+        }
+        let first_rated = rates
+            .iter()
+            .position(|&r| r > 0.0)
+            .expect("sum > 0 implies a rated lane");
+        out[first_rated] += total - assigned;
+    }
+    out
+}
+
 /// Single-lane engine (the PR-1 entry point, unchanged signature):
 /// `make_executor(worker_id)` builds the one lane's executor inside
 /// each worker thread; `make_image(request_id)` produces image rows
@@ -517,34 +598,55 @@ where
 
 /// Which forward artifacts exist for power-of-two bucket sizes up to
 /// `cfg.max_batch` (manifest presence only — nothing is compiled).
+/// Probes exactly [`planner::pow2_candidates`] — the one definition
+/// of the ladder, shared with the planner's search space, so a
+/// planned bucket is always discoverable when its artifact exists.
 #[cfg(feature = "xla")]
 pub fn discover_buckets(
     store: &ArtifactStore,
     cfg: &ServeConfig,
     precision: Precision,
 ) -> Vec<usize> {
-    let mut buckets = Vec::new();
-    let mut b = 1usize;
-    loop {
-        if b >= cfg.max_batch {
-            b = cfg.max_batch;
-        }
-        if store.manifest(&cfg.fwd_artifact_for(precision, b)).is_ok() {
-            buckets.push(b);
-        }
-        if b == cfg.max_batch {
-            break;
-        }
-        b *= 2;
-    }
-    buckets
+    planner::pow2_candidates(cfg.max_batch)
+        .into_iter()
+        .filter(|&b| {
+            store.manifest(&cfg.fwd_artifact_for(precision, b)).is_ok()
+        })
+        .collect()
+}
+
+/// Planned buckets whose forward artifact is absent from `store` —
+/// the one definition of "missing" shared by `mpx serve --plan`'s
+/// presence report and [`run_with_artifacts`]'s hard error.
+#[cfg(feature = "xla")]
+pub fn missing_planned_artifacts(
+    store: &ArtifactStore,
+    cfg: &ServeConfig,
+    precision: Precision,
+    plan: &LanePlan,
+) -> Vec<usize> {
+    plan.buckets
+        .iter()
+        .copied()
+        .filter(|&b| {
+            store.manifest(&cfg.fwd_artifact_for(precision, b)).is_err()
+        })
+        .collect()
 }
 
 /// The real serving path: discover + compile the forward artifacts
 /// for every configured (model, precision) lane, replicate parameters
 /// per worker per lane, and drive synthetic traffic through the
-/// engine.  `cfg.requests` and `cfg.arrival_rate` are split evenly
-/// across lanes; lane weights shape the *service*, not the offer.
+/// engine.
+///
+/// Each lane offers its own rate and owes its own deadline
+/// (`[serve.lanes.*]`; the legacy flat keys still split one rate
+/// evenly); `cfg.requests` is divided in proportion to the rates.
+/// When the planner is on ([`ServeConfig::use_planner`]), each lane
+/// serves its planned bucket subset and flush timeout instead of the
+/// static everything-that-was-compiled list; a planned bucket whose
+/// artifact is missing is a hard error naming the artifact (serving a
+/// partial plan would silently void its SLO guarantees).
 #[cfg(feature = "xla")]
 pub fn run_with_artifacts(
     store: &mut ArtifactStore,
@@ -556,51 +658,85 @@ pub fn run_with_artifacts(
         fwd: Vec<(usize, Arc<Artifact>)>,
     }
 
-    let lane_precisions = cfg.effective_lanes();
-    let n = lane_precisions.len() as u64;
-    let base_requests = cfg.requests / n;
-    let rate = if cfg.arrival_rate > 0.0 {
-        cfg.arrival_rate / n as f64
+    let lane_cfgs = cfg.lane_configs();
+    let plan = if cfg.use_planner() {
+        let plan = plan_for_config(cfg)?;
+        if !plan.is_feasible() {
+            for l in &plan.lanes {
+                if let PlanVerdict::Infeasible { reason } = &l.verdict {
+                    eprintln!("[plan] lane {}: INFEASIBLE — {reason}", l.name);
+                }
+            }
+            bail!(
+                "serve: planner found no feasible bucket plan — relax the \
+                 lane deadlines, add workers, or raise the starved lanes' \
+                 weights (with [serve.lanes.*] tables the planner is always \
+                 on; to serve unplanned, remove the lane tables)"
+            );
+        }
+        Some(plan)
     } else {
-        0.0
+        None
     };
+    let requests = split_requests(cfg.requests, &lane_cfgs);
 
     let mut lane_arts = Vec::new();
     let mut traffic = Vec::new();
-    for (i, &(precision, weight)) in lane_precisions.iter().enumerate() {
-        let buckets = discover_buckets(store, cfg, precision);
-        if buckets.is_empty() {
+    for (i, lc) in lane_cfgs.iter().enumerate() {
+        let available = discover_buckets(store, cfg, lc.precision);
+        if available.is_empty() {
             bail!(
                 "no forward artifacts for model {} precision {} (expected \
                  e.g. {} in {}) — run `make artifacts`",
                 cfg.model,
-                precision.tag(),
-                cfg.fwd_artifact_for(precision, cfg.max_batch),
+                lc.precision.tag(),
+                cfg.fwd_artifact_for(lc.precision, cfg.max_batch),
                 store.dir().display()
             );
         }
+        let (buckets, flush) = match &plan {
+            Some(plan) => {
+                let lp = &plan.lanes[i];
+                let missing =
+                    missing_planned_artifacts(store, cfg, lc.precision, lp);
+                // Serving a subset of the plan would silently void its
+                // capacity/latency guarantees — fail as loudly as an
+                // infeasible plan does, and say what to compile.
+                if !missing.is_empty() {
+                    bail!(
+                        "serve: lane {}: planned buckets {:?} are not \
+                         AOT-compiled (e.g. {} is missing) — run `make \
+                         artifacts` for them (`mpx serve --plan` lists the \
+                         full work list); the discovered set {:?} can only \
+                         be served unplanned (no [serve.lanes.*] tables and \
+                         [serve.planner] enabled = false)",
+                        lc.name,
+                        missing,
+                        cfg.fwd_artifact_for(lc.precision, missing[0]),
+                        available,
+                    );
+                }
+                (lp.buckets.clone(), lp.flush_timeout)
+            }
+            None => (available.clone(), cfg.flush_timeout()),
+        };
         let fwd = buckets
             .iter()
             .map(|&b| {
-                Ok((b, store.load(&cfg.fwd_artifact_for(precision, b))?))
+                Ok((b, store.load(&cfg.fwd_artifact_for(lc.precision, b))?))
             })
             .collect::<Result<Vec<_>>>()?;
-        let init = store.load(&cfg.init_artifact_for(precision))?;
+        let init = store.load(&cfg.init_artifact_for(lc.precision))?;
         traffic.push(LaneTraffic {
             spec: LaneSpec {
-                name: format!("{}/{}", cfg.model, precision.tag()),
-                weight,
-                batcher: BatcherConfig::new(buckets, cfg.flush_timeout())?,
+                name: format!("{}/{}", cfg.model, lc.name),
+                weight: lc.weight,
+                batcher: BatcherConfig::new(buckets, flush)?,
                 queue_capacity: cfg.queue_capacity,
-                deadline: cfg.deadline(),
+                deadline: lc.deadline(),
             },
-            // Lane 0 absorbs the division remainder.
-            requests: if i == 0 {
-                cfg.requests - base_requests * (n - 1)
-            } else {
-                base_requests
-            },
-            arrival_rate: rate,
+            requests: requests[i],
+            arrival_rate: lc.rate,
         });
         lane_arts.push(LaneArtifacts { init, fwd });
     }
@@ -625,4 +761,85 @@ pub fn run_with_artifacts(
         make_image,
         None,
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LaneConfig, Precision};
+
+    fn lane(name: &str, rate: f64) -> LaneConfig {
+        LaneConfig { rate, ..LaneConfig::named(name, Precision::MixedF16) }
+    }
+
+    #[test]
+    fn split_requests_follows_the_rates() {
+        // 3:1 rates → 3:1 requests, remainder to lane 0.
+        let lanes = [lane("a", 300.0), lane("b", 100.0)];
+        assert_eq!(split_requests(100, &lanes), vec![75, 25]);
+        assert_eq!(split_requests(101, &lanes), vec![76, 25]);
+        // Zero-rate lanes get nothing while others offer load — even
+        // the rounding remainder lands on a *rated* lane, wherever a
+        // zero-rate lane sorts.
+        let lanes = [lane("a", 50.0), lane("idle", 0.0)];
+        assert_eq!(split_requests(10, &lanes), vec![10, 0]);
+        let lanes = [lane("idle", 0.0), lane("chat", 30.0), lane("web", 70.0)];
+        assert_eq!(split_requests(101, &lanes), vec![0, 31, 70]);
+        // All back-to-back: even split, lane 0 absorbs the remainder.
+        let lanes = [lane("a", 0.0), lane("b", 0.0), lane("c", 0.0)];
+        assert_eq!(split_requests(10, &lanes), vec![4, 3, 3]);
+        assert_eq!(split_requests(0, &lanes), vec![0, 0, 0]);
+        assert!(split_requests(5, &[]).is_empty());
+        // Conservation, always.
+        let lanes = [lane("a", 7.0), lane("b", 11.0), lane("c", 13.0)];
+        for total in [0u64, 1, 2, 97, 1000] {
+            assert_eq!(
+                split_requests(total, &lanes).iter().sum::<u64>(),
+                total
+            );
+        }
+    }
+
+    #[test]
+    fn plan_for_config_uses_the_lane_tables() {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            workers: 2,
+            lanes: vec![
+                LaneConfig {
+                    rate: 40.0,
+                    deadline_ms: 30,
+                    ..LaneConfig::named("chat", Precision::MixedF16)
+                },
+                LaneConfig {
+                    deadline_ms: 1000,
+                    ..LaneConfig::named("bulk", Precision::Fp32)
+                },
+            ],
+            ..ServeConfig::default()
+        };
+        assert!(cfg.use_planner());
+        let plan = plan_for_config(&cfg).unwrap();
+        assert!(plan.is_feasible());
+        assert_eq!(plan.lanes.len(), 2);
+        assert_eq!(plan.lanes[0].name, "chat");
+        // Sparse interactive traffic needs bucket 1; saturated bulk
+        // runs one full bucket.
+        assert!(plan.lanes[0].buckets.contains(&1));
+        assert_eq!(plan.lanes[1].buckets, vec![8]);
+        // Candidates follow max_batch, so nothing exceeds it.
+        assert!(plan.all_buckets().iter().all(|&b| b <= 8));
+    }
+
+    #[test]
+    fn plan_for_config_rejects_invalid_configs() {
+        let cfg = ServeConfig {
+            lanes: vec![LaneConfig {
+                weight: 0,
+                ..LaneConfig::named("a", Precision::Fp32)
+            }],
+            ..ServeConfig::default()
+        };
+        assert!(plan_for_config(&cfg).is_err());
+    }
 }

@@ -1,0 +1,884 @@
+//! Latency-aware bucket planner: which forward batch sizes to
+//! AOT-compile, and which flush timeouts to run, per lane.
+//!
+//! The serving engine can only dispatch batches at the sizes that
+//! were AOT-compiled (`serve::batcher` buckets), and until this
+//! module the set was static: whatever artifacts existed, with one
+//! global flush timeout — so the scheduler could not trade padding
+//! waste against flush latency per (model, precision) lane.  The
+//! planner closes that gap.  Given an *offered-load profile* — per
+//! lane: a Poisson arrival rate, an optional dispatch-size
+//! distribution, and a p99 deadline (SLO) — it searches the candidate
+//! bucket subsets and picks, for every lane,
+//!
+//! 1. the bucket set minimizing **expected padding waste**, and
+//! 2. the largest **flush timeout** that still meets the deadline
+//!    (a longer flush window lets sub-bucket remainders grow into
+//!    exact fills, which is the padding/latency trade at the heart of
+//!    the batcher),
+//!
+//! subject to the **p99 budget** `safety × deadline` under the same
+//! linear service model (`service(b) = overhead + per_row × b`) the
+//! virtual-clock harness [`simulate`](crate::serve::sched::simulate)
+//! executes batches with — so a plan's feasibility claim can be
+//! checked *exactly* in `rust/tests/serve_sim.rs`, no tolerances.
+//!
+//! # The latency model
+//!
+//! For a candidate subset with smallest bucket `b_min` and largest
+//! `b_max`, a request's p99 latency is bounded by three terms:
+//!
+//! * **queueing** `Wq` — the M/D/1 mean residual wait
+//!   `service(b_max) × ρ / (1 − ρ) / 2` inflated by
+//!   [`P99_WAIT_FACTOR`] `= ln(100) ≈ 4.6`, the multiplier that maps
+//!   an M/M/1 mean wait to its 99th percentile (an upper envelope
+//!   for M/D/1's lighter-tailed wait) — a *p99* budget must be
+//!   checked against a p99 wait, not a mean.  Utilization is
+//!   `ρ = rate / share-capacity(b_max)`, where a lane's
+//!   *share-capacity* is the throughput of its weighted-deficit
+//!   guaranteed slice of the pool, `capacity(b_max) × weight /
+//!   Σ weights` — the service floor the scheduler honours even when
+//!   every other lane is saturated (work-conserving scheduling can
+//!   only do better, so feasibility is sound, not optimistic).  Zero
+//!   for back-to-back lanes (rate ≤ 0), where latency is
+//!   throughput-bound, not SLO-bound;
+//! * **flush exposure** — a lone request below `b_min` waits the full
+//!   flush timeout before it is padded out; zero when `b_min == 1`
+//!   (any backlog exact-fills immediately under continuous refill);
+//! * **service** `service(b_max)` — the worst batch it can ride in.
+//!
+//! A subset is feasible when those terms fit the budget; the flush
+//! timeout takes all the slack that is left (clamped to
+//! [`PlannerConfig::max_flush`]).  Subsets that cannot keep up with
+//! the offered rate (ρ at or above 99 % of capacity, where the
+//! queueing term diverges) are rejected outright.
+//!
+//! # The padding model
+//!
+//! Expected padding is scored with the *dispatch policy itself*:
+//! [`BatcherConfig::padded_rows`] replays the greedy
+//! largest-exact-fit-then-pad rule on every size in the lane's
+//! distribution (explicit, or Poisson over the flush window derived
+//! from the rate).  Ties break toward higher per-row throughput at
+//! `b_max`, then fewer compiled artifacts, then the smaller `b_max`
+//! — all deterministic, so the same profile always yields the same
+//! plan.
+//!
+//! A lane whose deadline no candidate bucket can meet — or whose rate
+//! no admissible bucket can absorb — gets a
+//! [`PlanVerdict::Infeasible`] with the reason; the planner reports,
+//! it never loops.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::sched::LaneSpec;
+use crate::util::human_duration;
+
+/// The linear batch service model shared with the simulation harness:
+/// executing a bucket-`b` batch takes `overhead + per_row × b`.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceModel {
+    pub overhead: Duration,
+    pub per_row: Duration,
+}
+
+impl ServiceModel {
+    /// Service time of one batch of `rows` rows.
+    pub fn service(&self, rows: usize) -> Duration {
+        self.overhead + self.per_row * rows as u32
+    }
+
+    /// Sustained full-batch throughput of `workers` workers
+    /// dispatching bucket-`bucket` batches, in requests/second.
+    pub fn capacity_rps(&self, bucket: usize, workers: usize) -> f64 {
+        let per_batch = self.service(bucket).as_secs_f64();
+        if per_batch <= 0.0 {
+            f64::INFINITY
+        } else {
+            workers as f64 * bucket as f64 / per_batch
+        }
+    }
+}
+
+/// One lane's offered load and SLO — what
+/// [`LaneConfig`](crate::config::LaneConfig) carries, decoupled from
+/// the config layer.
+#[derive(Debug, Clone)]
+pub struct LaneProfile {
+    pub name: String,
+    /// Poisson arrival rate, req/s; ≤ 0 means back-to-back
+    /// (throughput-planned, not latency-planned).
+    pub rate: f64,
+    /// p99 end-to-end deadline.
+    pub deadline: Duration,
+    /// Weighted-deficit service weight (≥ 1), passed through to the
+    /// resulting [`LaneSpec`].
+    pub weight: u64,
+    /// Explicit `(size, weight)` dispatch-size distribution; empty ⇒
+    /// derived from `rate` as Poisson over the flush window.
+    pub size_dist: Vec<(usize, f64)>,
+}
+
+/// Search-space knobs.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    /// Bucket sizes that *could* be AOT-compiled, strictly ascending
+    /// (at most 16 — the subset search is exhaustive).
+    pub candidates: Vec<usize>,
+    /// Worker-pool size the capacity model assumes.
+    pub workers: usize,
+    /// Max buckets to compile per lane; 0 = unlimited.
+    pub max_compiled: usize,
+    /// Fraction of each deadline the plan may spend, in (0, 1].
+    pub safety: f64,
+    /// Flush-timeout ceiling (the legacy global flush makes a natural
+    /// one).
+    pub max_flush: Duration,
+}
+
+/// Predicted behaviour of a chosen lane plan.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanEstimate {
+    /// Conservative p99 bound: queueing + flush exposure + worst
+    /// batch service.
+    pub p99: Duration,
+    /// Expected padded rows / executed rows under the size
+    /// distribution.
+    pub padding_fraction: f64,
+    /// Offered rate over the lane's weight-share capacity at the
+    /// largest chosen bucket.
+    pub utilization: f64,
+}
+
+/// Whether a lane's SLO is achievable at all.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanVerdict {
+    Feasible,
+    /// No candidate bucket subset meets the SLO; `reason` says which
+    /// constraint failed (deadline vs capacity).
+    Infeasible { reason: String },
+}
+
+/// The planner's answer for one lane.
+#[derive(Debug, Clone)]
+pub struct LanePlan {
+    pub name: String,
+    pub weight: u64,
+    pub rate: f64,
+    pub deadline: Duration,
+    /// Bucket sizes to AOT-compile and dispatch at, ascending; empty
+    /// when infeasible.
+    pub buckets: Vec<usize>,
+    /// Per-lane flush timeout (replaces the global one).
+    pub flush_timeout: Duration,
+    pub predicted: PlanEstimate,
+    pub verdict: PlanVerdict,
+}
+
+impl LanePlan {
+    pub fn is_feasible(&self) -> bool {
+        matches!(self.verdict, PlanVerdict::Feasible)
+    }
+
+    /// The batcher configuration this plan prescribes.
+    pub fn batcher(&self) -> Result<BatcherConfig> {
+        if !self.is_feasible() {
+            bail!("lane {}: no feasible plan to build a batcher from", self.name);
+        }
+        BatcherConfig::new(self.buckets.clone(), self.flush_timeout)
+    }
+
+    /// A ready-to-schedule [`LaneSpec`] carrying the planned buckets,
+    /// flush timeout, weight, and deadline.
+    pub fn lane_spec(&self, queue_capacity: usize) -> Result<LaneSpec> {
+        Ok(LaneSpec {
+            name: self.name.clone(),
+            weight: self.weight,
+            batcher: self.batcher()?,
+            queue_capacity,
+            deadline: self.deadline,
+        })
+    }
+}
+
+/// A full multi-lane plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub lanes: Vec<LanePlan>,
+}
+
+impl Plan {
+    /// True when every lane got a feasible bucket set.
+    pub fn is_feasible(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_feasible())
+    }
+
+    /// Union of every lane's planned buckets, ascending — the compile
+    /// work list for `make artifacts`.
+    pub fn all_buckets(&self) -> Vec<usize> {
+        let mut out: Vec<usize> =
+            self.lanes.iter().flat_map(|l| l.buckets.iter().copied()).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Human-readable plan summary on stdout (`mpx serve --plan`).
+    pub fn print(&self) {
+        for l in &self.lanes {
+            match &l.verdict {
+                PlanVerdict::Feasible => {
+                    println!(
+                        "[plan] lane {}: buckets {:?}, flush {}, weight {}",
+                        l.name,
+                        l.buckets,
+                        human_duration(l.flush_timeout),
+                        l.weight,
+                    );
+                    println!(
+                        "       offered {:.1} req/s (util {:.0}%) | predicted \
+                         p99 {} ≤ deadline {} | expected padding {:.1}%",
+                        l.rate.max(0.0),
+                        l.predicted.utilization * 100.0,
+                        human_duration(l.predicted.p99),
+                        human_duration(l.deadline),
+                        l.predicted.padding_fraction * 100.0,
+                    );
+                }
+                PlanVerdict::Infeasible { reason } => {
+                    println!("[plan] lane {}: INFEASIBLE — {reason}", l.name);
+                }
+            }
+        }
+        if !self.lanes.is_empty() {
+            println!(
+                "[plan] compile work list (all lanes): {:?}",
+                self.all_buckets()
+            );
+        }
+    }
+}
+
+/// Power-of-two candidate buckets up to (and including) `max_batch` —
+/// the same ladder `discover_buckets` probes artifacts for.
+pub fn pow2_candidates(max_batch: usize) -> Vec<usize> {
+    if max_batch == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut b = 1usize;
+    while b < max_batch {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max_batch);
+    out
+}
+
+/// Plan every lane in `lanes`.  Each lane is sized against its
+/// *weight-share* of the worker pool — the service floor the
+/// weighted-deficit scheduler guarantees it even when every other
+/// lane is saturated — so a `Feasible` multi-lane plan is servable
+/// under full contention, and work-conserving scheduling only makes
+/// reality better than the prediction.  An empty profile yields an
+/// empty plan.  Malformed *configuration* is an error; an unmeetable
+/// *SLO* is a [`PlanVerdict::Infeasible`] on that lane, reported
+/// rather than retried.
+pub fn plan(
+    cfg: &PlannerConfig,
+    model: &ServiceModel,
+    lanes: &[LaneProfile],
+) -> Result<Plan> {
+    if cfg.candidates.is_empty() {
+        bail!("planner: no candidate buckets");
+    }
+    if cfg.candidates.len() > 16 {
+        bail!(
+            "planner: {} candidate buckets — the exhaustive subset search \
+             caps at 16",
+            cfg.candidates.len()
+        );
+    }
+    if cfg.candidates[0] == 0 {
+        bail!("planner: zero-sized candidate bucket");
+    }
+    if !cfg.candidates.windows(2).all(|w| w[0] < w[1]) {
+        bail!(
+            "planner: candidates {:?} not strictly ascending",
+            cfg.candidates
+        );
+    }
+    if cfg.workers == 0 {
+        bail!("planner: workers must be ≥ 1");
+    }
+    if !(cfg.safety > 0.0 && cfg.safety <= 1.0) {
+        bail!("planner: safety {} outside (0, 1]", cfg.safety);
+    }
+    let total_weight: u64 = lanes.iter().map(|l| l.weight).sum();
+    let planned = lanes
+        .iter()
+        .map(|lane| {
+            let share = lane.weight as f64 / total_weight.max(1) as f64;
+            plan_lane(cfg, model, lane, share)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Plan { lanes: planned })
+}
+
+/// Highest utilization a plan may run at: above this the queueing
+/// approximation diverges, so such subsets count as capacity
+/// failures.
+const MAX_UTILIZATION: f64 = 0.99;
+
+/// Mean-wait → p99-wait multiplier: `ln(100)`, exact for the
+/// exponential M/M/1 waiting-time tail and an upper envelope for
+/// M/D/1's lighter tail.  The deadline is a p99 budget, so the
+/// queueing term must be a p99 wait, not a mean.
+const P99_WAIT_FACTOR: f64 = 4.605_170_185_988_091;
+
+/// Lexicographic plan score, smaller is better: padding first, then
+/// per-request service cost at the largest bucket (throughput), then
+/// compile count, then the smaller largest-bucket for determinism.
+struct Score {
+    pad_frac: f64,
+    per_request: f64,
+    compiled: usize,
+    b_max: usize,
+}
+
+impl Score {
+    fn beats(&self, other: &Score) -> bool {
+        self.pad_frac
+            .total_cmp(&other.pad_frac)
+            .then(self.per_request.total_cmp(&other.per_request))
+            .then(self.compiled.cmp(&other.compiled))
+            .then(self.b_max.cmp(&other.b_max))
+            == std::cmp::Ordering::Less
+    }
+}
+
+fn infeasible(
+    lane: &LaneProfile,
+    utilization: f64,
+    reason: String,
+) -> LanePlan {
+    LanePlan {
+        name: lane.name.clone(),
+        weight: lane.weight,
+        rate: lane.rate,
+        deadline: lane.deadline,
+        buckets: Vec::new(),
+        flush_timeout: Duration::ZERO,
+        predicted: PlanEstimate {
+            p99: Duration::ZERO,
+            padding_fraction: 0.0,
+            utilization,
+        },
+        verdict: PlanVerdict::Infeasible { reason },
+    }
+}
+
+/// Plan one lane against `share` of the pool's capacity — its
+/// weighted-deficit guaranteed fraction (1.0 for a lone lane).
+fn plan_lane(
+    cfg: &PlannerConfig,
+    model: &ServiceModel,
+    lane: &LaneProfile,
+    share: f64,
+) -> Result<LanePlan> {
+    if lane.name.is_empty() {
+        bail!("planner: lane with an empty name");
+    }
+    if lane.weight == 0 {
+        bail!("planner: lane {} has zero weight", lane.name);
+    }
+    if !lane.rate.is_finite() {
+        bail!("planner: lane {} rate must be finite", lane.name);
+    }
+    for &(s, w) in &lane.size_dist {
+        if s == 0 || !(w > 0.0) || !w.is_finite() {
+            bail!(
+                "planner: lane {} size_dist entry ({s}, {w}) — sizes must be \
+                 ≥ 1 and weights finite and > 0",
+                lane.name
+            );
+        }
+    }
+    let budget = lane.deadline.mul_f64(cfg.safety);
+
+    // 1. Latency admissibility: a bucket whose bare service time blows
+    //    the budget can never appear in a feasible subset.
+    let admissible: Vec<usize> = cfg
+        .candidates
+        .iter()
+        .copied()
+        .filter(|&b| model.service(b) <= budget)
+        .collect();
+    if admissible.is_empty() {
+        let b0 = cfg.candidates[0];
+        return Ok(infeasible(
+            lane,
+            0.0,
+            format!(
+                "service time {} of the smallest candidate bucket b{} \
+                 exceeds the p99 budget {} ({:.0}% of the {} deadline) — no \
+                 bucket can meet this SLO on this service model",
+                human_duration(model.service(b0)),
+                b0,
+                human_duration(budget),
+                cfg.safety * 100.0,
+                human_duration(lane.deadline),
+            ),
+        ));
+    }
+    let b_top = *admissible.last().expect("non-empty admissible");
+    let cap_top = model.capacity_rps(b_top, cfg.workers) * share;
+
+    // 2. Exhaustive subset search (≤ 2^16) for the padding-minimal
+    //    feasible plan.
+    let n = admissible.len();
+    let mut best: Option<(Score, Vec<usize>, Duration, PlanEstimate)> = None;
+    let mut capacity_fail = false;
+    for mask in 1u32..(1u32 << n) {
+        let subset: Vec<usize> = (0..n)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| admissible[i])
+            .collect();
+        if cfg.max_compiled > 0 && subset.len() > cfg.max_compiled {
+            continue;
+        }
+        let b_min = subset[0];
+        let b_max = *subset.last().expect("non-empty subset");
+        let svc_max = model.service(b_max);
+
+        // Throughput: the lane's *guaranteed* slice of the pool must
+        // absorb its offered rate with a sliver of headroom — at
+        // ≥ 99 % utilization the queueing term explodes and no p99
+        // target is realistic (and the division below would be
+        // numerically meaningless).
+        let capacity = model.capacity_rps(b_max, cfg.workers) * share;
+        let rho = if lane.rate > 0.0 { lane.rate / capacity } else { 0.0 };
+        if rho >= MAX_UTILIZATION {
+            capacity_fail = true;
+            continue;
+        }
+
+        // Latency: p99 queueing + flush exposure + service within
+        // budget.  Mean residual wait × the p99 tail multiplier —
+        // the budget is a 99th percentile, so the wait term is too.
+        let wq = if rho > 0.0 {
+            svc_max.mul_f64(rho / (1.0 - rho) / 2.0 * P99_WAIT_FACTOR)
+        } else {
+            Duration::ZERO
+        };
+        let Some(slack) = budget.checked_sub(svc_max + wq) else {
+            continue;
+        };
+        // All remaining slack goes to the flush window (more time for
+        // remainders to grow into exact fills ⇒ less padding), capped
+        // by the configured ceiling.  With b_min == 1 the flush can
+        // never fire, so it costs no latency.
+        let flush = slack.min(cfg.max_flush);
+        let exposure = if b_min > 1 { flush } else { Duration::ZERO };
+        let p99 = wq + exposure + svc_max;
+
+        let batcher = BatcherConfig::new(subset.clone(), flush)?;
+        let dist = effective_dist(lane, flush, b_max);
+        let pad_frac = padding_fraction(&batcher, &dist);
+        let score = Score {
+            pad_frac,
+            per_request: svc_max.as_secs_f64() / b_max as f64,
+            compiled: subset.len(),
+            b_max,
+        };
+        if best.as_ref().map_or(true, |(b, ..)| score.beats(b)) {
+            let est = PlanEstimate {
+                p99,
+                padding_fraction: pad_frac,
+                utilization: rho,
+            };
+            best = Some((score, subset, flush, est));
+        }
+    }
+
+    let Some((_, buckets, flush, predicted)) = best else {
+        let reason = if capacity_fail {
+            format!(
+                "offered {:.1} req/s is at or above {:.0}% of the lane's \
+                 {:.1} req/s guaranteed capacity ({:.0}% weight share of {} \
+                 workers at the largest deadline-admissible bucket b{b_top}) \
+                 — add workers, raise the lane weight, or relax the deadline",
+                lane.rate,
+                MAX_UTILIZATION * 100.0,
+                cap_top,
+                share * 100.0,
+                cfg.workers,
+            )
+        } else {
+            format!(
+                "no bucket subset fits the p99 budget {}: queueing plus \
+                 service exceed it at every deadline-admissible bucket",
+                human_duration(budget),
+            )
+        };
+        return Ok(infeasible(lane, lane.rate.max(0.0) / cap_top, reason));
+    };
+    Ok(LanePlan {
+        name: lane.name.clone(),
+        weight: lane.weight,
+        rate: lane.rate,
+        deadline: lane.deadline,
+        buckets,
+        flush_timeout: flush,
+        predicted,
+        verdict: PlanVerdict::Feasible,
+    })
+}
+
+/// The dispatch-size distribution to score padding against: the
+/// explicit one when given; a point mass at the largest bucket for
+/// back-to-back lanes (saturated backlogs exact-fill); otherwise
+/// Poisson(rate × flush window) truncated at `cap` with the tail mass
+/// lumped into `cap`.
+fn effective_dist(
+    lane: &LaneProfile,
+    flush: Duration,
+    cap: usize,
+) -> Vec<(usize, f64)> {
+    if !lane.size_dist.is_empty() {
+        return lane.size_dist.clone();
+    }
+    if lane.rate <= 0.0 {
+        return vec![(cap, 1.0)];
+    }
+    poisson_sizes(lane.rate * flush.as_secs_f64(), cap)
+}
+
+/// `P(dispatch size = s)` for `s ∈ 1..=cap` under Poisson(λ) arrivals
+/// in one flush window, conditioned on at least one arrival; mass at
+/// `≥ cap` lumps into `cap` (a deep backlog dispatches full buckets).
+fn poisson_sizes(lambda: f64, cap: usize) -> Vec<(usize, f64)> {
+    if cap <= 1 || lambda <= 0.0 || !lambda.is_finite() {
+        return vec![(1, 1.0)];
+    }
+    let mut p = (-lambda).exp(); // P(0); underflows to 0 for large λ
+    let mut acc = p;
+    let mut out = Vec::with_capacity(cap);
+    for s in 1..cap {
+        p *= lambda / s as f64;
+        out.push((s, p));
+        acc += p;
+    }
+    out.push((cap, (1.0 - acc).max(0.0)));
+    let total: f64 = out.iter().map(|(_, w)| w).sum();
+    if total <= 0.0 {
+        return vec![(1, 1.0)];
+    }
+    for (_, w) in &mut out {
+        *w /= total;
+    }
+    out
+}
+
+/// Expected padded rows over executed rows when clearing dispatches
+/// drawn from `dist` with `batcher`'s greedy policy — the quantity
+/// the subset search minimizes (same definition as
+/// `ServeReport::padding_fraction`).
+fn padding_fraction(batcher: &BatcherConfig, dist: &[(usize, f64)]) -> f64 {
+    let mut pad = 0.0;
+    let mut real = 0.0;
+    for &(s, w) in dist {
+        pad += w * batcher.padded_rows(s) as f64;
+        real += w * s as f64;
+    }
+    if real + pad <= 0.0 {
+        0.0
+    } else {
+        pad / (real + pad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn model_1_1() -> ServiceModel {
+        // service(b) = 1 ms + b ms — easy mental arithmetic.
+        ServiceModel { overhead: ms(1), per_row: ms(1) }
+    }
+
+    fn pcfg(candidates: &[usize]) -> PlannerConfig {
+        PlannerConfig {
+            candidates: candidates.to_vec(),
+            workers: 1,
+            max_compiled: 0,
+            safety: 0.9,
+            max_flush: ms(20),
+        }
+    }
+
+    fn profile(name: &str, rate: f64, deadline: Duration) -> LaneProfile {
+        LaneProfile {
+            name: name.into(),
+            rate,
+            deadline,
+            weight: 1,
+            size_dist: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn empty_profile_plans_empty() {
+        let p = plan(&pcfg(&[1, 2, 4, 8]), &model_1_1(), &[]).unwrap();
+        assert!(p.lanes.is_empty());
+        assert!(p.is_feasible());
+        assert!(p.all_buckets().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_search_space() {
+        let m = model_1_1();
+        let lanes = [profile("a", 10.0, ms(100))];
+        assert!(plan(&pcfg(&[]), &m, &lanes).is_err());
+        assert!(plan(&pcfg(&[0, 2]), &m, &lanes).is_err());
+        assert!(plan(&pcfg(&[4, 2]), &m, &lanes).is_err());
+        let mut too_many = pcfg(&[1; 1]);
+        too_many.candidates = (1..=17).collect();
+        assert!(plan(&too_many, &m, &lanes).is_err());
+        let mut bad_safety = pcfg(&[1, 2]);
+        bad_safety.safety = 1.5;
+        assert!(plan(&bad_safety, &m, &lanes).is_err());
+        let mut no_workers = pcfg(&[1, 2]);
+        no_workers.workers = 0;
+        assert!(plan(&no_workers, &m, &lanes).is_err());
+    }
+
+    #[test]
+    fn single_candidate_single_bucket_feasibility() {
+        // One candidate, generous SLO: the planner must pick it.
+        let p = plan(
+            &pcfg(&[8]),
+            &model_1_1(),
+            &[profile("a", 50.0, Duration::from_secs(1))],
+        )
+        .unwrap();
+        assert!(p.is_feasible());
+        let l = &p.lanes[0];
+        assert_eq!(l.buckets, vec![8]);
+        assert!(l.flush_timeout > Duration::ZERO);
+        assert!(l.predicted.p99 <= Duration::from_secs(1));
+        l.batcher().unwrap();
+        l.lane_spec(64).unwrap();
+    }
+
+    #[test]
+    fn deadline_infeasible_at_any_bucket_is_reported_not_looped() {
+        // service(1) = 2 ms > 0.9 × 2 ms budget: nothing can fit.
+        let p = plan(
+            &pcfg(&[1, 2, 4, 8]),
+            &model_1_1(),
+            &[profile("tight", 10.0, ms(2))],
+        )
+        .unwrap();
+        assert!(!p.is_feasible());
+        let l = &p.lanes[0];
+        assert!(l.buckets.is_empty());
+        match &l.verdict {
+            PlanVerdict::Infeasible { reason } => {
+                assert!(reason.contains("deadline"), "reason: {reason}");
+            }
+            v => panic!("expected infeasible, got {v:?}"),
+        }
+        // An infeasible plan refuses to fabricate a batcher.
+        assert!(l.batcher().is_err());
+    }
+
+    #[test]
+    fn capacity_infeasible_is_reported_with_the_rate() {
+        // capacity at b=8, 1 worker: 8 / 9 ms ≈ 889 req/s.  Offer 10×.
+        let p = plan(
+            &pcfg(&[1, 2, 4, 8]),
+            &model_1_1(),
+            &[profile("hot", 9000.0, ms(100))],
+        )
+        .unwrap();
+        assert!(!p.is_feasible());
+        match &p.lanes[0].verdict {
+            PlanVerdict::Infeasible { reason } => {
+                assert!(reason.contains("capacity"), "reason: {reason}");
+            }
+            v => panic!("expected infeasible, got {v:?}"),
+        }
+        assert!(p.lanes[0].predicted.utilization > 1.0);
+    }
+
+    #[test]
+    fn sparse_interactive_lane_gets_bucket_one() {
+        // 20 req/s against an 888 req/s pool: lone requests dominate,
+        // so any subset without bucket 1 pays padding — the winner
+        // must include 1, and the big bucket for throughput headroom.
+        let p = plan(
+            &pcfg(&[1, 2, 4, 8]),
+            &model_1_1(),
+            &[profile("chat", 20.0, ms(12))],
+        )
+        .unwrap();
+        assert!(p.is_feasible());
+        let l = &p.lanes[0];
+        assert_eq!(l.buckets, vec![1, 8]);
+        assert_eq!(l.predicted.padding_fraction, 0.0);
+        assert!(l.predicted.p99 <= ms(12));
+        // b_min == 1 ⇒ no flush exposure in the p99.
+        assert!(l.predicted.p99 >= ms(9), "must include service(8)");
+    }
+
+    #[test]
+    fn saturated_lane_takes_one_big_bucket() {
+        // Back-to-back: padding is zero everywhere, so the score falls
+        // through to per-request service cost (b=8 wins) and then to
+        // compile count ({8} beats {1,8}).
+        let p = plan(
+            &pcfg(&[1, 2, 4, 8]),
+            &model_1_1(),
+            &[profile("bulk", 0.0, Duration::from_secs(1))],
+        )
+        .unwrap();
+        assert!(p.is_feasible());
+        assert_eq!(p.lanes[0].buckets, vec![8]);
+        assert_eq!(p.lanes[0].predicted.utilization, 0.0);
+    }
+
+    #[test]
+    fn explicit_size_dist_drives_the_bucket_choice() {
+        // All bursts are exactly 3 requests; an 8 ms deadline (7.2 ms
+        // budget) admits service(4) = 5 ms plus its p99 queueing wait
+        // but rejects service(8) = 9 ms.  Two compiles max: {1,4}
+        // clears 3 as 1+1+1 with zero padding and the best
+        // per-request cost among pad-free pairs.
+        let mut cfg = pcfg(&[1, 2, 4, 8]);
+        cfg.max_compiled = 2;
+        let mut lane = profile("burst3", 50.0, ms(8));
+        lane.size_dist = vec![(3, 1.0)];
+        let p = plan(&cfg, &model_1_1(), &[lane]).unwrap();
+        assert!(p.is_feasible());
+        let l = &p.lanes[0];
+        assert_eq!(l.buckets, vec![1, 4]);
+        assert_eq!(l.predicted.padding_fraction, 0.0);
+        assert!(l.buckets.len() <= 2);
+    }
+
+    #[test]
+    fn lanes_are_sized_against_their_weight_share_of_the_pool() {
+        // Pool capacity at b=8 over 2 workers ≈ 1778 req/s.  Two
+        // equal-weight lanes each offering 1200 req/s fit the pool
+        // *alone* but overcommit it together: each lane's guaranteed
+        // share is ≈ 889 req/s, so both must come back
+        // capacity-infeasible — the weighted-deficit scheduler cannot
+        // serve either lane past its share under contention.
+        let mut cfg = pcfg(&[1, 2, 4, 8]);
+        cfg.workers = 2;
+        let p = plan(
+            &cfg,
+            &model_1_1(),
+            &[
+                profile("a", 1200.0, ms(100)),
+                profile("b", 1200.0, ms(100)),
+            ],
+        )
+        .unwrap();
+        assert!(!p.is_feasible());
+        for l in &p.lanes {
+            match &l.verdict {
+                PlanVerdict::Infeasible { reason } => {
+                    assert!(reason.contains("capacity"), "reason: {reason}");
+                }
+                v => panic!("expected share infeasibility, got {v:?}"),
+            }
+            assert!(l.buckets.is_empty());
+        }
+        // The same rated lane next to a saturated filler passes only
+        // when its weight guarantees it enough of the pool: weight
+        // 3:1 gives it 75 % ≈ 1333 req/s ≥ 1200 offered.  (Generous
+        // deadline — at ρ = 0.9 the p99 queueing wait alone is
+        // ≈ 186 ms.)
+        let rated = |weight: u64| LaneProfile {
+            weight,
+            ..profile("a", 1200.0, ms(400))
+        };
+        let bulk = profile("bulk", 0.0, Duration::from_secs(1));
+        let p = plan(&cfg, &model_1_1(), &[rated(1), bulk.clone()]).unwrap();
+        assert!(
+            !p.lanes[0].is_feasible(),
+            "half a pool (889 req/s) cannot absorb 1200 req/s"
+        );
+        let p = plan(&cfg, &model_1_1(), &[rated(3), bulk]).unwrap();
+        assert!(p.is_feasible(), "a 75% share (1333 req/s) absorbs 1200");
+        assert!(p.lanes[0].predicted.utilization > 0.8);
+    }
+
+    #[test]
+    fn infeasible_lane_does_not_poison_its_neighbours() {
+        let p = plan(
+            &pcfg(&[1, 2, 4, 8]),
+            &model_1_1(),
+            &[
+                profile("ok", 20.0, ms(50)),
+                profile("doomed", 10.0, ms(1)),
+            ],
+        )
+        .unwrap();
+        assert!(!p.is_feasible());
+        assert!(p.lanes[0].is_feasible());
+        assert!(!p.lanes[1].is_feasible());
+        // The compile work list only carries feasible lanes' buckets.
+        assert_eq!(p.all_buckets(), p.lanes[0].buckets);
+    }
+
+    #[test]
+    fn poisson_sizes_concentrate_where_the_load_says() {
+        // Tiny window: essentially all mass at size 1.
+        let d = poisson_sizes(0.01, 8);
+        assert!(d[0].0 == 1 && d[0].1 > 0.99);
+        // Huge window: the tail lump at cap takes everything.
+        let d = poisson_sizes(1e6, 8);
+        let cap_mass = d.iter().find(|&&(s, _)| s == 8).unwrap().1;
+        assert!(cap_mass > 0.99);
+        // Always a normalized distribution.
+        for lambda in [0.1, 1.0, 4.0, 32.0] {
+            let d = poisson_sizes(lambda, 8);
+            let total: f64 = d.iter().map(|(_, w)| w).sum();
+            assert!((total - 1.0).abs() < 1e-9, "λ={lambda}: Σ={total}");
+            assert!(d.iter().all(|&(s, w)| s >= 1 && w >= 0.0));
+        }
+    }
+
+    #[test]
+    fn pow2_candidates_match_discover_ladder() {
+        assert_eq!(pow2_candidates(8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_candidates(6), vec![1, 2, 4, 6]);
+        assert_eq!(pow2_candidates(1), vec![1]);
+        assert!(pow2_candidates(0).is_empty());
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let lanes = [
+            profile("a", 35.0, ms(25)),
+            profile("b", 0.0, Duration::from_secs(1)),
+        ];
+        let p1 = plan(&pcfg(&[1, 2, 4, 8]), &model_1_1(), &lanes).unwrap();
+        let p2 = plan(&pcfg(&[1, 2, 4, 8]), &model_1_1(), &lanes).unwrap();
+        for (a, b) in p1.lanes.iter().zip(&p2.lanes) {
+            assert_eq!(a.buckets, b.buckets);
+            assert_eq!(a.flush_timeout, b.flush_timeout);
+            assert_eq!(a.predicted.p99, b.predicted.p99);
+        }
+    }
+}

@@ -47,6 +47,13 @@ use crate::serve::clock::{Clock, VirtualClock};
 use crate::serve::queue::{QueuePoll, QueueStats, Request, RequestQueue};
 
 /// Static description of one (model, precision) lane.
+///
+/// The bucket set and flush timeout inside `batcher` are *inputs*
+/// here: production derives them per lane from the latency-aware
+/// planner ([`LanePlan::lane_spec`](crate::serve::planner::LanePlan))
+/// when per-lane SLOs are configured, falling back to the static
+/// discovered-artifact list otherwise; the scheduler itself only ever
+/// dispatches at the sizes this spec names.
 #[derive(Debug, Clone)]
 pub struct LaneSpec {
     /// Display/routing name, e.g. `"vit_tiny/mixed_f16"`.
@@ -56,7 +63,8 @@ pub struct LaneSpec {
     pub weight: u64,
     pub batcher: BatcherConfig,
     pub queue_capacity: usize,
-    /// Per-request end-to-end budget (reported, not enforced).
+    /// Per-request end-to-end budget (reported, not enforced) — the
+    /// p99 SLO the planner planned `batcher` against.
     pub deadline: Duration,
 }
 

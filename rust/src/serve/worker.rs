@@ -12,11 +12,9 @@
 //! moment a batch finishes.
 //!
 //! The compiled executables themselves are shared across workers via
-//! [`SharedExecutable`] — one compile, N replicas of the (cheap)
-//! parameter literals, exactly the replication scheme `trainer::ddp`
-//! uses for shards.
-//!
-//! [`SharedExecutable`]: crate::runtime::SharedExecutable
+//! `runtime::SharedExecutable` (xla feature) — one compile, N
+//! replicas of the (cheap) parameter literals, exactly the
+//! replication scheme `trainer::ddp` uses for shards.
 
 use std::time::Duration;
 

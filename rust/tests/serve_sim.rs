@@ -10,6 +10,7 @@
 
 use std::time::Duration;
 
+use mpx::serve::planner::{self, LaneProfile, PlannerConfig, ServiceModel};
 use mpx::serve::{
     loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
     SchedPolicy, SimReport, SimSpec,
@@ -229,6 +230,162 @@ fn autoscaler_grows_the_pool_on_backlog_and_completes_everything() {
     assert!(rep.spawned >= 1, "backlog never grew the pool");
     assert!(rep.peak_workers > 1);
     assert!(rep.peak_workers <= 4, "pool exceeded max_workers");
+}
+
+#[test]
+fn planner_buckets_meet_the_slo_the_static_bucket_list_misses() {
+    // The PR-3 static deployment cannot express per-lane SLOs: lanes
+    // get whatever bucket sizes were AOT-compiled and one global
+    // flush timeout.  Scenario: an interactive lane offering one
+    // request every 50 ms with a 12 ms p99 deadline, on a service
+    // model of service(b) = 1 ms + b × 1 ms (the exact linear model
+    // `simulate` executes batches with).
+    //
+    // Static setup: only the throughput buckets [4, 8] were compiled,
+    // global flush 20 ms.  Every lone request sits below the smallest
+    // bucket, waits the full flush, pads up to bucket 4, and
+    // completes at exactly 20 + (1 + 4) = 25 ms — every single one
+    // misses the 12 ms deadline, deterministically.
+    //
+    // Planner setup: given the same load profile, rate, and deadline,
+    // the planner selects a bucket set containing size 1 (lone
+    // requests dispatch the instant a worker frees, no flush
+    // exposure, no padding), so every request completes at exactly
+    // service(1) = 2 ms and the lane meets its SLO.
+    let model = ServiceModel {
+        overhead: ms(1),
+        per_row: ms(1),
+    };
+    let deadline = ms(12);
+    let requests = 40u64;
+    let arrivals: Vec<Duration> =
+        (0..requests).map(|i| ms(50 * i)).collect();
+    // Hold the lane open past the last flush so the tail request pays
+    // the same flush stall as the rest (no close-drain bailout).
+    let stop_at = Some(Duration::from_secs(10));
+
+    let run = |spec: LaneSpec| -> SimReport {
+        simulate(SimSpec {
+            lanes: vec![LaneLoad { spec, arrivals: arrivals.clone() }],
+            policy: SchedPolicy::Continuous,
+            autoscale: AutoscalePolicy::fixed(1),
+            exec_overhead: model.overhead,
+            exec_per_row: model.per_row,
+            stop_at,
+            record_detail: true,
+        })
+        .unwrap()
+    };
+
+    // --- static bucket list: all 40 requests miss, at exactly 25 ms.
+    let static_rep = run(lane("interactive", 1, &[4, 8], ms(20), deadline));
+    assert_eq!(static_rep.completed(), requests);
+    assert_eq!(
+        static_rep.deadline_misses(),
+        requests,
+        "every lone request must miss under the static buckets"
+    );
+    for c in &static_rep.completions {
+        assert_eq!(c.done - c.enqueued, ms(25));
+        assert!(c.missed_deadline);
+    }
+    let static_p99 = static_rep.latency().quantile(0.99).unwrap();
+    assert_eq!(static_p99, ms(25));
+    assert!(static_p99 > deadline);
+    // Padding ballast: 3 padded rows per bucket-4 dispatch of 1.
+    assert_eq!(static_rep.lanes[0].padded, 3 * requests);
+
+    // --- the planner, fed the offered-load profile, fixes it.
+    let profile = LaneProfile {
+        name: "interactive".into(),
+        rate: 20.0, // one request per 50 ms
+        deadline,
+        weight: 1,
+        size_dist: Vec::new(),
+    };
+    let pcfg = PlannerConfig {
+        candidates: vec![1, 2, 4, 8],
+        workers: 1,
+        max_compiled: 0,
+        safety: 0.9,
+        max_flush: ms(20),
+    };
+    let plan = planner::plan(&pcfg, &model, &[profile]).unwrap();
+    assert!(plan.is_feasible(), "the SLO is meetable — plan must say so");
+    let lp = &plan.lanes[0];
+    assert!(
+        lp.buckets.contains(&1),
+        "sparse traffic needs bucket 1, planner chose {:?}",
+        lp.buckets
+    );
+    assert!(lp.predicted.p99 <= deadline);
+
+    let planned_rep = run(lp.lane_spec(10_000).unwrap());
+    assert_eq!(planned_rep.completed(), requests);
+    assert_eq!(
+        planned_rep.deadline_misses(),
+        0,
+        "planned buckets must meet the per-lane deadline"
+    );
+    for c in &planned_rep.completions {
+        assert_eq!(c.done - c.enqueued, ms(2)); // service(1), exactly
+    }
+    let planned_p99 = planned_rep.latency().quantile(0.99).unwrap();
+    assert_eq!(planned_p99, ms(2));
+    assert!(planned_p99 <= deadline);
+    assert_eq!(planned_rep.lanes[0].padded, 0, "exact fills never pad");
+    // The planner's conservative p99 bound really bounds the measured
+    // virtual-clock p99.
+    assert!(lp.predicted.p99 >= planned_p99);
+}
+
+#[test]
+fn planner_saturated_lane_plan_sustains_full_buckets_in_the_sim() {
+    // A back-to-back lane is throughput-planned: the planner picks a
+    // single full-size bucket (zero padding at saturation, best
+    // per-row service).  Replay 64 simultaneous arrivals through the
+    // planned spec: 8 full bucket-8 batches, no padding anywhere.
+    let model = ServiceModel {
+        overhead: ms(1),
+        per_row: Duration::ZERO,
+    };
+    let plan = planner::plan(
+        &PlannerConfig {
+            candidates: vec![1, 2, 4, 8],
+            workers: 2,
+            max_compiled: 0,
+            safety: 0.9,
+            max_flush: ms(5),
+        },
+        &model,
+        &[LaneProfile {
+            name: "bulk".into(),
+            rate: 0.0,
+            deadline: Duration::from_secs(1),
+            weight: 1,
+            size_dist: Vec::new(),
+        }],
+    )
+    .unwrap();
+    assert!(plan.is_feasible());
+    assert_eq!(plan.lanes[0].buckets, vec![8]);
+
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: plan.lanes[0].lane_spec(10_000).unwrap(),
+            arrivals: vec![Duration::ZERO; 64],
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(2),
+        exec_overhead: model.overhead,
+        exec_per_row: model.per_row,
+        stop_at: None,
+        record_detail: false,
+    })
+    .unwrap();
+    assert_eq!(rep.completed(), 64);
+    assert_eq!(rep.lanes[0].batches, 8);
+    assert_eq!(rep.lanes[0].padded, 0);
 }
 
 #[test]
