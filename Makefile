@@ -1,0 +1,25 @@
+# MPX build entry points.  `make artifacts` is the one Python touch
+# in the pipeline (python/compile/aot.py → artifacts/*.hlo.txt +
+# *.manifest.json); everything else is cargo.
+
+PYTHON ?= python3
+OUT ?= artifacts
+
+.PHONY: artifacts artifacts-tiny test build
+
+# Full artifact set: every (model, precision, batch) variant the
+# benches and examples reference.  Needs a JAX-capable Python env.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(OUT)
+
+# Tiny-model subset (vit_tiny only): everything the artifact-dependent
+# integration test suites need, at a fraction of the lowering time —
+# this is the config CI builds and caches.
+artifacts-tiny:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(OUT) --only vit_tiny
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q

@@ -1,0 +1,169 @@
+//! serve_http — the serve network transport end to end, no PJRT
+//! required: a stub executor stands in for the compiled forward so
+//! the whole loop (HTTP server → lane queues → continuous-batching
+//! scheduler → streamed chunked responses → Prometheus metrics) runs
+//! on any host.
+//!
+//! Two modes:
+//!
+//! ```text
+//! cargo run --example serve_http --no-default-features
+//!     # self-driving demo: binds an ephemeral port, fires a Poisson
+//!     # load through transport::client::drive, prints the reports.
+//!
+//! cargo run --example serve_http --no-default-features -- --listen 127.0.0.1:7878
+//!     # stays up for curl until Ctrl-C (graceful drain):
+//!     #   curl -N -d '{"lane":"chat","image":[1,2,3,4]}' \
+//!     #        http://127.0.0.1:7878/v1/infer
+//!     #   curl http://127.0.0.1:7878/metrics
+//! ```
+//!
+//! The real-artifact variant of exactly this server is
+//! `mpx serve --listen ADDR` (needs the `xla` feature and
+//! `make artifacts`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use mpx::cli::Args;
+use mpx::config::TransportConfig;
+use mpx::serve::transport::{client, Server};
+use mpx::serve::{BatchExecutor, BatcherConfig, LaneSpec, SchedPolicy};
+use mpx::util::human_duration;
+
+/// Flattened demo "image" length (stands in for C×H×W).
+const ELEMS: usize = 4;
+const WORKERS: usize = 2;
+
+/// Stub forward: logits = inputs × lane scale, with a deliberate
+/// overflow when an input is huge — so the per-response `finite`
+/// flag and the `mpx_serve_nonfinite_total` counter have something
+/// real to report.
+struct DemoExecutor {
+    scale: f32,
+}
+
+impl BatchExecutor for DemoExecutor {
+    fn execute(&mut self, images: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        Ok(images
+            .iter()
+            .map(|v| {
+                let y = v * self.scale;
+                if v.abs() > 1e30 {
+                    f32::INFINITY // simulated half-precision overflow
+                } else {
+                    y
+                }
+            })
+            .collect())
+    }
+}
+
+fn lanes() -> Vec<LaneSpec> {
+    let mk = |name: &str, flush_ms: u64| LaneSpec {
+        name: name.into(),
+        weight: 1,
+        batcher: BatcherConfig::new(
+            vec![1, 2, 4, 8],
+            Duration::from_millis(flush_ms),
+        )
+        .expect("static buckets are valid"),
+        queue_capacity: 64,
+        deadline: Duration::from_millis(100),
+    };
+    vec![mk("demo/chat", 2), mk("demo/bulk", 10)]
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let listen = args.get_str("listen").map(str::to_string);
+    args.finish()?;
+
+    let tcfg = TransportConfig {
+        addr: listen.clone().unwrap_or_else(|| "127.0.0.1:0".into()),
+        ..TransportConfig::default()
+    };
+    let server = Server::bind(&tcfg)?;
+    let addr = server.local_addr();
+    let handle = server.handle();
+    eprintln!("[serve_http] listening on http://{addr}");
+    eprintln!("[serve_http]   curl -N -d '{{\"lane\":\"chat\",\"image\":[1,2,3,4]}}' http://{addr}/v1/infer");
+    eprintln!("[serve_http]   curl http://{addr}/healthz");
+    eprintln!("[serve_http]   curl http://{addr}/metrics");
+
+    let forever = listen.is_some();
+    if forever {
+        mpx::serve::transport::install_sigint();
+        eprintln!("[serve_http] Ctrl-C drains and exits");
+    }
+
+    let server_thread = std::thread::spawn(move || {
+        server.run(
+            lanes(),
+            WORKERS,
+            SchedPolicy::Continuous,
+            ELEMS,
+            |_worker, lane| Ok(DemoExecutor { scale: (lane + 2) as f32 }),
+        )
+    });
+
+    if !forever {
+        // Self-driving demo: Poisson load through the std-only client
+        // — the same deterministic generator the engine benches use.
+        let image = Arc::new(
+            (0..ELEMS).map(|i| i as f32 + 1.0).collect::<Vec<f32>>(),
+        );
+        let img = image.clone();
+        let drive = client::drive(
+            &addr.to_string(),
+            "chat",
+            200,
+            500.0,
+            7,
+            8,
+            move |_i| img.as_ref().clone(),
+        );
+        println!(
+            "[serve_http] drive: {} offered, {} completed, {} rejected, \
+             {} errors, {} non-finite",
+            drive.offered,
+            drive.completed,
+            drive.rejected,
+            drive.errors,
+            drive.nonfinite,
+        );
+        if let Some(s) = drive.latency.summary() {
+            println!(
+                "[serve_http] client RTT p50 {}  p95 {}  p99 {}",
+                human_duration(s.p50),
+                human_duration(s.p95),
+                human_duration(s.p99),
+            );
+        }
+        // One request that overflows, to exercise the accounting.
+        let c = client::Client::new(addr.to_string());
+        let reply = c.infer("chat", &[1e38, 2.0, 3.0, 4.0])?;
+        println!(
+            "[serve_http] overflow probe: finite = {} (logits[0] = {:?})",
+            reply.finite,
+            reply.logits.first(),
+        );
+        let metrics = c.metrics()?;
+        for line in metrics.lines().filter(|l| {
+            l.starts_with("mpx_serve_completed_total")
+                || l.starts_with("mpx_serve_nonfinite_total")
+                || l.starts_with("mpx_transport_")
+        }) {
+            println!("[serve_http] metrics: {line}");
+        }
+        handle.shutdown();
+    }
+
+    let report = server_thread
+        .join()
+        .expect("server thread panicked")?;
+    report.print();
+    Ok(())
+}

@@ -363,6 +363,66 @@ impl Default for PlannerSettings {
     }
 }
 
+/// Network-transport knobs (`[serve.transport]`) — consumed by
+/// [`crate::serve::transport::Server`] when `mpx serve --listen`
+/// turns the engine into an HTTP service.
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// Listen address (`--listen` overrides); `host:0` binds an
+    /// ephemeral port (tests).
+    pub addr: String,
+    /// Concurrent connections served; connections beyond the cap are
+    /// turned away with `503` before their request is read.
+    pub max_connections: usize,
+    /// Socket read timeout, applied per read call — an idle client
+    /// is dropped after one timeout.  A deliberately trickling
+    /// client can stretch a request across many reads (each under
+    /// the timeout); whole-request deadlines are a transport
+    /// follow-up (see ROADMAP).
+    pub read_timeout_ms: u64,
+    /// Graceful-drain budget: after shutdown is requested, pending
+    /// streams get this long to flush before they are abandoned with
+    /// an error chunk.
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_connections: 256,
+            read_timeout_ms: 5_000,
+            drain_deadline_ms: 10_000,
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn read_timeout(&self) -> Duration {
+        Duration::from_millis(self.read_timeout_ms)
+    }
+
+    pub fn drain_deadline(&self) -> Duration {
+        Duration::from_millis(self.drain_deadline_ms)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            bail!("serve.transport: empty listen addr");
+        }
+        if self.max_connections == 0 {
+            bail!("serve.transport: max_connections must be ≥ 1");
+        }
+        if self.read_timeout_ms == 0 {
+            bail!("serve.transport: read_timeout_ms must be ≥ 1");
+        }
+        if self.drain_deadline_ms == 0 {
+            bail!("serve.transport: drain_deadline_ms must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
 /// Serving-engine configuration (`[serve]` TOML section + CLI
 /// overrides — see [`crate::serve`]).
 #[derive(Debug, Clone)]
@@ -399,6 +459,8 @@ pub struct ServeConfig {
     pub lanes: Vec<LaneConfig>,
     /// Bucket-planner knobs (`[serve.planner]`).
     pub planner: PlannerSettings,
+    /// Network-transport knobs (`[serve.transport]`, `--listen`).
+    pub transport: TransportConfig,
     /// Per-lane admission bound: requests beyond this queue depth are
     /// rejected (open loop) or block the generator (closed loop).
     pub queue_capacity: usize,
@@ -431,6 +493,7 @@ impl Default for ServeConfig {
             lane_weights: Vec::new(),
             lanes: Vec::new(),
             planner: PlannerSettings::default(),
+            transport: TransportConfig::default(),
             queue_capacity: 64,
             flush_timeout_ms: 5,
             deadline_ms: 100,
@@ -614,6 +677,7 @@ impl ServeConfig {
                 }
             }
         }
+        self.transport.validate()?;
         if !(self.planner.safety > 0.0 && self.planner.safety <= 1.0) {
             bail!(
                 "serve: planner safety {} outside (0, 1]",
@@ -701,6 +765,18 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get_float("serve.planner.safety") {
             self.planner.safety = v;
+        }
+        if let Some(s) = doc.get_str("serve.transport.addr") {
+            self.transport.addr = s.to_string();
+        }
+        if let Some(v) = doc.get_int("serve.transport.max_connections") {
+            self.transport.max_connections = v.max(0) as usize;
+        }
+        if let Some(v) = doc.get_int("serve.transport.read_timeout_ms") {
+            self.transport.read_timeout_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("serve.transport.drain_deadline_ms") {
+            self.transport.drain_deadline_ms = v.max(0) as u64;
         }
         if let Some(v) = doc.get_int("serve.queue_capacity") {
             self.queue_capacity = v as usize;
@@ -987,6 +1063,54 @@ safety = 0.8
         // lane_configs passes explicit tables through verbatim.
         assert_eq!(cfg.lane_configs().len(), 2);
         assert_eq!(cfg.lane_configs()[1].name, "chat");
+    }
+
+    #[test]
+    fn serve_transport_section_roundtrip() {
+        let text = r#"
+[serve]
+workers = 2
+
+[serve.transport]
+addr = "0.0.0.0:9000"
+max_connections = 64
+read_timeout_ms = 2500
+drain_deadline_ms = 1500
+"#;
+        let path = std::env::temp_dir().join("mpx_serve_transport_cfg.toml");
+        std::fs::write(&path, text).unwrap();
+        let cfg =
+            ServeConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.transport.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.transport.max_connections, 64);
+        assert_eq!(cfg.transport.read_timeout_ms, 2500);
+        assert_eq!(cfg.transport.drain_deadline_ms, 1500);
+        assert_eq!(
+            cfg.transport.read_timeout(),
+            Duration::from_millis(2500)
+        );
+        // Untouched configs keep the defaults and validate.
+        let d = TransportConfig::default();
+        assert_eq!(d.addr, "127.0.0.1:7878");
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn transport_validation_rejects_zeroes() {
+        let bad = [
+            TransportConfig { max_connections: 0, ..Default::default() },
+            TransportConfig { read_timeout_ms: 0, ..Default::default() },
+            TransportConfig { drain_deadline_ms: 0, ..Default::default() },
+            TransportConfig { addr: String::new(), ..Default::default() },
+        ];
+        for t in bad {
+            assert!(t.validate().is_err(), "{t:?} should not validate");
+        }
+        // ServeConfig::validate folds the transport check in.
+        let mut cfg = ServeConfig::default();
+        cfg.transport.max_connections = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -39,10 +39,12 @@
 //!   as slots free, per-request streamed completions, autoscaling,
 //!   a latency-aware bucket planner (`serve::planner`: which batch
 //!   sizes to AOT-compile and which flush timeouts to run, per lane,
-//!   from an offered-load profile and per-lane SLOs), and a
-//!   virtual-clock simulation harness; all timing flows through the
-//!   `serve::clock::Clock` trait so policy is deterministically
-//!   testable.
+//!   from an offered-load profile and per-lane SLOs), a
+//!   virtual-clock simulation harness, and an HTTP/1.1 network
+//!   transport (`serve::transport`: streamed chunked responses,
+//!   Prometheus `/metrics`, graceful drain) behind `mpx serve
+//!   --listen`; all timing flows through the `serve::clock::Clock`
+//!   trait so policy is deterministically testable.
 //! * [`hlo`] — HLO-text parser for the buffer census.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
 //! * [`metrics`] — step timers, loss history, latency histograms

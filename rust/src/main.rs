@@ -40,6 +40,12 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
                  [--precisions p1,p2 --lane-weights w1,w2] (multi-model lanes)
                  [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
                  [--deadline-ms T] [--seed S] [--config cfg.toml]
+                 [--listen ADDR]  serve over HTTP instead of synthetic load:
+                           POST /v1/infer streams each completion back the
+                           moment its batch finishes; GET /healthz + /metrics
+                           (Prometheus); SIGINT drains gracefully.  Knobs in
+                           [serve.transport] (max_connections, read/drain
+                           timeouts)
                  [--plan]  print the latency-aware bucket plan (which batch
                            sizes to AOT-compile, per-lane flush timeouts)
                            and exit; per-lane SLOs come from the config's
@@ -401,12 +407,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has_switch("open-loop") {
         cfg.open_loop = true;
     }
+    let listen = args.get_str("listen").map(str::to_string);
     let plan_only = args.has_switch("plan");
     args.finish()?;
+    if let Some(addr) = &listen {
+        cfg.transport.addr = addr.clone();
+    }
     cfg.validate()?;
 
     if plan_only {
         return cmd_serve_plan(&cfg);
+    }
+    if listen.is_some() {
+        let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let report =
+            mpx::serve::run_transport_with_artifacts(&mut store, &cfg)?;
+        report.print();
+        return Ok(());
     }
 
     let lanes = cfg

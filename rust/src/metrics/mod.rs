@@ -73,6 +73,12 @@ impl LatencyHistogram {
         self.samples_ns.iter().max().map(|&x| Duration::from_nanos(x))
     }
 
+    /// Sum of all recorded samples (the Prometheus summary `_sum`).
+    pub fn total(&self) -> Duration {
+        let ns: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
+        Duration::from_nanos(ns.min(u64::MAX as u128) as u64)
+    }
+
     /// Rank-interpolated quantile, `q` ∈ [0, 1].
     pub fn quantile(&self, q: f64) -> Option<Duration> {
         self.quantiles(&[q]).map(|v| v[0])
@@ -167,6 +173,37 @@ impl NamedHistograms {
             all.merge(h);
         }
         all
+    }
+
+    /// Append this set as a Prometheus `summary` family named
+    /// `metric`, one `{lane="..."}` series per entry: p50/p95/p99
+    /// quantile samples (seconds) plus `_sum` and `_count`.  This is
+    /// what the serve transport's `GET /metrics` endpoint exports.
+    pub fn to_prometheus(&self, metric: &str, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# HELP {metric} per-lane latency summary");
+        let _ = writeln!(out, "# TYPE {metric} summary");
+        for (lane, h) in self.iter() {
+            if let Some(qs) = h.quantiles(&[0.5, 0.95, 0.99]) {
+                for (q, v) in ["0.5", "0.95", "0.99"].iter().zip(qs) {
+                    let _ = writeln!(
+                        out,
+                        "{metric}{{lane=\"{lane}\",quantile=\"{q}\"}} {}",
+                        v.as_secs_f64()
+                    );
+                }
+            }
+            let _ = writeln!(
+                out,
+                "{metric}_sum{{lane=\"{lane}\"}} {}",
+                h.total().as_secs_f64()
+            );
+            let _ = writeln!(
+                out,
+                "{metric}_count{{lane=\"{lane}\"}} {}",
+                h.count()
+            );
+        }
     }
 }
 

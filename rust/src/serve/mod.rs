@@ -46,6 +46,13 @@
 //!   PJRT-artifact executor.
 //! * [`loadgen`] — deterministic Poisson arrival schedules, merged
 //!   across lanes.
+//! * [`transport`] — the HTTP/1.1 network layer: `mpx serve
+//!   --listen` accepts `POST /v1/infer`, streams each completion
+//!   back over chunked transfer encoding the moment continuous
+//!   batching frees its slot, maps admission control onto status
+//!   codes (429/503/404), and exports `GET /healthz` + `GET
+//!   /metrics` (Prometheus); `transport::client` is the std-only
+//!   client the loadgen and the integration tests drive it with.
 //!
 //! Entry points: [`run`] (single lane, any executor — tests use a
 //! fake), [`run_lanes`] (multi-model), and `run_with_artifacts`
@@ -81,6 +88,7 @@ pub mod loadgen;
 pub mod planner;
 pub mod queue;
 pub mod sched;
+pub mod transport;
 pub mod worker;
 
 pub use batcher::{
@@ -97,6 +105,7 @@ pub use sched::{
     PollWork, ScaleOp, Scheduler, SimBatch, SimCompletion, SimLaneReport,
     SimReport, SimSpec, Work,
 };
+pub use transport::{Server, ServerHandle, TransportReport};
 pub use worker::{BatchExecutor, LaneTally, WorkerReport};
 
 #[cfg(feature = "xla")]
@@ -653,11 +662,70 @@ pub fn run_with_artifacts(
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
     cfg.validate()?;
-    struct LaneArtifacts {
-        init: Arc<Artifact>,
-        fwd: Vec<(usize, Arc<Artifact>)>,
-    }
+    let prepared = prepare_lanes(store, cfg)?;
+    let lane_cfgs = prepared.lane_cfgs;
+    let requests = split_requests(cfg.requests, &lane_cfgs);
+    let traffic = prepared
+        .specs
+        .into_iter()
+        .zip(&lane_cfgs)
+        .zip(&requests)
+        .map(|((spec, lc), &n)| LaneTraffic {
+            spec,
+            requests: n,
+            arrival_rate: lc.rate,
+        })
+        .collect();
+    let lane_arts = prepared.arts;
 
+    let preset = model_preset(&cfg.model)?;
+    let dataset = SyntheticDataset::new(&preset, cfg.seed);
+    let seed = cfg.seed as i32;
+
+    let make_executor = |_worker: usize, lane: usize| {
+        let la = &lane_arts[lane];
+        ArtifactExecutor::new(&la.init, la.fwd.clone(), seed)
+    };
+    // One fresh synthetic image per request (request id = batch index
+    // of a single-row batch, so the stream is deterministic).
+    let make_image = |_lane: usize, i: u64| dataset.batch(i, 1, 7).images;
+
+    run_lanes(
+        &engine_opts(cfg),
+        traffic,
+        Arc::new(WallClock::new()),
+        make_executor,
+        make_image,
+        None,
+    )
+}
+
+/// Compiled artifacts backing one serving lane.
+#[cfg(feature = "xla")]
+struct LaneArtifacts {
+    init: Arc<Artifact>,
+    fwd: Vec<(usize, Arc<Artifact>)>,
+}
+
+/// Lane setup shared by every artifact-backed serve entry point.
+#[cfg(feature = "xla")]
+struct PreparedLanes {
+    lane_cfgs: Vec<LaneConfig>,
+    specs: Vec<LaneSpec>,
+    arts: Vec<LaneArtifacts>,
+}
+
+/// Discover/load the forward + init artifacts for every configured
+/// lane and build its [`LaneSpec`] (planned buckets + flush timeout
+/// when the planner is on, the discovered set otherwise).  Shared by
+/// [`run_with_artifacts`] (synthetic loadgen) and
+/// [`run_transport_with_artifacts`] (network serving) so both paths
+/// serve exactly the same plan with the same hard errors.
+#[cfg(feature = "xla")]
+fn prepare_lanes(
+    store: &mut ArtifactStore,
+    cfg: &ServeConfig,
+) -> Result<PreparedLanes> {
     let lane_cfgs = cfg.lane_configs();
     let plan = if cfg.use_planner() {
         let plan = plan_for_config(cfg)?;
@@ -678,10 +746,9 @@ pub fn run_with_artifacts(
     } else {
         None
     };
-    let requests = split_requests(cfg.requests, &lane_cfgs);
 
     let mut lane_arts = Vec::new();
-    let mut traffic = Vec::new();
+    let mut specs = Vec::new();
     for (i, lc) in lane_cfgs.iter().enumerate() {
         let available = discover_buckets(store, cfg, lc.precision);
         if available.is_empty() {
@@ -727,39 +794,64 @@ pub fn run_with_artifacts(
             })
             .collect::<Result<Vec<_>>>()?;
         let init = store.load(&cfg.init_artifact_for(lc.precision))?;
-        traffic.push(LaneTraffic {
-            spec: LaneSpec {
-                name: format!("{}/{}", cfg.model, lc.name),
-                weight: lc.weight,
-                batcher: BatcherConfig::new(buckets, flush)?,
-                queue_capacity: cfg.queue_capacity,
-                deadline: lc.deadline(),
-            },
-            requests: requests[i],
-            arrival_rate: lc.rate,
+        specs.push(LaneSpec {
+            name: format!("{}/{}", cfg.model, lc.name),
+            weight: lc.weight,
+            batcher: BatcherConfig::new(buckets, flush)?,
+            queue_capacity: cfg.queue_capacity,
+            deadline: lc.deadline(),
         });
         lane_arts.push(LaneArtifacts { init, fwd });
     }
+    Ok(PreparedLanes { lane_cfgs, specs, arts: lane_arts })
+}
 
+/// The network serving path behind `mpx serve --listen`: the same
+/// artifact discovery/planning as [`run_with_artifacts`], but instead
+/// of a synthetic load generator the lanes are fed by the
+/// [`transport`] HTTP server, which streams each completion back to
+/// its caller and drains gracefully on SIGINT.  Blocks until the
+/// drain completes; returns the transport-side report.
+#[cfg(feature = "xla")]
+pub fn run_transport_with_artifacts(
+    store: &mut ArtifactStore,
+    cfg: &ServeConfig,
+) -> Result<TransportReport> {
+    cfg.validate()?;
+    let prepared = prepare_lanes(store, cfg)?;
     let preset = model_preset(&cfg.model)?;
-    let dataset = SyntheticDataset::new(&preset, cfg.seed);
+    let image_elems =
+        preset.image_size * preset.image_size * preset.channels;
     let seed = cfg.seed as i32;
 
+    transport::install_sigint();
+    let server = transport::Server::bind(&cfg.transport)?;
+    eprintln!(
+        "[mpx] serve: listening on http://{} | {} lanes ({}), {} workers | \
+         POST /v1/infer, GET /healthz, GET /metrics | Ctrl-C drains and \
+         exits",
+        server.local_addr(),
+        prepared.specs.len(),
+        prepared
+            .specs
+            .iter()
+            .map(|s| s.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", "),
+        cfg.workers,
+    );
+
+    let lane_arts = prepared.arts;
     let make_executor = |_worker: usize, lane: usize| {
         let la = &lane_arts[lane];
         ArtifactExecutor::new(&la.init, la.fwd.clone(), seed)
     };
-    // One fresh synthetic image per request (request id = batch index
-    // of a single-row batch, so the stream is deterministic).
-    let make_image = |_lane: usize, i: u64| dataset.batch(i, 1, 7).images;
-
-    run_lanes(
-        &engine_opts(cfg),
-        traffic,
-        Arc::new(WallClock::new()),
+    server.run(
+        prepared.specs,
+        cfg.workers,
+        cfg.policy,
+        image_elems,
         make_executor,
-        make_image,
-        None,
     )
 }
 

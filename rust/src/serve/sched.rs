@@ -79,6 +79,14 @@ pub struct Completion<'a> {
     pub done: Duration,
     pub latency: Duration,
     pub missed_deadline: bool,
+    /// This request's slice of the executed batch's output (its
+    /// logits row).  Empty when the completing path did not capture
+    /// outputs ([`Scheduler::complete`] — the simulation and
+    /// benchmark paths); populated by
+    /// [`Scheduler::complete_streamed`], which the production worker
+    /// loop calls so a network transport can hand each caller its
+    /// result the moment the batch finishes.
+    pub output: &'a [f32],
 }
 
 /// Streaming completion callback.  Fired exactly once per *admitted*
@@ -331,6 +339,17 @@ impl Scheduler {
         self.lanes.iter().all(|l| l.queue.is_closed())
     }
 
+    /// Whether `lane` stopped admitting (drain or worker failure) —
+    /// the transport maps this to `503` rather than `429`.
+    pub fn lane_is_closed(&self, lane: usize) -> bool {
+        self.lanes[lane].queue.is_closed()
+    }
+
+    /// Current queued depth of one lane (reporting/metrics).
+    pub fn lane_depth(&self, lane: usize) -> usize {
+        self.lanes[lane].queue.depth()
+    }
+
     fn advance(&self, st: &mut SchedState) {
         st.cursor = (st.cursor + 1) % self.lanes.len();
         st.topped = false;
@@ -449,14 +468,37 @@ impl Scheduler {
         batch: &FormedBatch,
         done: Duration,
     ) -> u64 {
+        self.complete_streamed(worker, lane, batch, done, &[])
+    }
+
+    /// [`Scheduler::complete`] with the batch's flat output tensor
+    /// (`f32[bucket, out_elems]`): each completion carries its own
+    /// row as [`Completion::output`], so a streaming callback (the
+    /// network transport) can return results per request.  Padding
+    /// rows at the tail are ballast and are never surfaced.  An empty
+    /// `outputs` (or one whose length is not divisible by the bucket)
+    /// degrades to empty per-request slices.
+    pub fn complete_streamed(
+        &self,
+        worker: usize,
+        lane: usize,
+        batch: &FormedBatch,
+        done: Duration,
+        outputs: &[f32],
+    ) -> u64 {
         {
             let mut st = self.state.lock().unwrap();
             debug_assert!(st.busy > 0, "complete without a dispatch");
             st.busy = st.busy.saturating_sub(1);
         }
         let name = &self.lanes[lane].spec.name;
+        let per_row = if outputs.len() % batch.bucket == 0 {
+            outputs.len() / batch.bucket
+        } else {
+            0
+        };
         let mut misses = 0;
-        for r in &batch.requests {
+        for (i, r) in batch.requests.iter().enumerate() {
             let missed = r.missed_deadline(done);
             if missed {
                 misses += 1;
@@ -470,6 +512,7 @@ impl Scheduler {
                     done,
                     latency: done.saturating_sub(r.enqueued),
                     missed_deadline: missed,
+                    output: &outputs[i * per_row..(i + 1) * per_row],
                 });
             }
         }

@@ -1,0 +1,479 @@
+//! Std-only HTTP client for the serve transport — the counterpart of
+//! the server in [`super`], shared by the network load generator
+//! ([`drive`]) and the integration tests.
+//!
+//! One request per connection (mirroring the server), with explicit
+//! connect/read timeouts.  [`Client::open`] exposes the raw streamed
+//! response (status, headers, then chunk-at-a-time) so tests can
+//! observe — or abandon — a stream mid-flight; [`Client::infer`] is
+//! the convenient "send an image, get the logits" wrapper.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::LatencyHistogram;
+use crate::serve::clock::{Clock, WallClock};
+use crate::serve::loadgen;
+use crate::serve::transport::http;
+use crate::util::json::Json;
+
+/// One parsed inference result (the stream's terminal data line).
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub id: u64,
+    pub lane: String,
+    /// Server-side admission→completion latency.
+    pub latency: Duration,
+    pub missed_deadline: bool,
+    /// Overflow signal: false when any logit came back non-finite
+    /// (serialized as `null` in the JSON).
+    pub finite: bool,
+    /// Logits row; non-finite entries surface as `f32::NAN`.
+    pub logits: Vec<f32>,
+}
+
+/// A live streamed response: headers are in; chunks arrive as the
+/// server writes them.  Dropping it closes the connection (which is
+/// how the disconnect tests abandon a stream mid-flight).
+pub struct ResponseStream {
+    // Owns the write half; reader owns a cloned read half.
+    #[allow(dead_code)]
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    chunked: bool,
+    content_length: Option<usize>,
+    done: bool,
+}
+
+impl ResponseStream {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        http::header(&self.headers, name)
+    }
+
+    /// Next body chunk; `None` once the body is complete.  For
+    /// non-chunked responses the whole body is returned as one chunk.
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.done {
+            return Ok(None);
+        }
+        if self.chunked {
+            let chunk = http::read_chunk(&mut self.reader)
+                .context("read response chunk")?;
+            if chunk.is_none() {
+                self.done = true;
+            }
+            Ok(chunk)
+        } else {
+            self.done = true;
+            let len = self.content_length.unwrap_or(0);
+            if len == 0 {
+                return Ok(None);
+            }
+            let body = http::read_sized_body(&mut self.reader, len)
+                .context("read response body")?;
+            Ok(Some(body))
+        }
+    }
+}
+
+/// A fully-read response (every chunk drained).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    /// Body chunks in arrival order (one entry for sized bodies).
+    pub chunks: Vec<Vec<u8>>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        http::header(&self.headers, name)
+    }
+
+    /// All chunks concatenated.
+    pub fn body(&self) -> Vec<u8> {
+        self.chunks.concat()
+    }
+
+    pub fn body_string(&self) -> String {
+        String::from_utf8_lossy(&self.body()).into_owned()
+    }
+}
+
+/// Client for one server address.
+pub struct Client {
+    addr: String,
+    timeout: Duration,
+}
+
+impl Client {
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client { addr: addr.into(), timeout: Duration::from_secs(10) }
+    }
+
+    /// Override the connect/read timeout (default 10 s).
+    pub fn with_timeout(mut self, timeout: Duration) -> Client {
+        self.timeout = timeout;
+        self
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let addrs: Vec<_> = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {}", self.addr))?
+            .collect();
+        let mut last = None;
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, self.timeout) {
+                Ok(s) => {
+                    s.set_read_timeout(Some(self.timeout))?;
+                    s.set_write_timeout(Some(self.timeout))?;
+                    s.set_nodelay(true)?;
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => anyhow::Error::from(e)
+                .context(format!("connect {}", self.addr)),
+            None => anyhow!("{}: no addresses resolved", self.addr),
+        })
+    }
+
+    /// Send one request and return the response with headers parsed
+    /// and the body still streaming.
+    pub fn open(
+        &self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<ResponseStream> {
+        let mut stream = self.connect()?;
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n",
+            self.addr
+        );
+        if !body.is_empty() || method == "POST" {
+            head.push_str(&format!(
+                "Content-Type: {content_type}\r\nContent-Length: {}\r\n",
+                body.len()
+            ));
+        }
+        for (name, value) in extra {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+
+        let read_half = stream.try_clone().context("clone read half")?;
+        let mut reader = BufReader::new(read_half);
+        let head = http::read_response_head(&mut reader)
+            .context("read response head")?;
+        let chunked = head.is_chunked();
+        let content_length = head
+            .header("content-length")
+            .and_then(|v| v.trim().parse::<usize>().ok());
+        Ok(ResponseStream {
+            stream,
+            reader,
+            status: head.status,
+            headers: head.headers,
+            chunked,
+            content_length,
+            done: false,
+        })
+    }
+
+    /// Send one request and drain the whole response.
+    pub fn request(
+        &self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<Response> {
+        let mut rs = self.open(method, path, content_type, extra, body)?;
+        let mut chunks = Vec::new();
+        while let Some(chunk) = rs.next_chunk()? {
+            chunks.push(chunk);
+        }
+        Ok(Response { status: rs.status, headers: rs.headers, chunks })
+    }
+
+    pub fn healthz(&self) -> Result<Response> {
+        self.request("GET", "/healthz", "application/json", &[], &[])
+    }
+
+    /// The Prometheus text page.
+    pub fn metrics(&self) -> Result<String> {
+        let resp =
+            self.request("GET", "/metrics", "text/plain", &[], &[])?;
+        if resp.status != 200 {
+            bail!("GET /metrics: status {}", resp.status);
+        }
+        Ok(resp.body_string())
+    }
+
+    /// JSON inference: stream until the result line arrives.  Non-200
+    /// statuses and in-stream errors become `Err` (the status code is
+    /// in the message; use [`Client::request`] when a test needs the
+    /// raw status/headers).
+    pub fn infer(&self, lane: &str, image: &[f32]) -> Result<InferReply> {
+        let body = infer_body_json(lane, image);
+        let resp = self.request(
+            "POST",
+            "/v1/infer",
+            "application/json",
+            &[],
+            body.as_bytes(),
+        )?;
+        reply_from_response(&resp)
+    }
+
+    /// Binary inference: raw little-endian f32 rows, lane in a header.
+    pub fn infer_binary(&self, lane: &str, image: &[f32]) -> Result<InferReply> {
+        let mut body = Vec::with_capacity(image.len() * 4);
+        for v in image {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let resp = self.request(
+            "POST",
+            "/v1/infer",
+            "application/octet-stream",
+            &[("X-Mpx-Lane", lane)],
+            &body,
+        )?;
+        reply_from_response(&resp)
+    }
+}
+
+/// The JSON request body [`Client::infer`] sends.
+pub fn infer_body_json(lane: &str, image: &[f32]) -> String {
+    use std::fmt::Write;
+    let mut s = String::with_capacity(32 + image.len() * 12);
+    s.push_str("{\"lane\":");
+    crate::util::json::write_escaped(lane, &mut s);
+    s.push_str(",\"image\":[");
+    for (i, v) in image.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{v}");
+    }
+    s.push_str("]}");
+    s
+}
+
+fn reply_from_response(resp: &Response) -> Result<InferReply> {
+    if resp.status != 200 {
+        bail!(
+            "infer: status {}: {}",
+            resp.status,
+            resp.body_string().trim()
+        );
+    }
+    // Chunks are ndjson lines: ack first, then the result.
+    for chunk in &resp.chunks {
+        let text = std::str::from_utf8(chunk).context("non-utf8 chunk")?;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let doc = Json::parse(line.trim())
+                .map_err(|e| anyhow!("bad result line {line:?}: {e}"))?;
+            if let Some(err) = doc.get("error").and_then(Json::as_str) {
+                bail!("infer: server error: {err}");
+            }
+            if doc.get("logits").is_none() {
+                continue; // the queued ack
+            }
+            return parse_reply(&doc);
+        }
+    }
+    bail!("infer: stream ended without a result line")
+}
+
+fn parse_reply(doc: &Json) -> Result<InferReply> {
+    let id = doc
+        .get("id")
+        .and_then(Json::as_i64)
+        .context("result missing id")? as u64;
+    let lane = doc
+        .get("lane")
+        .and_then(Json::as_str)
+        .context("result missing lane")?
+        .to_string();
+    let latency_us = doc
+        .get("latency_us")
+        .and_then(Json::as_i64)
+        .context("result missing latency_us")? as u64;
+    let missed_deadline = doc
+        .get("missed_deadline")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let finite =
+        doc.get("finite").and_then(Json::as_bool).unwrap_or(true);
+    let logits = doc
+        .get("logits")
+        .and_then(Json::as_arr)
+        .context("result missing logits")?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32).unwrap_or(f32::NAN))
+        .collect();
+    Ok(InferReply {
+        id,
+        lane,
+        latency: Duration::from_micros(latency_us),
+        missed_deadline,
+        finite,
+        logits,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Network load generator
+// ---------------------------------------------------------------------------
+
+/// What [`drive`] observed, from the client's side of the wire.
+#[derive(Debug)]
+pub struct DriveReport {
+    pub offered: u64,
+    pub completed: u64,
+    /// `429` responses.
+    pub rejected: u64,
+    /// Everything else that was not a streamed result.
+    pub errors: u64,
+    /// Client-observed round-trip latency (connect → result line).
+    pub latency: LatencyHistogram,
+    /// Responses whose logits contained a non-finite value.
+    pub nonfinite: u64,
+}
+
+impl DriveReport {
+    fn merge(&mut self, other: DriveReport) {
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.nonfinite += other.nonfinite;
+        self.latency.merge(&other.latency);
+    }
+}
+
+/// Drive a live transport server with the same deterministic Poisson
+/// arrival process the in-process engine benchmarks use
+/// ([`loadgen::poisson_offsets`]): `n` requests to `lane` at
+/// `rate_per_s` (≤ 0 = back-to-back), `make_image(i)` producing each
+/// payload, spread over `concurrency` sender threads that share one
+/// paced timeline.
+pub fn drive<G>(
+    addr: &str,
+    lane: &str,
+    n: u64,
+    rate_per_s: f64,
+    seed: u64,
+    concurrency: usize,
+    make_image: G,
+) -> DriveReport
+where
+    G: Fn(u64) -> Vec<f32> + Sync,
+{
+    let offsets = loadgen::poisson_offsets(n, rate_per_s, seed);
+    let clock = WallClock::new();
+    let next = AtomicUsize::new(0);
+    let nonfinite = AtomicU64::new(0);
+    let concurrency = concurrency.max(1);
+    let start = clock.now();
+
+    let mut report = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|_| {
+                let client = Client::new(addr.to_string());
+                let next = &next;
+                let offsets = &offsets;
+                let clock = &clock;
+                let make_image = &make_image;
+                let nonfinite = &nonfinite;
+                scope.spawn(move || {
+                    let mut rep = DriveReport {
+                        offered: 0,
+                        completed: 0,
+                        rejected: 0,
+                        errors: 0,
+                        latency: LatencyHistogram::new(),
+                        nonfinite: 0,
+                    };
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= offsets.len() {
+                            break;
+                        }
+                        loadgen::pace(clock, start, offsets[i]);
+                        rep.offered += 1;
+                        let t0 = clock.now();
+                        let body = infer_body_json(
+                            lane,
+                            &make_image(i as u64),
+                        );
+                        match client.request(
+                            "POST",
+                            "/v1/infer",
+                            "application/json",
+                            &[],
+                            body.as_bytes(),
+                        ) {
+                            Ok(resp) if resp.status == 200 => {
+                                match reply_from_response(&resp) {
+                                    Ok(reply) => {
+                                        rep.completed += 1;
+                                        rep.latency.record(
+                                            clock
+                                                .now()
+                                                .saturating_sub(t0),
+                                        );
+                                        if !reply.finite {
+                                            nonfinite.fetch_add(
+                                                1,
+                                                Ordering::Relaxed,
+                                            );
+                                        }
+                                    }
+                                    Err(_) => rep.errors += 1,
+                                }
+                            }
+                            Ok(resp) if resp.status == 429 => {
+                                rep.rejected += 1;
+                            }
+                            Ok(_) | Err(_) => rep.errors += 1,
+                        }
+                    }
+                    rep
+                })
+            })
+            .collect();
+        let mut total = DriveReport {
+            offered: 0,
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+            latency: LatencyHistogram::new(),
+            nonfinite: 0,
+        };
+        for h in handles {
+            total.merge(h.join().expect("drive sender panicked"));
+        }
+        total
+    });
+    report.nonfinite = nonfinite.load(Ordering::Relaxed);
+    report
+}

@@ -1,0 +1,499 @@
+//! Minimal HTTP/1.1 wire protocol — request parsing, response
+//! writing, and chunked transfer encoding — over plain `std::io`
+//! streams.  No external dependencies; exactly the subset the
+//! transport server and [`client`](crate::serve::transport::client)
+//! need:
+//!
+//! * request line + headers + `Content-Length` bodies (chunked
+//!   *request* bodies are rejected — inference payloads are always
+//!   sized up front);
+//! * `Expect: 100-continue` (curl sends it for bodies over 1 KiB);
+//! * fixed (`Content-Length`) and streamed (`Transfer-Encoding:
+//!   chunked`) responses, one request per connection
+//!   (`Connection: close`).
+//!
+//! Everything is pure byte-in/byte-out and unit-tested against
+//! in-memory cursors; the socket handling lives in the server/client
+//! modules.
+
+use std::fmt;
+use std::io::{self, BufRead, Read, Write};
+
+/// Parsed size guards: a request line or header may not exceed this.
+pub const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Max headers per message.
+pub const MAX_HEADERS: usize = 64;
+/// Max request body.  The largest real payload is a vit_base image
+/// row as JSON (~2 MiB); 8 MiB leaves slack without letting a
+/// `Content-Length` header reserve silly amounts of memory.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Wire-level failure: either the peer spoke bad HTTP (map to `400`)
+/// or the underlying stream failed (timeout, reset — just close).
+#[derive(Debug)]
+pub enum HttpError {
+    Malformed(String),
+    Io(io::Error),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::Malformed(m) => write!(f, "malformed http: {m}"),
+            HttpError::Io(e) => write!(f, "http io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> HttpError {
+    HttpError::Malformed(msg.into())
+}
+
+/// One parsed request.  Header names are lowercased; the path is
+/// split from its query string.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    /// `(lowercase-name, value)` in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of `name` (ASCII case-insensitive lookup — names
+    /// are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+
+    /// Value of `key` in the query string (no percent-decoding — lane
+    /// names and the keys we use are plain tokens).
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        let q = self.query.as_deref()?;
+        q.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// First value of `name` in a `(lowercase-name, value)` header list.
+pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    let name = name.to_ascii_lowercase();
+    headers
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Read one CRLF (or bare-LF) terminated line, without the
+/// terminator.  `Ok(None)` is clean EOF before any byte.
+fn read_line(r: &mut impl BufRead) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let mut limited = r.take(MAX_LINE_BYTES as u64 + 1);
+    let n = limited.read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.len() > MAX_LINE_BYTES {
+        return Err(malformed("header line too long"));
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    } else {
+        // EOF mid-line.
+        return Err(malformed("truncated line"));
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| malformed("non-utf8 line"))
+}
+
+/// Read one full request from `r`.  `w` is the same connection's
+/// write half, used only to acknowledge `Expect: 100-continue` before
+/// the body is read.  `Ok(None)` means the peer closed without
+/// sending anything (a clean no-request connection).
+pub fn read_request(
+    r: &mut impl BufRead,
+    w: &mut impl Write,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let Some(line) = read_line(r)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| malformed("empty request line"))?;
+    let target = parts.next().ok_or_else(|| malformed("missing path"))?;
+    let version = parts.next().ok_or_else(|| malformed("missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("unsupported version {version:?}")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?.ok_or_else(|| malformed("eof in headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(malformed("too many headers"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| malformed(format!("bad header line {line:?}")))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    if header(&headers, "transfer-encoding")
+        .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
+    {
+        return Err(malformed("chunked request bodies are not supported"));
+    }
+    let body = match header(&headers, "content-length") {
+        Some(v) => {
+            let len: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| malformed(format!("bad content-length {v:?}")))?;
+            if len > MAX_BODY_BYTES {
+                return Err(malformed(format!("body of {len} bytes too large")));
+            }
+            if header(&headers, "expect")
+                .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+            {
+                w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+                w.flush()?;
+            }
+            read_exactly(r, len)?
+        }
+        None => Vec::new(),
+    };
+
+    Ok(Some(HttpRequest {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body,
+    }))
+}
+
+fn write_head(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Connection: close\r\n")?;
+    for (name, value) in extra {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    Ok(())
+}
+
+/// Write a complete fixed-length response and flush.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<()> {
+    write_head(w, status, reason, content_type, extra)?;
+    write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Start a chunked streaming response (headers only) and flush, so
+/// the client learns its admission status before the first result
+/// chunk exists.
+pub fn start_chunked(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, String)],
+) -> io::Result<()> {
+    write_head(w, status, reason, content_type, extra)?;
+    write!(w, "Transfer-Encoding: chunked\r\n\r\n")?;
+    w.flush()
+}
+
+/// Write one chunk and flush.  Empty data is skipped (a zero-size
+/// chunk would terminate the stream).
+pub fn write_chunk(w: &mut impl Write, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked stream.
+pub fn finish_chunked(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// A parsed response status line + headers (client side).  The body
+/// is read separately ([`read_chunk`] / [`read_sized_body`]) so
+/// callers can stream.
+#[derive(Debug)]
+pub struct ResponseHead {
+    pub status: u16,
+    pub reason: String,
+    pub headers: Vec<(String, String)>,
+}
+
+impl ResponseHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.header("transfer-encoding")
+            .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
+    }
+}
+
+/// Read a response status line + headers.  Interim `100 Continue`
+/// responses are consumed transparently.
+pub fn read_response_head(
+    r: &mut impl BufRead,
+) -> Result<ResponseHead, HttpError> {
+    loop {
+        let line = read_line(r)?.ok_or_else(|| malformed("eof at status"))?;
+        let mut parts = line.splitn(3, ' ');
+        let version =
+            parts.next().ok_or_else(|| malformed("empty status line"))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(malformed(format!("bad status line {line:?}")));
+        }
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| malformed(format!("bad status in {line:?}")))?;
+        let reason = parts.next().unwrap_or("").to_string();
+
+        let mut headers = Vec::new();
+        loop {
+            let line =
+                read_line(r)?.ok_or_else(|| malformed("eof in headers"))?;
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= MAX_HEADERS {
+                return Err(malformed("too many headers"));
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| malformed(format!("bad header {line:?}")))?;
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+        if status == 100 {
+            continue;
+        }
+        return Ok(ResponseHead { status, reason, headers });
+    }
+}
+
+/// Read one chunk of a chunked response body; `Ok(None)` is the
+/// terminal chunk (trailers, if any, are consumed and discarded).
+pub fn read_chunk(r: &mut impl BufRead) -> Result<Option<Vec<u8>>, HttpError> {
+    let line = read_line(r)?.ok_or_else(|| malformed("eof at chunk size"))?;
+    let size_str = line.split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_str, 16)
+        .map_err(|_| malformed(format!("bad chunk size {line:?}")))?;
+    if size > MAX_BODY_BYTES {
+        return Err(malformed(format!("chunk of {size} bytes too large")));
+    }
+    if size == 0 {
+        // Trailers until the blank line.
+        loop {
+            let line =
+                read_line(r)?.ok_or_else(|| malformed("eof in trailers"))?;
+            if line.is_empty() {
+                break;
+            }
+        }
+        return Ok(None);
+    }
+    let data = read_exactly(r, size)?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    if &crlf != b"\r\n" {
+        return Err(malformed("chunk not CRLF-terminated"));
+    }
+    Ok(Some(data))
+}
+
+/// Read exactly `len` body bytes, growing the buffer chunk by chunk
+/// — memory is committed only as bytes actually arrive, so a
+/// `Content-Length` header alone cannot reserve `len` bytes.
+fn read_exactly(
+    r: &mut impl BufRead,
+    len: usize,
+) -> Result<Vec<u8>, HttpError> {
+    const CHUNK: usize = 64 * 1024;
+    let mut body = Vec::with_capacity(len.min(CHUNK));
+    let mut buf = [0u8; CHUNK];
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = remaining.min(CHUNK);
+        r.read_exact(&mut buf[..take])?;
+        body.extend_from_slice(&buf[..take]);
+        remaining -= take;
+    }
+    Ok(body)
+}
+
+/// Read a `Content-Length` body.
+pub fn read_sized_body(
+    r: &mut impl BufRead,
+    len: usize,
+) -> Result<Vec<u8>, HttpError> {
+    if len > MAX_BODY_BYTES {
+        return Err(malformed(format!("body of {len} bytes too large")));
+    }
+    read_exactly(r, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<HttpRequest>, HttpError> {
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut sink = Vec::new();
+        read_request(&mut r, &mut sink)
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            "POST /v1/infer?lane=chat HTTP/1.1\r\nHost: x\r\nContent-Type: \
+             application/json\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert_eq!(req.query_param("lane"), Some("chat"));
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("Content-Type"), Some("application/json"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_malformed() {
+        assert!(parse("").unwrap().is_none());
+        assert!(matches!(
+            parse("not http at all\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / SPDY/3\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        // Truncated body: io error, not a hang.
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
+            Err(HttpError::Io(_))
+        ));
+        // Chunked request bodies are rejected up front.
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn expect_100_continue_is_acknowledged() {
+        let raw = "POST / HTTP/1.1\r\nExpect: 100-continue\r\n\
+                   Content-Length: 2\r\n\r\nok";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut sink = Vec::new();
+        let req = read_request(&mut r, &mut sink).unwrap().unwrap();
+        assert_eq!(req.body, b"ok");
+        assert_eq!(sink, b"HTTP/1.1 100 Continue\r\n\r\n");
+    }
+
+    #[test]
+    fn response_roundtrip_fixed() {
+        let mut out = Vec::new();
+        write_response(
+            &mut out,
+            404,
+            "Not Found",
+            "application/json",
+            &[("Retry-After", "1".to_string())],
+            b"{\"error\":\"x\"}",
+        )
+        .unwrap();
+        let mut r = Cursor::new(out);
+        let head = read_response_head(&mut r).unwrap();
+        assert_eq!(head.status, 404);
+        assert_eq!(head.header("retry-after"), Some("1"));
+        let len: usize =
+            head.header("content-length").unwrap().parse().unwrap();
+        let body = read_sized_body(&mut r, len).unwrap();
+        assert_eq!(body, b"{\"error\":\"x\"}");
+    }
+
+    #[test]
+    fn response_roundtrip_chunked() {
+        let mut out = Vec::new();
+        start_chunked(&mut out, 200, "OK", "application/x-ndjson", &[])
+            .unwrap();
+        write_chunk(&mut out, b"first\n").unwrap();
+        write_chunk(&mut out, b"").unwrap(); // skipped, not terminal
+        write_chunk(&mut out, b"second\n").unwrap();
+        finish_chunked(&mut out).unwrap();
+
+        let mut r = Cursor::new(out);
+        let head = read_response_head(&mut r).unwrap();
+        assert_eq!(head.status, 200);
+        assert!(head.is_chunked());
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"first\n");
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"second\n");
+        assert!(read_chunk(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn interim_100_is_skipped_by_the_client() {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+        write_response(&mut out, 200, "OK", "text/plain", &[], b"hi").unwrap();
+        let mut r = Cursor::new(out);
+        let head = read_response_head(&mut r).unwrap();
+        assert_eq!(head.status, 200);
+    }
+}

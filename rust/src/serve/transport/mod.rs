@@ -1,0 +1,1353 @@
+//! Network transport for `mpx serve` — a dependency-light threaded
+//! HTTP/1.1 server that turns the in-process serving engine
+//! ([`crate::serve`]) into a real service, plus the std-only
+//! [`client`] the load generator and the integration tests drive it
+//! with.
+//!
+//! ```text
+//!   client ──POST /v1/infer──▶ acceptor ──▶ handler thread
+//!                                               │ parse + route (lane)
+//!                                               ▼
+//!                                   Scheduler::submit (per-lane queue)
+//!                 admitted │ full │ closed │ unknown │ malformed
+//!                   200    │ 429  │  503   │  404    │   400
+//!                 chunked  ▲
+//!                 stream   │ CompletionFn (worker thread, the moment
+//!                          │ continuous batching frees the slot)
+//! ```
+//!
+//! Semantics, mapped faithfully onto HTTP:
+//!
+//! * **Streaming, not polling** — an admitted request gets its
+//!   response headers and a `queued` ack chunk immediately, then its
+//!   result chunk the instant its batch completes (per-request
+//!   [`Completion`] callbacks, chunked transfer encoding).  There is
+//!   no batch-granularity blocking anywhere on the response path.
+//! * **Admission control is the status code** — a full lane queue is
+//!   `429 Too Many Requests` with `Retry-After` derived from that
+//!   lane's (planner-chosen) flush timeout; a closed/draining lane is
+//!   `503 Service Unavailable`; an unknown lane is `404`; an
+//!   unparsable payload is `400`.
+//! * **Overflow accounting is per response** (Zhao et al., adaptive
+//!   loss scaling: keep the numerics observable end-to-end): every
+//!   result reports `finite` — whether the half-precision forward
+//!   produced any non-finite logit — and `/metrics` exports the
+//!   per-lane `nonfinite` counter next to the latency summaries.
+//! * **Graceful drain** — shutdown (SIGINT via [`install_sigint`], or
+//!   [`ServerHandle::shutdown`]) stops admitting (`503`), closes the
+//!   lanes so workers flush everything queued, keeps serving
+//!   `/healthz`+`/metrics`, and exits once every pending stream
+//!   flushed or `drain_deadline_ms` passed — abandoned streams get an
+//!   error chunk, and nothing leaks: the pending-stream registry and
+//!   the worker slots both drain to zero.
+//!
+//! One request per connection (`Connection: close`): inference
+//! responses are streams, so connection reuse would serialize a
+//! caller's requests behind its slowest completion anyway.  The
+//! worker pool is fixed at the configured size — autoscaling hooks
+//! into the load-generator engine's arrival loop, not the socket
+//! path, and is a transport follow-up.
+//!
+//! Everything here is std-only and runs without the `xla` feature:
+//! `rust/tests/serve_transport.rs` drives a real socket against a
+//! stub executor, exactly like `examples/serve_http.rs`.
+
+pub mod client;
+pub mod http;
+
+use std::collections::HashMap;
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::TransportConfig;
+use crate::metrics::{LatencyHistogram, NamedHistograms};
+use crate::serve::batcher::SchedPolicy;
+use crate::serve::clock::{Clock, WallClock};
+use crate::serve::queue::{QueueStats, Request};
+use crate::serve::sched::{
+    AutoscalePolicy, Completion, CompletionFn, LaneSpec, PoolCounters,
+    Scheduler,
+};
+use crate::serve::worker::{worker_loop, BatchExecutor, WorkerReport};
+use crate::util::human_duration;
+use crate::util::json::{write_escaped, Json};
+
+// ---------------------------------------------------------------------------
+// SIGINT → graceful drain
+// ---------------------------------------------------------------------------
+
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Install a process-wide SIGINT handler that requests a graceful
+/// drain of every running [`Server`] (stop accepting new inference,
+/// flush the lanes, then exit).  Pure-std via the libc `signal`
+/// symbol that is always linked on unix; a no-op elsewhere.  The
+/// handler only sets an atomic flag — the acceptor loop polls it.
+#[cfg(unix)]
+pub fn install_sigint() {
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT_FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    unsafe {
+        signal(2 /* SIGINT */, on_sigint);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigint() {}
+
+/// Whether SIGINT has been received since [`install_sigint`].
+pub fn sigint_requested() -> bool {
+    SIGINT_FLAG.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Shared server state
+// ---------------------------------------------------------------------------
+
+/// What a handler thread receives when its request's batch completes.
+struct Outcome {
+    id: u64,
+    latency: Duration,
+    missed_deadline: bool,
+    finite: bool,
+    logits: Vec<f32>,
+}
+
+/// Transport-level counters.  Plain totals since server start; the
+/// per-lane engine accounting lives in the queue stats and
+/// [`StreamTally`]s.
+#[derive(Default)]
+struct Counters {
+    connections: AtomicU64,
+    admitted: AtomicU64,
+    streamed: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_draining: AtomicU64,
+    unknown_lane: AtomicU64,
+    malformed: AtomicU64,
+    overloaded: AtomicU64,
+    disconnects: AtomicU64,
+    drain_abandoned: AtomicU64,
+    nonfinite: AtomicU64,
+}
+
+/// Owned snapshot of the transport counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CounterSnapshot {
+    /// Accepted TCP connections.
+    pub connections: u64,
+    /// Requests admitted into a lane queue.
+    pub admitted: u64,
+    /// Completions delivered to a live client stream.
+    pub streamed: u64,
+    /// `429` responses (lane queue full).
+    pub rejected_full: u64,
+    /// `503` responses (lane closed / draining).
+    pub rejected_draining: u64,
+    /// `404` responses (no such lane).
+    pub unknown_lane: u64,
+    /// `400` responses (unparsable request).
+    pub malformed: u64,
+    /// Connections turned away at the `max_connections` cap (`503`).
+    pub overloaded: u64,
+    /// Streams whose client vanished before (or while) the result
+    /// was written; the engine slot was freed and the completion
+    /// accounted regardless.
+    pub disconnects: u64,
+    /// Streams abandoned at the drain deadline (error chunk sent).
+    pub drain_abandoned: u64,
+    /// Responses containing a non-finite logit (overflow accounting,
+    /// also available per lane in `/metrics`).
+    pub nonfinite: u64,
+}
+
+/// Once a lane's latency histogram holds this many samples, the
+/// record stride doubles — [`LatencyHistogram`] keeps exact samples
+/// (right for finite bench runs), so a long-running server decimates:
+/// memory grows only logarithmically in requests served.  Earlier
+/// phases of the run stay denser than later ones; the histogram is a
+/// bounded run-wide sample, not a sliding window.
+const LATENCY_SAMPLE_CAP: usize = 16_384;
+
+/// Per-lane completion accounting on the transport side (what the
+/// scheduler streamed to clients), feeding `/metrics` and the final
+/// [`TransportReport`].
+#[derive(Debug, Clone)]
+struct StreamTally {
+    completed: u64,
+    deadline_misses: u64,
+    nonfinite: u64,
+    latency: LatencyHistogram,
+    /// Record every `stride`-th completion (doubles at
+    /// [`LATENCY_SAMPLE_CAP`]-sample marks — see above).
+    stride: u64,
+}
+
+impl Default for StreamTally {
+    fn default() -> Self {
+        StreamTally {
+            completed: 0,
+            deadline_misses: 0,
+            nonfinite: 0,
+            latency: LatencyHistogram::new(),
+            stride: 1,
+        }
+    }
+}
+
+impl StreamTally {
+    fn record_latency(&mut self, latency: Duration) {
+        if self.completed % self.stride == 0 {
+            self.latency.record(latency);
+            if self.latency.count() % LATENCY_SAMPLE_CAP == 0 {
+                self.stride *= 2;
+            }
+        }
+    }
+}
+
+struct Shared {
+    clock: Arc<WallClock>,
+    /// Drain requested (SIGINT or handle): stop admitting inference.
+    shutdown: AtomicBool,
+    /// When the drain started (clock offset), once it has.
+    drain_started: Mutex<Option<Duration>>,
+    /// A worker died: pending streams error out instead of waiting.
+    failed: AtomicBool,
+    /// request id → the handler thread waiting to stream its result.
+    slots: Mutex<HashMap<u64, mpsc::Sender<Outcome>>>,
+    next_id: AtomicU64,
+    active_conns: AtomicUsize,
+    counters: Counters,
+    tallies: Mutex<Vec<StreamTally>>,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            clock: Arc::new(WallClock::new()),
+            shutdown: AtomicBool::new(false),
+            drain_started: Mutex::new(None),
+            failed: AtomicBool::new(false),
+            slots: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            active_conns: AtomicUsize::new(0),
+            counters: Counters::default(),
+            tallies: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn counter_snapshot(&self) -> CounterSnapshot {
+        let c = &self.counters;
+        let ld = Ordering::Relaxed;
+        CounterSnapshot {
+            connections: c.connections.load(ld),
+            admitted: c.admitted.load(ld),
+            streamed: c.streamed.load(ld),
+            rejected_full: c.rejected_full.load(ld),
+            rejected_draining: c.rejected_draining.load(ld),
+            unknown_lane: c.unknown_lane.load(ld),
+            malformed: c.malformed.load(ld),
+            overloaded: c.overloaded.load(ld),
+            disconnects: c.disconnects.load(ld),
+            drain_abandoned: c.drain_abandoned.load(ld),
+            nonfinite: c.nonfinite.load(ld),
+        }
+    }
+
+    fn pending_streams(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    fn register(&self, id: u64) -> mpsc::Receiver<Outcome> {
+        let (tx, rx) = mpsc::channel();
+        self.slots.lock().unwrap().insert(id, tx);
+        rx
+    }
+
+    fn deregister(&self, id: u64) {
+        self.slots.lock().unwrap().remove(&id);
+    }
+
+    fn is_draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst) || sigint_requested()
+    }
+
+    /// The scheduler's streaming callback: account the completion per
+    /// lane, then hand the result to the waiting handler (if its
+    /// client is still around).  Runs on the completing worker's
+    /// thread, outside all scheduler locks.
+    fn on_completion(&self, c: &Completion) {
+        let finite = c.output.iter().all(|v| v.is_finite());
+        {
+            let mut tallies = self.tallies.lock().unwrap();
+            let t = &mut tallies[c.lane];
+            t.completed += 1;
+            if c.missed_deadline {
+                t.deadline_misses += 1;
+            }
+            if !finite {
+                t.nonfinite += 1;
+            }
+            t.record_latency(c.latency);
+        }
+        if !finite {
+            self.counters.nonfinite.fetch_add(1, Ordering::Relaxed);
+        }
+        let tx = self.slots.lock().unwrap().remove(&c.request.id);
+        if let Some(tx) = tx {
+            // Delivery (and the streamed/disconnect accounting) is
+            // the handler thread's job — it owns the socket and is
+            // the only side that can tell a live client from a dead
+            // one.
+            let _ = tx.send(Outcome {
+                id: c.request.id,
+                latency: c.latency,
+                missed_deadline: c.missed_deadline,
+                finite,
+                logits: c.output.to_vec(),
+            });
+        }
+    }
+}
+
+/// Cloneable control handle: request a drain, watch the live state.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Request a graceful drain: stop admitting, flush the lanes,
+    /// let [`Server::run`] return.  Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.is_draining()
+    }
+
+    /// Streams admitted but not yet answered (the completion
+    /// registry's size) — zero after a clean drain.
+    pub fn pending_streams(&self) -> usize {
+        self.shared.pending_streams()
+    }
+
+    pub fn counters(&self) -> CounterSnapshot {
+        self.shared.counter_snapshot()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+/// One lane's transport-side slice of the run.
+#[derive(Debug, Clone)]
+pub struct LaneStreamReport {
+    pub name: String,
+    pub completed: u64,
+    pub deadline_misses: u64,
+    /// Completions containing a non-finite logit (overflow counter).
+    pub nonfinite: u64,
+    pub queue: QueueStats,
+    pub latency: LatencyHistogram,
+}
+
+/// What [`Server::run`] returns after the drain finishes.
+#[derive(Debug)]
+pub struct TransportReport {
+    pub wall: Duration,
+    pub counters: CounterSnapshot,
+    /// Registry entries left after drain — zero unless something
+    /// leaked (asserted in the integration tests).
+    pub pending_streams: usize,
+    /// Final pool counters — `busy == 0` after a clean drain.
+    pub pool: PoolCounters,
+    pub lanes: Vec<LaneStreamReport>,
+    pub workers: Vec<WorkerReport>,
+}
+
+impl TransportReport {
+    pub fn print(&self) {
+        let c = &self.counters;
+        println!(
+            "[serve/transport] {} connections, {} admitted, {} streamed, \
+             {} disconnects | rejected: {} full, {} draining, {} unknown \
+             lane, {} malformed, {} overloaded | wall {}",
+            c.connections,
+            c.admitted,
+            c.streamed,
+            c.disconnects,
+            c.rejected_full,
+            c.rejected_draining,
+            c.unknown_lane,
+            c.malformed,
+            c.overloaded,
+            human_duration(self.wall),
+        );
+        for lane in &self.lanes {
+            let p99 = lane
+                .latency
+                .quantile(0.99)
+                .map(human_duration)
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "        lane {}: {} completed, {} misses, {} non-finite, \
+                 {} rejected, p99 {}",
+                lane.name,
+                lane.completed,
+                lane.deadline_misses,
+                lane.nonfinite,
+                lane.queue.rejected,
+                p99,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// A bound listener, ready to [`run`](Server::run).  Binding is
+/// separate from running so callers learn the ephemeral port (tests
+/// bind `127.0.0.1:0`) and can clone a [`ServerHandle`] before the
+/// accept loop takes the thread.
+pub struct Server {
+    listener: TcpListener,
+    local: SocketAddr,
+    tcfg: TransportConfig,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    pub fn bind(tcfg: &TransportConfig) -> Result<Server> {
+        tcfg.validate()?;
+        let listener = TcpListener::bind(&tcfg.addr)
+            .with_context(|| format!("bind {}", tcfg.addr))?;
+        // Non-blocking accept: the acceptor polls shutdown between
+        // accepts instead of parking in the kernel forever.
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            local,
+            tcfg: tcfg.clone(),
+            shared: Arc::new(Shared::new()),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: self.shared.clone() }
+    }
+
+    /// Serve until a drain is requested ([`ServerHandle::shutdown`]
+    /// or SIGINT after [`install_sigint`]) and completes.  Blocks the
+    /// calling thread: it becomes the acceptor; `workers` executor
+    /// threads and one handler thread per live connection are spawned
+    /// inside.  `make_executor(worker, lane)` runs on the worker's
+    /// own thread (PJRT literals are thread-local);
+    /// `image_elems` is the flattened input row length every lane
+    /// accepts (payloads of any other size are `400`-rejected before
+    /// they can reach an executor).
+    pub fn run<E, F>(
+        self,
+        lanes: Vec<LaneSpec>,
+        workers: usize,
+        policy: SchedPolicy,
+        image_elems: usize,
+        make_executor: F,
+    ) -> Result<TransportReport>
+    where
+        E: BatchExecutor,
+        F: Fn(usize, usize) -> Result<E> + Sync,
+    {
+        let shared = self.shared;
+        let tcfg = self.tcfg;
+        let nlanes = lanes.len();
+        anyhow::ensure!(nlanes > 0, "transport: no lanes");
+        anyhow::ensure!(workers > 0, "transport: no workers");
+        *shared.tallies.lock().unwrap() =
+            vec![StreamTally::default(); nlanes];
+
+        // Routing table: full lane names always route.  The suffix
+        // after the last '/' ("chat" for "vit_tiny/chat") routes too,
+        // but only when it is unambiguous — shared by no other lane's
+        // suffix and not itself some lane's full name (a full-name
+        // route is never shadowed or removed by suffix handling).
+        let mut routes: HashMap<String, usize> = HashMap::new();
+        for (i, spec) in lanes.iter().enumerate() {
+            routes.insert(spec.name.clone(), i);
+        }
+        for (i, spec) in lanes.iter().enumerate() {
+            let Some(suffix) = lane_suffix(&spec.name) else {
+                continue;
+            };
+            let shared_suffix = lanes.iter().enumerate().any(|(j, other)| {
+                j != i && lane_suffix(&other.name) == Some(suffix)
+            });
+            if !shared_suffix && !routes.contains_key(suffix) {
+                routes.insert(suffix.to_string(), i);
+            }
+        }
+        let lane_names: Vec<String> =
+            lanes.iter().map(|s| s.name.clone()).collect();
+        let deadlines: Vec<Duration> =
+            lanes.iter().map(|s| s.deadline).collect();
+        // 429 Retry-After: one flush window is how long it takes the
+        // planner's dispatch policy to clear a sub-bucket backlog, so
+        // it is the honest "when is a slot likely free" hint.
+        let retry_after: Vec<u64> = lanes
+            .iter()
+            .map(|s| (s.batcher.flush_timeout.as_secs_f64().ceil() as u64).max(1))
+            .collect();
+
+        let cb_shared = shared.clone();
+        let on_complete: Box<CompletionFn> =
+            Box::new(move |c: &Completion| cb_shared.on_completion(c));
+        let clock: Arc<dyn Clock> = shared.clock.clone();
+        let sched = Arc::new(Scheduler::new(
+            lanes,
+            policy,
+            AutoscalePolicy::fixed(workers),
+            clock,
+            Some(on_complete),
+        )?);
+
+        let t_start = shared.clock.now();
+        let ready = std::sync::Barrier::new(workers + 1);
+        let listener = self.listener;
+
+        let worker_reports = std::thread::scope(|scope| {
+            let sched: &Scheduler = &sched;
+            let shared: &Shared = &shared;
+            let make_executor = &make_executor;
+            let ready = &ready;
+            let tcfg = &tcfg;
+            let routes = &routes;
+            let lane_names = &lane_names;
+            let deadlines = &deadlines;
+            let retry_after = &retry_after;
+
+            sched.register_workers(workers);
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let execs: Result<Vec<E>> = (0..nlanes)
+                            .map(|lane| make_executor(w, lane))
+                            .collect();
+                        // Pass the barrier success or not, or bind
+                        // would wedge below.
+                        ready.wait();
+                        let out = match execs {
+                            Ok(mut execs) => worker_loop(
+                                w,
+                                &mut execs,
+                                sched,
+                                &*shared.clock,
+                            ),
+                            Err(e) => {
+                                sched.worker_aborted();
+                                Err(e)
+                            }
+                        };
+                        if out.is_err() {
+                            // A dead worker drains the server: stop
+                            // admitting, error the pending streams.
+                            shared.failed.store(true, Ordering::SeqCst);
+                            shared.shutdown.store(true, Ordering::SeqCst);
+                            sched.close_all();
+                        }
+                        out
+                    })
+                })
+                .collect();
+            ready.wait();
+
+            // ----- acceptor loop (this thread) -----
+            let mut drain_closed = false;
+            loop {
+                if shared.is_draining() {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    if !drain_closed {
+                        *shared.drain_started.lock().unwrap() =
+                            Some(shared.clock.now());
+                        sched.close_all();
+                        drain_closed = true;
+                    }
+                    let started =
+                        shared.drain_started.lock().unwrap().unwrap();
+                    let deadline_passed = shared.clock.now()
+                        > started + tcfg.drain_deadline();
+                    // Keep accepting during the drain (new inference
+                    // gets an orderly 503; /healthz and /metrics keep
+                    // answering) until the pending streams flush.
+                    if shared.pending_streams() == 0 || deadline_passed {
+                        break;
+                    }
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        shared
+                            .counters
+                            .connections
+                            .fetch_add(1, Ordering::Relaxed);
+                        if shared.active_conns.load(Ordering::SeqCst)
+                            >= tcfg.max_connections
+                        {
+                            shared
+                                .counters
+                                .overloaded
+                                .fetch_add(1, Ordering::Relaxed);
+                            let _ = turn_away(stream);
+                            continue;
+                        }
+                        shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                        scope.spawn(move || {
+                            handle_connection(
+                                stream,
+                                shared,
+                                sched,
+                                tcfg,
+                                routes,
+                                lane_names,
+                                deadlines,
+                                retry_after,
+                                image_elems,
+                            );
+                            shared
+                                .active_conns
+                                .fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => {
+                        // Transient accept failure (EMFILE, reset):
+                        // back off and keep serving.
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("transport worker panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+
+        let wall = shared.clock.now().saturating_sub(t_start);
+        let tallies = std::mem::take(&mut *shared.tallies.lock().unwrap());
+        let lanes = tallies
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| LaneStreamReport {
+                name: lane_names[i].clone(),
+                completed: t.completed,
+                deadline_misses: t.deadline_misses,
+                nonfinite: t.nonfinite,
+                queue: sched.lane_stats(i),
+                latency: t.latency,
+            })
+            .collect();
+        Ok(TransportReport {
+            wall,
+            counters: shared.counter_snapshot(),
+            pending_streams: shared.pending_streams(),
+            pool: sched.counters(),
+            lanes,
+            workers: worker_reports,
+        })
+    }
+}
+
+/// The short routing alias of a lane name: the part after the last
+/// `/` ("chat" for "vit_tiny/chat"); `None` when there is no slash.
+fn lane_suffix(name: &str) -> Option<&str> {
+    let s = name.rsplit('/').next().unwrap_or("");
+    (!s.is_empty() && s != name).then_some(s)
+}
+
+/// Over the connection cap: answer 503 without reading the request.
+fn turn_away(mut stream: TcpStream) -> io::Result<()> {
+    http::write_response(
+        &mut stream,
+        503,
+        "Service Unavailable",
+        "application/json",
+        &[("Retry-After", "1".to_string())],
+        b"{\"error\":\"connection limit reached\"}\n",
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection handling
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn handle_connection(
+    mut stream: TcpStream,
+    shared: &Shared,
+    sched: &Scheduler,
+    tcfg: &TransportConfig,
+    routes: &HashMap<String, usize>,
+    lane_names: &[String],
+    deadlines: &[Duration],
+    retry_after: &[u64],
+    image_elems: usize,
+) {
+    // Accepted sockets inherit O_NONBLOCK from the listener on some
+    // platforms — make blocking-with-timeout explicit.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(tcfg.read_timeout()));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let req = match http::read_request(&mut reader, &mut stream) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // connected and left without a request
+        Err(http::HttpError::Io(_)) => return, // timeout / reset
+        Err(e) => {
+            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = reject(&mut stream, 400, "Bad Request", &e.to_string());
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = healthz_json(shared, sched, lane_names);
+            let _ = http::write_response(
+                &mut stream,
+                200,
+                "OK",
+                "application/json",
+                &[],
+                body.as_bytes(),
+            );
+        }
+        ("GET", "/metrics") => {
+            let body = prometheus_text(shared, sched, lane_names);
+            let _ = http::write_response(
+                &mut stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                &[],
+                body.as_bytes(),
+            );
+        }
+        ("POST", "/v1/infer") => {
+            handle_infer(
+                stream, &req, shared, sched, tcfg, routes, lane_names,
+                deadlines, retry_after, image_elems,
+            );
+        }
+        _ => {
+            let _ = reject(
+                &mut stream,
+                404,
+                "Not Found",
+                &format!("no endpoint {} {}", req.method, req.path),
+            );
+        }
+    }
+}
+
+/// Parse failure vs routing failure — distinct status codes.
+enum InferReject {
+    Malformed(String),
+    UnknownLane(String),
+}
+
+/// Decode an inference payload: JSON (`{"lane": "...", "image":
+/// [...]}`), or raw little-endian f32 bytes
+/// (`Content-Type: application/octet-stream`) with the lane named in
+/// the `X-Mpx-Lane` header or a `?lane=` query parameter.
+fn parse_infer(
+    req: &http::HttpRequest,
+    routes: &HashMap<String, usize>,
+    image_elems: usize,
+) -> std::result::Result<(usize, Vec<f32>), InferReject> {
+    let content_type = req.header("content-type").unwrap_or("application/json");
+    let (lane_name, image): (String, Vec<f32>) =
+        if content_type.starts_with("application/octet-stream") {
+            let lane = req
+                .header("x-mpx-lane")
+                .or_else(|| req.query_param("lane"))
+                .ok_or_else(|| {
+                    InferReject::Malformed(
+                        "binary payload needs an X-Mpx-Lane header or \
+                         ?lane= query parameter"
+                            .into(),
+                    )
+                })?;
+            if req.body.len() % 4 != 0 {
+                return Err(InferReject::Malformed(format!(
+                    "binary image length {} is not a multiple of 4",
+                    req.body.len()
+                )));
+            }
+            let image = req
+                .body
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            (lane.to_string(), image)
+        } else {
+            let text = std::str::from_utf8(&req.body).map_err(|_| {
+                InferReject::Malformed("body is not utf-8".into())
+            })?;
+            let doc = Json::parse(text).map_err(|e| {
+                InferReject::Malformed(format!("body is not JSON: {e}"))
+            })?;
+            let lane = doc
+                .get("lane")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    InferReject::Malformed(
+                        "missing string field \"lane\"".into(),
+                    )
+                })?
+                .to_string();
+            let arr = doc.get("image").and_then(Json::as_arr).ok_or_else(
+                || InferReject::Malformed("missing array field \"image\"".into()),
+            )?;
+            let mut image = Vec::with_capacity(arr.len());
+            for v in arr {
+                image.push(v.as_f64().ok_or_else(|| {
+                    InferReject::Malformed(
+                        "\"image\" must contain only numbers".into(),
+                    )
+                })? as f32);
+            }
+            (lane, image)
+        };
+    let lane = *routes
+        .get(lane_name.as_str())
+        .ok_or(InferReject::UnknownLane(lane_name))?;
+    if image.len() != image_elems {
+        return Err(InferReject::Malformed(format!(
+            "image has {} elements, lane expects {image_elems}",
+            image.len()
+        )));
+    }
+    Ok((lane, image))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_infer(
+    mut stream: TcpStream,
+    req: &http::HttpRequest,
+    shared: &Shared,
+    sched: &Scheduler,
+    tcfg: &TransportConfig,
+    routes: &HashMap<String, usize>,
+    lane_names: &[String],
+    deadlines: &[Duration],
+    retry_after: &[u64],
+    image_elems: usize,
+) {
+    let (lane, image) = match parse_infer(req, routes, image_elems) {
+        Ok(ok) => ok,
+        Err(InferReject::Malformed(msg)) => {
+            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = reject(&mut stream, 400, "Bad Request", &msg);
+            return;
+        }
+        Err(InferReject::UnknownLane(name)) => {
+            shared.counters.unknown_lane.fetch_add(1, Ordering::Relaxed);
+            let _ = reject(
+                &mut stream,
+                404,
+                "Not Found",
+                &format!(
+                    "unknown lane {name:?} (serving: {})",
+                    lane_names.join(", ")
+                ),
+            );
+            return;
+        }
+    };
+
+    // Draining: an orderly 503 before touching the queue.
+    if shared.is_draining() {
+        shared.counters.rejected_draining.fetch_add(1, Ordering::Relaxed);
+        let _ = reject_draining(&mut stream, tcfg);
+        return;
+    }
+
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let rx = shared.register(id);
+    let request =
+        Request::new(id, image, deadlines[lane], shared.clock.now());
+    if !sched.submit(lane, request) {
+        shared.deregister(id);
+        if sched.lane_is_closed(lane) {
+            shared
+                .counters
+                .rejected_draining
+                .fetch_add(1, Ordering::Relaxed);
+            let _ = reject_draining(&mut stream, tcfg);
+        } else {
+            shared.counters.rejected_full.fetch_add(1, Ordering::Relaxed);
+            let msg =
+                format!("lane {} queue is full", lane_names[lane]);
+            let _ = http::write_response(
+                &mut stream,
+                429,
+                "Too Many Requests",
+                "application/json",
+                &[("Retry-After", retry_after[lane].to_string())],
+                format!(
+                    "{{\"error\":{},\"retry_after_s\":{}}}\n",
+                    jstr(&msg),
+                    retry_after[lane]
+                )
+                .as_bytes(),
+            );
+        }
+        return;
+    }
+    shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
+
+    // Admitted: headers + ack chunk now, result chunk on completion.
+    let ack = format!(
+        "{{\"status\":\"queued\",\"id\":{id},\"lane\":{}}}\n",
+        jstr(&lane_names[lane])
+    );
+    if http::start_chunked(
+        &mut stream,
+        200,
+        "OK",
+        "application/x-ndjson",
+        &[],
+    )
+    .and_then(|()| http::write_chunk(&mut stream, ack.as_bytes()))
+    .is_err()
+    {
+        // Client vanished between admission and headers.  The engine
+        // still owns the request and will complete (and account) it;
+        // nothing waits on the registry entry once we drop it.
+        shared.deregister(id);
+        shared.counters.disconnects.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+
+    // Wait for the completion, polling the failure/drain state.
+    loop {
+        match rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(outcome) => {
+                let body = outcome_json(&outcome, &lane_names[lane]);
+                let delivered = !peer_closed(&stream)
+                    && http::write_chunk(&mut stream, body.as_bytes())
+                        .and_then(|()| http::finish_chunked(&mut stream))
+                        .is_ok();
+                if delivered {
+                    shared.counters.streamed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    shared
+                        .counters
+                        .disconnects
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.failed.load(Ordering::SeqCst) {
+                    shared.deregister(id);
+                    shared
+                        .counters
+                        .drain_abandoned
+                        .fetch_add(1, Ordering::Relaxed);
+                    let _ = stream_error(&mut stream, id, "worker failed");
+                    return;
+                }
+                let drain_started = *shared.drain_started.lock().unwrap();
+                if let Some(started) = drain_started {
+                    if shared.clock.now() > started + tcfg.drain_deadline() {
+                        shared.deregister(id);
+                        shared
+                            .counters
+                            .drain_abandoned
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = stream_error(
+                            &mut stream,
+                            id,
+                            "drain deadline exceeded",
+                        );
+                        return;
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Sender dropped without a send — cannot happen on
+                // the dispatch path; treat as a failed stream.
+                shared.deregister(id);
+                let _ = stream_error(&mut stream, id, "completion lost");
+                return;
+            }
+        }
+    }
+}
+
+/// 503 for a draining server/lane: retry after the drain deadline.
+fn reject_draining(
+    stream: &mut TcpStream,
+    tcfg: &TransportConfig,
+) -> io::Result<()> {
+    let secs =
+        (tcfg.drain_deadline().as_secs_f64().ceil() as u64).max(1);
+    http::write_response(
+        stream,
+        503,
+        "Service Unavailable",
+        "application/json",
+        &[("Retry-After", secs.to_string())],
+        b"{\"error\":\"draining: lane is closed to new requests\"}\n",
+    )
+}
+
+fn reject(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    msg: &str,
+) -> io::Result<()> {
+    http::write_response(
+        stream,
+        status,
+        reason,
+        "application/json",
+        &[],
+        format!("{{\"error\":{}}}\n", jstr(msg)).as_bytes(),
+    )
+}
+
+/// Mid-stream error (headers already went out as 200): a terminal
+/// error chunk is the only honest signal left.
+fn stream_error(stream: &mut TcpStream, id: u64, msg: &str) -> io::Result<()> {
+    let body = format!("{{\"id\":{id},\"error\":{}}}\n", jstr(msg));
+    http::write_chunk(stream, body.as_bytes())?;
+    http::finish_chunked(stream)
+}
+
+/// Has the peer closed its socket?  `peek` returning 0 bytes is an
+/// orderly FIN, a hard error (reset) counts too; `WouldBlock` means
+/// alive-and-quiet.
+///
+/// Protocol decision: a FIN from the client is treated as
+/// *abandonment*, even though TCP cannot distinguish a full close
+/// from a half-close (`SHUT_WR`) of a client still reading.  Clients
+/// of this transport must keep their socket fully open until the
+/// result chunk arrives — [`client`] does — and in exchange the
+/// server can free resources the moment a caller hangs up.
+fn peer_closed(stream: &TcpStream) -> bool {
+    let mut buf = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => e.kind() != io::ErrorKind::WouldBlock,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// `s` as a JSON string literal (quotes included) — the crate's one
+/// escaping implementation, shared with [`Json::dump`].
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    write_escaped(s, &mut out);
+    out
+}
+
+/// The result line streamed back to the client.  Non-finite logits
+/// serialize as `null` (JSON has no NaN/inf) — the `finite` flag is
+/// the per-response overflow signal.
+fn outcome_json(out: &Outcome, lane_name: &str) -> String {
+    use std::fmt::Write;
+    let mut s = String::with_capacity(96 + out.logits.len() * 12);
+    let _ = write!(
+        s,
+        "{{\"id\":{},\"lane\":{},\"latency_us\":{},\
+         \"missed_deadline\":{},\"finite\":{},\"logits\":[",
+        out.id,
+        jstr(lane_name),
+        out.latency.as_micros(),
+        out.missed_deadline,
+        out.finite,
+    );
+    for (i, v) in out.logits.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        if v.is_finite() {
+            let _ = write!(s, "{v}");
+        } else {
+            s.push_str("null");
+        }
+    }
+    s.push_str("]}\n");
+    s
+}
+
+fn healthz_json(
+    shared: &Shared,
+    sched: &Scheduler,
+    lane_names: &[String],
+) -> String {
+    use std::fmt::Write;
+    let pool = sched.counters();
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\"status\":\"{}\",\"pending_streams\":{},\
+         \"workers\":{{\"live\":{},\"busy\":{}}},\"lanes\":[",
+        if shared.is_draining() { "draining" } else { "ok" },
+        shared.pending_streams(),
+        pool.live,
+        pool.busy,
+    );
+    for (i, name) in lane_names.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"name\":{},\"depth\":{},\"closed\":{}}}",
+            jstr(name),
+            sched.lane_depth(i),
+            sched.lane_is_closed(i),
+        );
+    }
+    s.push_str("]}\n");
+    s
+}
+
+/// Serialize the live engine + transport state in Prometheus text
+/// exposition format: admission counters and depth per lane, the
+/// streamed-completion tallies (including the per-lane non-finite /
+/// overflow counter), latency summaries from the per-lane
+/// [`NamedHistograms`], worker-pool gauges, and the transport
+/// totals.
+fn prometheus_text(
+    shared: &Shared,
+    sched: &Scheduler,
+    lane_names: &[String],
+) -> String {
+    use std::fmt::Write;
+    let mut s = String::with_capacity(4096);
+
+    let gauge = |s: &mut String, name: &str, help: &str| {
+        let _ = writeln!(s, "# HELP {name} {help}");
+        let _ = writeln!(s, "# TYPE {name} gauge");
+    };
+    let counter = |s: &mut String, name: &str, help: &str| {
+        let _ = writeln!(s, "# HELP {name} {help}");
+        let _ = writeln!(s, "# TYPE {name} counter");
+    };
+
+    // Per-lane queue/admission state.
+    counter(&mut s, "mpx_serve_accepted_total", "requests admitted per lane");
+    for (i, name) in lane_names.iter().enumerate() {
+        let q = sched.lane_stats(i);
+        let _ = writeln!(
+            s,
+            "mpx_serve_accepted_total{{lane=\"{name}\"}} {}",
+            q.accepted
+        );
+    }
+    counter(&mut s, "mpx_serve_rejected_total", "admission rejections per lane");
+    for (i, name) in lane_names.iter().enumerate() {
+        let q = sched.lane_stats(i);
+        let _ = writeln!(
+            s,
+            "mpx_serve_rejected_total{{lane=\"{name}\",reason=\"full\"}} {}",
+            q.rejected - q.rejected_closed
+        );
+        let _ = writeln!(
+            s,
+            "mpx_serve_rejected_total{{lane=\"{name}\",reason=\"closed\"}} {}",
+            q.rejected_closed
+        );
+    }
+    gauge(&mut s, "mpx_serve_queue_depth", "queued requests per lane");
+    for (i, name) in lane_names.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "mpx_serve_queue_depth{{lane=\"{name}\"}} {}",
+            sched.lane_depth(i)
+        );
+    }
+    gauge(&mut s, "mpx_serve_queue_peak_depth", "peak queue depth per lane");
+    for (i, name) in lane_names.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "mpx_serve_queue_peak_depth{{lane=\"{name}\"}} {}",
+            sched.lane_stats(i).peak_depth
+        );
+    }
+
+    // Streamed-completion tallies + latency summaries.
+    let (hists, tallies) = {
+        let tallies = shared.tallies.lock().unwrap();
+        let mut hists = NamedHistograms::new();
+        for (i, t) in tallies.iter().enumerate() {
+            hists.entry(&lane_names[i]).merge(&t.latency);
+        }
+        (hists, tallies.clone())
+    };
+    counter(&mut s, "mpx_serve_completed_total", "completions per lane");
+    for (i, name) in lane_names.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "mpx_serve_completed_total{{lane=\"{name}\"}} {}",
+            tallies[i].completed
+        );
+    }
+    counter(
+        &mut s,
+        "mpx_serve_deadline_misses_total",
+        "completions over their lane deadline",
+    );
+    for (i, name) in lane_names.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "mpx_serve_deadline_misses_total{{lane=\"{name}\"}} {}",
+            tallies[i].deadline_misses
+        );
+    }
+    counter(
+        &mut s,
+        "mpx_serve_nonfinite_total",
+        "responses with a non-finite logit (half-precision overflow \
+         accounting)",
+    );
+    for (i, name) in lane_names.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "mpx_serve_nonfinite_total{{lane=\"{name}\"}} {}",
+            tallies[i].nonfinite
+        );
+    }
+    hists.to_prometheus("mpx_serve_latency_seconds", &mut s);
+
+    // Worker pool.
+    let pool = sched.counters();
+    gauge(&mut s, "mpx_serve_workers", "worker pool state");
+    let _ = writeln!(s, "mpx_serve_workers{{state=\"live\"}} {}", pool.live);
+    let _ = writeln!(s, "mpx_serve_workers{{state=\"busy\"}} {}", pool.busy);
+    counter(&mut s, "mpx_serve_workers_spawned_total", "workers ever spawned");
+    let _ = writeln!(s, "mpx_serve_workers_spawned_total {}", pool.spawned);
+
+    // Transport totals.
+    let c = shared.counter_snapshot();
+    counter(&mut s, "mpx_transport_connections_total", "accepted connections");
+    let _ = writeln!(s, "mpx_transport_connections_total {}", c.connections);
+    counter(&mut s, "mpx_transport_admitted_total", "requests admitted");
+    let _ = writeln!(s, "mpx_transport_admitted_total {}", c.admitted);
+    counter(
+        &mut s,
+        "mpx_transport_streamed_total",
+        "completions delivered to a live client",
+    );
+    let _ = writeln!(s, "mpx_transport_streamed_total {}", c.streamed);
+    counter(&mut s, "mpx_transport_rejected_total", "rejections by reason");
+    for (reason, v) in [
+        ("queue_full", c.rejected_full),
+        ("draining", c.rejected_draining),
+        ("unknown_lane", c.unknown_lane),
+        ("malformed", c.malformed),
+        ("overloaded", c.overloaded),
+    ] {
+        let _ = writeln!(
+            s,
+            "mpx_transport_rejected_total{{reason=\"{reason}\"}} {v}"
+        );
+    }
+    counter(
+        &mut s,
+        "mpx_transport_disconnects_total",
+        "clients gone before their result",
+    );
+    let _ = writeln!(s, "mpx_transport_disconnects_total {}", c.disconnects);
+    counter(
+        &mut s,
+        "mpx_transport_drain_abandoned_total",
+        "streams abandoned at the drain deadline",
+    );
+    let _ =
+        writeln!(s, "mpx_transport_drain_abandoned_total {}", c.drain_abandoned);
+    gauge(&mut s, "mpx_transport_pending_streams", "streams awaiting results");
+    let _ = writeln!(
+        s,
+        "mpx_transport_pending_streams {}",
+        shared.pending_streams()
+    );
+    gauge(&mut s, "mpx_transport_draining", "1 while draining");
+    let _ = writeln!(
+        s,
+        "mpx_transport_draining {}",
+        u8::from(shared.is_draining())
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_suffix_extracts_the_alias() {
+        assert_eq!(lane_suffix("vit_tiny/chat"), Some("chat"));
+        assert_eq!(lane_suffix("chat"), None);
+        assert_eq!(lane_suffix("trailing/"), None);
+        assert_eq!(lane_suffix("a/b/c"), Some("c"));
+    }
+
+    #[test]
+    fn jstr_produces_quoted_escaped_literals() {
+        assert_eq!(jstr("plain"), "\"plain\"");
+        assert_eq!(jstr("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(jstr("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn outcome_json_is_valid_json_even_with_nonfinite_logits() {
+        let out = Outcome {
+            id: 3,
+            latency: Duration::from_micros(1500),
+            missed_deadline: false,
+            finite: false,
+            logits: vec![1.0, f32::NAN, f32::INFINITY],
+        };
+        let line = outcome_json(&out, "vit_tiny/chat");
+        let doc = Json::parse(line.trim()).unwrap();
+        assert_eq!(doc.get("id").and_then(Json::as_i64), Some(3));
+        assert_eq!(doc.get("finite").and_then(Json::as_bool), Some(false));
+        let logits = doc.get("logits").and_then(Json::as_arr).unwrap();
+        assert_eq!(logits.len(), 3);
+        assert_eq!(logits[1], Json::Null);
+    }
+}

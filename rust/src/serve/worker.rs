@@ -130,19 +130,23 @@ pub fn worker_loop<E: BatchExecutor>(
                 let t0 = clock.now();
                 let res = execs[lane].execute(&images, batch.bucket);
                 let done = clock.now();
-                if let Err(e) = res {
-                    sched.worker_failed();
-                    sched.close_all();
-                    pool.put_f32(images);
-                    return Err(e).with_context(|| {
-                        format!(
-                            "worker {worker}: batch of {} on lane {}",
-                            batch.bucket,
-                            sched.lane_name(lane)
-                        )
-                    });
-                }
-                let misses = sched.complete(worker, lane, &batch, done);
+                let logits = match res {
+                    Ok(logits) => logits,
+                    Err(e) => {
+                        sched.worker_failed();
+                        sched.close_all();
+                        pool.put_f32(images);
+                        return Err(e).with_context(|| {
+                            format!(
+                                "worker {worker}: batch of {} on lane {}",
+                                batch.bucket,
+                                sched.lane_name(lane)
+                            )
+                        });
+                    }
+                };
+                let misses = sched
+                    .complete_streamed(worker, lane, &batch, done, &logits);
                 let t = &mut rep.lanes[lane];
                 t.batches += 1;
                 t.padded += batch.padding() as u64;

@@ -145,7 +145,10 @@ impl Json {
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Append `s` to `out` as a JSON string literal (quotes included,
+/// specials escaped) — the one escaping implementation, shared by
+/// [`Json::dump`] and hand-built JSON emitters (the serve transport).
+pub fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -1,0 +1,550 @@
+//! Integration tests for the serve network transport — a real client
+//! over a real socket against the continuous-batching scheduler, with
+//! a stub executor instead of PJRT, so the whole suite runs under
+//! `cargo test --no-default-features` on any host.
+//!
+//! Covered, per scenario, with a zero-leak assertion after each
+//! (`pool.busy == 0`, `pending_streams == 0` in the final report):
+//!
+//! * streamed completions (JSON and binary payloads, suffix and
+//!   full-name lane routing), `/healthz`, `/metrics`;
+//! * malformed request bodies → `400`;
+//! * unknown lane → `404`;
+//! * queue-full admission rejection → `429` + `Retry-After` from the
+//!   lane's flush timeout;
+//! * client disconnect mid-stream → slot freed and counted;
+//! * draining server → `503` for new work, and streams stuck past
+//!   the drain deadline abandoned with an error chunk.
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use mpx::config::TransportConfig;
+use mpx::serve::transport::client::Client;
+use mpx::serve::transport::{Server, ServerHandle, TransportReport};
+use mpx::serve::{BatchExecutor, BatcherConfig, LaneSpec, SchedPolicy};
+use mpx::util::json::Json;
+
+const ELEMS: usize = 4;
+
+/// A latch the stub executor blocks on until the test opens it.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn closed() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Stub "model": every logit is the input element times a per-lane
+/// scale; optionally gated so tests control exactly when batches
+/// complete.
+struct StubExecutor {
+    scale: f32,
+    gate: Option<Arc<Gate>>,
+}
+
+impl BatchExecutor for StubExecutor {
+    fn execute(&mut self, images: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        if let Some(gate) = &self.gate {
+            gate.wait();
+        }
+        Ok(images.iter().map(|v| v * self.scale).collect())
+    }
+}
+
+fn lane(name: &str, buckets: &[usize], flush_ms: u64, cap: usize) -> LaneSpec {
+    LaneSpec {
+        name: name.into(),
+        weight: 1,
+        batcher: BatcherConfig::new(
+            buckets.to_vec(),
+            Duration::from_millis(flush_ms),
+        )
+        .unwrap(),
+        queue_capacity: cap,
+        deadline: Duration::from_secs(5),
+    }
+}
+
+fn transport_cfg(drain_deadline_ms: u64) -> TransportConfig {
+    TransportConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: 64,
+        read_timeout_ms: 2_000,
+        drain_deadline_ms,
+    }
+}
+
+struct Running {
+    addr: SocketAddr,
+    handle: ServerHandle,
+    join: JoinHandle<Result<TransportReport>>,
+}
+
+impl Running {
+    fn client(&self) -> Client {
+        Client::new(self.addr.to_string())
+            .with_timeout(Duration::from_secs(5))
+    }
+
+    fn finish(self) -> TransportReport {
+        self.handle.shutdown();
+        let report = self
+            .join
+            .join()
+            .expect("server thread panicked")
+            .expect("server returned an error");
+        // The universal no-leak invariant: every admitted stream was
+        // answered or accounted, every worker slot came back.
+        assert_eq!(report.pending_streams, 0, "leaked stream registry entries");
+        assert_eq!(report.pool.busy, 0, "leaked busy worker slots");
+        report
+    }
+}
+
+/// Bind + run a server over stub executors on an ephemeral port.
+fn start(
+    lanes: Vec<LaneSpec>,
+    workers: usize,
+    gate: Option<Arc<Gate>>,
+    drain_deadline_ms: u64,
+) -> Running {
+    let server = Server::bind(&transport_cfg(drain_deadline_ms)).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || {
+        server.run(
+            lanes,
+            workers,
+            SchedPolicy::Continuous,
+            ELEMS,
+            |_worker, lane| {
+                Ok(StubExecutor {
+                    scale: (lane + 2) as f32,
+                    gate: gate.clone(),
+                })
+            },
+        )
+    });
+    Running { addr, handle, join }
+}
+
+fn image(seed: f32) -> Vec<f32> {
+    (0..ELEMS).map(|i| seed + i as f32).collect()
+}
+
+/// Poll until `cond` holds or the deadline passes.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn lane_depth(client: &Client, lane: &str) -> usize {
+    let body = client.healthz().unwrap().body_string();
+    let doc = Json::parse(body.trim()).unwrap();
+    doc.get("lanes")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .find(|l| l.get("name").and_then(Json::as_str) == Some(lane))
+        .and_then(|l| l.get("depth").and_then(Json::as_i64))
+        .unwrap() as usize
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streams_completions_to_real_clients() {
+    let srv = start(
+        vec![
+            lane("vit_tiny/chat", &[1, 2, 4], 5, 64),
+            lane("vit_tiny/bulk", &[1, 2, 4], 5, 64),
+        ],
+        2,
+        None,
+        2_000,
+    );
+
+    // Concurrent JSON clients on the suffix route.
+    let addr = srv.addr.to_string();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let client = Client::new(addr);
+                (0..4)
+                    .map(|i| {
+                        let img = image((t * 10 + i) as f32);
+                        let reply = client.infer("chat", &img).unwrap();
+                        assert_eq!(reply.lane, "vit_tiny/chat");
+                        assert!(reply.finite);
+                        // Lane 0's stub doubles every element.
+                        let want: Vec<f32> =
+                            img.iter().map(|v| v * 2.0).collect();
+                        assert_eq!(reply.logits, want);
+                        reply.id
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    let mut ids: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 16, "request ids must be unique");
+
+    // Binary payload on the full lane name routes to lane 1 (×3).
+    let client = srv.client();
+    let img = image(100.0);
+    let reply = client.infer_binary("vit_tiny/bulk", &img).unwrap();
+    assert_eq!(reply.lane, "vit_tiny/bulk");
+    let want: Vec<f32> = img.iter().map(|v| v * 3.0).collect();
+    assert_eq!(reply.logits, want);
+
+    // healthz + Prometheus metrics reflect the run.
+    let health = client.healthz().unwrap();
+    assert_eq!(health.status, 200);
+    let doc = Json::parse(health.body_string().trim()).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    let metrics = client.metrics().unwrap();
+    assert!(
+        metrics.contains("mpx_serve_completed_total{lane=\"vit_tiny/chat\"} 16"),
+        "metrics page should count the 16 chat completions:\n{metrics}"
+    );
+    assert!(metrics
+        .contains("mpx_serve_completed_total{lane=\"vit_tiny/bulk\"} 1"));
+    assert!(metrics.contains("mpx_serve_latency_seconds_count"));
+    assert!(metrics.contains("mpx_serve_nonfinite_total"));
+    assert!(metrics.contains("mpx_transport_admitted_total 17"));
+
+    let report = srv.finish();
+    assert_eq!(report.counters.admitted, 17);
+    assert_eq!(report.counters.streamed, 17);
+    assert_eq!(report.counters.disconnects, 0);
+    assert_eq!(report.counters.malformed, 0);
+    assert_eq!(report.lanes[0].completed, 16);
+    assert_eq!(report.lanes[1].completed, 1);
+    assert_eq!(report.lanes[0].nonfinite, 0);
+}
+
+#[test]
+fn malformed_bodies_are_rejected_with_400() {
+    let srv = start(vec![lane("vit_tiny/chat", &[1, 2], 5, 16)], 1, None, 1_000);
+    let client = srv.client();
+
+    let cases: Vec<(&str, &str, Vec<u8>)> = vec![
+        ("not json at all", "application/json", b"hello".to_vec()),
+        ("missing lane", "application/json", b"{\"image\":[1,2,3,4]}".to_vec()),
+        (
+            "missing image",
+            "application/json",
+            b"{\"lane\":\"chat\"}".to_vec(),
+        ),
+        (
+            "non-numeric image",
+            "application/json",
+            b"{\"lane\":\"chat\",\"image\":[1,\"x\",3,4]}".to_vec(),
+        ),
+        (
+            "wrong element count",
+            "application/json",
+            b"{\"lane\":\"chat\",\"image\":[1,2,3]}".to_vec(),
+        ),
+        (
+            "binary length not a multiple of 4",
+            "application/octet-stream",
+            vec![0u8; 7],
+        ),
+        ("binary without a lane", "application/octet-stream", vec![0u8; 16]),
+    ];
+    let n = cases.len() as u64;
+    for (what, content_type, body) in cases {
+        let extra: &[(&str, &str)] =
+            if what == "binary length not a multiple of 4" {
+                &[("X-Mpx-Lane", "chat")]
+            } else {
+                &[]
+            };
+        let resp = client
+            .request("POST", "/v1/infer", content_type, extra, &body)
+            .unwrap();
+        assert_eq!(resp.status, 400, "{what}: {}", resp.body_string());
+        assert!(resp.body_string().contains("error"), "{what}");
+    }
+
+    // Unknown endpoints 404 without counting as malformed.
+    let resp = client
+        .request("GET", "/nope", "text/plain", &[], &[])
+        .unwrap();
+    assert_eq!(resp.status, 404);
+
+    let report = srv.finish();
+    assert_eq!(report.counters.malformed, n);
+    assert_eq!(report.counters.admitted, 0);
+}
+
+#[test]
+fn unknown_lane_is_404_naming_the_known_lanes() {
+    let srv = start(vec![lane("vit_tiny/chat", &[1, 2], 5, 16)], 1, None, 1_000);
+    let client = srv.client();
+    let body = mpx::serve::transport::client::infer_body_json(
+        "nope",
+        &image(0.0),
+    );
+    let resp = client
+        .request("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 404);
+    let text = resp.body_string();
+    assert!(text.contains("nope"), "{text}");
+    assert!(text.contains("vit_tiny/chat"), "{text}");
+
+    let report = srv.finish();
+    assert_eq!(report.counters.unknown_lane, 1);
+    assert_eq!(report.counters.admitted, 0);
+}
+
+#[test]
+fn queue_full_is_429_with_retry_after_from_the_flush_timeout() {
+    // One worker, gate held: the first request occupies the slot, the
+    // next two fill the capacity-2 queue, the fourth must bounce.
+    let gate = Gate::closed();
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1], 300, 2)],
+        1,
+        Some(gate.clone()),
+        2_000,
+    );
+    let client = srv.client();
+    let body = mpx::serve::transport::client::infer_body_json(
+        "chat",
+        &image(1.0),
+    );
+
+    // First request: admitted and dispatched (depth back to 0).
+    let s1 = client
+        .open("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(s1.status, 200);
+    let probe = srv.client();
+    wait_for("the first request to be dispatched", || {
+        lane_depth(&probe, "vit_tiny/chat") == 0
+    });
+
+    // Two more fill the queue while the worker is gated.
+    let s2 = client
+        .open("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(s2.status, 200);
+    let s3 = client
+        .open("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(s3.status, 200);
+    wait_for("the queue to fill", || {
+        lane_depth(&probe, "vit_tiny/chat") == 2
+    });
+
+    // Fourth: 429, Retry-After = ceil(flush timeout) clamped to ≥ 1s.
+    let resp = client
+        .request("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 429, "{}", resp.body_string());
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert!(resp.body_string().contains("queue is full"));
+
+    // Release the gate: all three admitted streams complete.
+    gate.release();
+    for mut s in [s1, s2, s3] {
+        let mut saw_result = false;
+        while let Some(chunk) = s.next_chunk().unwrap() {
+            if String::from_utf8_lossy(&chunk).contains("logits") {
+                saw_result = true;
+            }
+        }
+        assert!(saw_result, "admitted stream must deliver its result");
+    }
+
+    let report = srv.finish();
+    assert_eq!(report.counters.admitted, 3);
+    assert_eq!(report.counters.streamed, 3);
+    assert_eq!(report.counters.rejected_full, 1);
+    assert_eq!(report.lanes[0].queue.rejected, 1);
+}
+
+#[test]
+fn client_disconnect_mid_stream_frees_and_counts_the_slot() {
+    let gate = Gate::closed();
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1], 5, 16)],
+        1,
+        Some(gate.clone()),
+        2_000,
+    );
+    let client = srv.client();
+    let body = mpx::serve::transport::client::infer_body_json(
+        "chat",
+        &image(3.0),
+    );
+
+    // Admit a request, confirm the stream is live, then vanish.
+    {
+        let mut s = client
+            .open(
+                "POST",
+                "/v1/infer",
+                "application/json",
+                &[],
+                body.as_bytes(),
+            )
+            .unwrap();
+        assert_eq!(s.status, 200);
+        let ack = s.next_chunk().unwrap().unwrap();
+        assert!(String::from_utf8_lossy(&ack).contains("queued"));
+        // Dropped here: the TCP connection closes mid-stream.
+    }
+    assert_eq!(srv.handle.pending_streams(), 1, "stream registered");
+
+    // Let the batch complete against a dead client.
+    gate.release();
+    wait_for("the disconnect to be detected", || {
+        srv.handle.counters().disconnects == 1
+    });
+
+    // The slot is free: a healthy request goes straight through.
+    let reply = client.infer("chat", &image(5.0)).unwrap();
+    assert_eq!(reply.logits, image(5.0).iter().map(|v| v * 2.0).collect::<Vec<_>>());
+
+    let report = srv.finish();
+    assert_eq!(report.counters.admitted, 2);
+    assert_eq!(report.counters.disconnects, 1);
+    // Both completions were executed and accounted by the engine,
+    // only one reached a live client.
+    assert_eq!(report.lanes[0].completed, 2);
+    assert_eq!(report.counters.streamed, 1);
+}
+
+#[test]
+fn draining_rejects_new_requests_with_503() {
+    let gate = Gate::closed();
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1], 5, 16)],
+        1,
+        Some(gate.clone()),
+        5_000,
+    );
+    let client = srv.client();
+    let body = mpx::serve::transport::client::infer_body_json(
+        "chat",
+        &image(7.0),
+    );
+
+    // One admitted stream keeps the server draining (not exited).
+    let mut pending = client
+        .open("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(pending.status, 200);
+    let _ack = pending.next_chunk().unwrap().unwrap();
+
+    srv.handle.shutdown();
+    wait_for("drain mode", || srv.handle.is_draining());
+
+    // New work is turned away with an orderly 503 + Retry-After…
+    let resp = client
+        .request("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body_string());
+    assert!(resp.header("retry-after").is_some());
+    assert!(resp.body_string().contains("draining"));
+
+    // …while /healthz still answers and reports the drain.
+    let health = client.healthz().unwrap();
+    assert_eq!(health.status, 200);
+    assert!(health.body_string().contains("draining"));
+
+    // The pending stream still gets its result before exit.
+    gate.release();
+    let mut saw_result = false;
+    while let Some(chunk) = pending.next_chunk().unwrap() {
+        if String::from_utf8_lossy(&chunk).contains("logits") {
+            saw_result = true;
+        }
+    }
+    assert!(saw_result, "in-flight stream must flush during the drain");
+
+    let report = srv.finish();
+    assert_eq!(report.counters.rejected_draining, 1);
+    assert_eq!(report.counters.streamed, 1);
+    assert_eq!(report.counters.drain_abandoned, 0);
+}
+
+#[test]
+fn drain_deadline_abandons_stuck_streams_with_an_error() {
+    // Tiny drain budget, gate never released until the end: the
+    // pending stream must be abandoned with an in-stream error chunk
+    // rather than leaking or hanging the shutdown.
+    let gate = Gate::closed();
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1], 5, 16)],
+        1,
+        Some(gate.clone()),
+        250,
+    );
+    let client = srv.client();
+    let body = mpx::serve::transport::client::infer_body_json(
+        "chat",
+        &image(9.0),
+    );
+    let mut pending = client
+        .open("POST", "/v1/infer", "application/json", &[], body.as_bytes())
+        .unwrap();
+    assert_eq!(pending.status, 200);
+    let _ack = pending.next_chunk().unwrap().unwrap();
+
+    srv.handle.shutdown();
+    // The stream ends with an error chunk once the deadline passes.
+    let mut error_line = String::new();
+    while let Some(chunk) = pending.next_chunk().unwrap() {
+        error_line = String::from_utf8_lossy(&chunk).into_owned();
+    }
+    assert!(
+        error_line.contains("drain deadline"),
+        "expected a drain-deadline error chunk, got {error_line:?}"
+    );
+
+    // Unblock the worker so the pool can exit; its late completion
+    // finds no registered stream (the handler deregistered).
+    gate.release();
+    let report = srv.finish();
+    assert_eq!(report.counters.drain_abandoned, 1);
+    assert_eq!(report.counters.streamed, 0);
+    assert_eq!(report.lanes[0].completed, 1);
+}
