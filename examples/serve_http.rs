@@ -16,6 +16,7 @@
 //!     #   curl -N -d '{"lane":"chat","image":[1,2,3,4]}' \
 //!     #        http://127.0.0.1:7878/v1/infer
 //!     #   curl http://127.0.0.1:7878/metrics
+//!     #   curl http://127.0.0.1:7878/debug/trace
 //! ```
 //!
 //! The real-artifact variant of exactly this server is
@@ -85,13 +86,20 @@ fn main() -> Result<()> {
         addr: listen.clone().unwrap_or_else(|| "127.0.0.1:0".into()),
         ..TransportConfig::default()
     };
-    let server = Server::bind(&tcfg)?;
+    let mut server = Server::bind(&tcfg)?;
+    // Tracing on: the demo exercises the whole observability surface,
+    // /debug/trace included.
+    server.set_trace(mpx::trace::TraceConfig {
+        enabled: true,
+        ..Default::default()
+    });
     let addr = server.local_addr();
     let handle = server.handle();
     eprintln!("[serve_http] listening on http://{addr}");
     eprintln!("[serve_http]   curl -N -d '{{\"lane\":\"chat\",\"image\":[1,2,3,4]}}' http://{addr}/v1/infer");
     eprintln!("[serve_http]   curl http://{addr}/healthz");
     eprintln!("[serve_http]   curl http://{addr}/metrics");
+    eprintln!("[serve_http]   curl http://{addr}/debug/trace   # Chrome trace JSON (load in Perfetto)");
 
     let forever = listen.is_some();
     if forever {
@@ -158,6 +166,21 @@ fn main() -> Result<()> {
         }) {
             println!("[serve_http] metrics: {line}");
         }
+        // The span dump over the wire: a Chrome trace document whose
+        // otherData carries the live span/drop counters.
+        let trace = c.debug_trace()?;
+        let doc = mpx::util::json::Json::parse(&trace)
+            .expect("/debug/trace must return valid JSON");
+        println!(
+            "[serve_http] /debug/trace: {} spans buffered, {} events",
+            doc.get("otherData")
+                .and_then(|o| o.get("spans"))
+                .and_then(mpx::util::json::Json::as_i64)
+                .unwrap_or(0),
+            doc.get("traceEvents")
+                .and_then(mpx::util::json::Json::as_arr)
+                .map_or(0, |events| events.len()),
+        );
         handle.shutdown();
     }
 

@@ -48,6 +48,12 @@ fn main() -> anyhow::Result<()> {
         requests: total,
         workers: 2,
         open_loop: false,
+        // Always-on span tracing: the run doubles as a calibration
+        // source (service_samples.json lands next to the artifacts).
+        trace: mpx::trace::TraceConfig {
+            enabled: true,
+            ..Default::default()
+        },
         ..ServeConfig::default()
     };
 
@@ -92,6 +98,16 @@ fn main() -> anyhow::Result<()> {
     println!(
         "full/mixed p50 speedup under shared contention: {:.2}x",
         p50s[0].as_secs_f64() / p50s[1].as_secs_f64()
+    );
+
+    // The span record behind those numbers: per-batch execute spans
+    // become the planner's calibration samples.
+    let samples = mpx::trace::service_samples(&report.spans);
+    println!(
+        "trace: {} spans ({} dropped), {} execute samples for the planner",
+        report.spans.len(),
+        report.trace_dropped,
+        samples.len(),
     );
     Ok(())
 }

@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::scaling::ScalingConfig;
 use crate::serve::batcher::SchedPolicy;
+use crate::trace::TraceConfig;
 use toml::TomlDoc;
 
 /// Numeric execution mode (paper §5 compares fp32 against mixed f16).
@@ -174,6 +175,8 @@ pub struct TrainConfig {
     /// Learning-rate metadata (must match the AOT'd optimizer).
     pub lr: f64,
     pub weight_decay: f64,
+    /// Span tracing (`[trace]` table, shared with the serve path).
+    pub trace: TraceConfig,
 }
 
 impl Default for TrainConfig {
@@ -192,6 +195,7 @@ impl Default for TrainConfig {
             dataset: "synthetic".into(),
             lr: 3e-4,
             weight_decay: 1e-4,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -266,8 +270,25 @@ impl TrainConfig {
         if let Some(v) = doc.get_float("train.weight_decay") {
             cfg.weight_decay = v;
         }
+        apply_trace_toml(&mut cfg.trace, &doc);
+        cfg.trace.validate()?;
         model_preset(&cfg.model)?; // validate
         Ok(cfg)
+    }
+}
+
+/// Apply the shared `[trace]` table (enabled / buffer_spans /
+/// trace_out) onto `trace` — the same keys configure the serve and
+/// train paths.
+pub fn apply_trace_toml(trace: &mut TraceConfig, doc: &TomlDoc) {
+    if let Some(b) = doc.get_bool("trace.enabled") {
+        trace.enabled = b;
+    }
+    if let Some(v) = doc.get_int("trace.buffer_spans") {
+        trace.buffer_spans = v.max(0) as usize;
+    }
+    if let Some(s) = doc.get_str("trace.trace_out") {
+        trace.trace_out = Some(s.to_string());
     }
 }
 
@@ -477,6 +498,9 @@ pub struct ServeConfig {
     pub open_loop: bool,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Span tracing (`[trace]` table, `--trace-out`); disabled by
+    /// default.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServeConfig {
@@ -502,6 +526,7 @@ impl Default for ServeConfig {
             open_loop: false,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -678,6 +703,7 @@ impl ServeConfig {
             }
         }
         self.transport.validate()?;
+        self.trace.validate()?;
         if !(self.planner.safety > 0.0 && self.planner.safety <= 1.0) {
             bail!(
                 "serve: planner safety {} outside (0, 1]",
@@ -802,6 +828,7 @@ impl ServeConfig {
         if let Some(s) = doc.get_str("serve.artifacts_dir") {
             self.artifacts_dir = s.to_string();
         }
+        apply_trace_toml(&mut self.trace, doc);
         // Lane tables parse last so unset lane keys inherit the
         // [serve] scalars (precision, deadline_ms) regardless of key
         // order in the file.
@@ -951,6 +978,43 @@ open_loop = true
         // untouched keys keep defaults
         assert_eq!(cfg.requests, ServeConfig::default().requests);
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_table_applies_to_serve_and_train() {
+        let text = r#"
+[serve]
+workers = 2
+
+[trace]
+enabled = true
+buffer_spans = 4096
+trace_out = "out/trace.json"
+
+[train]
+steps = 5
+"#;
+        let path = std::env::temp_dir().join("mpx_trace_cfg_test.toml");
+        std::fs::write(&path, text).unwrap();
+        let scfg =
+            ServeConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert!(scfg.trace.enabled);
+        assert_eq!(scfg.trace.buffer_spans, 4096);
+        assert_eq!(scfg.trace.trace_out.as_deref(), Some("out/trace.json"));
+        scfg.validate().unwrap();
+        let tcfg =
+            TrainConfig::from_toml_file(path.to_str().unwrap()).unwrap();
+        assert!(tcfg.trace.enabled);
+        assert_eq!(tcfg.trace.buffer_spans, 4096);
+        // Defaults: off, with a sane buffer.
+        let d = ServeConfig::default();
+        assert!(!d.trace.enabled);
+        assert!(d.trace.buffer_spans > 0);
+        // enabled with a zero ring is a config error.
+        let mut bad = ServeConfig::default();
+        bad.trace.enabled = true;
+        bad.trace.buffer_spans = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -45,10 +45,17 @@
 //!   Prometheus `/metrics`, graceful drain) behind `mpx serve
 //!   --listen`; all timing flows through the `serve::clock::Clock`
 //!   trait so policy is deterministically testable.
+//! * [`trace`] — always-on span tracing: bounded sharded ring
+//!   buffers behind a [`trace::Tracer`] threaded through the serve
+//!   scheduler and the trainers, Chrome trace-event JSON export
+//!   (Perfetto-loadable, `GET /debug/trace`), and the
+//!   [`trace::ServiceSample`] calibration records the bucket planner
+//!   consumes.  Virtual-clock runs produce bit-deterministic traces.
 //! * [`hlo`] — HLO-text parser for the buffer census.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
 //! * [`metrics`] — step timers, loss history, latency histograms
-//!   (rank-interpolated quantiles), CSV/JSONL writers.
+//!   (rank-interpolated quantiles, optional bounded reservoir),
+//!   CSV/JSONL writers.
 //! * [`cli`] — argument parsing for the `mpx` binary and examples.
 
 pub mod cli;
@@ -68,6 +75,7 @@ pub mod pytree;
 pub mod runtime;
 pub mod scaling;
 pub mod serve;
+pub mod trace;
 #[cfg(feature = "xla")]
 pub mod trainer;
 pub mod util;

@@ -43,9 +43,13 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
                  [--listen ADDR]  serve over HTTP instead of synthetic load:
                            POST /v1/infer streams each completion back the
                            moment its batch finishes; GET /healthz + /metrics
-                           (Prometheus); SIGINT drains gracefully.  Knobs in
+                           (Prometheus) + /debug/trace (when tracing is on);
+                           SIGINT drains gracefully.  Knobs in
                            [serve.transport] (max_connections, read/drain
                            timeouts)
+                 [--trace-out PATH]  enable span tracing and write a Chrome
+                           trace-event JSON file at the end of the run (load
+                           it in Perfetto); ring size via [trace] buffer_spans
                  [--plan]  print the latency-aware bucket plan (which batch
                            sizes to AOT-compile, per-lane flush timeouts)
                            and exit; per-lane SLOs come from the config's
@@ -141,6 +145,7 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
     if ddp {
         let mut trainer = DataParallelTrainer::new(&mut store, cfg.clone())?;
         trainer.run(&dataset, cfg.steps, &mut metrics)?;
+        persist_train_trace(&cfg.trace, trainer.tracer());
         summarize(&metrics);
     } else {
         let mut trainer = FusedTrainer::new(&mut store, cfg.clone())?;
@@ -182,9 +187,35 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
         } else {
             trainer.run(&dataset, total, &mut metrics)?;
         }
+        persist_train_trace(&cfg.trace, trainer.tracer());
         summarize(&metrics);
     }
     Ok(())
+}
+
+/// Export the trainer's step-phase spans when `[trace] trace_out` is
+/// set (the serve path has its own artifact-aware exporter).
+fn persist_train_trace(
+    cfg: &mpx::trace::TraceConfig,
+    tracer: Option<&std::sync::Arc<mpx::trace::Tracer>>,
+) {
+    if let (Some(out), Some(t)) = (&cfg.trace_out, tracer) {
+        let spans = t.snapshot();
+        if spans.is_empty() {
+            return;
+        }
+        match mpx::trace::chrome::write_chrome_trace(
+            std::path::Path::new(out),
+            &spans,
+            t.dropped(),
+        ) {
+            Ok(()) => eprintln!(
+                "[mpx] trace: wrote {} spans to {out}",
+                spans.len()
+            ),
+            Err(e) => eprintln!("[mpx] trace: export failed: {e}"),
+        }
+    }
 }
 
 fn summarize(metrics: &RunMetrics) {
@@ -406,6 +437,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if args.has_switch("open-loop") {
         cfg.open_loop = true;
+    }
+    if let Some(path) = args.get_str("trace-out") {
+        cfg.trace.trace_out = Some(path.to_string());
+        cfg.trace.enabled = true;
     }
     let listen = args.get_str("listen").map(str::to_string);
     let plan_only = args.has_switch("plan");

@@ -10,20 +10,54 @@ use crate::util::benchkit::quantile_ns;
 
 /// Latency distribution with rank-interpolated quantiles.
 ///
-/// Exact-sample implementation (no bucketing error): every recorded
-/// duration is kept as integer nanoseconds, quantiles sort on demand.
-/// Quantile estimation is the shared rank-interpolated
+/// Exact-sample implementation by default (no bucketing error): every
+/// recorded duration is kept as integer nanoseconds, quantiles sort
+/// on demand.  Quantile estimation is the shared rank-interpolated
 /// [`quantile_ns`] (Hyndman–Fan type 7) — truncating the rank
 /// instead (the bug this type replaced) under-reports upper tails on
 /// small samples: p99 of 10 samples would return the 9th of 10.
 ///
+/// [`with_sample_cap`] bounds memory for long-running servers: once
+/// the retained samples reach the cap, every second one is discarded
+/// and the record stride doubles — a deterministic capped reservoir
+/// (no RNG; the same observation sequence always retains the same
+/// samples).  Memory is then `O(cap)` however many observations
+/// arrive, quantiles become a uniform-in-time subsample, and the
+/// scalar statistics — [`count`], [`total`], [`mean`], [`max`] — stay
+/// **exact** in both modes (tracked as running counters, not derived
+/// from the retained samples).
+///
 /// Per-worker histograms are recorded independently and [`merge`]d
-/// for the serving report; merging is exact (sample concatenation).
+/// for the serving report; merging is exact sample concatenation in
+/// exact mode, and re-enforces the receiver's cap otherwise.
 ///
 /// [`merge`]: LatencyHistogram::merge
-#[derive(Debug, Clone, Default)]
+/// [`with_sample_cap`]: LatencyHistogram::with_sample_cap
+/// [`count`]: LatencyHistogram::count
+/// [`total`]: LatencyHistogram::total
+/// [`mean`]: LatencyHistogram::mean
+/// [`max`]: LatencyHistogram::max
+#[derive(Debug, Clone)]
 pub struct LatencyHistogram {
     samples_ns: Vec<u64>,
+    /// Retained-sample bound; 0 = exact mode (keep everything).
+    sample_cap: usize,
+    /// Record every `stride`-th observation (1 until the cap bites).
+    stride: u64,
+    /// Observations seen, for the stride phase.
+    tick: u64,
+    /// Exact observation count (what [`count`] reports).
+    observed: u64,
+    /// Exact sum of all observations, in nanoseconds.
+    sum_ns: u128,
+    /// Exact maximum observation, in nanoseconds.
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Precomputed summary of a [`LatencyHistogram`] (one sort).
@@ -39,44 +73,103 @@ pub struct LatencySummary {
 
 impl LatencyHistogram {
     pub fn new() -> LatencyHistogram {
-        LatencyHistogram { samples_ns: Vec::new() }
+        LatencyHistogram {
+            samples_ns: Vec::new(),
+            sample_cap: 0,
+            stride: 1,
+            tick: 0,
+            observed: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    /// Bounded-memory mode: retain at most ~`cap` samples (compacting
+    /// by stride-doubling past it), while `count`/`total`/`mean`/`max`
+    /// stay exact.  `cap` is clamped to ≥ 2.
+    pub fn with_sample_cap(cap: usize) -> LatencyHistogram {
+        LatencyHistogram { sample_cap: cap.max(2), ..Self::new() }
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_ns.push(d.as_nanos().min(u64::MAX as u128) as u64);
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.observed += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+        if self.tick % self.stride == 0 {
+            self.samples_ns.push(ns);
+            self.enforce_cap();
+        }
+        self.tick += 1;
     }
 
+    /// Drop every second retained sample and double the stride until
+    /// the retained set fits the cap again.  Deterministic: which
+    /// observations survive depends only on their arrival order.
+    fn enforce_cap(&mut self) {
+        if self.sample_cap == 0 {
+            return;
+        }
+        while self.samples_ns.len() >= self.sample_cap {
+            let mut i = 0usize;
+            self.samples_ns.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride = self.stride.saturating_mul(2);
+        }
+    }
+
+    /// Exact observation count — a running counter, not the retained
+    /// sample count, so it is unaffected by [`with_sample_cap`]
+    /// compaction.
+    ///
+    /// [`with_sample_cap`]: LatencyHistogram::with_sample_cap
     pub fn count(&self) -> usize {
-        self.samples_ns.len()
+        self.observed as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_ns.is_empty()
+        self.observed == 0
     }
 
-    /// Fold another histogram in (per-worker → run aggregate).
+    /// Retained samples backing the quantiles (== [`count`] in exact
+    /// mode, ≤ the cap in bounded mode).
+    ///
+    /// [`count`]: LatencyHistogram::count
+    pub fn retained(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    /// Fold another histogram in (per-worker → run aggregate).  The
+    /// scalar statistics merge exactly; the receiver's sample cap (if
+    /// any) is re-enforced on the concatenated samples.
     pub fn merge(&mut self, other: &LatencyHistogram) {
         self.samples_ns.extend_from_slice(&other.samples_ns);
+        self.observed += other.observed;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.enforce_cap();
     }
 
     pub fn mean(&self) -> Option<Duration> {
-        if self.samples_ns.is_empty() {
+        if self.observed == 0 {
             return None;
         }
-        let total: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
         Some(Duration::from_nanos(
-            (total / self.samples_ns.len() as u128) as u64,
+            (self.sum_ns / self.observed as u128).min(u64::MAX as u128)
+                as u64,
         ))
     }
 
     pub fn max(&self) -> Option<Duration> {
-        self.samples_ns.iter().max().map(|&x| Duration::from_nanos(x))
+        (self.observed > 0).then(|| Duration::from_nanos(self.max_ns))
     }
 
     /// Sum of all recorded samples (the Prometheus summary `_sum`).
     pub fn total(&self) -> Duration {
-        let ns: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
-        Duration::from_nanos(ns.min(u64::MAX as u128) as u64)
+        Duration::from_nanos(self.sum_ns.min(u64::MAX as u128) as u64)
     }
 
     /// Rank-interpolated quantile, `q` ∈ [0, 1].
@@ -101,12 +194,12 @@ impl LatencyHistogram {
         let mut xs = self.samples_ns.clone();
         xs.sort_unstable();
         Some(LatencySummary {
-            count: xs.len(),
+            count: self.count(),
             mean: self.mean().unwrap(),
             p50: quantile_ns(&xs, 0.5),
             p95: quantile_ns(&xs, 0.95),
             p99: quantile_ns(&xs, 0.99),
-            max: Duration::from_nanos(*xs.last().unwrap()),
+            max: Duration::from_nanos(self.max_ns),
         })
     }
 }
@@ -179,11 +272,15 @@ impl NamedHistograms {
     /// `metric`, one `{lane="..."}` series per entry: p50/p95/p99
     /// quantile samples (seconds) plus `_sum` and `_count`.  This is
     /// what the serve transport's `GET /metrics` endpoint exports.
+    /// Lane names pass through [`prom_escape`]; `_count` is the
+    /// exact observation count, so it is monotone under
+    /// [`LatencyHistogram::with_sample_cap`] compaction.
     pub fn to_prometheus(&self, metric: &str, out: &mut String) {
         use std::fmt::Write;
         let _ = writeln!(out, "# HELP {metric} per-lane latency summary");
         let _ = writeln!(out, "# TYPE {metric} summary");
         for (lane, h) in self.iter() {
+            let lane = prom_escape(lane);
             if let Some(qs) = h.quantiles(&[0.5, 0.95, 0.99]) {
                 for (q, v) in ["0.5", "0.95", "0.99"].iter().zip(qs) {
                     let _ = writeln!(
@@ -205,6 +302,23 @@ impl NamedHistograms {
             );
         }
     }
+}
+
+/// Escape a Prometheus label *value*: the text exposition format
+/// requires `\`, `"` and newline escaped inside `label="..."`.
+/// Everything the transport's `/metrics` endpoint interpolates into a
+/// label goes through here.
+pub fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(ch),
+        }
+    }
+    out
 }
 
 /// Exponential moving average (smoothing for console logs).
@@ -469,6 +583,94 @@ mod tests {
         // insertion order preserved
         let names: Vec<&str> = a.iter().map(|(n, _)| n).collect();
         assert_eq!(names, vec!["fp32", "f16", "bf16"]);
+    }
+
+    #[test]
+    fn capped_histogram_bounds_memory_and_keeps_exact_scalars() {
+        let mut exact = LatencyHistogram::new();
+        let mut capped = LatencyHistogram::with_sample_cap(64);
+        for v in 1..=1000u64 {
+            exact.record(ms(v));
+            capped.record(ms(v));
+        }
+        // Memory bounded, counters exact.
+        assert!(capped.retained() <= 64, "retained {}", capped.retained());
+        assert_eq!(capped.count(), 1000);
+        assert_eq!(capped.total(), exact.total());
+        assert_eq!(capped.mean(), exact.mean());
+        assert_eq!(capped.max(), Some(ms(1000)));
+        let s = capped.summary().unwrap();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.max, ms(1000));
+        // The stride subsample of a uniform ramp stays uniform: the
+        // median lands near the true one.
+        let p50 = capped.quantile(0.5).unwrap();
+        assert!(
+            p50 >= ms(400) && p50 <= ms(600),
+            "capped p50 {p50:?} drifted"
+        );
+        // Deterministic: same observations, same retained samples.
+        let mut again = LatencyHistogram::with_sample_cap(64);
+        for v in 1..=1000u64 {
+            again.record(ms(v));
+        }
+        assert_eq!(again.quantiles(&[0.25, 0.5, 0.99]), capped.quantiles(&[0.25, 0.5, 0.99]));
+    }
+
+    #[test]
+    fn capped_histogram_count_is_monotone_across_compaction() {
+        // `_count` is the completed-requests signal: it must never
+        // move backwards when the reservoir compacts ("drains" half
+        // its samples).
+        let mut h = LatencyHistogram::with_sample_cap(8);
+        let mut last = 0usize;
+        for v in 1..=100u64 {
+            h.record(ms(v));
+            assert!(h.count() > last, "count regressed at {v}");
+            last = h.count();
+        }
+        assert_eq!(last, 100);
+        assert!(h.retained() <= 8);
+        // And the exported `_count` line says the same.
+        let mut set = NamedHistograms::new();
+        set.entry("bulk").merge(&h);
+        let mut text = String::new();
+        set.to_prometheus("mpx_lat", &mut text);
+        assert!(text.contains("mpx_lat_count{lane=\"bulk\"} 100"), "{text}");
+    }
+
+    #[test]
+    fn capped_histogram_merge_stays_exact_and_bounded() {
+        let mut a = LatencyHistogram::with_sample_cap(32);
+        let mut b = LatencyHistogram::new();
+        for v in 0..200u64 {
+            a.record(ms(v));
+            b.record(ms(v + 200));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 400);
+        assert_eq!(a.max(), Some(ms(399)));
+        assert!(a.retained() <= 32);
+    }
+
+    #[test]
+    fn to_prometheus_escapes_label_values() {
+        let mut set = NamedHistograms::new();
+        set.entry("weird\"lane\\name\nx").record(ms(5));
+        let mut text = String::new();
+        set.to_prometheus("mpx_lat", &mut text);
+        assert!(
+            text.contains("lane=\"weird\\\"lane\\\\name\\nx\""),
+            "unescaped label in: {text}"
+        );
+        // No raw newline inside any sample line.
+        for line in text.lines() {
+            assert!(!line.contains("weird\"lane"), "raw quote: {line}");
+        }
+        assert_eq!(prom_escape("plain"), "plain");
+        assert_eq!(prom_escape("a\\b"), "a\\\\b");
+        assert_eq!(prom_escape("a\"b"), "a\\\"b");
+        assert_eq!(prom_escape("a\nb"), "a\\nb");
     }
 
     #[test]

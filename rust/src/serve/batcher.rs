@@ -220,6 +220,12 @@ pub fn refill(
 pub struct FormedBatch {
     pub requests: Vec<Request>,
     pub bucket: usize,
+    /// When the scheduler took this batch off the lane queue
+    /// (clock-epoch offset, stamped in `poll_locked`).  The trace
+    /// anchor: queue-wait spans end here and service/execute spans
+    /// start here, so `queue_wait + service == observed latency` is
+    /// an exact identity, on real and virtual clocks alike.
+    pub dispatched: Duration,
 }
 
 impl FormedBatch {
@@ -413,6 +419,7 @@ mod tests {
         let batch = FormedBatch {
             requests: vec![req(0, 4), req(1, 4), req(2, 4)],
             bucket: 8,
+            dispatched: Duration::ZERO,
         };
         assert_eq!(batch.padding(), 5);
         let flat = batch.padded_images();
@@ -430,6 +437,7 @@ mod tests {
         let batch = FormedBatch {
             requests: (0..4).map(|i| req(i, 2)).collect(),
             bucket: 4,
+            dispatched: Duration::ZERO,
         };
         assert_eq!(batch.padding(), 0);
         assert_eq!(batch.padded_images().len(), 8);

@@ -118,6 +118,7 @@ use anyhow::Result;
 
 use crate::config::{LaneConfig, ServeConfig};
 use crate::metrics::{LatencyHistogram, NamedHistograms};
+use crate::trace::{Span, TraceConfig, Tracer};
 use crate::util::human_duration;
 use worker::worker_loop;
 
@@ -143,13 +144,15 @@ pub struct LaneTraffic {
 }
 
 /// Engine-level knobs shared by all lanes.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EngineOpts {
     pub policy: SchedPolicy,
     pub autoscale: AutoscalePolicy,
     /// Open loop drops on a full lane; closed loop blocks instead.
     pub open_loop: bool,
     pub seed: u64,
+    /// Span tracing (`[trace]` table); disabled by default.
+    pub trace: TraceConfig,
 }
 
 /// Per-lane slice of a run report.
@@ -191,6 +194,12 @@ pub struct ServeReport {
     pub spawned: usize,
     /// Workers autoscaling retired.
     pub retired: usize,
+    /// Tracer snapshot in `(start, seq)` order; empty when tracing
+    /// was off.
+    pub spans: Vec<Span>,
+    /// Spans the tracer's ring dropped (oldest-first) — non-zero
+    /// means `spans` misses the start of the timeline.
+    pub trace_dropped: u64,
 }
 
 impl ServeReport {
@@ -331,13 +340,18 @@ where
         opts.seed,
     );
     let nlanes = lanes.len();
-    let sched = Scheduler::new(
+    let mut sched = Scheduler::new(
         lanes.into_iter().map(|l| l.spec).collect(),
         opts.policy,
         opts.autoscale,
         clock.clone(),
         on_complete,
     )?;
+    let tracer = Tracer::from_config(clock.clone(), &opts.trace);
+    if let Some(t) = &tracer {
+        sched.set_tracer(t.clone());
+    }
+    let sched = sched;
 
     let n0 = opts.autoscale.min_workers;
     // Initial workers build their executors (compiles are already
@@ -458,6 +472,10 @@ where
         lane_reports.push(lr);
     }
     let counters = sched.counters();
+    let (spans, trace_dropped) = match &tracer {
+        Some(t) => (t.snapshot(), t.dropped()),
+        None => (Vec::new(), 0),
+    };
     Ok(ServeReport {
         wall,
         offered,
@@ -467,6 +485,8 @@ where
         workers,
         spawned: counters.spawned.saturating_sub(n0),
         retired: counters.retired,
+        spans,
+        trace_dropped,
     })
 }
 
@@ -477,6 +497,7 @@ pub fn engine_opts(cfg: &ServeConfig) -> EngineOpts {
         autoscale: autoscale_policy(cfg),
         open_loop: cfg.open_loop,
         seed: cfg.seed,
+        trace: cfg.trace.clone(),
     }
 }
 
@@ -690,14 +711,56 @@ pub fn run_with_artifacts(
     // of a single-row batch, so the stream is deterministic).
     let make_image = |_lane: usize, i: u64| dataset.batch(i, 1, 7).images;
 
-    run_lanes(
+    let report = run_lanes(
         &engine_opts(cfg),
         traffic,
         Arc::new(WallClock::new()),
         make_executor,
         make_image,
         None,
-    )
+    )?;
+    persist_trace(
+        &cfg.trace,
+        store.dir(),
+        &report.spans,
+        report.trace_dropped,
+    )?;
+    Ok(report)
+}
+
+/// Persist one run's trace artifacts: the Chrome trace-event JSON to
+/// `trace.trace_out` (when set) and the [`ServiceSample`] calibration
+/// records to `<dir>/service_samples.json` — next to the compiled
+/// artifacts, where the planner's closed loop can pick them up.
+/// No-op when tracing is off or no spans were recorded.
+pub fn persist_trace(
+    trace: &TraceConfig,
+    dir: &std::path::Path,
+    spans: &[Span],
+    dropped: u64,
+) -> Result<()> {
+    if !trace.enabled || spans.is_empty() {
+        return Ok(());
+    }
+    if let Some(out) = &trace.trace_out {
+        crate::trace::chrome::write_chrome_trace(
+            std::path::Path::new(out),
+            spans,
+            dropped,
+        )?;
+        eprintln!("[mpx] trace: wrote {} spans to {out}", spans.len());
+    }
+    let samples = crate::trace::service_samples(spans);
+    if !samples.is_empty() {
+        let path = dir.join("service_samples.json");
+        crate::trace::write_service_samples(&path, &samples)?;
+        eprintln!(
+            "[mpx] trace: wrote {} service samples to {}",
+            samples.len(),
+            path.display()
+        );
+    }
+    Ok(())
 }
 
 /// Compiled artifacts backing one serving lane.
@@ -825,10 +888,11 @@ pub fn run_transport_with_artifacts(
     let seed = cfg.seed as i32;
 
     transport::install_sigint();
-    let server = transport::Server::bind(&cfg.transport)?;
+    let mut server = transport::Server::bind(&cfg.transport)?;
+    server.set_trace(cfg.trace.clone());
     eprintln!(
         "[mpx] serve: listening on http://{} | {} lanes ({}), {} workers | \
-         POST /v1/infer, GET /healthz, GET /metrics | Ctrl-C drains and \
+         POST /v1/infer, GET /healthz, GET /metrics{} | Ctrl-C drains and \
          exits",
         server.local_addr(),
         prepared.specs.len(),
@@ -839,6 +903,7 @@ pub fn run_transport_with_artifacts(
             .collect::<Vec<_>>()
             .join(", "),
         cfg.workers,
+        if cfg.trace.enabled { ", GET /debug/trace" } else { "" },
     );
 
     let lane_arts = prepared.arts;
@@ -846,13 +911,20 @@ pub fn run_transport_with_artifacts(
         let la = &lane_arts[lane];
         ArtifactExecutor::new(&la.init, la.fwd.clone(), seed)
     };
-    server.run(
+    let report = server.run(
         prepared.specs,
         cfg.workers,
         cfg.policy,
         image_elems,
         make_executor,
-    )
+    )?;
+    persist_trace(
+        &cfg.trace,
+        store.dir(),
+        &report.spans,
+        report.trace_dropped,
+    )?;
+    Ok(report)
 }
 
 #[cfg(test)]

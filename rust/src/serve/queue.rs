@@ -235,7 +235,9 @@ impl RequestQueue {
         drop(st);
         self.space.notify_all();
         let bucket = cfg.bucket_for(requests.len());
-        Some(FormedBatch { requests, bucket })
+        // `dispatched` is stamped by the scheduler's dispatch point
+        // (`poll_locked`), the one site that knows the dispatch time.
+        Some(FormedBatch { requests, bucket, dispatched: Duration::ZERO })
     }
 }
 

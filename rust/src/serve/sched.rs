@@ -32,6 +32,14 @@
 //! event-driven replay with no real sleeps that makes flush timing,
 //! deadline misses, fairness, and autoscaling exactly reproducible.
 //!
+//! The same property makes the scheduler the natural span-recording
+//! site ([`crate::trace`]): dispatch stamps
+//! [`FormedBatch::dispatched`], and completion records the
+//! queue-wait, per-request service, and per-batch execute spans — one
+//! instrumentation path shared by the threaded engine and the
+//! simulation, so virtual-clock traces are bit-deterministic and
+//! `queue_wait + service == observed latency` holds exactly.
+//!
 //! [`WallClock`]: crate::serve::clock::WallClock
 //! [`VirtualClock`]: crate::serve::clock::VirtualClock
 
@@ -45,6 +53,7 @@ use crate::metrics::LatencyHistogram;
 use crate::serve::batcher::{BatcherConfig, FormedBatch, SchedPolicy};
 use crate::serve::clock::{Clock, VirtualClock};
 use crate::serve::queue::{QueuePoll, QueueStats, Request, RequestQueue};
+use crate::trace::{Span, SpanKind, Tracer};
 
 /// Static description of one (model, precision) lane.
 ///
@@ -192,6 +201,9 @@ pub struct Scheduler {
     quantum: i64,
     clock: Arc<dyn Clock>,
     on_complete: Option<Box<CompletionFn>>,
+    /// Span recorder ([`crate::trace`]); `None` costs nothing on the
+    /// dispatch/complete paths.
+    tracer: Option<Arc<Tracer>>,
     state: Mutex<SchedState>,
     /// Woken on arrivals, close, and retire grants.
     work: Condvar,
@@ -240,6 +252,7 @@ impl Scheduler {
             quantum,
             clock,
             on_complete,
+            tracer: None,
             state: Mutex::new(SchedState {
                 credit: vec![0; n],
                 cursor: 0,
@@ -268,6 +281,18 @@ impl Scheduler {
 
     pub fn clock(&self) -> &Arc<dyn Clock> {
         &self.clock
+    }
+
+    /// Attach a span recorder.  Called once during engine setup,
+    /// before the scheduler is shared across threads (hence `&mut`).
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    /// The attached span recorder, if any — worker loops and the
+    /// transport instrument their own phases through this.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     pub fn counters(&self) -> PoolCounters {
@@ -310,8 +335,10 @@ impl Scheduler {
     /// Open-loop submission: rejected (and counted in the lane's
     /// stats) when the lane is full, closed, or zero-capacity.
     pub fn submit(&self, lane: usize, req: Request) -> bool {
+        let id = req.id;
         let ok = self.lanes[lane].queue.try_enqueue(req);
         if ok {
+            self.trace_admit(lane, id);
             self.kick_one();
         }
         ok
@@ -320,11 +347,22 @@ impl Scheduler {
     /// Closed-loop submission: blocks for space (backpressure);
     /// returns `false` only on a closed or zero-capacity lane.
     pub fn submit_blocking(&self, lane: usize, req: Request) -> bool {
+        let id = req.id;
         let ok = self.lanes[lane].queue.enqueue(req);
         if ok {
+            self.trace_admit(lane, id);
             self.kick_one();
         }
         ok
+    }
+
+    /// Admission marker — the same clock the queue stamped
+    /// `Request::enqueued` with, so the instant matches the
+    /// queue-wait span's start exactly.
+    fn trace_admit(&self, lane: usize, id: u64) {
+        if let Some(t) = &self.tracer {
+            t.instant(SpanKind::Admit, self.clock.now(), lane as u64, id, 0);
+        }
     }
 
     /// Stop arrivals on every lane; workers drain and shut down.
@@ -390,8 +428,12 @@ impl Scheduler {
                         st.topped = true;
                     }
                     if st.credit[i] >= take as i64 {
-                        if let Some(batch) = lane.queue.pop(&lane.spec.batcher, take)
+                        if let Some(mut batch) =
+                            lane.queue.pop(&lane.spec.batcher, take)
                         {
+                            // The dispatch instant: trace spans pivot
+                            // here (queue-wait ends, service starts).
+                            batch.dispatched = now;
                             st.credit[i] -= batch.requests.len() as i64;
                             st.busy += 1;
                             // Cursor sticks: the lane keeps its turn
@@ -497,6 +539,40 @@ impl Scheduler {
         } else {
             0
         };
+        // Trace the batch's timeline around the dispatch anchor
+        // stamped in `poll_locked`: one execute span per batch (the
+        // planner's calibration signal) and a queue-wait + service
+        // pair per request.  `enqueued ≤ dispatched ≤ done` along
+        // this path, so the spans tile the observed latency exactly:
+        // `queue_wait + service == done − enqueued`.
+        if let Some(t) = &self.tracer {
+            t.record(
+                SpanKind::Execute,
+                batch.dispatched,
+                done,
+                lane as u64,
+                batch.bucket as u64,
+                batch.requests.len() as u64,
+            );
+            for r in &batch.requests {
+                t.record(
+                    SpanKind::QueueWait,
+                    r.enqueued,
+                    batch.dispatched,
+                    lane as u64,
+                    r.id,
+                    0,
+                );
+                t.record(
+                    SpanKind::Service,
+                    batch.dispatched,
+                    done,
+                    lane as u64,
+                    r.id,
+                    0,
+                );
+            }
+        }
         let mut misses = 0;
         for (i, r) in batch.requests.iter().enumerate() {
             let missed = r.missed_deadline(done);
@@ -586,6 +662,10 @@ pub struct SimSpec {
     pub stop_at: Option<Duration>,
     /// Record every completion and dispatched batch (tests).
     pub record_detail: bool,
+    /// Attach a [`Tracer`] to the replayed scheduler and return its
+    /// span snapshot in [`SimReport::spans`].  Traces are
+    /// bit-deterministic: same spec, same spans.
+    pub trace: bool,
 }
 
 /// One streamed completion, as observed by the simulation's callback.
@@ -634,6 +714,12 @@ pub struct SimReport {
     /// Populated when [`SimSpec::record_detail`] is set.
     pub completions: Vec<SimCompletion>,
     pub batches: Vec<SimBatch>,
+    /// Span snapshot, populated when [`SimSpec::trace`] is set —
+    /// ordered by `(start, seq)`, virtual-clock offsets.
+    pub spans: Vec<Span>,
+    /// Spans the tracer's ring dropped (oldest-first overflow); zero
+    /// means `spans` is the complete timeline.
+    pub trace_dropped: u64,
 }
 
 impl SimReport {
@@ -738,13 +824,22 @@ pub fn simulate(spec: SimSpec) -> Result<SimReport> {
         }
     });
 
-    let sched = Scheduler::new(
+    let mut sched = Scheduler::new(
         spec.lanes.iter().map(|l| l.spec.clone()).collect(),
         spec.policy,
         spec.autoscale,
         clock.clone(),
         Some(on_complete),
     )?;
+    // Generous fixed ring: simulated scenarios are finite, and a
+    // bounded buffer keeps the sim honest about production behaviour.
+    let tracer = spec
+        .trace
+        .then(|| Arc::new(Tracer::new(clock.clone() as Arc<dyn Clock>, 1 << 16)));
+    if let Some(t) = &tracer {
+        sched.set_tracer(t.clone());
+    }
+    let sched = sched;
 
     // Seed the event heap with every arrival, in lane-major order.
     let mut events = BinaryHeap::new();
@@ -905,6 +1000,11 @@ pub fn simulate(spec: SimSpec) -> Result<SimReport> {
         lanes,
         completions,
         batches,
+        spans: tracer
+            .as_ref()
+            .map(|t| t.snapshot())
+            .unwrap_or_default(),
+        trace_dropped: tracer.map(|t| t.dropped()).unwrap_or(0),
     })
 }
 
@@ -1022,6 +1122,7 @@ mod tests {
             exec_per_row: Duration::from_micros(100),
             stop_at: None,
             record_detail: true,
+            trace: true,
         };
         let a = simulate(mk()).unwrap();
         let b = simulate(mk()).unwrap();
@@ -1029,6 +1130,17 @@ mod tests {
         assert_eq!(a.wall, b.wall);
         assert_eq!(a.completions, b.completions);
         assert_eq!(a.batches, b.batches);
+        // Traces are part of the determinism contract: same spec,
+        // bit-identical spans.
+        assert!(!a.spans.is_empty());
+        assert_eq!(a.spans, b.spans);
+        // Every dispatched batch yields exactly one execute span.
+        let execs = a
+            .spans
+            .iter()
+            .filter(|s| s.kind == crate::trace::SpanKind::Execute)
+            .count();
+        assert_eq!(execs as u64, a.lanes[0].batches);
     }
 
     #[test]
@@ -1044,6 +1156,7 @@ mod tests {
             exec_per_row: Duration::ZERO,
             stop_at: None,
             record_detail: false,
+            trace: false,
         })
         .unwrap();
         assert_eq!(rep.completed(), 37);

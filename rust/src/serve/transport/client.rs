@@ -227,6 +227,17 @@ impl Client {
         Ok(resp.body_string())
     }
 
+    /// The span dump (`GET /debug/trace`): Chrome trace-event JSON,
+    /// 404 when the server runs with tracing disabled.
+    pub fn debug_trace(&self) -> Result<String> {
+        let resp = self
+            .request("GET", "/debug/trace", "application/json", &[], &[])?;
+        if resp.status != 200 {
+            bail!("GET /debug/trace: status {}", resp.status);
+        }
+        Ok(resp.body_string())
+    }
+
     /// JSON inference: stream until the result line arrives.  Non-200
     /// statuses and in-stream errors become `Err` (the status code is
     /// in the message; use [`Client::request`] when a test needs the

@@ -74,6 +74,7 @@ use crate::serve::sched::{
     Scheduler,
 };
 use crate::serve::worker::{worker_loop, BatchExecutor, WorkerReport};
+use crate::trace::{chrome, Span, SpanKind, TraceConfig, Tracer};
 use crate::util::human_duration;
 use crate::util::json::{write_escaped, Json};
 
@@ -170,12 +171,11 @@ pub struct CounterSnapshot {
     pub nonfinite: u64,
 }
 
-/// Once a lane's latency histogram holds this many samples, the
-/// record stride doubles — [`LatencyHistogram`] keeps exact samples
-/// (right for finite bench runs), so a long-running server decimates:
-/// memory grows only logarithmically in requests served.  Earlier
-/// phases of the run stay denser than later ones; the histogram is a
-/// bounded run-wide sample, not a sliding window.
+/// Retained-sample bound for each lane's latency histogram: a
+/// long-running server keeps memory `O(cap)` per lane via
+/// [`LatencyHistogram::with_sample_cap`]'s deterministic
+/// stride-doubling reservoir, while `_count`/`_sum`/`max` stay exact
+/// running counters.
 const LATENCY_SAMPLE_CAP: usize = 16_384;
 
 /// Per-lane completion accounting on the transport side (what the
@@ -187,9 +187,6 @@ struct StreamTally {
     deadline_misses: u64,
     nonfinite: u64,
     latency: LatencyHistogram,
-    /// Record every `stride`-th completion (doubles at
-    /// [`LATENCY_SAMPLE_CAP`]-sample marks — see above).
-    stride: u64,
 }
 
 impl Default for StreamTally {
@@ -198,19 +195,7 @@ impl Default for StreamTally {
             completed: 0,
             deadline_misses: 0,
             nonfinite: 0,
-            latency: LatencyHistogram::new(),
-            stride: 1,
-        }
-    }
-}
-
-impl StreamTally {
-    fn record_latency(&mut self, latency: Duration) {
-        if self.completed % self.stride == 0 {
-            self.latency.record(latency);
-            if self.latency.count() % LATENCY_SAMPLE_CAP == 0 {
-                self.stride *= 2;
-            }
+            latency: LatencyHistogram::with_sample_cap(LATENCY_SAMPLE_CAP),
         }
     }
 }
@@ -298,7 +283,7 @@ impl Shared {
             if !finite {
                 t.nonfinite += 1;
             }
-            t.record_latency(c.latency);
+            t.latency.record(c.latency);
         }
         if !finite {
             self.counters.nonfinite.fetch_add(1, Ordering::Relaxed);
@@ -376,6 +361,11 @@ pub struct TransportReport {
     pub pool: PoolCounters,
     pub lanes: Vec<LaneStreamReport>,
     pub workers: Vec<WorkerReport>,
+    /// Tracer snapshot at drain (empty when tracing was off) — what
+    /// `GET /debug/trace` would have returned at the end.
+    pub spans: Vec<Span>,
+    /// Spans the tracer's ring dropped (oldest first).
+    pub trace_dropped: u64,
 }
 
 impl TransportReport {
@@ -428,6 +418,7 @@ pub struct Server {
     listener: TcpListener,
     local: SocketAddr,
     tcfg: TransportConfig,
+    trace: TraceConfig,
     shared: Arc<Shared>,
 }
 
@@ -444,8 +435,16 @@ impl Server {
             listener,
             local,
             tcfg: tcfg.clone(),
+            trace: TraceConfig::default(),
             shared: Arc::new(Shared::new()),
         })
+    }
+
+    /// Enable span tracing for the run (the `[trace]` table); spans
+    /// become visible at `GET /debug/trace` and in the final
+    /// [`TransportReport`].  Call before [`run`](Server::run).
+    pub fn set_trace(&mut self, trace: TraceConfig) {
+        self.trace = trace;
     }
 
     /// The actually-bound address (resolves `:0` to the real port).
@@ -522,13 +521,18 @@ impl Server {
         let on_complete: Box<CompletionFn> =
             Box::new(move |c: &Completion| cb_shared.on_completion(c));
         let clock: Arc<dyn Clock> = shared.clock.clone();
-        let sched = Arc::new(Scheduler::new(
+        let tracer = Tracer::from_config(clock.clone(), &self.trace);
+        let mut sched = Scheduler::new(
             lanes,
             policy,
             AutoscalePolicy::fixed(workers),
             clock,
             Some(on_complete),
-        )?);
+        )?;
+        if let Some(t) = &tracer {
+            sched.set_tracer(t.clone());
+        }
+        let sched = Arc::new(sched);
 
         let t_start = shared.clock.now();
         let ready = std::sync::Barrier::new(workers + 1);
@@ -667,6 +671,10 @@ impl Server {
                 latency: t.latency,
             })
             .collect();
+        let (spans, trace_dropped) = match &tracer {
+            Some(t) => (t.snapshot(), t.dropped()),
+            None => (Vec::new(), 0),
+        };
         Ok(TransportReport {
             wall,
             counters: shared.counter_snapshot(),
@@ -674,6 +682,8 @@ impl Server {
             pool: sched.counters(),
             lanes,
             workers: worker_reports,
+            spans,
+            trace_dropped,
         })
     }
 }
@@ -755,6 +765,30 @@ fn handle_connection(
                 body.as_bytes(),
             );
         }
+        ("GET", "/debug/trace") => match sched.tracer() {
+            Some(t) => {
+                // The ring's whole content (the last `buffer_spans`
+                // recorded), as a Chrome trace document — save the
+                // body to a file and load it in Perfetto as-is.
+                let doc = chrome::chrome_trace(&t.snapshot(), t.dropped());
+                let _ = http::write_response(
+                    &mut stream,
+                    200,
+                    "OK",
+                    "application/json",
+                    &[],
+                    (doc.dump() + "\n").as_bytes(),
+                );
+            }
+            None => {
+                let _ = reject(
+                    &mut stream,
+                    404,
+                    "Not Found",
+                    "tracing is disabled ([trace] enabled = false)",
+                );
+            }
+        },
         ("POST", "/v1/infer") => {
             handle_infer(
                 stream, &req, shared, sched, tcfg, routes, lane_names,
@@ -956,11 +990,25 @@ fn handle_infer(
     loop {
         match rx.recv_timeout(Duration::from_millis(25)) {
             Ok(outcome) => {
+                let egress_start = shared.clock.now();
                 let body = outcome_json(&outcome, &lane_names[lane]);
                 let delivered = !peer_closed(&stream)
                     && http::write_chunk(&mut stream, body.as_bytes())
                         .and_then(|()| http::finish_chunked(&mut stream))
                         .is_ok();
+                if let Some(t) = sched.tracer() {
+                    // Serialization + socket write of the result
+                    // chunk — the only transport-side latency a
+                    // client sees beyond the engine's service span.
+                    t.record(
+                        SpanKind::Egress,
+                        egress_start,
+                        shared.clock.now(),
+                        lane as u64,
+                        outcome.id,
+                        0,
+                    );
+                }
                 if delivered {
                     shared.counters.streamed.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -1168,9 +1216,28 @@ fn prometheus_text(
         let _ = writeln!(s, "# TYPE {name} counter");
     };
 
+    // Every label *value* below passes through `prom_escape` — lane
+    // names come from config and may hold anything.
+    let esc: Vec<String> =
+        lane_names.iter().map(|n| crate::metrics::prom_escape(n)).collect();
+
+    // Build + uptime identity, first so scrapers always see them.
+    gauge(
+        &mut s,
+        "mpx_build_info",
+        "build metadata as labels (value is constant 1)",
+    );
+    let _ = writeln!(
+        s,
+        "mpx_build_info{{version=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION")
+    );
+    gauge(&mut s, "mpx_uptime_seconds", "seconds since server start");
+    let _ = writeln!(s, "mpx_uptime_seconds {}", shared.clock.now().as_secs_f64());
+
     // Per-lane queue/admission state.
     counter(&mut s, "mpx_serve_accepted_total", "requests admitted per lane");
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let q = sched.lane_stats(i);
         let _ = writeln!(
             s,
@@ -1179,7 +1246,7 @@ fn prometheus_text(
         );
     }
     counter(&mut s, "mpx_serve_rejected_total", "admission rejections per lane");
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let q = sched.lane_stats(i);
         let _ = writeln!(
             s,
@@ -1193,7 +1260,7 @@ fn prometheus_text(
         );
     }
     gauge(&mut s, "mpx_serve_queue_depth", "queued requests per lane");
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let _ = writeln!(
             s,
             "mpx_serve_queue_depth{{lane=\"{name}\"}} {}",
@@ -1201,7 +1268,7 @@ fn prometheus_text(
         );
     }
     gauge(&mut s, "mpx_serve_queue_peak_depth", "peak queue depth per lane");
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let _ = writeln!(
             s,
             "mpx_serve_queue_peak_depth{{lane=\"{name}\"}} {}",
@@ -1219,7 +1286,7 @@ fn prometheus_text(
         (hists, tallies.clone())
     };
     counter(&mut s, "mpx_serve_completed_total", "completions per lane");
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let _ = writeln!(
             s,
             "mpx_serve_completed_total{{lane=\"{name}\"}} {}",
@@ -1231,7 +1298,7 @@ fn prometheus_text(
         "mpx_serve_deadline_misses_total",
         "completions over their lane deadline",
     );
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let _ = writeln!(
             s,
             "mpx_serve_deadline_misses_total{{lane=\"{name}\"}} {}",
@@ -1244,7 +1311,7 @@ fn prometheus_text(
         "responses with a non-finite logit (half-precision overflow \
          accounting)",
     );
-    for (i, name) in lane_names.iter().enumerate() {
+    for (i, name) in esc.iter().enumerate() {
         let _ = writeln!(
             s,
             "mpx_serve_nonfinite_total{{lane=\"{name}\"}} {}",

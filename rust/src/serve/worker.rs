@@ -126,8 +126,21 @@ pub fn worker_loop<E: BatchExecutor>(
                 break;
             }
             Work::Batch { lane, batch } => {
+                let pack_start = clock.now();
                 batch.padded_images_into(&mut images);
                 let t0 = clock.now();
+                if let Some(t) = sched.tracer() {
+                    // Worker-side pad/pack cost, distinct from the
+                    // scheduler's dispatch→done execute span.
+                    t.record(
+                        crate::trace::SpanKind::Pack,
+                        pack_start,
+                        t0,
+                        lane as u64,
+                        batch.bucket as u64,
+                        batch.requests.len() as u64,
+                    );
+                }
                 let res = execs[lane].execute(&images, batch.bucket);
                 let done = clock.now();
                 let logits = match res {

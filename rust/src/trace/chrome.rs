@@ -1,0 +1,301 @@
+//! Chrome trace-event JSON export (the `chrome://tracing` /
+//! [Perfetto](https://ui.perfetto.dev) format).
+//!
+//! Built as a [`Json`] tree and serialized with [`Json::dump`], so
+//! the output round-trips through the crate's own parser by
+//! construction (asserted in tests and by the host-only CI job).  No
+//! serde.
+//!
+//! Spans are laid out on virtual threads ("tracks"): one group of
+//! tracks per [`SpanKind`], and within a kind a greedy first-fit
+//! assignment guarantees the spans on any single track never overlap.
+//! Non-overlapping spans emitted in time order make every `B`/`E`
+//! pair on a track trivially well nested — the property the snapshot
+//! test checks and Perfetto requires to render without warnings.
+//!
+//! Timestamps are integer microseconds from the run clock's epoch
+//! (`ts` in the trace-event spec); [`Json::dump`] prints integers
+//! below 2^53 exactly, so virtual-clock traces are byte-stable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Span, SpanKind};
+use crate::util::json::Json;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn us(d: std::time::Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
+}
+
+/// Trace-event category: which pipeline the span belongs to.
+fn category(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::Admit
+        | SpanKind::QueueWait
+        | SpanKind::Service
+        | SpanKind::Execute
+        | SpanKind::Pack
+        | SpanKind::Egress => "serve",
+        _ => "train",
+    }
+}
+
+/// Greedy first-fit track assignment within one kind: spans arrive
+/// sorted by start; each goes on the first track whose previous span
+/// already ended.  Returns the tracks, each a non-overlapping
+/// time-ordered span list.
+fn assign_tracks(mut spans: Vec<Span>) -> Vec<Vec<Span>> {
+    spans.sort_by_key(|s| (s.start, s.end, s.seq));
+    let mut tracks: Vec<Vec<Span>> = Vec::new();
+    for span in spans {
+        let slot = tracks
+            .iter_mut()
+            .find(|t| t.last().map(|p| p.end <= span.start).unwrap_or(true));
+        match slot {
+            Some(track) => track.push(span),
+            None => tracks.push(vec![span]),
+        }
+    }
+    tracks
+}
+
+/// Build the Chrome trace document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms", "otherData": {...}}`.
+///
+/// `dropped` is the tracer's overflow count — zero means the ring
+/// held the whole timeline; non-zero tells the reader the *oldest*
+/// spans are missing.
+pub fn chrome_trace(spans: &[Span], dropped: u64) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() * 2 + 8);
+    events.push(obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", num(1)),
+        ("tid", num(0)),
+        ("name", Json::Str("process_name".into())),
+        ("args", obj(vec![("name", Json::Str("mpx".into()))])),
+    ]));
+
+    // Stable kind order: group the snapshot's kinds by first
+    // appearance, preserving the global (start, seq) sort.
+    let mut kinds: Vec<SpanKind> = Vec::new();
+    for s in spans {
+        if !kinds.contains(&s.kind) {
+            kinds.push(s.kind);
+        }
+    }
+
+    let mut tid = 0u64;
+    for kind in kinds {
+        let of_kind: Vec<Span> =
+            spans.iter().copied().filter(|s| s.kind == kind).collect();
+        for track in assign_tracks(of_kind) {
+            tid += 1;
+            events.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("pid", num(1)),
+                ("tid", num(tid)),
+                ("name", Json::Str("thread_name".into())),
+                ("args", obj(vec![(
+                    "name",
+                    Json::Str(format!("{} #{tid}", kind.name())),
+                )])),
+            ]));
+            for span in track {
+                let names = span.kind.attr_names();
+                let mut args: Vec<(&str, Json)> =
+                    vec![("seq", num(span.seq))];
+                for (name, value) in
+                    names.iter().zip([span.a, span.b, span.c])
+                {
+                    if *name != "_" {
+                        args.push((name, num(value)));
+                    }
+                }
+                events.push(obj(vec![
+                    ("ph", Json::Str("B".into())),
+                    ("pid", num(1)),
+                    ("tid", num(tid)),
+                    ("ts", num(us(span.start))),
+                    ("name", Json::Str(span.kind.name().into())),
+                    ("cat", Json::Str(category(span.kind).into())),
+                    ("args", obj(args)),
+                ]));
+                events.push(obj(vec![
+                    ("ph", Json::Str("E".into())),
+                    ("pid", num(1)),
+                    ("tid", num(tid)),
+                    ("ts", num(us(span.end))),
+                ]));
+            }
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("otherData", obj(vec![
+            ("spans", num(spans.len() as u64)),
+            ("dropped", num(dropped)),
+        ])),
+    ])
+}
+
+/// Serialize and write the trace to `path`.
+pub fn write_chrome_trace(
+    path: &Path,
+    spans: &[Span],
+    dropped: u64,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(spans, dropped).dump() + "\n")
+        .with_context(|| format!("write trace {}", path.display()))
+}
+
+/// Verify B/E well-nestedness per tid by replaying the event array in
+/// order: every `E` must close the `B` opened last on its track.
+/// Used by the snapshot tests and cheap enough for debug assertions.
+pub fn check_nesting(doc: &Json) -> Result<usize> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("no traceEvents array")?;
+    let mut open: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut pairs = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).context("event without ph")?;
+        let tid = ev
+            .get("tid")
+            .and_then(Json::as_i64)
+            .context("event without tid")? as u64;
+        match ph {
+            "B" => {
+                let name = ev
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("B without name")?;
+                open.entry(tid).or_default().push(name.to_string());
+            }
+            "E" => {
+                open.get_mut(&tid)
+                    .and_then(Vec::pop)
+                    .with_context(|| format!("unmatched E on tid {tid}"))?;
+                pairs += 1;
+            }
+            "M" => {}
+            other => anyhow::bail!("unexpected phase {other:?}"),
+        }
+    }
+    for (tid, stack) in open {
+        anyhow::ensure!(
+            stack.is_empty(),
+            "unclosed B events on tid {tid}: {stack:?}"
+        );
+    }
+    Ok(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(
+        kind: SpanKind,
+        start_ms: u64,
+        end_ms: u64,
+        seq: u64,
+    ) -> Span {
+        Span {
+            kind,
+            start: Duration::from_millis(start_ms),
+            end: Duration::from_millis(end_ms),
+            seq,
+            a: 0,
+            b: seq,
+            c: 0,
+        }
+    }
+
+    #[test]
+    fn overlapping_spans_get_separate_tracks() {
+        // Three queue waits overlapping in time: no single track may
+        // hold two of them.
+        let spans = vec![
+            span(SpanKind::QueueWait, 0, 10, 0),
+            span(SpanKind::QueueWait, 2, 8, 1),
+            span(SpanKind::QueueWait, 4, 6, 2),
+            span(SpanKind::QueueWait, 10, 12, 3), // fits after the first
+        ];
+        let tracks = assign_tracks(spans);
+        assert_eq!(tracks.len(), 3);
+        assert_eq!(tracks[0].len(), 2); // 0–10 then 10–12
+        for track in &tracks {
+            for pair in track.windows(2) {
+                assert!(pair[0].end <= pair[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn export_roundtrips_and_nests() {
+        let spans = vec![
+            span(SpanKind::Admit, 0, 0, 0),
+            span(SpanKind::QueueWait, 0, 5, 1),
+            span(SpanKind::QueueWait, 1, 5, 2),
+            span(SpanKind::Execute, 5, 7, 3),
+            span(SpanKind::Service, 5, 7, 4),
+        ];
+        let doc = chrome_trace(&spans, 0);
+        // Round-trip through the crate's own parser.
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(parsed, doc);
+        let pairs = check_nesting(&parsed).unwrap();
+        assert_eq!(pairs, spans.len());
+        // integer microsecond timestamps
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let exec_b = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("B")
+                    && e.get("name").and_then(Json::as_str) == Some("execute")
+            })
+            .unwrap();
+        assert_eq!(exec_b.get("ts").unwrap().as_i64(), Some(5000));
+        assert_eq!(
+            exec_b.get("args").unwrap().get("bucket").unwrap().as_i64(),
+            Some(3)
+        );
+        assert_eq!(
+            parsed.get("otherData").unwrap().get("dropped").unwrap().as_i64(),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn nesting_checker_catches_imbalance() {
+        let doc = Json::parse(
+            r#"{"traceEvents":[
+                {"ph":"B","pid":1,"tid":1,"ts":0,"name":"x"},
+                {"ph":"E","pid":1,"tid":2,"ts":1}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(check_nesting(&doc).is_err());
+    }
+}

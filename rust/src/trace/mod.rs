@@ -1,0 +1,551 @@
+//! `mpx::trace` — always-on span tracing for the serve and trainer
+//! pipelines.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Cheap enough to leave on.**  Recording a span is: one atomic
+//!    load (enabled?), one atomic fetch-add (sequence number), one
+//!    shard mutex lock, one fixed-slot write into a preallocated
+//!    ring.  No allocation after [`Tracer::new`], no syscalls, no
+//!    formatting — timestamps are the [`Clock`]'s `Duration` offsets
+//!    and attributes are three raw `u64`s whose meaning is fixed per
+//!    [`SpanKind`].  The saturated-regime overhead is measured by
+//!    `benches/serve_throughput.rs` (`BENCH_trace.json`) and held
+//!    under 2%.
+//! 2. **Bounded memory.**  Each shard is a fixed-capacity ring that
+//!    drops the *oldest* span on overflow (a live service wants the
+//!    recent timeline); the drop count is kept so exports can say
+//!    what is missing.
+//! 3. **Deterministic under the virtual clock.**  The tracer reads
+//!    time through the same [`Clock`] the engine runs on, so the
+//!    simulation harness ([`crate::serve::sched::simulate`]) produces
+//!    bit-identical traces run-to-run, and tests assert span
+//!    arithmetic as exact equalities (queue-wait + service ==
+//!    observed latency — see `rust/tests/serve_sim.rs`).
+//!
+//! Exports (see [`chrome`]): Chrome trace-event JSON for Perfetto,
+//! the `GET /debug/trace` transport endpoint, and the
+//! [`ServiceSample`] records the ROADMAP's closed-loop planner
+//! consumes as its calibration input.
+
+pub mod chrome;
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::clock::Clock;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// The `[trace]` config table (see `docs/CONFIG.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Record spans at all.  Off by default: the engine behaves
+    /// identically either way, tracing only adds the record calls.
+    pub enabled: bool,
+    /// Ring capacity in spans, split across the tracer's shards.
+    /// Memory is `buffer_spans × size_of::<Span>()` (64 B), bounded
+    /// for the life of the process.
+    pub buffer_spans: usize,
+    /// Write a Chrome trace-event JSON file here at the end of the
+    /// run (`mpx serve --trace-out trace.json`; load in Perfetto).
+    pub trace_out: Option<String>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, buffer_spans: 65_536, trace_out: None }
+    }
+}
+
+impl TraceConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.enabled && self.buffer_spans == 0 {
+            anyhow::bail!("trace.buffer_spans must be ≥ 1 when enabled");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span model
+// ---------------------------------------------------------------------------
+
+/// What a span measures.  The taxonomy is fixed (an enum, not
+/// strings) so spans stay `Copy` and the hot path never formats.
+/// Attribute meaning per kind is documented on the variant; the
+/// Chrome exporter names them (`docs/OBSERVABILITY.md` has the full
+/// table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Instant: a request entered a lane queue.  `a`=lane, `b`=request id.
+    Admit,
+    /// Admission → dispatch into a batch.  `a`=lane, `b`=request id.
+    QueueWait,
+    /// Dispatch → completion, per request.  `a`=lane, `b`=request id.
+    Service,
+    /// Dispatch → completion, per *batch* — the calibration signal
+    /// ([`ServiceSample`]).  `a`=lane, `b`=bucket (padded rows),
+    /// `c`=real rows taken.
+    Execute,
+    /// Worker-side batch padding/packing.  `a`=lane, `b`=bucket,
+    /// `c`=real rows.
+    Pack,
+    /// Transport wrote the result chunk to the client socket.
+    /// `a`=lane, `b`=request id.
+    Egress,
+    /// One whole trainer step.  `a`=step index, `b`=grads finite (0/1).
+    TrainStep,
+    /// Trainer phase: parameter/input cast. `a`=step index.
+    Cast,
+    /// Trainer phase: forward. `a`=step index.
+    Forward,
+    /// Trainer phase: backward. `a`=step index.
+    Backward,
+    /// Trainer phase: fused unscale + finiteness scan. `a`=step index.
+    UnscaleScan,
+    /// Trainer phase: optimizer update. `a`=step index.
+    Optim,
+    /// Instant: the loss scale moved.  `a`=old scale (f32 bits),
+    /// `b`=new scale (f32 bits), `c`=reason (0 overflow backoff,
+    /// 1 periodic growth).
+    LossScale,
+}
+
+impl SpanKind {
+    /// Stable display name (Chrome event `name`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Service => "service",
+            SpanKind::Execute => "execute",
+            SpanKind::Pack => "pack",
+            SpanKind::Egress => "egress",
+            SpanKind::TrainStep => "train_step",
+            SpanKind::Cast => "cast",
+            SpanKind::Forward => "forward",
+            SpanKind::Backward => "backward",
+            SpanKind::UnscaleScan => "unscale_scan",
+            SpanKind::Optim => "optim",
+            SpanKind::LossScale => "loss_scale",
+        }
+    }
+
+    /// Attribute names for (`a`, `b`, `c`), in order (Chrome `args`).
+    pub fn attr_names(self) -> [&'static str; 3] {
+        match self {
+            SpanKind::Admit | SpanKind::QueueWait | SpanKind::Service => {
+                ["lane", "id", "_"]
+            }
+            SpanKind::Execute | SpanKind::Pack => ["lane", "bucket", "rows"],
+            SpanKind::Egress => ["lane", "id", "_"],
+            SpanKind::TrainStep => ["step", "finite", "_"],
+            SpanKind::Cast
+            | SpanKind::Forward
+            | SpanKind::Backward
+            | SpanKind::UnscaleScan
+            | SpanKind::Optim => ["step", "_", "_"],
+            SpanKind::LossScale => ["old_bits", "new_bits", "grew"],
+        }
+    }
+
+    /// Zero-duration marker kinds (exported as instants).
+    pub fn is_instant(self) -> bool {
+        matches!(self, SpanKind::Admit | SpanKind::LossScale)
+    }
+}
+
+/// One recorded span.  64 bytes, `Copy`: rings hold these inline and
+/// snapshots are `memcpy`s.  Times are [`Clock`] offsets (`Duration`
+/// since the clock's epoch), *not* wall datetimes — which is exactly
+/// what makes virtual-clock traces bit-deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start: Duration,
+    pub end: Duration,
+    /// Global record order (monotone across threads).
+    pub seq: u64,
+    /// First attribute — see [`SpanKind`] for meaning.
+    pub a: u64,
+    /// Second attribute.
+    pub b: u64,
+    /// Third attribute.
+    pub c: u64,
+}
+
+impl Span {
+    pub fn duration(&self) -> Duration {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+const PLACEHOLDER: Span = Span {
+    kind: SpanKind::Admit,
+    start: Duration::ZERO,
+    end: Duration::ZERO,
+    seq: 0,
+    a: 0,
+    b: 0,
+    c: 0,
+};
+
+// ---------------------------------------------------------------------------
+// Ring + Tracer
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity drop-oldest span ring.  `spans` is fully
+/// preallocated at construction; `write` wraps and the `dropped`
+/// counter says how many old spans the wrap overwrote.
+struct Ring {
+    spans: Vec<Span>,
+    /// Next write slot.
+    next: usize,
+    /// Live spans (≤ capacity).
+    len: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Ring {
+        Ring { spans: vec![PLACEHOLDER; cap], next: 0, len: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, span: Span) {
+        let cap = self.spans.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.len == cap {
+            self.dropped += 1; // overwriting the oldest
+        } else {
+            self.len += 1;
+        }
+        self.spans[self.next] = span;
+        self.next = (self.next + 1) % cap;
+    }
+
+    /// Live spans oldest-first.
+    fn drain_ordered(&self, out: &mut Vec<Span>) {
+        let cap = self.spans.len();
+        if cap == 0 {
+            return;
+        }
+        let start = (self.next + cap - self.len) % cap;
+        for k in 0..self.len {
+            out.push(self.spans[(start + k) % cap]);
+        }
+    }
+}
+
+/// How many independent rings a tracer keeps.  Threads hash onto
+/// shards so concurrent workers rarely contend on one mutex; a
+/// single-threaded run (the virtual-clock simulation) always lands on
+/// one shard and its ring order *is* record order.
+const SHARDS: usize = 16;
+
+/// The span recorder handle.  Cloned via `Arc` into every component
+/// that instruments itself; all methods take `&self`.
+pub struct Tracer {
+    clock: Arc<dyn Clock>,
+    enabled: AtomicBool,
+    seq: AtomicU64,
+    shards: Vec<Mutex<Ring>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.is_enabled())
+            .field("spans", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A tracer with `buffer_spans` total capacity split evenly
+    /// across the shards (each shard gets at least one slot).
+    pub fn new(clock: Arc<dyn Clock>, buffer_spans: usize) -> Tracer {
+        let per_shard = (buffer_spans / SHARDS).max(1);
+        Tracer {
+            clock,
+            enabled: AtomicBool::new(true),
+            seq: AtomicU64::new(0),
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(Ring::with_capacity(per_shard)))
+                .collect(),
+        }
+    }
+
+    /// Build from config: `None` when tracing is disabled, so callers
+    /// carry an `Option<Arc<Tracer>>` and pay nothing when off.
+    pub fn from_config(
+        clock: Arc<dyn Clock>,
+        cfg: &TraceConfig,
+    ) -> Option<Arc<Tracer>> {
+        cfg.enabled.then(|| Arc::new(Tracer::new(clock, cfg.buffer_spans)))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording at runtime (snapshot/export keeps working).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The tracer's clock — instrumentation sites read timestamps
+    /// here so engine and tracer share one time base.
+    pub fn now(&self) -> Duration {
+        self.clock.now()
+    }
+
+    /// Record a span with explicit timestamps (the caller read them
+    /// off the shared clock around the work being measured).
+    pub fn record(
+        &self,
+        kind: SpanKind,
+        start: Duration,
+        end: Duration,
+        a: u64,
+        b: u64,
+        c: u64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let span = Span { kind, start, end, seq, a, b, c };
+        let mut hasher = DefaultHasher::new();
+        std::thread::current().id().hash(&mut hasher);
+        let shard = (hasher.finish() as usize) % self.shards.len();
+        self.shards[shard].lock().unwrap().push(span);
+    }
+
+    /// Record an instant marker (`start == end == at`).
+    pub fn instant(&self, kind: SpanKind, at: Duration, a: u64, b: u64, c: u64) {
+        self.record(kind, at, at, a, b, c);
+    }
+
+    /// Live span count across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped to ring overflow (or recorded against a
+    /// zero-capacity ring).
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().dropped).sum()
+    }
+
+    /// Copy out every live span, ordered by `(start, seq)` — a total
+    /// deterministic order: `seq` is globally monotone, so even spans
+    /// sharing a start instant sort identically run-to-run under the
+    /// virtual clock.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            shard.lock().unwrap().drain_ordered(&mut out);
+        }
+        out.sort_by_key(|s| (s.start, s.seq));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServiceSample — the planner's calibration input
+// ---------------------------------------------------------------------------
+
+/// One measured batch execution, in exactly the shape the
+/// `[serve.planner]` linear service model (`overhead_us + per_row_us ×
+/// rows`) fits against: padded batch rows in, measured microseconds
+/// out.  Derived from [`SpanKind::Execute`] spans and persisted next
+/// to the serving artifacts (`service_samples.json`) so the
+/// ROADMAP's closed-loop planner has real data instead of config
+/// constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceSample {
+    /// Lane index (order matches the run's lane list).
+    pub lane: usize,
+    /// Padded rows executed (the bucket size — what the compiled
+    /// executable actually ran, hence what cost scales with).
+    pub batch_rows: usize,
+    /// Measured execution time, microseconds.
+    pub exec_us: u64,
+}
+
+/// Extract the calibration records from a span snapshot.
+pub fn service_samples(spans: &[Span]) -> Vec<ServiceSample> {
+    spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Execute)
+        .map(|s| ServiceSample {
+            lane: s.a as usize,
+            batch_rows: s.b as usize,
+            exec_us: s.duration().as_micros().min(u64::MAX as u128) as u64,
+        })
+        .collect()
+}
+
+/// Serialize samples as the documented JSON schema
+/// (`{"service_samples": [{"lane": .., "batch_rows": .., "exec_us": ..}]}`).
+pub fn samples_json(samples: &[ServiceSample]) -> Json {
+    let rows = samples
+        .iter()
+        .map(|s| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("lane".to_string(), Json::Num(s.lane as f64));
+            m.insert("batch_rows".to_string(), Json::Num(s.batch_rows as f64));
+            m.insert("exec_us".to_string(), Json::Num(s.exec_us as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("service_samples".to_string(), Json::Arr(rows));
+    Json::Obj(top)
+}
+
+/// Write `samples_json` to `path` (pretty enough: one compact line).
+pub fn write_service_samples(
+    path: &std::path::Path,
+    samples: &[ServiceSample],
+) -> anyhow::Result<()> {
+    std::fs::write(path, samples_json(samples).dump() + "\n")
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::clock::VirtualClock;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn test_tracer(cap: usize) -> Tracer {
+        Tracer::new(Arc::new(VirtualClock::new()), cap)
+    }
+
+    #[test]
+    fn records_and_snapshots_in_time_order() {
+        let t = test_tracer(1024);
+        t.record(SpanKind::Service, ms(5), ms(9), 0, 1, 0);
+        t.record(SpanKind::QueueWait, ms(1), ms(5), 0, 1, 0);
+        t.instant(SpanKind::Admit, ms(1), 0, 1, 0);
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].kind, SpanKind::QueueWait); // earlier seq wins tie
+        assert_eq!(spans[1].kind, SpanKind::Admit);
+        assert_eq!(spans[2].kind, SpanKind::Service);
+        assert_eq!(spans[0].duration(), ms(4));
+        assert_eq!(spans[2].duration(), ms(4));
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        // Single thread → single shard: per-shard capacity is
+        // buffer/SHARDS, so 32 total gives this thread exactly 2 slots.
+        let t = test_tracer(32);
+        for i in 0..5u64 {
+            t.record(SpanKind::Execute, ms(i), ms(i + 1), 0, 8, 8);
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        // the *newest* spans survive
+        assert_eq!(spans[0].start, ms(3));
+        assert_eq!(spans[1].start, ms(4));
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = test_tracer(64);
+        t.set_enabled(false);
+        t.record(SpanKind::Service, ms(0), ms(1), 0, 0, 0);
+        assert!(t.is_empty());
+        t.set_enabled(true);
+        t.record(SpanKind::Service, ms(0), ms(1), 0, 0, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn service_samples_come_from_execute_spans_only() {
+        let t = test_tracer(1024);
+        t.record(SpanKind::QueueWait, ms(0), ms(4), 1, 7, 0);
+        t.record(SpanKind::Execute, ms(4), ms(6), 1, 8, 5);
+        t.record(SpanKind::Execute, ms(6), ms(9), 0, 16, 16);
+        let samples = service_samples(&t.snapshot());
+        assert_eq!(
+            samples,
+            vec![
+                ServiceSample { lane: 1, batch_rows: 8, exec_us: 2000 },
+                ServiceSample { lane: 0, batch_rows: 16, exec_us: 3000 },
+            ]
+        );
+        let doc = Json::parse(&samples_json(&samples).dump()).unwrap();
+        let rows = doc.get("service_samples").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("batch_rows").unwrap().as_i64(), Some(8));
+        assert_eq!(rows[1].get("exec_us").unwrap().as_i64(), Some(3000));
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_every_span() {
+        let t = Arc::new(test_tracer(SHARDS * 64));
+        std::thread::scope(|scope| {
+            for w in 0..4u64 {
+                let t = t.clone();
+                scope.spawn(move || {
+                    for i in 0..16u64 {
+                        t.record(
+                            SpanKind::Service,
+                            ms(w * 100 + i),
+                            ms(w * 100 + i + 1),
+                            w,
+                            i,
+                            0,
+                        );
+                    }
+                });
+            }
+        });
+        let spans = t.snapshot();
+        assert_eq!(spans.len() as u64 + t.dropped(), 64);
+        // snapshot order is globally sorted
+        for pair in spans.windows(2) {
+            assert!(pair[0].start <= pair[1].start);
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = TraceConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.enabled = true;
+        cfg.buffer_spans = 0;
+        assert!(cfg.validate().is_err());
+        cfg.buffer_spans = 1;
+        assert!(cfg.validate().is_ok());
+        // from_config: disabled → no tracer
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        assert!(Tracer::from_config(clock.clone(), &TraceConfig::default())
+            .is_none());
+        assert!(Tracer::from_config(clock, &cfg).is_some());
+    }
+}

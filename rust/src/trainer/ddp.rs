@@ -33,6 +33,8 @@ use crate::runtime::{
     read_scalar_f32, read_scalar_pred, Artifact, ArtifactStore,
 };
 use crate::scaling::LossScaler;
+use crate::serve::clock::{Clock, WallClock};
+use crate::trace::{SpanKind, Tracer};
 
 pub struct DataParallelTrainer {
     grads_artifact: Arc<Artifact>,
@@ -44,6 +46,10 @@ pub struct DataParallelTrainer {
     pub step_index: u64,
     pub config: TrainConfig,
     num_shards: usize,
+    /// Time base for trace spans: `Duration` offsets since trainer
+    /// construction (the [`Tracer`] contract), not raw `Instant`s.
+    clock: Arc<WallClock>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl DataParallelTrainer {
@@ -94,6 +100,11 @@ impl DataParallelTrainer {
         );
         let scaler = LossScaler::new(config.precision.scaling_config());
 
+        let clock = Arc::new(WallClock::new());
+        let tracer = Tracer::from_config(
+            clock.clone() as Arc<dyn Clock>,
+            &config.trace,
+        );
         Ok(DataParallelTrainer {
             grads_artifact,
             masters,
@@ -103,7 +114,14 @@ impl DataParallelTrainer {
             step_index: 0,
             num_shards: config.shards,
             config,
+            clock,
+            tracer,
         })
+    }
+
+    /// The step-phase span recorder (`None` when `[trace]` is off).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     pub fn manifest(&self) -> &crate::pytree::Manifest {
@@ -113,6 +131,7 @@ impl DataParallelTrainer {
     /// One data-parallel step over global batch index `index`.
     pub fn step(&mut self, dataset: &SyntheticDataset) -> Result<StepRecord> {
         let t0 = Instant::now();
+        let span_start = self.clock.now();
         let gm = &self.grads_artifact.manifest;
         let per_shard_batch = gm
             .batch
@@ -213,6 +232,8 @@ impl DataParallelTrainer {
         // Non-finite shard gradients may contain inf/nan; the finite
         // flag already tells us, and the mean would poison masters, so
         // gate the reduce+update on global finiteness (paper §2.1 6a).
+        let step = self.step_index + 1;
+        let reduce_start = self.clock.now();
         let grads_finite = all_reduce_finite(&finites);
         if grads_finite {
             all_reduce_mean(&mut grads);
@@ -233,7 +254,28 @@ impl DataParallelTrainer {
                     scale,
                 );
             }
+            let optim_start = self.clock.now();
+            if let Some(t) = &self.tracer {
+                t.record(
+                    SpanKind::UnscaleScan,
+                    reduce_start,
+                    optim_start,
+                    step,
+                    0,
+                    0,
+                );
+            }
             self.optimizer.update(&mut self.masters, &grads[0]);
+            if let Some(t) = &self.tracer {
+                t.record(
+                    SpanKind::Optim,
+                    optim_start,
+                    self.clock.now(),
+                    step,
+                    0,
+                    0,
+                );
+            }
         } else {
             // Overflow step: one fused scan per poisoned shard says
             // *which* shard blew up and how — the §2.1 loss-scaling
@@ -248,9 +290,40 @@ impl DataParallelTrainer {
                     );
                 }
             }
+            if let Some(t) = &self.tracer {
+                t.record(
+                    SpanKind::UnscaleScan,
+                    reduce_start,
+                    self.clock.now(),
+                    step,
+                    0,
+                    0,
+                );
+            }
         }
         let applied = self.scaler.adjust(grads_finite);
         debug_assert_eq!(applied, grads_finite);
+        let new_scale = self.scaler.scale();
+        if let Some(t) = &self.tracer {
+            // `scale` is the pre-adjust value read at the top of step.
+            if new_scale != scale {
+                t.instant(
+                    SpanKind::LossScale,
+                    t.now(),
+                    scale.to_bits() as u64,
+                    new_scale.to_bits() as u64,
+                    (new_scale > scale) as u64,
+                );
+            }
+            t.record(
+                SpanKind::TrainStep,
+                span_start,
+                t.now(),
+                step,
+                grads_finite as u64,
+                0,
+            );
+        }
 
         self.step_index += 1;
         Ok(StepRecord {

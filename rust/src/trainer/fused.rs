@@ -20,6 +20,8 @@ use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_i32, read_scalar_f32, read_scalar_pred,
     Artifact, ArtifactStore,
 };
+use crate::serve::clock::{Clock, WallClock};
+use crate::trace::{SpanKind, Tracer};
 
 pub struct FusedTrainer {
     step_artifact: Arc<Artifact>,
@@ -28,6 +30,13 @@ pub struct FusedTrainer {
     n_state: usize,
     pub step_index: u64,
     pub config: TrainConfig,
+    /// Time base for trace spans (`Duration` offsets since
+    /// construction — the [`Tracer`] contract).
+    clock: Arc<WallClock>,
+    /// The whole step is one compiled HLO here, so only the
+    /// step-level span and loss-scale events are observable; the
+    /// per-phase spans live in the data-parallel trainer.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl FusedTrainer {
@@ -66,13 +75,25 @@ impl FusedTrainer {
             .execute(&[lit_scalar_i32(config.seed as i32)])
             .context("run init artifact")?;
 
+        let clock = Arc::new(WallClock::new());
+        let tracer = Tracer::from_config(
+            clock.clone() as Arc<dyn Clock>,
+            &config.trace,
+        );
         Ok(FusedTrainer {
             step_artifact,
             state,
             n_state,
             step_index: 0,
             config,
+            clock,
+            tracer,
         })
+    }
+
+    /// The step span recorder (`None` when `[trace]` is off).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     pub fn manifest(&self) -> &crate::pytree::Manifest {
@@ -97,6 +118,13 @@ impl FusedTrainer {
     /// Run one training step on `batch`.
     pub fn step(&mut self, batch: &Batch) -> Result<StepRecord> {
         let t0 = Instant::now();
+        let span_start = self.clock.now();
+        // Read the pre-step scale only when someone is listening —
+        // it costs a device→host scalar transfer.
+        let old_scale = match &self.tracer {
+            Some(_) => Some(self.loss_scale()?),
+            None => None,
+        };
         let [images, labels] = self.batch_literals(batch)?;
 
         let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
@@ -132,11 +160,34 @@ impl FusedTrainer {
         self.state = outputs;
         self.step_index += 1;
 
+        let loss_scale = self.loss_scale()?;
+        if let Some(t) = &self.tracer {
+            if let Some(old) = old_scale {
+                if loss_scale != old {
+                    t.instant(
+                        SpanKind::LossScale,
+                        t.now(),
+                        old.to_bits() as u64,
+                        loss_scale.to_bits() as u64,
+                        (loss_scale > old) as u64,
+                    );
+                }
+            }
+            t.record(
+                SpanKind::TrainStep,
+                span_start,
+                t.now(),
+                self.step_index,
+                grads_finite as u64,
+                0,
+            );
+        }
+
         Ok(StepRecord {
             step: self.step_index,
             loss,
             grads_finite,
-            loss_scale: self.loss_scale()?,
+            loss_scale,
             step_time: t0.elapsed(),
         })
     }

@@ -416,7 +416,7 @@ fn pooled_padded_images_match_allocating_path() {
             )
         })
         .collect();
-    let batch = FormedBatch { requests: reqs, bucket: 8 };
+    let batch = FormedBatch { requests: reqs, bucket: 8, dispatched: Duration::ZERO };
     let want = batch.padded_images();
     let pool = BufferPool::new();
     let mut buf = pool.take_f32(0);

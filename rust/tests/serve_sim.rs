@@ -15,6 +15,8 @@ use mpx::serve::{
     loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
     SchedPolicy, SimReport, SimSpec,
 };
+use mpx::trace::{chrome, service_samples, ServiceSample, Span, SpanKind};
+use mpx::util::json::Json;
 
 fn ms(v: u64) -> Duration {
     Duration::from_millis(v)
@@ -55,6 +57,7 @@ fn flush_on_timeout_fires_at_exactly_flush_timeout() {
         // dispatch can only come from the flush timer.
         stop_at: Some(Duration::from_secs(1)),
         record_detail: true,
+        trace: false,
     })
     .unwrap();
 
@@ -106,6 +109,7 @@ fn continuous_refill_keeps_occupancy_above_floor_under_poisson_load() {
         exec_per_row: Duration::from_micros(150),
         stop_at: None,
         record_detail: false,
+        trace: false,
     };
     let rep = simulate(spec.clone()).unwrap();
     assert_eq!(rep.completed(), 3000, "under-capacity load must all finish");
@@ -144,6 +148,7 @@ fn deadline_miss_accounting_is_exact() {
         exec_per_row: Duration::ZERO,
         stop_at: None,
         record_detail: true,
+        trace: false,
     })
     .unwrap();
 
@@ -183,6 +188,7 @@ fn two_lanes_with_2_to_1_weights_get_2_to_1_service_under_saturation() {
         exec_per_row: Duration::ZERO,
         stop_at: Some(ms(600)),
         record_detail: true,
+        trace: false,
     })
     .unwrap();
 
@@ -223,6 +229,7 @@ fn autoscaler_grows_the_pool_on_backlog_and_completes_everything() {
         exec_per_row: Duration::ZERO,
         stop_at: None,
         record_detail: false,
+        trace: false,
     })
     .unwrap();
 
@@ -273,6 +280,7 @@ fn planner_buckets_meet_the_slo_the_static_bucket_list_misses() {
             exec_per_row: model.per_row,
             stop_at,
             record_detail: true,
+            trace: false,
         })
         .unwrap()
     };
@@ -381,6 +389,7 @@ fn planner_saturated_lane_plan_sustains_full_buckets_in_the_sim() {
         exec_per_row: model.per_row,
         stop_at: None,
         record_detail: false,
+        trace: false,
     })
     .unwrap();
     assert_eq!(rep.completed(), 64);
@@ -419,6 +428,7 @@ fn continuous_beats_form_first_on_identical_simulated_load() {
             exec_per_row: Duration::from_micros(130),
             stop_at: Some(Duration::from_secs(3600)),
             record_detail: false,
+            trace: false,
         })
         .unwrap()
     };
@@ -447,4 +457,80 @@ fn continuous_beats_form_first_on_identical_simulated_load() {
         continuous.throughput_rps(),
         form_first.throughput_rps()
     );
+}
+
+#[test]
+fn trace_spans_tile_observed_latency_exactly() {
+    // The flush-timeout scenario, traced: three requests trickle in at
+    // t = 0, 1, 2 ms, dispatch together when the 5 ms flush fires, and
+    // complete at t = 6 ms.  Under the virtual clock the span algebra
+    // must hold as *equalities* on exact instants — for every request,
+    // queue_wait + service == done − enqueued — and the whole trace
+    // must be bit-identical run-to-run.
+    let mk = || SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("a", 1, &[8], ms(5), Duration::from_secs(1)),
+            arrivals: vec![ms(0), ms(1), ms(2)],
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: ms(1),
+        exec_per_row: Duration::ZERO,
+        stop_at: Some(Duration::from_secs(1)),
+        record_detail: true,
+        trace: true,
+    };
+    let rep = simulate(mk()).unwrap();
+    assert_eq!(rep.completions.len(), 3);
+
+    let span_of = |kind: SpanKind, id: u64| -> Span {
+        rep.spans
+            .iter()
+            .find(|s| s.kind == kind && s.b == id)
+            .copied()
+            .unwrap_or_else(|| panic!("no {kind:?} span for request {id}"))
+    };
+
+    for c in &rep.completions {
+        let adm = span_of(SpanKind::Admit, c.id);
+        let qw = span_of(SpanKind::QueueWait, c.id);
+        let sv = span_of(SpanKind::Service, c.id);
+        // The three spans tile the observed request latency exactly:
+        // admit at enqueue, queue-wait up to the dispatch pivot,
+        // service to completion.  Equalities, not tolerances.
+        assert_eq!(adm.start, c.enqueued);
+        assert_eq!(adm.duration(), Duration::ZERO);
+        assert_eq!(qw.start, c.enqueued);
+        assert_eq!(qw.end, sv.start);
+        assert_eq!(sv.end, c.done);
+        assert_eq!(qw.duration() + sv.duration(), c.done - c.enqueued);
+        // All three dispatched at the flush instant, 1 ms service.
+        assert_eq!(qw.end, ms(5));
+        assert_eq!(sv.duration(), ms(1));
+    }
+
+    // Exactly one execute span — the dispatched batch — carrying the
+    // planner's calibration attributes (lane 0, bucket 8, take 3).
+    let execs: Vec<&Span> =
+        rep.spans.iter().filter(|s| s.kind == SpanKind::Execute).collect();
+    assert_eq!(execs.len(), 1);
+    assert_eq!((execs[0].start, execs[0].end), (ms(5), ms(6)));
+    assert_eq!((execs[0].a, execs[0].b, execs[0].c), (0, 8, 3));
+    let samples = service_samples(&rep.spans);
+    assert_eq!(
+        samples,
+        vec![ServiceSample { lane: 0, batch_rows: 8, exec_us: 1000 }]
+    );
+
+    // Bit-deterministic: replaying the same spec yields the same
+    // spans, field for field.
+    assert_eq!(simulate(mk()).unwrap().spans, rep.spans);
+
+    // Chrome export: parses back through the crate's own JSON parser
+    // unchanged, and every B event closes with an E on its track.
+    let doc = chrome::chrome_trace(&rep.spans, 0);
+    let parsed = Json::parse(&doc.dump()).unwrap();
+    assert_eq!(parsed, doc);
+    let pairs = chrome::check_nesting(&parsed).unwrap();
+    assert_eq!(pairs, rep.spans.len());
 }

@@ -298,6 +298,7 @@ fn streamed_completions_fire_exactly_once_per_admitted_request() {
             autoscale: AutoscalePolicy::fixed(2),
             open_loop: false,
             seed: 3,
+            trace: mpx::trace::TraceConfig::default(),
         },
         vec![lane("a", 2), lane("b", 1)],
         Arc::new(WallClock::new()),
@@ -433,6 +434,7 @@ fn sim_case(
         exec_per_row: Duration::from_micros(40),
         stop_at: None,
         record_detail: true,
+        trace: false,
     })
     .unwrap()
 }
