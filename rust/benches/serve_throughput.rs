@@ -30,6 +30,12 @@
 //! replays — into `BENCH_trace.json`, and emits `trace_sim.json`, a
 //! deterministic sim-produced Chrome trace that CI re-validates.
 //!
+//! A fifth section exercises the network transport itself over
+//! loopback — one connection per request vs keep-alive reuse vs
+//! pipelined windows against the event-driven reactor, with a trivial
+//! echo executor so transport costs dominate — into
+//! `BENCH_transport.json`.
+//!
 //! `MPX_BENCH_SMOKE=1` shrinks the simulated request count so CI can
 //! emit the report in seconds.
 
@@ -494,6 +500,211 @@ fn trace_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Real-socket regimes against the reactor transport: one connection
+/// per request vs keep-alive reuse vs pipelined windows, over
+/// loopback with an echo executor so the transport dominates the
+/// cost.  Writes `BENCH_transport.json`; fails if keep-alive does not
+/// beat one-connection-per-request on requests/sec.
+fn transport_section() -> anyhow::Result<()> {
+    use mpx::config::TransportConfig;
+    use mpx::serve::transport::client::{infer_body_json, Client};
+    use mpx::serve::transport::Server;
+    use mpx::serve::BatchExecutor;
+
+    struct EchoExec;
+    impl BatchExecutor for EchoExec {
+        fn execute(
+            &mut self,
+            images: &[f32],
+            _batch: usize,
+        ) -> anyhow::Result<Vec<f32>> {
+            Ok(images.to_vec())
+        }
+    }
+
+    let mut report = JsonReport::new("transport");
+    let smoke = std::env::var("MPX_BENCH_SMOKE").as_deref() == Ok("1");
+    let threads = 6usize;
+    let per_thread = if smoke { 40 } else { 334 };
+    let total = threads * per_thread;
+    const ELEMS: usize = 8;
+    const WINDOW: usize = 8;
+
+    let cfg = TransportConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: 256,
+        read_timeout_ms: 5_000,
+        request_deadline_ms: 10_000,
+        idle_timeout_ms: 30_000,
+        max_pipelined: WINDOW,
+        drain_deadline_ms: 5_000,
+    };
+    let server = Server::bind(&cfg)?;
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let lanes = vec![LaneSpec {
+        name: "bench/chat".into(),
+        weight: 1,
+        batcher: BatcherConfig::new(
+            BUCKETS.to_vec(),
+            Duration::from_millis(1),
+        )?,
+        queue_capacity: 4096,
+        deadline: Duration::from_secs(5),
+    }];
+    let join = std::thread::spawn(move || {
+        server.run(lanes, WORKERS, SchedPolicy::Continuous, ELEMS, |_, _| {
+            Ok(EchoExec)
+        })
+    });
+    let img: Vec<f32> = (0..ELEMS).map(|i| i as f32).collect();
+
+    // Run one regime across `threads` closed-loop clients; returns
+    // (requests/s, p50 ms, p99 ms) over every request.
+    let run = |mode: &'static str| -> anyhow::Result<(f64, f64, f64)> {
+        let t0 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for _ in 0..threads {
+            let addr = addr.clone();
+            let img = img.clone();
+            let work = move || -> anyhow::Result<Vec<f64>> {
+                let timeout = Duration::from_secs(10);
+                let client = Client::new(addr).with_timeout(timeout);
+                let mut lat = Vec::with_capacity(per_thread);
+                match mode {
+                    "one_shot" => {
+                        for _ in 0..per_thread {
+                            let q0 = std::time::Instant::now();
+                            let reply = client.infer("chat", &img)?;
+                            anyhow::ensure!(reply.finite, "bad logits");
+                            lat.push(q0.elapsed().as_secs_f64());
+                        }
+                    }
+                    "keep_alive" => {
+                        let mut conn = client.connect_keep_alive()?;
+                        for _ in 0..per_thread {
+                            let q0 = std::time::Instant::now();
+                            let reply = conn.infer("chat", &img)?;
+                            anyhow::ensure!(reply.finite, "bad logits");
+                            lat.push(q0.elapsed().as_secs_f64());
+                        }
+                    }
+                    _ => {
+                        let mut conn = client.connect_keep_alive()?;
+                        let body = infer_body_json("chat", &img);
+                        let mut left = per_thread;
+                        while left > 0 {
+                            let k = left.min(WINDOW);
+                            let q0 = std::time::Instant::now();
+                            for _ in 0..k {
+                                conn.send(
+                                    "POST",
+                                    "/v1/infer",
+                                    "application/json",
+                                    &[],
+                                    body.as_bytes(),
+                                )?;
+                            }
+                            for _ in 0..k {
+                                let resp = conn.read_response()?;
+                                anyhow::ensure!(
+                                    resp.status == 200,
+                                    "pipelined status {}",
+                                    resp.status
+                                );
+                            }
+                            let per = q0.elapsed().as_secs_f64() / k as f64;
+                            for _ in 0..k {
+                                lat.push(per);
+                            }
+                            left -= k;
+                        }
+                    }
+                }
+                Ok(lat)
+            };
+            joins.push(std::thread::spawn(work));
+        }
+        let mut lat: Vec<f64> = Vec::with_capacity(total);
+        for j in joins {
+            lat.extend(j.join().expect("bench client thread panicked")?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_by(f64::total_cmp);
+        let q = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize] * 1e3;
+        Ok((total as f64 / wall.max(1e-9), q(0.50), q(0.99)))
+    };
+
+    println!("\n=== transport: one-shot vs keep-alive vs pipelined ===");
+    println!("regime,requests,connections,requests_per_s,p50_ms,p99_ms");
+    let (os_rps, os_p50, os_p99) = run("one_shot")?;
+    println!("one_shot,{total},{total},{os_rps:.0},{os_p50:.3},{os_p99:.3}");
+    let (ka_rps, ka_p50, ka_p99) = run("keep_alive")?;
+    println!(
+        "keep_alive,{total},{threads},{ka_rps:.0},{ka_p50:.3},{ka_p99:.3}"
+    );
+    let (pl_rps, pl_p50, pl_p99) = run("pipelined")?;
+    println!(
+        "pipelined,{total},{threads},{pl_rps:.0},{pl_p50:.3},{pl_p99:.3}"
+    );
+
+    handle.shutdown();
+    join.join().expect("bench server thread panicked")?;
+
+    report.entry(
+        "transport_one_shot",
+        &[
+            ("requests", total as f64),
+            ("connections", total as f64),
+            ("connections_per_s", os_rps),
+            ("requests_per_s", os_rps),
+            ("p50_ms", os_p50),
+            ("p99_ms", os_p99),
+        ],
+    );
+    report.entry(
+        "transport_keep_alive",
+        &[
+            ("requests", total as f64),
+            ("connections", threads as f64),
+            ("requests_per_s", ka_rps),
+            ("p50_ms", ka_p50),
+            ("p99_ms", ka_p99),
+        ],
+    );
+    report.entry(
+        "transport_pipelined",
+        &[
+            ("requests", total as f64),
+            ("connections", threads as f64),
+            ("window", WINDOW as f64),
+            ("requests_per_s", pl_rps),
+            ("p50_ms", pl_p50),
+            ("p99_ms", pl_p99),
+        ],
+    );
+    let speedup = ka_rps / os_rps.max(1e-9);
+    report.entry(
+        "transport_keepalive_speedup",
+        &[
+            ("requests_per_s_ratio", speedup),
+            ("pipelined_ratio", pl_rps / os_rps.max(1e-9)),
+        ],
+    );
+    println!(
+        "# keep-alive {speedup:.2}x one-shot on requests/s; pipelined \
+         {:.2}x",
+        pl_rps / os_rps.max(1e-9)
+    );
+    anyhow::ensure!(
+        speedup > 1.0,
+        "keep-alive ({ka_rps:.0} req/s) must beat one connection per \
+         request ({os_rps:.0} req/s)"
+    );
+    println!("# wrote {}", report.write()?);
+    Ok(())
+}
+
 #[cfg(feature = "xla")]
 fn artifact_section(report: &mut JsonReport) -> anyhow::Result<()> {
     let mut store = match ArtifactStore::open_default() {
@@ -626,6 +837,7 @@ fn main() -> anyhow::Result<()> {
     sim_section(&mut report);
     planner_section()?;
     trace_section()?;
+    transport_section()?;
     #[cfg(feature = "xla")]
     artifact_section(&mut report)?;
     #[cfg(not(feature = "xla"))]

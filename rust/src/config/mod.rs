@@ -395,12 +395,25 @@ pub struct TransportConfig {
     /// Concurrent connections served; connections beyond the cap are
     /// turned away with `503` before their request is read.
     pub max_connections: usize,
-    /// Socket read timeout, applied per read call — an idle client
-    /// is dropped after one timeout.  A deliberately trickling
-    /// client can stretch a request across many reads (each under
-    /// the timeout); whole-request deadlines are a transport
-    /// follow-up (see ROADMAP).
+    /// Inter-byte gap budget while a request is being received: a
+    /// connection that goes this long without delivering another
+    /// byte *mid-request* is evicted with `408`.  Idle keep-alive
+    /// connections between requests are governed by
+    /// `idle_timeout_ms` instead.
     pub read_timeout_ms: u64,
+    /// Whole-request deadline: from the first byte of a request to
+    /// its complete parse.  A trickling (slowloris) client that
+    /// keeps each inter-byte gap under `read_timeout_ms` is still
+    /// evicted with `408` when this budget runs out.
+    pub request_deadline_ms: u64,
+    /// Idle budget for a keep-alive connection sitting between
+    /// requests; on expiry the connection is closed silently (no
+    /// request means no one to send a status to).
+    pub idle_timeout_ms: u64,
+    /// Max pipelined requests in flight per connection; beyond the
+    /// cap the reactor stops reading the socket (backpressure) until
+    /// responses drain.
+    pub max_pipelined: usize,
     /// Graceful-drain budget: after shutdown is requested, pending
     /// streams get this long to flush before they are abandoned with
     /// an error chunk.
@@ -413,6 +426,9 @@ impl Default for TransportConfig {
             addr: "127.0.0.1:7878".into(),
             max_connections: 256,
             read_timeout_ms: 5_000,
+            request_deadline_ms: 30_000,
+            idle_timeout_ms: 60_000,
+            max_pipelined: 32,
             drain_deadline_ms: 10_000,
         }
     }
@@ -421,6 +437,14 @@ impl Default for TransportConfig {
 impl TransportConfig {
     pub fn read_timeout(&self) -> Duration {
         Duration::from_millis(self.read_timeout_ms)
+    }
+
+    pub fn request_deadline(&self) -> Duration {
+        Duration::from_millis(self.request_deadline_ms)
+    }
+
+    pub fn idle_timeout(&self) -> Duration {
+        Duration::from_millis(self.idle_timeout_ms)
     }
 
     pub fn drain_deadline(&self) -> Duration {
@@ -436,6 +460,15 @@ impl TransportConfig {
         }
         if self.read_timeout_ms == 0 {
             bail!("serve.transport: read_timeout_ms must be ≥ 1");
+        }
+        if self.request_deadline_ms == 0 {
+            bail!("serve.transport: request_deadline_ms must be ≥ 1");
+        }
+        if self.idle_timeout_ms == 0 {
+            bail!("serve.transport: idle_timeout_ms must be ≥ 1");
+        }
+        if self.max_pipelined == 0 {
+            bail!("serve.transport: max_pipelined must be ≥ 1");
         }
         if self.drain_deadline_ms == 0 {
             bail!("serve.transport: drain_deadline_ms must be ≥ 1");
@@ -801,6 +834,15 @@ impl ServeConfig {
         if let Some(v) = doc.get_int("serve.transport.read_timeout_ms") {
             self.transport.read_timeout_ms = v.max(0) as u64;
         }
+        if let Some(v) = doc.get_int("serve.transport.request_deadline_ms") {
+            self.transport.request_deadline_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("serve.transport.idle_timeout_ms") {
+            self.transport.idle_timeout_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("serve.transport.max_pipelined") {
+            self.transport.max_pipelined = v.max(0) as usize;
+        }
         if let Some(v) = doc.get_int("serve.transport.drain_deadline_ms") {
             self.transport.drain_deadline_ms = v.max(0) as u64;
         }
@@ -1139,6 +1181,9 @@ workers = 2
 addr = "0.0.0.0:9000"
 max_connections = 64
 read_timeout_ms = 2500
+request_deadline_ms = 12000
+idle_timeout_ms = 45000
+max_pipelined = 8
 drain_deadline_ms = 1500
 "#;
         let path = std::env::temp_dir().join("mpx_serve_transport_cfg.toml");
@@ -1149,14 +1194,28 @@ drain_deadline_ms = 1500
         assert_eq!(cfg.transport.addr, "0.0.0.0:9000");
         assert_eq!(cfg.transport.max_connections, 64);
         assert_eq!(cfg.transport.read_timeout_ms, 2500);
+        assert_eq!(cfg.transport.request_deadline_ms, 12000);
+        assert_eq!(cfg.transport.idle_timeout_ms, 45000);
+        assert_eq!(cfg.transport.max_pipelined, 8);
         assert_eq!(cfg.transport.drain_deadline_ms, 1500);
         assert_eq!(
             cfg.transport.read_timeout(),
             Duration::from_millis(2500)
         );
+        assert_eq!(
+            cfg.transport.request_deadline(),
+            Duration::from_millis(12000)
+        );
+        assert_eq!(
+            cfg.transport.idle_timeout(),
+            Duration::from_millis(45000)
+        );
         // Untouched configs keep the defaults and validate.
         let d = TransportConfig::default();
         assert_eq!(d.addr, "127.0.0.1:7878");
+        assert_eq!(d.request_deadline_ms, 30_000);
+        assert_eq!(d.idle_timeout_ms, 60_000);
+        assert_eq!(d.max_pipelined, 32);
         d.validate().unwrap();
     }
 
@@ -1165,6 +1224,9 @@ drain_deadline_ms = 1500
         let bad = [
             TransportConfig { max_connections: 0, ..Default::default() },
             TransportConfig { read_timeout_ms: 0, ..Default::default() },
+            TransportConfig { request_deadline_ms: 0, ..Default::default() },
+            TransportConfig { idle_timeout_ms: 0, ..Default::default() },
+            TransportConfig { max_pipelined: 0, ..Default::default() },
             TransportConfig { drain_deadline_ms: 0, ..Default::default() },
             TransportConfig { addr: String::new(), ..Default::default() },
         ];

@@ -41,12 +41,14 @@ const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-r
                  [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
                  [--deadline-ms T] [--seed S] [--config cfg.toml]
                  [--listen ADDR]  serve over HTTP instead of synthetic load:
-                           POST /v1/infer streams each completion back the
-                           moment its batch finishes; GET /healthz + /metrics
-                           (Prometheus) + /debug/trace (when tracing is on);
-                           SIGINT drains gracefully.  Knobs in
-                           [serve.transport] (max_connections, read/drain
-                           timeouts)
+                           an event-driven reactor multiplexes keep-alive and
+                           pipelined connections on one thread; POST /v1/infer
+                           streams each completion back the moment its batch
+                           finishes; GET /healthz + /metrics (Prometheus) +
+                           /debug/trace (when tracing is on); SIGINT drains
+                           gracefully.  Knobs in [serve.transport]
+                           (max_connections, max_pipelined, read/request/
+                           idle/drain timeouts)
                  [--trace-out PATH]  enable span tracing and write a Chrome
                            trace-event JSON file at the end of the run (load
                            it in Perfetto); ring size via [trace] buffer_spans

@@ -47,12 +47,15 @@
 //! * [`loadgen`] — deterministic Poisson arrival schedules, merged
 //!   across lanes.
 //! * [`transport`] — the HTTP/1.1 network layer: `mpx serve
-//!   --listen` accepts `POST /v1/infer`, streams each completion
-//!   back over chunked transfer encoding the moment continuous
-//!   batching frees its slot, maps admission control onto status
-//!   codes (429/503/404), and exports `GET /healthz` + `GET
-//!   /metrics` (Prometheus); `transport::client` is the std-only
-//!   client the loadgen and the integration tests drive it with.
+//!   --listen` runs a single-threaded poll reactor (keep-alive and
+//!   pipelined connections, whole-request read deadlines, a
+//!   connection budget decoupled from the worker pool) that accepts
+//!   `POST /v1/infer`, streams each completion back over chunked
+//!   transfer encoding the moment continuous batching frees its
+//!   slot, maps admission control onto status codes (429/503/404),
+//!   and exports `GET /healthz` + `GET /metrics` (Prometheus);
+//!   `transport::client` is the std-only client the loadgen and the
+//!   integration tests drive it with.
 //!
 //! Entry points: [`run`] (single lane, any executor — tests use a
 //! fake), [`run_lanes`] (multi-model), and `run_with_artifacts`
@@ -890,6 +893,10 @@ pub fn run_transport_with_artifacts(
     transport::install_sigint();
     let mut server = transport::Server::bind(&cfg.transport)?;
     server.set_trace(cfg.trace.clone());
+    // Autoscale rides the transport arrival path: admissions feed
+    // `Scheduler::poll_autoscale` from the reactor, so the pool
+    // starts at `min_workers` and grows with real traffic.
+    server.set_autoscale(autoscale_policy(cfg));
     eprintln!(
         "[mpx] serve: listening on http://{} | {} lanes ({}), {} workers | \
          POST /v1/infer, GET /healthz, GET /metrics{} | Ctrl-C drains and \

@@ -614,7 +614,10 @@ impl Scheduler {
     /// Compare backlog to the autoscale policy.  `Spawn(n)` asks the
     /// engine to add workers (it must `register_workers` them);
     /// `Retire(n)` is delivered to workers through
-    /// [`Work::Retire`] grants.
+    /// [`Work::Retire`] grants.  Callers poll this on their arrival
+    /// path — the load-generator engine after each paced admission,
+    /// and the network transport's reactor on every tick that
+    /// admitted at least one request.
     pub fn poll_autoscale(&self) -> ScaleOp {
         let depth = self.total_depth();
         let mut st = self.state.lock().unwrap();

@@ -2,11 +2,19 @@
 //! the server in [`super`], shared by the network load generator
 //! ([`drive`]) and the integration tests.
 //!
-//! One request per connection (mirroring the server), with explicit
-//! connect/read timeouts.  [`Client::open`] exposes the raw streamed
-//! response (status, headers, then chunk-at-a-time) so tests can
-//! observe — or abandon — a stream mid-flight; [`Client::infer`] is
-//! the convenient "send an image, get the logits" wrapper.
+//! Two modes, with explicit connect/read timeouts on both:
+//!
+//! * [`Client`] — one request per connection (`Connection: close`).
+//!   [`Client::open`] exposes the raw streamed response (status,
+//!   headers, then chunk-at-a-time) so tests can observe — or
+//!   abandon — a stream mid-flight; [`Client::infer`] is the
+//!   convenient "send an image, get the logits" wrapper.
+//! * [`Connection`] — a persistent keep-alive connection
+//!   ([`Client::connect_keep_alive`]).  [`Connection::request`]
+//!   round-trips on the reused socket; [`Connection::send`] followed
+//!   by [`Connection::read_response`] pipelines — several requests on
+//!   the wire before the first response is read, answered strictly in
+//!   order by the server's reactor.
 
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -266,6 +274,118 @@ impl Client {
             "application/octet-stream",
             &[("X-Mpx-Lane", lane)],
             &body,
+        )?;
+        reply_from_response(&resp)
+    }
+
+    /// Open a persistent keep-alive connection to the server.
+    pub fn connect_keep_alive(&self) -> Result<Connection> {
+        let stream = self.connect()?;
+        let read_half = stream.try_clone().context("clone read half")?;
+        Ok(Connection {
+            addr: self.addr.clone(),
+            stream,
+            reader: BufReader::new(read_half),
+        })
+    }
+}
+
+/// A persistent HTTP/1.1 keep-alive connection.  Requests reuse one
+/// socket; [`send`](Connection::send) without an immediate
+/// [`read_response`](Connection::read_response) pipelines.  Any I/O
+/// or framing error poisons the connection — drop it and
+/// [`Client::connect_keep_alive`] again.
+pub struct Connection {
+    addr: String,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Connection {
+    /// Write one request, keeping the connection open for more.
+    /// Responses to pipelined sends arrive strictly in send order.
+    pub fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<()> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\n",
+            self.addr
+        );
+        if !body.is_empty() || method == "POST" {
+            head.push_str(&format!(
+                "Content-Type: {content_type}\r\nContent-Length: {}\r\n",
+                body.len()
+            ));
+        }
+        for (name, value) in extra {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read the next complete response off the connection (the
+    /// earliest [`send`](Connection::send) not yet answered).
+    pub fn read_response(&mut self) -> Result<Response> {
+        let head = http::read_response_head(&mut self.reader)
+            .context("read response head")?;
+        let mut chunks = Vec::new();
+        if head.is_chunked() {
+            while let Some(chunk) = http::read_chunk(&mut self.reader)
+                .context("read response chunk")?
+            {
+                chunks.push(chunk);
+            }
+        } else {
+            let len = head
+                .header("content-length")
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(0);
+            if len > 0 {
+                chunks.push(
+                    http::read_sized_body(&mut self.reader, len)
+                        .context("read response body")?,
+                );
+            }
+        }
+        Ok(Response {
+            status: head.status,
+            headers: head.headers,
+            chunks,
+        })
+    }
+
+    /// One round trip on the reused socket.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<Response> {
+        self.send(method, path, content_type, extra, body)?;
+        self.read_response()
+    }
+
+    /// JSON inference on the reused socket: send, then stream until
+    /// the result line.
+    pub fn infer(&mut self, lane: &str, image: &[f32]) -> Result<InferReply> {
+        let body = infer_body_json(lane, image);
+        let resp = self.request(
+            "POST",
+            "/v1/infer",
+            "application/json",
+            &[],
+            body.as_bytes(),
         )?;
         reply_from_response(&resp)
     }

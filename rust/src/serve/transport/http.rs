@@ -1,16 +1,23 @@
 //! Minimal HTTP/1.1 wire protocol — request parsing, response
-//! writing, and chunked transfer encoding — over plain `std::io`
-//! streams.  No external dependencies; exactly the subset the
-//! transport server and [`client`](crate::serve::transport::client)
-//! need:
+//! writing, and chunked transfer encoding — over plain bytes and
+//! `std::io` streams.  No external dependencies; exactly the subset
+//! the transport server and
+//! [`client`](crate::serve::transport::client) need:
 //!
-//! * request line + headers + `Content-Length` bodies (chunked
-//!   *request* bodies are rejected — inference payloads are always
-//!   sized up front);
+//! * an incremental [`RequestParser`] for the nonblocking reactor:
+//!   feed whatever the socket produced, get complete requests out —
+//!   CRLFs, header lines, and chunk-size lines may be split across
+//!   reads at any byte;
+//! * request line + headers + `Content-Length` or chunked request
+//!   bodies;
 //! * `Expect: 100-continue` (curl sends it for bodies over 1 KiB);
 //! * fixed (`Content-Length`) and streamed (`Transfer-Encoding:
-//!   chunked`) responses, one request per connection
-//!   (`Connection: close`).
+//!   chunked`) responses, with the `Connection` header chosen per
+//!   response — HTTP/1.1 keep-alive is the default, and requests
+//!   carrying `Connection: close` / `keep-alive` are honored via
+//!   [`HttpRequest::wants_keep_alive`];
+//! * a blocking [`read_request`] over `BufRead` for the client-side
+//!   tests and tooling that still read whole messages.
 //!
 //! Everything is pure byte-in/byte-out and unit-tested against
 //! in-memory cursors; the socket handling lives in the server/client
@@ -67,6 +74,8 @@ pub struct HttpRequest {
     /// `(lowercase-name, value)` in arrival order.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// `HTTP/1.1` (or later 1.x) — keep-alive by default.
+    pub http11: bool,
 }
 
 impl HttpRequest {
@@ -85,6 +94,25 @@ impl HttpRequest {
             (k == key).then_some(v)
         })
     }
+
+    /// Should the connection stay open after this request?  HTTP/1.1
+    /// defaults to keep-alive, HTTP/1.0 to close; a `Connection`
+    /// header carrying `close` or `keep-alive` tokens overrides the
+    /// default (last recognized token wins).
+    pub fn wants_keep_alive(&self) -> bool {
+        let mut keep = self.http11;
+        if let Some(v) = self.header("connection") {
+            for token in v.split(',') {
+                let token = token.trim();
+                if token.eq_ignore_ascii_case("close") {
+                    keep = false;
+                } else if token.eq_ignore_ascii_case("keep-alive") {
+                    keep = true;
+                }
+            }
+        }
+        keep
+    }
 }
 
 /// First value of `name` in a `(lowercase-name, value)` header list.
@@ -94,6 +122,33 @@ pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str
         .iter()
         .find(|(n, _)| *n == name)
         .map(|(_, v)| v.as_str())
+}
+
+/// Split a request line into `(method, path, query, http11)`.
+fn parse_request_line(
+    line: &str,
+) -> Result<(String, String, Option<String>, bool), HttpError> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| malformed("empty request line"))?;
+    let target = parts.next().ok_or_else(|| malformed("missing path"))?;
+    let version = parts.next().ok_or_else(|| malformed("missing version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("unsupported version {version:?}")));
+    }
+    let http11 = version != "HTTP/1.0";
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok((method.to_string(), path, query, http11))
+}
+
+/// Split one `Name: value` header line, lowercasing the name.
+fn parse_header_line(line: &str) -> Result<(String, String), HttpError> {
+    let (name, value) = line
+        .split_once(':')
+        .ok_or_else(|| malformed(format!("bad header line {line:?}")))?;
+    Ok((name.trim().to_ascii_lowercase(), value.trim().to_string()))
 }
 
 /// Read one CRLF (or bare-LF) terminated line, without the
@@ -120,10 +175,12 @@ fn read_line(r: &mut impl BufRead) -> Result<Option<String>, HttpError> {
     String::from_utf8(buf).map(Some).map_err(|_| malformed("non-utf8 line"))
 }
 
-/// Read one full request from `r`.  `w` is the same connection's
-/// write half, used only to acknowledge `Expect: 100-continue` before
-/// the body is read.  `Ok(None)` means the peer closed without
-/// sending anything (a clean no-request connection).
+/// Read one full request from `r` (blocking).  `w` is the same
+/// connection's write half, used only to acknowledge `Expect:
+/// 100-continue` before the body is read.  `Ok(None)` means the peer
+/// closed without sending anything (a clean no-request connection).
+/// Chunked request bodies are rejected here; the incremental
+/// [`RequestParser`] the server runs accepts them.
 pub fn read_request(
     r: &mut impl BufRead,
     w: &mut impl Write,
@@ -131,17 +188,7 @@ pub fn read_request(
     let Some(line) = read_line(r)? else {
         return Ok(None);
     };
-    let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or_else(|| malformed("empty request line"))?;
-    let target = parts.next().ok_or_else(|| malformed("missing path"))?;
-    let version = parts.next().ok_or_else(|| malformed("missing version"))?;
-    if !version.starts_with("HTTP/1.") {
-        return Err(malformed(format!("unsupported version {version:?}")));
-    }
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), Some(q.to_string())),
-        None => (target.to_string(), None),
-    };
+    let (method, path, query, http11) = parse_request_line(&line)?;
 
     let mut headers = Vec::new();
     loop {
@@ -152,13 +199,7 @@ pub fn read_request(
         if headers.len() >= MAX_HEADERS {
             return Err(malformed("too many headers"));
         }
-        let (name, value) = line
-            .split_once(':')
-            .ok_or_else(|| malformed(format!("bad header line {line:?}")))?;
-        headers.push((
-            name.trim().to_ascii_lowercase(),
-            value.trim().to_string(),
-        ));
+        headers.push(parse_header_line(&line)?);
     }
 
     if header(&headers, "transfer-encoding")
@@ -186,13 +227,296 @@ pub fn read_request(
         None => Vec::new(),
     };
 
-    Ok(Some(HttpRequest {
-        method: method.to_string(),
-        path,
-        query,
-        headers,
-        body,
-    }))
+    Ok(Some(HttpRequest { method, path, query, headers, body, http11 }))
+}
+
+/// A complete request head, waiting for (or already owning) its body.
+#[derive(Debug)]
+struct Head {
+    method: String,
+    path: String,
+    query: Option<String>,
+    headers: Vec<(String, String)>,
+    http11: bool,
+}
+
+#[derive(Debug)]
+enum ParseState {
+    /// Accumulating request + header lines; `lines[0]` is the request
+    /// line once it has arrived.
+    Lines { lines: Vec<String> },
+    /// Reading a `Content-Length` body.
+    Body { head: Head, remaining: usize, body: Vec<u8> },
+    /// Expecting a chunk-size line.
+    ChunkSize { head: Head, body: Vec<u8> },
+    /// Copying chunk payload bytes.
+    ChunkData { head: Head, remaining: usize, body: Vec<u8> },
+    /// Expecting the CRLF that terminates a chunk's payload.
+    ChunkCrlf { head: Head, body: Vec<u8> },
+    /// Consuming (and discarding) trailer lines after the 0-chunk.
+    Trailers { head: Head, body: Vec<u8> },
+    /// A previous feed produced a protocol error; the connection is
+    /// done.
+    Failed,
+}
+
+/// Incremental HTTP/1.1 request parser for nonblocking sockets.
+///
+/// [`feed`](RequestParser::feed) whatever bytes the socket produced
+/// — any split point is fine, including mid-CRLF and mid
+/// chunk-size-line — then drain complete messages with
+/// [`next_request`](RequestParser::next_request).  Pipelined
+/// requests buffered in one read come out one at a time, in order.
+///
+/// Unlike the blocking [`read_request`], chunked *request* bodies
+/// are accepted: the reactor never blocks on a body, so there is no
+/// reason to reject them.  All the same guards apply
+/// ([`MAX_LINE_BYTES`], [`MAX_HEADERS`], [`MAX_BODY_BYTES`]).
+#[derive(Debug)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    pos: usize,
+    state: ParseState,
+    interim: Vec<u8>,
+}
+
+impl Default for RequestParser {
+    fn default() -> RequestParser {
+        RequestParser::new()
+    }
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser {
+            buf: Vec::new(),
+            pos: 0,
+            state: ParseState::Lines { lines: Vec::new() },
+            interim: Vec::new(),
+        }
+    }
+
+    /// Append socket bytes.  Call [`next_request`] afterwards (in a
+    /// loop — one read may complete several pipelined requests).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 && (self.pos == self.buf.len() || self.pos >= 64 * 1024)
+        {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// A request is partially buffered: the whole-request deadline
+    /// clock should be running.  False only when the parser sits
+    /// exactly on a message boundary with no unconsumed bytes.
+    pub fn mid_request(&self) -> bool {
+        match &self.state {
+            ParseState::Lines { lines } => {
+                !lines.is_empty() || self.pos < self.buf.len()
+            }
+            ParseState::Failed => false,
+            _ => true,
+        }
+    }
+
+    /// Interim response bytes (`100 Continue`) the server should
+    /// write before the peer sends its body, if any were queued by
+    /// the last `next_request` round.
+    pub fn take_interim(&mut self) -> Option<Vec<u8>> {
+        if self.interim.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.interim))
+        }
+    }
+
+    /// Pop the next complete request, or `Ok(None)` if more bytes are
+    /// needed.  A `Malformed` error is terminal for the connection —
+    /// resynchronizing an HTTP/1.1 byte stream after a framing error
+    /// is not possible.
+    pub fn next_request(&mut self) -> Result<Option<HttpRequest>, HttpError> {
+        loop {
+            let state =
+                std::mem::replace(&mut self.state, ParseState::Failed);
+            match state {
+                ParseState::Failed => {
+                    return Err(malformed("parser already failed"));
+                }
+                ParseState::Lines { mut lines } => {
+                    let Some(line) = self.take_line()? else {
+                        self.state = ParseState::Lines { lines };
+                        return Ok(None);
+                    };
+                    if !line.is_empty() || lines.is_empty() {
+                        // Request line or header line; the head is
+                        // validated once the blank line arrives.
+                        if lines.len() > MAX_HEADERS {
+                            return Err(malformed("too many headers"));
+                        }
+                        lines.push(line);
+                        self.state = ParseState::Lines { lines };
+                        continue;
+                    }
+                    self.state = self.finish_head(&lines)?;
+                }
+                ParseState::Body { head, mut remaining, mut body } => {
+                    let take = (self.buf.len() - self.pos).min(remaining);
+                    body.extend_from_slice(
+                        &self.buf[self.pos..self.pos + take],
+                    );
+                    self.pos += take;
+                    remaining -= take;
+                    if remaining > 0 {
+                        self.state = ParseState::Body { head, remaining, body };
+                        return Ok(None);
+                    }
+                    return Ok(Some(self.complete(head, body)));
+                }
+                ParseState::ChunkSize { head, body } => {
+                    let Some(line) = self.take_line()? else {
+                        self.state = ParseState::ChunkSize { head, body };
+                        return Ok(None);
+                    };
+                    let size_str = line.split(';').next().unwrap_or("").trim();
+                    let size = usize::from_str_radix(size_str, 16).map_err(
+                        |_| malformed(format!("bad chunk size {line:?}")),
+                    )?;
+                    if body.len().saturating_add(size) > MAX_BODY_BYTES {
+                        return Err(malformed(format!(
+                            "chunked body over {MAX_BODY_BYTES} bytes"
+                        )));
+                    }
+                    self.state = if size == 0 {
+                        ParseState::Trailers { head, body }
+                    } else {
+                        ParseState::ChunkData { head, remaining: size, body }
+                    };
+                }
+                ParseState::ChunkData { head, mut remaining, mut body } => {
+                    let take = (self.buf.len() - self.pos).min(remaining);
+                    body.extend_from_slice(
+                        &self.buf[self.pos..self.pos + take],
+                    );
+                    self.pos += take;
+                    remaining -= take;
+                    if remaining > 0 {
+                        self.state =
+                            ParseState::ChunkData { head, remaining, body };
+                        return Ok(None);
+                    }
+                    self.state = ParseState::ChunkCrlf { head, body };
+                }
+                ParseState::ChunkCrlf { head, body } => {
+                    if self.buf.len() - self.pos < 2 {
+                        self.state = ParseState::ChunkCrlf { head, body };
+                        return Ok(None);
+                    }
+                    let crlf = &self.buf[self.pos..self.pos + 2];
+                    if crlf != b"\r\n" {
+                        return Err(malformed("chunk not CRLF-terminated"));
+                    }
+                    self.pos += 2;
+                    self.state = ParseState::ChunkSize { head, body };
+                }
+                ParseState::Trailers { head, body } => {
+                    let Some(line) = self.take_line()? else {
+                        self.state = ParseState::Trailers { head, body };
+                        return Ok(None);
+                    };
+                    if line.is_empty() {
+                        return Ok(Some(self.complete(head, body)));
+                    }
+                    self.state = ParseState::Trailers { head, body };
+                }
+            }
+        }
+    }
+
+    /// Take one buffered line if its terminator has arrived.
+    fn take_line(&mut self) -> Result<Option<String>, HttpError> {
+        let avail = &self.buf[self.pos..];
+        let Some(nl) = avail.iter().position(|&b| b == b'\n') else {
+            if avail.len() > MAX_LINE_BYTES {
+                return Err(malformed("header line too long"));
+            }
+            return Ok(None);
+        };
+        if nl > MAX_LINE_BYTES {
+            return Err(malformed("header line too long"));
+        }
+        let mut end = nl;
+        if end > 0 && avail[end - 1] == b'\r' {
+            end -= 1;
+        }
+        let line = std::str::from_utf8(&avail[..end])
+            .map_err(|_| malformed("non-utf8 line"))?
+            .to_string();
+        self.pos += nl + 1;
+        Ok(Some(line))
+    }
+
+    /// Blank line seen: parse the accumulated head lines and pick the
+    /// body-reading state.
+    fn finish_head(&mut self, lines: &[String]) -> Result<ParseState, HttpError> {
+        let first = lines.first().map(String::as_str).unwrap_or("");
+        let (method, path, query, http11) = parse_request_line(first)?;
+        let mut headers = Vec::with_capacity(lines.len().saturating_sub(1));
+        for line in &lines[1..] {
+            headers.push(parse_header_line(line)?);
+        }
+        let head = Head { method, path, query, headers, http11 };
+
+        let expects_continue = header(&head.headers, "expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"));
+        if header(&head.headers, "transfer-encoding")
+            .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
+        {
+            if expects_continue {
+                self.interim.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+            }
+            return Ok(ParseState::ChunkSize { head, body: Vec::new() });
+        }
+        match header(&head.headers, "content-length") {
+            Some(v) => {
+                let len: usize = v.trim().parse().map_err(|_| {
+                    malformed(format!("bad content-length {v:?}"))
+                })?;
+                if len > MAX_BODY_BYTES {
+                    return Err(malformed(format!(
+                        "body of {len} bytes too large"
+                    )));
+                }
+                if len == 0 {
+                    return Ok(ParseState::Body {
+                        head,
+                        remaining: 0,
+                        body: Vec::new(),
+                    });
+                }
+                if expects_continue {
+                    self.interim
+                        .extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                }
+                Ok(ParseState::Body { head, remaining: len, body: Vec::new() })
+            }
+            None => {
+                Ok(ParseState::Body { head, remaining: 0, body: Vec::new() })
+            }
+        }
+    }
+
+    fn complete(&mut self, head: Head, body: Vec<u8>) -> HttpRequest {
+        self.state = ParseState::Lines { lines: Vec::new() };
+        HttpRequest {
+            method: head.method,
+            path: head.path,
+            query: head.query,
+            headers: head.headers,
+            body,
+            http11: head.http11,
+        }
+    }
 }
 
 fn write_head(
@@ -200,11 +524,13 @@ fn write_head(
     status: u16,
     reason: &str,
     content_type: &str,
+    keep_alive: bool,
     extra: &[(&str, String)],
 ) -> io::Result<()> {
     write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
     write!(w, "Content-Type: {content_type}\r\n")?;
-    write!(w, "Connection: close\r\n")?;
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(w, "Connection: {conn}\r\n")?;
     for (name, value) in extra {
         write!(w, "{name}: {value}\r\n")?;
     }
@@ -217,10 +543,11 @@ pub fn write_response(
     status: u16,
     reason: &str,
     content_type: &str,
+    keep_alive: bool,
     extra: &[(&str, String)],
     body: &[u8],
 ) -> io::Result<()> {
-    write_head(w, status, reason, content_type, extra)?;
+    write_head(w, status, reason, content_type, keep_alive, extra)?;
     write!(w, "Content-Length: {}\r\n\r\n", body.len())?;
     w.write_all(body)?;
     w.flush()
@@ -234,9 +561,10 @@ pub fn start_chunked(
     status: u16,
     reason: &str,
     content_type: &str,
+    keep_alive: bool,
     extra: &[(&str, String)],
 ) -> io::Result<()> {
-    write_head(w, status, reason, content_type, extra)?;
+    write_head(w, status, reason, content_type, keep_alive, extra)?;
     write!(w, "Transfer-Encoding: chunked\r\n\r\n")?;
     w.flush()
 }
@@ -278,6 +606,14 @@ impl ResponseHead {
         self.header("transfer-encoding")
             .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
     }
+
+    /// Did the server promise to keep the connection open?
+    pub fn is_keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => true,
+        }
+    }
 }
 
 /// Read a response status line + headers.  Interim `100 Continue`
@@ -309,13 +645,7 @@ pub fn read_response_head(
             if headers.len() >= MAX_HEADERS {
                 return Err(malformed("too many headers"));
             }
-            let (name, value) = line
-                .split_once(':')
-                .ok_or_else(|| malformed(format!("bad header {line:?}")))?;
-            headers.push((
-                name.trim().to_ascii_lowercase(),
-                value.trim().to_string(),
-            ));
+            headers.push(parse_header_line(&line)?);
         }
         if status == 100 {
             continue;
@@ -410,6 +740,8 @@ mod tests {
         assert_eq!(req.header("content-type"), Some("application/json"));
         assert_eq!(req.header("Content-Type"), Some("application/json"));
         assert_eq!(req.body, b"abcd");
+        assert!(req.http11);
+        assert!(req.wants_keep_alive());
     }
 
     #[test]
@@ -428,10 +760,23 @@ mod tests {
             parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"),
             Err(HttpError::Io(_))
         ));
-        // Chunked request bodies are rejected up front.
+        // Chunked request bodies are rejected by the blocking reader.
         assert!(matches!(
             parse("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
             Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let keep = |raw: &str| parse(raw).unwrap().unwrap().wants_keep_alive();
+        assert!(keep("GET / HTTP/1.1\r\n\r\n"), "1.1 defaults on");
+        assert!(!keep("GET / HTTP/1.0\r\n\r\n"), "1.0 defaults off");
+        assert!(!keep("GET / HTTP/1.1\r\nConnection: close\r\n\r\n"));
+        assert!(keep("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"));
+        assert!(!keep("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n"));
+        assert!(!keep(
+            "GET / HTTP/1.1\r\nConnection: keep-alive, close\r\n\r\n"
         ));
     }
 
@@ -447,6 +792,91 @@ mod tests {
     }
 
     #[test]
+    fn incremental_parser_survives_any_split_point() {
+        let raw = "POST /v1/infer HTTP/1.1\r\nHost: x\r\n\
+                   Content-Length: 4\r\n\r\nabcd";
+        // Feed byte by byte: no request until the very last byte.
+        let mut p = RequestParser::new();
+        for (i, b) in raw.as_bytes().iter().enumerate() {
+            p.feed(&[*b]);
+            let got = p.next_request().unwrap();
+            if i + 1 < raw.len() {
+                assert!(got.is_none(), "complete after byte {i}?");
+                assert!(p.mid_request());
+            } else {
+                let req = got.unwrap();
+                assert_eq!(req.path, "/v1/infer");
+                assert_eq!(req.body, b"abcd");
+            }
+        }
+        assert!(!p.mid_request(), "boundary after a full message");
+    }
+
+    #[test]
+    fn incremental_parser_handles_split_chunk_size_lines() {
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                   4\r\nwiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        // Split inside the head, inside a chunk-size line, inside a
+        // chunk payload, and inside the terminating CRLF.
+        for split in [10, 44, 47, 50, 56, raw.len() - 1] {
+            let mut p = RequestParser::new();
+            p.feed(&raw.as_bytes()[..split]);
+            assert!(
+                p.next_request().unwrap().is_none(),
+                "complete at split {split}?"
+            );
+            p.feed(&raw.as_bytes()[split..]);
+            let req = p.next_request().unwrap().unwrap();
+            assert_eq!(req.body, b"wikipedia", "split {split}");
+        }
+    }
+
+    #[test]
+    fn incremental_parser_yields_pipelined_requests_in_order() {
+        let raw = "POST /a HTTP/1.1\r\nContent-Length: 1\r\n\r\nx\
+                   GET /b HTTP/1.1\r\n\r\n\
+                   POST /c HTTP/1.1\r\nConnection: close\r\n\
+                   Content-Length: 2\r\n\r\nyz";
+        let mut p = RequestParser::new();
+        p.feed(raw.as_bytes());
+        let a = p.next_request().unwrap().unwrap();
+        let b = p.next_request().unwrap().unwrap();
+        let c = p.next_request().unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_slice()), ("/a", &b"x"[..]));
+        assert_eq!(b.path, "/b");
+        assert!(b.body.is_empty());
+        assert_eq!((c.path.as_str(), c.body.as_slice()), ("/c", &b"yz"[..]));
+        assert!(!c.wants_keep_alive());
+        assert!(p.next_request().unwrap().is_none());
+        assert!(!p.mid_request());
+    }
+
+    #[test]
+    fn incremental_parser_queues_the_100_continue_interim() {
+        let mut p = RequestParser::new();
+        p.feed(
+            b"POST / HTTP/1.1\r\nExpect: 100-continue\r\n\
+              Content-Length: 2\r\n\r\n",
+        );
+        assert!(p.next_request().unwrap().is_none());
+        assert_eq!(
+            p.take_interim().as_deref(),
+            Some(&b"HTTP/1.1 100 Continue\r\n\r\n"[..])
+        );
+        assert!(p.take_interim().is_none(), "interim is taken once");
+        p.feed(b"ok");
+        assert_eq!(p.next_request().unwrap().unwrap().body, b"ok");
+    }
+
+    #[test]
+    fn incremental_parser_rejects_garbage_terminally() {
+        let mut p = RequestParser::new();
+        p.feed(b"not http at all\r\n\r\n");
+        assert!(matches!(p.next_request(), Err(HttpError::Malformed(_))));
+        assert!(matches!(p.next_request(), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
     fn response_roundtrip_fixed() {
         let mut out = Vec::new();
         write_response(
@@ -454,6 +884,7 @@ mod tests {
             404,
             "Not Found",
             "application/json",
+            false,
             &[("Retry-After", "1".to_string())],
             b"{\"error\":\"x\"}",
         )
@@ -462,6 +893,8 @@ mod tests {
         let head = read_response_head(&mut r).unwrap();
         assert_eq!(head.status, 404);
         assert_eq!(head.header("retry-after"), Some("1"));
+        assert_eq!(head.header("connection"), Some("close"));
+        assert!(!head.is_keep_alive());
         let len: usize =
             head.header("content-length").unwrap().parse().unwrap();
         let body = read_sized_body(&mut r, len).unwrap();
@@ -471,7 +904,7 @@ mod tests {
     #[test]
     fn response_roundtrip_chunked() {
         let mut out = Vec::new();
-        start_chunked(&mut out, 200, "OK", "application/x-ndjson", &[])
+        start_chunked(&mut out, 200, "OK", "application/x-ndjson", true, &[])
             .unwrap();
         write_chunk(&mut out, b"first\n").unwrap();
         write_chunk(&mut out, b"").unwrap(); // skipped, not terminal
@@ -482,6 +915,8 @@ mod tests {
         let head = read_response_head(&mut r).unwrap();
         assert_eq!(head.status, 200);
         assert!(head.is_chunked());
+        assert_eq!(head.header("connection"), Some("keep-alive"));
+        assert!(head.is_keep_alive());
         assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"first\n");
         assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"second\n");
         assert!(read_chunk(&mut r).unwrap().is_none());
@@ -491,7 +926,8 @@ mod tests {
     fn interim_100_is_skipped_by_the_client() {
         let mut out = Vec::new();
         out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
-        write_response(&mut out, 200, "OK", "text/plain", &[], b"hi").unwrap();
+        write_response(&mut out, 200, "OK", "text/plain", false, &[], b"hi")
+            .unwrap();
         let mut r = Cursor::new(out);
         let head = read_response_head(&mut r).unwrap();
         assert_eq!(head.status, 200);

@@ -1,23 +1,38 @@
-//! Network transport for `mpx serve` — a dependency-light threaded
-//! HTTP/1.1 server that turns the in-process serving engine
-//! ([`crate::serve`]) into a real service, plus the std-only
+//! Network transport for `mpx serve` — a dependency-light
+//! event-driven HTTP/1.1 server that turns the in-process serving
+//! engine ([`crate::serve`]) into a real service, plus the std-only
 //! [`client`] the load generator and the integration tests drive it
 //! with.
 //!
 //! ```text
-//!   client ──POST /v1/infer──▶ acceptor ──▶ handler thread
-//!                                               │ parse + route (lane)
-//!                                               ▼
-//!                                   Scheduler::submit (per-lane queue)
-//!                 admitted │ full │ closed │ unknown │ malformed
-//!                   200    │ 429  │  503   │  404    │   400
-//!                 chunked  ▲
-//!                 stream   │ CompletionFn (worker thread, the moment
-//!                          │ continuous batching frees the slot)
+//!   clients ──keep-alive / pipelined──▶ reactor (one poll loop)
+//!                                        │ accept ▸ read ▸ parse
+//!                                        │ route (lane) ▸ submit
+//!                                        ▼
+//!                            Scheduler::submit (per-lane queue)
+//!          admitted │ full │ closed │ unknown │ malformed
+//!            200    │ 429  │  503   │  404    │   400
+//!          chunked  ▲
+//!          stream   │ CompletionFn (worker thread) pushes the
+//!                   │ outcome and tugs the wake pipe; the reactor
+//!                   │ serializes + flushes on its own thread
 //! ```
+//!
+//! A single reactor thread owns every connection: nonblocking
+//! sockets multiplexed through [`reactor::poll_ready`] (raw
+//! `poll(2)` FFI, the same always-linked-libc approach as
+//! [`install_sigint`]).  Worker threads never touch a socket — a
+//! completing batch pushes its [`Outcome`] onto a queue and tugs the
+//! reactor's [`reactor::WakePipe`]; the reactor serializes and
+//! flushes the chunk.  Thread count is `1 + workers`, independent of
+//! the number of open connections.
 //!
 //! Semantics, mapped faithfully onto HTTP:
 //!
+//! * **Keep-alive and pipelining** — HTTP/1.1 connections are
+//!   reusable by default (`Connection: close` / HTTP/1.0 opt out),
+//!   and up to `max_pipelined` requests may be in flight per
+//!   connection; responses are delivered strictly in request order.
 //! * **Streaming, not polling** — an admitted request gets its
 //!   response headers and a `queued` ack chunk immediately, then its
 //!   result chunk the instant its batch completes (per-request
@@ -28,6 +43,17 @@
 //!   lane's (planner-chosen) flush timeout; a closed/draining lane is
 //!   `503 Service Unavailable`; an unknown lane is `404`; an
 //!   unparsable payload is `400`.
+//! * **Whole-request deadlines** — `read_timeout_ms` bounds the gap
+//!   between bytes mid-request and `request_deadline_ms` bounds the
+//!   first-byte→complete-parse window; a trickling (slowloris)
+//!   client is evicted with `408` instead of pinning anything.  An
+//!   idle keep-alive connection is closed silently after
+//!   `idle_timeout_ms`.
+//! * **Autoscaling on arrivals** — admissions feed
+//!   [`Scheduler::poll_autoscale`]; when the configured
+//!   [`AutoscalePolicy`] asks for more workers the reactor spawns
+//!   them right on the arrival path (the pool starts at
+//!   `min_workers`).
 //! * **Overflow accounting is per response** (Zhao et al., adaptive
 //!   loss scaling: keep the numerics observable end-to-end): every
 //!   result reports `finite` — whether the half-precision forward
@@ -38,28 +64,33 @@
 //!   lanes so workers flush everything queued, keeps serving
 //!   `/healthz`+`/metrics`, and exits once every pending stream
 //!   flushed or `drain_deadline_ms` passed — abandoned streams get an
-//!   error chunk, and nothing leaks: the pending-stream registry and
+//!   error chunk, and nothing leaks: the pending-stream count and
 //!   the worker slots both drain to zero.
 //!
-//! One request per connection (`Connection: close`): inference
-//! responses are streams, so connection reuse would serialize a
-//! caller's requests behind its slowest completion anyway.  The
-//! worker pool is fixed at the configured size — autoscaling hooks
-//! into the load-generator engine's arrival loop, not the socket
-//! path, and is a transport follow-up.
+//! Protocol decision, kept from the threaded transport: a FIN from
+//! the client is treated as *abandonment*, even though TCP cannot
+//! distinguish a full close from a half-close (`SHUT_WR`) of a
+//! client still reading.  Clients of this transport must keep their
+//! socket fully open until the result chunk arrives — [`client`]
+//! does — and in exchange the server frees resources the moment a
+//! caller hangs up.
 //!
 //! Everything here is std-only and runs without the `xla` feature:
-//! `rust/tests/serve_transport.rs` drives a real socket against a
-//! stub executor, exactly like `examples/serve_http.rs`.
+//! `rust/tests/serve_transport.rs` drives real sockets (including a
+//! many-connections soak and a slowloris eviction) against a stub
+//! executor.
 
 pub mod client;
 pub mod http;
+pub mod reactor;
 
-use std::collections::HashMap;
-use std::io::{self, BufReader};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::raw::{c_int, c_short};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -71,12 +102,14 @@ use crate::serve::clock::{Clock, WallClock};
 use crate::serve::queue::{QueueStats, Request};
 use crate::serve::sched::{
     AutoscalePolicy, Completion, CompletionFn, LaneSpec, PoolCounters,
-    Scheduler,
+    ScaleOp, Scheduler,
 };
 use crate::serve::worker::{worker_loop, BatchExecutor, WorkerReport};
 use crate::trace::{chrome, Span, SpanKind, TraceConfig, Tracer};
 use crate::util::human_duration;
 use crate::util::json::{write_escaped, Json};
+
+use self::reactor::{poll_ready, PollFd, WakePipe, POLLIN, POLLOUT};
 
 // ---------------------------------------------------------------------------
 // SIGINT → graceful drain
@@ -88,7 +121,9 @@ static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
 /// drain of every running [`Server`] (stop accepting new inference,
 /// flush the lanes, then exit).  Pure-std via the libc `signal`
 /// symbol that is always linked on unix; a no-op elsewhere.  The
-/// handler only sets an atomic flag — the acceptor loop polls it.
+/// handler only sets an atomic flag — the reactor polls it (and a
+/// signal interrupting `poll(2)` reports as zero ready descriptors,
+/// so the flag is observed at once).
 #[cfg(unix)]
 pub fn install_sigint() {
     extern "C" fn on_sigint(_sig: i32) {
@@ -114,9 +149,11 @@ pub fn sigint_requested() -> bool {
 // Shared server state
 // ---------------------------------------------------------------------------
 
-/// What a handler thread receives when its request's batch completes.
+/// A completed batch entry queued for the reactor: everything needed
+/// to serialize the result chunk on the reactor thread.
 struct Outcome {
     id: u64,
+    lane: usize,
     latency: Duration,
     missed_deadline: bool,
     finite: bool,
@@ -129,6 +166,8 @@ struct Outcome {
 #[derive(Default)]
 struct Counters {
     connections: AtomicU64,
+    requests: AtomicU64,
+    keepalive_reuses: AtomicU64,
     admitted: AtomicU64,
     streamed: AtomicU64,
     rejected_full: AtomicU64,
@@ -137,6 +176,7 @@ struct Counters {
     malformed: AtomicU64,
     overloaded: AtomicU64,
     disconnects: AtomicU64,
+    deadline_evictions: AtomicU64,
     drain_abandoned: AtomicU64,
     nonfinite: AtomicU64,
 }
@@ -146,6 +186,12 @@ struct Counters {
 pub struct CounterSnapshot {
     /// Accepted TCP connections.
     pub connections: u64,
+    /// Parsed HTTP requests across all connections (≥ `connections`
+    /// when keep-alive reuse happens).
+    pub requests: u64,
+    /// Requests beyond the first on their connection — the keep-alive
+    /// reuse total.
+    pub keepalive_reuses: u64,
     /// Requests admitted into a lane queue.
     pub admitted: u64,
     /// Completions delivered to a live client stream.
@@ -164,6 +210,10 @@ pub struct CounterSnapshot {
     /// was written; the engine slot was freed and the completion
     /// accounted regardless.
     pub disconnects: u64,
+    /// Connections evicted with `408` at the whole-request deadline
+    /// (`request_deadline_ms`) or the inter-byte gap bound
+    /// (`read_timeout_ms`).
+    pub deadline_evictions: u64,
     /// Streams abandoned at the drain deadline (error chunk sent).
     pub drain_abandoned: u64,
     /// Responses containing a non-finite logit (overflow accounting,
@@ -208,10 +258,16 @@ struct Shared {
     drain_started: Mutex<Option<Duration>>,
     /// A worker died: pending streams error out instead of waiting.
     failed: AtomicBool,
-    /// request id → the handler thread waiting to stream its result.
-    slots: Mutex<HashMap<u64, mpsc::Sender<Outcome>>>,
+    /// Completed batch entries awaiting the reactor (drained every
+    /// wakeup; the workers never touch a socket).
+    completions: Mutex<Vec<Outcome>>,
+    /// The reactor's wake pipe, once [`Server::run`] created it.
+    wake: Mutex<Option<Arc<WakePipe>>>,
     next_id: AtomicU64,
-    active_conns: AtomicUsize,
+    /// Streams admitted but not yet answered or accounted.
+    pending: AtomicUsize,
+    /// Connections currently owned by the reactor.
+    open_conns: AtomicUsize,
     counters: Counters,
     tallies: Mutex<Vec<StreamTally>>,
 }
@@ -223,9 +279,11 @@ impl Shared {
             shutdown: AtomicBool::new(false),
             drain_started: Mutex::new(None),
             failed: AtomicBool::new(false),
-            slots: Mutex::new(HashMap::new()),
+            completions: Mutex::new(Vec::new()),
+            wake: Mutex::new(None),
             next_id: AtomicU64::new(1),
-            active_conns: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            open_conns: AtomicUsize::new(0),
             counters: Counters::default(),
             tallies: Mutex::new(Vec::new()),
         }
@@ -236,6 +294,8 @@ impl Shared {
         let ld = Ordering::Relaxed;
         CounterSnapshot {
             connections: c.connections.load(ld),
+            requests: c.requests.load(ld),
+            keepalive_reuses: c.keepalive_reuses.load(ld),
             admitted: c.admitted.load(ld),
             streamed: c.streamed.load(ld),
             rejected_full: c.rejected_full.load(ld),
@@ -244,33 +304,31 @@ impl Shared {
             malformed: c.malformed.load(ld),
             overloaded: c.overloaded.load(ld),
             disconnects: c.disconnects.load(ld),
+            deadline_evictions: c.deadline_evictions.load(ld),
             drain_abandoned: c.drain_abandoned.load(ld),
             nonfinite: c.nonfinite.load(ld),
         }
     }
 
     fn pending_streams(&self) -> usize {
-        self.slots.lock().unwrap().len()
-    }
-
-    fn register(&self, id: u64) -> mpsc::Receiver<Outcome> {
-        let (tx, rx) = mpsc::channel();
-        self.slots.lock().unwrap().insert(id, tx);
-        rx
-    }
-
-    fn deregister(&self, id: u64) {
-        self.slots.lock().unwrap().remove(&id);
+        self.pending.load(Ordering::SeqCst)
     }
 
     fn is_draining(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst) || sigint_requested()
     }
 
+    /// Tug the reactor's wake pipe, if the reactor is running.
+    fn notify_waker(&self) {
+        if let Some(wake) = &*self.wake.lock().unwrap() {
+            wake.notify();
+        }
+    }
+
     /// The scheduler's streaming callback: account the completion per
-    /// lane, then hand the result to the waiting handler (if its
-    /// client is still around).  Runs on the completing worker's
-    /// thread, outside all scheduler locks.
+    /// lane, queue the outcome for the reactor, and wake it.  Runs on
+    /// the completing worker's thread, outside all scheduler locks —
+    /// and never touches a socket.
     fn on_completion(&self, c: &Completion) {
         let finite = c.output.iter().all(|v| v.is_finite());
         {
@@ -288,20 +346,15 @@ impl Shared {
         if !finite {
             self.counters.nonfinite.fetch_add(1, Ordering::Relaxed);
         }
-        let tx = self.slots.lock().unwrap().remove(&c.request.id);
-        if let Some(tx) = tx {
-            // Delivery (and the streamed/disconnect accounting) is
-            // the handler thread's job — it owns the socket and is
-            // the only side that can tell a live client from a dead
-            // one.
-            let _ = tx.send(Outcome {
-                id: c.request.id,
-                latency: c.latency,
-                missed_deadline: c.missed_deadline,
-                finite,
-                logits: c.output.to_vec(),
-            });
-        }
+        self.completions.lock().unwrap().push(Outcome {
+            id: c.request.id,
+            lane: c.lane,
+            latency: c.latency,
+            missed_deadline: c.missed_deadline,
+            finite,
+            logits: c.output.to_vec(),
+        });
+        self.notify_waker();
     }
 }
 
@@ -316,16 +369,22 @@ impl ServerHandle {
     /// let [`Server::run`] return.  Idempotent.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.notify_waker();
     }
 
     pub fn is_draining(&self) -> bool {
         self.shared.is_draining()
     }
 
-    /// Streams admitted but not yet answered (the completion
-    /// registry's size) — zero after a clean drain.
+    /// Streams admitted but not yet answered (or accounted) — zero
+    /// after a clean drain.
     pub fn pending_streams(&self) -> usize {
         self.shared.pending_streams()
+    }
+
+    /// Connections currently owned by the reactor.
+    pub fn open_connections(&self) -> usize {
+        self.shared.open_conns.load(Ordering::SeqCst)
     }
 
     pub fn counters(&self) -> CounterSnapshot {
@@ -354,7 +413,7 @@ pub struct LaneStreamReport {
 pub struct TransportReport {
     pub wall: Duration,
     pub counters: CounterSnapshot,
-    /// Registry entries left after drain — zero unless something
+    /// Streams left unaccounted after drain — zero unless something
     /// leaked (asserted in the integration tests).
     pub pending_streams: usize,
     /// Final pool counters — `busy == 0` after a clean drain.
@@ -372,10 +431,14 @@ impl TransportReport {
     pub fn print(&self) {
         let c = &self.counters;
         println!(
-            "[serve/transport] {} connections, {} admitted, {} streamed, \
+            "[serve/transport] {} connections, {} requests \
+             ({} keep-alive reuses), {} admitted, {} streamed, \
              {} disconnects | rejected: {} full, {} draining, {} unknown \
-             lane, {} malformed, {} overloaded | wall {}",
+             lane, {} malformed, {} overloaded, {} deadline-evicted | \
+             wall {}",
             c.connections,
+            c.requests,
+            c.keepalive_reuses,
             c.admitted,
             c.streamed,
             c.disconnects,
@@ -384,6 +447,7 @@ impl TransportReport {
             c.unknown_lane,
             c.malformed,
             c.overloaded,
+            c.deadline_evictions,
             human_duration(self.wall),
         );
         for lane in &self.lanes {
@@ -413,12 +477,13 @@ impl TransportReport {
 /// A bound listener, ready to [`run`](Server::run).  Binding is
 /// separate from running so callers learn the ephemeral port (tests
 /// bind `127.0.0.1:0`) and can clone a [`ServerHandle`] before the
-/// accept loop takes the thread.
+/// reactor takes the thread.
 pub struct Server {
     listener: TcpListener,
     local: SocketAddr,
     tcfg: TransportConfig,
     trace: TraceConfig,
+    autoscale: Option<AutoscalePolicy>,
     shared: Arc<Shared>,
 }
 
@@ -427,8 +492,8 @@ impl Server {
         tcfg.validate()?;
         let listener = TcpListener::bind(&tcfg.addr)
             .with_context(|| format!("bind {}", tcfg.addr))?;
-        // Non-blocking accept: the acceptor polls shutdown between
-        // accepts instead of parking in the kernel forever.
+        // Non-blocking accept: the reactor polls readiness instead of
+        // parking in the kernel forever.
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         Ok(Server {
@@ -436,6 +501,7 @@ impl Server {
             local,
             tcfg: tcfg.clone(),
             trace: TraceConfig::default(),
+            autoscale: None,
             shared: Arc::new(Shared::new()),
         })
     }
@@ -445,6 +511,14 @@ impl Server {
     /// [`TransportReport`].  Call before [`run`](Server::run).
     pub fn set_trace(&mut self, trace: TraceConfig) {
         self.trace = trace;
+    }
+
+    /// Drive the worker pool off the transport arrival path: start at
+    /// `policy.min_workers` and let admissions grow the pool through
+    /// [`Scheduler::poll_autoscale`].  Without this the pool is fixed
+    /// at the `workers` count passed to [`run`](Server::run).
+    pub fn set_autoscale(&mut self, policy: AutoscalePolicy) {
+        self.autoscale = Some(policy);
     }
 
     /// The actually-bound address (resolves `:0` to the real port).
@@ -458,10 +532,11 @@ impl Server {
 
     /// Serve until a drain is requested ([`ServerHandle::shutdown`]
     /// or SIGINT after [`install_sigint`]) and completes.  Blocks the
-    /// calling thread: it becomes the acceptor; `workers` executor
-    /// threads and one handler thread per live connection are spawned
-    /// inside.  `make_executor(worker, lane)` runs on the worker's
-    /// own thread (PJRT literals are thread-local);
+    /// calling thread: it becomes the reactor; worker threads (the
+    /// fixed `workers` count, or the autoscale policy's range when
+    /// [`set_autoscale`](Server::set_autoscale) was called) are
+    /// spawned inside.  `make_executor(worker, lane)` runs on the
+    /// worker's own thread (PJRT literals are thread-local);
     /// `image_elems` is the flattened input row length every lane
     /// accepts (payloads of any other size are `400`-rejected before
     /// they can reach an executor).
@@ -484,6 +559,12 @@ impl Server {
         anyhow::ensure!(workers > 0, "transport: no workers");
         *shared.tallies.lock().unwrap() =
             vec![StreamTally::default(); nlanes];
+
+        // Best-effort: the connection budget should not be capped by
+        // the usual 1024-descriptor soft default.
+        let _ = reactor::raise_nofile_limit(
+            tcfg.max_connections as u64 * 2 + 64,
+        );
 
         // Routing table: full lane names always route.  The suffix
         // after the last '/' ("chat" for "vit_tiny/chat") routes too,
@@ -517,6 +598,11 @@ impl Server {
             .map(|s| (s.batcher.flush_timeout.as_secs_f64().ceil() as u64).max(1))
             .collect();
 
+        let autoscale = self
+            .autoscale
+            .unwrap_or_else(|| AutoscalePolicy::fixed(workers));
+        let n0 = autoscale.min_workers.max(1);
+
         let cb_shared = shared.clone();
         let on_complete: Box<CompletionFn> =
             Box::new(move |c: &Completion| cb_shared.on_completion(c));
@@ -525,7 +611,7 @@ impl Server {
         let mut sched = Scheduler::new(
             lanes,
             policy,
-            AutoscalePolicy::fixed(workers),
+            autoscale,
             clock,
             Some(on_complete),
         )?;
@@ -534,11 +620,20 @@ impl Server {
         }
         let sched = Arc::new(sched);
 
+        let wake = Arc::new(
+            WakePipe::new().context("transport wake pipe")?,
+        );
+        // The Arc in `shared` keeps the pipe's descriptors open for
+        // as long as any ServerHandle lives, so a post-run
+        // `shutdown()` notifies a still-valid (just unread) pipe
+        // instead of whatever descriptor number got recycled.
+        *shared.wake.lock().unwrap() = Some(wake.clone());
+
         let t_start = shared.clock.now();
-        let ready = std::sync::Barrier::new(workers + 1);
+        let ready = std::sync::Barrier::new(n0 + 1);
         let listener = self.listener;
 
-        let worker_reports = std::thread::scope(|scope| {
+        let (worker_reports, fatal) = std::thread::scope(|scope| {
             let sched: &Scheduler = &sched;
             let shared: &Shared = &shared;
             let make_executor = &make_executor;
@@ -549,43 +644,63 @@ impl Server {
             let deadlines = &deadlines;
             let retry_after = &retry_after;
 
-            sched.register_workers(workers);
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    scope.spawn(move || {
-                        let execs: Result<Vec<E>> = (0..nlanes)
-                            .map(|lane| make_executor(w, lane))
-                            .collect();
-                        // Pass the barrier success or not, or bind
-                        // would wedge below.
+            // Spawned at startup (with_barrier) and again from the
+            // arrival path when the autoscale policy asks for more.
+            let spawn_worker = |w: usize, with_barrier: bool| {
+                scope.spawn(move || {
+                    let execs: Result<Vec<E>> = (0..nlanes)
+                        .map(|lane| make_executor(w, lane))
+                        .collect();
+                    // Pass the barrier success or not, or run would
+                    // wedge below.
+                    if with_barrier {
                         ready.wait();
-                        let out = match execs {
-                            Ok(mut execs) => worker_loop(
-                                w,
-                                &mut execs,
-                                sched,
-                                &*shared.clock,
-                            ),
-                            Err(e) => {
-                                sched.worker_aborted();
-                                Err(e)
-                            }
-                        };
-                        if out.is_err() {
-                            // A dead worker drains the server: stop
-                            // admitting, error the pending streams.
-                            shared.failed.store(true, Ordering::SeqCst);
-                            shared.shutdown.store(true, Ordering::SeqCst);
-                            sched.close_all();
+                    }
+                    let out = match execs {
+                        Ok(mut execs) => worker_loop(
+                            w,
+                            &mut execs,
+                            sched,
+                            &*shared.clock,
+                        ),
+                        Err(e) => {
+                            sched.worker_aborted();
+                            Err(e)
                         }
-                        out
-                    })
+                    };
+                    if out.is_err() {
+                        // A dead worker drains the server: stop
+                        // admitting, error the pending streams.
+                        shared.failed.store(true, Ordering::SeqCst);
+                        shared.shutdown.store(true, Ordering::SeqCst);
+                        sched.close_all();
+                        shared.notify_waker();
+                    }
+                    out
                 })
-                .collect();
+            };
+
+            sched.register_workers(n0);
+            let mut handles: Vec<_> =
+                (0..n0).map(|w| spawn_worker(w, true)).collect();
+            let mut next_worker = n0;
             ready.wait();
 
-            // ----- acceptor loop (this thread) -----
+            // ----- reactor loop (this thread) -----
+            let ctx = ReactorCtx {
+                shared,
+                sched,
+                tcfg,
+                routes,
+                lane_names,
+                deadlines,
+                retry_after,
+                image_elems,
+            };
+            let mut r = Reactor::new(ctx, &listener);
             let mut drain_closed = false;
+            let mut failed_abandoned = false;
+            let mut fatal: Option<io::Error> = None;
             loop {
                 if shared.is_draining() {
                     shared.shutdown.store(true, Ordering::SeqCst);
@@ -595,67 +710,79 @@ impl Server {
                         sched.close_all();
                         drain_closed = true;
                     }
+                }
+                if shared.failed.load(Ordering::SeqCst) && !failed_abandoned
+                {
+                    r.abandon_streams("worker failed");
+                    failed_abandoned = true;
+                }
+                if drain_closed {
                     let started =
                         shared.drain_started.lock().unwrap().unwrap();
-                    let deadline_passed = shared.clock.now()
-                        > started + tcfg.drain_deadline();
-                    // Keep accepting during the drain (new inference
+                    if shared.clock.now()
+                        > started + tcfg.drain_deadline()
+                    {
+                        r.abandon_streams("drain deadline exceeded");
+                    }
+                    // Keep serving during the drain (new inference
                     // gets an orderly 503; /healthz and /metrics keep
                     // answering) until the pending streams flush.
-                    if shared.pending_streams() == 0 || deadline_passed {
+                    if shared.pending_streams() == 0 {
+                        r.flush_all();
                         break;
                     }
                 }
-                match listener.accept() {
-                    Ok((stream, _peer)) => {
-                        shared
-                            .counters
-                            .connections
-                            .fetch_add(1, Ordering::Relaxed);
-                        if shared.active_conns.load(Ordering::SeqCst)
-                            >= tcfg.max_connections
-                        {
-                            shared
-                                .counters
-                                .overloaded
-                                .fetch_add(1, Ordering::Relaxed);
-                            let _ = turn_away(stream);
-                            continue;
+
+                r.build_poll_set(wake.read_fd());
+                if let Err(e) = poll_ready(&mut r.fds, TICK_MS) {
+                    fatal = Some(e);
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    sched.close_all();
+                    break;
+                }
+                if r.fds[1].readable() {
+                    wake.drain();
+                }
+
+                // Completions first: routing a result frees pipeline
+                // slots before new reads are serviced.
+                let outcomes = std::mem::take(
+                    &mut *shared.completions.lock().unwrap(),
+                );
+                if !outcomes.is_empty() {
+                    r.route_outcomes(outcomes);
+                }
+                if r.fds[0].readable() {
+                    r.accept_all();
+                }
+                r.service_ready();
+
+                // Autoscale rides the arrival path: any admission
+                // this tick may grow the pool.
+                if r.take_admitted() && !drain_closed {
+                    if let ScaleOp::Spawn(k) = sched.poll_autoscale() {
+                        sched.register_workers(k);
+                        for _ in 0..k {
+                            handles.push(spawn_worker(next_worker, false));
+                            next_worker += 1;
                         }
-                        shared.active_conns.fetch_add(1, Ordering::SeqCst);
-                        scope.spawn(move || {
-                            handle_connection(
-                                stream,
-                                shared,
-                                sched,
-                                tcfg,
-                                routes,
-                                lane_names,
-                                deadlines,
-                                retry_after,
-                                image_elems,
-                            );
-                            shared
-                                .active_conns
-                                .fetch_sub(1, Ordering::SeqCst);
-                        });
-                    }
-                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => {
-                        // Transient accept failure (EMFILE, reset):
-                        // back off and keep serving.
-                        std::thread::sleep(Duration::from_millis(10));
                     }
                 }
+
+                r.sweep();
+                r.reap();
             }
 
-            handles
+            let reports = handles
                 .into_iter()
                 .map(|h| h.join().expect("transport worker panicked"))
-                .collect::<Result<Vec<_>>>()
-        })?;
+                .collect::<Result<Vec<_>>>();
+            (reports, fatal)
+        });
+        if let Some(e) = fatal {
+            return Err(anyhow::Error::new(e).context("transport poll loop"));
+        }
+        let worker_reports = worker_reports?;
 
         let wall = shared.clock.now().saturating_sub(t_start);
         let tallies = std::mem::take(&mut *shared.tallies.lock().unwrap());
@@ -695,116 +822,1027 @@ fn lane_suffix(name: &str) -> Option<&str> {
     (!s.is_empty() && s != name).then_some(s)
 }
 
-/// Over the connection cap: answer 503 without reading the request.
-fn turn_away(mut stream: TcpStream) -> io::Result<()> {
-    http::write_response(
-        &mut stream,
+// ---------------------------------------------------------------------------
+// The reactor: per-connection state machines on one poll loop
+// ---------------------------------------------------------------------------
+
+/// Poll timeout: the sweep cadence for deadlines and drain checks.
+/// Every latency-relevant event (accept, readable socket, completed
+/// batch via the wake pipe) interrupts the wait immediately.
+const TICK_MS: i32 = 25;
+
+/// Per-`read(2)` scratch size.
+const READ_BUF: usize = 16 * 1024;
+
+/// A routed result waiting to be spliced into its connection's
+/// output, in request order.
+struct StreamResult {
+    /// Serialized chunk(s): the result (or error) line plus the
+    /// chunked-encoding terminator.
+    bytes: Vec<u8>,
+    /// When the completion reached the reactor (egress span start).
+    arrived: Duration,
+    /// Drain/failure abandonment (error chunk) rather than a result.
+    abandoned: bool,
+}
+
+/// One queued response on a connection.  Responses leave in exactly
+/// the order requests arrived — HTTP/1.1 pipelining.
+enum PendingBody {
+    /// A fully serialized response (everything except infer).
+    Ready(Vec<u8>),
+    /// An admitted inference stream: headers + ack chunk go out
+    /// immediately (once at the queue front), the result chunk when
+    /// the engine completes it.
+    Stream {
+        id: u64,
+        lane: usize,
+        head: Vec<u8>,
+        head_sent: bool,
+        result: Option<StreamResult>,
+    },
+}
+
+struct Pending {
+    keep_alive: bool,
+    body: PendingBody,
+}
+
+/// One connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    parser: http::RequestParser,
+    /// Bytes ready for the socket; `out_pos` marks how far the
+    /// kernel has taken them.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Responses in request order (pipelining queue).
+    pending: VecDeque<Pending>,
+    /// First byte of the currently-parsing request (whole-request
+    /// deadline anchor); `None` at a message boundary.
+    req_start: Option<Duration>,
+    /// Last byte read (inter-byte `read_timeout_ms` anchor).
+    last_byte: Duration,
+    /// Last read or successful write (idle-timeout anchor).
+    last_activity: Duration,
+    /// Requests parsed on this connection (keep-alive reuse count).
+    requests: u64,
+    /// Accept ordinal (the `conn` attr on accept/read_deadline
+    /// trace instants).
+    ordinal: u64,
+    /// Stop reading; close once the pending queue and `out` flush.
+    close_after: bool,
+    /// Orderly FIN seen: never read or write again, but wait for
+    /// in-flight streams so their completions are accounted as
+    /// disconnects.
+    peer_gone: bool,
+    /// Hard failure or fully closed: reap at the end of the tick.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, ordinal: u64, now: Duration) -> Conn {
+        Conn {
+            stream,
+            parser: http::RequestParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            pending: VecDeque::new(),
+            req_start: None,
+            last_byte: now,
+            last_activity: now,
+            requests: 0,
+            ordinal,
+            close_after: false,
+            peer_gone: false,
+            dead: false,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+}
+
+/// Everything the per-connection handlers need, bundled so free
+/// functions and methods share one `Copy` parameter.
+#[derive(Clone, Copy)]
+struct ReactorCtx<'a> {
+    shared: &'a Shared,
+    sched: &'a Scheduler,
+    tcfg: &'a TransportConfig,
+    routes: &'a HashMap<String, usize>,
+    lane_names: &'a [String],
+    deadlines: &'a [Duration],
+    retry_after: &'a [u64],
+    image_elems: usize,
+}
+
+struct Reactor<'a> {
+    ctx: ReactorCtx<'a>,
+    listener: &'a TcpListener,
+    /// Connection slab; `free` recycles vacated slots.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// request id → slab index of the connection streaming it.
+    id_map: HashMap<u64, usize>,
+    live: usize,
+    /// An admission happened since the last autoscale poll.
+    admitted: bool,
+    /// Rebuilt every tick: `[listener, wake, conns...]`.
+    fds: Vec<PollFd>,
+    /// `fds[i + 2]` belongs to `conns[fd_conn[i]]`.
+    fd_conn: Vec<usize>,
+}
+
+impl<'a> Reactor<'a> {
+    fn new(ctx: ReactorCtx<'a>, listener: &'a TcpListener) -> Reactor<'a> {
+        Reactor {
+            ctx,
+            listener,
+            conns: Vec::new(),
+            free: Vec::new(),
+            id_map: HashMap::new(),
+            live: 0,
+            admitted: false,
+            fds: Vec::new(),
+            fd_conn: Vec::new(),
+        }
+    }
+
+    fn take_admitted(&mut self) -> bool {
+        std::mem::take(&mut self.admitted)
+    }
+
+    /// Rebuild the poll set.  A connection is read-polled unless it
+    /// is closing or its pipeline is full, and write-polled while
+    /// `out` has unflushed bytes; one with neither (parked on the
+    /// engine) is left out entirely — the wake pipe covers it.
+    fn build_poll_set(&mut self, wake_fd: c_int) {
+        self.fds.clear();
+        self.fd_conn.clear();
+        self.fds.push(PollFd::new(self.listener.as_raw_fd(), POLLIN));
+        self.fds.push(PollFd::new(wake_fd, POLLIN));
+        for (idx, conn) in self.conns.iter().enumerate() {
+            let Some(conn) = conn else { continue };
+            if conn.dead || conn.peer_gone {
+                continue;
+            }
+            let mut events: c_short = 0;
+            if !conn.close_after
+                && conn.pending.len() < self.ctx.tcfg.max_pipelined
+            {
+                events |= POLLIN;
+            }
+            if !conn.flushed() {
+                events |= POLLOUT;
+            }
+            if events != 0 {
+                self.fds
+                    .push(PollFd::new(conn.stream.as_raw_fd(), events));
+                self.fd_conn.push(idx);
+            }
+        }
+    }
+
+    /// Accept everything the backlog holds; no sleeps — an empty
+    /// backlog is just `WouldBlock` and the next tick's poll.
+    fn accept_all(&mut self) {
+        let ctx = self.ctx;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let ordinal = ctx
+                        .shared
+                        .counters
+                        .connections
+                        .fetch_add(1, Ordering::Relaxed)
+                        + 1;
+                    let now = ctx.shared.clock.now();
+                    if let Some(t) = ctx.sched.tracer() {
+                        t.instant(SpanKind::Accept, now, ordinal, 0, 0);
+                    }
+                    if self.live >= ctx.tcfg.max_connections {
+                        ctx.shared
+                            .counters
+                            .overloaded
+                            .fetch_add(1, Ordering::Relaxed);
+                        turn_away(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let conn = Conn::new(stream, ordinal, now);
+                    match self.free.pop() {
+                        Some(idx) => self.conns[idx] = Some(conn),
+                        None => self.conns.push(Some(conn)),
+                    }
+                    self.live += 1;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                // Transient accept failure (EMFILE, reset): retry on
+                // the next tick rather than spinning.
+                Err(_) => break,
+            }
+        }
+        ctx.shared.open_conns.store(self.live, Ordering::SeqCst);
+    }
+
+    /// Run one connection through read → parse → respond → flush.
+    /// `readable` is the poll verdict; completions and write-ready
+    /// wakeups pass `false` and only parse/pump.
+    fn service_conn(&mut self, idx: usize, readable: bool) {
+        let Some(mut conn) = self.conns[idx].take() else {
+            return;
+        };
+        let ctx = self.ctx;
+        if readable && !conn.dead && !conn.peer_gone {
+            read_into(ctx, &mut conn);
+        }
+        loop {
+            if conn.dead {
+                break;
+            }
+            let parsed = self.drain_parser(&mut conn, idx);
+            pump(ctx, &mut conn);
+            if parsed == 0 {
+                // Nothing new materialized; buffered bytes beyond
+                // the pipeline cap wait for a completion to free a
+                // slot (route_outcomes re-enters here).
+                break;
+            }
+        }
+        self.conns[idx] = Some(conn);
+    }
+
+    /// Poll verdicts → connections (collected first: servicing can
+    /// mutate the slab).
+    fn service_ready(&mut self) {
+        let ready: Vec<(usize, bool)> = self
+            .fds
+            .iter()
+            .skip(2)
+            .zip(self.fd_conn.iter())
+            .filter(|(fd, _)| fd.revents != 0)
+            .map(|(fd, &idx)| (idx, fd.readable()))
+            .collect();
+        for (idx, readable) in ready {
+            self.service_conn(idx, readable);
+        }
+    }
+
+    /// Extract complete requests up to the pipeline cap and queue
+    /// their responses.  Returns how many requests were handled.
+    fn drain_parser(&mut self, conn: &mut Conn, idx: usize) -> usize {
+        let ctx = self.ctx;
+        let mut handled = 0;
+        loop {
+            if conn.dead
+                || conn.close_after
+                || conn.peer_gone
+                || conn.pending.len() >= ctx.tcfg.max_pipelined
+            {
+                break;
+            }
+            match conn.parser.next_request() {
+                Ok(Some(req)) => {
+                    handled += 1;
+                    self.handle_request(conn, idx, req);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Framing errors are terminal: the byte stream
+                    // cannot be resynchronized.
+                    ctx.shared
+                        .counters
+                        .malformed
+                        .fetch_add(1, Ordering::Relaxed);
+                    push_ready(
+                        conn,
+                        false,
+                        error_bytes(
+                            400,
+                            "Bad Request",
+                            false,
+                            &e.to_string(),
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+        // 100-continue interim bytes are only safe between
+        // responses — inside a chunked response they would corrupt
+        // the framing; RFC 7231 permits dropping them.
+        if let Some(interim) = conn.parser.take_interim() {
+            if conn.pending.is_empty() && !conn.peer_gone {
+                conn.out.extend_from_slice(&interim);
+            }
+        }
+        // Whole-request deadline anchor maintenance.
+        if conn.parser.mid_request() {
+            if conn.req_start.is_none() {
+                conn.req_start = Some(ctx.shared.clock.now());
+            }
+        } else {
+            conn.req_start = None;
+        }
+        handled
+    }
+
+    /// Route one parsed request to its endpoint.
+    fn handle_request(
+        &mut self,
+        conn: &mut Conn,
+        idx: usize,
+        req: http::HttpRequest,
+    ) {
+        let ctx = self.ctx;
+        conn.requests += 1;
+        ctx.shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+        if conn.requests > 1 {
+            ctx.shared
+                .counters
+                .keepalive_reuses
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        let ka = req.wants_keep_alive();
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                let body =
+                    healthz_json(ctx.shared, ctx.sched, ctx.lane_names);
+                push_ready(
+                    conn,
+                    ka,
+                    response_bytes(
+                        200,
+                        "OK",
+                        "application/json",
+                        ka,
+                        &[],
+                        body.as_bytes(),
+                    ),
+                );
+            }
+            ("GET", "/metrics") => {
+                let body = prometheus_text(
+                    ctx.shared,
+                    ctx.sched,
+                    ctx.lane_names,
+                );
+                push_ready(
+                    conn,
+                    ka,
+                    response_bytes(
+                        200,
+                        "OK",
+                        "text/plain; version=0.0.4",
+                        ka,
+                        &[],
+                        body.as_bytes(),
+                    ),
+                );
+            }
+            ("GET", "/debug/trace") => match ctx.sched.tracer() {
+                Some(t) => {
+                    // The ring's whole content (the last
+                    // `buffer_spans` recorded), as a Chrome trace
+                    // document — save the body to a file and load it
+                    // in Perfetto as-is.
+                    let doc =
+                        chrome::chrome_trace(&t.snapshot(), t.dropped());
+                    push_ready(
+                        conn,
+                        ka,
+                        response_bytes(
+                            200,
+                            "OK",
+                            "application/json",
+                            ka,
+                            &[],
+                            (doc.dump() + "\n").as_bytes(),
+                        ),
+                    );
+                }
+                None => push_ready(
+                    conn,
+                    ka,
+                    error_bytes(
+                        404,
+                        "Not Found",
+                        ka,
+                        "tracing is disabled ([trace] enabled = false)",
+                    ),
+                ),
+            },
+            ("POST", "/v1/infer") => {
+                self.handle_infer(conn, idx, &req, ka);
+            }
+            _ => push_ready(
+                conn,
+                ka,
+                error_bytes(
+                    404,
+                    "Not Found",
+                    ka,
+                    &format!("no endpoint {} {}", req.method, req.path),
+                ),
+            ),
+        }
+    }
+
+    /// Parse, admit, and enqueue one inference request.
+    fn handle_infer(
+        &mut self,
+        conn: &mut Conn,
+        idx: usize,
+        req: &http::HttpRequest,
+        ka: bool,
+    ) {
+        let ctx = self.ctx;
+        let (lane, image) =
+            match parse_infer(req, ctx.routes, ctx.image_elems) {
+                Ok(ok) => ok,
+                Err(InferReject::Malformed(msg)) => {
+                    ctx.shared
+                        .counters
+                        .malformed
+                        .fetch_add(1, Ordering::Relaxed);
+                    push_ready(
+                        conn,
+                        ka,
+                        error_bytes(400, "Bad Request", ka, &msg),
+                    );
+                    return;
+                }
+                Err(InferReject::UnknownLane(name)) => {
+                    ctx.shared
+                        .counters
+                        .unknown_lane
+                        .fetch_add(1, Ordering::Relaxed);
+                    push_ready(
+                        conn,
+                        ka,
+                        error_bytes(
+                            404,
+                            "Not Found",
+                            ka,
+                            &format!(
+                                "unknown lane {name:?} (serving: {})",
+                                ctx.lane_names.join(", ")
+                            ),
+                        ),
+                    );
+                    return;
+                }
+            };
+
+        // Draining: an orderly 503 before touching the queue.
+        if ctx.shared.is_draining() {
+            ctx.shared
+                .counters
+                .rejected_draining
+                .fetch_add(1, Ordering::Relaxed);
+            push_ready(conn, ka, draining_bytes(ctx.tcfg, ka));
+            return;
+        }
+
+        let id = ctx.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let request = Request::new(
+            id,
+            image,
+            ctx.deadlines[lane],
+            ctx.shared.clock.now(),
+        );
+        if !ctx.sched.submit(lane, request) {
+            if ctx.sched.lane_is_closed(lane) {
+                ctx.shared
+                    .counters
+                    .rejected_draining
+                    .fetch_add(1, Ordering::Relaxed);
+                push_ready(conn, ka, draining_bytes(ctx.tcfg, ka));
+            } else {
+                ctx.shared
+                    .counters
+                    .rejected_full
+                    .fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "lane {} queue is full",
+                    ctx.lane_names[lane]
+                );
+                let body = format!(
+                    "{{\"error\":{},\"retry_after_s\":{}}}\n",
+                    jstr(&msg),
+                    ctx.retry_after[lane]
+                );
+                push_ready(
+                    conn,
+                    ka,
+                    response_bytes(
+                        429,
+                        "Too Many Requests",
+                        "application/json",
+                        ka,
+                        &[(
+                            "Retry-After",
+                            ctx.retry_after[lane].to_string(),
+                        )],
+                        body.as_bytes(),
+                    ),
+                );
+            }
+            return;
+        }
+        ctx.shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
+        ctx.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.admitted = true;
+
+        // Admitted: headers + ack chunk as soon as this response
+        // reaches the queue front; result chunk on completion.
+        let ack = format!(
+            "{{\"status\":\"queued\",\"id\":{id},\"lane\":{}}}\n",
+            jstr(&ctx.lane_names[lane])
+        );
+        let mut head = Vec::with_capacity(256);
+        let _ = http::start_chunked(
+            &mut head,
+            200,
+            "OK",
+            "application/x-ndjson",
+            ka,
+            &[],
+        );
+        let _ = http::write_chunk(&mut head, ack.as_bytes());
+        conn.pending.push_back(Pending {
+            keep_alive: ka,
+            body: PendingBody::Stream {
+                id,
+                lane,
+                head,
+                head_sent: false,
+                result: None,
+            },
+        });
+        if !ka {
+            conn.close_after = true;
+        }
+        self.id_map.insert(id, idx);
+    }
+
+    /// Splice completed outcomes into their connections' response
+    /// queues, then pump every touched connection.
+    fn route_outcomes(&mut self, outcomes: Vec<Outcome>) {
+        let arrived = self.ctx.shared.clock.now();
+        let mut touched: Vec<usize> = Vec::new();
+        for out in outcomes {
+            // Late completions (stream already abandoned or its
+            // client already accounted as a disconnect) route
+            // nowhere; the engine-side tallies took them in
+            // on_completion.
+            let Some(idx) = self.id_map.remove(&out.id) else {
+                continue;
+            };
+            let Some(conn) = self.conns[idx].as_mut() else {
+                continue;
+            };
+            let line = outcome_json(&out, &self.ctx.lane_names[out.lane]);
+            for p in conn.pending.iter_mut() {
+                if let PendingBody::Stream { id, result, .. } = &mut p.body
+                {
+                    if *id == out.id && result.is_none() {
+                        let mut bytes =
+                            Vec::with_capacity(line.len() + 32);
+                        let _ = http::write_chunk(
+                            &mut bytes,
+                            line.as_bytes(),
+                        );
+                        let _ = http::finish_chunked(&mut bytes);
+                        *result = Some(StreamResult {
+                            bytes,
+                            arrived,
+                            abandoned: false,
+                        });
+                        break;
+                    }
+                }
+            }
+            touched.push(idx);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for idx in touched {
+            self.service_conn(idx, false);
+        }
+    }
+
+    /// Resolve every still-waiting stream with an error chunk (drain
+    /// deadline passed, or a worker died).  Idempotent.
+    fn abandon_streams(&mut self, reason: &str) {
+        let arrived = self.ctx.shared.clock.now();
+        for conn in self.conns.iter_mut().flatten() {
+            for p in conn.pending.iter_mut() {
+                let PendingBody::Stream { id, result, .. } = &mut p.body
+                else {
+                    continue;
+                };
+                if result.is_some() {
+                    continue;
+                }
+                self.id_map.remove(id);
+                let line = format!(
+                    "{{\"id\":{id},\"error\":{}}}\n",
+                    jstr(reason)
+                );
+                let mut bytes = Vec::with_capacity(line.len() + 32);
+                let _ = http::write_chunk(&mut bytes, line.as_bytes());
+                let _ = http::finish_chunked(&mut bytes);
+                *result = Some(StreamResult {
+                    bytes,
+                    arrived,
+                    abandoned: true,
+                });
+            }
+        }
+        self.flush_all();
+    }
+
+    /// Best-effort pump of every connection (nonblocking writes).
+    fn flush_all(&mut self) {
+        let ctx = self.ctx;
+        for conn in self.conns.iter_mut().flatten() {
+            pump(ctx, conn);
+        }
+    }
+
+    /// Deadline enforcement, once per tick: evict trickling clients
+    /// mid-request (408 + close), silently close idle keep-alive
+    /// connections.
+    fn sweep(&mut self) {
+        let ctx = self.ctx;
+        let now = ctx.shared.clock.now();
+        for conn in self.conns.iter_mut().flatten() {
+            if conn.dead || conn.peer_gone || conn.close_after {
+                continue;
+            }
+            if conn.parser.mid_request() {
+                // Only while the *client* is the slow side: a full
+                // pipeline (requests buffered behind the cap) is our
+                // backpressure, not their trickle.
+                if conn.pending.len() >= ctx.tcfg.max_pipelined {
+                    continue;
+                }
+                let anchor = conn.req_start.unwrap_or(conn.last_byte);
+                let overdue = now
+                    > anchor + ctx.tcfg.request_deadline()
+                    || now > conn.last_byte + ctx.tcfg.read_timeout();
+                if overdue {
+                    ctx.shared
+                        .counters
+                        .deadline_evictions
+                        .fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = ctx.sched.tracer() {
+                        t.instant(
+                            SpanKind::ReadDeadline,
+                            now,
+                            conn.ordinal,
+                            0,
+                            0,
+                        );
+                    }
+                    push_ready(
+                        conn,
+                        false,
+                        response_bytes(
+                            408,
+                            "Request Timeout",
+                            "application/json",
+                            false,
+                            &[],
+                            b"{\"error\":\"request deadline exceeded\"}\n",
+                        ),
+                    );
+                    pump(ctx, conn);
+                }
+            } else if conn.pending.is_empty()
+                && conn.flushed()
+                && now > conn.last_activity + ctx.tcfg.idle_timeout()
+            {
+                // Idle keep-alive connection past its budget: silent
+                // close, no counter — this is normal lifecycle.
+                conn.dead = true;
+            }
+        }
+    }
+
+    /// Remove finished connections and account anything they still
+    /// owed: un-routed streams on a dead connection are disconnects
+    /// (or drain-abandoned, when the error chunk never flushed).
+    fn reap(&mut self) {
+        let ctx = self.ctx;
+        for idx in 0..self.conns.len() {
+            let done = match &self.conns[idx] {
+                Some(conn) => {
+                    conn.dead
+                        || (conn.close_after
+                            && conn.pending.is_empty()
+                            && conn.flushed())
+                }
+                None => false,
+            };
+            if !done {
+                continue;
+            }
+            let conn = self.conns[idx].take().unwrap();
+            for p in &conn.pending {
+                let PendingBody::Stream { id, result, .. } = &p.body
+                else {
+                    continue;
+                };
+                self.id_map.remove(id);
+                match result {
+                    Some(res) if res.abandoned => ctx
+                        .shared
+                        .counters
+                        .drain_abandoned
+                        .fetch_add(1, Ordering::Relaxed),
+                    _ => ctx
+                        .shared
+                        .counters
+                        .disconnects
+                        .fetch_add(1, Ordering::Relaxed),
+                };
+                ctx.shared.pending.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.free.push(idx);
+            self.live -= 1;
+        }
+        ctx.shared.open_conns.store(self.live, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection I/O (free functions: shared by reactor methods)
+// ---------------------------------------------------------------------------
+
+/// Materialize queued responses into `out` (in request order) and
+/// flush as much as the socket takes.  This is where a delivered
+/// stream is accounted (`streamed`/`drain_abandoned`, the egress
+/// span, and the pending-stream decrement).
+fn pump(ctx: ReactorCtx<'_>, conn: &mut Conn) {
+    if conn.dead {
+        return;
+    }
+    if conn.peer_gone {
+        pump_peer_gone(ctx, conn);
+        return;
+    }
+    loop {
+        let Some(p) = conn.pending.front_mut() else { break };
+        let done = match &mut p.body {
+            PendingBody::Ready(bytes) => {
+                conn.out.append(bytes);
+                true
+            }
+            PendingBody::Stream { id, lane, head, head_sent, result } => {
+                if !*head_sent {
+                    conn.out.append(head);
+                    *head_sent = true;
+                }
+                match result.take() {
+                    Some(res) => {
+                        conn.out.extend_from_slice(&res.bytes);
+                        if res.abandoned {
+                            ctx.shared
+                                .counters
+                                .drain_abandoned
+                                .fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            ctx.shared
+                                .counters
+                                .streamed
+                                .fetch_add(1, Ordering::Relaxed);
+                            if let Some(t) = ctx.sched.tracer() {
+                                // Completion-arrival → handoff of the
+                                // serialized result chunk to the
+                                // socket — the only transport-side
+                                // latency a client sees beyond the
+                                // engine's service span.
+                                t.record(
+                                    SpanKind::Egress,
+                                    res.arrived,
+                                    ctx.shared.clock.now(),
+                                    *lane as u64,
+                                    *id,
+                                    0,
+                                );
+                            }
+                        }
+                        ctx.shared.pending.fetch_sub(1, Ordering::SeqCst);
+                        true
+                    }
+                    None => false,
+                }
+            }
+        };
+        if !done {
+            break;
+        }
+        let p = conn.pending.pop_front().unwrap();
+        if !p.keep_alive {
+            conn.close_after = true;
+        }
+    }
+    while !conn.flushed() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.out_pos += n;
+                conn.last_activity = ctx.shared.clock.now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // Hard write failure (reset): the peer is gone for
+                // real; reap accounts any unresolved streams as
+                // disconnects.
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    if conn.flushed() && !conn.out.is_empty() {
+        conn.out.clear();
+        conn.out_pos = 0;
+    }
+}
+
+/// The peer FIN'd: drop every response unwritten, but hold the
+/// connection until its in-flight streams resolve so each completion
+/// is accounted (disconnect, or drain-abandoned) exactly once.
+fn pump_peer_gone(ctx: ReactorCtx<'_>, conn: &mut Conn) {
+    while let Some(p) = conn.pending.front_mut() {
+        match &mut p.body {
+            PendingBody::Ready(_) => {
+                conn.pending.pop_front();
+            }
+            PendingBody::Stream { result, .. } => match result.take() {
+                Some(res) => {
+                    if res.abandoned {
+                        ctx.shared
+                            .counters
+                            .drain_abandoned
+                            .fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        ctx.shared
+                            .counters
+                            .disconnects
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    ctx.shared.pending.fetch_sub(1, Ordering::SeqCst);
+                    conn.pending.pop_front();
+                }
+                None => break,
+            },
+        }
+    }
+    conn.out.clear();
+    conn.out_pos = 0;
+    if conn.pending.is_empty() {
+        conn.dead = true;
+    }
+}
+
+/// Read whatever the socket holds into the parser, bounded by the
+/// pipeline cap (backpressure: a capped connection is not re-polled
+/// for reads, so the kernel buffer — and then TCP flow control —
+/// absorbs the rest).
+fn read_into(ctx: ReactorCtx<'_>, conn: &mut Conn) {
+    let mut buf = [0u8; READ_BUF];
+    loop {
+        if conn.close_after
+            || conn.peer_gone
+            || conn.dead
+            || conn.pending.len() >= ctx.tcfg.max_pipelined
+        {
+            break;
+        }
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.peer_gone = true;
+                break;
+            }
+            Ok(n) => {
+                let now = ctx.shared.clock.now();
+                conn.last_byte = now;
+                conn.last_activity = now;
+                conn.parser.feed(&buf[..n]);
+                if n < buf.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Over the connection cap: answer 503 with a single best-effort
+/// nonblocking write (the ~150-byte response fits any socket buffer)
+/// and drop the socket.
+fn turn_away(stream: TcpStream) {
+    let mut stream = stream;
+    let _ = stream.set_nonblocking(true);
+    let body = response_bytes(
         503,
         "Service Unavailable",
         "application/json",
+        false,
         &[("Retry-After", "1".to_string())],
         b"{\"error\":\"connection limit reached\"}\n",
+    );
+    let _ = stream.write(&body);
+}
+
+// ---------------------------------------------------------------------------
+// Response builders
+// ---------------------------------------------------------------------------
+
+/// Queue a fully serialized response; `Connection: close` responses
+/// also stop further reads on the connection.
+fn push_ready(conn: &mut Conn, keep_alive: bool, bytes: Vec<u8>) {
+    conn.pending
+        .push_back(Pending { keep_alive, body: PendingBody::Ready(bytes) });
+    if !keep_alive {
+        conn.close_after = true;
+    }
+}
+
+/// A complete fixed-length response as bytes (writing into a `Vec`
+/// cannot fail).
+fn response_bytes(
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    keep_alive: bool,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(160 + body.len());
+    let _ = http::write_response(
+        &mut buf,
+        status,
+        reason,
+        content_type,
+        keep_alive,
+        extra,
+        body,
+    );
+    buf
+}
+
+/// `{"error": msg}` with the given status.
+fn error_bytes(
+    status: u16,
+    reason: &str,
+    keep_alive: bool,
+    msg: &str,
+) -> Vec<u8> {
+    response_bytes(
+        status,
+        reason,
+        "application/json",
+        keep_alive,
+        &[],
+        format!("{{\"error\":{}}}\n", jstr(msg)).as_bytes(),
+    )
+}
+
+/// 503 for a draining server/lane: retry after the drain deadline.
+fn draining_bytes(tcfg: &TransportConfig, keep_alive: bool) -> Vec<u8> {
+    let secs =
+        (tcfg.drain_deadline().as_secs_f64().ceil() as u64).max(1);
+    response_bytes(
+        503,
+        "Service Unavailable",
+        "application/json",
+        keep_alive,
+        &[("Retry-After", secs.to_string())],
+        b"{\"error\":\"draining: lane is closed to new requests\"}\n",
     )
 }
 
 // ---------------------------------------------------------------------------
-// Per-connection handling
+// Inference payload parsing
 // ---------------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn handle_connection(
-    mut stream: TcpStream,
-    shared: &Shared,
-    sched: &Scheduler,
-    tcfg: &TransportConfig,
-    routes: &HashMap<String, usize>,
-    lane_names: &[String],
-    deadlines: &[Duration],
-    retry_after: &[u64],
-    image_elems: usize,
-) {
-    // Accepted sockets inherit O_NONBLOCK from the listener on some
-    // platforms — make blocking-with-timeout explicit.
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(tcfg.read_timeout()));
-    let _ = stream.set_nodelay(true);
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let req = match http::read_request(&mut reader, &mut stream) {
-        Ok(Some(req)) => req,
-        Ok(None) => return, // connected and left without a request
-        Err(http::HttpError::Io(_)) => return, // timeout / reset
-        Err(e) => {
-            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
-            let _ = reject(&mut stream, 400, "Bad Request", &e.to_string());
-            return;
-        }
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            let body = healthz_json(shared, sched, lane_names);
-            let _ = http::write_response(
-                &mut stream,
-                200,
-                "OK",
-                "application/json",
-                &[],
-                body.as_bytes(),
-            );
-        }
-        ("GET", "/metrics") => {
-            let body = prometheus_text(shared, sched, lane_names);
-            let _ = http::write_response(
-                &mut stream,
-                200,
-                "OK",
-                "text/plain; version=0.0.4",
-                &[],
-                body.as_bytes(),
-            );
-        }
-        ("GET", "/debug/trace") => match sched.tracer() {
-            Some(t) => {
-                // The ring's whole content (the last `buffer_spans`
-                // recorded), as a Chrome trace document — save the
-                // body to a file and load it in Perfetto as-is.
-                let doc = chrome::chrome_trace(&t.snapshot(), t.dropped());
-                let _ = http::write_response(
-                    &mut stream,
-                    200,
-                    "OK",
-                    "application/json",
-                    &[],
-                    (doc.dump() + "\n").as_bytes(),
-                );
-            }
-            None => {
-                let _ = reject(
-                    &mut stream,
-                    404,
-                    "Not Found",
-                    "tracing is disabled ([trace] enabled = false)",
-                );
-            }
-        },
-        ("POST", "/v1/infer") => {
-            handle_infer(
-                stream, &req, shared, sched, tcfg, routes, lane_names,
-                deadlines, retry_after, image_elems,
-            );
-        }
-        _ => {
-            let _ = reject(
-                &mut stream,
-                404,
-                "Not Found",
-                &format!("no endpoint {} {}", req.method, req.path),
-            );
-        }
-    }
-}
 
 /// Parse failure vs routing failure — distinct status codes.
 enum InferReject {
@@ -887,240 +1925,9 @@ fn parse_infer(
     Ok((lane, image))
 }
 
-#[allow(clippy::too_many_arguments)]
-fn handle_infer(
-    mut stream: TcpStream,
-    req: &http::HttpRequest,
-    shared: &Shared,
-    sched: &Scheduler,
-    tcfg: &TransportConfig,
-    routes: &HashMap<String, usize>,
-    lane_names: &[String],
-    deadlines: &[Duration],
-    retry_after: &[u64],
-    image_elems: usize,
-) {
-    let (lane, image) = match parse_infer(req, routes, image_elems) {
-        Ok(ok) => ok,
-        Err(InferReject::Malformed(msg)) => {
-            shared.counters.malformed.fetch_add(1, Ordering::Relaxed);
-            let _ = reject(&mut stream, 400, "Bad Request", &msg);
-            return;
-        }
-        Err(InferReject::UnknownLane(name)) => {
-            shared.counters.unknown_lane.fetch_add(1, Ordering::Relaxed);
-            let _ = reject(
-                &mut stream,
-                404,
-                "Not Found",
-                &format!(
-                    "unknown lane {name:?} (serving: {})",
-                    lane_names.join(", ")
-                ),
-            );
-            return;
-        }
-    };
-
-    // Draining: an orderly 503 before touching the queue.
-    if shared.is_draining() {
-        shared.counters.rejected_draining.fetch_add(1, Ordering::Relaxed);
-        let _ = reject_draining(&mut stream, tcfg);
-        return;
-    }
-
-    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
-    let rx = shared.register(id);
-    let request =
-        Request::new(id, image, deadlines[lane], shared.clock.now());
-    if !sched.submit(lane, request) {
-        shared.deregister(id);
-        if sched.lane_is_closed(lane) {
-            shared
-                .counters
-                .rejected_draining
-                .fetch_add(1, Ordering::Relaxed);
-            let _ = reject_draining(&mut stream, tcfg);
-        } else {
-            shared.counters.rejected_full.fetch_add(1, Ordering::Relaxed);
-            let msg =
-                format!("lane {} queue is full", lane_names[lane]);
-            let _ = http::write_response(
-                &mut stream,
-                429,
-                "Too Many Requests",
-                "application/json",
-                &[("Retry-After", retry_after[lane].to_string())],
-                format!(
-                    "{{\"error\":{},\"retry_after_s\":{}}}\n",
-                    jstr(&msg),
-                    retry_after[lane]
-                )
-                .as_bytes(),
-            );
-        }
-        return;
-    }
-    shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
-
-    // Admitted: headers + ack chunk now, result chunk on completion.
-    let ack = format!(
-        "{{\"status\":\"queued\",\"id\":{id},\"lane\":{}}}\n",
-        jstr(&lane_names[lane])
-    );
-    if http::start_chunked(
-        &mut stream,
-        200,
-        "OK",
-        "application/x-ndjson",
-        &[],
-    )
-    .and_then(|()| http::write_chunk(&mut stream, ack.as_bytes()))
-    .is_err()
-    {
-        // Client vanished between admission and headers.  The engine
-        // still owns the request and will complete (and account) it;
-        // nothing waits on the registry entry once we drop it.
-        shared.deregister(id);
-        shared.counters.disconnects.fetch_add(1, Ordering::Relaxed);
-        return;
-    }
-
-    // Wait for the completion, polling the failure/drain state.
-    loop {
-        match rx.recv_timeout(Duration::from_millis(25)) {
-            Ok(outcome) => {
-                let egress_start = shared.clock.now();
-                let body = outcome_json(&outcome, &lane_names[lane]);
-                let delivered = !peer_closed(&stream)
-                    && http::write_chunk(&mut stream, body.as_bytes())
-                        .and_then(|()| http::finish_chunked(&mut stream))
-                        .is_ok();
-                if let Some(t) = sched.tracer() {
-                    // Serialization + socket write of the result
-                    // chunk — the only transport-side latency a
-                    // client sees beyond the engine's service span.
-                    t.record(
-                        SpanKind::Egress,
-                        egress_start,
-                        shared.clock.now(),
-                        lane as u64,
-                        outcome.id,
-                        0,
-                    );
-                }
-                if delivered {
-                    shared.counters.streamed.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    shared
-                        .counters
-                        .disconnects
-                        .fetch_add(1, Ordering::Relaxed);
-                }
-                return;
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if shared.failed.load(Ordering::SeqCst) {
-                    shared.deregister(id);
-                    shared
-                        .counters
-                        .drain_abandoned
-                        .fetch_add(1, Ordering::Relaxed);
-                    let _ = stream_error(&mut stream, id, "worker failed");
-                    return;
-                }
-                let drain_started = *shared.drain_started.lock().unwrap();
-                if let Some(started) = drain_started {
-                    if shared.clock.now() > started + tcfg.drain_deadline() {
-                        shared.deregister(id);
-                        shared
-                            .counters
-                            .drain_abandoned
-                            .fetch_add(1, Ordering::Relaxed);
-                        let _ = stream_error(
-                            &mut stream,
-                            id,
-                            "drain deadline exceeded",
-                        );
-                        return;
-                    }
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Sender dropped without a send — cannot happen on
-                // the dispatch path; treat as a failed stream.
-                shared.deregister(id);
-                let _ = stream_error(&mut stream, id, "completion lost");
-                return;
-            }
-        }
-    }
-}
-
-/// 503 for a draining server/lane: retry after the drain deadline.
-fn reject_draining(
-    stream: &mut TcpStream,
-    tcfg: &TransportConfig,
-) -> io::Result<()> {
-    let secs =
-        (tcfg.drain_deadline().as_secs_f64().ceil() as u64).max(1);
-    http::write_response(
-        stream,
-        503,
-        "Service Unavailable",
-        "application/json",
-        &[("Retry-After", secs.to_string())],
-        b"{\"error\":\"draining: lane is closed to new requests\"}\n",
-    )
-}
-
-fn reject(
-    stream: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    msg: &str,
-) -> io::Result<()> {
-    http::write_response(
-        stream,
-        status,
-        reason,
-        "application/json",
-        &[],
-        format!("{{\"error\":{}}}\n", jstr(msg)).as_bytes(),
-    )
-}
-
-/// Mid-stream error (headers already went out as 200): a terminal
-/// error chunk is the only honest signal left.
-fn stream_error(stream: &mut TcpStream, id: u64, msg: &str) -> io::Result<()> {
-    let body = format!("{{\"id\":{id},\"error\":{}}}\n", jstr(msg));
-    http::write_chunk(stream, body.as_bytes())?;
-    http::finish_chunked(stream)
-}
-
-/// Has the peer closed its socket?  `peek` returning 0 bytes is an
-/// orderly FIN, a hard error (reset) counts too; `WouldBlock` means
-/// alive-and-quiet.
-///
-/// Protocol decision: a FIN from the client is treated as
-/// *abandonment*, even though TCP cannot distinguish a full close
-/// from a half-close (`SHUT_WR`) of a client still reading.  Clients
-/// of this transport must keep their socket fully open until the
-/// result chunk arrives — [`client`] does — and in exchange the
-/// server can free resources the moment a caller hangs up.
-fn peer_closed(stream: &TcpStream) -> bool {
-    let mut buf = [0u8; 1];
-    if stream.set_nonblocking(true).is_err() {
-        return true;
-    }
-    let gone = match stream.peek(&mut buf) {
-        Ok(0) => true,
-        Ok(_) => false,
-        Err(e) => e.kind() != io::ErrorKind::WouldBlock,
-    };
-    let _ = stream.set_nonblocking(false);
-    gone
-}
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
 
 /// `s` as a JSON string literal (quotes included) — the crate's one
 /// escaping implementation, shared with [`Json::dump`].
@@ -1198,7 +2005,8 @@ fn healthz_json(
 /// streamed-completion tallies (including the per-lane non-finite /
 /// overflow counter), latency summaries from the per-lane
 /// [`NamedHistograms`], worker-pool gauges, and the transport
-/// totals.
+/// totals (connection lifecycle, keep-alive reuse, deadline
+/// evictions).
 fn prometheus_text(
     shared: &Shared,
     sched: &Scheduler,
@@ -1332,6 +2140,52 @@ fn prometheus_text(
     let c = shared.counter_snapshot();
     counter(&mut s, "mpx_transport_connections_total", "accepted connections");
     let _ = writeln!(s, "mpx_transport_connections_total {}", c.connections);
+    gauge(
+        &mut s,
+        "mpx_transport_connections_open",
+        "connections currently owned by the reactor",
+    );
+    let _ = writeln!(
+        s,
+        "mpx_transport_connections_open {}",
+        shared.open_conns.load(Ordering::SeqCst)
+    );
+    counter(
+        &mut s,
+        "mpx_transport_requests_total",
+        "HTTP requests parsed across all connections",
+    );
+    let _ = writeln!(s, "mpx_transport_requests_total {}", c.requests);
+    counter(
+        &mut s,
+        "mpx_transport_keepalive_reuses_total",
+        "requests beyond the first on their connection",
+    );
+    let _ = writeln!(
+        s,
+        "mpx_transport_keepalive_reuses_total {}",
+        c.keepalive_reuses
+    );
+    gauge(
+        &mut s,
+        "mpx_transport_keepalive_requests_per_connection",
+        "mean requests served per accepted connection",
+    );
+    let _ = writeln!(
+        s,
+        "mpx_transport_keepalive_requests_per_connection {}",
+        c.requests as f64 / c.connections.max(1) as f64
+    );
+    counter(
+        &mut s,
+        "mpx_transport_read_deadline_evictions_total",
+        "connections evicted with 408 at a read/request deadline",
+    );
+    let _ = writeln!(
+        s,
+        "mpx_transport_read_deadline_evictions_total {}",
+        c.deadline_evictions
+    );
     counter(&mut s, "mpx_transport_admitted_total", "requests admitted");
     let _ = writeln!(s, "mpx_transport_admitted_total {}", c.admitted);
     counter(
@@ -1404,6 +2258,7 @@ mod tests {
     fn outcome_json_is_valid_json_even_with_nonfinite_logits() {
         let out = Outcome {
             id: 3,
+            lane: 0,
             latency: Duration::from_micros(1500),
             missed_deadline: false,
             finite: false,
@@ -1416,5 +2271,23 @@ mod tests {
         let logits = doc.get("logits").and_then(Json::as_arr).unwrap();
         assert_eq!(logits.len(), 3);
         assert_eq!(logits[1], Json::Null);
+    }
+
+    #[test]
+    fn response_bytes_honors_keep_alive() {
+        let ka = response_bytes(
+            200,
+            "OK",
+            "application/json",
+            true,
+            &[],
+            b"{}\n",
+        );
+        let text = String::from_utf8(ka).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        let close = error_bytes(400, "Bad Request", false, "nope");
+        let text = String::from_utf8(close).unwrap();
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.contains("\"error\":\"nope\""), "{text}");
     }
 }

@@ -1,0 +1,217 @@
+//! Readiness primitives for the transport's event loop — raw FFI
+//! over the symbols every unix libc exports (`poll`, `pipe`,
+//! `fcntl`, `read`, `write`, `close`, `getrlimit`/`setrlimit`),
+//! mirroring the [`install_sigint`](super::install_sigint) pattern:
+//! no crate dependencies, just the C ABI that is always linked.
+//!
+//! Three pieces, each a thin safe wrapper:
+//!
+//! * [`poll_ready`] — one `poll(2)` call over a caller-built
+//!   [`PollFd`] slice; `EINTR` (SIGINT landing mid-poll) reports as
+//!   zero ready descriptors so the caller re-checks its drain flag
+//!   immediately instead of finishing the timeout.
+//! * [`WakePipe`] — the classic self-pipe: worker threads
+//!   [`notify`](WakePipe::notify) after pushing a completion, the
+//!   reactor polls the read end and [`drain`](WakePipe::drain)s it.
+//!   Both ends are nonblocking, so a full pipe (64 KiB of pending
+//!   wakeups) degrades to a no-op instead of blocking a worker.
+//! * [`raise_nofile_limit`] — best-effort `RLIMIT_NOFILE` bump
+//!   toward the hard limit, so a many-connections run is not capped
+//!   at the usual 1024-descriptor soft default.
+
+use std::io;
+use std::os::raw::{c_int, c_short};
+
+#[cfg(target_os = "macos")]
+type NfdsT = std::os::raw::c_uint;
+#[cfg(not(target_os = "macos"))]
+type NfdsT = std::os::raw::c_ulong;
+
+/// `struct pollfd` — identical layout on every unix.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: c_int,
+    pub events: c_short,
+    pub revents: c_short,
+}
+
+impl PollFd {
+    pub fn new(fd: c_int, events: c_short) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Readable, or in a state (`HUP`/`ERR`/`NVAL`) a read will
+    /// surface as EOF/error — either way the owner should read.
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & POLLOUT != 0
+    }
+}
+
+pub const POLLIN: c_short = 0x001;
+pub const POLLOUT: c_short = 0x004;
+pub const POLLERR: c_short = 0x008;
+pub const POLLHUP: c_short = 0x010;
+pub const POLLNVAL: c_short = 0x020;
+
+#[cfg(target_os = "macos")]
+const O_NONBLOCK: c_int = 0x0004;
+#[cfg(not(target_os = "macos"))]
+const O_NONBLOCK: c_int = 0o4000;
+
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+
+#[cfg(target_os = "macos")]
+const RLIMIT_NOFILE: c_int = 8;
+#[cfg(not(target_os = "macos"))]
+const RLIMIT_NOFILE: c_int = 7;
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout_ms: c_int) -> c_int;
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+/// One `poll(2)` round: block up to `timeout_ms` (0 = just check,
+/// negative = forever) until a descriptor in `fds` is ready, and
+/// return how many are.  `EINTR` returns `Ok(0)` so a signal (the
+/// SIGINT drain request) hands control back to the caller at once.
+pub fn poll_ready(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    let rc =
+        unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+    if rc >= 0 {
+        return Ok(rc as usize);
+    }
+    let err = io::Error::last_os_error();
+    if err.kind() == io::ErrorKind::Interrupted {
+        return Ok(0);
+    }
+    Err(err)
+}
+
+fn set_nonblocking(fd: c_int) -> io::Result<()> {
+    let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Self-pipe wakeup: any thread [`notify`](WakePipe::notify)s, the
+/// reactor polls [`read_fd`](WakePipe::read_fd) and
+/// [`drain`](WakePipe::drain)s.  Closes both ends on drop.
+pub struct WakePipe {
+    read_fd: c_int,
+    write_fd: c_int,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0 as c_int; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let wp = WakePipe { read_fd: fds[0], write_fd: fds[1] };
+        set_nonblocking(wp.read_fd)?;
+        set_nonblocking(wp.write_fd)?;
+        Ok(wp)
+    }
+
+    /// The end the reactor polls (`POLLIN` = wakeups pending).
+    pub fn read_fd(&self) -> c_int {
+        self.read_fd
+    }
+
+    /// Wake the poller.  Never blocks: a full pipe already guarantees
+    /// a pending wakeup, so the failed write is safely dropped.
+    pub fn notify(&self) {
+        let byte = [1u8];
+        let _ = unsafe { write(self.write_fd, byte.as_ptr(), 1) };
+    }
+
+    /// Consume every pending wakeup byte (nonblocking).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        loop {
+            let n =
+                unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n < buf.len() as isize {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (capped at the hard
+/// limit) and return the resulting soft limit.  Best-effort: the
+/// caller decides whether the returned budget is enough.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if lim.cur >= want {
+        return Ok(lim.cur);
+    }
+    let raised = RLimit { cur: want.min(lim.max), max: lim.max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &raised) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(raised.cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_roundtrip_through_poll() {
+        let wp = WakePipe::new().unwrap();
+        let mut fds = [PollFd::new(wp.read_fd(), POLLIN)];
+        assert_eq!(poll_ready(&mut fds, 0).unwrap(), 0, "idle pipe");
+
+        wp.notify();
+        wp.notify();
+        let mut fds = [PollFd::new(wp.read_fd(), POLLIN)];
+        assert_eq!(poll_ready(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+
+        wp.drain();
+        let mut fds = [PollFd::new(wp.read_fd(), POLLIN)];
+        assert_eq!(poll_ready(&mut fds, 0).unwrap(), 0, "drained pipe");
+    }
+
+    #[test]
+    fn nofile_limit_reports_a_usable_budget() {
+        let got = raise_nofile_limit(64).unwrap();
+        assert!(got >= 64, "soft nofile limit {got} below the floor");
+    }
+}

@@ -47,7 +47,9 @@ fn category(kind: SpanKind) -> &'static str {
         | SpanKind::Service
         | SpanKind::Execute
         | SpanKind::Pack
-        | SpanKind::Egress => "serve",
+        | SpanKind::Egress
+        | SpanKind::Accept
+        | SpanKind::ReadDeadline => "serve",
         _ => "train",
     }
 }

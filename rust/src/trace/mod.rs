@@ -97,9 +97,17 @@ pub enum SpanKind {
     /// Worker-side batch padding/packing.  `a`=lane, `b`=bucket,
     /// `c`=real rows.
     Pack,
-    /// Transport wrote the result chunk to the client socket.
-    /// `a`=lane, `b`=request id.
+    /// Transport wrote the result chunk to the client socket — one
+    /// span per request, so a keep-alive connection shows one egress
+    /// per streamed completion.  `a`=lane, `b`=request id.
     Egress,
+    /// Instant: the reactor accepted a connection.  `a`=connection
+    /// ordinal (the running `connections` counter).
+    Accept,
+    /// Instant: a connection was evicted with `408` because its
+    /// whole-request deadline or inter-byte read budget ran out.
+    /// `a`=connection ordinal.
+    ReadDeadline,
     /// One whole trainer step.  `a`=step index, `b`=grads finite (0/1).
     TrainStep,
     /// Trainer phase: parameter/input cast. `a`=step index.
@@ -128,6 +136,8 @@ impl SpanKind {
             SpanKind::Execute => "execute",
             SpanKind::Pack => "pack",
             SpanKind::Egress => "egress",
+            SpanKind::Accept => "accept",
+            SpanKind::ReadDeadline => "read_deadline",
             SpanKind::TrainStep => "train_step",
             SpanKind::Cast => "cast",
             SpanKind::Forward => "forward",
@@ -146,6 +156,7 @@ impl SpanKind {
             }
             SpanKind::Execute | SpanKind::Pack => ["lane", "bucket", "rows"],
             SpanKind::Egress => ["lane", "id", "_"],
+            SpanKind::Accept | SpanKind::ReadDeadline => ["conn", "_", "_"],
             SpanKind::TrainStep => ["step", "finite", "_"],
             SpanKind::Cast
             | SpanKind::Forward
@@ -158,7 +169,13 @@ impl SpanKind {
 
     /// Zero-duration marker kinds (exported as instants).
     pub fn is_instant(self) -> bool {
-        matches!(self, SpanKind::Admit | SpanKind::LossScale)
+        matches!(
+            self,
+            SpanKind::Admit
+                | SpanKind::LossScale
+                | SpanKind::Accept
+                | SpanKind::ReadDeadline
+        )
     }
 }
 

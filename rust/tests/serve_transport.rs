@@ -14,8 +14,15 @@
 //!   lane's flush timeout;
 //! * client disconnect mid-stream → slot freed and counted;
 //! * draining server → `503` for new work, and streams stuck past
-//!   the drain deadline abandoned with an error chunk.
+//!   the drain deadline abandoned with an error chunk;
+//! * keep-alive reuse and pipelining on one connection (responses in
+//!   request order);
+//! * slowloris eviction at the whole-request deadline (`408`) while a
+//!   well-behaved idle keep-alive connection survives;
+//! * a many-connections soak: thousands of concurrent keep-alive
+//!   sockets on a reactor whose thread count never grows with them.
 
+use std::io::{Read, Write};
 use std::net::SocketAddr;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -24,7 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use mpx::config::TransportConfig;
-use mpx::serve::transport::client::Client;
+use mpx::serve::transport::client::{infer_body_json, Client};
 use mpx::serve::transport::{Server, ServerHandle, TransportReport};
 use mpx::serve::{BatchExecutor, BatcherConfig, LaneSpec, SchedPolicy};
 use mpx::util::json::Json;
@@ -91,6 +98,9 @@ fn transport_cfg(drain_deadline_ms: u64) -> TransportConfig {
         addr: "127.0.0.1:0".into(),
         max_connections: 64,
         read_timeout_ms: 2_000,
+        request_deadline_ms: 10_000,
+        idle_timeout_ms: 30_000,
+        max_pipelined: 32,
         drain_deadline_ms,
     }
 }
@@ -129,7 +139,16 @@ fn start(
     gate: Option<Arc<Gate>>,
     drain_deadline_ms: u64,
 ) -> Running {
-    let server = Server::bind(&transport_cfg(drain_deadline_ms)).unwrap();
+    start_with_cfg(lanes, workers, gate, transport_cfg(drain_deadline_ms))
+}
+
+fn start_with_cfg(
+    lanes: Vec<LaneSpec>,
+    workers: usize,
+    gate: Option<Arc<Gate>>,
+    cfg: TransportConfig,
+) -> Running {
+    let server = Server::bind(&cfg).unwrap();
     let addr = server.local_addr();
     let handle = server.handle();
     let join = std::thread::spawn(move || {
@@ -547,4 +566,276 @@ fn drain_deadline_abandons_stuck_streams_with_an_error() {
     assert_eq!(report.counters.drain_abandoned, 1);
     assert_eq!(report.counters.streamed, 0);
     assert_eq!(report.lanes[0].completed, 1);
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests() {
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1, 2, 4], 5, 64)],
+        1,
+        None,
+        2_000,
+    );
+    let client = srv.client();
+    let mut conn = client.connect_keep_alive().unwrap();
+    for i in 0..5 {
+        let img = image(i as f32);
+        let reply = conn.infer("chat", &img).unwrap();
+        let want: Vec<f32> = img.iter().map(|v| v * 2.0).collect();
+        assert_eq!(reply.logits, want, "request {i} on the reused socket");
+    }
+
+    // The sixth request on the same socket scrapes /metrics: the page
+    // must count this very connection's reuse (the scrape included).
+    let resp = conn.request("GET", "/metrics", "text/plain", &[], &[]);
+    let resp = resp.unwrap();
+    assert_eq!(resp.status, 200);
+    let metrics = resp.body_string();
+    assert!(
+        metrics.contains("mpx_transport_connections_total 1"),
+        "one connection served everything:\n{metrics}"
+    );
+    assert!(
+        metrics.contains("mpx_transport_keepalive_reuses_total 5"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("mpx_transport_connections_open 1"), "{metrics}");
+    assert!(metrics.contains("mpx_transport_requests_total 6"), "{metrics}");
+    assert!(
+        metrics.contains("mpx_transport_keepalive_requests_per_connection 6"),
+        "{metrics}"
+    );
+    drop(conn);
+
+    let report = srv.finish();
+    assert_eq!(report.counters.connections, 1);
+    assert_eq!(report.counters.requests, 6);
+    assert_eq!(report.counters.keepalive_reuses, 5);
+    assert_eq!(report.counters.admitted, 5);
+    assert_eq!(report.counters.streamed, 5);
+    assert_eq!(report.counters.disconnects, 0);
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_request_order() {
+    let srv = start(
+        vec![lane("vit_tiny/chat", &[1, 2, 4, 8], 5, 64)],
+        2,
+        None,
+        2_000,
+    );
+    let client = srv.client();
+    let mut conn = client.connect_keep_alive().unwrap();
+
+    // Six requests on the wire before the first response is read.
+    let n = 6usize;
+    for i in 0..n {
+        let body = infer_body_json("chat", &image(i as f32 * 10.0));
+        let raw = body.as_bytes();
+        conn.send("POST", "/v1/infer", "application/json", &[], raw).unwrap();
+    }
+    for i in 0..n {
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200, "pipelined response {i}");
+        // The result line must carry *this* request's logits: strict
+        // request-order delivery.
+        let want: Vec<f32> =
+            image(i as f32 * 10.0).iter().map(|v| v * 2.0).collect();
+        let body = resp.body_string();
+        let logits: Vec<f32> = body
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l.trim()).ok())
+            .find_map(|doc| {
+                doc.get("logits").and_then(Json::as_arr).map(|arr| {
+                    arr.iter()
+                        .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                        .collect()
+                })
+            })
+            .unwrap_or_default();
+        assert_eq!(logits, want, "response {i} out of order:\n{body}");
+    }
+    drop(conn);
+
+    let report = srv.finish();
+    assert_eq!(report.counters.connections, 1);
+    assert_eq!(report.counters.admitted, n as u64);
+    assert_eq!(report.counters.streamed, n as u64);
+    assert_eq!(report.counters.keepalive_reuses, n as u64 - 1);
+    assert_eq!(report.counters.disconnects, 0);
+}
+
+#[test]
+fn slowloris_is_evicted_with_408_while_idle_keepalive_survives() {
+    let mut cfg = transport_cfg(2_000);
+    // Each drip lands well inside the inter-byte budget; only the
+    // whole-request deadline can evict.
+    cfg.read_timeout_ms = 10_000;
+    cfg.request_deadline_ms = 400;
+    let srv = start_with_cfg(
+        vec![lane("vit_tiny/chat", &[1, 2], 5, 16)],
+        1,
+        None,
+        cfg,
+    );
+    let client = srv.client();
+
+    // A well-behaved keep-alive connection that will sit idle (within
+    // its own, much larger, idle budget) while the trickler is dealt
+    // with.
+    let mut good = client.connect_keep_alive().unwrap();
+    let reply = good.infer("chat", &image(1.0)).unwrap();
+    assert!(reply.finite);
+
+    // The trickler: drip header bytes, never completing the request,
+    // then stop and wait — no writes after the eviction so the 408
+    // cannot be lost to a reset.
+    let mut slow = std::net::TcpStream::connect(srv.addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let partial: &[u8] = b"POST /v1/infer HTTP/1.1\r\nHost: x\r\n";
+    for chunk in partial.chunks(6) {
+        slow.write_all(chunk).unwrap();
+        slow.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+    }
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    loop {
+        match slow.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(k) => buf.extend_from_slice(&tmp[..k]),
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.contains("408"), "expected a 408 eviction, got {text:?}");
+    assert!(text.contains("request deadline exceeded"), "{text:?}");
+    wait_for("the eviction counter", || {
+        srv.handle.counters().deadline_evictions == 1
+    });
+
+    // The idle keep-alive connection was untouched and still serves.
+    let reply = good.infer("chat", &image(2.0)).unwrap();
+    let want: Vec<f32> = image(2.0).iter().map(|v| v * 2.0).collect();
+    assert_eq!(reply.logits, want);
+    drop(good);
+
+    let report = srv.finish();
+    assert_eq!(report.counters.deadline_evictions, 1);
+    assert_eq!(report.counters.admitted, 2);
+    assert_eq!(report.counters.streamed, 2);
+    assert_eq!(report.counters.disconnects, 0);
+}
+
+#[cfg(target_os = "linux")]
+fn process_thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line in /proc/self/status")
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn soak_thousands_of_keepalive_connections_one_reactor_thread() {
+    const TARGET: usize = 2_048;
+    const OPENERS: usize = 8;
+    const REUSE_PER_OPENER: usize = 16;
+
+    // Client + server halves both live in this process: make sure the
+    // descriptor budget covers ~2 per connection, or skip with a note.
+    let need = (TARGET * 2 + 512) as u64;
+    match mpx::serve::transport::reactor::raise_nofile_limit(need) {
+        Ok(limit) if limit >= need => {}
+        Ok(limit) => {
+            eprintln!(
+                "soak skipped: nofile limit {limit} < {need} \
+                 (hard limit too low on this host)"
+            );
+            return;
+        }
+        Err(e) => {
+            eprintln!("soak skipped: rlimit unavailable: {e}");
+            return;
+        }
+    }
+
+    let mut cfg = transport_cfg(5_000);
+    cfg.max_connections = TARGET * 2;
+    let srv = start_with_cfg(
+        vec![lane("vit_tiny/chat", &[1, 2, 4, 8, 16], 2, 4_096)],
+        2,
+        None,
+        cfg,
+    );
+
+    let per = TARGET / OPENERS;
+    let barrier = Arc::new(std::sync::Barrier::new(OPENERS + 1));
+    let addr = srv.addr.to_string();
+    let handles: Vec<_> = (0..OPENERS)
+        .map(|t| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let timeout = Duration::from_secs(30);
+                let client = Client::new(addr).with_timeout(timeout);
+                let mut conns = Vec::with_capacity(per);
+                for i in 0..per {
+                    let mut conn = client.connect_keep_alive().unwrap();
+                    let reply = conn
+                        .infer("chat", &image((t * per + i) as f32))
+                        .unwrap();
+                    assert_eq!(reply.logits.len(), ELEMS);
+                    conns.push(conn);
+                }
+                barrier.wait(); // every connection is open
+                barrier.wait(); // main thread sampled the reactor
+                for conn in conns.iter_mut().take(REUSE_PER_OPENER) {
+                    let reply = conn.infer("chat", &image(7.0)).unwrap();
+                    assert!(reply.finite);
+                }
+                drop(conns);
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let open = srv.handle.open_connections();
+    assert!(
+        open >= TARGET,
+        "expected ≥{TARGET} concurrent keep-alive connections, \
+         the reactor owns {open}"
+    );
+    // Thread-per-connection would need ≥ `open` threads right now;
+    // the reactor needs one.  Bound well below `open` but loosely
+    // enough for whatever else libtest is running in this process.
+    #[cfg(target_os = "linux")]
+    {
+        let threads = process_thread_count();
+        assert!(
+            threads < open / 8,
+            "thread count {threads} must not scale with {open} \
+             connections (reactor + workers + test threads only)"
+        );
+    }
+    barrier.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    wait_for("every connection to close", || {
+        srv.handle.open_connections() == 0
+    });
+
+    let report = srv.finish();
+    let reused = (OPENERS * REUSE_PER_OPENER) as u64;
+    assert_eq!(report.counters.connections, TARGET as u64);
+    assert_eq!(report.counters.admitted, TARGET as u64 + reused);
+    assert_eq!(report.counters.streamed, TARGET as u64 + reused);
+    assert_eq!(report.counters.keepalive_reuses, reused);
+    assert_eq!(report.counters.disconnects, 0);
+    assert_eq!(report.counters.deadline_evictions, 0);
 }
