@@ -43,10 +43,10 @@ use std::time::Duration;
 
 use mpx::serve::planner::{self, LaneProfile, PlannerConfig, ServiceModel};
 use mpx::serve::{
-    loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
-    SchedPolicy, SimReport, SimSpec,
+    loadgen, simulate, AutoscalePolicy, BatcherConfig, Calibration, LaneLoad,
+    LaneSpec, SchedPolicy, SimReport, SimSpec,
 };
-use mpx::trace::chrome;
+use mpx::trace::{chrome, LaneId};
 use mpx::util::benchkit::JsonReport;
 use mpx::util::json::Json;
 
@@ -112,6 +112,7 @@ fn run_latency_regime(
         stop_at: Some(Duration::from_secs(3600)),
         record_detail: false,
         trace: false,
+        replan: None,
     })
     .expect("simulation failed")
 }
@@ -137,6 +138,7 @@ fn run_saturated_regime(
         stop_at: Some(Duration::from_millis(250)),
         record_detail: false,
         trace: false,
+        replan: None,
     })
     .expect("simulation failed")
 }
@@ -257,6 +259,7 @@ fn sim_section(report: &mut JsonReport) {
         stop_at: Some(Duration::from_millis(250)),
         record_detail: false,
         trace: false,
+        replan: None,
     })
     .expect("two-lane simulation failed");
     let a = rep.lanes[0].completed as f64;
@@ -316,6 +319,7 @@ fn planner_section() -> anyhow::Result<()> {
             stop_at: Some(Duration::from_secs(3600)),
             record_detail: false,
             trace: false,
+            replan: None,
         })
         .expect("planner-section simulation failed")
     };
@@ -398,6 +402,135 @@ fn planner_section() -> anyhow::Result<()> {
         static_rep.deadline_misses(),
         planned_rep.deadline_misses()
     );
+
+    // --- Close the loop: calibrate the service model from traced
+    // executions, then compare its p99 prediction against a stale
+    // config model on the same deployed plan. --------------------
+    //
+    // The calibration workload must observe *several distinct batch
+    // sizes* or the linear fit is unidentifiable.  Each cycle sends a
+    // lone "blocker" request (dispatches immediately as a bucket-1
+    // batch) and, while the worker is busy with it, a burst of k
+    // requests — which the continuous refill then dispatches as one
+    // exact-fill bucket-k batch.
+    let mut cal_arrivals = Vec::new();
+    let mut base = Duration::ZERO;
+    for _ in 0..6 {
+        for k in [2u64, 4, 8] {
+            cal_arrivals.push(base);
+            for j in 1..=k {
+                cal_arrivals.push(base + Duration::from_micros(100 * j));
+            }
+            base += Duration::from_millis(25);
+        }
+    }
+    let cal_rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: LaneSpec {
+                name: "interactive".into(),
+                weight: 1,
+                batcher: BatcherConfig::new(
+                    vec![1, 2, 4, 8],
+                    Duration::from_millis(5),
+                )
+                .unwrap(),
+                queue_capacity: 4096,
+                deadline: Duration::from_secs(1),
+            },
+            arrivals: cal_arrivals,
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: model.overhead,
+        exec_per_row: model.per_row,
+        stop_at: Some(Duration::from_secs(10)),
+        record_detail: false,
+        trace: true,
+        replan: None,
+    })
+    .expect("calibration workload failed");
+    let ids = [LaneId::new("interactive", "mixed_f16")];
+    let samples = mpx::trace::service_samples(&cal_rep.spans, &ids);
+    let cal = Calibration::fit(&samples);
+    let fit = cal
+        .get("interactive", "mixed_f16")
+        .ok_or_else(|| anyhow::anyhow!("calibration fit found no lane"))?
+        .clone();
+    // The sim executes an exactly linear 1 ms + 1 ms/row model; the
+    // exact-arithmetic fit must recover it to the microsecond.
+    anyhow::ensure!(
+        (fit.overhead_us, fit.per_row_us) == (1000, 1000),
+        "fit ({}, {}) µs should recover the exact simulated model",
+        fit.overhead_us,
+        fit.per_row_us,
+    );
+    cal.write(std::path::Path::new("calibration.json"))?;
+    println!(
+        "# calibration: fitted {} + {}/row µs from {} samples → \
+         calibration.json",
+        fit.overhead_us, fit.per_row_us, fit.samples
+    );
+
+    // A stale config (the shipped 300 µs + 130 µs/row defaults)
+    // understates this model's true cost ~7×.  Its p99 *promise* is
+    // one the deployment cannot keep; the calibrated promise is an
+    // upper bound the measurement respects.
+    let stale = ServiceModel {
+        overhead: Duration::from_micros(300),
+        per_row: Duration::from_micros(130),
+    };
+    let pcfg = PlannerConfig {
+        candidates: vec![1, 2, 4, 8],
+        workers: 1,
+        max_compiled: 0,
+        safety: 0.9,
+        max_flush: Duration::from_millis(20),
+    };
+    let profile = LaneProfile {
+        name: "interactive".into(),
+        rate,
+        deadline,
+        weight: 1,
+        size_dist: Vec::new(),
+    };
+    let stale_plan =
+        planner::plan(&pcfg, &stale, std::slice::from_ref(&profile))?;
+    let cal_plan =
+        planner::plan(&pcfg, &fit.model(), std::slice::from_ref(&profile))?;
+    anyhow::ensure!(
+        stale_plan.lanes[0].buckets == lp.buckets
+            && cal_plan.lanes[0].buckets == lp.buckets,
+        "both models should choose the deployed bucket set {:?}",
+        lp.buckets,
+    );
+    let measured = planned_rep.latency().quantile(0.99).unwrap();
+    let config_pred = stale_plan.lanes[0].predicted.p99;
+    let cal_pred = cal_plan.lanes[0].predicted.p99;
+    println!(
+        "# calibrated-vs-config p99 on buckets {:?}: measured {:.3} ms, \
+         config predicts {:.3} ms (bound {}), calibrated predicts {:.3} ms \
+         (bound {})",
+        lp.buckets,
+        measured.as_secs_f64() * 1e3,
+        config_pred.as_secs_f64() * 1e3,
+        if measured <= config_pred { "holds" } else { "VIOLATED" },
+        cal_pred.as_secs_f64() * 1e3,
+        if measured <= cal_pred { "holds" } else { "VIOLATED" },
+    );
+    report.entry(
+        "planner_calibrated_vs_config",
+        &[
+            ("measured_p99_ms", measured.as_secs_f64() * 1e3),
+            ("config_predicted_p99_ms", config_pred.as_secs_f64() * 1e3),
+            ("calibrated_predicted_p99_ms", cal_pred.as_secs_f64() * 1e3),
+            ("config_bound_holds", (measured <= config_pred) as u8 as f64),
+            ("calibrated_bound_holds", (measured <= cal_pred) as u8 as f64),
+            ("fitted_overhead_us", fit.overhead_us as f64),
+            ("fitted_per_row_us", fit.per_row_us as f64),
+            ("fit_samples", fit.samples as f64),
+        ],
+    );
+
     println!("# wrote {}", report.write()?);
     Ok(())
 }
@@ -426,6 +559,7 @@ fn trace_section() -> anyhow::Result<()> {
         stop_at: Some(Duration::from_millis(250)),
         record_detail: false,
         trace,
+        replan: None,
     };
 
     let median_secs = |trace: bool| -> (f64, SimReport) {

@@ -351,11 +351,43 @@ impl LaneConfig {
     }
 }
 
+/// Where the planner's linear service model comes from
+/// (`[serve.planner] source`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerSource {
+    /// The `[serve.planner] overhead_us` / `per_row_us` constants.
+    Config,
+    /// The measured per-lane fit persisted as `calibration.json` next
+    /// to the artifacts ([`crate::serve::calibrate`]); lanes without a
+    /// calibrated entry fall back to the config constants.
+    Calibrated,
+}
+
+impl PlannerSource {
+    pub fn parse(s: &str) -> Result<PlannerSource> {
+        Ok(match s {
+            "config" => PlannerSource::Config,
+            "calibrated" => PlannerSource::Calibrated,
+            _ => bail!(
+                "unknown planner source {s:?} (expected \"config\" or \
+                 \"calibrated\")"
+            ),
+        })
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            PlannerSource::Config => "config",
+            PlannerSource::Calibrated => "calibrated",
+        }
+    }
+}
+
 /// Knobs for the latency-aware bucket planner (`[serve.planner]`).
 /// The linear service model (`service(b) = overhead + per_row × b`)
-/// mirrors the one `serve::simulate` executes batches with; calibrate
-/// the two constants from `BENCH_serve.json` artifact entries for a
-/// real deployment.
+/// mirrors the one `serve::simulate` executes batches with; set
+/// `source = "calibrated"` to replace the two constants with the
+/// per-lane fit `serve::calibrate` persists from measured executions.
 #[derive(Debug, Clone)]
 pub struct PlannerSettings {
     /// Force the planner on/off; lanes tables being present turns it
@@ -363,13 +395,18 @@ pub struct PlannerSettings {
     pub enabled: bool,
     /// Per-batch fixed service overhead, microseconds.
     pub overhead_us: u64,
-    /// Per-row service cost, microseconds.
+    /// Per-row service cost, microseconds; must be ≥ 1 when the
+    /// planner is in use (a zero per-row cost claims capacity that
+    /// grows unboundedly with bucket size).
     pub per_row_us: u64,
     /// Max bucket artifacts to AOT-compile per lane (0 = unlimited).
     pub max_compiled: usize,
     /// Fraction of each deadline the plan may spend (headroom for
     /// model error); must be in (0, 1].
     pub safety: f64,
+    /// Service-model source: config constants or the measured
+    /// `calibration.json` fit.
+    pub source: PlannerSource,
 }
 
 impl Default for PlannerSettings {
@@ -380,6 +417,7 @@ impl Default for PlannerSettings {
             per_row_us: 130,
             max_compiled: 0,
             safety: 0.9,
+            source: PlannerSource::Config,
         }
     }
 }
@@ -743,13 +781,15 @@ impl ServeConfig {
                 self.planner.safety
             );
         }
-        if self.use_planner()
-            && self.planner.overhead_us == 0
-            && self.planner.per_row_us == 0
-        {
+        if self.use_planner() && self.planner.per_row_us == 0 {
+            // A zero per-row cost makes capacity_rps grow without
+            // bound in the bucket size, so every rate looks absorbable
+            // — the planner would happily "prove" any SLO feasible.
             bail!(
-                "serve: planner service model is all-zero — set \
-                 [serve.planner] overhead_us / per_row_us"
+                "serve: planner per_row_us must be ≥ 1 — a zero per-row \
+                 service cost claims unbounded batch capacity (set \
+                 [serve.planner] per_row_us, or source = \"calibrated\" \
+                 once measurements exist)"
             );
         }
         if self.use_planner() && self.policy == SchedPolicy::FormFirst {
@@ -814,16 +854,27 @@ impl ServeConfig {
             self.planner.enabled = b;
         }
         if let Some(v) = doc.get_int("serve.planner.overhead_us") {
-            self.planner.overhead_us = v.max(0) as u64;
+            // Rejected, not clamped: `v.max(0)` silently turned a
+            // negative service model into a zero one.
+            if v < 0 {
+                bail!("serve: planner overhead_us {v} is negative");
+            }
+            self.planner.overhead_us = v as u64;
         }
         if let Some(v) = doc.get_int("serve.planner.per_row_us") {
-            self.planner.per_row_us = v.max(0) as u64;
+            if v < 0 {
+                bail!("serve: planner per_row_us {v} is negative");
+            }
+            self.planner.per_row_us = v as u64;
         }
         if let Some(v) = doc.get_int("serve.planner.max_compiled") {
             self.planner.max_compiled = v.max(0) as usize;
         }
         if let Some(v) = doc.get_float("serve.planner.safety") {
             self.planner.safety = v;
+        }
+        if let Some(s) = doc.get_str("serve.planner.source") {
+            self.planner.source = PlannerSource::parse(s)?;
         }
         if let Some(s) = doc.get_str("serve.transport.addr") {
             self.transport.addr = s.to_string();
@@ -1308,6 +1359,70 @@ deadline_ms = 20
         bad.planner.overhead_us = 0;
         bad.planner.per_row_us = 0;
         assert!(bad.validate().is_err(), "all-zero service model");
+    }
+
+    #[test]
+    fn planner_model_keys_reject_negatives_and_zero_per_row() {
+        let parse = |body: &str, name: &str| {
+            let path = std::env::temp_dir().join(name);
+            std::fs::write(&path, body).unwrap();
+            ServeConfig::from_toml_file(path.to_str().unwrap())
+        };
+        // Negative values used to be clamped to 0 by `v.max(0)` —
+        // they must fail loudly like the transport keys do.
+        let err = parse(
+            "[serve.planner]\noverhead_us = -5\n",
+            "mpx_planner_neg_overhead.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("negative"), "got: {err}");
+        let err = parse(
+            "[serve.planner]\nper_row_us = -1\n",
+            "mpx_planner_neg_per_row.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("negative"), "got: {err}");
+
+        // per_row_us = 0 with the planner on claims capacity that
+        // grows unboundedly with bucket size — rejected on its own,
+        // not only when overhead_us is also zero.
+        let mut cfg = ServeConfig::default();
+        cfg.planner.enabled = true;
+        cfg.planner.per_row_us = 0;
+        assert!(cfg.validate().is_err(), "zero per_row_us must fail");
+        // ...while zero overhead alone is a legal pure per-row model,
+        cfg.planner.overhead_us = 0;
+        cfg.planner.per_row_us = 130;
+        cfg.validate().unwrap();
+        // ...and with the planner off the model keys are inert.
+        let mut cfg = ServeConfig::default();
+        cfg.planner.per_row_us = 0;
+        cfg.validate().unwrap();
+
+        // The service-model source key parses both values, defaults
+        // to config, and rejects anything else.
+        assert_eq!(ServeConfig::default().planner.source, PlannerSource::Config);
+        let cfg = parse(
+            "[serve.planner]\nsource = \"calibrated\"\n",
+            "mpx_planner_source_cal.toml",
+        )
+        .unwrap();
+        assert_eq!(cfg.planner.source, PlannerSource::Calibrated);
+        let cfg = parse(
+            "[serve.planner]\nsource = \"config\"\n",
+            "mpx_planner_source_cfg.toml",
+        )
+        .unwrap();
+        assert_eq!(cfg.planner.source, PlannerSource::Config);
+        assert!(parse(
+            "[serve.planner]\nsource = \"psychic\"\n",
+            "mpx_planner_source_bad.toml",
+        )
+        .is_err());
+        assert_eq!(PlannerSource::Calibrated.tag(), "calibrated");
+        assert_eq!(PlannerSource::Config.tag(), "config");
     }
 
     #[test]

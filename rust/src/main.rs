@@ -520,6 +520,62 @@ fn cmd_serve_plan(cfg: &ServeConfig) -> Result<()> {
         cfg.max_batch,
     );
     plan.print();
+
+    // Measured-vs-config service model report: what the calibrated
+    // fit says each lane actually costs, next to the `[serve.planner]`
+    // constants the static plan would use.  Printed for both sources
+    // — with `source = "config"` it shows what switching to
+    // "calibrated" would change; with "calibrated" it shows which
+    // lanes actually had a fit to use.
+    let cal_path = std::path::Path::new(&cfg.artifacts_dir)
+        .join(mpx::serve::CALIBRATION_FILE);
+    match mpx::serve::Calibration::read(&cal_path) {
+        Ok(cal) if !cal.is_empty() => {
+            println!(
+                "[plan] service model source: {} ({})",
+                cfg.planner.source.tag(),
+                cal_path.display()
+            );
+            for id in mpx::serve::lane_identities(cfg) {
+                match cal.get(&id.name, &id.precision) {
+                    Some(fit) => {
+                        let d_over = fit.overhead_us as i64
+                            - cfg.planner.overhead_us as i64;
+                        let d_row = fit.per_row_us as i64
+                            - cfg.planner.per_row_us as i64;
+                        println!(
+                            "[plan] lane {}: measured overhead {}us \
+                             ({:+}us vs config), per-row {}us ({:+}us vs \
+                             config), {} samples",
+                            id.name,
+                            fit.overhead_us,
+                            d_over,
+                            fit.per_row_us,
+                            d_row,
+                            fit.samples,
+                        );
+                    }
+                    None => println!(
+                        "[plan] lane {}: no calibrated fit — using config \
+                         constants (overhead {}us, per-row {}us)",
+                        id.name,
+                        cfg.planner.overhead_us,
+                        cfg.planner.per_row_us,
+                    ),
+                }
+            }
+        }
+        Ok(_) => println!(
+            "[plan] no calibration at {} — serve with [trace] enabled to \
+             record service samples, then `source = \"calibrated\"` uses \
+             the measured fit",
+            cal_path.display()
+        ),
+        Err(e) => println!(
+            "[plan] calibration unreadable ({e:#}); using config constants"
+        ),
+    }
+
     // Best-effort artifact presence report: the plan says what should
     // exist, the store says what does.
     match ArtifactStore::open(&cfg.artifacts_dir) {

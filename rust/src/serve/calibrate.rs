@@ -1,0 +1,866 @@
+//! Close the planner loop: fit the linear service model from
+//! *measured* executions, persist it, and replan live when traffic
+//! drifts.
+//!
+//! The planner ([`crate::serve::planner`]) sizes buckets and flush
+//! timeouts against `service(b) = overhead + per_row × b`.  Until
+//! this module both parameters came from config constants
+//! (`[serve.planner] overhead_us`/`per_row_us`), so every feasibility
+//! verdict drifted away from reality as traffic and hardware changed.
+//! The loop closes in three pieces:
+//!
+//! 1. **Fit** — [`Calibration::fit`] runs a deterministic
+//!    least-squares fit per `(lane, precision)` over the
+//!    [`ServiceSample`] records persisted from execute spans
+//!    (`service_samples.json`).  Samples are outlier-trimmed per
+//!    batch size, a minimum-sample guard keeps thin lanes on the
+//!    config model, and the arithmetic is exact `i128` rational with
+//!    one final rounding — the same multiset of samples always yields
+//!    a bit-identical `calibration.json`, regardless of input order.
+//! 2. **Persist** — [`Calibration::read`]/[`Calibration::write`]
+//!    round-trip `calibration.json` next to the artifacts through the
+//!    crate's own [`Json`]; [`Calibration::merge`] folds a fresh fit
+//!    into the existing file per lane key instead of clobbering it.
+//!    `[serve.planner] source = "calibrated"` makes
+//!    [`plan_for_config`](crate::serve::plan_for_config) prefer these
+//!    entries over the config constants, lane by lane.
+//! 3. **Replan live** — [`DriftMonitor`] watches the scheduler's
+//!    existing counters (windowed EWMA arrival rate per lane,
+//!    sustained over-deadline completion pressure).  When drift is
+//!    sustained for [`DriftConfig::patience`] windows,
+//!    [`ReplanDriver::poll`] re-runs the planner with the calibrated
+//!    model and the measured rates and emits the per-lane retunes for
+//!    [`Scheduler::adopt_plan`](crate::serve::sched::Scheduler::adopt_plan)
+//!    — which swaps bucket sets and flush timeouts under the
+//!    scheduler lock without draining anything.  A plan that wants
+//!    buckets that were never compiled falls back to the feasible
+//!    subset of what exists ([`feasible_buckets`]) and says so
+//!    (`full = false`, surfaced in the `replan` trace instant and the
+//!    adopt outcome).
+//!
+//! Everything here is clock-agnostic: the virtual-clock harness
+//! drives the same monitor/driver event-by-event
+//! (`rust/tests/serve_sim.rs` proves a rate step triggers a replan at
+//! an exact virtual instant), and the network transport's reactor
+//! polls it on its tick.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Ema;
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::planner::{self, LaneProfile, PlannerConfig, ServiceModel};
+use crate::serve::sched::LaneRetune;
+use crate::trace::ServiceSample;
+use crate::util::json::Json;
+
+/// File name of the persisted fit, written next to the artifacts
+/// (same directory as `service_samples.json`).
+pub const CALIBRATION_FILE: &str = "calibration.json";
+
+/// Minimum post-trim samples a `(lane, precision)` key needs before
+/// the fit trusts it; thinner lanes keep the config model.
+pub const MIN_FIT_SAMPLES: usize = 8;
+
+/// Outlier trim: within each batch size, the highest and lowest
+/// `n / TRIM_DIV` measurements are dropped before fitting (straggler
+/// executions — page faults, clock contention — sit far above the
+/// linear model and would drag the slope).
+const TRIM_DIV: usize = 10;
+
+/// Rounding division for exact rational fits: `num / den` to the
+/// nearest integer, half away from zero.  `den` must be positive.
+fn round_div(num: i128, den: i128) -> i128 {
+    debug_assert!(den > 0);
+    if num >= 0 {
+        (num + den / 2) / den
+    } else {
+        -((-num + den / 2) / den)
+    }
+}
+
+/// One lane's fitted service model, in integer microseconds (integers
+/// keep [`Json::dump`] byte-stable and the fit bit-deterministic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneFit {
+    /// Lane *name* (e.g. `"vit_tiny/chat"`) — stable across runs,
+    /// unlike the run-local lane index.
+    pub lane: String,
+    /// Precision tag (`"fp32"`, `"mixed_f16"`, `"mixed_bf16"`): fp32
+    /// and half-precision lanes have genuinely different `per_row`
+    /// costs, so the key must separate them.
+    pub precision: String,
+    pub overhead_us: u64,
+    pub per_row_us: u64,
+    /// Measurements the fit used (after trimming).
+    pub samples: u64,
+}
+
+impl LaneFit {
+    /// The planner-facing model this fit prescribes.
+    pub fn model(&self) -> ServiceModel {
+        ServiceModel {
+            overhead: Duration::from_micros(self.overhead_us),
+            per_row: Duration::from_micros(self.per_row_us),
+        }
+    }
+}
+
+/// A set of per-lane fits, ascending by `(lane, precision)` — the
+/// in-memory form of `calibration.json`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Calibration {
+    pub lanes: Vec<LaneFit>,
+}
+
+impl Calibration {
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    pub fn get(&self, lane: &str, precision: &str) -> Option<&LaneFit> {
+        self.lanes
+            .iter()
+            .find(|f| f.lane == lane && f.precision == precision)
+    }
+
+    /// Deterministic least-squares fit of `(overhead, per_row)` per
+    /// `(lane, precision)` key.  Order-independent: samples are
+    /// grouped and sorted before any arithmetic, sums are exact
+    /// `i128`, and rounding happens once at the end — the same
+    /// multiset of samples always produces the same `Calibration`,
+    /// bit for bit.  Keys with fewer than [`MIN_FIT_SAMPLES`]
+    /// post-trim measurements, or with a single distinct batch size
+    /// (slope unidentifiable), are omitted.
+    pub fn fit(samples: &[ServiceSample]) -> Calibration {
+        let mut by_key: BTreeMap<(&str, &str), Vec<(u64, u64)>> =
+            BTreeMap::new();
+        for s in samples {
+            by_key
+                .entry(s.lane_key())
+                .or_default()
+                .push((s.batch_rows as u64, s.exec_us));
+        }
+        let mut lanes = Vec::new();
+        for ((lane, precision), points) in by_key {
+            if let Some((overhead_us, per_row_us, used)) =
+                fit_points(points)
+            {
+                lanes.push(LaneFit {
+                    lane: lane.to_string(),
+                    precision: precision.to_string(),
+                    overhead_us,
+                    per_row_us,
+                    samples: used,
+                });
+            }
+        }
+        Calibration { lanes }
+    }
+
+    /// Fold `newer` into `self`: entries sharing a `(lane,
+    /// precision)` key are replaced by the newer fit, entries only in
+    /// `self` survive — a short run refines the lanes it exercised
+    /// without clobbering the rest of the calibration history.
+    pub fn merge(self, newer: Calibration) -> Calibration {
+        let mut map: BTreeMap<(String, String), LaneFit> = self
+            .lanes
+            .into_iter()
+            .map(|f| ((f.lane.clone(), f.precision.clone()), f))
+            .collect();
+        for f in newer.lanes {
+            map.insert((f.lane.clone(), f.precision.clone()), f);
+        }
+        Calibration {
+            lanes: map.into_values().collect(),
+        }
+    }
+
+    /// `{"lanes": [{"lane", "precision", "overhead_us", "per_row_us",
+    /// "samples"}, ...]}` — all values integers, so [`Json::dump`] is
+    /// byte-stable.
+    pub fn to_json(&self) -> Json {
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|f| {
+                let mut m = BTreeMap::new();
+                m.insert("lane".to_string(), Json::Str(f.lane.clone()));
+                m.insert(
+                    "precision".to_string(),
+                    Json::Str(f.precision.clone()),
+                );
+                m.insert(
+                    "overhead_us".to_string(),
+                    Json::Num(f.overhead_us as f64),
+                );
+                m.insert(
+                    "per_row_us".to_string(),
+                    Json::Num(f.per_row_us as f64),
+                );
+                m.insert("samples".to_string(), Json::Num(f.samples as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("lanes".to_string(), Json::Arr(lanes));
+        Json::Obj(root)
+    }
+
+    /// Inverse of [`Calibration::to_json`]; malformed entries are
+    /// skipped rather than failing the whole document.
+    pub fn parse(doc: &Json) -> Calibration {
+        let mut lanes = Vec::new();
+        if let Some(arr) = doc.get("lanes").and_then(Json::as_arr) {
+            for e in arr {
+                let lane = e.get("lane").and_then(Json::as_str);
+                let precision = e.get("precision").and_then(Json::as_str);
+                let overhead = e.get("overhead_us").and_then(Json::as_i64);
+                let per_row = e.get("per_row_us").and_then(Json::as_i64);
+                let samples = e.get("samples").and_then(Json::as_i64);
+                if let (
+                    Some(lane),
+                    Some(precision),
+                    Some(o),
+                    Some(p),
+                    Some(n),
+                ) = (lane, precision, overhead, per_row, samples)
+                {
+                    if o >= 0 && p >= 0 && n >= 0 {
+                        lanes.push(LaneFit {
+                            lane: lane.to_string(),
+                            precision: precision.to_string(),
+                            overhead_us: o as u64,
+                            per_row_us: p as u64,
+                            samples: n as u64,
+                        });
+                    }
+                }
+            }
+        }
+        lanes.sort_by(|a, b| {
+            (&a.lane, &a.precision).cmp(&(&b.lane, &b.precision))
+        });
+        Calibration { lanes }
+    }
+
+    /// Read `path`; a missing file is an empty calibration (first
+    /// run), a present-but-corrupt one is an error.
+    pub fn read(path: &Path) -> Result<Calibration> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Calibration::default())
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("read calibration {}", path.display())
+                })
+            }
+        };
+        let doc = Json::parse(&text).with_context(|| {
+            format!("parse calibration {}", path.display())
+        })?;
+        Ok(Calibration::parse(&doc))
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().dump() + "\n").with_context(
+            || format!("write calibration {}", path.display()),
+        )
+    }
+}
+
+/// Trim-and-fit one key's points.  Returns `(overhead_us, per_row_us,
+/// samples_used)` or `None` under the minimum-sample /
+/// identifiability guards.
+fn fit_points(points: Vec<(u64, u64)>) -> Option<(u64, u64, u64)> {
+    // Group by batch size; sort within the group so trimming is a
+    // function of the multiset, not of arrival order.
+    let mut by_rows: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    for (rows, us) in points {
+        by_rows.entry(rows).or_default().push(us);
+    }
+    let mut kept: Vec<(u64, u64)> = Vec::new();
+    for (rows, mut durs) in by_rows {
+        durs.sort_unstable();
+        let k = durs.len() / TRIM_DIV;
+        for &us in &durs[k..durs.len() - k] {
+            kept.push((rows, us));
+        }
+    }
+    if kept.len() < MIN_FIT_SAMPLES {
+        return None;
+    }
+    let first = kept[0].0;
+    if kept.iter().all(|&(r, _)| r == first) {
+        // One distinct batch size cannot identify both parameters.
+        return None;
+    }
+    let n = kept.len() as i128;
+    let mut sx = 0i128;
+    let mut sy = 0i128;
+    let mut sxy = 0i128;
+    let mut sxx = 0i128;
+    for &(rows, us) in &kept {
+        let x = rows as i128;
+        let y = us as i128;
+        sx += x;
+        sy += y;
+        sxy += x * y;
+        sxx += x * x;
+    }
+    let den = n * sxx - sx * sx;
+    if den <= 0 {
+        return None;
+    }
+    let s_num = n * sxy - sx * sy;
+    // slope = s_num / den; intercept = (sy·den − s_num·sx) / (n·den).
+    // A fitted slope below 1 µs/row (or a negative intercept) is
+    // clamped into the range the config layer accepts.
+    let per_row = round_div(s_num, den).max(1);
+    let overhead = round_div(sy * den - s_num * sx, n * den).max(0);
+    Some((overhead as u64, per_row as u64, kept.len() as u64))
+}
+
+// ---------------------------------------------------------------------------
+// Drift detection
+// ---------------------------------------------------------------------------
+
+/// Drift-detection knobs.  All comparisons are deterministic given
+/// the observation sequence, so the virtual-clock harness can assert
+/// the exact replan instant.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Minimum measurement window; counters are sampled and rates
+    /// re-estimated the first observation at or past the boundary.
+    pub window: Duration,
+    /// EWMA smoothing across windows (1.0 = trust only the latest).
+    pub alpha: f64,
+    /// A lane breaches when its EWMA arrival rate exceeds
+    /// `planned_rate × rate_ratio`.
+    pub rate_ratio: f64,
+    /// The pool breaches when more than this fraction of a window's
+    /// completions missed their deadline (p99 budget ⇒ 0.01 is the
+    /// natural setting; higher tolerates bursts).
+    pub miss_ratio: f64,
+    /// Consecutive breached windows required before firing.
+    pub patience: u32,
+    /// Minimum spacing between replans.
+    pub cooldown: Duration,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            window: Duration::from_secs(1),
+            alpha: 0.5,
+            rate_ratio: 1.5,
+            miss_ratio: 0.05,
+            patience: 3,
+            cooldown: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What a fired [`DriftMonitor`] measured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftVerdict {
+    /// EWMA arrival rate per lane, req/s.
+    pub rates: Vec<f64>,
+    /// Human-readable trigger (first breaching condition).
+    pub reason: String,
+}
+
+/// Watches the scheduler's cumulative counters for sustained drift
+/// from the planned load.  Pure state machine: feed it monotonic
+/// `(now, accepted-per-lane, completed, missed)` snapshots and it
+/// fires a [`DriftVerdict`] after [`DriftConfig::patience`]
+/// consecutive breached windows (subject to the cooldown).
+#[derive(Debug)]
+pub struct DriftMonitor {
+    cfg: DriftConfig,
+    /// Rates the current plan was sized for; updated on
+    /// [`DriftMonitor::note_replan`] so one replan does not re-arm.
+    planned: Vec<f64>,
+    ema: Vec<Ema>,
+    window_start: Duration,
+    last_accepted: Vec<u64>,
+    last_completed: u64,
+    last_missed: u64,
+    breaches: u32,
+    cooldown_until: Duration,
+}
+
+impl DriftMonitor {
+    pub fn new(
+        cfg: DriftConfig,
+        planned_rates: Vec<f64>,
+        now: Duration,
+    ) -> DriftMonitor {
+        let n = planned_rates.len();
+        DriftMonitor {
+            cfg,
+            planned: planned_rates,
+            ema: (0..n).map(|_| Ema::new(cfg.alpha)).collect(),
+            window_start: now,
+            last_accepted: vec![0; n],
+            last_completed: 0,
+            last_missed: 0,
+            breaches: 0,
+            cooldown_until: Duration::ZERO,
+        }
+    }
+
+    /// True when the next [`DriftMonitor::observe`] call would close
+    /// a window — lets callers skip gathering counters off-boundary.
+    pub fn due(&self, now: Duration) -> bool {
+        now >= self.window_start + self.cfg.window
+    }
+
+    /// Feed one cumulative-counter snapshot.  Off-boundary snapshots
+    /// are free no-ops; at (or past) a window boundary the per-lane
+    /// rates are re-estimated over the *actual* elapsed time and the
+    /// breach state advances.  Fires at most once per window.
+    pub fn observe(
+        &mut self,
+        now: Duration,
+        accepted: &[u64],
+        completed: u64,
+        missed: u64,
+    ) -> Option<DriftVerdict> {
+        if !self.due(now) {
+            return None;
+        }
+        let secs = (now - self.window_start).as_secs_f64();
+        self.window_start = now;
+        let mut rates = Vec::with_capacity(self.planned.len());
+        let mut breach: Option<String> = None;
+        for i in 0..self.planned.len() {
+            let cur = accepted.get(i).copied().unwrap_or(0);
+            let delta = cur.saturating_sub(self.last_accepted[i]);
+            self.last_accepted[i] = cur;
+            let rate = self.ema[i].push(delta as f64 / secs);
+            rates.push(rate);
+            // Zero/negative planned rate marks a back-to-back lane:
+            // throughput-planned, never rate-breaching.
+            if breach.is_none()
+                && self.planned[i] > 0.0
+                && rate > self.planned[i] * self.cfg.rate_ratio
+            {
+                breach = Some(format!(
+                    "lane {i}: measured {rate:.1} req/s vs planned \
+                     {:.1} req/s",
+                    self.planned[i]
+                ));
+            }
+        }
+        let dc = completed.saturating_sub(self.last_completed);
+        let dm = missed.saturating_sub(self.last_missed);
+        self.last_completed = completed;
+        self.last_missed = missed;
+        if breach.is_none()
+            && dc > 0
+            && dm as f64 / dc as f64 > self.cfg.miss_ratio
+        {
+            breach = Some(format!(
+                "{dm}/{dc} completions in the window missed their deadline"
+            ));
+        }
+        match breach {
+            Some(reason) => {
+                self.breaches += 1;
+                if self.breaches >= self.cfg.patience
+                    && now >= self.cooldown_until
+                {
+                    return Some(DriftVerdict { rates, reason });
+                }
+            }
+            None => self.breaches = 0,
+        }
+        None
+    }
+
+    /// The caller adopted a plan sized for `rates`: re-anchor the
+    /// planned rates, reset the breach streak, start the cooldown.
+    pub fn note_replan(&mut self, now: Duration, rates: &[f64]) {
+        for (p, &r) in self.planned.iter_mut().zip(rates) {
+            if *p > 0.0 && r > 0.0 {
+                *p = r;
+            }
+        }
+        self.breaches = 0;
+        self.cooldown_until = now + self.cfg.cooldown;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replanning
+// ---------------------------------------------------------------------------
+
+/// Intersect the planner's wish list with what is actually compiled.
+/// Returns the adoptable subset (ascending, possibly empty) and
+/// whether the plan was fully covered.
+pub fn feasible_buckets(
+    planned: &[usize],
+    compiled: &[usize],
+) -> (Vec<usize>, bool) {
+    let got: Vec<usize> = planned
+        .iter()
+        .copied()
+        .filter(|b| compiled.contains(b))
+        .collect();
+    let full = got.len() == planned.len();
+    (got, full)
+}
+
+/// Static inputs of the live-replan loop, cloneable into the
+/// simulation spec.
+#[derive(Debug, Clone)]
+pub struct ReplanSpec {
+    pub drift: DriftConfig,
+    pub planner: PlannerConfig,
+    /// Per-lane service models (calibrated where available).
+    pub models: Vec<ServiceModel>,
+    /// Per-lane compiled bucket sets — the hard constraint a live
+    /// replan cannot plan past: planned buckets outside this set fall
+    /// back to the feasible subset.
+    pub compiled: Vec<Vec<usize>>,
+}
+
+/// The retunes a fired replan wants adopted.
+#[derive(Debug, Clone)]
+pub struct Retunes {
+    /// Per-lane updates for
+    /// [`Scheduler::adopt_plan`](crate::serve::sched::Scheduler::adopt_plan);
+    /// lanes with no feasible plan (or no compiled overlap) keep
+    /// their current config and are absent here.
+    pub updates: Vec<LaneRetune>,
+    /// False when any lane fell back to a compiled subset or kept its
+    /// old config for lack of one.
+    pub full: bool,
+    /// Measured rates the new plan was sized for.
+    pub rates: Vec<f64>,
+    pub reason: String,
+}
+
+/// Drift monitor + planner + compiled-bucket constraint, bundled for
+/// the two call sites (the transport reactor tick and the
+/// virtual-clock simulation loop).
+#[derive(Debug)]
+pub struct ReplanDriver {
+    monitor: DriftMonitor,
+    spec: ReplanSpec,
+    /// Profile template; `rate` is overwritten with the measured EWMA
+    /// at each replan.
+    profiles: Vec<LaneProfile>,
+}
+
+impl ReplanDriver {
+    /// `profiles` carry the *planned* rates (seeding the monitor) and
+    /// the per-lane names/deadlines/weights/size distributions reused
+    /// at replan time.
+    pub fn new(
+        spec: ReplanSpec,
+        profiles: Vec<LaneProfile>,
+        now: Duration,
+    ) -> ReplanDriver {
+        let planned = profiles.iter().map(|p| p.rate).collect();
+        ReplanDriver {
+            monitor: DriftMonitor::new(spec.drift, planned, now),
+            spec,
+            profiles,
+        }
+    }
+
+    /// Cheap boundary test; gather counters only when this is true.
+    pub fn due(&self, now: Duration) -> bool {
+        self.monitor.due(now)
+    }
+
+    /// Feed counters; on sustained drift, re-plan with the calibrated
+    /// models at the measured rates and return the retunes (the
+    /// caller adopts them via `Scheduler::adopt_plan`).  The monitor
+    /// re-anchors on the returned rates, so a successful replan does
+    /// not immediately re-arm.
+    pub fn poll(
+        &mut self,
+        now: Duration,
+        accepted: &[u64],
+        completed: u64,
+        missed: u64,
+    ) -> Result<Option<Retunes>> {
+        let Some(verdict) =
+            self.monitor.observe(now, accepted, completed, missed)
+        else {
+            return Ok(None);
+        };
+        let mut profiles = self.profiles.clone();
+        for (p, &r) in profiles.iter_mut().zip(&verdict.rates) {
+            if p.rate > 0.0 && r > 0.0 {
+                p.rate = r;
+            }
+        }
+        let plan = planner::plan_with_models(
+            &self.spec.planner,
+            &self.spec.models,
+            &profiles,
+        )?;
+        let mut updates = Vec::new();
+        let mut full = true;
+        for (i, lp) in plan.lanes.iter().enumerate() {
+            if !lp.is_feasible() {
+                full = false;
+                continue;
+            }
+            let (buckets, covered) =
+                feasible_buckets(&lp.buckets, &self.spec.compiled[i]);
+            if !covered {
+                full = false;
+            }
+            if buckets.is_empty() {
+                continue;
+            }
+            let m = self.spec.models[i];
+            updates.push(LaneRetune {
+                lane: i,
+                batcher: BatcherConfig::new(buckets, lp.flush_timeout)?,
+                overhead_us: m.overhead.as_micros() as u64,
+                per_row_us: m.per_row.as_micros() as u64,
+            });
+        }
+        self.monitor.note_replan(now, &verdict.rates);
+        Ok(Some(Retunes {
+            updates,
+            full,
+            rates: verdict.rates,
+            reason: verdict.reason,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(
+        lane: &str,
+        precision: &str,
+        rows: usize,
+        us: u64,
+    ) -> ServiceSample {
+        ServiceSample {
+            lane: lane.to_string(),
+            precision: precision.to_string(),
+            batch_rows: rows,
+            exec_us: us,
+        }
+    }
+
+    /// 12 exact samples on `4000 + 500·rows` across four batch sizes.
+    fn linear_samples() -> Vec<ServiceSample> {
+        let mut out = Vec::new();
+        for &rows in &[1usize, 2, 4, 8] {
+            for _ in 0..3 {
+                out.push(sample(
+                    "m/a",
+                    "fp32",
+                    rows,
+                    4000 + 500 * rows as u64,
+                ));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fit_recovers_an_exact_linear_model() {
+        let cal = Calibration::fit(&linear_samples());
+        assert_eq!(cal.lanes.len(), 1);
+        let f = &cal.lanes[0];
+        assert_eq!((f.lane.as_str(), f.precision.as_str()), ("m/a", "fp32"));
+        assert_eq!(f.overhead_us, 4000);
+        assert_eq!(f.per_row_us, 500);
+        assert_eq!(f.samples, 12);
+        assert_eq!(f.model().service(8), Duration::from_micros(8000));
+    }
+
+    #[test]
+    fn fit_is_bit_deterministic_and_order_independent() {
+        let fwd = linear_samples();
+        let mut rev = fwd.clone();
+        rev.reverse();
+        let a = Calibration::fit(&fwd).to_json().dump();
+        let b = Calibration::fit(&fwd).to_json().dump();
+        let c = Calibration::fit(&rev).to_json().dump();
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        // Integer values serialize without a fractional part.
+        assert!(a.contains("\"overhead_us\":4000"));
+        assert!(a.contains("\"per_row_us\":500"));
+    }
+
+    #[test]
+    fn fit_trims_straggler_outliers() {
+        let mut samples = linear_samples();
+        // Ten more clean size-4 measurements plus one straggler: the
+        // size-4 group has 14 entries, so the trim (14/10 = 1 from
+        // each end) drops the straggler and the group minimum.
+        for _ in 0..10 {
+            samples.push(sample("m/a", "fp32", 4, 6000));
+        }
+        samples.push(sample("m/a", "fp32", 4, 1_000_000));
+        let cal = Calibration::fit(&samples);
+        let f = cal.get("m/a", "fp32").unwrap();
+        assert_eq!(f.overhead_us, 4000);
+        assert_eq!(f.per_row_us, 500);
+        // 23 size-4 + trimmed elsewhere: groups 1,2,8 keep 3 each
+        // (3/10 = 0 trimmed), size-4 keeps 12 of 14.
+        assert_eq!(f.samples, 21);
+    }
+
+    #[test]
+    fn fit_guards_thin_and_degenerate_lanes() {
+        // Seven samples: below the minimum.
+        let thin: Vec<ServiceSample> =
+            linear_samples().into_iter().take(7).collect();
+        assert!(Calibration::fit(&thin).is_empty());
+        // Eight samples, one batch size: slope unidentifiable.
+        let flat: Vec<ServiceSample> =
+            (0..8).map(|_| sample("m/a", "fp32", 4, 6000)).collect();
+        assert!(Calibration::fit(&flat).is_empty());
+        // Mixed: the good lane fits, the thin one is omitted.
+        let mut mixed = linear_samples();
+        mixed.push(sample("m/b", "mixed_f16", 1, 900));
+        let cal = Calibration::fit(&mixed);
+        assert_eq!(cal.lanes.len(), 1);
+        assert!(cal.get("m/b", "mixed_f16").is_none());
+    }
+
+    #[test]
+    fn merge_replaces_matching_keys_and_keeps_the_rest() {
+        let old = Calibration {
+            lanes: vec![
+                LaneFit {
+                    lane: "m/a".into(),
+                    precision: "fp32".into(),
+                    overhead_us: 100,
+                    per_row_us: 10,
+                    samples: 50,
+                },
+                LaneFit {
+                    lane: "m/b".into(),
+                    precision: "mixed_f16".into(),
+                    overhead_us: 200,
+                    per_row_us: 20,
+                    samples: 60,
+                },
+            ],
+        };
+        let newer = Calibration {
+            lanes: vec![LaneFit {
+                lane: "m/a".into(),
+                precision: "fp32".into(),
+                overhead_us: 111,
+                per_row_us: 11,
+                samples: 12,
+            }],
+        };
+        let merged = old.merge(newer);
+        assert_eq!(merged.lanes.len(), 2);
+        assert_eq!(merged.get("m/a", "fp32").unwrap().overhead_us, 111);
+        assert_eq!(merged.get("m/b", "mixed_f16").unwrap().overhead_us, 200);
+        // Output stays sorted by key.
+        assert!(merged.lanes[0].lane <= merged.lanes[1].lane);
+    }
+
+    #[test]
+    fn calibration_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "mpx_cal_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = dir.join(CALIBRATION_FILE);
+        // Missing file reads as empty.
+        assert!(Calibration::read(&path).unwrap().is_empty());
+        let cal = Calibration::fit(&linear_samples());
+        cal.write(&path).unwrap();
+        let back = Calibration::read(&path).unwrap();
+        assert_eq!(back, cal);
+        // Corrupt file is an error, not silently empty.
+        std::fs::write(&path, "not json").unwrap();
+        assert!(Calibration::read(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drift_monitor_fires_after_sustained_breach_only() {
+        let cfg = DriftConfig {
+            window: Duration::from_millis(500),
+            alpha: 0.5,
+            rate_ratio: 2.0,
+            miss_ratio: 2.0, // pressure path disabled
+            patience: 2,
+            cooldown: Duration::from_secs(10),
+        };
+        let mut mon = DriftMonitor::new(cfg, vec![100.0], Duration::ZERO);
+        let w = |k: u64| Duration::from_millis(500 * k);
+        // Two on-plan windows: 50 accepted per 500 ms ⇒ 100 req/s.
+        assert_eq!(mon.observe(w(1), &[50], 0, 0), None);
+        assert_eq!(mon.observe(w(2), &[100], 0, 0), None);
+        // Rate step to 500 req/s: first breached window arms…
+        assert_eq!(mon.observe(w(3), &[350], 0, 0), None);
+        // …second fires (patience 2): EWMA = 0.5·300 + 0.5·500 = 400.
+        let v = mon.observe(w(4), &[600], 0, 0).unwrap();
+        assert_eq!(v.rates, vec![400.0]);
+        assert!(v.reason.contains("lane 0"));
+        // Re-anchoring on the measured rate absorbs the new level:
+        // the same traffic no longer reads as drift.
+        mon.note_replan(w(4), &v.rates);
+        assert_eq!(mon.observe(w(5), &[850], 0, 0), None);
+        // Off-boundary observations are no-ops.
+        assert!(!mon.due(w(5) + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn drift_monitor_miss_pressure_and_reset() {
+        let cfg = DriftConfig {
+            window: Duration::from_millis(500),
+            alpha: 1.0,
+            rate_ratio: 100.0, // rate path disabled
+            miss_ratio: 0.01,
+            patience: 2,
+            cooldown: Duration::ZERO,
+        };
+        let mut mon = DriftMonitor::new(cfg, vec![100.0], Duration::ZERO);
+        let w = |k: u64| Duration::from_millis(500 * k);
+        // 5 % of completions late: breach 1 of 2.
+        assert_eq!(mon.observe(w(1), &[50], 100, 5), None);
+        // A clean window resets the streak…
+        assert_eq!(mon.observe(w(2), &[100], 200, 5), None);
+        assert_eq!(mon.observe(w(3), &[150], 300, 10), None);
+        // …so pressure must be *sustained* to fire.
+        let v = mon.observe(w(4), &[200], 400, 20).unwrap();
+        assert!(v.reason.contains("missed their deadline"));
+    }
+
+    #[test]
+    fn feasible_buckets_intersects_and_reports() {
+        assert_eq!(
+            feasible_buckets(&[1, 8], &[1, 2, 4, 8]),
+            (vec![1, 8], true)
+        );
+        assert_eq!(feasible_buckets(&[1, 8], &[2, 8]), (vec![8], false));
+        assert_eq!(feasible_buckets(&[4], &[1, 2]), (vec![], false));
+        assert_eq!(feasible_buckets(&[], &[1]), (vec![], true));
+    }
+}

@@ -86,6 +86,7 @@
 //! blocking waits (`Condvar`) and real executors differ.
 
 pub mod batcher;
+pub mod calibrate;
 pub mod clock;
 pub mod loadgen;
 pub mod planner;
@@ -97,6 +98,10 @@ pub mod worker;
 pub use batcher::{
     decide, refill, BatcherConfig, Decision, FormedBatch, SchedPolicy,
 };
+pub use calibrate::{
+    Calibration, DriftConfig, DriftMonitor, LaneFit, ReplanDriver,
+    ReplanSpec, CALIBRATION_FILE,
+};
 pub use planner::{
     LanePlan, LaneProfile, Plan, PlanEstimate, PlanVerdict, PlannerConfig,
     ServiceModel,
@@ -104,9 +109,9 @@ pub use planner::{
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use queue::{QueuePoll, QueueStats, Request, RequestQueue};
 pub use sched::{
-    simulate, AutoscalePolicy, Completion, CompletionFn, LaneLoad, LaneSpec,
-    PollWork, ScaleOp, Scheduler, SimBatch, SimCompletion, SimLaneReport,
-    SimReport, SimSpec, Work,
+    simulate, AdoptOutcome, AutoscalePolicy, Completion, CompletionFn,
+    LaneLoad, LaneRetune, LaneSpec, PollWork, ScaleOp, Scheduler, SimBatch,
+    SimCompletion, SimLaneReport, SimReplan, SimReport, SimSpec, Work,
 };
 pub use transport::{Server, ServerHandle, TransportReport};
 pub use worker::{BatchExecutor, LaneTally, WorkerReport};
@@ -532,8 +537,16 @@ pub fn autoscale_policy(cfg: &ServeConfig) -> AutoscalePolicy {
 /// run it anywhere.
 pub fn plan_for_config(cfg: &ServeConfig) -> Result<planner::Plan> {
     cfg.validate()?;
-    let profiles: Vec<planner::LaneProfile> = cfg
-        .lane_configs()
+    let profiles = lane_profiles(cfg);
+    let pcfg = planner_config(cfg);
+    let (models, _) = lane_service_models(cfg)?;
+    planner::plan_with_models(&pcfg, &models, &profiles)
+}
+
+/// One [`planner::LaneProfile`] per configured lane — the offered
+/// load the planner (and the live replanner) sizes buckets against.
+pub fn lane_profiles(cfg: &ServeConfig) -> Vec<planner::LaneProfile> {
+    cfg.lane_configs()
         .iter()
         .map(|lc| planner::LaneProfile {
             name: lc.name.clone(),
@@ -542,19 +555,81 @@ pub fn plan_for_config(cfg: &ServeConfig) -> Result<planner::Plan> {
             weight: lc.weight,
             size_dist: lc.size_dist(),
         })
-        .collect();
-    let pcfg = planner::PlannerConfig {
+        .collect()
+}
+
+/// The planner search knobs a [`ServeConfig`] describes (candidate
+/// ladder, pool size, SLO headroom) — everything except the service
+/// model, which [`lane_service_models`] resolves separately.
+pub fn planner_config(cfg: &ServeConfig) -> planner::PlannerConfig {
+    planner::PlannerConfig {
         candidates: planner::pow2_candidates(cfg.max_batch),
         workers: cfg.workers,
         max_compiled: cfg.planner.max_compiled,
         safety: cfg.planner.safety,
         max_flush: cfg.flush_timeout(),
-    };
-    let model = planner::ServiceModel {
+    }
+}
+
+/// The stable (name, precision) identity of every configured lane, in
+/// lane order — the key [`ServiceSample`] records and
+/// `calibration.json` entries are filed under.  Names match the
+/// [`LaneSpec`]s the engine runs (`<model>/<lane>`), so samples from a
+/// run always join back to the lane that produced them.
+pub fn lane_identities(cfg: &ServeConfig) -> Vec<crate::trace::LaneId> {
+    cfg.lane_configs()
+        .iter()
+        .map(|lc| {
+            crate::trace::LaneId::new(
+                format!("{}/{}", cfg.model, lc.name),
+                lc.precision.tag(),
+            )
+        })
+        .collect()
+}
+
+/// Resolve each lane's linear [`planner::ServiceModel`] according to
+/// `[serve.planner] source`:
+///
+/// * `"config"` — every lane gets the `overhead_us` / `per_row_us`
+///   constants.
+/// * `"calibrated"` — lanes with a fitted entry in the artifacts
+///   directory's `calibration.json` use it; lanes without one (never
+///   measured, or fit guard rejected the samples) fall back to the
+///   config constants.
+///
+/// Returns one model per lane plus a per-lane flag saying whether the
+/// measured fit was used — `mpx serve --plan` reports the fallback
+/// rather than hiding it.
+pub fn lane_service_models(
+    cfg: &ServeConfig,
+) -> Result<(Vec<planner::ServiceModel>, Vec<bool>)> {
+    let fallback = planner::ServiceModel {
         overhead: Duration::from_micros(cfg.planner.overhead_us),
         per_row: Duration::from_micros(cfg.planner.per_row_us),
     };
-    planner::plan(&pcfg, &model, &profiles)
+    let ids = lane_identities(cfg);
+    if cfg.planner.source != crate::config::PlannerSource::Calibrated {
+        return Ok((vec![fallback; ids.len()], vec![false; ids.len()]));
+    }
+    let path = std::path::Path::new(&cfg.artifacts_dir)
+        .join(calibrate::CALIBRATION_FILE);
+    let cal = Calibration::read(&path)?;
+    let mut models = Vec::with_capacity(ids.len());
+    let mut calibrated = Vec::with_capacity(ids.len());
+    for id in &ids {
+        match cal.get(&id.name, &id.precision) {
+            Some(fit) => {
+                models.push(fit.model());
+                calibrated.push(true);
+            }
+            None => {
+                models.push(fallback);
+                calibrated.push(false);
+            }
+        }
+    }
+    Ok((models, calibrated))
 }
 
 /// Split a total request budget across lanes in proportion to their
@@ -725,6 +800,7 @@ pub fn run_with_artifacts(
     persist_trace(
         &cfg.trace,
         store.dir(),
+        &lane_identities(cfg),
         &report.spans,
         report.trace_dropped,
     )?;
@@ -732,13 +808,24 @@ pub fn run_with_artifacts(
 }
 
 /// Persist one run's trace artifacts: the Chrome trace-event JSON to
-/// `trace.trace_out` (when set) and the [`ServiceSample`] calibration
-/// records to `<dir>/service_samples.json` — next to the compiled
-/// artifacts, where the planner's closed loop can pick them up.
-/// No-op when tracing is off or no spans were recorded.
+/// `trace.trace_out` (when set), the [`ServiceSample`] calibration
+/// records to `<dir>/service_samples.json`, and the refreshed
+/// per-lane service-model fit to `<dir>/calibration.json` — next to
+/// the compiled artifacts, where `[serve.planner] source =
+/// "calibrated"` picks them up.  `lanes` maps each Execute span's
+/// run-local lane index to its stable identity (see
+/// [`lane_identities`]).
+///
+/// Both JSON files *merge* with what is already on disk rather than
+/// clobbering it: samples append under a per-lane cap
+/// ([`crate::trace::SERVICE_SAMPLE_CAP`], oldest dropped first), and
+/// calibration entries replace only the lanes this run re-fitted —
+/// short runs never erase another lane's history.  No-op when
+/// tracing is off or no spans were recorded.
 pub fn persist_trace(
     trace: &TraceConfig,
     dir: &std::path::Path,
+    lanes: &[crate::trace::LaneId],
     spans: &[Span],
     dropped: u64,
 ) -> Result<()> {
@@ -753,14 +840,46 @@ pub fn persist_trace(
         )?;
         eprintln!("[mpx] trace: wrote {} spans to {out}", spans.len());
     }
-    let samples = crate::trace::service_samples(spans);
-    if !samples.is_empty() {
-        let path = dir.join("service_samples.json");
-        crate::trace::write_service_samples(&path, &samples)?;
+    let samples = crate::trace::service_samples(spans, lanes);
+    if samples.is_empty() {
+        return Ok(());
+    }
+    let path = dir.join("service_samples.json");
+    let existing = crate::trace::read_service_samples(&path)
+        .unwrap_or_else(|e| {
+            eprintln!("[mpx] trace: {e}; starting a fresh sample history");
+            Vec::new()
+        });
+    let merged = crate::trace::merge_service_samples(
+        existing,
+        &samples,
+        crate::trace::SERVICE_SAMPLE_CAP,
+    );
+    crate::trace::write_service_samples(&path, &merged)?;
+    eprintln!(
+        "[mpx] trace: {} service samples ({} new) in {}",
+        merged.len(),
+        samples.len(),
+        path.display()
+    );
+
+    // Re-fit from the merged history: more batches per (lane, bucket)
+    // than any single run provides, and bit-deterministic for a given
+    // history.  Lanes the fit guard rejects keep their previous
+    // calibration entry (merge, don't clobber).
+    let fresh = Calibration::fit(&merged);
+    if !fresh.is_empty() {
+        let cal_path = dir.join(calibrate::CALIBRATION_FILE);
+        let old = Calibration::read(&cal_path).unwrap_or_else(|e| {
+            eprintln!("[mpx] calibrate: {e}; rebuilding from samples");
+            Calibration::default()
+        });
+        let cal = old.merge(fresh);
+        cal.write(&cal_path)?;
         eprintln!(
-            "[mpx] trace: wrote {} service samples to {}",
-            samples.len(),
-            path.display()
+            "[mpx] calibrate: fitted {} lane(s) into {}",
+            cal.lanes.len(),
+            cal_path.display()
         );
     }
     Ok(())
@@ -779,6 +898,9 @@ struct PreparedLanes {
     lane_cfgs: Vec<LaneConfig>,
     specs: Vec<LaneSpec>,
     arts: Vec<LaneArtifacts>,
+    /// Per lane: every bucket size with a compiled forward artifact —
+    /// the hard ceiling a live replan can adopt without recompiling.
+    compiled: Vec<Vec<usize>>,
 }
 
 /// Discover/load the forward + init artifacts for every configured
@@ -815,6 +937,7 @@ fn prepare_lanes(
 
     let mut lane_arts = Vec::new();
     let mut specs = Vec::new();
+    let mut compiled = Vec::new();
     for (i, lc) in lane_cfgs.iter().enumerate() {
         let available = discover_buckets(store, cfg, lc.precision);
         if available.is_empty() {
@@ -853,7 +976,11 @@ fn prepare_lanes(
             }
             None => (available.clone(), cfg.flush_timeout()),
         };
-        let fwd = buckets
+        // Load every *discovered* bucket artifact, not just the
+        // planned subset: executors index by exact bucket size, and a
+        // live replan may adopt any compiled bucket — the loaded set
+        // is the hard ceiling of what `adopt_plan` can switch to.
+        let fwd = available
             .iter()
             .map(|&b| {
                 Ok((b, store.load(&cfg.fwd_artifact_for(lc.precision, b))?))
@@ -868,8 +995,9 @@ fn prepare_lanes(
             deadline: lc.deadline(),
         });
         lane_arts.push(LaneArtifacts { init, fwd });
+        compiled.push(available);
     }
-    Ok(PreparedLanes { lane_cfgs, specs, arts: lane_arts })
+    Ok(PreparedLanes { lane_cfgs, specs, arts: lane_arts, compiled })
 }
 
 /// The network serving path behind `mpx serve --listen`: the same
@@ -913,6 +1041,33 @@ pub fn run_transport_with_artifacts(
         if cfg.trace.enabled { ", GET /debug/trace" } else { "" },
     );
 
+    // Close the planner loop: when the planner chose the buckets,
+    // watch the measured arrival rates / deadline pressure and replan
+    // live against the resolved (config or calibrated) service
+    // models, constrained to the compiled bucket sets.
+    let (models, _) = lane_service_models(cfg)?;
+    if cfg.use_planner() {
+        let spec = ReplanSpec {
+            drift: DriftConfig::default(),
+            planner: planner_config(cfg),
+            models: models.clone(),
+            compiled: prepared.compiled.clone(),
+        };
+        server.set_replan(ReplanDriver::new(
+            spec,
+            lane_profiles(cfg),
+            Duration::ZERO,
+        ));
+    }
+    server.set_service_models(
+        models
+            .iter()
+            .map(|m| {
+                (m.overhead.as_micros() as u64, m.per_row.as_micros() as u64)
+            })
+            .collect(),
+    );
+
     let lane_arts = prepared.arts;
     let make_executor = |_worker: usize, lane: usize| {
         let la = &lane_arts[lane];
@@ -928,6 +1083,7 @@ pub fn run_transport_with_artifacts(
     persist_trace(
         &cfg.trace,
         store.dir(),
+        &lane_identities(cfg),
         &report.spans,
         report.trace_dropped,
     )?;
@@ -969,6 +1125,116 @@ mod tests {
                 total
             );
         }
+    }
+
+    #[test]
+    fn split_requests_conserves_and_respects_zero_rates() {
+        // Property sweep under a deterministic LCG: for any mix of
+        // rated and zero-rate lanes, (1) the split sums to the total,
+        // (2) zero-rate lanes get nothing while any lane is rated,
+        // (3) every rated lane except the first gets exactly its
+        // floored proportional share — the remainder lands on the
+        // first *rated* lane and nowhere else.
+        let mut state = 0x2545_F491_4F6C_DD1Du64;
+        let mut next = move || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        for _ in 0..500 {
+            let n = (next() % 6 + 1) as usize;
+            let total = next() % 10_000;
+            let lanes: Vec<LaneConfig> = (0..n)
+                .map(|i| {
+                    let rate = if next() % 3 == 0 {
+                        0.0
+                    } else {
+                        (next() % 997 + 1) as f64 / 7.0
+                    };
+                    lane(&format!("l{i}"), rate)
+                })
+                .collect();
+            let out = split_requests(total, &lanes);
+            assert_eq!(out.len(), n);
+            assert_eq!(out.iter().sum::<u64>(), total, "lanes {lanes:?}");
+            let sum: f64 = lanes.iter().map(|l| l.rate.max(0.0)).sum();
+            let Some(first) = lanes.iter().position(|l| l.rate > 0.0) else {
+                continue; // all back-to-back: covered by the exact test
+            };
+            for (i, l) in lanes.iter().enumerate() {
+                let floor_share =
+                    (total as f64 * l.rate.max(0.0) / sum).floor() as u64;
+                if l.rate <= 0.0 {
+                    assert_eq!(out[i], 0, "zero-rate lane {i} offered load");
+                } else if i == first {
+                    assert!(out[i] >= floor_share);
+                } else {
+                    assert_eq!(out[i], floor_share, "remainder leaked to {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persist_trace_merges_samples_and_calibration_across_runs() {
+        // Regression: persist_trace used to rewrite
+        // service_samples.json wholesale, so each run erased every
+        // other lane's history (and with it the calibration).  Two
+        // runs against the same directory must *accumulate* samples
+        // and keep both lanes' fits.
+        use crate::trace::{LaneId, Span, SpanKind, TraceConfig};
+        let dir = std::env::temp_dir().join("mpx_persist_trace_merge_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let us = Duration::from_micros;
+        let exec = |seq: u64, bucket: u64, dur_us: u64| Span {
+            kind: SpanKind::Execute,
+            start: us(seq * 10_000),
+            end: us(seq * 10_000 + dur_us),
+            seq,
+            a: 0,
+            b: bucket,
+            c: bucket,
+        };
+        // Ten executes on an exact linear model 300 + 130·rows.
+        let spans_a: Vec<Span> = (0..10)
+            .map(|i| {
+                if i % 2 == 0 { exec(i, 1, 430) } else { exec(i, 8, 1340) }
+            })
+            .collect();
+        let trace = TraceConfig { enabled: true, ..TraceConfig::default() };
+        let lanes_a = [LaneId::new("m/chat", "mixed_f16")];
+        persist_trace(&trace, &dir, &lanes_a, &spans_a, 0).unwrap();
+
+        let sample_path = dir.join("service_samples.json");
+        let after_a =
+            crate::trace::read_service_samples(&sample_path).unwrap();
+        assert_eq!(after_a.len(), 10);
+        let cal_path = dir.join(calibrate::CALIBRATION_FILE);
+        let cal_a = Calibration::read(&cal_path).unwrap();
+        let fit = cal_a.get("m/chat", "mixed_f16").expect("fitted lane");
+        assert_eq!((fit.overhead_us, fit.per_row_us), (300, 130));
+
+        // A second run exercising a *different* lane appends its
+        // samples and leaves the first lane's history and fit intact.
+        let spans_b: Vec<Span> = (0..10)
+            .map(|i| {
+                if i % 2 == 0 { exec(i, 1, 800) } else { exec(i, 8, 2200) }
+            })
+            .collect();
+        let lanes_b = [LaneId::new("m/bulk", "fp32")];
+        persist_trace(&trace, &dir, &lanes_b, &spans_b, 0).unwrap();
+        let merged =
+            crate::trace::read_service_samples(&sample_path).unwrap();
+        assert_eq!(merged.len(), 20);
+        assert_eq!(merged.iter().filter(|s| s.lane == "m/chat").count(), 10);
+        let cal = Calibration::read(&cal_path).unwrap();
+        let kept = cal.get("m/chat", "mixed_f16").expect("merge clobbered");
+        assert_eq!((kept.overhead_us, kept.per_row_us), (300, 130));
+        let bulk = cal.get("m/bulk", "fp32").expect("new lane unfitted");
+        assert_eq!((bulk.overhead_us, bulk.per_row_us), (600, 200));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

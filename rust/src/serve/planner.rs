@@ -292,6 +292,25 @@ pub fn plan(
     model: &ServiceModel,
     lanes: &[LaneProfile],
 ) -> Result<Plan> {
+    let models = vec![model.clone(); lanes.len()];
+    plan_with_models(cfg, &models, lanes)
+}
+
+/// [`plan`] with one [`ServiceModel`] per lane — the calibrated path,
+/// where each lane's `(overhead, per_row)` was fitted from its own
+/// measured executions and lanes no longer share a single model.
+pub fn plan_with_models(
+    cfg: &PlannerConfig,
+    models: &[ServiceModel],
+    lanes: &[LaneProfile],
+) -> Result<Plan> {
+    if models.len() != lanes.len() {
+        bail!(
+            "planner: {} service models for {} lanes",
+            models.len(),
+            lanes.len()
+        );
+    }
     if cfg.candidates.is_empty() {
         bail!("planner: no candidate buckets");
     }
@@ -320,7 +339,8 @@ pub fn plan(
     let total_weight: u64 = lanes.iter().map(|l| l.weight).sum();
     let planned = lanes
         .iter()
-        .map(|lane| {
+        .zip(models)
+        .map(|(lane, model)| {
             let share = lane.weight as f64 / total_weight.max(1) as f64;
             plan_lane(cfg, model, lane, share)
         })
@@ -564,11 +584,19 @@ fn poisson_sizes(lambda: f64, cap: usize) -> Vec<(usize, f64)> {
     if cap <= 1 || lambda <= 0.0 || !lambda.is_finite() {
         return vec![(1, 1.0)];
     }
-    let mut p = (-lambda).exp(); // P(0); underflows to 0 for large λ
-    let mut acc = p;
+    // The pmf is evaluated in log space (ln P(s) = s·ln λ − λ − ln s!)
+    // because exp(−λ) underflows to zero for λ ≳ 746 and the old
+    // multiplicative recurrence seeded from it zeroed every head mass
+    // — including the ones that are individually representable.  Each
+    // term is a true probability (≤ 1), so it exponentiates directly
+    // with no max-shift; the ≥ cap tail lump takes the remaining mass.
+    let ln_lambda = lambda.ln();
+    let mut ln_fact = 0.0; // ln(s!)
+    let mut acc = (-lambda).exp(); // P(0); 0 when it underflows is fine
     let mut out = Vec::with_capacity(cap);
     for s in 1..cap {
-        p *= lambda / s as f64;
+        ln_fact += (s as f64).ln();
+        let p = (s as f64 * ln_lambda - lambda - ln_fact).exp();
         out.push((s, p));
         acc += p;
     }
@@ -857,6 +885,34 @@ mod tests {
             assert!((total - 1.0).abs() < 1e-9, "λ={lambda}: Σ={total}");
             assert!(d.iter().all(|&(s, w)| s >= 1 && w >= 0.0));
         }
+    }
+
+    #[test]
+    fn poisson_sizes_survive_exp_underflow_at_high_lambda() {
+        // exp(−λ) underflows to 0 for λ ≳ 746; the old recurrence
+        // seeded from it then returned exactly zero for every head
+        // size.  At λ = 1000 the head really is negligible (the flush
+        // window holds ~1000 arrivals), so the mass must concentrate
+        // at the cap — as a normalized distribution over every size,
+        // not a degenerate fallback.
+        let d = poisson_sizes(1000.0, 8);
+        assert_eq!(d.len(), 8);
+        let total: f64 = d.iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σ={total}");
+        assert!(d.iter().all(|&(_, w)| w.is_finite() && w >= 0.0));
+        let cap_mass = d.iter().find(|&&(s, _)| s == 8).unwrap().1;
+        assert!(
+            cap_mass > 0.999,
+            "λ ≫ cap must concentrate at cap, got {cap_mass}"
+        );
+        // Just past the underflow cliff the individually-representable
+        // head masses survive log space: at λ = 750 the s = 7 mass is
+        // ~e^{−712} — tiny but nonzero, where the old recurrence
+        // (seeded from exp(−750) = 0) produced exactly 0.
+        let d = poisson_sizes(750.0, 8);
+        assert_eq!(d[6].0, 7);
+        assert!(d[6].1 > 0.0, "head mass at s=7 lost to underflow");
+        assert!(d[6].1 < 1e-300, "head mass at s=7 should be negligible");
     }
 
     #[test]

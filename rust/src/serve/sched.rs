@@ -51,7 +51,9 @@ use anyhow::{bail, Result};
 
 use crate::metrics::LatencyHistogram;
 use crate::serve::batcher::{BatcherConfig, FormedBatch, SchedPolicy};
+use crate::serve::calibrate::{ReplanDriver, ReplanSpec};
 use crate::serve::clock::{Clock, VirtualClock};
+use crate::serve::planner::LaneProfile;
 use crate::serve::queue::{QueuePoll, QueueStats, Request, RequestQueue};
 use crate::trace::{Span, SpanKind, Tracer};
 
@@ -181,6 +183,21 @@ struct SchedState {
     retiring: usize,
     spawned: usize,
     retired: usize,
+    /// Live per-lane dispatch configs.  Seeded from the lane specs
+    /// and hot-swapped by [`Scheduler::adopt_plan`]; kept in the
+    /// locked state (rather than the immutable specs) precisely so a
+    /// live replan can retune bucket sets and flush timeouts without
+    /// draining anything.
+    batchers: Vec<BatcherConfig>,
+    /// DRR quantum: the largest bucket across the *live* batchers, so
+    /// one top-up always covers at least one batch.  Recomputed on
+    /// every adopted plan.
+    quantum: i64,
+    /// Plans adopted since startup (`mpx_serve_replans_total`).
+    replans: u64,
+    /// Per-lane `(overhead_us, per_row_us)` service model behind the
+    /// current plan (`mpx_serve_service_model` gauges).
+    model: Vec<(u64, u64)>,
 }
 
 /// Live/spawned/retired/busy snapshot for reports.
@@ -196,9 +213,6 @@ pub struct Scheduler {
     lanes: Vec<Lane>,
     policy: SchedPolicy,
     autoscale: AutoscalePolicy,
-    /// DRR quantum: the largest bucket across lanes, so one top-up
-    /// always covers at least one batch.
-    quantum: i64,
     clock: Arc<dyn Clock>,
     on_complete: Option<Box<CompletionFn>>,
     /// Span recorder ([`crate::trace`]); `None` costs nothing on the
@@ -238,6 +252,8 @@ impl Scheduler {
             quantum = quantum.max(s.batcher.max_batch() as i64);
         }
         let n = specs.len();
+        let batchers: Vec<BatcherConfig> =
+            specs.iter().map(|s| s.batcher.clone()).collect();
         let lanes = specs
             .into_iter()
             .map(|spec| Lane {
@@ -249,7 +265,6 @@ impl Scheduler {
             lanes,
             policy,
             autoscale,
-            quantum,
             clock,
             on_complete,
             tracer: None,
@@ -262,6 +277,10 @@ impl Scheduler {
                 retiring: 0,
                 spawned: 0,
                 retired: 0,
+                batchers,
+                quantum,
+                replans: 0,
+                model: vec![(0, 0); n],
             }),
             work: Condvar::new(),
         })
@@ -420,16 +439,16 @@ impl Scheduler {
         for _ in 0..=n {
             let i = st.cursor;
             let lane = &self.lanes[i];
-            match lane.queue.poll(&lane.spec.batcher, self.policy, now) {
+            match lane.queue.poll(&st.batchers[i], self.policy, now) {
                 QueuePoll::Ready(take) => {
                     if !st.topped {
                         // Fresh visit: bank one quantum of credit.
-                        st.credit[i] += lane.spec.weight as i64 * self.quantum;
+                        st.credit[i] += lane.spec.weight as i64 * st.quantum;
                         st.topped = true;
                     }
                     if st.credit[i] >= take as i64 {
                         if let Some(mut batch) =
-                            lane.queue.pop(&lane.spec.batcher, take)
+                            lane.queue.pop(&st.batchers[i], take)
                         {
                             // The dispatch instant: trace spans pivot
                             // here (queue-wait ends, service starts).
@@ -634,6 +653,129 @@ impl Scheduler {
             ScaleOp::Hold
         }
     }
+
+    /// Hot-swap lane dispatch configs from a live replan — drains
+    /// nothing.  Queued requests re-bucket on their next dispatch
+    /// (the DRR scan reads the live batchers under the state lock);
+    /// in-flight batches finish on the artifacts they were formed
+    /// for.  `full` is false when the caller fell back to a feasible
+    /// subset of the compiled buckets (or kept a lane unchanged for
+    /// lack of one) — recorded in the `replan` trace instant so the
+    /// timeline says so.  Returns the outcome; the replan counter
+    /// advances even when nothing changed (the decision itself is an
+    /// observable event).
+    pub fn adopt_plan(
+        &self,
+        updates: &[LaneRetune],
+        full: bool,
+    ) -> Result<AdoptOutcome> {
+        for u in updates {
+            if u.lane >= self.lanes.len() {
+                bail!(
+                    "adopt_plan: lane {} out of range ({} lanes)",
+                    u.lane,
+                    self.lanes.len()
+                );
+            }
+            u.batcher.validate()?;
+        }
+        let (ordinal, lanes_changed) = {
+            let mut st = self.state.lock().unwrap();
+            let mut changed = 0usize;
+            for u in updates {
+                let cur = &st.batchers[u.lane];
+                if cur.buckets != u.batcher.buckets
+                    || cur.flush_timeout != u.batcher.flush_timeout
+                {
+                    changed += 1;
+                }
+                st.batchers[u.lane] = u.batcher.clone();
+                st.model[u.lane] = (u.overhead_us, u.per_row_us);
+            }
+            st.quantum = st
+                .batchers
+                .iter()
+                .map(|b| b.max_batch() as i64)
+                .max()
+                .unwrap_or(1);
+            st.replans += 1;
+            (st.replans, changed)
+        };
+        if let Some(t) = &self.tracer {
+            t.instant(
+                SpanKind::Replan,
+                self.clock.now(),
+                ordinal,
+                lanes_changed as u64,
+                full as u64,
+            );
+        }
+        // Wake blocked workers: the flush deadlines they were waiting
+        // on may have moved with the new configs.
+        self.kick();
+        Ok(AdoptOutcome { ordinal, lanes_changed, full })
+    }
+
+    /// Plans adopted since startup (`mpx_serve_replans_total`).
+    pub fn replans(&self) -> u64 {
+        self.state.lock().unwrap().replans
+    }
+
+    /// Per-lane `(overhead_us, per_row_us)` behind the current plan
+    /// (`mpx_serve_service_model` gauges); `(0, 0)` until seeded.
+    pub fn lane_models(&self) -> Vec<(u64, u64)> {
+        self.state.lock().unwrap().model.clone()
+    }
+
+    /// Seed the exported service-model gauges at startup (before any
+    /// replan) with the model the initial plan was sized against.
+    pub fn set_lane_models(&self, models: &[(u64, u64)]) {
+        let mut st = self.state.lock().unwrap();
+        for (slot, m) in st.model.iter_mut().zip(models) {
+            *slot = *m;
+        }
+    }
+
+    /// Live flush timeouts, post-replan — the transport's 429
+    /// `Retry-After` hints read these instead of a startup snapshot.
+    pub fn lane_flush_timeouts(&self) -> Vec<Duration> {
+        self.state
+            .lock()
+            .unwrap()
+            .batchers
+            .iter()
+            .map(|b| b.flush_timeout)
+            .collect()
+    }
+
+    /// The lane's live bucket set (tests, plan reporting).
+    pub fn lane_buckets(&self, lane: usize) -> Vec<usize> {
+        self.state.lock().unwrap().batchers[lane].buckets.clone()
+    }
+}
+
+/// One lane's retune from a live replan ([`Scheduler::adopt_plan`]).
+#[derive(Debug, Clone)]
+pub struct LaneRetune {
+    pub lane: usize,
+    /// The new bucket set + flush timeout.
+    pub batcher: BatcherConfig,
+    /// Service-model parameters the replan was sized with, in µs —
+    /// exported as `mpx_serve_service_model` gauges.
+    pub overhead_us: u64,
+    pub per_row_us: u64,
+}
+
+/// What [`Scheduler::adopt_plan`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdoptOutcome {
+    /// 1-based replan ordinal (the `replan` span's `a` attribute).
+    pub ordinal: u64,
+    /// Lanes whose bucket set or flush timeout actually changed.
+    pub lanes_changed: usize,
+    /// False when some lane fell back to a compiled-bucket subset or
+    /// kept its old config because the planned buckets don't exist.
+    pub full: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -669,6 +811,21 @@ pub struct SimSpec {
     /// span snapshot in [`SimReport::spans`].  Traces are
     /// bit-deterministic: same spec, same spans.
     pub trace: bool,
+    /// Close the planner loop inside the replay: a
+    /// [`ReplanDriver`] observes the scheduler's counters at every
+    /// event and, on sustained drift, re-plans and hot-swaps lane
+    /// configs through [`Scheduler::adopt_plan`] — same machinery the
+    /// production transport polls, driven by the virtual clock.
+    pub replan: Option<SimReplan>,
+}
+
+/// Live-replan inputs for [`simulate`].
+#[derive(Debug, Clone)]
+pub struct SimReplan {
+    pub spec: ReplanSpec,
+    /// Per-lane rates the initial lane configs were planned for —
+    /// seeds the drift monitor's baseline.
+    pub planned_rates: Vec<f64>,
 }
 
 /// One streamed completion, as observed by the simulation's callback.
@@ -723,6 +880,9 @@ pub struct SimReport {
     /// Spans the tracer's ring dropped (oldest-first overflow); zero
     /// means `spans` is the complete timeline.
     pub trace_dropped: u64,
+    /// Virtual instants at which a live replan was adopted
+    /// ([`SimSpec::replan`]); exact and deterministic.
+    pub replans: Vec<Duration>,
 }
 
 impl SimReport {
@@ -844,6 +1004,27 @@ pub fn simulate(spec: SimSpec) -> Result<SimReport> {
     }
     let sched = sched;
 
+    // Live replan: the driver watches the same cumulative counters
+    // the production reactor polls, stepped at every virtual event.
+    let mut driver = spec.replan.as_ref().map(|rp| {
+        let profiles: Vec<LaneProfile> = spec
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LaneProfile {
+                name: l.spec.name.clone(),
+                rate: rp.planned_rates.get(i).copied().unwrap_or(0.0),
+                deadline: l.spec.deadline,
+                weight: l.spec.weight,
+                size_dist: vec![(1, 1.0)],
+            })
+            .collect();
+        ReplanDriver::new(rp.spec.clone(), profiles, Duration::ZERO)
+    });
+    let mut replans: Vec<Duration> = Vec::new();
+    let mut done_total = 0u64;
+    let mut missed_total = 0u64;
+
     // Seed the event heap with every arrival, in lane-major order.
     let mut events = BinaryHeap::new();
     let mut seq = 0u64;
@@ -905,12 +1086,31 @@ pub fn simulate(spec: SimSpec) -> Result<SimReport> {
                 let (lane, batch) = in_flight[worker]
                     .take()
                     .expect("free event for an idle worker");
-                sched.complete(worker, lane, &batch, now);
+                missed_total += sched.complete(worker, lane, &batch, now);
+                done_total += batch.requests.len() as u64;
                 last_completion = now;
                 idle.push(worker);
             }
             EvKind::Timer => {
                 timer_scheduled = None;
+            }
+        }
+
+        // Drift check rides every event, like the production reactor
+        // tick; a fired replan hot-swaps the lane configs *before*
+        // the dispatch scan below, so queued requests re-bucket at
+        // this very instant while in-flight batches finish untouched.
+        if let Some(d) = driver.as_mut() {
+            if d.due(now) {
+                let accepted: Vec<u64> = (0..spec.lanes.len())
+                    .map(|i| sched.lane_stats(i).accepted)
+                    .collect();
+                if let Some(rt) =
+                    d.poll(now, &accepted, done_total, missed_total)?
+                {
+                    sched.adopt_plan(&rt.updates, rt.full)?;
+                    replans.push(now);
+                }
             }
         }
 
@@ -1008,6 +1208,7 @@ pub fn simulate(spec: SimSpec) -> Result<SimReport> {
             .map(|t| t.snapshot())
             .unwrap_or_default(),
         trace_dropped: tracer.map(|t| t.dropped()).unwrap_or(0),
+        replans,
     })
 }
 
@@ -1111,6 +1312,85 @@ mod tests {
     }
 
     #[test]
+    fn adopt_plan_hot_swaps_buckets_without_draining() {
+        let clock = Arc::new(VirtualClock::new());
+        let sched = Scheduler::new(
+            vec![lane("a", 1, &[4])],
+            SchedPolicy::Continuous,
+            AutoscalePolicy::fixed(1),
+            clock.clone(),
+            None,
+        )
+        .unwrap();
+        sched.register_workers(1);
+        for i in 0..12 {
+            sched.submit(0, Request::new(i, vec![], ms(1000), ms(0)));
+        }
+        // Dispatch one bucket-4 batch under the old config and leave
+        // it in flight across the swap.
+        let (first_lane, first_batch) = match sched.poll_work(ms(0)) {
+            PollWork::Batch { lane, batch } => {
+                assert_eq!(batch.bucket, 4);
+                (lane, batch)
+            }
+            _ => panic!("expected a batch"),
+        };
+        // Swap to {8} + a new flush while 8 requests are queued.
+        let retune = LaneRetune {
+            lane: 0,
+            batcher: BatcherConfig::new(vec![8], ms(7)).unwrap(),
+            overhead_us: 300,
+            per_row_us: 120,
+        };
+        let out = sched.adopt_plan(&[retune], false).unwrap();
+        assert_eq!(
+            out,
+            AdoptOutcome { ordinal: 1, lanes_changed: 1, full: false }
+        );
+        assert_eq!(sched.replans(), 1);
+        assert_eq!(sched.lane_buckets(0), vec![8]);
+        assert_eq!(sched.lane_flush_timeouts(), vec![ms(7)]);
+        assert_eq!(sched.lane_models(), vec![(300, 120)]);
+        // The in-flight batch completes on its old shape…
+        sched.complete(0, first_lane, &first_batch, ms(1));
+        // …and the queued requests re-bucket at the new size: the 8
+        // still queued form one bucket-8 batch — nothing drained,
+        // nothing lost.
+        match sched.poll_work(ms(1)) {
+            PollWork::Batch { batch, .. } => {
+                assert_eq!(batch.bucket, 8);
+                assert_eq!(batch.requests.len(), 8);
+            }
+            _ => panic!("expected the re-bucketed batch"),
+        }
+        // Re-adopting the identical config changes nothing but still
+        // counts the decision.
+        let same = LaneRetune {
+            lane: 0,
+            batcher: BatcherConfig::new(vec![8], ms(7)).unwrap(),
+            overhead_us: 300,
+            per_row_us: 120,
+        };
+        let out = sched.adopt_plan(&[same], true).unwrap();
+        assert_eq!(
+            out,
+            AdoptOutcome { ordinal: 2, lanes_changed: 0, full: true }
+        );
+        // Out-of-range lanes are rejected before anything swaps.
+        assert!(sched
+            .adopt_plan(
+                &[LaneRetune {
+                    lane: 5,
+                    batcher: BatcherConfig::new(vec![1], ms(1)).unwrap(),
+                    overhead_us: 0,
+                    per_row_us: 1,
+                }],
+                true,
+            )
+            .is_err());
+    }
+
+    #[test]
     fn simulate_is_deterministic() {
         let mk = || SimSpec {
             lanes: vec![LaneLoad {
@@ -1126,6 +1406,7 @@ mod tests {
             stop_at: None,
             record_detail: true,
             trace: true,
+            replan: None,
         };
         let a = simulate(mk()).unwrap();
         let b = simulate(mk()).unwrap();
@@ -1160,6 +1441,7 @@ mod tests {
             stop_at: None,
             record_detail: false,
             trace: false,
+            replan: None,
         })
         .unwrap();
         assert_eq!(rep.completed(), 37);

@@ -98,6 +98,7 @@ use anyhow::{Context, Result};
 use crate::config::TransportConfig;
 use crate::metrics::{LatencyHistogram, NamedHistograms};
 use crate::serve::batcher::SchedPolicy;
+use crate::serve::calibrate::ReplanDriver;
 use crate::serve::clock::{Clock, WallClock};
 use crate::serve::queue::{QueueStats, Request};
 use crate::serve::sched::{
@@ -314,6 +315,15 @@ impl Shared {
         self.pending.load(Ordering::SeqCst)
     }
 
+    /// Cumulative `(completed, deadline_misses)` across all lanes —
+    /// the drift monitor's miss-pressure feed.
+    fn completion_counts(&self) -> (u64, u64) {
+        let tallies = self.tallies.lock().unwrap();
+        tallies.iter().fold((0, 0), |(done, missed), t| {
+            (done + t.completed, missed + t.deadline_misses)
+        })
+    }
+
     fn is_draining(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst) || sigint_requested()
     }
@@ -484,6 +494,8 @@ pub struct Server {
     tcfg: TransportConfig,
     trace: TraceConfig,
     autoscale: Option<AutoscalePolicy>,
+    replan: Option<ReplanDriver>,
+    service_models: Option<Vec<(u64, u64)>>,
     shared: Arc<Shared>,
 }
 
@@ -502,6 +514,8 @@ impl Server {
             tcfg: tcfg.clone(),
             trace: TraceConfig::default(),
             autoscale: None,
+            replan: None,
+            service_models: None,
             shared: Arc::new(Shared::new()),
         })
     }
@@ -519,6 +533,23 @@ impl Server {
     /// at the `workers` count passed to [`run`](Server::run).
     pub fn set_autoscale(&mut self, policy: AutoscalePolicy) {
         self.autoscale = Some(policy);
+    }
+
+    /// Close the planner loop: the reactor feeds the driver's drift
+    /// monitor from the live scheduler counters every window, and a
+    /// sustained breach replans against the driver's (calibrated)
+    /// service models and hot-swaps the lane bucket sets through
+    /// [`Scheduler::adopt_plan`] — no drain, no dropped requests.
+    /// Call before [`run`](Server::run).
+    pub fn set_replan(&mut self, driver: ReplanDriver) {
+        self.replan = Some(driver);
+    }
+
+    /// Seed the per-lane `(overhead_us, per_row_us)` service-model
+    /// gauges `/metrics` exports (`mpx_serve_service_model`); live
+    /// replans overwrite them.  Call before [`run`](Server::run).
+    pub fn set_service_models(&mut self, models: Vec<(u64, u64)>) {
+        self.service_models = Some(models);
     }
 
     /// The actually-bound address (resolves `:0` to the real port).
@@ -590,13 +621,6 @@ impl Server {
             lanes.iter().map(|s| s.name.clone()).collect();
         let deadlines: Vec<Duration> =
             lanes.iter().map(|s| s.deadline).collect();
-        // 429 Retry-After: one flush window is how long it takes the
-        // planner's dispatch policy to clear a sub-bucket backlog, so
-        // it is the honest "when is a slot likely free" hint.
-        let retry_after: Vec<u64> = lanes
-            .iter()
-            .map(|s| (s.batcher.flush_timeout.as_secs_f64().ceil() as u64).max(1))
-            .collect();
 
         let autoscale = self
             .autoscale
@@ -619,6 +643,10 @@ impl Server {
             sched.set_tracer(t.clone());
         }
         let sched = Arc::new(sched);
+        if let Some(models) = &self.service_models {
+            sched.set_lane_models(models);
+        }
+        let mut replan = self.replan;
 
         let wake = Arc::new(
             WakePipe::new().context("transport wake pipe")?,
@@ -642,7 +670,7 @@ impl Server {
             let routes = &routes;
             let lane_names = &lane_names;
             let deadlines = &deadlines;
-            let retry_after = &retry_after;
+            let replan = &mut replan;
 
             // Spawned at startup (with_barrier) and again from the
             // arrival path when the autoscale policy asks for more.
@@ -694,7 +722,6 @@ impl Server {
                 routes,
                 lane_names,
                 deadlines,
-                retry_after,
                 image_elems,
             };
             let mut r = Reactor::new(ctx, &listener);
@@ -765,6 +792,54 @@ impl Server {
                         for _ in 0..k {
                             handles.push(spawn_worker(next_worker, false));
                             next_worker += 1;
+                        }
+                    }
+                }
+
+                // Drift watch: once per window, feed the replan
+                // driver the cumulative scheduler/stream counters; a
+                // sustained breach hot-swaps the lane plans in place.
+                // An adopt error is a bug in the produced plan, not
+                // in the traffic — log it and keep serving the old
+                // plan rather than dropping the reactor.
+                if !drain_closed {
+                    if let Some(d) = replan.as_mut() {
+                        let now = shared.clock.now();
+                        if d.due(now) {
+                            let accepted: Vec<u64> = (0..nlanes)
+                                .map(|i| sched.lane_stats(i).accepted)
+                                .collect();
+                            let (done, missed) =
+                                shared.completion_counts();
+                            match d.poll(now, &accepted, done, missed) {
+                                Ok(Some(rt)) => {
+                                    match sched
+                                        .adopt_plan(&rt.updates, rt.full)
+                                    {
+                                        Ok(out) => eprintln!(
+                                            "[mpx] serve: replan #{}: {} \
+                                             lane(s) retuned — {}{}",
+                                            out.ordinal,
+                                            out.lanes_changed,
+                                            rt.reason,
+                                            if rt.full {
+                                                ""
+                                            } else {
+                                                " (partial: constrained \
+                                                 to compiled buckets)"
+                                            },
+                                        ),
+                                        Err(e) => eprintln!(
+                                            "[mpx] serve: replan adopt \
+                                             failed: {e}"
+                                        ),
+                                    }
+                                }
+                                Ok(None) => {}
+                                Err(e) => eprintln!(
+                                    "[mpx] serve: replan failed: {e}"
+                                ),
+                            }
                         }
                     }
                 }
@@ -934,8 +1009,19 @@ struct ReactorCtx<'a> {
     routes: &'a HashMap<String, usize>,
     lane_names: &'a [String],
     deadlines: &'a [Duration],
-    retry_after: &'a [u64],
     image_elems: usize,
+}
+
+impl ReactorCtx<'_> {
+    /// 429 Retry-After: one flush window is how long the dispatch
+    /// policy takes to clear a sub-bucket backlog, so it is the
+    /// honest "when is a slot likely free" hint.  Read live from the
+    /// scheduler (not a startup snapshot) — a replan that retunes a
+    /// lane's flush timeout retunes its hint too.
+    fn retry_after_s(&self, lane: usize) -> u64 {
+        let flush = self.sched.lane_flush_timeouts()[lane];
+        (flush.as_secs_f64().ceil() as u64).max(1)
+    }
 }
 
 struct Reactor<'a> {
@@ -1332,10 +1418,11 @@ impl<'a> Reactor<'a> {
                     "lane {} queue is full",
                     ctx.lane_names[lane]
                 );
+                let retry_after = ctx.retry_after_s(lane);
                 let body = format!(
                     "{{\"error\":{},\"retry_after_s\":{}}}\n",
                     jstr(&msg),
-                    ctx.retry_after[lane]
+                    retry_after
                 );
                 push_ready(
                     conn,
@@ -1345,10 +1432,7 @@ impl<'a> Reactor<'a> {
                         "Too Many Requests",
                         "application/json",
                         ka,
-                        &[(
-                            "Retry-After",
-                            ctx.retry_after[lane].to_string(),
-                        )],
+                        &[("Retry-After", retry_after.to_string())],
                         body.as_bytes(),
                     ),
                 );
@@ -2135,6 +2219,33 @@ fn prometheus_text(
     let _ = writeln!(s, "mpx_serve_workers{{state=\"busy\"}} {}", pool.busy);
     counter(&mut s, "mpx_serve_workers_spawned_total", "workers ever spawned");
     let _ = writeln!(s, "mpx_serve_workers_spawned_total {}", pool.spawned);
+
+    // The planner loop: live replans adopted, and the service model
+    // each lane's current plan was sized against.
+    counter(
+        &mut s,
+        "mpx_serve_replans_total",
+        "live bucket replans adopted by the scheduler",
+    );
+    let _ = writeln!(s, "mpx_serve_replans_total {}", sched.replans());
+    gauge(
+        &mut s,
+        "mpx_serve_service_model",
+        "per-lane linear service model behind the current plan \
+         (microseconds; param=\"overhead_us\"|\"per_row_us\")",
+    );
+    for (name, (overhead, per_row)) in esc.iter().zip(sched.lane_models()) {
+        let _ = writeln!(
+            s,
+            "mpx_serve_service_model{{lane=\"{name}\",param=\"overhead_us\"}} \
+             {overhead}"
+        );
+        let _ = writeln!(
+            s,
+            "mpx_serve_service_model{{lane=\"{name}\",param=\"per_row_us\"}} \
+             {per_row}"
+        );
+    }
 
     // Transport totals.
     let c = shared.counter_snapshot();

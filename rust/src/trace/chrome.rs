@@ -49,7 +49,8 @@ fn category(kind: SpanKind) -> &'static str {
         | SpanKind::Pack
         | SpanKind::Egress
         | SpanKind::Accept
-        | SpanKind::ReadDeadline => "serve",
+        | SpanKind::ReadDeadline
+        | SpanKind::Replan => "serve",
         _ => "train",
     }
 }

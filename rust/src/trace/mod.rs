@@ -108,6 +108,12 @@ pub enum SpanKind {
     /// whole-request deadline or inter-byte read budget ran out.
     /// `a`=connection ordinal.
     ReadDeadline,
+    /// Instant: the drift monitor adopted a new plan
+    /// (`Scheduler::adopt_plan`).  `a`=replan ordinal, `b`=lanes whose
+    /// bucket set or flush timeout changed, `c`=1 when the full plan
+    /// was adopted / 0 when uncompiled buckets forced the feasible
+    /// subset fallback.
+    Replan,
     /// One whole trainer step.  `a`=step index, `b`=grads finite (0/1).
     TrainStep,
     /// Trainer phase: parameter/input cast. `a`=step index.
@@ -138,6 +144,7 @@ impl SpanKind {
             SpanKind::Egress => "egress",
             SpanKind::Accept => "accept",
             SpanKind::ReadDeadline => "read_deadline",
+            SpanKind::Replan => "replan",
             SpanKind::TrainStep => "train_step",
             SpanKind::Cast => "cast",
             SpanKind::Forward => "forward",
@@ -157,6 +164,7 @@ impl SpanKind {
             SpanKind::Execute | SpanKind::Pack => ["lane", "bucket", "rows"],
             SpanKind::Egress => ["lane", "id", "_"],
             SpanKind::Accept | SpanKind::ReadDeadline => ["conn", "_", "_"],
+            SpanKind::Replan => ["replan", "lanes_changed", "full"],
             SpanKind::TrainStep => ["step", "finite", "_"],
             SpanKind::Cast
             | SpanKind::Forward
@@ -175,6 +183,7 @@ impl SpanKind {
                 | SpanKind::LossScale
                 | SpanKind::Accept
                 | SpanKind::ReadDeadline
+                | SpanKind::Replan
         )
     }
 }
@@ -387,17 +396,38 @@ impl Tracer {
 // ServiceSample — the planner's calibration input
 // ---------------------------------------------------------------------------
 
+/// A run's lane identity, index-aligned with the scheduler's lane
+/// order: the lane *name* (e.g. `vit_tiny/chat`) plus the precision
+/// tag of its artifacts.  Execute spans carry only the run-local lane
+/// index; the identity list maps that index to a key that stays
+/// stable across runs whose lane order differs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneId {
+    pub name: String,
+    pub precision: String,
+}
+
+impl LaneId {
+    pub fn new(name: impl Into<String>, precision: impl Into<String>) -> LaneId {
+        LaneId { name: name.into(), precision: precision.into() }
+    }
+}
+
 /// One measured batch execution, in exactly the shape the
 /// `[serve.planner]` linear service model (`overhead_us + per_row_us ×
 /// rows`) fits against: padded batch rows in, measured microseconds
 /// out.  Derived from [`SpanKind::Execute`] spans and persisted next
-/// to the serving artifacts (`service_samples.json`) so the
-/// ROADMAP's closed-loop planner has real data instead of config
-/// constants.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// to the serving artifacts (`service_samples.json`) for
+/// [`crate::serve::calibrate`] to fit.  Records key on the lane
+/// *name* + precision tag, not the run-local lane index — indices
+/// mis-attribute samples across runs whose lane order differs.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServiceSample {
-    /// Lane index (order matches the run's lane list).
-    pub lane: usize,
+    /// Lane name (stable across runs; see [`LaneId`]).
+    pub lane: String,
+    /// Precision tag of the lane's artifacts (`fp32` / `mixed_f16` /
+    /// `mixed_bf16`).
+    pub precision: String,
     /// Padded rows executed (the bucket size — what the compiled
     /// executable actually ran, hence what cost scales with).
     pub batch_rows: usize,
@@ -405,27 +435,46 @@ pub struct ServiceSample {
     pub exec_us: u64,
 }
 
-/// Extract the calibration records from a span snapshot.
-pub fn service_samples(spans: &[Span]) -> Vec<ServiceSample> {
+impl ServiceSample {
+    /// The calibration key: one fit per (lane, precision).
+    pub fn lane_key(&self) -> (&str, &str) {
+        (&self.lane, &self.precision)
+    }
+}
+
+/// Extract the calibration records from a span snapshot.  `lanes`
+/// maps each Execute span's run-local lane index to its stable
+/// identity; an out-of-range index (malformed span) gets a synthetic
+/// `#<index>` name rather than silently vanishing.
+pub fn service_samples(spans: &[Span], lanes: &[LaneId]) -> Vec<ServiceSample> {
     spans
         .iter()
         .filter(|s| s.kind == SpanKind::Execute)
-        .map(|s| ServiceSample {
-            lane: s.a as usize,
-            batch_rows: s.b as usize,
-            exec_us: s.duration().as_micros().min(u64::MAX as u128) as u64,
+        .map(|s| {
+            let (lane, precision) = match lanes.get(s.a as usize) {
+                Some(id) => (id.name.clone(), id.precision.clone()),
+                None => (format!("#{}", s.a), "unknown".to_string()),
+            };
+            ServiceSample {
+                lane,
+                precision,
+                batch_rows: s.b as usize,
+                exec_us: s.duration().as_micros().min(u64::MAX as u128) as u64,
+            }
         })
         .collect()
 }
 
-/// Serialize samples as the documented JSON schema
-/// (`{"service_samples": [{"lane": .., "batch_rows": .., "exec_us": ..}]}`).
+/// Serialize samples as the documented JSON schema:
+/// `{"service_samples": [{"lane": "...", "precision": "...",
+/// "batch_rows": .., "exec_us": ..}]}`.
 pub fn samples_json(samples: &[ServiceSample]) -> Json {
     let rows = samples
         .iter()
         .map(|s| {
             let mut m = std::collections::BTreeMap::new();
-            m.insert("lane".to_string(), Json::Num(s.lane as f64));
+            m.insert("lane".to_string(), Json::Str(s.lane.clone()));
+            m.insert("precision".to_string(), Json::Str(s.precision.clone()));
             m.insert("batch_rows".to_string(), Json::Num(s.batch_rows as f64));
             m.insert("exec_us".to_string(), Json::Num(s.exec_us as f64));
             Json::Obj(m)
@@ -434,6 +483,85 @@ pub fn samples_json(samples: &[ServiceSample]) -> Json {
     let mut top = std::collections::BTreeMap::new();
     top.insert("service_samples".to_string(), Json::Arr(rows));
     Json::Obj(top)
+}
+
+/// Parse a `service_samples.json` document back into records.
+/// Malformed rows — and rows in the legacy integer-`lane` schema,
+/// which cannot be attributed to a named lane — are skipped, not
+/// fatal: one bad record must not void a calibration history.
+pub fn parse_service_samples(doc: &Json) -> Vec<ServiceSample> {
+    let Some(rows) = doc.get("service_samples").and_then(|v| v.as_arr()) else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter_map(|r| {
+            Some(ServiceSample {
+                lane: r.get("lane")?.as_str()?.to_string(),
+                precision: r.get("precision")?.as_str()?.to_string(),
+                batch_rows: r.get("batch_rows")?.as_i64()?.try_into().ok()?,
+                exec_us: r.get("exec_us")?.as_i64()?.try_into().ok()?,
+            })
+        })
+        .collect()
+}
+
+/// Read and parse `service_samples.json`; a missing file is an empty
+/// history (first run), an unparseable one is an error.
+pub fn read_service_samples(
+    path: &std::path::Path,
+) -> anyhow::Result<Vec<ServiceSample>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => anyhow::bail!("read {}: {e}", path.display()),
+    };
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    Ok(parse_service_samples(&doc))
+}
+
+/// Default per-lane bound for the persisted sample history
+/// ([`merge_service_samples`]).
+pub const SERVICE_SAMPLE_CAP: usize = 4096;
+
+/// Append `new` to `existing` under a per-(lane, precision) cap:
+/// records stay in file order (oldest first) and when a lane exceeds
+/// `cap` its *oldest* records drop — deterministically, so the same
+/// history + run always persists the same file.
+pub fn merge_service_samples(
+    existing: Vec<ServiceSample>,
+    new: &[ServiceSample],
+    cap: usize,
+) -> Vec<ServiceSample> {
+    let mut all = existing;
+    all.extend(new.iter().cloned());
+    let mut counts: std::collections::BTreeMap<(String, String), usize> =
+        std::collections::BTreeMap::new();
+    for s in &all {
+        *counts
+            .entry((s.lane.clone(), s.precision.clone()))
+            .or_insert(0) += 1;
+    }
+    // Per lane, skip the first (count − cap) records: drop-oldest.
+    let mut to_skip: std::collections::BTreeMap<(String, String), usize> =
+        counts
+            .into_iter()
+            .map(|(k, n)| (k, n.saturating_sub(cap)))
+            .collect();
+    all.retain(|s| {
+        let skip = to_skip
+            .get_mut(&(s.lane.clone(), s.precision.clone()))
+            .expect("every sample was counted");
+        if *skip > 0 {
+            *skip -= 1;
+            false
+        } else {
+            true
+        }
+    });
+    all
 }
 
 /// Write `samples_json` to `path` (pretty enough: one compact line).
@@ -501,25 +629,147 @@ mod tests {
         assert_eq!(t.len(), 1);
     }
 
+    fn sample(
+        lane: &str,
+        precision: &str,
+        batch_rows: usize,
+        exec_us: u64,
+    ) -> ServiceSample {
+        ServiceSample {
+            lane: lane.into(),
+            precision: precision.into(),
+            batch_rows,
+            exec_us,
+        }
+    }
+
     #[test]
     fn service_samples_come_from_execute_spans_only() {
         let t = test_tracer(1024);
         t.record(SpanKind::QueueWait, ms(0), ms(4), 1, 7, 0);
         t.record(SpanKind::Execute, ms(4), ms(6), 1, 8, 5);
         t.record(SpanKind::Execute, ms(6), ms(9), 0, 16, 16);
-        let samples = service_samples(&t.snapshot());
+        let lanes = vec![
+            LaneId::new("vit_tiny/bulk", "fp32"),
+            LaneId::new("vit_tiny/chat", "mixed_f16"),
+        ];
+        let samples = service_samples(&t.snapshot(), &lanes);
         assert_eq!(
             samples,
             vec![
-                ServiceSample { lane: 1, batch_rows: 8, exec_us: 2000 },
-                ServiceSample { lane: 0, batch_rows: 16, exec_us: 3000 },
+                sample("vit_tiny/chat", "mixed_f16", 8, 2000),
+                sample("vit_tiny/bulk", "fp32", 16, 3000),
             ]
         );
+        assert_eq!(samples[0].lane_key(), ("vit_tiny/chat", "mixed_f16"));
         let doc = Json::parse(&samples_json(&samples).dump()).unwrap();
         let rows = doc.get("service_samples").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("lane").unwrap().as_str(),
+            Some("vit_tiny/chat")
+        );
+        assert_eq!(
+            rows[0].get("precision").unwrap().as_str(),
+            Some("mixed_f16")
+        );
         assert_eq!(rows[0].get("batch_rows").unwrap().as_i64(), Some(8));
         assert_eq!(rows[1].get("exec_us").unwrap().as_i64(), Some(3000));
+        // The schema round-trips through its own parser.
+        assert_eq!(parse_service_samples(&doc), samples);
+        // An out-of-range lane index degrades to a synthetic name
+        // instead of dropping the measurement.
+        let orphan = service_samples(&t.snapshot(), &lanes[..1]);
+        assert_eq!(orphan[0].lane, "#1");
+        assert_eq!(orphan[0].precision, "unknown");
+    }
+
+    #[test]
+    fn legacy_integer_lane_records_are_skipped_on_parse() {
+        // The pre-name schema persisted run-local lane *indices*; they
+        // cannot be attributed to a named lane, so a merge must drop
+        // them rather than guess.
+        let doc = Json::parse(
+            r#"{"service_samples":[
+                {"lane":0,"batch_rows":8,"exec_us":1320},
+                {"lane":"m/chat","precision":"mixed_f16","batch_rows":4,"exec_us":840}
+            ]}"#,
+        )
+        .unwrap();
+        let parsed = parse_service_samples(&doc);
+        assert_eq!(parsed, vec![sample("m/chat", "mixed_f16", 4, 840)]);
+        // Entirely-foreign documents parse to empty, not errors.
+        assert!(parse_service_samples(&Json::parse("{}").unwrap()).is_empty());
+    }
+
+    #[test]
+    fn merge_keeps_order_and_drops_oldest_per_lane() {
+        let existing = vec![
+            sample("m/a", "fp32", 1, 100),
+            sample("m/b", "fp32", 2, 200),
+            sample("m/a", "fp32", 3, 300),
+        ];
+        let new = vec![
+            sample("m/a", "fp32", 4, 400),
+            sample("m/b", "fp32", 5, 500),
+        ];
+        // Cap 2 per lane: m/a has 3 records → its oldest (batch 1)
+        // drops; m/b has 2 → both stay.  Relative order preserved.
+        let merged = merge_service_samples(existing.clone(), &new, 2);
+        assert_eq!(
+            merged,
+            vec![
+                sample("m/b", "fp32", 2, 200),
+                sample("m/a", "fp32", 3, 300),
+                sample("m/a", "fp32", 4, 400),
+                sample("m/b", "fp32", 5, 500),
+            ]
+        );
+        // Same inputs → same output, bit for bit (deterministic
+        // drop-oldest, no hashing).
+        assert_eq!(merged, merge_service_samples(existing, &new, 2));
+        // A generous cap keeps everything in order.
+        let all = merge_service_samples(
+            vec![sample("m/a", "fp32", 1, 100)],
+            &[sample("m/a", "fp32", 2, 200)],
+            SERVICE_SAMPLE_CAP,
+        );
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].batch_rows, 1);
+        // Same lane name at different precisions are distinct keys.
+        let split = merge_service_samples(
+            vec![sample("m/a", "fp32", 1, 100)],
+            &[sample("m/a", "mixed_f16", 2, 200)],
+            1,
+        );
+        assert_eq!(split.len(), 2);
+    }
+
+    #[test]
+    fn read_service_samples_roundtrips_and_tolerates_absence() {
+        let dir = std::env::temp_dir().join("mpx_trace_samples_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("service_samples.json");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_service_samples(&path).unwrap().is_empty());
+        let samples = vec![
+            sample("m/chat", "mixed_f16", 8, 1320),
+            sample("m/bulk", "fp32", 4, 840),
+        ];
+        write_service_samples(&path, &samples).unwrap();
+        assert_eq!(read_service_samples(&path).unwrap(), samples);
+        std::fs::write(&path, "not json").unwrap();
+        assert!(read_service_samples(&path).is_err());
+    }
+
+    #[test]
+    fn replan_is_an_instant_serve_span() {
+        assert!(SpanKind::Replan.is_instant());
+        assert_eq!(SpanKind::Replan.name(), "replan");
+        assert_eq!(
+            SpanKind::Replan.attr_names(),
+            ["replan", "lanes_changed", "full"]
+        );
     }
 
     #[test]

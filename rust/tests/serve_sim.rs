@@ -12,10 +12,12 @@ use std::time::Duration;
 
 use mpx::serve::planner::{self, LaneProfile, PlannerConfig, ServiceModel};
 use mpx::serve::{
-    loadgen, simulate, AutoscalePolicy, BatcherConfig, LaneLoad, LaneSpec,
-    SchedPolicy, SimReport, SimSpec,
+    loadgen, simulate, AutoscalePolicy, BatcherConfig, DriftConfig, LaneLoad,
+    LaneSpec, ReplanSpec, SchedPolicy, SimReplan, SimReport, SimSpec,
 };
-use mpx::trace::{chrome, service_samples, ServiceSample, Span, SpanKind};
+use mpx::trace::{
+    chrome, service_samples, LaneId, ServiceSample, Span, SpanKind,
+};
 use mpx::util::json::Json;
 
 fn ms(v: u64) -> Duration {
@@ -58,6 +60,7 @@ fn flush_on_timeout_fires_at_exactly_flush_timeout() {
         stop_at: Some(Duration::from_secs(1)),
         record_detail: true,
         trace: false,
+        replan: None,
     })
     .unwrap();
 
@@ -110,6 +113,7 @@ fn continuous_refill_keeps_occupancy_above_floor_under_poisson_load() {
         stop_at: None,
         record_detail: false,
         trace: false,
+        replan: None,
     };
     let rep = simulate(spec.clone()).unwrap();
     assert_eq!(rep.completed(), 3000, "under-capacity load must all finish");
@@ -149,6 +153,7 @@ fn deadline_miss_accounting_is_exact() {
         stop_at: None,
         record_detail: true,
         trace: false,
+        replan: None,
     })
     .unwrap();
 
@@ -189,6 +194,7 @@ fn two_lanes_with_2_to_1_weights_get_2_to_1_service_under_saturation() {
         stop_at: Some(ms(600)),
         record_detail: true,
         trace: false,
+        replan: None,
     })
     .unwrap();
 
@@ -230,6 +236,7 @@ fn autoscaler_grows_the_pool_on_backlog_and_completes_everything() {
         stop_at: None,
         record_detail: false,
         trace: false,
+        replan: None,
     })
     .unwrap();
 
@@ -281,6 +288,7 @@ fn planner_buckets_meet_the_slo_the_static_bucket_list_misses() {
             stop_at,
             record_detail: true,
             trace: false,
+            replan: None,
         })
         .unwrap()
     };
@@ -390,6 +398,7 @@ fn planner_saturated_lane_plan_sustains_full_buckets_in_the_sim() {
         stop_at: None,
         record_detail: false,
         trace: false,
+        replan: None,
     })
     .unwrap();
     assert_eq!(rep.completed(), 64);
@@ -429,6 +438,7 @@ fn continuous_beats_form_first_on_identical_simulated_load() {
             stop_at: Some(Duration::from_secs(3600)),
             record_detail: false,
             trace: false,
+            replan: None,
         })
         .unwrap()
     };
@@ -479,6 +489,7 @@ fn trace_spans_tile_observed_latency_exactly() {
         stop_at: Some(Duration::from_secs(1)),
         record_detail: true,
         trace: true,
+        replan: None,
     };
     let rep = simulate(mk()).unwrap();
     assert_eq!(rep.completions.len(), 3);
@@ -516,10 +527,16 @@ fn trace_spans_tile_observed_latency_exactly() {
     assert_eq!(execs.len(), 1);
     assert_eq!((execs[0].start, execs[0].end), (ms(5), ms(6)));
     assert_eq!((execs[0].a, execs[0].b, execs[0].c), (0, 8, 3));
-    let samples = service_samples(&rep.spans);
+    let ids = [LaneId::new("vit_tiny/a", "mixed_f16")];
+    let samples = service_samples(&rep.spans, &ids);
     assert_eq!(
         samples,
-        vec![ServiceSample { lane: 0, batch_rows: 8, exec_us: 1000 }]
+        vec![ServiceSample {
+            lane: "vit_tiny/a".into(),
+            precision: "mixed_f16".into(),
+            batch_rows: 8,
+            exec_us: 1000,
+        }]
     );
 
     // Bit-deterministic: replaying the same spec yields the same
@@ -533,4 +550,249 @@ fn trace_spans_tile_observed_latency_exactly() {
     assert_eq!(parsed, doc);
     let pairs = chrome::check_nesting(&parsed).unwrap();
     assert_eq!(pairs, rep.spans.len());
+}
+
+/// The replan scenarios below share one service model — the exact
+/// linear model `simulate` executes batches with — so the planner's
+/// predictions and the replayed executions agree by construction:
+/// service(b) = 4 ms + 0.5 ms × b, i.e. bucket 1 serves 222 req/s
+/// and bucket 8 serves 1000 rows/s.
+fn step_model() -> ServiceModel {
+    ServiceModel {
+        overhead: ms(4),
+        per_row: Duration::from_micros(500),
+    }
+}
+
+/// Arrival timeline for the rate-step scenarios: one request every
+/// 10 ms through t = `step`, then one every 2 ms through `end` —
+/// a clean 100 → 500 req/s step at `step`.
+fn step_arrivals(step: u64, end: u64) -> Vec<Duration> {
+    let mut arrivals: Vec<Duration> =
+        (1..=step / 10).map(|i| ms(10 * i)).collect();
+    let mut t = step + 2;
+    while t <= end {
+        arrivals.push(ms(t));
+        t += 2;
+    }
+    arrivals
+}
+
+fn step_replan(
+    planned_rate: f64,
+    patience: u32,
+    compiled: Vec<Vec<usize>>,
+) -> SimReplan {
+    SimReplan {
+        spec: ReplanSpec {
+            drift: DriftConfig {
+                window: ms(500),
+                alpha: 0.5,
+                rate_ratio: 2.0,
+                // > 1.0 can never trip: the rate breach is the one
+                // deterministic trigger under test.
+                miss_ratio: 2.0,
+                patience,
+                cooldown: Duration::from_secs(10),
+            },
+            planner: PlannerConfig {
+                candidates: vec![1, 2, 4, 8],
+                workers: 1,
+                max_compiled: 0,
+                safety: 0.9,
+                max_flush: ms(5),
+            },
+            models: vec![step_model()],
+            compiled,
+        },
+        planned_rates: vec![planned_rate],
+    }
+}
+
+#[test]
+fn rate_step_triggers_a_live_replan_and_p99_recovers() {
+    // The closed loop, end to end on the virtual clock.  A lane is
+    // planned for 100 req/s and served with buckets [1] (capacity
+    // 222 req/s).  At t = 2 s the offered rate steps to 500 req/s:
+    // bucket 1 can no longer keep up and the backlog — and with it
+    // the latency — grows without bound.  The drift monitor samples
+    // 500 ms windows (EWMA α = 0.5, breach above 2× planned,
+    // patience 2):
+    //
+    //   t=0.5/1.0/1.5/2.0  rate 100  ema 100      no breach
+    //   t=2.5              rate 500  ema 300      breach 1 (> 200)
+    //   t=3.0              rate 500  ema 400      breach 2 → REPLAN
+    //
+    // The replan at *exactly* t = 3 s re-runs the planner at the
+    // measured 400 req/s; bucket 1 alone is over capacity, so the
+    // plan adds bucket 8 (1000 rows/s) and `adopt_plan` hot-swaps
+    // the lane to [1, 8] with nothing drained: the in-flight
+    // bucket-1 batch (dispatched t = 2.999 s) finishes untouched at
+    // t = 3.0035 s, and the very next dispatch is the first bucket-8
+    // batch, at exactly that instant.  The backlog then drains at
+    // 2× the offered rate and the tail of the run meets the deadline
+    // again.  Every request is answered exactly once — the swap
+    // drops and duplicates nothing.
+    let deadline = ms(80);
+    let arrivals = step_arrivals(2000, 5000);
+    let offered = arrivals.len() as u64;
+    assert_eq!(offered, 1700);
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("step", 1, &[1], ms(5), deadline),
+            arrivals,
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: step_model().overhead,
+        exec_per_row: step_model().per_row,
+        stop_at: Some(Duration::from_secs(10)),
+        record_detail: true,
+        trace: true,
+        replan: Some(step_replan(100.0, 2, vec![vec![1, 2, 4, 8]])),
+    })
+    .unwrap();
+
+    // Exactly one replan, at exactly the second breached window.
+    assert_eq!(rep.replans, vec![Duration::from_secs(3)]);
+
+    // Nothing dropped, nothing duplicated across the switchover.
+    assert_eq!(rep.completed(), offered);
+    assert_eq!(rep.lanes[0].rejected, 0);
+    let ids: std::collections::BTreeSet<u64> =
+        rep.completions.iter().map(|c| c.id).collect();
+    assert_eq!(ids.len() as u64, offered);
+
+    // Before the swap every dispatch is the old bucket-1 shape; the
+    // first bucket-8 batch leaves the instant the in-flight bucket-1
+    // batch frees the worker.
+    assert!(rep
+        .batches
+        .iter()
+        .filter(|b| b.at < Duration::from_secs(3))
+        .all(|b| b.bucket == 1));
+    let first8 = rep
+        .batches
+        .iter()
+        .find(|b| b.bucket == 8)
+        .expect("the replan must introduce bucket-8 batches");
+    assert_eq!(first8.at, Duration::from_micros(3_003_500));
+    assert_eq!(first8.take, 8);
+
+    // The overload cohort (enqueued in the half-window before the
+    // replan) blows straight through the deadline; the recovered
+    // tail (enqueued from t = 4.2 s, backlog long drained) meets it.
+    let cohort = |from: Duration, to: Duration| -> Vec<Duration> {
+        let mut lat: Vec<Duration> = rep
+            .completions
+            .iter()
+            .filter(|c| c.enqueued >= from && c.enqueued < to)
+            .map(|c| c.done - c.enqueued)
+            .collect();
+        lat.sort();
+        lat
+    };
+    let overload = cohort(ms(2500), ms(3000));
+    assert!(!overload.is_empty());
+    let p99 = |lat: &[Duration]| lat[(lat.len() - 1) * 99 / 100];
+    assert!(
+        p99(&overload) > deadline,
+        "overload cohort p99 {:?} should miss the {deadline:?} deadline",
+        p99(&overload)
+    );
+    let recovered = cohort(ms(4200), ms(5001));
+    assert!(!recovered.is_empty());
+    assert!(
+        p99(&recovered) <= deadline,
+        "post-replan p99 {:?} should meet the {deadline:?} deadline",
+        p99(&recovered)
+    );
+
+    // The trace carries the replan instant: ordinal 1, one lane
+    // retuned, fully covered by the compiled set.
+    let replans: Vec<&mpx::trace::Span> = rep
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Replan)
+        .collect();
+    assert_eq!(replans.len(), 1);
+    let r = replans[0];
+    assert_eq!(r.start, Duration::from_secs(3));
+    assert_eq!(r.end, r.start);
+    assert_eq!((r.a, r.b, r.c), (1, 1, 1));
+
+    // Bit-deterministic, replans and all.
+    let again = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("step", 1, &[1], ms(5), deadline),
+            arrivals: step_arrivals(2000, 5000),
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: step_model().overhead,
+        exec_per_row: step_model().per_row,
+        stop_at: Some(Duration::from_secs(10)),
+        record_detail: true,
+        trace: true,
+        replan: Some(step_replan(100.0, 2, vec![vec![1, 2, 4, 8]])),
+    })
+    .unwrap();
+    assert_eq!(again.replans, rep.replans);
+    assert_eq!(again.spans, rep.spans);
+}
+
+#[test]
+fn replan_falls_back_to_the_compiled_bucket_subset() {
+    // Same rate step, but only buckets [2, 8] were ever AOT-compiled.
+    // The planner's wish at the measured rate is [1, 8]; bucket 1 is
+    // not servable, so the adopted retune is the feasible subset [8]
+    // and the replan reports partial coverage (Replan span c = 0)
+    // instead of silently pretending the full plan landed.  With
+    // patience 1 the first breached window fires: t = 2.5 s exactly.
+    let deadline = ms(80);
+    let arrivals = step_arrivals(2000, 3000);
+    let offered = arrivals.len() as u64;
+    assert_eq!(offered, 700);
+    let rep = simulate(SimSpec {
+        lanes: vec![LaneLoad {
+            spec: lane("step", 1, &[1], ms(5), deadline),
+            arrivals,
+        }],
+        policy: SchedPolicy::Continuous,
+        autoscale: AutoscalePolicy::fixed(1),
+        exec_overhead: step_model().overhead,
+        exec_per_row: step_model().per_row,
+        stop_at: Some(Duration::from_secs(10)),
+        record_detail: true,
+        trace: true,
+        replan: Some(step_replan(100.0, 1, vec![vec![2, 8]])),
+    })
+    .unwrap();
+
+    assert_eq!(rep.replans, vec![ms(2500)]);
+    assert_eq!(rep.completed(), offered);
+    assert_eq!(rep.lanes[0].rejected, 0);
+
+    // Old shape before the swap; after it the lane serves *only*
+    // bucket 8 — bucket 1 fell out of the plan entirely.
+    assert!(rep
+        .batches
+        .iter()
+        .filter(|b| b.at < ms(2500))
+        .all(|b| b.bucket == 1));
+    assert!(rep
+        .batches
+        .iter()
+        .filter(|b| b.at >= ms(2500))
+        .all(|b| b.bucket == 8));
+    assert!(rep.batches.iter().any(|b| b.bucket == 8));
+
+    // Partial coverage is announced, not hidden: c = 0.
+    let r = rep
+        .spans
+        .iter()
+        .find(|s| s.kind == SpanKind::Replan)
+        .expect("replan span");
+    assert_eq!(r.start, ms(2500));
+    assert_eq!((r.a, r.b, r.c), (1, 1, 0));
 }

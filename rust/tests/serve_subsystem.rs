@@ -435,6 +435,7 @@ fn sim_case(
         stop_at: None,
         record_detail: true,
         trace: false,
+        replan: None,
     })
     .unwrap()
 }
