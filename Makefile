@@ -5,7 +5,7 @@
 PYTHON ?= python3
 OUT ?= artifacts
 
-.PHONY: artifacts artifacts-tiny test build
+.PHONY: artifacts artifacts-tiny artifacts-desktop test build
 
 # Full artifact set: every (model, precision, batch) variant the
 # benches and examples reference.  Needs a JAX-capable Python env.
@@ -17,6 +17,12 @@ artifacts:
 # this is the config CI builds and caches.
 artifacts-tiny:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(OUT) --only vit_tiny
+
+# Desktop mixed-f16 subset — the variant the L3 runtime-overhead
+# bench drives.  CI layers this into the same artifact cache as the
+# tiny set (`make artifacts-tiny artifacts-desktop`).
+artifacts-desktop:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(OUT) --only vit_desktop_mixed_f16
 
 build:
 	cargo build --release

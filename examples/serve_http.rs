@@ -20,8 +20,8 @@
 //! ```
 //!
 //! The real-artifact variant of exactly this server is
-//! `mpx serve --listen ADDR` (needs the `xla` feature and
-//! `make artifacts`).
+//! `mpx serve --listen ADDR` (needs `make artifacts`; runs on either
+//! runtime backend — PJRT or the pure-Rust host interpreter).
 
 use std::sync::Arc;
 use std::time::Duration;

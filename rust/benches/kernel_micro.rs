@@ -8,9 +8,15 @@
 //!    original.  Results (median ns, element throughput, speedup) are
 //!    recorded in `BENCH_kernel_micro.json` via `util::benchkit` so
 //!    the perf trajectory is diffable across PRs.
-//! 2. **Pallas kernels via PJRT** (skipped with a note when the AOT
-//!    artifacts are absent): the mixed-precision kernels vs their jnp
-//!    references, plus the structural VMEM table — on this CPU
+//! 2. **Runtime backends** (skipped with a note when the AOT
+//!    artifacts are absent): one artifact executed end-to-end on the
+//!    pure-Rust host interpreter and — when the `xla` feature is
+//!    compiled in — on PJRT, with the host/xla latency ratio recorded
+//!    (`backend_step_*` entries in `BENCH_kernel_micro.json`; schema
+//!    in docs/BENCHMARKS.md).
+//! 3. **Pallas kernels** (skipped with a note when the AOT artifacts
+//!    are absent): the mixed-precision kernels vs their jnp
+//!    references, plus the structural VMEM table — on the CPU PJRT
 //!    backend the Pallas grid runs in interpret mode, so structure,
 //!    not wall-clock, is the optimization target (DESIGN.md
 //!    §Hardware-Adaptation).
@@ -20,7 +26,10 @@ use std::hint::black_box;
 use mpx::collective::{all_reduce_mean, sequential_all_reduce_reference};
 use mpx::hostkernel::{cast, scan};
 use mpx::numerics::{tensor_stats, Bf16, F16};
-use mpx::runtime::{lit_f32, ArtifactStore};
+use mpx::pytree::{DType, LeafSpec};
+use mpx::runtime::{
+    lit_f32, lit_from_bytes, lit_i32, ArtifactStore, BackendKind, Value,
+};
 use mpx::util::benchkit::{bench, BenchOpts, JsonReport, Table};
 use mpx::util::rng::Rng;
 
@@ -52,7 +61,7 @@ fn gradient_buffer(n: usize, seed: u64) -> Vec<f32> {
 struct HostBench<'a> {
     opts: &'a BenchOpts,
     table: Table,
-    report: JsonReport,
+    report: &'a mut JsonReport,
 }
 
 impl HostBench<'_> {
@@ -91,14 +100,17 @@ impl HostBench<'_> {
     }
 }
 
-fn host_kernels(opts: &BenchOpts) -> anyhow::Result<()> {
+fn host_kernels(
+    opts: &BenchOpts,
+    report: &mut JsonReport,
+) -> anyhow::Result<()> {
     let mut hb = HostBench {
         opts,
         table: Table::new(
             "host kernels: scalar numerics vs vectorized hostkernel (1M elems)",
             &["kernel", "scalar_ms", "vector_ms", "gelems_s", "speedup"],
         ),
-        report: JsonReport::new("kernel_micro"),
+        report,
     };
 
     let src = gradient_buffer(N, 1);
@@ -220,9 +232,102 @@ fn host_kernels(opts: &BenchOpts) -> anyhow::Result<()> {
         },
     );
 
-    let path = hb.report.write()?;
-    println!("# wrote {path}");
     println!("# wrote {}", hb.table.write_csv()?);
+    Ok(())
+}
+
+/// Manifest-typed pseudo-random input: normal f32 data for the float
+/// dtypes (rounded through the batch casts for f16/bf16), zeros for
+/// the integer/pred leaves (labels, counters — values the graphs only
+/// index or accumulate with).
+fn random_input(spec: &LeafSpec, rng: &mut Rng) -> anyhow::Result<Value> {
+    let n = spec.elems();
+    let normals = |rng: &mut Rng| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    match spec.dtype {
+        DType::F32 => lit_f32(&spec.shape, &normals(rng)),
+        DType::F16 => {
+            let mut bytes = Vec::new();
+            cast::f32_to_f16_bytes(&normals(rng), &mut bytes);
+            lit_from_bytes(spec, &bytes)
+        }
+        DType::Bf16 => {
+            let mut bytes = Vec::new();
+            cast::f32_to_bf16_bytes(&normals(rng), &mut bytes);
+            lit_from_bytes(spec, &bytes)
+        }
+        DType::S32 => lit_i32(&spec.shape, &vec![0; n]),
+        _ => lit_from_bytes(spec, &vec![0u8; spec.bytes()]),
+    }
+}
+
+/// One artifact executed end-to-end per runtime backend — the latency
+/// cost of the pure-Rust interpreter next to PJRT on the same graph.
+/// Picks the cheapest forward artifact on disk (fused step as a
+/// fallback) so the host run stays in benchmark territory.
+fn backend_section(
+    opts: &BenchOpts,
+    report: &mut JsonReport,
+) -> anyhow::Result<()> {
+    let probe = ArtifactStore::open_default_with(BackendKind::Host)?;
+    let names = probe.list()?;
+    let cheapest = |prefix: &str| -> Option<String> {
+        names
+            .iter()
+            .filter(|n| n.starts_with(prefix))
+            .filter_map(|n| {
+                let m = probe.manifest(n).ok()?;
+                let bytes: usize = m.inputs.iter().map(|s| s.bytes()).sum();
+                Some((bytes, n.clone()))
+            })
+            .min()
+            .map(|(_, n)| n)
+    };
+    let Some(name) = cheapest("fwd_").or_else(|| cheapest("step_fused_"))
+    else {
+        anyhow::bail!("no fwd_*/step_fused_* artifacts on disk");
+    };
+
+    let mut table = Table::new(
+        "runtime backends: one artifact execution (median)",
+        &["artifact", "backend", "median_ms"],
+    );
+    let mut medians = Vec::new();
+    for kind in [BackendKind::Host, BackendKind::Xla] {
+        if !kind.available() {
+            continue;
+        }
+        let mut store = ArtifactStore::open_default_with(kind)?;
+        let art = store.load(&name)?;
+        let mut rng = Rng::new(7);
+        let inputs: Vec<Value> = art
+            .manifest
+            .inputs
+            .iter()
+            .map(|spec| random_input(spec, &mut rng))
+            .collect::<anyhow::Result<_>>()?;
+        let stats = bench(opts, || {
+            art.execute(&inputs).expect("backend execute");
+        });
+        let median_s = stats.median.as_secs_f64();
+        table.row(&[
+            name.clone(),
+            kind.name().to_string(),
+            format!("{:.3}", median_s * 1e3),
+        ]);
+        report.entry(
+            &format!("backend_step_{kind}"),
+            &[("median_ns", stats.median.as_nanos() as f64)],
+        );
+        medians.push(median_s);
+    }
+    if let [host, xla] = medians[..] {
+        let ratio = host / xla.max(1e-12);
+        report.entry("backend_host_vs_xla", &[("host_over_xla", ratio)]);
+        println!("# host interpreter vs xla on {name}: {ratio:.1}x");
+    }
+    println!("# wrote {}", table.write_csv()?);
     Ok(())
 }
 
@@ -233,7 +338,7 @@ fn run_kernel(
 ) -> anyhow::Result<f64> {
     let art = store.load(name)?;
     let mut rng = Rng::new(1);
-    let inputs: Vec<xla::Literal> = art
+    let inputs: Vec<Value> = art
         .manifest
         .inputs
         .iter()
@@ -252,7 +357,10 @@ fn run_kernel(
 fn pjrt_kernels(opts: &BenchOpts) -> anyhow::Result<()> {
     let mut store = ArtifactStore::open_default()?;
     let mut table = Table::new(
-        "L1 kernels: Pallas (interpret) vs jnp reference via PJRT",
+        &format!(
+            "L1 kernels: Pallas (interpret) vs jnp reference ({} backend)",
+            store.backend_kind()
+        ),
         &["kernel", "pallas_ms", "ref_ms", "interp_overhead"],
     );
     for half in ["f16", "bf16"] {
@@ -314,12 +422,18 @@ fn main() -> anyhow::Result<()> {
         max_seconds: 8.0,
     });
 
-    host_kernels(&opts)?;
+    let mut report = JsonReport::new("kernel_micro");
+    host_kernels(&opts, &mut report)?;
 
-    // The PJRT section needs the AOT artifacts; a fresh clone / CI
-    // smoke run still gets the host-kernel numbers above.
-    if let Err(e) = pjrt_kernels(&opts) {
-        println!("# skipping PJRT kernel benches: {e:#}");
+    // The artifact-backed sections need `make artifacts`; a fresh
+    // clone / CI smoke run still gets the host-kernel numbers above.
+    if let Err(e) = backend_section(&opts, &mut report) {
+        println!("# skipping backend benches: {e:#}");
     }
+    if let Err(e) = pjrt_kernels(&opts) {
+        println!("# skipping Pallas kernel benches: {e:#}");
+    }
+    let path = report.write()?;
+    println!("# wrote {path}");
     Ok(())
 }

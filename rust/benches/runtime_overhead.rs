@@ -56,9 +56,9 @@ fn main() -> anyhow::Result<()> {
     // 3. end-to-end tiny step vs its pieces: execute a trivial
     //    artifact (init) to approximate the fixed PJRT dispatch cost.
     let init = store.load("init_vit_tiny_fp32")?;
-    let seed = mpx::runtime::lit_scalar_i32(0);
+    let seed = [mpx::runtime::lit_scalar_i32(0)];
     let stats = bench(&opts, || {
-        let _ = init.execute(&[&seed]).unwrap();
+        let _ = init.execute(&seed).unwrap();
     });
     table.row(&[
         "init_vit_tiny_exec".into(),

@@ -14,7 +14,8 @@
 //!    for the extra mantissa truncation) — synthetic absolute
 //!    numbers, honest *relative* scheduling behaviour, bit-identical
 //!    run to run.
-//! 2. **Artifact-backed (needs `make artifacts` + the xla feature).**
+//! 2. **Artifact-backed (needs `make artifacts`; runs on whichever
+//!    runtime backend the build defaults to).**
 //!    Per precision: closed-loop calibration, then an open-loop sweep
 //!    at 50/70/90 % of calibrated capacity; headline is the highest
 //!    offered load whose p99 stays under 3× the calibrated p50.
@@ -50,13 +51,9 @@ use mpx::trace::{chrome, LaneId};
 use mpx::util::benchkit::JsonReport;
 use mpx::util::json::Json;
 
-#[cfg(feature = "xla")]
 use mpx::config::{Precision, ServeConfig};
-#[cfg(feature = "xla")]
 use mpx::runtime::ArtifactStore;
-#[cfg(feature = "xla")]
 use mpx::serve;
-#[cfg(feature = "xla")]
 use mpx::util::benchkit::Table;
 
 const WORKERS: usize = 2;
@@ -839,7 +836,6 @@ fn transport_section() -> anyhow::Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "xla")]
 fn artifact_section(report: &mut JsonReport) -> anyhow::Result<()> {
     let mut store = match ArtifactStore::open_default() {
         Ok(s) => s,
@@ -972,10 +968,7 @@ fn main() -> anyhow::Result<()> {
     planner_section()?;
     trace_section()?;
     transport_section()?;
-    #[cfg(feature = "xla")]
     artifact_section(&mut report)?;
-    #[cfg(not(feature = "xla"))]
-    eprintln!("# artifact section skipped (built without the xla feature)");
     println!("# wrote {}", report.write()?);
     Ok(())
 }

@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::BackendKind;
 use crate::scaling::ScalingConfig;
 use crate::serve::batcher::SchedPolicy;
 use crate::trace::TraceConfig;
@@ -168,6 +169,9 @@ pub struct TrainConfig {
     pub seed: u64,
     pub shards: usize,
     pub artifacts_dir: String,
+    /// Runtime backend compiling the artifacts (`backend = "xla" |
+    /// "host"`); defaults to xla when compiled in, host otherwise.
+    pub backend: BackendKind,
     pub log_every: u64,
     pub checkpoint_every: u64,
     pub checkpoint_dir: Option<String>,
@@ -189,6 +193,7 @@ impl Default for TrainConfig {
             seed: 0,
             shards: 1,
             artifacts_dir: "artifacts".into(),
+            backend: BackendKind::default_kind(),
             log_every: 10,
             checkpoint_every: 0,
             checkpoint_dir: None,
@@ -251,6 +256,9 @@ impl TrainConfig {
         }
         if let Some(s) = doc.get_str("train.artifacts_dir") {
             cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = doc.get_str("train.backend") {
+            cfg.backend = BackendKind::parse(s)?;
         }
         if let Some(v) = doc.get_int("train.log_every") {
             cfg.log_every = v as u64;
@@ -569,6 +577,9 @@ pub struct ServeConfig {
     pub open_loop: bool,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Runtime backend compiling the artifacts (`backend = "xla" |
+    /// "host"`); defaults to xla when compiled in, host otherwise.
+    pub backend: BackendKind,
     /// Span tracing (`[trace]` table, `--trace-out`); disabled by
     /// default.
     pub trace: TraceConfig,
@@ -597,6 +608,7 @@ impl Default for ServeConfig {
             open_loop: false,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            backend: BackendKind::default_kind(),
             trace: TraceConfig::default(),
         }
     }
@@ -920,6 +932,9 @@ impl ServeConfig {
         }
         if let Some(s) = doc.get_str("serve.artifacts_dir") {
             self.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = doc.get_str("serve.backend") {
+            self.backend = BackendKind::parse(s)?;
         }
         apply_trace_toml(&mut self.trace, doc);
         // Lane tables parse last so unset lane keys inherit the

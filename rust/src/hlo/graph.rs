@@ -1,0 +1,636 @@
+//! Deep HLO-text parser: the full program structure — computations,
+//! instruction operands, attributes, constants — as an executable
+//! graph, not just the per-line census [`super::HloModule`] keeps.
+//!
+//! This is the frontend of the host interpreter backend
+//! (`runtime::host`): it parses exactly the dialect `xla_extension`
+//! 0.5.1 prints for the AOT artifacts (names without `%` sigils,
+//! `/*index=N*/` comments inside tuple shapes, region computations
+//! named `region_K.N` / `None.N`), and it can print a program back
+//! out. Printing normalizes away layout annotations (`{1,0}`) and
+//! comments, so `parse → print → parse` is a fixpoint — the property
+//! `hlo_props.rs` pins on every checked-in artifact.
+//!
+//! Attribute values are kept as raw text in source order (so printing
+//! is faithful) with typed accessors (`attr_usize_list`, …) that the
+//! interpreter's lowering uses.
+
+use anyhow::{bail, Context, Result};
+
+use crate::pytree::DType;
+
+/// An array or tuple shape. Layout annotations are not represented:
+/// every artifact buffer is dense row-major (descending layout), which
+/// is what the manifest byte contract and the interpreter assume.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GShape {
+    Array { dtype: DType, dims: Vec<usize> },
+    Tuple(Vec<GShape>),
+}
+
+impl GShape {
+    pub fn elems(&self) -> usize {
+        match self {
+            GShape::Array { dims, .. } => dims.iter().product::<usize>().max(1),
+            GShape::Tuple(parts) => parts.iter().map(|p| p.elems()).sum(),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            GShape::Array { dtype, .. } => dtype.bytes() * self.elems(),
+            GShape::Tuple(parts) => parts.iter().map(|p| p.bytes()).sum(),
+        }
+    }
+
+    /// Array dtype; errors on tuples.
+    pub fn dtype(&self) -> Result<DType> {
+        match self {
+            GShape::Array { dtype, .. } => Ok(*dtype),
+            GShape::Tuple(_) => bail!("tuple shape has no single dtype"),
+        }
+    }
+
+    /// Array dims; errors on tuples.
+    pub fn dims(&self) -> Result<&[usize]> {
+        match self {
+            GShape::Array { dims, .. } => Ok(dims),
+            GShape::Tuple(_) => bail!("tuple shape has no single dims"),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            GShape::Array { dims, .. } => dims.len(),
+            GShape::Tuple(parts) => parts.len(),
+        }
+    }
+
+    fn print_into(&self, out: &mut String) {
+        match self {
+            GShape::Array { dtype, dims } => {
+                out.push_str(dtype.name());
+                out.push('[');
+                for (i, d) in dims.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&d.to_string());
+                }
+                out.push(']');
+            }
+            GShape::Tuple(parts) => {
+                out.push('(');
+                for (i, p) in parts.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    p.print_into(out);
+                }
+                out.push(')');
+            }
+        }
+    }
+
+    pub fn print(&self) -> String {
+        let mut s = String::new();
+        self.print_into(&mut s);
+        s
+    }
+}
+
+/// One fully parsed instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GInstr {
+    pub name: String,
+    pub opcode: String,
+    pub shape: GShape,
+    /// Operand instruction names (empty for `parameter`/`constant`).
+    pub operands: Vec<String>,
+    /// `key=value` attributes, raw value text, in source order.
+    pub attrs: Vec<(String, String)>,
+    /// `constant(...)` payload or `parameter(N)` index, raw.
+    pub payload: Option<String>,
+    pub is_root: bool,
+}
+
+impl GInstr {
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn attr_required(&self, key: &str) -> Result<&str> {
+        self.attr(key).with_context(|| {
+            format!("{} {}: missing attribute {key}", self.opcode, self.name)
+        })
+    }
+
+    /// Parse a `{a, b, c}` (or bare `N`) attribute into integers.
+    pub fn attr_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        parse_usize_list(self.attr_required(key)?)
+            .with_context(|| format!("{}: attribute {key}", self.name))
+    }
+
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        let v = self.attr_required(key)?;
+        v.trim()
+            .parse::<usize>()
+            .with_context(|| format!("{}: attribute {key}={v}", self.name))
+    }
+
+    /// `parameter(N)` index.
+    pub fn param_index(&self) -> Result<usize> {
+        let p = self.payload.as_deref().with_context(|| {
+            format!("parameter {} has no index payload", self.name)
+        })?;
+        p.trim()
+            .parse::<usize>()
+            .with_context(|| format!("parameter {}: bad index {p}", self.name))
+    }
+
+    fn print_into(&self, out: &mut String) {
+        out.push_str("  ");
+        if self.is_root {
+            out.push_str("ROOT ");
+        }
+        out.push_str(&self.name);
+        out.push_str(" = ");
+        self.shape.print_into(out);
+        out.push(' ');
+        out.push_str(&self.opcode);
+        out.push('(');
+        if let Some(p) = &self.payload {
+            out.push_str(p);
+        } else {
+            for (i, o) in self.operands.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(o);
+            }
+        }
+        out.push(')');
+        for (k, v) in &self.attrs {
+            out.push_str(", ");
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+        }
+        out.push('\n');
+    }
+}
+
+/// One computation (`ENTRY main.N { … }` or a region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GComputation {
+    pub name: String,
+    pub is_entry: bool,
+    pub instrs: Vec<GInstr>,
+}
+
+impl GComputation {
+    /// Index of the ROOT instruction (last instruction if unmarked).
+    pub fn root_index(&self) -> Result<usize> {
+        if let Some(i) = self.instrs.iter().position(|i| i.is_root) {
+            return Ok(i);
+        }
+        if self.instrs.is_empty() {
+            bail!("computation {} has no instructions", self.name);
+        }
+        Ok(self.instrs.len() - 1)
+    }
+
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.instrs.iter().position(|i| i.name == name)
+    }
+
+    /// Parameter instruction indices ordered by parameter number.
+    pub fn params(&self) -> Result<Vec<usize>> {
+        let mut ps: Vec<(usize, usize)> = Vec::new();
+        for (i, instr) in self.instrs.iter().enumerate() {
+            if instr.opcode == "parameter" {
+                ps.push((instr.param_index()?, i));
+            }
+        }
+        ps.sort();
+        for (slot, (num, _)) in ps.iter().enumerate() {
+            if *num != slot {
+                bail!(
+                    "computation {}: parameter numbers not dense ({num} at slot {slot})",
+                    self.name
+                );
+            }
+        }
+        Ok(ps.into_iter().map(|(_, i)| i).collect())
+    }
+}
+
+/// A parsed HLO module: named computations plus the entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HloProgram {
+    pub module_name: String,
+    pub computations: Vec<GComputation>,
+}
+
+impl HloProgram {
+    pub fn parse(text: &str) -> Result<HloProgram> {
+        let mut program = HloProgram {
+            module_name: String::new(),
+            computations: Vec::new(),
+        };
+        let mut current: Option<GComputation> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comments(raw);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if let Some(rest) = trimmed.strip_prefix("HloModule ") {
+                program.module_name = rest
+                    .split([',', ' '])
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                continue;
+            }
+            if trimmed == "}" {
+                let comp = current.take().with_context(|| {
+                    format!("line {}: unmatched closing brace", lineno + 1)
+                })?;
+                program.computations.push(comp);
+                continue;
+            }
+            if let Some(header) = trimmed.strip_suffix('{') {
+                // `region_0.104 {` or `ENTRY main.164 {`
+                let header = header.trim();
+                let (is_entry, name) = match header.strip_prefix("ENTRY ") {
+                    Some(n) => (true, n.trim()),
+                    None => (false, header),
+                };
+                // A shape-y header (`f32[… {` from a wrapped line)
+                // would be malformed; computation names are idents.
+                if current.is_some() {
+                    bail!("line {}: nested computation {name}", lineno + 1);
+                }
+                current = Some(GComputation {
+                    name: name.trim_start_matches('%').to_string(),
+                    is_entry,
+                    instrs: Vec::new(),
+                });
+                continue;
+            }
+            let comp = current.as_mut().with_context(|| {
+                format!("line {}: instruction outside computation", lineno + 1)
+            })?;
+            let instr = parse_instr(trimmed).with_context(|| {
+                format!("line {}: {trimmed}", lineno + 1)
+            })?;
+            comp.instrs.push(instr);
+        }
+        if current.is_some() {
+            bail!("unterminated computation at end of module");
+        }
+        if program.computations.is_empty() {
+            bail!("no computations parsed — not HLO text?");
+        }
+        Ok(program)
+    }
+
+    pub fn entry(&self) -> Result<&GComputation> {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .context("module has no ENTRY computation")
+    }
+
+    pub fn computation(&self, name: &str) -> Option<&GComputation> {
+        self.computations.iter().find(|c| c.name == name)
+    }
+
+    pub fn computation_index(&self, name: &str) -> Option<usize> {
+        self.computations.iter().position(|c| c.name == name)
+    }
+
+    /// Print the program back to HLO text (layouts and comments
+    /// normalized away). `parse(print(p)) == p`.
+    pub fn print(&self) -> String {
+        let mut out = String::new();
+        out.push_str("HloModule ");
+        out.push_str(&self.module_name);
+        out.push('\n');
+        for comp in &self.computations {
+            out.push('\n');
+            if comp.is_entry {
+                out.push_str("ENTRY ");
+            }
+            out.push_str(&comp.name);
+            out.push_str(" {\n");
+            for instr in &comp.instrs {
+                instr.print_into(&mut out);
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+}
+
+/// Remove `/* … */` comments (the printer's `/*index=N*/` markers).
+fn strip_comments(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut rest = line;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => return out, // unterminated: drop the tail
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Split on `sep` at nesting depth zero w.r.t. `()[]{}`.
+fn split_top_level(s: &str, sep: char) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth = depth.saturating_sub(1),
+            c2 if c2 == sep && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Parse `{a, b, c}`, `{}`, or a bare integer into a list.
+pub fn parse_usize_list(v: &str) -> Result<Vec<usize>> {
+    let v = v.trim();
+    let inner = v
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .unwrap_or(v);
+    let mut out = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse::<usize>()
+                .with_context(|| format!("bad integer {tok:?} in {v:?}"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Parse a shape starting at `s`; returns the shape and the rest of
+/// the string after it (layout annotation consumed).
+fn parse_shape_prefix(s: &str) -> Result<(GShape, &str)> {
+    let s = s.trim_start();
+    if let Some(rest) = s.strip_prefix('(') {
+        // tuple: shapes separated by top-level commas up to ')'
+        let mut depth = 1usize;
+        let mut end = None;
+        for (i, c) in rest.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let end = end.context("unterminated tuple shape")?;
+        let inner = &rest[..end];
+        let mut parts = Vec::new();
+        for piece in split_top_level(inner, ',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (shape, tail) = parse_shape_prefix(piece)?;
+            if !tail.trim().is_empty() {
+                bail!("trailing text {tail:?} after tuple element shape");
+            }
+            parts.push(shape);
+        }
+        return Ok((GShape::Tuple(parts), &rest[end + 1..]));
+    }
+    // array: dtype[dims]{layout}?
+    let bracket = s.find('[').context("shape has no '['")?;
+    let dtype = DType::parse(s[..bracket].trim())
+        .with_context(|| format!("bad dtype in shape {s:?}"))?;
+    let rest = &s[bracket + 1..];
+    let close = rest.find(']').context("shape has no ']'")?;
+    let dims_str = &rest[..close];
+    let mut dims = Vec::new();
+    for d in dims_str.split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        dims.push(
+            d.parse::<usize>()
+                .with_context(|| format!("bad dim {d:?} in shape {s:?}"))?,
+        );
+    }
+    let mut after = &rest[close + 1..];
+    // consume layout `{…}` if present (may be nested, e.g. tiling)
+    let trimmed = after.trim_start();
+    if let Some(body) = trimmed.strip_prefix('{') {
+        let mut depth = 1usize;
+        let mut end = None;
+        for (i, c) in body.char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(i);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let end = end.context("unterminated layout annotation")?;
+        after = &body[end + 1..];
+    }
+    Ok((GShape::Array { dtype, dims }, after))
+}
+
+/// Parse one instruction body line.
+fn parse_instr(line: &str) -> Result<GInstr> {
+    let (is_root, body) = match line.strip_prefix("ROOT ") {
+        Some(b) => (true, b),
+        None => (false, line),
+    };
+    let (lhs, rhs) = body
+        .split_once(" = ")
+        .context("instruction line has no ' = '")?;
+    let name = lhs.trim().trim_start_matches('%').to_string();
+
+    let (shape, rest) = parse_shape_prefix(rhs)?;
+    let rest = rest.trim_start();
+    let paren = rest.find('(').context("instruction has no operand list")?;
+    let opcode = rest[..paren].trim().to_string();
+    if opcode.is_empty() || !opcode.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.') {
+        bail!("bad opcode token {:?}", &rest[..paren]);
+    }
+    // balanced-paren operand list (constants never nest parens, but
+    // stay safe anyway)
+    let args_body = &rest[paren + 1..];
+    let mut depth = 1usize;
+    let mut end = None;
+    for (i, c) in args_body.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let end = end.context("unterminated operand list")?;
+    let args = args_body[..end].trim();
+    let tail = args_body[end + 1..].trim_start();
+
+    let mut operands = Vec::new();
+    let mut payload = None;
+    if opcode == "constant" || opcode == "parameter" {
+        payload = Some(args.to_string());
+    } else if !args.is_empty() {
+        for op in split_top_level(args, ',') {
+            operands.push(op.trim().trim_start_matches('%').to_string());
+        }
+    }
+
+    let mut attrs = Vec::new();
+    if let Some(tail) = tail.strip_prefix(',') {
+        for piece in split_top_level(tail, ',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (k, v) = piece
+                .split_once('=')
+                .with_context(|| format!("attribute {piece:?} has no '='"))?;
+            attrs.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    Ok(GInstr { name, opcode, shape, operands, attrs, payload, is_root })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_step, entry_computation_layout={(s32[])->(f32[8,10]{1,0}, /*index=1*/pred[])}
+
+region_0.10 {
+  Arg_0.11 = f32[] parameter(0)
+  Arg_1.12 = f32[] parameter(1)
+  ROOT add.13 = f32[] add(Arg_0.11, Arg_1.12)
+}
+
+ENTRY main.42 {
+  Arg_0.1 = f32[8,64]{1,0} parameter(0)
+  constant.3 = f32[] constant(-inf)
+  constant.4 = s32[2]{0} constant({13, 15})
+  slice.5 = f32[8,32]{1,0} slice(Arg_0.1), slice={[0:8], [0:32]}
+  reduce.6 = f32[8]{0} reduce(Arg_0.1, constant.3), dimensions={1}, to_apply=region_0.10
+  compare.7 = pred[8]{0} compare(reduce.6, reduce.6), direction=GE
+  ROOT tuple.8 = (f32[8]{0}, pred[8]{0}) tuple(reduce.6, compare.7)
+}
+"#;
+
+    #[test]
+    fn parses_structure() {
+        let p = HloProgram::parse(SAMPLE).unwrap();
+        assert_eq!(p.module_name, "jit_step");
+        assert_eq!(p.computations.len(), 2);
+        let entry = p.entry().unwrap();
+        assert_eq!(entry.name, "main.42");
+        assert_eq!(entry.instrs.len(), 7);
+        assert_eq!(entry.root_index().unwrap(), 6);
+        let region = p.computation("region_0.10").unwrap();
+        assert_eq!(region.params().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn operands_and_attrs() {
+        let p = HloProgram::parse(SAMPLE).unwrap();
+        let entry = p.entry().unwrap();
+        let reduce = &entry.instrs[entry.find("reduce.6").unwrap()];
+        assert_eq!(reduce.operands, vec!["Arg_0.1", "constant.3"]);
+        assert_eq!(reduce.attr_usize_list("dimensions").unwrap(), vec![1]);
+        assert_eq!(reduce.attr("to_apply"), Some("region_0.10"));
+        let slice = &entry.instrs[entry.find("slice.5").unwrap()];
+        // nested brackets survive top-level attr splitting
+        assert_eq!(slice.attr("slice"), Some("{[0:8], [0:32]}"));
+        let cmp = &entry.instrs[entry.find("compare.7").unwrap()];
+        assert_eq!(cmp.attr("direction"), Some("GE"));
+    }
+
+    #[test]
+    fn tuple_shapes_and_comments() {
+        let p = HloProgram::parse(SAMPLE).unwrap();
+        let entry = p.entry().unwrap();
+        let root = &entry.instrs[entry.root_index().unwrap()];
+        match &root.shape {
+            GShape::Tuple(parts) => {
+                assert_eq!(parts.len(), 2);
+                assert_eq!(parts[0].dims().unwrap(), &[8]);
+                assert_eq!(parts[1].dtype().unwrap(), DType::Pred);
+            }
+            other => panic!("root not tuple: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn constants_keep_payload() {
+        let p = HloProgram::parse(SAMPLE).unwrap();
+        let entry = p.entry().unwrap();
+        let c3 = &entry.instrs[entry.find("constant.3").unwrap()];
+        assert_eq!(c3.payload.as_deref(), Some("-inf"));
+        let c4 = &entry.instrs[entry.find("constant.4").unwrap()];
+        assert_eq!(c4.payload.as_deref(), Some("{13, 15}"));
+    }
+
+    #[test]
+    fn print_parse_fixpoint() {
+        let p1 = HloProgram::parse(SAMPLE).unwrap();
+        let text = p1.print();
+        let p2 = HloProgram::parse(&text).unwrap();
+        assert_eq!(p1, p2);
+        // and printing is itself stable
+        assert_eq!(text, p2.print());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(HloProgram::parse("not hlo").is_err());
+        assert!(HloProgram::parse("ENTRY e {\n  x = f32[2] bogus\n}\n").is_err());
+    }
+}

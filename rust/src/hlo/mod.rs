@@ -14,6 +14,8 @@
 //! census then aggregates bytes by dtype and by opcode class, which is
 //! the Fig. 2 cross-check: XLA materializes exactly these buffers.
 
+pub mod graph;
+
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};

@@ -23,16 +23,19 @@
 //!   implementation.
 //! * [`pytree`] — leaf inventories: the manifest contract between
 //!   `aot.py` and the runtime.
-//! * `runtime` (xla feature) — PJRT wrapper: artifact registry,
-//!   executable cache, literal pack/unpack.
+//! * [`runtime`] — the backend HAL: `Backend`/`Executable` traits,
+//!   the artifact registry, backend-agnostic [`runtime::Value`]
+//!   leaves, the always-available pure-Rust [`runtime::host`]
+//!   interpreter, and the PJRT backend behind the `xla` feature.
 //! * [`config`] — TOML-subset config system + machine/model presets.
 //! * [`data`] — deterministic synthetic CIFAR-100/ImageNet-like
 //!   datasets with a prefetching loader.
 //! * [`optim`] — Rust AdamW/SGD over flat f32 tensors (master weights
 //!   for the data-parallel mode).
 //! * [`collective`] — deterministic tree all-reduce across shards.
-//! * `trainer` (xla feature) — the fused single-device loop and the
-//!   simulated multi-device data-parallel loop; checkpointing.
+//! * [`trainer`] — the fused single-device loop and the simulated
+//!   multi-device data-parallel loop; checkpointing. Runs on either
+//!   runtime backend.
 //! * [`serve`] — continuous-batching multi-model serving engine: one
 //!   bounded request queue per (model, precision) lane, a
 //!   weighted-deficit scheduler that refills the shared worker pool
@@ -51,7 +54,8 @@
 //!   (Perfetto-loadable, `GET /debug/trace`), and the
 //!   [`trace::ServiceSample`] calibration records the bucket planner
 //!   consumes.  Virtual-clock runs produce bit-deterministic traces.
-//! * [`hlo`] — HLO-text parser for the buffer census.
+//! * [`hlo`] — HLO-text parsers: the per-line census and the deep
+//!   executable-graph frontend ([`hlo::graph`]) the host backend runs.
 //! * [`memmodel`] — Fig. 2 memory model + Fig. 3 roofline projection.
 //! * [`metrics`] — step timers, loss history, latency histograms
 //!   (rank-interpolated quantiles, optional bounded reservoir),
@@ -69,14 +73,10 @@ pub mod metrics;
 pub mod numerics;
 pub mod optim;
 pub mod pytree;
-// The PJRT-backed modules need the native xla_extension library;
-// everything else builds host-only (`--no-default-features`).
-#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scaling;
 pub mod serve;
 pub mod trace;
-#[cfg(feature = "xla")]
 pub mod trainer;
 pub mod util;
 

@@ -23,19 +23,21 @@ use mpx::data::SyntheticDataset;
 use mpx::hlo::HloModule;
 use mpx::memmodel::{roofline, ActivationModel};
 use mpx::metrics::RunMetrics;
-use mpx::runtime::ArtifactStore;
+use mpx::runtime::{ArtifactStore, BackendKind};
 use mpx::scaling::{LossScaler, OverflowInjector};
 use mpx::trainer::{checkpoint, DataParallelTrainer, FusedTrainer};
 use mpx::util::{human_bytes, human_duration, rng::Rng};
 
 const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-report|scaling-sim|serve> [flags]
   train          --model M --precision P --batch B --steps N [--seed S] [--config cfg.toml]
-                 [--checkpoint-every K --checkpoint-dir D] [--metrics-csv path] [--resume ckpt]
+                 [--backend xla|host] [--checkpoint-every K --checkpoint-dir D]
+                 [--metrics-csv path] [--resume ckpt]
   train-ddp      --model M --precision P --batch B(per shard) --shards N --steps N
   inspect        --artifact NAME
   memory-report  --model M [--batches 8,16,...] [--machine desktop|cluster]
   scaling-sim    [--steps N] [--overflow-prob p] [--period N]
   serve          --model M --precision P [--batch B --workers W --requests N]
+                 [--backend xla|host]
                  [--max-workers W --autoscale-depth D] [--policy continuous|form_first]
                  [--precisions p1,p2 --lane-weights w1,w2] (multi-model lanes)
                  [--rate req_per_s --open-loop] [--queue-cap N --flush-ms T]
@@ -107,6 +109,9 @@ fn train_config_from(args: &Args) -> Result<TrainConfig> {
     if let Some(d) = args.get_str("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
+    if let Some(b) = args.get_str("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
     if let Some(k) = args.get_u64("checkpoint-every")? {
         cfg.checkpoint_every = k;
     }
@@ -133,15 +138,17 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
         None => RunMetrics::new(),
     };
 
-    let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let mut store =
+        ArtifactStore::open_with(&cfg.artifacts_dir, cfg.backend)?;
     eprintln!(
-        "[mpx] {} | model {} | precision {} | batch {}{} | {} steps",
+        "[mpx] {} | model {} | precision {} | batch {}{} | {} steps | {} backend",
         if ddp { "data-parallel" } else { "fused" },
         cfg.model,
         cfg.precision.tag(),
         cfg.batch,
         if ddp { format!(" ×{} shards", cfg.shards) } else { String::new() },
         cfg.steps,
+        cfg.backend,
     );
 
     if ddp {
@@ -437,6 +444,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(d) = args.get_str("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
+    if let Some(b) = args.get_str("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
     if args.has_switch("open-loop") {
         cfg.open_loop = true;
     }
@@ -456,7 +466,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return cmd_serve_plan(&cfg);
     }
     if listen.is_some() {
-        let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+        let mut store =
+            ArtifactStore::open_with(&cfg.artifacts_dir, cfg.backend)?;
         let report =
             mpx::serve::run_transport_with_artifacts(&mut store, &cfg)?;
         report.print();
@@ -493,7 +504,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "| back-to-back".to_string()
         },
     );
-    let mut store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let mut store =
+        ArtifactStore::open_with(&cfg.artifacts_dir, cfg.backend)?;
     let report = mpx::serve::run_with_artifacts(&mut store, &cfg)?;
     report.print(&format!(
         "{} {} b{}×{}w",
@@ -578,7 +590,7 @@ fn cmd_serve_plan(cfg: &ServeConfig) -> Result<()> {
 
     // Best-effort artifact presence report: the plan says what should
     // exist, the store says what does.
-    match ArtifactStore::open(&cfg.artifacts_dir) {
+    match ArtifactStore::open_with(&cfg.artifacts_dir, cfg.backend) {
         Ok(store) => {
             for (lp, lc) in plan.lanes.iter().zip(cfg.lane_configs()) {
                 let missing = mpx::serve::missing_planned_artifacts(

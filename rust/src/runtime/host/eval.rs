@@ -1,0 +1,1626 @@
+//! Graph evaluator for the host backend: typed host tensors plus the
+//! per-op kernels. Numerics contract is documented on [`super`] —
+//! f16/bf16 elementwise math rounds through the RTNE cast lanes,
+//! integer ops are bit-exact, `dot`/`reduce` accumulate in f32 in a
+//! fixed (row-major) order.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hlo::graph::GShape;
+use crate::hostkernel::cast;
+use crate::hostkernel::BufferPool;
+use crate::pytree::DType;
+use crate::runtime::value::{as_bytes, Value};
+
+use super::{
+    BOp, CmpDir, Comp, ConvCfg, GatherCfg, HostExecutable, Node, Op,
+    ScatterCfg, UOp,
+};
+
+/// Typed element storage. f16/bf16 keep their native 16-bit words;
+/// math on them goes through f32 with one final RTNE rounding.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Data {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Bf16(Vec<u16>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    Pred(Vec<u8>),
+}
+
+impl Data {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F16(v) | Data::Bf16(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::I8(v) => v.len(),
+            Data::U8(v) | Data::Pred(v) => v.len(),
+        }
+    }
+}
+
+/// One evaluated tensor: dtype + dims + typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub(crate) fn elems(&self) -> usize {
+        nelems(&self.dims)
+    }
+
+    /// Decode a [`Value`]'s native bytes into typed storage.
+    pub(crate) fn from_value(v: &Value) -> Result<Tensor> {
+        let b = v.bytes();
+        let data = match v.dtype() {
+            DType::F32 => Data::F32(
+                b.chunks_exact(4)
+                    .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::F16 => Data::F16(words16(b)),
+            DType::Bf16 => Data::Bf16(words16(b)),
+            DType::S32 => Data::I32(
+                b.chunks_exact(4)
+                    .map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::U32 => Data::U32(
+                b.chunks_exact(4)
+                    .map(|c| u32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::S8 => Data::I8(b.iter().map(|&x| x as i8).collect()),
+            DType::U8 => Data::U8(b.to_vec()),
+            DType::Pred => Data::Pred(b.to_vec()),
+        };
+        Ok(Tensor { dtype: v.dtype(), dims: v.shape().to_vec(), data })
+    }
+
+    /// Encode back to a [`Value`] (validates element count).
+    pub(crate) fn to_value(&self) -> Result<Value> {
+        let bytes = match &self.data {
+            Data::F32(v) => as_bytes(v).to_vec(),
+            Data::F16(v) | Data::Bf16(v) => as_bytes(v).to_vec(),
+            Data::I32(v) => as_bytes(v).to_vec(),
+            Data::U32(v) => as_bytes(v).to_vec(),
+            Data::I8(v) => as_bytes(v).to_vec(),
+            Data::U8(v) | Data::Pred(v) => v.clone(),
+        };
+        Value::new(self.dtype, self.dims.clone(), bytes)
+    }
+
+    fn scalar_i64(&self) -> Result<i64> {
+        match &self.data {
+            Data::I32(v) => Ok(v[0] as i64),
+            Data::U32(v) => Ok(v[0] as i64),
+            Data::I8(v) => Ok(v[0] as i64),
+            Data::U8(v) | Data::Pred(v) => Ok(v[0] as i64),
+            _ => bail!("expected integer scalar, got {}", self.dtype.name()),
+        }
+    }
+
+    fn scalar_pred(&self) -> Result<bool> {
+        match &self.data {
+            Data::Pred(v) => Ok(v[0] != 0),
+            _ => bail!("expected pred scalar, got {}", self.dtype.name()),
+        }
+    }
+}
+
+fn words16(b: &[u8]) -> Vec<u16> {
+    b.chunks_exact(2).map(|c| u16::from_ne_bytes([c[0], c[1]])).collect()
+}
+
+/// Evaluation value: a tensor or a tuple (while-loop state, roots).
+#[derive(Debug, Clone)]
+pub(crate) enum Val {
+    T(Rc<Tensor>),
+    Tup(Vec<Val>),
+}
+
+fn tt(v: &Val) -> Result<&Tensor> {
+    match v {
+        Val::T(t) => Ok(t),
+        Val::Tup(_) => bail!("expected array value, got tuple"),
+    }
+}
+
+fn nelems(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>().max(1)
+}
+
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for d in (0..dims.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * dims[d + 1];
+    }
+    s
+}
+
+/// Advance a row-major multi-index (last dim fastest).
+fn advance(idx: &mut [usize], dims: &[usize]) {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return;
+        }
+        idx[d] = 0;
+    }
+}
+
+/// All Σ idxᵢ·strideᵢ offsets for the given dim subset, enumerated
+/// row-major over the subset order. Precomputing these turns
+/// dot-general's index arithmetic into three table lookups.
+fn subset_offsets(
+    dims: &[usize],
+    strides: &[usize],
+    subset: &[usize],
+) -> Vec<usize> {
+    let mut out = vec![0usize];
+    for &d in subset {
+        let mut next = Vec::with_capacity(out.len() * dims[d]);
+        for &base in &out {
+            for i in 0..dims[d] {
+                next.push(base + i * strides[d]);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// Parse a `constant(...)` payload for the given shape.
+pub(crate) fn parse_constant(
+    shape: &GShape,
+    payload: Option<&str>,
+) -> Result<Tensor> {
+    let dtype = shape.dtype()?;
+    let dims = shape.dims()?.to_vec();
+    let n = nelems(&dims);
+    let raw = payload.context("constant without payload")?;
+    let cleaned: String = raw
+        .chars()
+        .map(|c| if c == '{' || c == '}' { ' ' } else { c })
+        .collect();
+    let toks: Vec<&str> = cleaned
+        .split(',')
+        .flat_map(|s| s.split_whitespace())
+        .collect();
+    if toks.len() != n {
+        bail!(
+            "constant {}: {} elems declared, {} literals in payload",
+            shape.print(),
+            n,
+            toks.len()
+        );
+    }
+    let fparse = |t: &str| -> Result<f32> {
+        t.parse::<f32>().with_context(|| format!("float literal {t:?}"))
+    };
+    let data = match dtype {
+        DType::F32 => Data::F32(
+            toks.iter().map(|t| fparse(t)).collect::<Result<_>>()?,
+        ),
+        DType::F16 => Data::F16(
+            toks.iter()
+                .map(|t| fparse(t).map(|x| cast::f16_lane(x.to_bits())))
+                .collect::<Result<_>>()?,
+        ),
+        DType::Bf16 => Data::Bf16(
+            toks.iter()
+                .map(|t| fparse(t).map(|x| cast::bf16_lane(x.to_bits())))
+                .collect::<Result<_>>()?,
+        ),
+        DType::S32 => Data::I32(
+            toks.iter()
+                .map(|t| t.parse::<i32>().context("s32 literal"))
+                .collect::<Result<_>>()?,
+        ),
+        DType::U32 => Data::U32(
+            toks.iter()
+                .map(|t| t.parse::<u32>().context("u32 literal"))
+                .collect::<Result<_>>()?,
+        ),
+        DType::S8 => Data::I8(
+            toks.iter()
+                .map(|t| t.parse::<i8>().context("s8 literal"))
+                .collect::<Result<_>>()?,
+        ),
+        DType::U8 => Data::U8(
+            toks.iter()
+                .map(|t| t.parse::<u8>().context("u8 literal"))
+                .collect::<Result<_>>()?,
+        ),
+        DType::Pred => Data::Pred(
+            toks.iter()
+                .map(|t| match *t {
+                    "true" => Ok(1u8),
+                    "false" => Ok(0u8),
+                    other => other.parse::<u8>().context("pred literal"),
+                })
+                .collect::<Result<_>>()?,
+        ),
+    };
+    Ok(Tensor { dtype, dims, data })
+}
+
+/// View a float tensor as f32 (f16/bf16 widen exactly).
+fn to_f32_vec(t: &Tensor) -> Result<Vec<f32>> {
+    match &t.data {
+        Data::F32(v) => Ok(v.clone()),
+        Data::F16(v) => {
+            let mut out = vec![0f32; v.len()];
+            cast::f16_to_f32_slice(v, &mut out);
+            Ok(out)
+        }
+        Data::Bf16(v) => {
+            let mut out = vec![0f32; v.len()];
+            cast::bf16_to_f32_slice(v, &mut out);
+            Ok(out)
+        }
+        _ => bail!("expected float tensor, got {}", t.dtype.name()),
+    }
+}
+
+/// Round an f32 buffer back to the given float dtype (RTNE for
+/// f16/bf16 — the single rounding step of the numerics contract).
+fn from_f32(dtype: DType, dims: Vec<usize>, v: Vec<f32>) -> Result<Tensor> {
+    let data = match dtype {
+        DType::F32 => Data::F32(v),
+        DType::F16 => {
+            let mut out = vec![0u16; v.len()];
+            cast::f32_to_f16_slice(&v, &mut out);
+            Data::F16(out)
+        }
+        DType::Bf16 => {
+            let mut out = vec![0u16; v.len()];
+            cast::f32_to_bf16_slice(&v, &mut out);
+            Data::Bf16(out)
+        }
+        _ => bail!("float op cannot produce {}", dtype.name()),
+    };
+    Ok(Tensor { dtype, dims, data })
+}
+
+fn to_i64_vec(t: &Tensor) -> Result<Vec<i64>> {
+    match &t.data {
+        Data::I32(v) => Ok(v.iter().map(|&x| x as i64).collect()),
+        Data::U32(v) => Ok(v.iter().map(|&x| x as i64).collect()),
+        Data::I8(v) => Ok(v.iter().map(|&x| x as i64).collect()),
+        Data::U8(v) | Data::Pred(v) => {
+            Ok(v.iter().map(|&x| x as i64).collect())
+        }
+        _ => bail!("expected integer tensor, got {}", t.dtype.name()),
+    }
+}
+
+/// Extract element `lin` as a scalar tensor (generic-reduce path).
+fn scalar_at(t: &Tensor, lin: usize) -> Tensor {
+    let data = match &t.data {
+        Data::F32(v) => Data::F32(vec![v[lin]]),
+        Data::F16(v) => Data::F16(vec![v[lin]]),
+        Data::Bf16(v) => Data::Bf16(vec![v[lin]]),
+        Data::I32(v) => Data::I32(vec![v[lin]]),
+        Data::U32(v) => Data::U32(vec![v[lin]]),
+        Data::I8(v) => Data::I8(vec![v[lin]]),
+        Data::U8(v) => Data::U8(vec![v[lin]]),
+        Data::Pred(v) => Data::Pred(vec![v[lin]]),
+    };
+    Tensor { dtype: t.dtype, dims: Vec::new(), data }
+}
+
+/// Gather `src` elements into a new tensor of shape `odims`: `map`
+/// turns each output multi-index into a source linear index (`None` →
+/// the `pad` scalar). One routine implements broadcast / transpose /
+/// slice / pad / dynamic-slice / gather.
+fn remap(
+    src: &Tensor,
+    odims: &[usize],
+    pad: Option<&Tensor>,
+    mut map: impl FnMut(&[usize]) -> Option<usize>,
+) -> Result<Tensor> {
+    let out_elems = nelems(odims);
+    macro_rules! go {
+        ($var:ident, $s:ident) => {{
+            let padv = match pad {
+                None => None,
+                Some(p) => match &p.data {
+                    Data::$var(pv) => Some(pv[0]),
+                    _ => bail!(
+                        "pad value dtype {} != operand {}",
+                        p.dtype.name(),
+                        src.dtype.name()
+                    ),
+                },
+            };
+            let mut out = Vec::with_capacity(out_elems);
+            let mut idx = vec![0usize; odims.len()];
+            for _ in 0..out_elems {
+                match map(&idx) {
+                    Some(i) => out.push($s[i]),
+                    None => out.push(
+                        padv.context("index out of range without pad value")?,
+                    ),
+                }
+                advance(&mut idx, odims);
+            }
+            Data::$var(out)
+        }};
+    }
+    let data = match &src.data {
+        Data::F32(s) => go!(F32, s),
+        Data::F16(s) => go!(F16, s),
+        Data::Bf16(s) => go!(Bf16, s),
+        Data::I32(s) => go!(I32, s),
+        Data::U32(s) => go!(U32, s),
+        Data::I8(s) => go!(I8, s),
+        Data::U8(s) => go!(U8, s),
+        Data::Pred(s) => go!(Pred, s),
+    };
+    Ok(Tensor { dtype: src.dtype, dims: odims.to_vec(), data })
+}
+
+// ---- elementwise kernels -------------------------------------------------
+
+fn compare_t(l: &Tensor, r: &Tensor, dir: CmpDir) -> Result<Tensor> {
+    if l.data.len() != r.data.len() {
+        bail!("compare: operand sizes differ");
+    }
+    macro_rules! cmp {
+        ($a:expr, $b:expr) => {
+            match dir {
+                CmpDir::Eq => $a == $b,
+                CmpDir::Ne => $a != $b,
+                CmpDir::Ge => $a >= $b,
+                CmpDir::Gt => $a > $b,
+                CmpDir::Le => $a <= $b,
+                CmpDir::Lt => $a < $b,
+            }
+        };
+    }
+    let out: Vec<u8> = if l.dtype.is_float() {
+        let (a, b) = (to_f32_vec(l)?, to_f32_vec(r)?);
+        a.iter().zip(&b).map(|(x, y)| cmp!(x, y) as u8).collect()
+    } else {
+        macro_rules! icmp {
+            ($a:ident, $b:ident) => {
+                $a.iter().zip($b).map(|(x, y)| cmp!(x, y) as u8).collect()
+            };
+        }
+        match (&l.data, &r.data) {
+            (Data::I32(a), Data::I32(b)) => icmp!(a, b),
+            (Data::U32(a), Data::U32(b)) => icmp!(a, b),
+            (Data::I8(a), Data::I8(b)) => icmp!(a, b),
+            (Data::U8(a), Data::U8(b)) => icmp!(a, b),
+            (Data::Pred(a), Data::Pred(b)) => icmp!(a, b),
+            _ => bail!(
+                "compare: dtype mismatch {} vs {}",
+                l.dtype.name(),
+                r.dtype.name()
+            ),
+        }
+    };
+    Ok(Tensor {
+        dtype: DType::Pred,
+        dims: l.dims.clone(),
+        data: Data::Pred(out),
+    })
+}
+
+fn select_t(p: &Tensor, t: &Tensor, f: &Tensor) -> Result<Tensor> {
+    let preds = match &p.data {
+        Data::Pred(v) => v,
+        _ => bail!("select: predicate is {}", p.dtype.name()),
+    };
+    if t.data.len() != f.data.len() {
+        bail!("select: branch sizes differ");
+    }
+    // scalar predicate picks a whole branch
+    if preds.len() == 1 && t.data.len() != 1 {
+        return Ok(if preds[0] != 0 { t.clone() } else { f.clone() });
+    }
+    if preds.len() != t.data.len() {
+        bail!("select: predicate size differs from branches");
+    }
+    macro_rules! sel {
+        ($var:ident, $a:ident, $b:ident) => {
+            Data::$var(
+                preds
+                    .iter()
+                    .zip($a.iter().zip($b))
+                    .map(|(&p, (x, y))| if p != 0 { *x } else { *y })
+                    .collect(),
+            )
+        };
+    }
+    let data = match (&t.data, &f.data) {
+        (Data::F32(a), Data::F32(b)) => sel!(F32, a, b),
+        (Data::F16(a), Data::F16(b)) => sel!(F16, a, b),
+        (Data::Bf16(a), Data::Bf16(b)) => sel!(Bf16, a, b),
+        (Data::I32(a), Data::I32(b)) => sel!(I32, a, b),
+        (Data::U32(a), Data::U32(b)) => sel!(U32, a, b),
+        (Data::I8(a), Data::I8(b)) => sel!(I8, a, b),
+        (Data::U8(a), Data::U8(b)) => sel!(U8, a, b),
+        (Data::Pred(a), Data::Pred(b)) => sel!(Pred, a, b),
+        _ => bail!(
+            "select: branch dtypes differ ({} vs {})",
+            t.dtype.name(),
+            f.dtype.name()
+        ),
+    };
+    Ok(Tensor { dtype: t.dtype, dims: t.dims.clone(), data })
+}
+
+fn unary_t(u: UOp, x: &Tensor) -> Result<Tensor> {
+    if x.dtype.is_float() {
+        let f: fn(f32) -> f32 = match u {
+            UOp::Neg => |a| -a,
+            UOp::Abs => f32::abs,
+            UOp::Exp => f32::exp,
+            UOp::Log => f32::ln,
+            UOp::Log1p => f32::ln_1p,
+            UOp::Tanh => f32::tanh,
+            UOp::Sqrt => f32::sqrt,
+            UOp::Rsqrt => |a| 1.0 / a.sqrt(),
+        };
+        let v: Vec<f32> = to_f32_vec(x)?.into_iter().map(f).collect();
+        return from_f32(x.dtype, x.dims.clone(), v);
+    }
+    let data = match (u, &x.data) {
+        (UOp::Neg, Data::I32(v)) => {
+            Data::I32(v.iter().map(|a| a.wrapping_neg()).collect())
+        }
+        (UOp::Abs, Data::I32(v)) => {
+            Data::I32(v.iter().map(|a| a.wrapping_abs()).collect())
+        }
+        (UOp::Neg, Data::U32(v)) => {
+            Data::U32(v.iter().map(|a| a.wrapping_neg()).collect())
+        }
+        (UOp::Abs, Data::U32(v)) => Data::U32(v.clone()),
+        _ => bail!("unary {u:?} unsupported for {}", x.dtype.name()),
+    };
+    Ok(Tensor { dtype: x.dtype, dims: x.dims.clone(), data })
+}
+
+fn binary_t(op: BOp, l: &Tensor, r: &Tensor) -> Result<Tensor> {
+    if l.data.len() != r.data.len() {
+        bail!("binary {op:?}: operand sizes differ");
+    }
+    if l.dtype.is_float() {
+        let f: fn(f32, f32) -> f32 = match op {
+            BOp::Add => |a, b| a + b,
+            BOp::Sub => |a, b| a - b,
+            BOp::Mul => |a, b| a * b,
+            BOp::Div => |a, b| a / b,
+            BOp::Max => |a, b| {
+                if a.is_nan() {
+                    a
+                } else if b.is_nan() {
+                    b
+                } else if a >= b {
+                    a
+                } else {
+                    b
+                }
+            },
+            BOp::Min => |a, b| {
+                if a.is_nan() {
+                    a
+                } else if b.is_nan() {
+                    b
+                } else if a <= b {
+                    a
+                } else {
+                    b
+                }
+            },
+            BOp::Pow => f32::powf,
+            _ => bail!("float {op:?} unsupported"),
+        };
+        let (a, b) = (to_f32_vec(l)?, to_f32_vec(r)?);
+        let v: Vec<f32> =
+            a.iter().zip(&b).map(|(x, y)| f(*x, *y)).collect();
+        return from_f32(l.dtype, l.dims.clone(), v);
+    }
+    macro_rules! ibin {
+        ($var:ident, $a:ident, $b:ident, $shr:expr) => {{
+            let mut out = Vec::with_capacity($a.len());
+            for (&x, &y) in $a.iter().zip($b) {
+                out.push(match op {
+                    BOp::Add => x.wrapping_add(y),
+                    BOp::Sub => x.wrapping_sub(y),
+                    BOp::Mul => x.wrapping_mul(y),
+                    BOp::Div => x.checked_div(y).unwrap_or(0),
+                    BOp::Max => x.max(y),
+                    BOp::Min => x.min(y),
+                    BOp::And => x & y,
+                    BOp::Or => x | y,
+                    BOp::Xor => x ^ y,
+                    BOp::Shl => x.checked_shl(y as u32).unwrap_or(0),
+                    BOp::Shr => $shr(x, y as u32),
+                    BOp::Pow => bail!("integer power unsupported"),
+                });
+            }
+            Data::$var(out)
+        }};
+    }
+    let data = match (&l.data, &r.data) {
+        (Data::I32(a), Data::I32(b)) => {
+            ibin!(I32, a, b, |x: i32, s: u32| (x as u32)
+                .checked_shr(s)
+                .unwrap_or(0)
+                as i32)
+        }
+        (Data::U32(a), Data::U32(b)) => {
+            ibin!(U32, a, b, |x: u32, s: u32| x.checked_shr(s).unwrap_or(0))
+        }
+        (Data::I8(a), Data::I8(b)) => {
+            ibin!(I8, a, b, |x: i8, s: u32| (x as u8)
+                .checked_shr(s)
+                .unwrap_or(0)
+                as i8)
+        }
+        (Data::U8(a), Data::U8(b)) => {
+            ibin!(U8, a, b, |x: u8, s: u32| x.checked_shr(s).unwrap_or(0))
+        }
+        (Data::Pred(a), Data::Pred(b)) => match op {
+            BOp::And => {
+                Data::Pred(a.iter().zip(b).map(|(x, y)| x & y).collect())
+            }
+            BOp::Or => {
+                Data::Pred(a.iter().zip(b).map(|(x, y)| x | y).collect())
+            }
+            BOp::Xor => {
+                Data::Pred(a.iter().zip(b).map(|(x, y)| x ^ y).collect())
+            }
+            _ => bail!("pred {op:?} unsupported"),
+        },
+        _ => bail!(
+            "binary {op:?}: dtype mismatch {} vs {}",
+            l.dtype.name(),
+            r.dtype.name()
+        ),
+    };
+    Ok(Tensor { dtype: l.dtype, dims: l.dims.clone(), data })
+}
+
+fn convert_t(x: &Tensor, dst: DType, dims: &[usize]) -> Result<Tensor> {
+    if x.dtype.is_float() {
+        let v = to_f32_vec(x)?;
+        if dst.is_float() {
+            return from_f32(dst, dims.to_vec(), v);
+        }
+        let data = match dst {
+            DType::S32 => Data::I32(v.iter().map(|&a| a as i32).collect()),
+            DType::U32 => Data::U32(v.iter().map(|&a| a as u32).collect()),
+            DType::S8 => Data::I8(v.iter().map(|&a| a as i8).collect()),
+            DType::U8 => Data::U8(v.iter().map(|&a| a as u8).collect()),
+            DType::Pred => {
+                Data::Pred(v.iter().map(|&a| (a != 0.0) as u8).collect())
+            }
+            _ => unreachable!("float dsts handled above"),
+        };
+        return Ok(Tensor { dtype: dst, dims: dims.to_vec(), data });
+    }
+    let v = to_i64_vec(x)?;
+    let data = match dst {
+        DType::F32 | DType::F16 | DType::Bf16 => {
+            let f: Vec<f32> = v.iter().map(|&a| a as f32).collect();
+            return from_f32(dst, dims.to_vec(), f);
+        }
+        DType::S32 => Data::I32(v.iter().map(|&a| a as i32).collect()),
+        DType::U32 => Data::U32(v.iter().map(|&a| a as u32).collect()),
+        DType::S8 => Data::I8(v.iter().map(|&a| a as i8).collect()),
+        DType::U8 => Data::U8(v.iter().map(|&a| a as u8).collect()),
+        DType::Pred => Data::Pred(v.iter().map(|&a| (a != 0) as u8).collect()),
+    };
+    Ok(Tensor { dtype: dst, dims: dims.to_vec(), data })
+}
+
+fn iota_t(dtype: DType, dims: &[usize], dim: usize) -> Result<Tensor> {
+    let n = nelems(dims);
+    let mut vals = Vec::with_capacity(n);
+    let mut idx = vec![0usize; dims.len()];
+    for _ in 0..n {
+        vals.push(idx.get(dim).copied().unwrap_or(0));
+        advance(&mut idx, dims);
+    }
+    let data = match dtype {
+        DType::F32 | DType::F16 | DType::Bf16 => {
+            let f: Vec<f32> = vals.iter().map(|&k| k as f32).collect();
+            return from_f32(dtype, dims.to_vec(), f);
+        }
+        DType::S32 => Data::I32(vals.iter().map(|&k| k as i32).collect()),
+        DType::U32 => Data::U32(vals.iter().map(|&k| k as u32).collect()),
+        DType::S8 => Data::I8(vals.iter().map(|&k| k as i8).collect()),
+        DType::U8 => Data::U8(vals.iter().map(|&k| k as u8).collect()),
+        DType::Pred => bail!("iota over pred unsupported"),
+    };
+    Ok(Tensor { dtype, dims: dims.to_vec(), data })
+}
+
+// ---- data movement -------------------------------------------------------
+
+/// Concatenate along `dim`. Byte-level slab copies — uniform over all
+/// dtypes since storage is dense row-major.
+fn concat_t(parts: &[&Tensor], dim: usize, odims: &[usize]) -> Result<Tensor> {
+    let first = parts.first().context("concatenate with no operands")?;
+    let dtype = first.dtype;
+    let eb = dtype.bytes();
+    let inner: usize = odims[dim + 1..].iter().product::<usize>().max(1);
+    let outer: usize = odims[..dim].iter().product::<usize>().max(1);
+    let mut part_bytes = Vec::with_capacity(parts.len());
+    for t in parts {
+        if t.dtype != dtype {
+            bail!("concatenate: mixed dtypes");
+        }
+        part_bytes.push(t.to_value()?.into_bytes());
+    }
+    let mut out = Vec::with_capacity(nelems(odims) * eb);
+    for o in 0..outer {
+        for (t, b) in parts.iter().zip(&part_bytes) {
+            let slab = t.dims[dim] * inner * eb;
+            out.extend_from_slice(&b[o * slab..(o + 1) * slab]);
+        }
+    }
+    Tensor::from_value(&Value::new(dtype, odims.to_vec(), out)?)
+}
+
+/// dynamic-update-slice: write `upd` into a copy of `base` at starts
+/// clamped per XLA semantics (`0 ≤ s ≤ dim − upd_dim`).
+fn dus_t(base: &Tensor, upd: &Tensor, starts: &[i64]) -> Result<Tensor> {
+    let rank = base.dims.len();
+    if starts.len() != rank || upd.dims.len() != rank {
+        bail!("dynamic-update-slice: rank mismatch");
+    }
+    let start: Vec<usize> = (0..rank)
+        .map(|d| {
+            starts[d].clamp(0, (base.dims[d] - upd.dims[d]) as i64) as usize
+        })
+        .collect();
+    let eb = base.dtype.bytes();
+    let mut out = base.to_value()?.into_bytes();
+    let ub = upd.to_value()?.into_bytes();
+    let bstr = strides_of(&base.dims);
+    let n = upd.elems();
+    let mut idx = vec![0usize; rank];
+    for e in 0..n {
+        let lin: usize =
+            (0..rank).map(|d| (start[d] + idx[d]) * bstr[d]).sum();
+        out[lin * eb..(lin + 1) * eb]
+            .copy_from_slice(&ub[e * eb..(e + 1) * eb]);
+        advance(&mut idx, &upd.dims);
+    }
+    Tensor::from_value(&Value::new(base.dtype, base.dims.clone(), out)?)
+}
+
+// ---- contraction kernels -------------------------------------------------
+
+/// dot-general: f32 accumulation, fixed k order. Output rows are split
+/// across threads for large problems — parallelism never reorders any
+/// element's reduction.
+fn dot_t(
+    l: &Tensor,
+    r: &Tensor,
+    lb: &[usize],
+    lc: &[usize],
+    rb: &[usize],
+    rc: &[usize],
+    out_dtype: DType,
+    odims: &[usize],
+) -> Result<Tensor> {
+    let lv = to_f32_vec(l)?;
+    let rv = to_f32_vec(r)?;
+    let (ld, rd) = (&l.dims, &r.dims);
+    let (ls, rs) = (strides_of(ld), strides_of(rd));
+    for (i, (&a, &b)) in lb.iter().zip(rb).enumerate() {
+        if ld[a] != rd[b] {
+            bail!("dot: batch dim {i} sizes differ ({} vs {})", ld[a], rd[b]);
+        }
+    }
+    let kl: usize = lc.iter().map(|&d| ld[d]).product::<usize>().max(1);
+    let kr: usize = rc.iter().map(|&d| rd[d]).product::<usize>().max(1);
+    if kl != kr {
+        bail!("dot: contracting sizes differ ({kl} vs {kr})");
+    }
+    let lfree: Vec<usize> = (0..ld.len())
+        .filter(|d| !lb.contains(d) && !lc.contains(d))
+        .collect();
+    let rfree: Vec<usize> = (0..rd.len())
+        .filter(|d| !rb.contains(d) && !rc.contains(d))
+        .collect();
+    let lbo = subset_offsets(ld, &ls, lb);
+    let lfo = subset_offsets(ld, &ls, &lfree);
+    let lco = subset_offsets(ld, &ls, lc);
+    let rbo = subset_offsets(rd, &rs, rb);
+    let rfo = subset_offsets(rd, &rs, &rfree);
+    let rco = subset_offsets(rd, &rs, rc);
+    let (bsz, msz, nsz, ksz) = (lbo.len(), lfo.len(), rfo.len(), lco.len());
+    if nelems(odims) != bsz * msz * nsz {
+        bail!(
+            "dot: output {:?} has {} elems, contraction wants {}",
+            odims,
+            nelems(odims),
+            bsz * msz * nsz
+        );
+    }
+    let mut out = vec![0f32; bsz * msz * nsz];
+    let dot_row = |b: usize, m: usize, orow: &mut [f32]| {
+        let (lbase, rbase) = (lbo[b] + lfo[m], rbo[b]);
+        for (n, slot) in orow.iter_mut().enumerate() {
+            let rb0 = rbase + rfo[n];
+            let mut acc = 0f32;
+            for k in 0..ksz {
+                acc += lv[lbase + lco[k]] * rv[rb0 + rco[k]];
+            }
+            *slot = acc;
+        }
+    };
+    let rows = bsz * msz;
+    let work = rows * nsz * ksz;
+    let threads = if work >= (1 << 22) {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+            .min(rows)
+    } else {
+        1
+    };
+    if threads > 1 {
+        let rows_per = rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ti, chunk) in out.chunks_mut(rows_per * nsz).enumerate() {
+                let dot_row = &dot_row;
+                s.spawn(move || {
+                    for (ri, orow) in chunk.chunks_mut(nsz).enumerate() {
+                        let row = ti * rows_per + ri;
+                        dot_row(row / msz, row % msz, orow);
+                    }
+                });
+            }
+        });
+    } else {
+        for (row, orow) in out.chunks_mut(nsz).enumerate() {
+            dot_row(row / msz, row % msz, orow);
+        }
+    }
+    from_f32(out_dtype, odims.to_vec(), out)
+}
+
+/// Convolution via im2col + dot: patches matrix `[N·out_spatial,
+/// window·Cin]` (staged in the global [`BufferPool`]) times the
+/// flattened kernel `[window·Cin, Cout]`.
+fn conv_t(
+    cfg: &ConvCfg,
+    l: &Tensor,
+    r: &Tensor,
+    out_dtype: DType,
+    odims: &[usize],
+) -> Result<Tensor> {
+    let lv = to_f32_vec(l)?;
+    let rv = to_f32_vec(r)?;
+    let (ld, rd) = (&l.dims, &r.dims);
+    let (ls, rs) = (strides_of(ld), strides_of(rd));
+    let rank = cfg.window.len();
+    let batch = ld[cfg.lhs.batch];
+    let cin = ld[cfg.lhs.feature];
+    let cout = rd[cfg.rhs.batch];
+    if rd[cfg.rhs.feature] != cin {
+        bail!(
+            "convolution: kernel input features {} != lhs features {cin}",
+            rd[cfg.rhs.feature]
+        );
+    }
+    for (i, &w) in cfg.window.iter().enumerate() {
+        if rd[cfg.rhs.spatial[i]] != w {
+            bail!("convolution: window {i} size mismatch");
+        }
+    }
+    let in_sp: Vec<usize> = cfg.lhs.spatial.iter().map(|&d| ld[d]).collect();
+    let out_sp: Vec<usize> =
+        cfg.out.spatial.iter().map(|&d| odims[d]).collect();
+    if odims[cfg.out.batch] != batch || odims[cfg.out.feature] != cout {
+        bail!("convolution: output batch/feature mismatch");
+    }
+    let wsize: usize = cfg.window.iter().product::<usize>().max(1);
+    let osize: usize = out_sp.iter().product::<usize>().max(1);
+    let rows = batch * osize;
+    let cols = wsize * cin;
+
+    let pool = BufferPool::global();
+    let mut patches = pool.take_f32(rows * cols);
+    patches.resize(rows * cols, 0.0);
+    let mut oidx = vec![0usize; rank];
+    let mut widx = vec![0usize; rank];
+    for n in 0..batch {
+        let nbase = n * ls[cfg.lhs.batch];
+        for o in 0..osize {
+            let row = (n * osize + o) * cols;
+            for w in 0..wsize {
+                // input coordinate per spatial dim; OOB cells stay 0
+                let mut sbase = Some(nbase);
+                for d in 0..rank {
+                    let i = (oidx[d] * cfg.strides[d] + widx[d]) as i64
+                        - cfg.pads[d].0;
+                    if i < 0 || i >= in_sp[d] as i64 {
+                        sbase = None;
+                        break;
+                    }
+                    sbase =
+                        sbase.map(|s| s + i as usize * ls[cfg.lhs.spatial[d]]);
+                }
+                if let Some(sbase) = sbase {
+                    let fs = ls[cfg.lhs.feature];
+                    for c in 0..cin {
+                        patches[row + w * cin + c] = lv[sbase + c * fs];
+                    }
+                }
+                advance(&mut widx, &cfg.window);
+            }
+            advance(&mut oidx, &out_sp);
+        }
+    }
+
+    // kernel → [window·Cin, Cout]
+    let mut kmat = pool.take_f32(cols * cout);
+    kmat.resize(cols * cout, 0.0);
+    let mut widx = vec![0usize; rank];
+    for w in 0..wsize {
+        let wbase: usize =
+            (0..rank).map(|d| widx[d] * rs[cfg.rhs.spatial[d]]).sum();
+        for c in 0..cin {
+            let base = wbase + c * rs[cfg.rhs.feature];
+            for co in 0..cout {
+                kmat[(w * cin + c) * cout + co] =
+                    rv[base + co * rs[cfg.rhs.batch]];
+            }
+        }
+        advance(&mut widx, &cfg.window);
+    }
+
+    let mut omat = pool.take_f32(rows * cout);
+    omat.resize(rows * cout, 0.0);
+    for row in 0..rows {
+        let p = &patches[row * cols..(row + 1) * cols];
+        let orow = &mut omat[row * cout..(row + 1) * cout];
+        for (k, &pv) in p.iter().enumerate() {
+            if pv != 0.0 {
+                let krow = &kmat[k * cout..(k + 1) * cout];
+                for (slot, &kv) in orow.iter_mut().zip(krow) {
+                    *slot += pv * kv;
+                }
+            }
+        }
+    }
+
+    // scatter rows into the output layout
+    let ostr = strides_of(odims);
+    let mut out = vec![0f32; nelems(odims)];
+    let mut oidx = vec![0usize; rank];
+    for n in 0..batch {
+        for o in 0..osize {
+            let base: usize = n * ostr[cfg.out.batch]
+                + (0..rank)
+                    .map(|d| oidx[d] * ostr[cfg.out.spatial[d]])
+                    .sum::<usize>();
+            let row = (n * osize + o) * cout;
+            for co in 0..cout {
+                out[base + co * ostr[cfg.out.feature]] = omat[row + co];
+            }
+            advance(&mut oidx, &out_sp);
+        }
+    }
+    pool.put_f32(patches);
+    pool.put_f32(kmat);
+    pool.put_f32(omat);
+    from_f32(out_dtype, odims.to_vec(), out)
+}
+
+/// XLA gather (with operand/start-indices batching dims).
+fn gather_t(
+    cfg: &GatherCfg,
+    operand: &Tensor,
+    indices: &Tensor,
+    odims: &[usize],
+) -> Result<Tensor> {
+    let ind = to_i64_vec(indices)?;
+    let idims = &indices.dims;
+    let istr = strides_of(idims);
+    let opdims = &operand.dims;
+    let opstr = strides_of(opdims);
+    let irank = idims.len();
+    let ivd = cfg.index_vector_dim;
+    if cfg.slice_sizes.len() != opdims.len() {
+        bail!("gather: slice_sizes rank mismatch");
+    }
+    // output batch dims ↔ indices dims (excluding ivd), in order
+    let batch_out: Vec<usize> = (0..odims.len())
+        .filter(|d| !cfg.offset_dims.contains(d))
+        .collect();
+    // offset output dims ↔ operand dims not collapsed/batching
+    let offset_operand: Vec<usize> = (0..opdims.len())
+        .filter(|d| {
+            !cfg.collapsed_slice_dims.contains(d)
+                && !cfg.operand_batching_dims.contains(d)
+        })
+        .collect();
+    if offset_operand.len() != cfg.offset_dims.len() {
+        bail!("gather: offset_dims rank mismatch");
+    }
+    let mut bc = vec![0usize; batch_out.len()];
+    let mut iidx = vec![0usize; irank];
+    let mut start = vec![0i64; opdims.len()];
+    let map = move |oidx: &[usize]| -> Option<usize> {
+        for (j, &d) in batch_out.iter().enumerate() {
+            bc[j] = oidx[d];
+        }
+        start.iter_mut().for_each(|s| *s = 0);
+        for (k, &d) in cfg.start_index_map.iter().enumerate() {
+            // index into I: batch coords with ivd position = k
+            let mut bpos = 0;
+            for j in 0..irank {
+                if j == ivd {
+                    iidx[j] = k;
+                } else {
+                    iidx[j] = bc[bpos];
+                    bpos += 1;
+                }
+            }
+            let lin: usize =
+                (0..irank).map(|j| iidx[j] * istr[j]).sum();
+            let hi = (opdims[d] - cfg.slice_sizes[d]) as i64;
+            start[d] = ind[lin].clamp(0, hi);
+        }
+        for (p, &d) in cfg.operand_batching_dims.iter().enumerate() {
+            let j = cfg.start_indices_batching_dims[p];
+            let pos = j - usize::from(ivd < irank && j > ivd);
+            start[d] = bc[pos] as i64;
+        }
+        let mut lin = 0usize;
+        for (q, &d) in offset_operand.iter().enumerate() {
+            lin += (start[d] as usize + oidx[cfg.offset_dims[q]]) * opstr[d];
+        }
+        for &d in cfg
+            .collapsed_slice_dims
+            .iter()
+            .chain(&cfg.operand_batching_dims)
+        {
+            lin += start[d] as usize * opstr[d];
+        }
+        Some(lin)
+    };
+    remap(operand, odims, None, map)
+}
+
+// ---- graph walk ----------------------------------------------------------
+
+impl HostExecutable {
+    pub(crate) fn eval_entry(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let args: Vec<Val> = inputs
+            .iter()
+            .map(|v| Tensor::from_value(v).map(|t| Val::T(Rc::new(t))))
+            .collect::<Result<_>>()?;
+        let root = self.eval_comp(self.entry, &args)?;
+        match root {
+            Val::Tup(parts) => {
+                parts.into_iter().map(|p| tt(&p)?.to_value()).collect()
+            }
+            Val::T(t) => Ok(vec![t.to_value()?]),
+        }
+    }
+
+    pub(crate) fn eval_comp(&self, ci: usize, args: &[Val]) -> Result<Val> {
+        let comp = &self.comps[ci];
+        if args.len() != comp.params.len() {
+            bail!(
+                "{}: called with {} args, wants {}",
+                comp.name,
+                args.len(),
+                comp.params.len()
+            );
+        }
+        let mut slots: Vec<Option<Val>> = vec![None; comp.nodes.len()];
+        for i in 0..comp.nodes.len() {
+            let v = self
+                .eval_node(comp, i, &slots, args)
+                .with_context(|| {
+                    format!("{}: {}", comp.name, comp.nodes[i].name)
+                })?;
+            slots[i] = Some(v);
+        }
+        slots[comp.root].take().context("root not evaluated")
+    }
+
+    fn eval_node(
+        &self,
+        comp: &Comp,
+        ni: usize,
+        slots: &[Option<Val>],
+        args: &[Val],
+    ) -> Result<Val> {
+        let node: &Node = &comp.nodes[ni];
+        let arg = |k: usize| -> Result<&Val> {
+            let &slot = node
+                .args
+                .get(k)
+                .with_context(|| format!("missing operand {k}"))?;
+            slots[slot].as_ref().context("operand evaluated out of order")
+        };
+        let ts = |k: usize| -> Result<&Tensor> { tt(arg(k)?) };
+        let odims = || -> Result<&[usize]> { node.shape.dims() };
+        let odt = || -> Result<DType> { node.shape.dtype() };
+        let wrap = |t: Tensor| Ok(Val::T(Rc::new(t)));
+
+        match &node.op {
+            Op::Parameter(k) => Ok(args[*k].clone()),
+            Op::Constant(t) => wrap(t.clone()),
+            Op::Iota { dim } => wrap(iota_t(odt()?, odims()?, *dim)?),
+            Op::Broadcast { dims } => {
+                let src = ts(0)?;
+                let ss = strides_of(&src.dims);
+                let out = odims()?;
+                wrap(remap(src, out, None, |idx| {
+                    Some(
+                        dims.iter()
+                            .zip(&ss)
+                            .map(|(&d, s)| idx[d] * s)
+                            .sum(),
+                    )
+                })?)
+            }
+            Op::Reshape | Op::Copy => {
+                let src = ts(0)?;
+                let out = odims()?;
+                if nelems(out) != src.elems() {
+                    bail!("reshape: element count changes");
+                }
+                wrap(Tensor {
+                    dtype: src.dtype,
+                    dims: out.to_vec(),
+                    data: src.data.clone(),
+                })
+            }
+            Op::Transpose { perm } => {
+                let src = ts(0)?;
+                let ss = strides_of(&src.dims);
+                wrap(remap(src, odims()?, None, |idx| {
+                    Some(
+                        idx.iter()
+                            .zip(perm)
+                            .map(|(&i, &p)| i * ss[p])
+                            .sum(),
+                    )
+                })?)
+            }
+            Op::Slice { spec } => {
+                let src = ts(0)?;
+                let ss = strides_of(&src.dims);
+                wrap(remap(src, odims()?, None, |idx| {
+                    Some(
+                        idx.iter()
+                            .zip(spec)
+                            .zip(&ss)
+                            .map(|((&i, &(start, _, step)), s)| {
+                                (start + i * step) * s
+                            })
+                            .sum(),
+                    )
+                })?)
+            }
+            Op::Concat { dim } => {
+                let parts: Vec<&Tensor> = (0..node.args.len())
+                    .map(ts)
+                    .collect::<Result<_>>()?;
+                wrap(concat_t(&parts, *dim, odims()?)?)
+            }
+            Op::Pad { cfg } => {
+                let src = ts(0)?;
+                let pad = ts(1)?;
+                let ss = strides_of(&src.dims);
+                let sdims = src.dims.clone();
+                wrap(remap(src, odims()?, Some(pad), |idx| {
+                    let mut lin = 0usize;
+                    for (d, (&i, &(lo, _, interior))) in
+                        idx.iter().zip(cfg).enumerate()
+                    {
+                        let mut pos = i as i64 - lo;
+                        if pos < 0 {
+                            return None;
+                        }
+                        if interior > 0 {
+                            let step = interior as i64 + 1;
+                            if pos % step != 0 {
+                                return None;
+                            }
+                            pos /= step;
+                        }
+                        if pos >= sdims[d] as i64 {
+                            return None;
+                        }
+                        lin += pos as usize * ss[d];
+                    }
+                    Some(lin)
+                })?)
+            }
+            Op::Reduce { dims, comp } => {
+                wrap(self.reduce_t(ts(0)?, ts(1)?, dims, *comp, odims()?)?)
+            }
+            Op::Dot { lb, lc, rb, rc } => wrap(dot_t(
+                ts(0)?,
+                ts(1)?,
+                lb,
+                lc,
+                rb,
+                rc,
+                odt()?,
+                odims()?,
+            )?),
+            Op::Conv(cfg) => {
+                wrap(conv_t(cfg, ts(0)?, ts(1)?, odt()?, odims()?)?)
+            }
+            Op::Convert => wrap(convert_t(ts(0)?, odt()?, odims()?)?),
+            Op::BitcastConvert => {
+                let src = ts(0)?;
+                let v = src.to_value()?;
+                let nv = Value::new(odt()?, odims()?.to_vec(), v.into_bytes())
+                    .context("bitcast-convert: byte width changes")?;
+                wrap(Tensor::from_value(&nv)?)
+            }
+            Op::Compare(dir) => wrap(compare_t(ts(0)?, ts(1)?, *dir)?),
+            Op::Select => wrap(select_t(ts(0)?, ts(1)?, ts(2)?)?),
+            Op::IsFinite => {
+                let v = to_f32_vec(ts(0)?)?;
+                wrap(Tensor {
+                    dtype: DType::Pred,
+                    dims: odims()?.to_vec(),
+                    data: Data::Pred(
+                        v.iter().map(|a| a.is_finite() as u8).collect(),
+                    ),
+                })
+            }
+            Op::Unary(u) => wrap(unary_t(*u, ts(0)?)?),
+            Op::Binary(b) => wrap(binary_t(*b, ts(0)?, ts(1)?)?),
+            Op::Tuple => {
+                let parts = (0..node.args.len())
+                    .map(|k| arg(k).cloned())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Val::Tup(parts))
+            }
+            Op::Gte(i) => match arg(0)? {
+                Val::Tup(parts) => parts
+                    .get(*i)
+                    .cloned()
+                    .with_context(|| format!("tuple has no element {i}")),
+                Val::T(_) => bail!("get-tuple-element of array"),
+            },
+            Op::Call(ci) => {
+                let cargs = (0..node.args.len())
+                    .map(|k| arg(k).cloned())
+                    .collect::<Result<Vec<_>>>()?;
+                self.eval_comp(*ci, &cargs)
+            }
+            Op::While { cond, body } => {
+                let mut state = arg(0)?.clone();
+                loop {
+                    let c =
+                        self.eval_comp(*cond, std::slice::from_ref(&state))?;
+                    if !tt(&c)?.scalar_pred()? {
+                        return Ok(state);
+                    }
+                    state =
+                        self.eval_comp(*body, std::slice::from_ref(&state))?;
+                }
+            }
+            Op::Conditional { branches } => {
+                let sel = ts(0)?;
+                if sel.dtype == DType::Pred {
+                    bail!("pred-form conditional unsupported (use s32 index)");
+                }
+                if node.args.len() != branches.len() + 1 {
+                    bail!(
+                        "conditional: {} operands for {} branches",
+                        node.args.len(),
+                        branches.len()
+                    );
+                }
+                let i = sel
+                    .scalar_i64()?
+                    .clamp(0, branches.len() as i64 - 1)
+                    as usize;
+                let barg = arg(i + 1)?.clone();
+                self.eval_comp(branches[i], std::slice::from_ref(&barg))
+            }
+            Op::DynamicSlice { sizes } => {
+                let src = ts(0)?;
+                let rank = src.dims.len();
+                if node.args.len() != rank + 1 || sizes.len() != rank {
+                    bail!("dynamic-slice: start operand count mismatch");
+                }
+                let start: Vec<usize> = (0..rank)
+                    .map(|d| {
+                        let s = ts(d + 1)?.scalar_i64()?;
+                        Ok(s.clamp(0, (src.dims[d] - sizes[d]) as i64)
+                            as usize)
+                    })
+                    .collect::<Result<_>>()?;
+                let ss = strides_of(&src.dims);
+                wrap(remap(src, odims()?, None, |idx| {
+                    Some(
+                        idx.iter()
+                            .zip(&start)
+                            .zip(&ss)
+                            .map(|((&i, &s0), s)| (s0 + i) * s)
+                            .sum(),
+                    )
+                })?)
+            }
+            Op::DynamicUpdateSlice => {
+                let base = ts(0)?;
+                let upd = ts(1)?;
+                let rank = base.dims.len();
+                if node.args.len() != rank + 2 {
+                    bail!("dynamic-update-slice: start operand count");
+                }
+                let starts: Vec<i64> = (0..rank)
+                    .map(|d| ts(d + 2)?.scalar_i64())
+                    .collect::<Result<_>>()?;
+                wrap(dus_t(base, upd, &starts)?)
+            }
+            Op::Gather(cfg) => {
+                wrap(gather_t(cfg, ts(0)?, ts(1)?, odims()?)?)
+            }
+            Op::Scatter(cfg) => {
+                wrap(self.scatter_t(cfg, ts(0)?, ts(1)?, ts(2)?)?)
+            }
+        }
+    }
+
+    /// If computation `ci` is `ROOT binary(p0, p1)`, return the fold op.
+    fn match_fold(&self, ci: usize) -> Option<BOp> {
+        let c = &self.comps[ci];
+        if c.params.len() != 2 {
+            return None;
+        }
+        let root = &c.nodes[c.root];
+        if let Op::Binary(b) = root.op {
+            let (p0, p1) = (c.params[0], c.params[1]);
+            if root.args == [p0, p1] || root.args == [p1, p0] {
+                return Some(b);
+            }
+        }
+        None
+    }
+
+    /// Combiner that just returns the update (`ROOT = parameter(1)`).
+    fn match_replace(&self, ci: usize) -> bool {
+        let c = &self.comps[ci];
+        matches!(c.nodes[c.root].op, Op::Parameter(1))
+    }
+
+    fn reduce_t(
+        &self,
+        src: &Tensor,
+        init: &Tensor,
+        rdims: &[usize],
+        comp: usize,
+        odims: &[usize],
+    ) -> Result<Tensor> {
+        let sstr_dims = &src.dims;
+        // stride of each src dim in the *output* (0 when reduced)
+        let ostr = strides_of(odims);
+        let mut out_stride = vec![0usize; sstr_dims.len()];
+        let mut oi = 0;
+        for (d, slot) in out_stride.iter_mut().enumerate() {
+            if !rdims.contains(&d) {
+                *slot = ostr[oi];
+                oi += 1;
+            }
+        }
+        let out_elems = nelems(odims);
+        let fold = self.match_fold(comp);
+
+        if src.dtype.is_float() {
+            if let Some(op) = fold {
+                let f: fn(f32, f32) -> f32 = match op {
+                    BOp::Add => |a, b| a + b,
+                    BOp::Mul => |a, b| a * b,
+                    BOp::Max => |a, b| {
+                        if a.is_nan() || b.is_nan() {
+                            f32::NAN
+                        } else if a >= b {
+                            a
+                        } else {
+                            b
+                        }
+                    },
+                    BOp::Min => |a, b| {
+                        if a.is_nan() || b.is_nan() {
+                            f32::NAN
+                        } else if a <= b {
+                            a
+                        } else {
+                            b
+                        }
+                    },
+                    _ => bail!("float reduce over {op:?} unsupported"),
+                };
+                let sv = to_f32_vec(src)?;
+                let iv = to_f32_vec(init)?[0];
+                let mut acc = vec![iv; out_elems];
+                let mut idx = vec![0usize; sstr_dims.len()];
+                for &x in &sv {
+                    let o: usize = idx
+                        .iter()
+                        .zip(&out_stride)
+                        .map(|(&i, &s)| i * s)
+                        .sum();
+                    acc[o] = f(acc[o], x);
+                    advance(&mut idx, sstr_dims);
+                }
+                return from_f32(src.dtype, odims.to_vec(), acc);
+            }
+        } else if let (Data::Pred(sv), Data::Pred(iv), Some(op)) =
+            (&src.data, &init.data, fold)
+        {
+            let f: fn(u8, u8) -> u8 = match op {
+                BOp::And => |a, b| a & b,
+                BOp::Or => |a, b| a | b,
+                BOp::Xor => |a, b| a ^ b,
+                _ => bail!("pred reduce over {op:?} unsupported"),
+            };
+            let mut acc = vec![iv[0]; out_elems];
+            let mut idx = vec![0usize; sstr_dims.len()];
+            for &x in sv {
+                let o: usize = idx
+                    .iter()
+                    .zip(&out_stride)
+                    .map(|(&i, &s)| i * s)
+                    .sum();
+                acc[o] = f(acc[o], x);
+                advance(&mut idx, sstr_dims);
+            }
+            return Ok(Tensor {
+                dtype: src.dtype,
+                dims: odims.to_vec(),
+                data: Data::Pred(acc),
+            });
+        }
+
+        // generic fallback: run the region per element pair
+        let init_s = scalar_at(init, 0);
+        let mut acc: Vec<Tensor> = vec![init_s; out_elems];
+        let mut idx = vec![0usize; sstr_dims.len()];
+        for lin in 0..src.elems() {
+            let o: usize = idx
+                .iter()
+                .zip(&out_stride)
+                .map(|(&i, &s)| i * s)
+                .sum();
+            let l = Val::T(Rc::new(acc[o].clone()));
+            let r = Val::T(Rc::new(scalar_at(src, lin)));
+            let res = self.eval_comp(comp, &[l, r])?;
+            acc[o] = tt(&res)?.clone();
+            advance(&mut idx, sstr_dims);
+        }
+        let eb = src.dtype.bytes();
+        let mut bytes = Vec::with_capacity(out_elems * eb);
+        for t in &acc {
+            bytes.extend_from_slice(t.to_value()?.bytes());
+        }
+        Tensor::from_value(&Value::new(src.dtype, odims.to_vec(), bytes)?)
+    }
+
+    /// XLA scatter (float operands; out-of-bounds updates dropped,
+    /// updates applied in row-major order — deterministic).
+    fn scatter_t(
+        &self,
+        cfg: &ScatterCfg,
+        operand: &Tensor,
+        indices: &Tensor,
+        updates: &Tensor,
+    ) -> Result<Tensor> {
+        let mut acc = to_f32_vec(operand)?;
+        let upd = to_f32_vec(updates)?;
+        let ind = to_i64_vec(indices)?;
+        let opdims = &operand.dims;
+        let opstr = strides_of(opdims);
+        let idims = &indices.dims;
+        let istr = strides_of(idims);
+        let irank = idims.len();
+        let ivd = cfg.index_vector_dim;
+        let udims = &updates.dims;
+
+        // update dims not in update_window_dims = scatter (batch) dims
+        let scatter_upd_dims: Vec<usize> = (0..udims.len())
+            .filter(|d| !cfg.update_window_dims.contains(d))
+            .collect();
+        // window update dims ↔ operand dims not inserted/batching
+        let window_operand: Vec<usize> = (0..opdims.len())
+            .filter(|d| {
+                !cfg.inserted_window_dims.contains(d)
+                    && !cfg.input_batching_dims.contains(d)
+            })
+            .collect();
+        if window_operand.len() != cfg.update_window_dims.len() {
+            bail!("scatter: update_window_dims rank mismatch");
+        }
+        // window extent per operand dim (1 for inserted/batching)
+        let mut ext = vec![1usize; opdims.len()];
+        for (q, &d) in window_operand.iter().enumerate() {
+            ext[d] = udims[cfg.update_window_dims[q]];
+        }
+
+        enum Comb {
+            Fold(fn(f32, f32) -> f32),
+            Replace,
+            Region(usize),
+        }
+        let comb = if self.match_replace(cfg.comp) {
+            Comb::Replace
+        } else if let Some(op) = self.match_fold(cfg.comp) {
+            Comb::Fold(match op {
+                BOp::Add => |a, b| a + b,
+                BOp::Mul => |a, b| a * b,
+                BOp::Max => f32::max,
+                BOp::Min => f32::min,
+                _ => bail!("scatter combiner {op:?} unsupported"),
+            })
+        } else {
+            Comb::Region(cfg.comp)
+        };
+
+        let mut uidx = vec![0usize; udims.len()];
+        let mut iidx = vec![0usize; irank];
+        let mut start = vec![0i64; opdims.len()];
+        'updates: for (e, &uval) in upd.iter().enumerate() {
+            let _ = e;
+            // scatter coords → index into I (excluding ivd, in order)
+            start.iter_mut().for_each(|s| *s = 0);
+            for (k, &d) in
+                cfg.scatter_dims_to_operand_dims.iter().enumerate()
+            {
+                let mut bpos = 0;
+                for j in 0..irank {
+                    if j == ivd {
+                        iidx[j] = k;
+                    } else {
+                        iidx[j] = uidx[scatter_upd_dims[bpos]];
+                        bpos += 1;
+                    }
+                }
+                let lin: usize =
+                    (0..irank).map(|j| iidx[j] * istr[j]).sum();
+                let ik = ind[lin];
+                if ik < 0 || ik + ext[d] as i64 > opdims[d] as i64 {
+                    advance(&mut uidx, udims);
+                    continue 'updates;
+                }
+                start[d] = ik;
+            }
+            for (p, &d) in cfg.input_batching_dims.iter().enumerate() {
+                let j = cfg.scatter_indices_batching_dims[p];
+                let pos = j - usize::from(ivd < irank && j > ivd);
+                start[d] = uidx[scatter_upd_dims[pos]] as i64;
+            }
+            let mut lin = 0usize;
+            for (q, &d) in window_operand.iter().enumerate() {
+                lin += (start[d] as usize
+                    + uidx[cfg.update_window_dims[q]])
+                    * opstr[d];
+            }
+            for &d in cfg
+                .inserted_window_dims
+                .iter()
+                .chain(&cfg.input_batching_dims)
+            {
+                lin += start[d] as usize * opstr[d];
+            }
+            match &comb {
+                Comb::Replace => acc[lin] = uval,
+                Comb::Fold(f) => acc[lin] = f(acc[lin], uval),
+                Comb::Region(ci) => {
+                    let l = Val::T(Rc::new(Tensor {
+                        dtype: DType::F32,
+                        dims: Vec::new(),
+                        data: Data::F32(vec![acc[lin]]),
+                    }));
+                    let r = Val::T(Rc::new(Tensor {
+                        dtype: DType::F32,
+                        dims: Vec::new(),
+                        data: Data::F32(vec![uval]),
+                    }));
+                    let res = self.eval_comp(*ci, &[l, r])?;
+                    acc[lin] = match &tt(&res)?.data {
+                        Data::F32(v) => v[0],
+                        _ => bail!("scatter region must return f32"),
+                    };
+                }
+            }
+            advance(&mut uidx, udims);
+        }
+        from_f32(operand.dtype, opdims.clone(), acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_payloads() {
+        let s = GShape::Array { dtype: DType::F32, dims: vec![] };
+        let t = parse_constant(&s, Some("1e-05")).unwrap();
+        assert_eq!(t.data, Data::F32(vec![1e-05]));
+        let t = parse_constant(&s, Some("-inf")).unwrap();
+        assert_eq!(t.data, Data::F32(vec![f32::NEG_INFINITY]));
+        let s = GShape::Array { dtype: DType::S32, dims: vec![4] };
+        let t = parse_constant(&s, Some("{13, 15, 26, 6}")).unwrap();
+        assert_eq!(t.data, Data::I32(vec![13, 15, 26, 6]));
+        let s = GShape::Array { dtype: DType::Pred, dims: vec![] };
+        let t = parse_constant(&s, Some("true")).unwrap();
+        assert_eq!(t.data, Data::Pred(vec![1]));
+    }
+
+    #[test]
+    fn constant_arity_checked() {
+        let s = GShape::Array { dtype: DType::F32, dims: vec![3] };
+        assert!(parse_constant(&s, Some("{1, 2}")).is_err());
+        assert!(parse_constant(&s, None).is_err());
+    }
+
+    #[test]
+    fn remap_transpose() {
+        let t = Tensor {
+            dtype: DType::F32,
+            dims: vec![2, 3],
+            data: Data::F32(vec![0., 1., 2., 3., 4., 5.]),
+        };
+        let ss = strides_of(&t.dims);
+        let out = remap(&t, &[3, 2], None, |idx| {
+            Some(idx[0] * ss[1] + idx[1] * ss[0])
+        })
+        .unwrap();
+        assert_eq!(out.data, Data::F32(vec![0., 3., 1., 4., 2., 5.]));
+    }
+
+    #[test]
+    fn subset_offsets_enumerate_row_major() {
+        let dims = [2, 3, 4];
+        let s = strides_of(&dims);
+        assert_eq!(s, vec![12, 4, 1]);
+        let offs = subset_offsets(&dims, &s, &[0, 2]);
+        assert_eq!(offs, vec![0, 1, 2, 3, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn binary_int_semantics() {
+        let a = Tensor {
+            dtype: DType::U32,
+            dims: vec![2],
+            data: Data::U32(vec![u32::MAX, 8]),
+        };
+        let b = Tensor {
+            dtype: DType::U32,
+            dims: vec![2],
+            data: Data::U32(vec![1, 40]),
+        };
+        let add = binary_t(BOp::Add, &a, &b).unwrap();
+        assert_eq!(add.data, Data::U32(vec![0, 48]));
+        let shr = binary_t(BOp::Shr, &a, &b).unwrap();
+        assert_eq!(shr.data, Data::U32(vec![u32::MAX >> 1, 0]));
+    }
+}
+
+

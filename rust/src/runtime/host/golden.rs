@@ -1,0 +1,394 @@
+//! Golden-vector tests for the interpreter ops: each kernel pinned
+//! against tiny hand-computed cases, plus f16/bf16 convert
+//! bit-exactness against the scalar `numerics::F16`/`Bf16` reference
+//! — the same discipline `hostkernel/cast.rs` applies to its slices.
+
+use crate::numerics::{Bf16, F16};
+use crate::runtime::value::{lit_f32, lit_i32, read_f32, Value};
+use crate::runtime::Executable;
+
+use super::HostExecutable;
+
+fn run(text: &str, inputs: &[Value]) -> Vec<Value> {
+    let exe = HostExecutable::compile(text).expect("compile");
+    let refs: Vec<&Value> = inputs.iter().collect();
+    exe.execute(&refs).expect("execute")
+}
+
+fn run1(text: &str, inputs: &[Value]) -> Vec<f32> {
+    let out = run(text, inputs);
+    assert_eq!(out.len(), 1);
+    read_f32(&out[0]).unwrap()
+}
+
+#[test]
+fn dot_golden() {
+    let text = r#"
+HloModule golden_dot
+
+ENTRY main.1 {
+  a = f32[2,3] parameter(0)
+  b = f32[3,2] parameter(1)
+  ROOT dot.1 = f32[2,2] dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+    let a = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+    let b = lit_f32(&[3, 2], &[7., 8., 9., 10., 11., 12.]).unwrap();
+    // [[1·7+2·9+3·11, 1·8+2·10+3·12], [4·7+5·9+6·11, 4·8+5·10+6·12]]
+    assert_eq!(run1(text, &[a, b]), vec![58., 64., 139., 154.]);
+}
+
+#[test]
+fn dot_batched_golden() {
+    let text = r#"
+HloModule golden_bdot
+
+ENTRY main.1 {
+  a = f32[2,1,2] parameter(0)
+  b = f32[2,2,1] parameter(1)
+  ROOT dot.1 = f32[2,1,1] dot(a, b), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}
+}
+"#;
+    let a = lit_f32(&[2, 1, 2], &[1., 2., 3., 4.]).unwrap();
+    let b = lit_f32(&[2, 2, 1], &[5., 6., 7., 8.]).unwrap();
+    // batch0: 1·5+2·6 = 17; batch1: 3·7+4·8 = 53
+    assert_eq!(run1(text, &[a, b]), vec![17., 53.]);
+}
+
+#[test]
+fn conv_im2col_golden() {
+    // NCHW 3×3 input, 2×2 kernel, stride 1, no pad:
+    //   input  = [[0,1,2],[3,4,5],[6,7,8]], kernel = [[1,2],[3,4]]
+    //   out[0,0] = 0·1+1·2+3·3+4·4 = 27     out[0,1] = 1+4+12+20 = 37
+    //   out[1,0] = 3+8+18+28 = 57           out[1,1] = 4+10+21+32 = 67
+    let text = r#"
+HloModule golden_conv
+
+ENTRY main.1 {
+  x = f32[1,1,3,3] parameter(0)
+  k = f32[1,1,2,2] parameter(1)
+  ROOT conv.1 = f32[1,1,2,2] convolution(x, k), window={size=2x2 stride=1x1 pad=0_0x0_0}, dim_labels=bf01_oi01->bf01
+}
+"#;
+    let x =
+        lit_f32(&[1, 1, 3, 3], &[0., 1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+    let k = lit_f32(&[1, 1, 2, 2], &[1., 2., 3., 4.]).unwrap();
+    assert_eq!(run1(text, &[x, k]), vec![27., 37., 57., 67.]);
+}
+
+#[test]
+fn conv_strided_padded_golden() {
+    // Same input, stride 2, pad 1 on both sides → 2×2 output of the
+    // padded 5×5 image sampled at (0,0),(0,2),(2,0),(2,2):
+    //   out[0,0] = 4·0 = 0      (only kernel[1][1] overlaps)
+    //   wait — hand-compute each window over zero-padded input.
+    let text = r#"
+HloModule golden_conv2
+
+ENTRY main.1 {
+  x = f32[1,1,3,3] parameter(0)
+  k = f32[1,1,2,2] parameter(1)
+  ROOT conv.1 = f32[1,1,2,2] convolution(x, k), window={size=2x2 stride=2x2 pad=1_0x1_0}, dim_labels=bf01_oi01->bf01
+}
+"#;
+    let x =
+        lit_f32(&[1, 1, 3, 3], &[0., 1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+    let k = lit_f32(&[1, 1, 2, 2], &[1., 2., 3., 4.]).unwrap();
+    // windows start at padded coords (0,0),(0,2),(2,0),(2,2); padded
+    // image has the input at [1..4, 1..4].
+    // w(0,0): cells p(0,0),p(0,1),p(1,0),p(1,1) = 0,0,0,in(0,0)=0 → 4·0 = 0
+    // w(0,2): p(0,2),p(0,3),p(1,2),p(1,3) = 0,0,in(0,1),in(0,2) → 3·1+4·2 = 11
+    // w(2,0): p(2,0),p(2,1),p(3,0),p(3,1) = 0,in(1,0),0,in(2,0) → 2·3+4·6 = 30
+    // w(2,2): in(1,1),in(1,2),in(2,1),in(2,2) → 1·4+2·5+3·7+4·8 = 67
+    assert_eq!(run1(text, &[x, k]), vec![0., 11., 30., 67.]);
+}
+
+#[test]
+fn reduce_golden() {
+    let text = r#"
+HloModule golden_reduce
+
+region_0.1 {
+  p0 = f32[] parameter(0)
+  p1 = f32[] parameter(1)
+  ROOT add.1 = f32[] add(p0, p1)
+}
+
+ENTRY main.2 {
+  x = f32[2,3] parameter(0)
+  c = f32[] constant(0)
+  ROOT reduce.2 = f32[2] reduce(x, c), dimensions={1}, to_apply=region_0.1
+}
+"#;
+    let x = lit_f32(&[2, 3], &[1., 2., 3., 10., 20., 30.]).unwrap();
+    assert_eq!(run1(text, &[x]), vec![6., 60.]);
+}
+
+#[test]
+fn reduce_max_with_init_golden() {
+    let text = r#"
+HloModule golden_rmax
+
+region_0.1 {
+  p0 = f32[] parameter(0)
+  p1 = f32[] parameter(1)
+  ROOT max.1 = f32[] maximum(p0, p1)
+}
+
+ENTRY main.2 {
+  x = f32[2,2] parameter(0)
+  c = f32[] constant(-inf)
+  ROOT reduce.2 = f32[2] reduce(x, c), dimensions={1}, to_apply=region_0.1
+}
+"#;
+    let x = lit_f32(&[2, 2], &[-3., -1., 5., 2.]).unwrap();
+    assert_eq!(run1(text, &[x]), vec![-1., 5.]);
+}
+
+#[test]
+fn softmax_composition_golden() {
+    // softmax as the artifacts spell it: max-reduce, subtract, exp,
+    // sum-reduce, divide — all composed ops, no fused primitive.
+    let text = r#"
+HloModule golden_softmax
+
+region_max.1 {
+  p0 = f32[] parameter(0)
+  p1 = f32[] parameter(1)
+  ROOT max.1 = f32[] maximum(p0, p1)
+}
+
+region_add.2 {
+  p2 = f32[] parameter(0)
+  p3 = f32[] parameter(1)
+  ROOT add.2 = f32[] add(p2, p3)
+}
+
+ENTRY main.3 {
+  x = f32[2,4] parameter(0)
+  ninf = f32[] constant(-inf)
+  zero = f32[] constant(0)
+  m = f32[2] reduce(x, ninf), dimensions={1}, to_apply=region_max.1
+  mb = f32[2,4] broadcast(m), dimensions={0}
+  shifted = f32[2,4] subtract(x, mb)
+  e = f32[2,4] exponential(shifted)
+  s = f32[2] reduce(e, zero), dimensions={1}, to_apply=region_add.2
+  sb = f32[2,4] broadcast(s), dimensions={0}
+  ROOT out = f32[2,4] divide(e, sb)
+}
+"#;
+    let xs = [1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 0.5];
+    let x = lit_f32(&[2, 4], &xs).unwrap();
+    let got = run1(text, &[x]);
+    // reference: identical operation order in plain Rust
+    let mut want = vec![0f32; 8];
+    for r in 0..2 {
+        let row = &xs[r * 4..(r + 1) * 4];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = row.iter().map(|v| (v - m).exp()).collect();
+        let s: f32 = e.iter().sum();
+        for c in 0..4 {
+            want[r * 4 + c] = e[c] / s;
+        }
+    }
+    assert_eq!(got, want, "composed softmax must be bit-identical");
+    for r in 0..2 {
+        let sum: f32 = got[r * 4..(r + 1) * 4].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn convert_f16_bit_exact_vs_scalar_reference() {
+    let text = r#"
+HloModule golden_cvt_f16
+
+ENTRY main.1 {
+  x = f32[6] parameter(0)
+  ROOT cvt.1 = f16[6] convert(x)
+}
+"#;
+    let xs = [0.1f32, -2.0, 65504.0, 1e-8, f32::INFINITY, 0.099975586];
+    let x = lit_f32(&[6], &xs).unwrap();
+    let out = run(text, &[x]);
+    let got = out[0].bytes();
+    for (i, &v) in xs.iter().enumerate() {
+        let want = F16::from_f32(v).0;
+        let g = u16::from_ne_bytes([got[2 * i], got[2 * i + 1]]);
+        assert_eq!(g, want, "f16 convert of {v} (elem {i})");
+    }
+}
+
+#[test]
+fn convert_bf16_bit_exact_vs_scalar_reference() {
+    let text = r#"
+HloModule golden_cvt_bf16
+
+ENTRY main.1 {
+  x = f32[5] parameter(0)
+  ROOT cvt.1 = bf16[5] convert(x)
+}
+"#;
+    let xs = [0.1f32, -3.14159, 3.3895314e38, 1e-40, -0.0];
+    let x = lit_f32(&[5], &xs).unwrap();
+    let out = run(text, &[x]);
+    let got = out[0].bytes();
+    for (i, &v) in xs.iter().enumerate() {
+        let want = Bf16::from_f32(v).0;
+        let g = u16::from_ne_bytes([got[2 * i], got[2 * i + 1]]);
+        assert_eq!(g, want, "bf16 convert of {v} (elem {i})");
+    }
+}
+
+#[test]
+fn convert_roundtrip_half_widths() {
+    // f32 → f16 → f32: the widening leg is exact, so the composite
+    // equals one RTNE rounding — bit-identical to the scalar ref.
+    let text = r#"
+HloModule golden_cvt_rt
+
+ENTRY main.1 {
+  x = f32[4] parameter(0)
+  h = f16[4] convert(x)
+  ROOT back.1 = f32[4] convert(h)
+}
+"#;
+    let xs = [0.1f32, 1.0 / 3.0, -1234.56, 2.5e-6];
+    let x = lit_f32(&[4], &xs).unwrap();
+    let got = run1(text, &[x]);
+    for (i, &v) in xs.iter().enumerate() {
+        assert_eq!(got[i].to_bits(), F16::from_f32(v).to_f32().to_bits());
+    }
+}
+
+#[test]
+fn threefry_integer_ops_bit_exact() {
+    // The init artifacts' threefry body is u32 adds, xors, rotations
+    // built from shift-left / shift-right-logical, and or — all must
+    // be bit-exact (wrapping, shift-past-width → 0).
+    let text = r#"
+HloModule golden_threefry
+
+ENTRY main.1 {
+  a = u32[4] parameter(0)
+  b = u32[4] parameter(1)
+  s = u32[4] parameter(2)
+  sum = u32[4] add(a, b)
+  x = u32[4] xor(sum, b)
+  l = u32[4] shift-left(x, s)
+  r = u32[4] shift-right-logical(x, s)
+  ROOT rot = u32[4] or(l, r)
+}
+"#;
+    let av = [0xdeadbeefu32, u32::MAX, 0x9e3779b9, 7];
+    let bv = [0x12345678u32, 1, 0xbb67ae85, 11];
+    let sv = [13u32, 32, 1, 0];
+    let mk = |v: &[u32; 4]| {
+        Value::new(
+            crate::pytree::DType::U32,
+            vec![4],
+            v.iter().flat_map(|x| x.to_ne_bytes()).collect(),
+        )
+        .unwrap()
+    };
+    let out = run(text, &[mk(&av), mk(&bv), mk(&sv)]);
+    let got: Vec<u32> = out[0]
+        .bytes()
+        .chunks_exact(4)
+        .map(|c| u32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    for i in 0..4 {
+        let sum = av[i].wrapping_add(bv[i]);
+        let x = sum ^ bv[i];
+        let l = x.checked_shl(sv[i]).unwrap_or(0);
+        let r = x.checked_shr(sv[i]).unwrap_or(0);
+        assert_eq!(got[i], l | r, "lane {i}");
+    }
+}
+
+#[test]
+fn select_compare_broadcast_golden() {
+    let text = r#"
+HloModule golden_select
+
+ENTRY main.1 {
+  x = f32[4] parameter(0)
+  zero = f32[] constant(0)
+  zb = f32[4] broadcast(zero), dimensions={}
+  mask = pred[4] compare(x, zb), direction=GE
+  ROOT relu = f32[4] select(mask, x, zb)
+}
+"#;
+    let x = lit_f32(&[4], &[-1.5, 0.0, 2.5, -0.25]).unwrap();
+    assert_eq!(run1(text, &[x]), vec![0.0, 0.0, 2.5, 0.0]);
+}
+
+#[test]
+fn gather_cross_entropy_row_pick() {
+    // The grads artifacts' label-pick gather: operand [B,C] logits,
+    // batched indices [B,1] → output [B] picking logits[b, label[b]].
+    let text = r#"
+HloModule golden_gather
+
+ENTRY main.1 {
+  logits = f32[2,3] parameter(0)
+  labels = s32[2,1] parameter(1)
+  ROOT g.1 = f32[2,1] gather(logits, labels), offset_dims={}, collapsed_slice_dims={1}, start_index_map={1}, operand_batching_dims={0}, start_indices_batching_dims={0}, index_vector_dim=2, slice_sizes={1,1}
+}
+"#;
+    let logits =
+        lit_f32(&[2, 3], &[10., 11., 12., 20., 21., 22.]).unwrap();
+    let labels = lit_i32(&[2, 1], &[2, 0]).unwrap();
+    assert_eq!(run1(text, &[logits, labels]), vec![12., 20.]);
+}
+
+#[test]
+fn while_loop_counts() {
+    let text = r#"
+HloModule golden_while
+
+region_cond.1 {
+  pc = (s32[]) parameter(0)
+  i = s32[] get-tuple-element(pc), index=0
+  lim = s32[] constant(5)
+  ROOT lt.1 = pred[] compare(i, lim), direction=LT
+}
+
+region_body.2 {
+  pb = (s32[]) parameter(0)
+  j = s32[] get-tuple-element(pb), index=0
+  one = s32[] constant(1)
+  nxt = s32[] add(j, one)
+  ROOT t.2 = (s32[]) tuple(nxt)
+}
+
+ENTRY main.3 {
+  z = s32[] parameter(0)
+  st = (s32[]) tuple(z)
+  w = (s32[]) while(st), condition=region_cond.1, body=region_body.2
+  ROOT out = s32[] get-tuple-element(w), index=0
+}
+"#;
+    let z = lit_i32(&[], &[0]).unwrap();
+    let out = run(text, &[z]);
+    assert_eq!(
+        crate::runtime::value::read_scalar_i32(&out[0]).unwrap(),
+        5
+    );
+}
+
+#[test]
+fn unknown_opcode_named_in_error() {
+    let text = r#"
+HloModule golden_bad
+
+ENTRY main.1 {
+  x = f32[2] parameter(0)
+  ROOT s.1 = f32[2] sort(x), dimensions={0}
+}
+"#;
+    let err = HostExecutable::compile(text).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sort"), "error must name the opcode: {msg}");
+    assert!(msg.contains("unsupported opcode"), "{msg}");
+}

@@ -1,0 +1,628 @@
+//! Pure-Rust host interpreter backend.
+//!
+//! Compiles an artifact's HLO text (via the deep parser
+//! [`crate::hlo::graph`]) into a lowered instruction graph and
+//! evaluates it on plain host buffers — no native library, so every
+//! artifact-gated suite runs under `--no-default-features`. The op
+//! set covers everything the vit artifacts use (see the lowering
+//! `match` below); an unknown opcode is rejected *at compile time*
+//! with the opcode named.
+//!
+//! Numerics contract (what `backend_cross_check.rs` pins):
+//!
+//! * f16/bf16 elementwise math converts to f32, computes, and rounds
+//!   back through the RTNE cast lanes in [`crate::hostkernel::cast`]
+//!   — bit-identical to the scalar `numerics::F16`/`Bf16` reference,
+//!   and exact vs XLA for single rounding steps (`convert` in
+//!   particular is bit-exact).
+//! * Integer / pred ops (the threefry path in init artifacts) are
+//!   bit-exact: wrapping adds, shifts, xor.
+//! * `dot` and `reduce` accumulate in f32 sequentially; XLA may use a
+//!   different summation order, so float outputs agree only within a
+//!   per-dtype tolerance (the cross-check's documented bound).
+//!
+//! Evaluation is deterministic: the only threaded kernel (`dot`)
+//! splits *output rows* across threads, which never changes any
+//! element's reduction order.
+
+mod eval;
+#[cfg(test)]
+mod golden;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hlo::graph::{GComputation, GShape, HloProgram};
+use crate::pytree::DType;
+use crate::runtime::value::Value;
+use crate::runtime::{Backend, Executable};
+
+pub(crate) use eval::{Data, Tensor};
+
+/// The host interpreter backend (stateless — compilation produces a
+/// self-contained [`HostExecutable`]).
+pub struct HostBackend;
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn compile_hlo_file(&self, path: &Path) -> Result<Box<dyn Executable>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read HLO text {}", path.display()))?;
+        let exe = HostExecutable::compile(&text)
+            .with_context(|| format!("host-compile {}", path.display()))?;
+        Ok(Box::new(exe))
+    }
+}
+
+/// Comparison directions HLO prints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CmpDir {
+    Eq,
+    Ne,
+    Ge,
+    Gt,
+    Le,
+    Lt,
+}
+
+/// Unary elementwise ops.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum UOp {
+    Neg,
+    Abs,
+    Exp,
+    Log,
+    Log1p,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+}
+
+/// Binary elementwise ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct GatherCfg {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub operand_batching_dims: Vec<usize>,
+    pub start_indices_batching_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ScatterCfg {
+    pub update_window_dims: Vec<usize>,
+    pub inserted_window_dims: Vec<usize>,
+    pub scatter_dims_to_operand_dims: Vec<usize>,
+    pub input_batching_dims: Vec<usize>,
+    pub scatter_indices_batching_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub comp: usize,
+}
+
+/// Positions of the batch/feature/spatial dims in one conv operand.
+#[derive(Debug, Clone)]
+pub(crate) struct ConvDimSpec {
+    pub batch: usize,
+    pub feature: usize,
+    pub spatial: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ConvCfg {
+    pub window: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub pads: Vec<(i64, i64)>,
+    pub lhs: ConvDimSpec,
+    pub rhs: ConvDimSpec, // batch = output-feature, feature = input-feature
+    pub out: ConvDimSpec,
+}
+
+/// One lowered instruction.
+#[derive(Debug, Clone)]
+pub(crate) enum Op {
+    Parameter(usize),
+    Constant(Tensor),
+    Iota { dim: usize },
+    Broadcast { dims: Vec<usize> },
+    Reshape,
+    Copy,
+    Transpose { perm: Vec<usize> },
+    Slice { spec: Vec<(usize, usize, usize)> },
+    Concat { dim: usize },
+    Pad { cfg: Vec<(i64, i64, usize)> },
+    Reduce { dims: Vec<usize>, comp: usize },
+    Dot { lb: Vec<usize>, lc: Vec<usize>, rb: Vec<usize>, rc: Vec<usize> },
+    Conv(Box<ConvCfg>),
+    Convert,
+    BitcastConvert,
+    Compare(CmpDir),
+    Select,
+    IsFinite,
+    Unary(UOp),
+    Binary(BOp),
+    Tuple,
+    Gte(usize),
+    Call(usize),
+    While { cond: usize, body: usize },
+    Conditional { branches: Vec<usize> },
+    DynamicSlice { sizes: Vec<usize> },
+    DynamicUpdateSlice,
+    Gather(Box<GatherCfg>),
+    Scatter(Box<ScatterCfg>),
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Node {
+    pub name: String,
+    pub shape: GShape,
+    pub op: Op,
+    pub args: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Comp {
+    pub name: String,
+    pub params: Vec<usize>,
+    pub nodes: Vec<Node>,
+    pub root: usize,
+}
+
+/// A host-compiled artifact: the lowered graph plus the entry I/O
+/// signature (leaf order = parameter order = manifest order; outputs
+/// = root tuple elements in order).
+pub struct HostExecutable {
+    comps: Vec<Comp>,
+    entry: usize,
+    in_specs: Vec<(DType, Vec<usize>)>,
+    out_specs: Vec<(DType, Vec<usize>)>,
+}
+
+impl HostExecutable {
+    /// Lower parsed HLO text into an executable graph. Rejects any
+    /// opcode outside the supported set, naming it.
+    pub fn compile(text: &str) -> Result<HostExecutable> {
+        let program = HloProgram::parse(text)?;
+        Self::from_program(&program)
+    }
+
+    pub fn from_program(program: &HloProgram) -> Result<HostExecutable> {
+        let mut comps = Vec::with_capacity(program.computations.len());
+        for gc in &program.computations {
+            comps.push(lower_computation(program, gc).with_context(|| {
+                format!("lower computation {}", gc.name)
+            })?);
+        }
+        let entry = program
+            .computations
+            .iter()
+            .position(|c| c.is_entry)
+            .context("module has no ENTRY computation")?;
+
+        let ec = &comps[entry];
+        let mut in_specs = Vec::with_capacity(ec.params.len());
+        for &pi in &ec.params {
+            let shape = &ec.nodes[pi].shape;
+            in_specs.push((shape.dtype()?, shape.dims()?.to_vec()));
+        }
+        let out_specs = match &ec.nodes[ec.root].shape {
+            GShape::Tuple(parts) => parts
+                .iter()
+                .map(|p| Ok((p.dtype()?, p.dims()?.to_vec())))
+                .collect::<Result<Vec<_>>>()?,
+            s @ GShape::Array { .. } => vec![(s.dtype()?, s.dims()?.to_vec())],
+        };
+        Ok(HostExecutable { comps, entry, in_specs, out_specs })
+    }
+
+    pub(crate) fn comp(&self, i: usize) -> &Comp {
+        &self.comps[i]
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.in_specs.len()
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.out_specs.len()
+    }
+}
+
+impl Executable for HostExecutable {
+    fn execute(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.in_specs.len() {
+            bail!(
+                "host execute: got {} inputs, entry wants {}",
+                inputs.len(),
+                self.in_specs.len()
+            );
+        }
+        for (i, (v, (dt, dims))) in
+            inputs.iter().zip(&self.in_specs).enumerate()
+        {
+            if v.dtype() != *dt || v.shape() != dims.as_slice() {
+                bail!(
+                    "host execute: input {i} is {}{:?}, entry wants {}{:?}",
+                    v.dtype().name(),
+                    v.shape(),
+                    dt.name(),
+                    dims
+                );
+            }
+        }
+        let out = self.eval_entry(inputs)?;
+        if out.len() != self.out_specs.len() {
+            bail!(
+                "host execute: produced {} outputs, entry declares {}",
+                out.len(),
+                self.out_specs.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+fn lower_computation(
+    program: &HloProgram,
+    gc: &GComputation,
+) -> Result<Comp> {
+    let comp_index = |name: &str| -> Result<usize> {
+        program
+            .computation_index(name)
+            .with_context(|| format!("unknown computation {name}"))
+    };
+    let mut nodes = Vec::with_capacity(gc.instrs.len());
+    for gi in &gc.instrs {
+        let args = gi
+            .operands
+            .iter()
+            .map(|o| {
+                gc.find(o).with_context(|| {
+                    format!("{}: operand {o} not defined before use", gi.name)
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+
+        let op = match gi.opcode.as_str() {
+            "parameter" => Op::Parameter(gi.param_index()?),
+            "constant" => Op::Constant(
+                eval::parse_constant(&gi.shape, gi.payload.as_deref())
+                    .with_context(|| format!("constant {}", gi.name))?,
+            ),
+            "iota" => Op::Iota { dim: gi.attr_usize("iota_dimension")? },
+            "broadcast" => {
+                Op::Broadcast { dims: gi.attr_usize_list("dimensions")? }
+            }
+            "reshape" => Op::Reshape,
+            "copy" => Op::Copy,
+            "transpose" => {
+                Op::Transpose { perm: gi.attr_usize_list("dimensions")? }
+            }
+            "slice" => Op::Slice { spec: parse_slice(gi.attr_required("slice")?)? },
+            "concatenate" => Op::Concat { dim: gi.attr_usize("dimensions")? },
+            "pad" => Op::Pad { cfg: parse_padding(gi.attr_required("padding")?)? },
+            "reduce" => Op::Reduce {
+                dims: gi.attr_usize_list("dimensions")?,
+                comp: comp_index(gi.attr_required("to_apply")?)?,
+            },
+            "dot" => Op::Dot {
+                lb: opt_list(gi, "lhs_batch_dims")?,
+                lc: opt_list(gi, "lhs_contracting_dims")?,
+                rb: opt_list(gi, "rhs_batch_dims")?,
+                rc: opt_list(gi, "rhs_contracting_dims")?,
+            },
+            "convolution" => Op::Conv(Box::new(parse_conv(gi)?)),
+            "convert" => Op::Convert,
+            "bitcast-convert" => Op::BitcastConvert,
+            "compare" => Op::Compare(parse_direction(
+                gi.attr_required("direction")?,
+            )?),
+            "select" => Op::Select,
+            "is-finite" => Op::IsFinite,
+            "negate" => Op::Unary(UOp::Neg),
+            "abs" => Op::Unary(UOp::Abs),
+            "exponential" => Op::Unary(UOp::Exp),
+            "log" => Op::Unary(UOp::Log),
+            "log-plus-one" => Op::Unary(UOp::Log1p),
+            "tanh" => Op::Unary(UOp::Tanh),
+            "sqrt" => Op::Unary(UOp::Sqrt),
+            "rsqrt" => Op::Unary(UOp::Rsqrt),
+            "add" => Op::Binary(BOp::Add),
+            "subtract" => Op::Binary(BOp::Sub),
+            "multiply" => Op::Binary(BOp::Mul),
+            "divide" => Op::Binary(BOp::Div),
+            "maximum" => Op::Binary(BOp::Max),
+            "minimum" => Op::Binary(BOp::Min),
+            "power" => Op::Binary(BOp::Pow),
+            "and" => Op::Binary(BOp::And),
+            "or" => Op::Binary(BOp::Or),
+            "xor" => Op::Binary(BOp::Xor),
+            "shift-left" => Op::Binary(BOp::Shl),
+            "shift-right-logical" => Op::Binary(BOp::Shr),
+            "tuple" => Op::Tuple,
+            "get-tuple-element" => Op::Gte(gi.attr_usize("index")?),
+            "call" => Op::Call(comp_index(gi.attr_required("to_apply")?)?),
+            "while" => Op::While {
+                cond: comp_index(gi.attr_required("condition")?)?,
+                body: comp_index(gi.attr_required("body")?)?,
+            },
+            "conditional" => {
+                let names = gi.attr_required("branch_computations")?;
+                let inner = names
+                    .trim()
+                    .trim_start_matches('{')
+                    .trim_end_matches('}');
+                let branches = inner
+                    .split(',')
+                    .map(|n| comp_index(n.trim()))
+                    .collect::<Result<Vec<_>>>()?;
+                Op::Conditional { branches }
+            }
+            "dynamic-slice" => Op::DynamicSlice {
+                sizes: gi.attr_usize_list("dynamic_slice_sizes")?,
+            },
+            "dynamic-update-slice" => Op::DynamicUpdateSlice,
+            "gather" => Op::Gather(Box::new(GatherCfg {
+                offset_dims: opt_list(gi, "offset_dims")?,
+                collapsed_slice_dims: opt_list(gi, "collapsed_slice_dims")?,
+                operand_batching_dims: opt_list(gi, "operand_batching_dims")?,
+                start_indices_batching_dims: opt_list(
+                    gi,
+                    "start_indices_batching_dims",
+                )?,
+                start_index_map: gi.attr_usize_list("start_index_map")?,
+                index_vector_dim: gi.attr_usize("index_vector_dim")?,
+                slice_sizes: gi.attr_usize_list("slice_sizes")?,
+            })),
+            "scatter" => Op::Scatter(Box::new(ScatterCfg {
+                update_window_dims: opt_list(gi, "update_window_dims")?,
+                inserted_window_dims: opt_list(gi, "inserted_window_dims")?,
+                scatter_dims_to_operand_dims: gi
+                    .attr_usize_list("scatter_dims_to_operand_dims")?,
+                input_batching_dims: opt_list(gi, "input_batching_dims")?,
+                scatter_indices_batching_dims: opt_list(
+                    gi,
+                    "scatter_indices_batching_dims",
+                )?,
+                index_vector_dim: gi.attr_usize("index_vector_dim")?,
+                comp: comp_index(gi.attr_required("to_apply")?)?,
+            })),
+            other => bail!(
+                "host backend: unsupported opcode \"{other}\" \
+                 (instruction {} in {})",
+                gi.name,
+                gc.name
+            ),
+        };
+        nodes.push(Node {
+            name: gi.name.clone(),
+            shape: gi.shape.clone(),
+            op,
+            args,
+        });
+    }
+
+    // params ordered by parameter number
+    let mut params: Vec<(usize, usize)> = nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| match n.op {
+            Op::Parameter(k) => Some((k, i)),
+            _ => None,
+        })
+        .collect();
+    params.sort();
+    let params = params.into_iter().map(|(_, i)| i).collect();
+
+    let root = gc.root_index()?;
+    Ok(Comp { name: gc.name.clone(), params, nodes, root })
+}
+
+fn opt_list(
+    gi: &crate::hlo::graph::GInstr,
+    key: &str,
+) -> Result<Vec<usize>> {
+    match gi.attr(key) {
+        Some(_) => gi.attr_usize_list(key),
+        None => Ok(Vec::new()),
+    }
+}
+
+fn parse_direction(s: &str) -> Result<CmpDir> {
+    Ok(match s.trim() {
+        "EQ" => CmpDir::Eq,
+        "NE" => CmpDir::Ne,
+        "GE" => CmpDir::Ge,
+        "GT" => CmpDir::Gt,
+        "LE" => CmpDir::Le,
+        "LT" => CmpDir::Lt,
+        other => bail!("unknown compare direction {other}"),
+    })
+}
+
+/// `{[0:8], [1:17], [0:64:2]}` → per-dim (start, end, stride).
+fn parse_slice(v: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let inner = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .with_context(|| format!("slice spec {v:?} not braced"))?;
+    let mut out = Vec::new();
+    for piece in inner.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        let body = piece
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .with_context(|| format!("slice bound {piece:?} not bracketed"))?;
+        let parts: Vec<&str> = body.split(':').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            bail!("slice bound {piece:?} wants start:end[:stride]");
+        }
+        let start = parts[0].trim().parse::<usize>()?;
+        let end = parts[1].trim().parse::<usize>()?;
+        let stride = if parts.len() == 3 {
+            parts[2].trim().parse::<usize>()?
+        } else {
+            1
+        };
+        if stride == 0 {
+            bail!("slice bound {piece:?}: zero stride");
+        }
+        out.push((start, end, stride));
+    }
+    Ok(out)
+}
+
+/// `0_0x0_16x1_2_3` → per-dim (low, high, interior). Lows/highs may
+/// be negative (XLA allows trimming pads).
+fn parse_padding(v: &str) -> Result<Vec<(i64, i64, usize)>> {
+    let mut out = Vec::new();
+    for dim in v.trim().split('x') {
+        let parts: Vec<&str> = dim.split('_').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            bail!("padding {dim:?} wants low_high[_interior]");
+        }
+        let low = parts[0].parse::<i64>()?;
+        let high = parts[1].parse::<i64>()?;
+        let interior =
+            if parts.len() == 3 { parts[2].parse::<usize>()? } else { 0 };
+        out.push((low, high, interior));
+    }
+    Ok(out)
+}
+
+/// `b01f_01io->b01f` → per-operand dim positions.
+fn parse_dim_labels(v: &str) -> Result<(ConvDimSpec, ConvDimSpec, ConvDimSpec)> {
+    let (input, rest) = v
+        .trim()
+        .split_once('_')
+        .with_context(|| format!("dim_labels {v:?} missing '_'"))?;
+    let (kernel, output) = rest
+        .split_once("->")
+        .with_context(|| format!("dim_labels {v:?} missing '->'"))?;
+    let spec = |labels: &str, b: char, f: char| -> Result<ConvDimSpec> {
+        let mut batch = None;
+        let mut feature = None;
+        let mut spatial = vec![None; labels.len().saturating_sub(2)];
+        for (pos, c) in labels.chars().enumerate() {
+            if c == b {
+                batch = Some(pos);
+            } else if c == f {
+                feature = Some(pos);
+            } else {
+                let k = c
+                    .to_digit(10)
+                    .with_context(|| format!("bad dim label {c:?} in {labels}"))?
+                    as usize;
+                if k >= spatial.len() {
+                    bail!("spatial label {k} out of range in {labels}");
+                }
+                spatial[k] = Some(pos);
+            }
+        }
+        Ok(ConvDimSpec {
+            batch: batch.with_context(|| format!("{labels}: no {b} dim"))?,
+            feature: feature
+                .with_context(|| format!("{labels}: no {f} dim"))?,
+            spatial: spatial
+                .into_iter()
+                .map(|s| s.context("missing spatial label"))
+                .collect::<Result<Vec<_>>>()?,
+        })
+    };
+    Ok((spec(input, 'b', 'f')?, spec(kernel, 'o', 'i')?, spec(output, 'b', 'f')?))
+}
+
+/// `window={size=2x2 stride=1x1 pad=0_0x0_0}` + `dim_labels`.
+fn parse_conv(gi: &crate::hlo::graph::GInstr) -> Result<ConvCfg> {
+    if let Some(fgc) = gi.attr("feature_group_count") {
+        if fgc.trim() != "1" {
+            bail!("convolution {}: grouped conv unsupported", gi.name);
+        }
+    }
+    let (lhs, rhs, out) = parse_dim_labels(gi.attr_required("dim_labels")?)?;
+    let window_attr = gi.attr_required("window")?;
+    let inner = window_attr
+        .trim()
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .with_context(|| format!("window {window_attr:?} not braced"))?;
+    let mut window = Vec::new();
+    let mut strides = Vec::new();
+    let mut pads = Vec::new();
+    for field in inner.split_whitespace() {
+        let (key, val) = field
+            .split_once('=')
+            .with_context(|| format!("window field {field:?}"))?;
+        match key {
+            "size" => {
+                window = val
+                    .split('x')
+                    .map(|d| d.parse::<usize>().context("window size"))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "stride" => {
+                strides = val
+                    .split('x')
+                    .map(|d| d.parse::<usize>().context("window stride"))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "pad" => {
+                pads = val
+                    .split('x')
+                    .map(|d| {
+                        let (l, h) = d
+                            .split_once('_')
+                            .context("window pad wants low_high")?;
+                        Ok((l.parse::<i64>()?, h.parse::<i64>()?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            "lhs_dilate" | "rhs_dilate" => {
+                if val.split('x').any(|d| d.trim() != "1") {
+                    bail!("convolution {}: dilation unsupported", gi.name);
+                }
+            }
+            _ => {} // reversal etc. — reject only when non-default
+        }
+    }
+    if window.is_empty() {
+        bail!("convolution {}: window has no size", gi.name);
+    }
+    let rank = window.len();
+    if strides.is_empty() {
+        strides = vec![1; rank];
+    }
+    if pads.is_empty() {
+        pads = vec![(0, 0); rank];
+    }
+    if strides.len() != rank || pads.len() != rank || lhs.spatial.len() != rank
+    {
+        bail!("convolution {}: inconsistent window rank", gi.name);
+    }
+    Ok(ConvCfg { window, strides, pads, lhs, rhs, out })
+}

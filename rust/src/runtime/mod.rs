@@ -1,99 +1,164 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute many.
-//!
-//! The training hot path works on flat `Vec<xla::Literal>` leaf
-//! vectors in manifest order:
+//! Runtime HAL: compile AOT artifacts once, execute many — behind a
+//! backend trait so every consumer (trainer, serve, examples, tests)
+//! is backend-agnostic.
 //!
 //! ```text
-//! artifacts/<name>.hlo.txt          HloModuleProto::from_text_file
-//!   └── XlaComputation  ── client.compile ──►  PjRtLoadedExecutable
-//! step:  state leaves + batch leaves ─ execute ─► 1 tuple buffer
-//!        └── to_literal_sync + decompose_tuple ─► output leaves
+//! artifacts/<name>.hlo.txt ── Backend::compile_hlo_file ──► Executable
+//! step: state leaves + batch leaves ─ execute ─► output leaves
 //! ```
 //!
-//! This PJRT build returns the whole output as **one tuple buffer**
-//! (the CPU client does not untuple), so state makes a host hop per
-//! step; `runtime_overhead` benches that hop, and §Perf records the
-//! mitigation history.
+//! Leaves are [`Value`]s — dtype + shape + native-layout bytes — in
+//! manifest order on both sides. Two backends implement the trait:
+//!
+//! * [`host`] (always available): a pure-Rust interpreter over the
+//!   deep HLO parser, running on `hostkernel`'s kernels. Makes every
+//!   artifact-gated suite runnable under `--no-default-features`.
+//! * `xla` (behind the `xla` cargo feature): the PJRT CPU client.
+//!   This PJRT build returns the whole output as **one tuple buffer**
+//!   (the CPU client does not untuple), so state makes a host hop per
+//!   step; `runtime_overhead` benches that hop.
+//!
+//! `backend_cross_check.rs` runs the same artifact on both and pins
+//! the agreement (bit-exact for integer/convert paths, per-dtype
+//! tolerance where accumulation order differs).
 
-pub mod literal;
+pub mod host;
 pub mod store;
+pub mod value;
+#[cfg(feature = "xla")]
+pub mod xla_backend;
 
-pub use literal::{
-    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, literal_bytes,
-    literal_bytes_into, read_f32, read_i32, read_scalar_f32,
-    read_scalar_i32, read_scalar_pred,
-};
+pub use host::HostBackend;
 pub use store::{Artifact, ArtifactStore};
+pub use value::{
+    lit_f32, lit_from_bytes, lit_i32, lit_scalar_f32, lit_scalar_i32,
+    literal_bytes, literal_bytes_from, literal_bytes_into, read_f32,
+    read_f32_from, read_i32, read_scalar_f32, read_scalar_i32,
+    read_scalar_pred, Value,
+};
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
 
-use anyhow::{Context, Result};
+use std::path::Path;
 
-/// Wrapper owning the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
+use anyhow::{bail, Result};
+
+/// A compiled artifact, ready to execute. Inputs and outputs are flat
+/// leaf vectors in manifest order.
+pub trait Executable: Send + Sync {
+    fn execute(&self, inputs: &[&Value]) -> Result<Vec<Value>>;
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client })
+/// A compilation backend: turns HLO text on disk into an executable.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn compile_hlo_file(&self, path: &Path) -> Result<Box<dyn Executable>>;
+}
+
+/// Which backend to use. Both variants always parse; creating
+/// [`BackendKind::Xla`] without the `xla` feature is a runtime error
+/// with a build hint, so config files stay portable across builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Host,
+    Xla,
+}
+
+impl BackendKind {
+    /// The build's default: xla when compiled in, host otherwise.
+    pub fn default_kind() -> BackendKind {
+        if cfg!(feature = "xla") {
+            BackendKind::Xla
+        } else {
+            BackendKind::Host
+        }
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.trim() {
+            "host" => Ok(BackendKind::Host),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!("unknown backend {other:?} (want \"xla\" or \"host\")"),
+        }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Xla => "xla",
+        }
     }
 
-    /// Load one HLO-text artifact and compile it.
-    pub fn compile_hlo_file(
-        &self,
-        path: &std::path::Path,
-    ) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))
+    /// Is this kind usable in the current build?
+    pub fn available(self) -> bool {
+        match self {
+            BackendKind::Host => true,
+            BackendKind::Xla => cfg!(feature = "xla"),
+        }
+    }
+
+    /// Instantiate the backend.
+    pub fn create(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Host => Ok(Box::new(HostBackend)),
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Ok(Box::new(XlaBackend::cpu()?)),
+            #[cfg(not(feature = "xla"))]
+            BackendKind::Xla => bail!(
+                "backend \"xla\" is not compiled in — \
+                 build with `--features xla` or use backend = \"host\""
+            ),
+        }
     }
 }
 
-/// Execute an artifact on flat input leaves; returns flat output
-/// leaves (manifest order).
-pub fn execute_leaves<L: std::borrow::Borrow<xla::Literal>>(
-    exe: &xla::PjRtLoadedExecutable,
-    inputs: &[L],
-) -> Result<Vec<xla::Literal>> {
-    let result = exe.execute::<L>(inputs).context("execute")?;
-    let buffer = &result[0][0];
-    let mut tuple = buffer
-        .to_literal_sync()
-        .context("fetch output tuple to host")?;
-    tuple.decompose_tuple().context("decompose output tuple")
+impl Default for BackendKind {
+    fn default() -> Self {
+        Self::default_kind()
+    }
 }
 
-/// `Send`/`Sync` wrapper for sharing one compiled executable across
-/// shard threads.
-///
-/// SAFETY: `PjRtLoadedExecutable` wraps a C++ `PjRtLoadedExecutable*`;
-/// PJRT explicitly documents `Execute` as thread-safe (the CPU client
-/// runs each invocation on its own thread pool slot), and the wrapper
-/// never exposes `&mut`.  The `xla` crate merely never added the
-/// marker.  Destruction still happens on one thread (the owner).
-pub struct SharedExecutable(pub xla::PjRtLoadedExecutable);
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
-unsafe impl Send for SharedExecutable {}
-unsafe impl Sync for SharedExecutable {}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl SharedExecutable {
-    pub fn execute_leaves<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        execute_leaves(&self.0, inputs)
+    #[test]
+    fn kind_roundtrip() {
+        assert_eq!(BackendKind::parse("host").unwrap(), BackendKind::Host);
+        assert_eq!(BackendKind::parse(" xla ").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Host.name(), "host");
+        assert_eq!(BackendKind::Xla.to_string(), "xla");
+    }
+
+    #[test]
+    fn host_always_available() {
+        assert!(BackendKind::Host.available());
+        assert!(BackendKind::Host.create().is_ok());
+    }
+
+    #[test]
+    fn default_matches_build() {
+        let d = BackendKind::default_kind();
+        assert!(d.available());
+        if cfg!(feature = "xla") {
+            assert_eq!(d, BackendKind::Xla);
+        } else {
+            assert_eq!(d, BackendKind::Host);
+        }
+    }
+
+    #[test]
+    fn xla_unavailable_names_feature() {
+        if !cfg!(feature = "xla") {
+            let err = BackendKind::Xla.create().unwrap_err();
+            assert!(format!("{err}").contains("--features xla"));
+        }
     }
 }

@@ -1,4 +1,5 @@
-//! Artifact registry: manifest + compiled executable, cached by name.
+//! Artifact registry: manifest + compiled executable, cached by name,
+//! parameterized over the runtime backend.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -7,28 +8,32 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::pytree::Manifest;
-use crate::runtime::{Runtime, SharedExecutable};
+use crate::runtime::{Backend, BackendKind, Executable, Value};
 
 /// One loaded artifact: parsed manifest + compiled executable.
 pub struct Artifact {
     pub manifest: Manifest,
-    pub exe: SharedExecutable,
+    exe: Box<dyn Executable>,
 }
 
 impl Artifact {
-    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        if inputs.len() != self.manifest.inputs.len() {
+    /// Execute on flat input leaves (manifest order); returns flat
+    /// output leaves. Accepts any iterable of `&Value` so both
+    /// `&Vec<Value>` and collected `Vec<&Value>` call sites work.
+    pub fn execute<'a, I>(&self, inputs: I) -> Result<Vec<Value>>
+    where
+        I: IntoIterator<Item = &'a Value>,
+    {
+        let refs: Vec<&Value> = inputs.into_iter().collect();
+        if refs.len() != self.manifest.inputs.len() {
             bail!(
                 "artifact {}: got {} inputs, manifest wants {}",
                 self.manifest.name,
-                inputs.len(),
+                refs.len(),
                 self.manifest.inputs.len()
             );
         }
-        let out = self.exe.execute_leaves(inputs)?;
+        let out = self.exe.execute(&refs)?;
         if out.len() != self.manifest.outputs.len() {
             bail!(
                 "artifact {}: got {} outputs, manifest wants {}",
@@ -44,12 +49,23 @@ impl Artifact {
 /// Loads artifacts from a directory, compiling each at most once.
 pub struct ArtifactStore {
     dir: PathBuf,
-    runtime: Runtime,
+    backend: Box<dyn Backend>,
+    kind: BackendKind,
     cache: HashMap<String, Arc<Artifact>>,
 }
 
 impl ArtifactStore {
+    /// Open with the build's default backend (xla when compiled in,
+    /// host otherwise).
     pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        Self::open_with(dir, BackendKind::default_kind())
+    }
+
+    /// Open with an explicit backend.
+    pub fn open_with(
+        dir: impl Into<PathBuf>,
+        kind: BackendKind,
+    ) -> Result<ArtifactStore> {
         let dir = dir.into();
         if !dir.is_dir() {
             bail!(
@@ -59,24 +75,30 @@ impl ArtifactStore {
         }
         Ok(ArtifactStore {
             dir,
-            runtime: Runtime::cpu()?,
+            backend: kind.create()?,
+            kind,
             cache: HashMap::new(),
         })
     }
 
     /// Default location: `$MPX_ARTIFACTS` or `./artifacts`.
     pub fn open_default() -> Result<ArtifactStore> {
+        Self::open_default_with(BackendKind::default_kind())
+    }
+
+    pub fn open_default_with(kind: BackendKind) -> Result<ArtifactStore> {
         let dir = std::env::var("MPX_ARTIFACTS")
             .unwrap_or_else(|_| "artifacts".to_string());
-        Self::open(dir)
+        Self::open_with(dir, kind)
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+    /// Which backend this store compiles with.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
     }
 
     /// Parse a manifest without compiling (memory model, inspector).
@@ -103,13 +125,13 @@ impl ArtifactStore {
         let manifest = self.manifest(name)?;
         let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
         let t0 = std::time::Instant::now();
-        let exe = self.runtime.compile_hlo_file(&hlo_path)?;
+        let exe = self.backend.compile_hlo_file(&hlo_path)?;
         eprintln!(
-            "[runtime] compiled {name} in {}",
+            "[runtime] compiled {name} ({}) in {}",
+            self.backend.name(),
             crate::util::human_duration(t0.elapsed())
         );
-        let artifact =
-            Arc::new(Artifact { manifest, exe: SharedExecutable(exe) });
+        let artifact = Arc::new(Artifact { manifest, exe });
         self.cache.insert(name.to_string(), artifact.clone());
         Ok(artifact)
     }

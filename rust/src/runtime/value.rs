@@ -1,0 +1,330 @@
+//! Backend-agnostic leaf literal: dtype + shape + native-layout bytes.
+//!
+//! [`Value`] is the unit the [`super::Executable`] trait moves across
+//! the artifact boundary — the host interpreter consumes it directly,
+//! the PJRT backend converts it at the edge. Bytes are dense row-major
+//! in each dtype's native encoding (f16/bf16 are raw 16-bit words),
+//! which is exactly the manifest/checkpoint byte contract, so
+//! [`literal_bytes`]/[`lit_from_bytes`] are plain copies for every
+//! dtype.
+//!
+//! The reader helpers keep the names they had when they worked on
+//! `xla::Literal`s (`read_f32`, `lit_f32`, …) so trainer/serve call
+//! sites are backend-independent. The vector-returning readers stage
+//! through the global [`BufferPool`] (`read_into` underneath): a
+//! caller that returns its buffers via `put_f32`/`put_u8` reads leaves
+//! with zero steady-state allocation.
+
+use anyhow::{bail, Context, Result};
+
+use crate::hostkernel::BufferPool;
+use crate::pytree::{DType, LeafSpec};
+
+/// One typed host tensor (a "leaf literal").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    dtype: DType,
+    shape: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+pub(crate) fn as_bytes<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            xs.as_ptr() as *const u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+impl Value {
+    /// Build from raw native-layout bytes (validated against shape).
+    pub fn new(dtype: DType, shape: Vec<usize>, bytes: Vec<u8>) -> Result<Value> {
+        let elems: usize = shape.iter().product::<usize>().max(1);
+        if bytes.len() != elems * dtype.bytes() {
+            bail!(
+                "value {}{shape:?}: want {} bytes, got {}",
+                dtype.name(),
+                elems * dtype.bytes(),
+                bytes.len()
+            );
+        }
+        Ok(Value { dtype, shape, bytes })
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Raw native-layout bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    fn expect_dtype(&self, want: DType) -> Result<()> {
+        if self.dtype != want {
+            bail!(
+                "value is {}, caller wants {}",
+                self.dtype.name(),
+                want.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Read f32 elements into a caller-owned buffer (cleared first).
+    pub fn read_f32_into(&self, out: &mut Vec<f32>) -> Result<()> {
+        self.expect_dtype(DType::F32)?;
+        out.clear();
+        out.reserve(self.elems());
+        out.extend(
+            self.bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    }
+
+    pub fn read_i32_into(&self, out: &mut Vec<i32>) -> Result<()> {
+        self.expect_dtype(DType::S32)?;
+        out.clear();
+        out.reserve(self.elems());
+        out.extend(
+            self.bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_ne_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(())
+    }
+
+    /// Raw bytes into a caller-owned buffer (cleared first).
+    pub fn bytes_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&self.bytes);
+    }
+}
+
+/// f32 value of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Value> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("lit_f32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    Value::new(DType::F32, shape.to_vec(), as_bytes(data).to_vec())
+}
+
+/// s32 value of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Value> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("lit_i32: shape {shape:?} wants {n} elems, got {}", data.len());
+    }
+    Value::new(DType::S32, shape.to_vec(), as_bytes(data).to_vec())
+}
+
+pub fn lit_scalar_f32(x: f32) -> Value {
+    Value {
+        dtype: DType::F32,
+        shape: Vec::new(),
+        bytes: x.to_ne_bytes().to_vec(),
+    }
+}
+
+pub fn lit_scalar_i32(x: i32) -> Value {
+    Value {
+        dtype: DType::S32,
+        shape: Vec::new(),
+        bytes: x.to_ne_bytes().to_vec(),
+    }
+}
+
+/// Build a value for a manifest leaf from raw bytes (checkpoint
+/// restore path — any dtype including f16/bf16, which stay bitwise).
+pub fn lit_from_bytes(leaf: &LeafSpec, bytes: &[u8]) -> Result<Value> {
+    if bytes.len() != leaf.bytes() {
+        bail!(
+            "leaf {}: want {} bytes, got {}",
+            leaf.name,
+            leaf.bytes(),
+            bytes.len()
+        );
+    }
+    Value::new(leaf.dtype, leaf.shape.clone(), bytes.to_vec())
+}
+
+/// Read an f32 value back to a host vector, staged through `pool`.
+///
+/// The returned vector *is* a pool buffer: hand it back with
+/// `pool.put_f32` when done and the next read reuses the allocation.
+pub fn read_f32_from(v: &Value, pool: &BufferPool) -> Result<Vec<f32>> {
+    let mut out = pool.take_f32(v.elems());
+    v.read_f32_into(&mut out)?;
+    Ok(out)
+}
+
+/// Read an f32 value back to a host vector (global-pool staging).
+pub fn read_f32(v: &Value) -> Result<Vec<f32>> {
+    read_f32_from(v, BufferPool::global())
+}
+
+pub fn read_i32(v: &Value) -> Result<Vec<i32>> {
+    let mut out = BufferPool::global().take_i32(v.elems());
+    v.read_i32_into(&mut out)?;
+    Ok(out)
+}
+
+pub fn read_scalar_f32(v: &Value) -> Result<f32> {
+    v.expect_dtype(DType::F32)?;
+    let b = &v.bytes;
+    if b.len() < 4 {
+        bail!("empty f32 value");
+    }
+    Ok(f32::from_ne_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+pub fn read_scalar_i32(v: &Value) -> Result<i32> {
+    v.expect_dtype(DType::S32)?;
+    let b = &v.bytes;
+    if b.len() < 4 {
+        bail!("empty s32 value");
+    }
+    Ok(i32::from_ne_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Read a PRED scalar (grads_finite flag).
+pub fn read_scalar_pred(v: &Value) -> Result<bool> {
+    v.expect_dtype(DType::Pred)?;
+    let b = v.bytes.first().context("empty pred value")?;
+    Ok(*b != 0)
+}
+
+/// Raw bytes of a value, staged through `pool` (checkpoint save path;
+/// return with `pool.put_u8` to recycle).
+pub fn literal_bytes_from(v: &Value, pool: &BufferPool) -> Result<Vec<u8>> {
+    let mut out = pool.take_u8(v.bytes.len());
+    v.bytes_into(&mut out);
+    Ok(out)
+}
+
+/// Raw bytes of a value (global-pool staging).
+pub fn literal_bytes(v: &Value) -> Result<Vec<u8>> {
+    literal_bytes_from(v, BufferPool::global())
+}
+
+/// [`literal_bytes`] into a caller-owned buffer (cleared first) — the
+/// checkpoint writer cycles one pooled buffer across all leaves.
+/// Bitwise for every dtype: `Value` stores native encodings, so
+/// f16/bf16 leaves round-trip exactly (NaN payloads included).
+pub fn literal_bytes_into(v: &Value, out: &mut Vec<u8>) -> Result<()> {
+    v.bytes_into(out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let v = lit_f32(&[2, 2], &[1.0, -2.5, 3.0, 0.25]).unwrap();
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(read_f32(&v).unwrap(), vec![1.0, -2.5, 3.0, 0.25]);
+        assert_eq!(read_scalar_f32(&v).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn roundtrip_i32_and_scalars() {
+        let v = lit_i32(&[3], &[7, -1, 42]).unwrap();
+        assert_eq!(read_i32(&v).unwrap(), vec![7, -1, 42]);
+        assert_eq!(read_scalar_i32(&lit_scalar_i32(-9)).unwrap(), -9);
+        assert_eq!(read_scalar_f32(&lit_scalar_f32(0.5)).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[3], &[1.0]).is_err());
+        assert!(Value::new(DType::F32, vec![2], vec![0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let v = lit_i32(&[1], &[1]).unwrap();
+        assert!(read_f32(&v).is_err());
+        assert!(read_scalar_pred(&v).is_err());
+    }
+
+    #[test]
+    fn pred_scalar() {
+        let spec = LeafSpec {
+            name: "finite".into(),
+            dtype: DType::Pred,
+            shape: vec![],
+            group: "flags".into(),
+            trainable: false,
+        };
+        let v = lit_from_bytes(&spec, &[1]).unwrap();
+        assert!(read_scalar_pred(&v).unwrap());
+    }
+
+    #[test]
+    fn bytes_roundtrip_any_dtype() {
+        let spec = LeafSpec {
+            name: "w".into(),
+            dtype: DType::F16,
+            shape: vec![4],
+            group: "params".into(),
+            trainable: true,
+        };
+        let raw: Vec<u8> = vec![0x00, 0x3c, 0x00, 0xc0, 0xff, 0x7b, 0x01, 0x00];
+        let v = lit_from_bytes(&spec, &raw).unwrap();
+        assert_eq!(literal_bytes(&v).unwrap(), raw);
+    }
+
+    /// Satellite: pooled read path — the second read of the same
+    /// leaf reuses the first read's allocation when the caller
+    /// recycles it (zero-alloc steady state).
+    #[test]
+    fn pooled_read_reuses_allocation() {
+        let pool = BufferPool::new();
+        let v = lit_f32(&[256], &vec![1.5f32; 256]).unwrap();
+
+        let first = read_f32_from(&v, &pool).unwrap();
+        let ptr = first.as_ptr();
+        let cap = first.capacity();
+        pool.put_f32(first);
+
+        let second = read_f32_from(&v, &pool).unwrap();
+        assert_eq!(second.as_ptr(), ptr, "second read must reuse the buffer");
+        assert_eq!(second.capacity(), cap);
+        assert_eq!(second.len(), 256);
+
+        let stats = pool.stats();
+        assert_eq!(stats.hits, 1, "second take must be a pool hit");
+        assert_eq!(stats.misses, 1, "only the first take may allocate");
+    }
+
+    #[test]
+    fn pooled_bytes_reuses_allocation() {
+        let pool = BufferPool::new();
+        let v = lit_i32(&[64], &vec![3i32; 64]).unwrap();
+        let first = literal_bytes_from(&v, &pool).unwrap();
+        let ptr = first.as_ptr();
+        pool.put_u8(first);
+        let second = literal_bytes_from(&v, &pool).unwrap();
+        assert_eq!(second.as_ptr(), ptr);
+        assert_eq!(second.len(), 64 * 4);
+    }
+}

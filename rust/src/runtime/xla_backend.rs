@@ -1,0 +1,201 @@
+//! PJRT (XLA CPU) backend — the `xla`-feature implementation of the
+//! runtime HAL.
+//!
+//! Values cross the boundary bitwise: `Value` stores native-layout
+//! bytes for every dtype, and `Literal::create_from_shape_and_untyped_
+//! data` accepts exactly that encoding (f16/bf16 are raw 16-bit
+//! words). On the way back this PJRT binding exposes no native 16-bit
+//! host type, so half-precision outputs stage through a (convert →
+//! f32 → batch RTNE down-cast) path: exact for every finite and
+//! infinite value (round-trip bit-exactness is exhaustively tested in
+//! `numerics::f16`), while NaN payloads keep their top bits but come
+//! back quieted. Integer outputs stage through s32, which preserves
+//! bits for every width ≤ 32.
+//!
+//! Output dtypes/shapes come from our own HLO parser (the root tuple
+//! of the ENTRY computation), not from PJRT shape introspection — the
+//! same source of truth the host backend uses.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::hlo::graph::{GShape, HloProgram};
+use crate::pytree::DType;
+use crate::runtime::value::{as_bytes, Value};
+use crate::runtime::{Backend, Executable};
+
+/// Backend owning the PJRT CPU client.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+}
+
+impl XlaBackend {
+    pub fn cpu() -> Result<XlaBackend> {
+        let client =
+            xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaBackend { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn compile_hlo_file(&self, path: &Path) -> Result<Box<dyn Executable>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read HLO text {}", path.display()))?;
+        let out_specs = parse_out_specs(&text)
+            .with_context(|| format!("output signature {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Box::new(XlaExecutable { exe: SharedExecutable(exe), out_specs }))
+    }
+}
+
+/// Entry-root dtypes/shapes, one per output leaf.
+fn parse_out_specs(text: &str) -> Result<Vec<(DType, Vec<usize>)>> {
+    let program = HloProgram::parse(text)?;
+    let entry = program.entry()?;
+    let root = &entry.instrs[entry.root_index()?];
+    match &root.shape {
+        GShape::Tuple(parts) => parts
+            .iter()
+            .map(|p| Ok((p.dtype()?, p.dims()?.to_vec())))
+            .collect(),
+        s @ GShape::Array { .. } => Ok(vec![(s.dtype()?, s.dims()?.to_vec())]),
+    }
+}
+
+/// `Send`/`Sync` wrapper for sharing one compiled executable across
+/// shard threads.
+///
+/// SAFETY: `PjRtLoadedExecutable` wraps a C++ `PjRtLoadedExecutable*`;
+/// PJRT explicitly documents `Execute` as thread-safe (the CPU client
+/// runs each invocation on its own thread pool slot), and the wrapper
+/// never exposes `&mut`.  The `xla` crate merely never added the
+/// marker.  Destruction still happens on one thread (the owner).
+struct SharedExecutable(xla::PjRtLoadedExecutable);
+
+unsafe impl Send for SharedExecutable {}
+unsafe impl Sync for SharedExecutable {}
+
+/// A PJRT-compiled artifact.
+pub struct XlaExecutable {
+    exe: SharedExecutable,
+    out_specs: Vec<(DType, Vec<usize>)>,
+}
+
+impl Executable for XlaExecutable {
+    fn execute(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|v| value_to_literal(v))
+            .collect::<Result<_>>()?;
+        let result = self.exe.0.execute::<Literal>(&lits).context("execute")?;
+        let buffer = &result[0][0];
+        let mut tuple = buffer
+            .to_literal_sync()
+            .context("fetch output tuple to host")?;
+        let outs = tuple.decompose_tuple().context("decompose output tuple")?;
+        if outs.len() != self.out_specs.len() {
+            bail!(
+                "xla execute: produced {} outputs, entry declares {}",
+                outs.len(),
+                self.out_specs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.out_specs)
+            .map(|(lit, (dt, dims))| literal_to_value(lit, *dt, dims))
+            .collect()
+    }
+}
+
+fn element_type(d: DType) -> ElementType {
+    match d {
+        DType::F32 => ElementType::F32,
+        DType::F16 => ElementType::F16,
+        DType::Bf16 => ElementType::Bf16,
+        DType::S32 => ElementType::S32,
+        DType::U32 => ElementType::U32,
+        DType::S8 => ElementType::S8,
+        DType::U8 => ElementType::U8,
+        DType::Pred => ElementType::Pred,
+    }
+}
+
+/// Native-layout bytes → literal, bitwise for every dtype.
+fn value_to_literal(v: &Value) -> Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(
+        element_type(v.dtype()),
+        v.shape(),
+        v.bytes(),
+    )
+    .with_context(|| {
+        format!("create {}{:?} literal", v.dtype().name(), v.shape())
+    })
+}
+
+/// Literal → native-layout bytes (the staging notes are on the module
+/// doc); shape comes from the parsed HLO signature.
+fn literal_to_value(lit: &Literal, dt: DType, dims: &[usize]) -> Result<Value> {
+    let mut out = Vec::new();
+    match dt {
+        DType::F32 => {
+            out.extend_from_slice(as_bytes(&lit.to_vec::<f32>()?));
+        }
+        DType::S32 => {
+            out.extend_from_slice(as_bytes(&lit.to_vec::<i32>()?));
+        }
+        DType::F16 => {
+            let wide = lit
+                .convert(xla::PrimitiveType::F32)
+                .context("convert f16→f32")?
+                .to_vec::<f32>()?;
+            crate::hostkernel::cast::f32_to_f16_bytes(&wide, &mut out);
+        }
+        DType::Bf16 => {
+            let wide = lit
+                .convert(xla::PrimitiveType::F32)
+                .context("convert bf16→f32")?
+                .to_vec::<f32>()?;
+            crate::hostkernel::cast::f32_to_bf16_bytes(&wide, &mut out);
+        }
+        DType::U32 => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert u32→s32")?
+                .to_vec::<i32>()?;
+            out.extend_from_slice(as_bytes(&v));
+        }
+        DType::S8 | DType::U8 => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert 8-bit→s32")?
+                .to_vec::<i32>()?;
+            out.extend(v.iter().map(|&x| x as u8));
+        }
+        DType::Pred => {
+            let v = lit
+                .convert(xla::PrimitiveType::S32)
+                .context("convert pred→s32")?
+                .to_vec::<i32>()?;
+            out.extend(v.iter().map(|&x| (x != 0) as u8));
+        }
+    }
+    Value::new(dt, dims.to_vec(), out)
+}

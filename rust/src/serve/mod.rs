@@ -114,33 +114,22 @@ pub use sched::{
     SimCompletion, SimLaneReport, SimReplan, SimReport, SimSpec, Work,
 };
 pub use transport::{Server, ServerHandle, TransportReport};
-pub use worker::{BatchExecutor, LaneTally, WorkerReport};
-
-#[cfg(feature = "xla")]
-pub use worker::ArtifactExecutor;
+pub use worker::{
+    ArtifactExecutor, BatchExecutor, LaneTally, WorkerReport,
+};
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::config::{LaneConfig, ServeConfig};
+use crate::config::{model_preset, LaneConfig, Precision, ServeConfig};
+use crate::data::SyntheticDataset;
 use crate::metrics::{LatencyHistogram, NamedHistograms};
+use crate::runtime::{Artifact, ArtifactStore};
 use crate::trace::{Span, TraceConfig, Tracer};
 use crate::util::human_duration;
 use worker::worker_loop;
-
-#[cfg(feature = "xla")]
-use anyhow::bail;
-
-#[cfg(feature = "xla")]
-use crate::config::{model_preset, Precision};
-
-#[cfg(feature = "xla")]
-use crate::data::SyntheticDataset;
-
-#[cfg(feature = "xla")]
-use crate::runtime::{Artifact, ArtifactStore};
 
 /// One lane's offered production load.
 pub struct LaneTraffic {
@@ -709,7 +698,6 @@ where
 /// Probes exactly [`planner::pow2_candidates`] — the one definition
 /// of the ladder, shared with the planner's search space, so a
 /// planned bucket is always discoverable when its artifact exists.
-#[cfg(feature = "xla")]
 pub fn discover_buckets(
     store: &ArtifactStore,
     cfg: &ServeConfig,
@@ -726,7 +714,6 @@ pub fn discover_buckets(
 /// Planned buckets whose forward artifact is absent from `store` —
 /// the one definition of "missing" shared by `mpx serve --plan`'s
 /// presence report and [`run_with_artifacts`]'s hard error.
-#[cfg(feature = "xla")]
 pub fn missing_planned_artifacts(
     store: &ArtifactStore,
     cfg: &ServeConfig,
@@ -755,7 +742,6 @@ pub fn missing_planned_artifacts(
 /// static everything-that-was-compiled list; a planned bucket whose
 /// artifact is missing is a hard error naming the artifact (serving a
 /// partial plan would silently void its SLO guarantees).
-#[cfg(feature = "xla")]
 pub fn run_with_artifacts(
     store: &mut ArtifactStore,
     cfg: &ServeConfig,
@@ -886,14 +872,12 @@ pub fn persist_trace(
 }
 
 /// Compiled artifacts backing one serving lane.
-#[cfg(feature = "xla")]
 struct LaneArtifacts {
     init: Arc<Artifact>,
     fwd: Vec<(usize, Arc<Artifact>)>,
 }
 
 /// Lane setup shared by every artifact-backed serve entry point.
-#[cfg(feature = "xla")]
 struct PreparedLanes {
     lane_cfgs: Vec<LaneConfig>,
     specs: Vec<LaneSpec>,
@@ -909,7 +893,6 @@ struct PreparedLanes {
 /// [`run_with_artifacts`] (synthetic loadgen) and
 /// [`run_transport_with_artifacts`] (network serving) so both paths
 /// serve exactly the same plan with the same hard errors.
-#[cfg(feature = "xla")]
 fn prepare_lanes(
     store: &mut ArtifactStore,
     cfg: &ServeConfig,
@@ -1006,7 +989,6 @@ fn prepare_lanes(
 /// [`transport`] HTTP server, which streams each completion back to
 /// its caller and drains gracefully on SIGINT.  Blocks until the
 /// drain completes; returns the transport-side report.
-#[cfg(feature = "xla")]
 pub fn run_transport_with_artifacts(
     store: &mut ArtifactStore,
     cfg: &ServeConfig,

@@ -2,36 +2,28 @@
 //! compiled executables.
 //!
 //! Each worker thread builds one [`BatchExecutor`] *per lane* inside
-//! the thread (PJRT literals are not `Send`), then loops on
-//! [`Scheduler::next_work`]: the scheduler continuously refills free
-//! slots from whichever lane the weighted-deficit picker selects, so
-//! a worker serves every (model, precision) lane, not one queue.
-//! Per-request latency lands in the worker's own per-lane
-//! [`LatencyHistogram`]s (merged by the engine afterwards), and
-//! completions are streamed through the scheduler's callback the
-//! moment a batch finishes.
+//! the thread, then loops on [`Scheduler::next_work`]: the scheduler
+//! continuously refills free slots from whichever lane the
+//! weighted-deficit picker selects, so a worker serves every (model,
+//! precision) lane, not one queue.  Per-request latency lands in the
+//! worker's own per-lane [`LatencyHistogram`]s (merged by the engine
+//! afterwards), and completions are streamed through the scheduler's
+//! callback the moment a batch finishes.
 //!
-//! The compiled executables themselves are shared across workers via
-//! `runtime::SharedExecutable` (xla feature) — one compile, N
-//! replicas of the (cheap) parameter literals, exactly the
-//! replication scheme `trainer::ddp` uses for shards.
+//! The compiled executables themselves are shared across workers (the
+//! runtime `Executable` trait is `Send + Sync` on either backend) —
+//! one compile, N replicas of the (cheap) parameter leaves, exactly
+//! the replication scheme `trainer::ddp` uses for shards.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::metrics::LatencyHistogram;
+use crate::runtime::{lit_f32, lit_scalar_i32, read_f32, Artifact, Value};
 use crate::serve::clock::Clock;
 use crate::serve::sched::{Scheduler, Work};
-
-#[cfg(feature = "xla")]
-use std::sync::Arc;
-
-#[cfg(feature = "xla")]
-use anyhow::bail;
-
-#[cfg(feature = "xla")]
-use crate::runtime::{lit_f32, lit_scalar_i32, read_f32, Artifact};
 
 /// A loaded model replica that can run one padded batch.
 pub trait BatchExecutor {
@@ -183,17 +175,15 @@ pub fn worker_loop<E: BatchExecutor>(
 /// The replica is materialised by re-running the deterministic init
 /// artifact with the worker-shared seed — identical weights on every
 /// worker without moving literals across threads.
-#[cfg(feature = "xla")]
 pub struct ArtifactExecutor {
     /// `(bucket, fwd artifact)`, ascending by bucket.
     fwd_by_bucket: Vec<(usize, Arc<Artifact>)>,
-    /// Init-artifact outputs (this thread's literals).
-    state: Vec<xla::Literal>,
+    /// Init-artifact outputs (this thread's replica).
+    state: Vec<Value>,
     /// Slice of `state` holding the parameter leaves.
     prange: std::ops::Range<usize>,
 }
 
-#[cfg(feature = "xla")]
 impl ArtifactExecutor {
     /// Build inside the worker thread.
     pub fn new(
@@ -218,7 +208,6 @@ impl ArtifactExecutor {
     }
 }
 
-#[cfg(feature = "xla")]
 impl BatchExecutor for ArtifactExecutor {
     fn execute(&mut self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
         let (_, fwd) = self
@@ -242,10 +231,10 @@ impl BatchExecutor for ArtifactExecutor {
             );
         }
         let images = lit_f32(&img_spec.shape, images)?;
-        let mut inputs: Vec<&xla::Literal> =
+        let mut inputs: Vec<&Value> =
             self.state[self.prange.clone()].iter().collect();
         inputs.push(&images);
-        let out = fwd.execute(&inputs)?;
+        let out = fwd.execute(inputs)?;
         read_f32(&out[0])
     }
 }

@@ -8,10 +8,11 @@
 //!           u64 dims[rank] | u64 byte_len | bytes
 //! ```
 //!
-//! Leaves are the fused trainer's state literals in manifest order.
-//! Save and restore are symmetric across every manifest dtype
-//! (f32/s32 fast path; f16/bf16/u32/s8/u8/pred via the staging casts
-//! in `runtime::literal`), so mixed-precision state round-trips.
+//! Leaves are the fused trainer's state [`Value`]s in manifest order.
+//! Save and restore are symmetric across every manifest dtype —
+//! `Value` already stores native-layout bytes, so serialization is a
+//! straight copy and mixed-precision state round-trips bitwise on
+//! either runtime backend.
 //! Restore validates name, dtype and shape against the target
 //! manifest so stale checkpoints fail loudly instead of silently
 //! reshaping.
@@ -22,7 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::hostkernel::BufferPool;
 use crate::pytree::{DType, LeafSpec};
-use crate::runtime::literal::{lit_from_bytes, literal_bytes_into};
+use crate::runtime::{lit_from_bytes, literal_bytes_into, Value};
 
 const MAGIC: &[u8; 8] = b"MPXCKPT1";
 
@@ -58,7 +59,7 @@ pub fn save(
     path: &str,
     step: u64,
     specs: &[LeafSpec],
-    leaves: &[xla::Literal],
+    leaves: &[Value],
 ) -> Result<()> {
     if specs.len() != leaves.len() {
         bail!("save: {} specs vs {} leaves", specs.len(), leaves.len());
@@ -102,7 +103,7 @@ pub fn save(
 }
 
 /// Restore: returns `(step, leaves)` validated against `specs`.
-pub fn load(path: &str, specs: &[LeafSpec]) -> Result<(u64, Vec<xla::Literal>)> {
+pub fn load(path: &str, specs: &[LeafSpec]) -> Result<(u64, Vec<Value>)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {path}"))?,
     );

@@ -10,7 +10,9 @@
 //! ```
 //!
 //! Shards run on OS threads over the one shared compiled executable
-//! (PJRT `Execute` is thread-safe; see `runtime::SharedExecutable`).
+//! (the `Executable` trait is `Send + Sync`; on PJRT, `Execute` is
+//! documented thread-safe, and the host interpreter keeps all
+//! per-call state on the stack).
 //! The all-reduce is a deterministic tree ([`crate::collective`]), the
 //! optimizer is Rust AdamW over fp32 masters ([`crate::optim`]), and
 //! the scale adjustment is the Rust [`LossScaler`] — together the
@@ -199,8 +201,7 @@ impl DataParallelTrainer {
                             // to the pool for the next step's batch.
                             batch.recycle();
 
-                            let out =
-                                artifact.exe.execute_leaves(&inputs)?;
+                            let out = artifact.execute(&inputs)?;
                             let grads = grange
                                 .clone()
                                 .map(|i| read_f32(&out[i]))

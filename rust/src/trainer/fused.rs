@@ -4,9 +4,12 @@
 //! `(params, opt_state, scaling, images, labels) →
 //!  (params', opt_state', scaling', loss, grads_finite)`;
 //! Rust threads the state leaves through, attaches fresh batch
-//! literals, and records metrics.  State leaves live as host literals
-//! between steps (this PJRT build returns one tuple buffer — see
-//! `runtime`); the packing cost is measured by `runtime_overhead`.
+//! leaves, and records metrics.  State leaves live as host
+//! [`Value`]s between steps (on the xla backend the PJRT build
+//! returns one tuple buffer — see `runtime`); the packing cost is
+//! measured by `runtime_overhead`.  The loop is backend-agnostic:
+//! the artifact store decides whether steps run on PJRT or the host
+//! interpreter.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,7 +21,7 @@ use crate::data::{Batch, Prefetcher, SyntheticDataset};
 use crate::metrics::{RunMetrics, StepRecord};
 use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_i32, read_scalar_f32, read_scalar_pred,
-    Artifact, ArtifactStore,
+    Artifact, ArtifactStore, Value,
 };
 use crate::serve::clock::{Clock, WallClock};
 use crate::trace::{SpanKind, Tracer};
@@ -26,7 +29,7 @@ use crate::trace::{SpanKind, Tracer};
 pub struct FusedTrainer {
     step_artifact: Arc<Artifact>,
     /// State leaves in step-input order (params ++ opt_state ++ scaling).
-    state: Vec<xla::Literal>,
+    state: Vec<Value>,
     n_state: usize,
     pub step_index: u64,
     pub config: TrainConfig,
@@ -101,7 +104,7 @@ impl FusedTrainer {
     }
 
     /// Pack a host batch into the step's (images, labels) literals.
-    fn batch_literals(&self, batch: &Batch) -> Result<[xla::Literal; 2]> {
+    fn batch_literals(&self, batch: &Batch) -> Result<[Value; 2]> {
         let m = &self.step_artifact.manifest;
         let img_spec = &m.inputs[m.input_group("images")
             .next_back()
@@ -127,14 +130,11 @@ impl FusedTrainer {
         };
         let [images, labels] = self.batch_literals(batch)?;
 
-        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        let mut inputs: Vec<&Value> = self.state.iter().collect();
         inputs.push(&images);
         inputs.push(&labels);
 
-        let mut outputs = self.step_artifact.exe.execute_leaves(
-            // execute takes Borrow<Literal>; a slice of refs works
-            &inputs,
-        )?;
+        let mut outputs = self.step_artifact.execute(inputs)?;
         let m = &self.step_artifact.manifest;
         if outputs.len() != m.outputs.len() {
             bail!(
@@ -205,12 +205,12 @@ impl FusedTrainer {
     }
 
     /// Borrow the state leaves (checkpoint save).
-    pub fn state(&self) -> &[xla::Literal] {
+    pub fn state(&self) -> &[Value] {
         &self.state
     }
 
     /// Replace the state leaves (checkpoint restore).
-    pub fn set_state(&mut self, state: Vec<xla::Literal>) -> Result<()> {
+    pub fn set_state(&mut self, state: Vec<Value>) -> Result<()> {
         if state.len() != self.n_state {
             bail!(
                 "restore: got {} leaves, trainer wants {}",

@@ -1,0 +1,251 @@
+//! Backend cross-check: the pure-Rust host interpreter and the PJRT
+//! backend must agree on the same artifact with identical inputs.
+//!
+//! Oracle, per output dtype:
+//!
+//! * integer / pred leaves — **bit-exact**.  The threefry path and
+//!   every comparison are order-deterministic on both backends.
+//! * f32 — tolerance `|a−b| ≤ 1e-5 + 1e-3·max(|a|,|b|)`: dot and
+//!   reduce accumulate in different orders (the interpreter folds
+//!   sequentially, XLA vectorizes/FMA-contracts), so the last few
+//!   ulps legitimately differ.
+//! * f16 / bf16 — the same shape of bound, widened to the 16-bit
+//!   format's resolution (the divergent f32 accumulation is rounded
+//!   once on either side).
+//!
+//! Identical inputs are guaranteed by materialising all state on the
+//! *host* backend and feeding the same [`Value`]s to both executables.
+//! Without the `xla` feature the cross-backend tests degrade to a
+//! note (the host-determinism test still runs), so the suite is
+//! meaningful under `--no-default-features` too.
+
+use mpx::config::model_preset;
+use mpx::data::SyntheticDataset;
+use mpx::numerics::{Bf16, F16};
+use mpx::pytree::DType;
+use mpx::runtime::{
+    lit_f32, lit_i32, lit_scalar_i32, ArtifactStore, BackendKind, Value,
+};
+
+/// Open the artifact store on `kind`, or `None` (skip with a note)
+/// when the artifacts have not been built.
+fn open(kind: BackendKind) -> Option<ArtifactStore> {
+    match ArtifactStore::open_default_with(kind) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping: artifacts unavailable ({e:#})");
+            None
+        }
+    }
+}
+
+fn decode_f32s(v: &Value) -> Vec<f32> {
+    match v.dtype() {
+        DType::F32 => mpx::runtime::read_f32(v).unwrap(),
+        DType::F16 => v
+            .bytes()
+            .chunks_exact(2)
+            .map(|c| F16(u16::from_le_bytes([c[0], c[1]])).to_f32())
+            .collect(),
+        DType::Bf16 => v
+            .bytes()
+            .chunks_exact(2)
+            .map(|c| Bf16(u16::from_le_bytes([c[0], c[1]])).to_f32())
+            .collect(),
+        other => panic!("decode_f32s on {other:?}"),
+    }
+}
+
+/// Pinned per-dtype agreement: `None` means bit-exact.
+fn tolerance(dt: DType) -> Option<(f32, f32)> {
+    match dt {
+        DType::F32 => Some((1e-3, 1e-5)),
+        DType::F16 => Some((1e-2, 1e-3)),
+        DType::Bf16 => Some((4e-2, 4e-3)),
+        _ => None,
+    }
+}
+
+fn assert_agree(name: &str, host: &Value, xla: &Value) {
+    assert_eq!(host.dtype(), xla.dtype(), "{name}: dtype");
+    assert_eq!(host.shape(), xla.shape(), "{name}: shape");
+    match tolerance(host.dtype()) {
+        None => assert_eq!(
+            host.bytes(),
+            xla.bytes(),
+            "{name}: {:?} leaves must be bit-exact across backends",
+            host.dtype()
+        ),
+        Some((rtol, atol)) => {
+            let a = decode_f32s(host);
+            let b = decode_f32s(xla);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if x.is_nan() && y.is_nan() {
+                    continue;
+                }
+                let bound = atol + rtol * x.abs().max(y.abs());
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{name}[{i}]: host {x} vs xla {y} (bound {bound})"
+                );
+            }
+        }
+    }
+}
+
+/// `(state, images, labels)` for one tiny-model step, all built on
+/// the host backend so both executables see identical bytes.
+fn step_inputs(
+    host: &mut ArtifactStore,
+    init_name: &str,
+    step_name: &str,
+) -> (Vec<Value>, Value, Value) {
+    let init = host.load(init_name).unwrap();
+    let state = init.execute(&[lit_scalar_i32(3)]).unwrap();
+    let step = host.load(step_name).unwrap();
+    let img_spec = &step.manifest.inputs
+        [step.manifest.input_group("images").next_back().unwrap()];
+    let preset = model_preset("vit_tiny").unwrap();
+    let b = SyntheticDataset::new(&preset, 3).batch(0, 8, 0);
+    let images = lit_f32(&img_spec.shape, &b.images).unwrap();
+    let labels = lit_i32(&[8], &b.labels).unwrap();
+    (state, images, labels)
+}
+
+fn run_step(
+    store: &mut ArtifactStore,
+    step_name: &str,
+    state: &[Value],
+    images: &Value,
+    labels: &Value,
+) -> Vec<Value> {
+    let step = store.load(step_name).unwrap();
+    let mut inputs: Vec<&Value> = state.iter().collect();
+    inputs.push(images);
+    inputs.push(labels);
+    step.execute(inputs).unwrap()
+}
+
+/// Always runs (any build): the interpreter itself must be bitwise
+/// deterministic run-to-run, including its threaded dot path.
+#[test]
+fn host_backend_is_bit_deterministic() {
+    let Some(mut host) = open(BackendKind::Host) else { return };
+    let (state, images, labels) = step_inputs(
+        &mut host,
+        "init_vit_tiny_mixed_f16",
+        "step_fused_vit_tiny_mixed_f16_b8",
+    );
+    let a = run_step(
+        &mut host,
+        "step_fused_vit_tiny_mixed_f16_b8",
+        &state,
+        &images,
+        &labels,
+    );
+    let b = run_step(
+        &mut host,
+        "step_fused_vit_tiny_mixed_f16_b8",
+        &state,
+        &images,
+        &labels,
+    );
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(
+            x.bytes(),
+            y.bytes(),
+            "host output {i} not deterministic"
+        );
+    }
+}
+
+#[test]
+fn init_agrees_across_backends() {
+    if !BackendKind::Xla.available() {
+        eprintln!("note: xla not compiled in — host-only build, no cross-check");
+        return;
+    }
+    let Some(mut host) = open(BackendKind::Host) else { return };
+    let Some(mut xla) = open(BackendKind::Xla) else { return };
+    let seed = [lit_scalar_i32(7)];
+    let h = host.load("init_vit_tiny_mixed_f16").unwrap();
+    let x = xla.load("init_vit_tiny_mixed_f16").unwrap();
+    let ho = h.execute(&seed).unwrap();
+    let xo = x.execute(&seed).unwrap();
+    assert_eq!(ho.len(), xo.len());
+    for (spec, (a, b)) in h.manifest.outputs.iter().zip(ho.iter().zip(&xo)) {
+        assert_agree(&spec.name, a, b);
+    }
+}
+
+#[test]
+fn fp32_step_agrees_across_backends() {
+    if !BackendKind::Xla.available() {
+        eprintln!("note: xla not compiled in — host-only build, no cross-check");
+        return;
+    }
+    let Some(mut host) = open(BackendKind::Host) else { return };
+    let Some(mut xla) = open(BackendKind::Xla) else { return };
+    let (state, images, labels) = step_inputs(
+        &mut host,
+        "init_vit_tiny_fp32",
+        "step_fused_vit_tiny_fp32_b8",
+    );
+    let ho = run_step(
+        &mut host,
+        "step_fused_vit_tiny_fp32_b8",
+        &state,
+        &images,
+        &labels,
+    );
+    let xo = run_step(
+        &mut xla,
+        "step_fused_vit_tiny_fp32_b8",
+        &state,
+        &images,
+        &labels,
+    );
+    let manifest = host.load("step_fused_vit_tiny_fp32_b8").unwrap();
+    assert_eq!(ho.len(), xo.len());
+    for (spec, (a, b)) in
+        manifest.manifest.outputs.iter().zip(ho.iter().zip(&xo))
+    {
+        assert_agree(&spec.name, a, b);
+    }
+}
+
+#[test]
+fn f16_forward_agrees_across_backends() {
+    if !BackendKind::Xla.available() {
+        eprintln!("note: xla not compiled in — host-only build, no cross-check");
+        return;
+    }
+    let Some(mut host) = open(BackendKind::Host) else { return };
+    let Some(mut xla) = open(BackendKind::Xla) else { return };
+    let init = host.load("init_vit_tiny_mixed_f16").unwrap();
+    let state = init.execute(&[lit_scalar_i32(0)]).unwrap();
+    let prange = init.manifest.output_group("params");
+
+    let fwd_name = "fwd_vit_tiny_mixed_f16_b8";
+    let hf = host.load(fwd_name).unwrap();
+    let xf = xla.load(fwd_name).unwrap();
+    let img_spec = &hf.manifest.inputs
+        [hf.manifest.input_group("images").next_back().unwrap()];
+    let preset = model_preset("vit_tiny").unwrap();
+    let b = SyntheticDataset::new(&preset, 0).batch(0, 8, 0);
+    let images = lit_f32(&img_spec.shape, &b.images).unwrap();
+
+    let run = |art: &mpx::runtime::Artifact| {
+        let mut inputs: Vec<&Value> = state[prange.clone()].iter().collect();
+        inputs.push(&images);
+        art.execute(inputs).unwrap()
+    };
+    let ho = run(&hf);
+    let xo = run(&xf);
+    assert_eq!(ho.len(), xo.len());
+    for (spec, (a, b)) in hf.manifest.outputs.iter().zip(ho.iter().zip(&xo))
+    {
+        assert_agree(&spec.name, a, b);
+    }
+}

@@ -2,12 +2,11 @@
 //!
 //! Two access levels:
 //!
-//! * [`manifests`] — manifest/HLO-text file reads only.  Needs no
-//!   PJRT client and no `xla` feature, so manifest-level cross-checks
-//!   (e.g. `memmodel_cross_check`) run even in the host-only
-//!   `--no-default-features` build.
-//! * [`store`] — the full [`ArtifactStore`] (compiles executables via
-//!   PJRT); only exists with the `xla` feature.
+//! * [`manifests`] — manifest/HLO-text file reads only (no compile).
+//! * [`store`] — the full [`ArtifactStore`], compiling through the
+//!   build's default backend: PJRT with the `xla` feature, the
+//!   pure-Rust host interpreter under `--no-default-features`.  Every
+//!   artifact-backed suite therefore *runs* in both builds.
 //!
 //! Both return `None` (with a note) when the artifacts have not been
 //! built, so `cargo test` stays meaningful on fresh clones and in CI
@@ -16,8 +15,6 @@
 use std::path::PathBuf;
 
 use mpx::pytree::Manifest;
-
-#[cfg(feature = "xla")]
 use mpx::runtime::ArtifactStore;
 
 /// Manifest-only view of the artifact directory (no PJRT client).
@@ -59,13 +56,13 @@ pub fn manifests() -> Option<ManifestDir> {
     }
 }
 
-/// Open the artifact store, or `None` when the artifacts have not
-/// been built — the caller's test skips with a note.
+/// Open the artifact store on the build's default backend, or `None`
+/// when the artifacts have not been built — the caller's test skips
+/// with a note.
 ///
-/// Each test builds its own store (and PJRT client): the xla crate's
+/// Each test builds its own store (and backend): the xla crate's
 /// client is Rc-based (!Send), so it cannot live in a shared static
 /// across the test harness's threads.
-#[cfg(feature = "xla")]
 #[allow(dead_code)]
 pub fn store() -> Option<ArtifactStore> {
     match ArtifactStore::open_default() {

@@ -1,14 +1,16 @@
-//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! Integration tests over the real runtime + AOT artifacts, on
+//! whichever backend the build defaults to: PJRT with the `xla`
+//! feature, the pure-Rust host interpreter under
+//! `--no-default-features` — the whole suite *runs* in both builds.
 //!
 //! These need `make artifacts` to have run (the repo ships with the
 //! artifacts built); every test compiles the tiny-model artifacts so
-//! the suite stays fast.  One shared `ArtifactStore` per test binary —
-//! creating many PJRT clients in one process is slow.
+//! the suite stays fast.
 
 use mpx::config::{model_preset, Precision, TrainConfig};
 use mpx::data::SyntheticDataset;
 use mpx::metrics::RunMetrics;
-use mpx::runtime::{lit_scalar_i32, read_f32};
+use mpx::runtime::{lit_scalar_i32, read_f32, Value};
 use mpx::trainer::{checkpoint, FusedTrainer};
 
 mod common;
@@ -110,7 +112,7 @@ fn pallas_kernel_step_matches_xla_step() {
     let state0 = init.execute(&[lit_scalar_i32(1)]).unwrap();
 
     let run = |art: &std::sync::Arc<mpx::runtime::Artifact>| {
-        let mut state: Vec<xla::Literal> =
+        let mut state: Vec<Value> =
             state0.iter().map(Clone::clone).collect();
         let mut losses = Vec::new();
         for i in 0..5u64 {
@@ -124,10 +126,10 @@ fn pallas_kernel_step_matches_xla_step() {
             .unwrap();
             let labels =
                 mpx::runtime::lit_i32(&[8], &b.labels).unwrap();
-            let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+            let mut inputs: Vec<&Value> = state.iter().collect();
             inputs.push(&images);
             inputs.push(&labels);
-            let mut out = art.exe.execute_leaves(&inputs).unwrap();
+            let mut out = art.execute(inputs).unwrap();
             let loss_idx =
                 art.manifest.output_group("loss").next_back().unwrap();
             losses.push(
@@ -219,10 +221,10 @@ fn forward_is_deterministic() {
         [fwd.manifest.input_group("images").next_back().unwrap()];
     let run = || {
         let images = mpx::runtime::lit_f32(&img_spec.shape, &b.images).unwrap();
-        let mut inputs: Vec<&xla::Literal> =
+        let mut inputs: Vec<&Value> =
             state[prange.clone()].iter().collect();
         inputs.push(&images);
-        read_f32(&fwd.execute(&inputs).unwrap()[0]).unwrap()
+        read_f32(&fwd.execute(inputs).unwrap()[0]).unwrap()
     };
     let a = run();
     let c = run();
