@@ -101,6 +101,38 @@ pub fn all_reduce_finite(flags: &[bool]) -> bool {
     flags.iter().all(|&f| f)
 }
 
+/// Merge per-shard, per-group gradient census records into the global
+/// per-group view every rank agrees on (the input to
+/// [`crate::scaling::ScalingPolicy::adjust`]).
+///
+/// Deterministic by construction: counts are exact integer sums,
+/// `max_abs` is an exact commutative max, `finite` an AND — folded in
+/// shard-index order, so the result is bitwise-identical regardless
+/// of shard completion order or count (a 2-shard run and an 8-shard
+/// run over the same global batch agree exactly on the counts).
+pub fn all_reduce_group_stats(
+    shards: &[Vec<crate::scaling::GroupStats>],
+) -> Vec<crate::scaling::GroupStats> {
+    assert!(!shards.is_empty(), "no shards");
+    let num_groups = shards[0].len();
+    for s in shards.iter() {
+        assert_eq!(s.len(), num_groups, "shard group arity mismatch");
+    }
+    let mut out = vec![crate::scaling::GroupStats::finite_empty(); num_groups];
+    for shard in shards {
+        for (acc, st) in out.iter_mut().zip(shard.iter()) {
+            acc.count += st.count;
+            acc.underflow += st.underflow;
+            acc.overflow += st.overflow;
+            if st.max_abs > acc.max_abs {
+                acc.max_abs = st.max_abs;
+            }
+            acc.finite &= st.finite;
+        }
+    }
+    out
+}
+
 /// Mean-reduce per-shard losses (logging only).
 pub fn mean_loss(losses: &[f32]) -> f32 {
     if losses.is_empty() {
@@ -194,6 +226,37 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn group_stats_reduce_sums_counts_and_maxes() {
+        use crate::scaling::GroupStats;
+        let shard = |c, m, u, o, f| GroupStats {
+            count: c,
+            max_abs: m,
+            underflow: u,
+            overflow: o,
+            finite: f,
+        };
+        let shards = vec![
+            vec![shard(10, 0.5, 1, 0, true), shard(4, 2.0, 0, 0, true)],
+            vec![shard(10, 0.7, 2, 1, true), shard(4, 1.0, 0, 0, false)],
+        ];
+        let merged = all_reduce_group_stats(&shards);
+        assert_eq!(merged[0], shard(20, 0.7, 3, 1, true));
+        assert_eq!(merged[1], shard(8, 2.0, 0, 0, false));
+        // Fold order is shard-index order: reversing the shard list
+        // still yields identical results (all ops commutative/exact).
+        let rev: Vec<_> = shards.iter().rev().cloned().collect();
+        let merged_rev = all_reduce_group_stats(&rev);
+        assert_eq!(merged[0].max_abs.to_bits(), merged_rev[0].max_abs.to_bits());
+        assert_eq!(merged, merged_rev);
+    }
+
+    #[test]
+    #[should_panic(expected = "no shards")]
+    fn group_stats_reduce_empty_panics() {
+        all_reduce_group_stats(&[]);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::BackendKind;
-use crate::scaling::ScalingConfig;
+use crate::scaling::{PolicyKind, ScalingConfig, ScalingSpec};
 use crate::serve::batcher::SchedPolicy;
 use crate::trace::TraceConfig;
 use toml::TomlDoc;
@@ -45,6 +45,16 @@ impl Precision {
         }
     }
 
+    /// Does this mode cast gradients through binary16 (and therefore
+    /// need loss scaling at all)?
+    pub fn is_f16(self) -> bool {
+        self == Precision::MixedF16
+    }
+
+    /// The deprecated implicit convention (pre-`[train.scaling]`):
+    /// mixed f16 ⇒ dynamic defaults, everything else ⇒ pinned at 1.
+    /// New code goes through [`TrainConfig::scaling_spec`], which
+    /// prefers the explicit table and falls back to exactly this.
     pub fn scaling_config(self) -> ScalingConfig {
         match self {
             Precision::MixedF16 => ScalingConfig::default(),
@@ -179,6 +189,10 @@ pub struct TrainConfig {
     /// Learning-rate metadata (must match the AOT'd optimizer).
     pub lr: f64,
     pub weight_decay: f64,
+    /// Explicit `[train.scaling]` selection; `None` falls back to the
+    /// deprecated precision-derived convention
+    /// ([`Precision::scaling_config`]).
+    pub scaling: Option<ScalingSpec>,
     /// Span tracing (`[trace]` table, shared with the serve path).
     pub trace: TraceConfig,
 }
@@ -200,6 +214,7 @@ impl Default for TrainConfig {
             dataset: "synthetic".into(),
             lr: 3e-4,
             weight_decay: 1e-4,
+            scaling: None,
             trace: TraceConfig::default(),
         }
     }
@@ -278,11 +293,113 @@ impl TrainConfig {
         if let Some(v) = doc.get_float("train.weight_decay") {
             cfg.weight_decay = v;
         }
+        cfg.scaling = parse_scaling_toml(&doc)?;
         apply_trace_toml(&mut cfg.trace, &doc);
         cfg.trace.validate()?;
         model_preset(&cfg.model)?; // validate
+        cfg.scaling_spec()?; // validate policy × precision
         Ok(cfg)
     }
+
+    /// Resolve the effective scaling policy: the explicit
+    /// `[train.scaling]` table if present (validated against the
+    /// precision), else the deprecated precision-derived convention.
+    pub fn scaling_spec(&self) -> Result<ScalingSpec> {
+        let Some(spec) = &self.scaling else {
+            return Ok(ScalingSpec::legacy(self.precision.is_f16()));
+        };
+        spec.validate()?;
+        if spec.kind != PolicyKind::Pinned && !self.precision.is_f16() {
+            bail!(
+                "scaling: policy \"{}\" drives an f16 loss scale, but \
+                 precision \"{}\" never casts gradients through f16 — use \
+                 policy = \"pinned\" (or drop the [train.scaling] table for \
+                 the deprecated precision-derived default, which pins \
+                 fp32/bf16 at scale 1)",
+                spec.kind.tag(),
+                self.precision.tag(),
+            );
+        }
+        Ok(spec.clone())
+    }
+}
+
+/// Parse the explicit `[train.scaling]` table (`None` when absent).
+///
+/// `policy` is mandatory once the table exists; per-policy keys are
+/// rejected on policies that cannot honor them, so a config that says
+/// `pinned` with a `period` fails loudly instead of silently ignoring
+/// the knob.
+pub fn parse_scaling_toml(doc: &TomlDoc) -> Result<Option<ScalingSpec>> {
+    const KEYS: [&str; 8] = [
+        "policy",
+        "init_scale",
+        "period",
+        "factor",
+        "min_scale",
+        "max_scale",
+        "headroom",
+        "underflow_target",
+    ];
+    let present: Vec<&str> = KEYS
+        .iter()
+        .copied()
+        .filter(|k| doc.get(&format!("train.scaling.{k}")).is_some())
+        .collect();
+    if present.is_empty() {
+        return Ok(None);
+    }
+    let Some(policy) = doc.get_str("train.scaling.policy") else {
+        bail!(
+            "[train.scaling] requires an explicit policy = \"dynamic\" | \
+             \"pinned\" | \"adaptive\" (found keys {present:?}); configs \
+             without the table keep the deprecated precision-derived \
+             default"
+        );
+    };
+    let kind = PolicyKind::parse(policy)?;
+    let rejected: &[&str] = match kind {
+        PolicyKind::Pinned => {
+            &["period", "factor", "headroom", "underflow_target"]
+        }
+        PolicyKind::Dynamic => &["headroom", "underflow_target"],
+        PolicyKind::Adaptive => &[],
+    };
+    for k in rejected {
+        if present.contains(k) {
+            bail!(
+                "[train.scaling] key {k:?} makes no sense for policy = \
+                 {policy:?}",
+            );
+        }
+    }
+    let mut spec = ScalingSpec::preset(kind);
+    if let Some(v) = doc.get_float("train.scaling.init_scale") {
+        spec.base.init_scale = v as f32;
+    }
+    if let Some(v) = doc.get_int("train.scaling.period") {
+        if v < 0 {
+            bail!("[train.scaling] period must be ≥ 0 (got {v})");
+        }
+        spec.base.period = v as u32;
+    }
+    if let Some(v) = doc.get_float("train.scaling.factor") {
+        spec.base.factor = v as f32;
+    }
+    if let Some(v) = doc.get_float("train.scaling.min_scale") {
+        spec.base.min_scale = v as f32;
+    }
+    if let Some(v) = doc.get_float("train.scaling.max_scale") {
+        spec.base.max_scale = v as f32;
+    }
+    if let Some(v) = doc.get_float("train.scaling.headroom") {
+        spec.tuning.headroom = v as f32;
+    }
+    if let Some(v) = doc.get_float("train.scaling.underflow_target") {
+        spec.tuning.underflow_target = v;
+    }
+    spec.validate()?;
+    Ok(Some(spec))
 }
 
 /// Apply the shared `[trace]` table (enabled / buffer_spans /
@@ -1002,6 +1119,132 @@ mod tests {
         assert_eq!(Precision::MixedF16.scaling_config().init_scale, 32768.0);
         assert_eq!(Precision::Fp32.scaling_config().init_scale, 1.0);
         assert_eq!(Precision::MixedBf16.scaling_config().max_scale, 1.0);
+    }
+
+    fn cfg_from(text: &str, name: &str) -> Result<TrainConfig> {
+        let path = std::env::temp_dir().join(name);
+        std::fs::write(&path, text).unwrap();
+        TrainConfig::from_toml_file(path.to_str().unwrap())
+    }
+
+    #[test]
+    fn scaling_table_parses_adaptive() {
+        let cfg = cfg_from(
+            r#"
+[train]
+precision = "mixed_f16"
+
+[train.scaling]
+policy = "adaptive"
+init_scale = 1024.0
+period = 50
+headroom = 0.25
+underflow_target = 0.01
+"#,
+            "mpx_scaling_adaptive.toml",
+        )
+        .unwrap();
+        let spec = cfg.scaling_spec().unwrap();
+        assert_eq!(spec.kind, PolicyKind::Adaptive);
+        assert_eq!(spec.base.init_scale, 1024.0);
+        assert_eq!(spec.base.period, 50);
+        assert_eq!(spec.tuning.headroom, 0.25);
+        assert_eq!(spec.tuning.underflow_target, 0.01);
+    }
+
+    #[test]
+    fn scaling_table_rejects_nonsense_combos() {
+        // adaptive with period = 0
+        let err = cfg_from(
+            r#"
+[train.scaling]
+policy = "adaptive"
+period = 0
+"#,
+            "mpx_scaling_p0.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("period = 0"), "{err}");
+
+        // pinned with a growth period
+        let err = cfg_from(
+            r#"
+[train.scaling]
+policy = "pinned"
+period = 100
+"#,
+            "mpx_scaling_pinned_period.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("makes no sense"), "{err}");
+
+        // dynamic with adaptive-only tuning
+        let err = cfg_from(
+            r#"
+[train.scaling]
+policy = "dynamic"
+headroom = 0.5
+"#,
+            "mpx_scaling_dyn_headroom.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("headroom"), "{err}");
+
+        // table without an explicit policy
+        let err = cfg_from(
+            r#"
+[train.scaling]
+period = 100
+"#,
+            "mpx_scaling_no_policy.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("requires an explicit policy"), "{err}");
+
+        // adaptive on a precision that never touches f16
+        let err = cfg_from(
+            r#"
+[train]
+precision = "fp32"
+
+[train.scaling]
+policy = "adaptive"
+"#,
+            "mpx_scaling_fp32_adaptive.toml",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("never casts gradients through f16"), "{err}");
+    }
+
+    #[test]
+    fn old_configs_keep_parsing_via_the_legacy_default() {
+        // No [train.scaling] table at all: the deprecated convention
+        // applies — f16 ⇒ dynamic defaults, fp32 ⇒ pinned at 1.
+        let cfg = cfg_from(
+            "[train]\nprecision = \"mixed_f16\"\n",
+            "mpx_scaling_legacy_f16.toml",
+        )
+        .unwrap();
+        assert!(cfg.scaling.is_none());
+        let spec = cfg.scaling_spec().unwrap();
+        assert_eq!(spec.kind, PolicyKind::Dynamic);
+        assert_eq!(spec.base, ScalingConfig::default());
+        assert!(spec.matches_compiled(true));
+
+        let cfg = cfg_from(
+            "[train]\nprecision = \"fp32\"\n",
+            "mpx_scaling_legacy_fp32.toml",
+        )
+        .unwrap();
+        let spec = cfg.scaling_spec().unwrap();
+        assert_eq!(spec.kind, PolicyKind::Pinned);
+        assert_eq!(spec.base.init_scale, 1.0);
+        assert!(spec.matches_compiled(false));
     }
 
     #[test]

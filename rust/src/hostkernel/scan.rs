@@ -23,6 +23,40 @@
 
 use crate::numerics::TensorStats;
 
+/// RTNE f16 saturation boundary: an f32 with `|x| ≥ 65520` rounds to
+/// ±inf when cast to binary16 (65520 is exactly halfway between the
+/// f16 max 65504 and the would-be 65536; ties round away to inf).
+pub const F16_SATURATE: f32 = 65520.0;
+
+/// RTNE f16 flush boundary: a nonzero f32 with `|x| ≤ 2⁻²⁵` rounds to
+/// ±0 when cast to binary16 (2⁻²⁵ is exactly halfway between 0 and
+/// the min subnormal 2⁻²⁴; the tie rounds to the even 0).
+pub const F16_FLUSH: f32 = 2.9802322387695312e-8;
+
+/// Count how many elements of `xs` would flush to zero / saturate to
+/// ±inf if *scaled by `scale`* and cast to f16 — the per-group
+/// dynamic-range census the adaptive scaling policy consumes
+/// ([`crate::scaling::adaptive`]).  Returns `(underflow, overflow)`.
+///
+/// `scale` must be a positive power of two (the scaling policies only
+/// produce those), which makes `threshold / scale` exact, so the
+/// comparisons are bit-equivalent to casting `x·scale` elementwise.
+/// NaNs count toward neither side (the finiteness flag covers them);
+/// infs land in the overflow count.
+pub fn scaled_f16_census(xs: &[f32], scale: f32) -> (u64, u64) {
+    debug_assert!(scale > 0.0 && scale.log2().fract() == 0.0);
+    let flush = F16_FLUSH / scale;
+    let sat = F16_SATURATE / scale;
+    let mut under = 0u64;
+    let mut over = 0u64;
+    for &x in xs {
+        let a = f32::from_bits(x.to_bits() & 0x7FFF_FFFF);
+        under += (a > 0.0 && a <= flush) as u64;
+        over += (a >= sat) as u64;
+    }
+    (under, over)
+}
+
 /// Streaming accumulator matching [`crate::numerics::tensor_stats`]'s
 /// update rules exactly; feed slices in order, then [`finish`].
 ///
@@ -228,6 +262,52 @@ mod tests {
         let mut mutated = tensors.clone();
         let also = fused_unscale_stats_tensors(&mut mutated, 1.0);
         assert_stats_eq(&got, &also);
+    }
+
+    #[test]
+    fn census_matches_elementwise_cast() {
+        use crate::numerics::{FloatFormat, F16};
+        let mut rng = crate::util::rng::Rng::new(11);
+        for &scale in &[1.0f32, 8.0, 1024.0, 32768.0, 16_777_216.0] {
+            let xs: Vec<f32> = (0..4096)
+                .map(|_| {
+                    // span the whole dynamic range, signs included
+                    let mag = 10f32.powf(rng.next_f64() as f32 * 50.0 - 42.0);
+                    if rng.next_f64() < 0.5 { -mag } else { mag }
+                })
+                .collect();
+            let (under, over) = scaled_f16_census(&xs, scale);
+            let mut want_under = 0u64;
+            let mut want_over = 0u64;
+            for &x in &xs {
+                let y = F16::from_f32(x * scale).to_f32();
+                if x != 0.0 && x.is_finite() && y == 0.0 {
+                    want_under += 1;
+                }
+                if (x * scale).is_finite() && y.is_infinite() {
+                    want_over += 1;
+                }
+            }
+            assert_eq!((under, over), (want_under, want_over), "scale {scale}");
+        }
+    }
+
+    #[test]
+    fn census_boundaries_and_specials() {
+        // Exactly the RTNE tie points, at scale 1.
+        let xs = [
+            F16_FLUSH,            // ties to zero → underflow
+            F16_FLUSH * 1.0001,   // rounds to the min subnormal
+            F16_SATURATE,         // ties away to inf → overflow
+            65504.0,              // f16 max, survives
+            f32::INFINITY,        // overflow side
+            f32::NAN,             // neither
+            0.0,                  // zero is not an underflow
+        ];
+        assert_eq!(scaled_f16_census(&xs, 1.0), (1, 2));
+        // A scale of 2^4 pushes 65504/16 over and rescues nothing.
+        assert_eq!(scaled_f16_census(&[65504.0 / 16.0], 16.0), (0, 0));
+        assert_eq!(scaled_f16_census(&[65520.0 / 16.0], 16.0), (0, 1));
     }
 
     #[test]

@@ -22,17 +22,28 @@ use mpx::config::{
 use mpx::data::SyntheticDataset;
 use mpx::hlo::HloModule;
 use mpx::memmodel::{roofline, ActivationModel};
-use mpx::metrics::RunMetrics;
-use mpx::runtime::{ArtifactStore, BackendKind};
-use mpx::scaling::{LossScaler, OverflowInjector};
+use mpx::metrics::{train_prometheus, RunMetrics};
+use mpx::pytree::DType;
+use mpx::runtime::{
+    read_scalar_f32, read_scalar_i32, ArtifactStore, BackendKind,
+};
+use mpx::scaling::{
+    GroupState, LossScaler, OverflowInjector, PolicyKind, ScalingSpec,
+};
 use mpx::trainer::{checkpoint, DataParallelTrainer, FusedTrainer};
 use mpx::util::{human_bytes, human_duration, rng::Rng};
 
 const USAGE: &str = "usage: mpx <train|train-ddp|list-artifacts|inspect|memory-report|scaling-sim|serve> [flags]
   train          --model M --precision P --batch B --steps N [--seed S] [--config cfg.toml]
                  [--backend xla|host] [--checkpoint-every K --checkpoint-dir D]
-                 [--metrics-csv path] [--resume ckpt]
-  train-ddp      --model M --precision P --batch B(per shard) --shards N --steps N
+                 [--metrics-csv path] [--metrics-prom path] [--resume ckpt]
+                 [--scaling-policy dynamic|pinned|adaptive]  (preset override
+                           for the [train.scaling] table; the fused trainer
+                           accepts only its compiled-in policy)
+  train-ddp      same flags, plus --shards N (--batch is per shard); owns the
+                 scaling policy host-side, so `adaptive` keeps one scale per
+                 layer group and checkpoints carry the per-group scaler
+                 record (schema v2; v1 files still load)
   inspect        --artifact NAME
   memory-report  --model M [--batches 8,16,...] [--machine desktop|cluster]
   scaling-sim    [--steps N] [--overflow-prob p] [--period N]
@@ -121,6 +132,11 @@ fn train_config_from(args: &Args) -> Result<TrainConfig> {
     if let Some(e) = args.get_u64("log-every")? {
         cfg.log_every = e;
     }
+    if let Some(p) = args.get_str("scaling-policy") {
+        // Flag = preset override: replaces whatever the config's
+        // [train.scaling] table said.  Knob tuning stays in TOML.
+        cfg.scaling = Some(ScalingSpec::preset(PolicyKind::parse(p)?));
+    }
     model_preset(&cfg.model)?;
     Ok(cfg)
 }
@@ -128,6 +144,7 @@ fn train_config_from(args: &Args) -> Result<TrainConfig> {
 fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
     let cfg = train_config_from(args)?;
     let metrics_csv = args.get_str("metrics-csv").map(str::to_string);
+    let metrics_prom = args.get_str("metrics-prom").map(str::to_string);
     let resume = args.get_str("resume").map(str::to_string);
     args.finish()?;
 
@@ -151,9 +168,44 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
         cfg.backend,
     );
 
+    let ckpt_every = cfg.checkpoint_every;
+    let total = cfg.steps;
+    let ckpt_dir = || {
+        cfg.checkpoint_dir
+            .clone()
+            .unwrap_or_else(|| "checkpoints".into())
+    };
     if ddp {
         let mut trainer = DataParallelTrainer::new(&mut store, cfg.clone())?;
-        trainer.run(&dataset, cfg.steps, &mut metrics)?;
+        if let Some(path) = &resume {
+            trainer.resume(path)?;
+            eprintln!(
+                "[mpx] resumed from {path} at step {}",
+                trainer.step_index
+            );
+        }
+        if ckpt_every > 0 {
+            let dir = ckpt_dir();
+            let mut done = 0;
+            while done < total {
+                let chunk = ckpt_every.min(total - done);
+                trainer.run(&dataset, chunk, &mut metrics)?;
+                done += chunk;
+                let path = format!(
+                    "{dir}/{}_ddp_{}.ckpt",
+                    cfg.model, trainer.step_index
+                );
+                trainer.save_checkpoint(&path)?;
+                eprintln!("[mpx] checkpoint → {path}");
+            }
+        } else {
+            trainer.run(&dataset, total, &mut metrics)?;
+        }
+        write_metrics_prom(
+            &metrics_prom,
+            &metrics,
+            &trainer.scaling_rows(),
+        )?;
         persist_train_trace(&cfg.trace, trainer.tracer());
         summarize(&metrics);
     } else {
@@ -161,18 +213,15 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
         if let Some(path) = resume {
             let specs = trainer.manifest().inputs[..trainer.state().len()]
                 .to_vec();
-            let (step, leaves) = checkpoint::load(&path, &specs)?;
+            // The fused machine round-trips through its state leaves;
+            // the scaler record is the schema-v2 sidecar for tooling.
+            let (step, leaves, _scaler) = checkpoint::load(&path, &specs)?;
             trainer.set_state(leaves)?;
             trainer.step_index = step;
             eprintln!("[mpx] resumed from {path} at step {step}");
         }
-        let ckpt_every = cfg.checkpoint_every;
-        let total = cfg.steps;
         if ckpt_every > 0 {
-            let dir = cfg
-                .checkpoint_dir
-                .clone()
-                .unwrap_or_else(|| "checkpoints".into());
+            let dir = ckpt_dir();
             let mut done = 0;
             while done < total {
                 let chunk = ckpt_every.min(total - done);
@@ -190,16 +239,62 @@ fn cmd_train(args: &Args, ddp: bool) -> Result<()> {
                     trainer.step_index,
                     &specs,
                     trainer.state(),
+                    &fused_scaler_record(&trainer)?,
                 )?;
                 eprintln!("[mpx] checkpoint → {path}");
             }
         } else {
             trainer.run(&dataset, total, &mut metrics)?;
         }
+        let rows = vec![(
+            "global".to_string(),
+            trainer.loss_scale()?,
+            metrics.skipped_steps() as u64,
+        )];
+        write_metrics_prom(&metrics_prom, &metrics, &rows)?;
         persist_train_trace(&cfg.trace, trainer.tracer());
         summarize(&metrics);
     }
     Ok(())
+}
+
+/// `--metrics-prom PATH`: dump the run as a Prometheus textfile.
+fn write_metrics_prom(
+    path: &Option<String>,
+    metrics: &RunMetrics,
+    scaling: &[(String, f32, u64)],
+) -> Result<()> {
+    if let Some(path) = path {
+        std::fs::write(path, train_prometheus(metrics, scaling))
+            .with_context(|| format!("write metrics textfile {path}"))?;
+        eprintln!("[mpx] metrics → {path}");
+    }
+    Ok(())
+}
+
+/// The fused trainer's scaling machine as a schema-v2 scaler record.
+/// The state leaves already carry the machine bit-exactly through
+/// save/restore; the record additionally keeps fused checkpoints
+/// readable by the same v2 tooling that inspects DDP ones.
+fn fused_scaler_record(trainer: &FusedTrainer) -> Result<Vec<GroupState>> {
+    let m = trainer.manifest();
+    let range = m.input_group("scaling");
+    let mut scale = None;
+    let mut counter = 0u32;
+    for (i, spec) in m.inputs[range.clone()].iter().enumerate() {
+        let v = &trainer.state()[range.start + i];
+        match spec.dtype {
+            DType::F32 => scale = Some(read_scalar_f32(v)?),
+            DType::S32 => counter = read_scalar_i32(v)? as u32,
+            _ => {}
+        }
+    }
+    Ok(match scale {
+        Some(scale) => {
+            vec![GroupState { name: "global".into(), scale, counter }]
+        }
+        None => Vec::new(),
+    })
 }
 
 /// Export the trainer's step-phase spans when `[trace] trace_out` is

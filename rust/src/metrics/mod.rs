@@ -321,6 +321,78 @@ pub fn prom_escape(s: &str) -> String {
     out
 }
 
+/// Render a finished training run in the Prometheus text exposition
+/// format: run-wide counters plus the per-layer-group scaling series.
+/// `scaling` rows are `(group, scale, skipped)` — one per policy
+/// group, so the global policies export a single `group="global"`
+/// series while the adaptive policy gets one per derived layer group
+/// (`mpx_train_loss_scale{group="blocks[0]"} …`).  Group names pass
+/// through [`prom_escape`].  This backs `mpx train --metrics-prom`,
+/// which writes the result as a node-exporter-style textfile.
+pub fn train_prometheus(
+    metrics: &RunMetrics,
+    scaling: &[(String, f32, u64)],
+) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# HELP mpx_train_steps_total training steps taken"
+    );
+    let _ = writeln!(out, "# TYPE mpx_train_steps_total counter");
+    let _ =
+        writeln!(out, "mpx_train_steps_total {}", metrics.records.len());
+    let _ = writeln!(
+        out,
+        "# HELP mpx_train_steps_skipped_total steps skipped run-wide \
+         (gradient overflow)"
+    );
+    let _ = writeln!(out, "# TYPE mpx_train_steps_skipped_total counter");
+    let _ = writeln!(
+        out,
+        "mpx_train_steps_skipped_total {}",
+        metrics.skipped_steps()
+    );
+    if let Some(loss) = metrics.recent_loss(10) {
+        let _ = writeln!(
+            out,
+            "# HELP mpx_train_loss mean loss over the last 10 steps"
+        );
+        let _ = writeln!(out, "# TYPE mpx_train_loss gauge");
+        let _ = writeln!(out, "mpx_train_loss {loss}");
+    }
+    if !scaling.is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP mpx_train_loss_scale current loss scale per layer \
+             group"
+        );
+        let _ = writeln!(out, "# TYPE mpx_train_loss_scale gauge");
+        for (group, scale, _) in scaling {
+            let _ = writeln!(
+                out,
+                "mpx_train_loss_scale{{group=\"{}\"}} {scale}",
+                prom_escape(group)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP mpx_train_skipped_steps_total optimizer steps \
+             skipped per layer group (overflow backoff)"
+        );
+        let _ =
+            writeln!(out, "# TYPE mpx_train_skipped_steps_total counter");
+        for (group, _, skipped) in scaling {
+            let _ = writeln!(
+                out,
+                "mpx_train_skipped_steps_total{{group=\"{}\"}} {skipped}",
+                prom_escape(group)
+            );
+        }
+    }
+    out
+}
+
 /// Exponential moving average (smoothing for console logs).
 #[derive(Debug, Clone)]
 pub struct Ema {
@@ -680,6 +752,56 @@ mod tests {
         assert!(h.summary().is_none());
         assert!(h.mean().is_none());
         assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn train_prometheus_exports_per_group_series() {
+        let mut m = RunMetrics::new();
+        m.record(rec(1, 2.0, 1)).unwrap();
+        m.record(StepRecord { grads_finite: false, ..rec(2, 2.0, 1) })
+            .unwrap();
+        let rows = vec![
+            ("blocks[0]".to_string(), 32768.0f32, 3u64),
+            ("pos_embed".to_string(), 65536.0, 0),
+        ];
+        let text = train_prometheus(&m, &rows);
+        assert!(text.contains("mpx_train_steps_total 2"), "{text}");
+        assert!(text.contains("mpx_train_steps_skipped_total 1"), "{text}");
+        assert!(
+            text.contains(
+                "mpx_train_loss_scale{group=\"blocks[0]\"} 32768"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "mpx_train_loss_scale{group=\"pos_embed\"} 65536"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "mpx_train_skipped_steps_total{group=\"blocks[0]\"} 3"
+            ),
+            "{text}"
+        );
+        // One HELP/TYPE header per family, not per series.
+        assert_eq!(
+            text.matches("# TYPE mpx_train_loss_scale gauge").count(),
+            1,
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn train_prometheus_escapes_group_labels() {
+        let m = RunMetrics::new();
+        let rows = vec![("odd\"group\\x".to_string(), 1.0f32, 0u64)];
+        let text = train_prometheus(&m, &rows);
+        assert!(
+            text.contains("group=\"odd\\\"group\\\\x\""),
+            "unescaped label in: {text}"
+        );
     }
 
     #[test]

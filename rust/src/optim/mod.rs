@@ -52,6 +52,34 @@ impl AdamW {
         self.step
     }
 
+    /// The persistent state — `(step, first moments, second moments)`
+    /// — for checkpointing.  Together with the master weights this is
+    /// everything a resumed run needs to continue bit-identically.
+    pub fn state(&self) -> (u64, &[Vec<f32>], &[Vec<f32>]) {
+        (self.step, &self.mu, &self.nu)
+    }
+
+    /// Restore a checkpointed state; shapes must match the sizes the
+    /// optimizer was constructed with.
+    pub fn set_state(
+        &mut self,
+        step: u64,
+        mu: Vec<Vec<f32>>,
+        nu: Vec<Vec<f32>>,
+    ) {
+        assert_eq!(mu.len(), self.mu.len(), "moment arity");
+        assert_eq!(nu.len(), self.nu.len(), "moment arity");
+        for (new, old) in mu.iter().zip(&self.mu) {
+            assert_eq!(new.len(), old.len(), "moment shape");
+        }
+        for (new, old) in nu.iter().zip(&self.nu) {
+            assert_eq!(new.len(), old.len(), "moment shape");
+        }
+        self.step = step;
+        self.mu = mu;
+        self.nu = nu;
+    }
+
     /// One update: `params[i] -= lr · (m̂/(√v̂+ε) + wd·p)`.
     ///
     /// Skipping a step (non-finite grads) simply means *not calling*

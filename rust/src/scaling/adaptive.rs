@@ -1,0 +1,444 @@
+//! Adaptive per-layer loss scaling (Zhao et al., *Adaptive Loss
+//! Scaling for Mixed Precision Training*, 1910.12385).
+//!
+//! One dynamic-scaling state machine per pytree-leaf group instead of
+//! one global scale.  Each group's scale moves from *its own*
+//! statistics:
+//!
+//! * **Backoff** — the group saw an overflow (an element that would
+//!   saturate f16 at the group's scale, or a non-finite gradient):
+//!   `S_g ← max(S_g/factor, min)`, counter reset.  The group also
+//!   books a skip, because overflow anywhere still skips the global
+//!   optimizer step (finiteness gates the update for every policy).
+//! * **Growth** — after `period` consecutive clean steps, `S_g`
+//!   grows — but only if the *headroom gate* allows:
+//!   `S_g·factor·max|g|_seen ≤ headroom·F16_SATURATE`.  The running
+//!   `max|g|` is the largest finite gradient magnitude the group has
+//!   ever produced, so a group that once spiked to `m` will never be
+//!   re-grown into a scale where `m` overflows again — this is what
+//!   lets adaptive stop paying for a recurring spike after a single
+//!   backoff run, while global dynamic re-grows into it every
+//!   `period` steps.
+//! * **Underflow pressure** — while the group's underflow fraction
+//!   (elements flushing to ±0 in f16 at the current scale) exceeds
+//!   `underflow_target`, the effective growth period shrinks to
+//!   `max(1, period/4)`: a group losing gradient mass to flush
+//!   recovers its scale quickly instead of waiting the full global
+//!   period.
+//!
+//! Everything is integer counts, f32 pow2 arithmetic, and
+//! shard-order-deterministic folds — the trajectory is a pure
+//! function of the gradient trace, asserted by replay tests in
+//! `scaling_parity.rs`.
+
+use super::{GroupState, GroupStats, PolicyKind, ScalingConfig, ScalingPolicy};
+use crate::hostkernel::scan::F16_SATURATE;
+
+/// Adaptive-only knobs, layered on top of the shared
+/// [`ScalingConfig`] base.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveTuning {
+    /// Growth is blocked unless the grown scale keeps the group's
+    /// largest-ever |g| below this fraction of the f16 saturation
+    /// boundary.  In (0, 1]; 1 disables the safety margin.
+    pub headroom: f32,
+    /// Underflow fraction above which a group grows on the fast
+    /// period (`max(1, period/4)`).  In [0, 1).
+    pub underflow_target: f64,
+}
+
+impl Default for AdaptiveTuning {
+    fn default() -> Self {
+        AdaptiveTuning { headroom: 0.5, underflow_target: 1e-3 }
+    }
+}
+
+/// Per-group dynamic loss scaling behind the [`ScalingPolicy`] trait.
+pub struct AdaptivePolicy {
+    base: ScalingConfig,
+    tuning: AdaptiveTuning,
+    names: Vec<String>,
+    scales: Vec<f32>,
+    counters: Vec<u32>,
+    /// Largest finite |g| each group has ever produced (the headroom
+    /// gate's memory).
+    seen_max: Vec<f32>,
+    skips: Vec<u64>,
+    steps: u64,
+    overflows: u64,
+    growths: u64,
+}
+
+impl AdaptivePolicy {
+    pub fn new(
+        base: ScalingConfig,
+        tuning: AdaptiveTuning,
+        names: Vec<String>,
+    ) -> AdaptivePolicy {
+        assert!(!names.is_empty(), "adaptive policy needs ≥ 1 group");
+        let n = names.len();
+        AdaptivePolicy {
+            scales: vec![base.init_scale; n],
+            counters: vec![0; n],
+            seen_max: vec![0.0; n],
+            skips: vec![0; n],
+            base,
+            tuning,
+            names,
+            steps: 0,
+            overflows: 0,
+            growths: 0,
+        }
+    }
+
+    /// Restore from a checkpointed record.  A single-group record is
+    /// the v1 migration: the global scale fans out to every group.  A
+    /// full record must match the derived group names exactly.
+    pub fn restore(
+        base: ScalingConfig,
+        tuning: AdaptiveTuning,
+        names: Vec<String>,
+        saved: &[GroupState],
+    ) -> anyhow::Result<AdaptivePolicy> {
+        let mut p = AdaptivePolicy::new(base, tuning, names);
+        if saved.len() == 1 && p.names.len() != 1 {
+            // v1 fan-out: one global (scale, counter) seeds them all.
+            for g in 0..p.names.len() {
+                p.scales[g] = saved[0].scale;
+                p.counters[g] = saved[0].counter;
+            }
+            return Ok(p);
+        }
+        if saved.len() != p.names.len() {
+            anyhow::bail!(
+                "scaler record has {} group(s) but the model derives {}",
+                saved.len(),
+                p.names.len()
+            );
+        }
+        for (g, s) in saved.iter().enumerate() {
+            if s.name != p.names[g] {
+                anyhow::bail!(
+                    "scaler record group {} is {:?}, model derives {:?} — \
+                     checkpoint belongs to a different model layout",
+                    g,
+                    s.name,
+                    p.names[g]
+                );
+            }
+            p.scales[g] = s.scale;
+            p.counters[g] = s.counter;
+        }
+        Ok(p)
+    }
+
+    fn clamp(&self, g: usize) -> usize {
+        g.min(self.names.len() - 1)
+    }
+}
+
+impl ScalingPolicy for AdaptivePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Adaptive
+    }
+
+    fn graph_scale(&self) -> f32 {
+        // The artifact takes one scalar scale; the most overflow-prone
+        // group dictates it.  Per-group resolution happens host-side
+        // by re-scaling each group's gradients from this common base.
+        self.scales.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    fn groups(&self) -> &[String] {
+        &self.names
+    }
+
+    fn scale_of(&self, g: usize) -> f32 {
+        self.scales[self.clamp(g)]
+    }
+
+    fn counter_of(&self, g: usize) -> u32 {
+        self.counters[self.clamp(g)]
+    }
+
+    fn skips_of(&self, g: usize) -> u64 {
+        self.skips[self.clamp(g)]
+    }
+
+    fn adjust(&mut self, grads_finite: bool, groups: &[GroupStats]) -> bool {
+        assert_eq!(
+            groups.len(),
+            self.names.len(),
+            "stats/group arity mismatch"
+        );
+        self.steps += 1;
+        let mut any_overflow = false;
+        for (g, st) in groups.iter().enumerate() {
+            // Fold this step's largest finite |g| into the headroom
+            // gate's memory (infs are excluded by construction: the
+            // census reports max_abs over finite elements only).
+            if st.max_abs.is_finite() && st.max_abs > self.seen_max[g] {
+                self.seen_max[g] = st.max_abs;
+            }
+            let overflowed = st.overflow > 0 || !st.finite;
+            if overflowed {
+                any_overflow = true;
+                self.scales[g] =
+                    (self.scales[g] / self.base.factor).max(self.base.min_scale);
+                self.counters[g] = 0;
+                self.skips[g] += 1;
+                continue;
+            }
+            // Clean step: grow on the (possibly shortened) period.
+            let under_frac = if st.count > 0 {
+                st.underflow as f64 / st.count as f64
+            } else {
+                0.0
+            };
+            let period = if under_frac > self.tuning.underflow_target {
+                (self.base.period / 4).max(1)
+            } else {
+                self.base.period
+            };
+            if self.counters[g] >= period.saturating_sub(1) {
+                let grown =
+                    (self.scales[g] * self.base.factor).min(self.base.max_scale);
+                let safe = grown as f64 * self.seen_max[g] as f64
+                    <= self.tuning.headroom as f64 * F16_SATURATE as f64;
+                if safe && grown > self.scales[g] {
+                    self.scales[g] = grown;
+                    self.counters[g] = 0;
+                    self.growths += 1;
+                }
+                // Blocked growth (or at the cap) holds the counter at
+                // the boundary — the gate is re-checked every step.
+            } else {
+                self.counters[g] += 1;
+            }
+        }
+        if any_overflow {
+            self.overflows += 1;
+        }
+        // Global-AND finiteness gates the optimizer step, exactly as
+        // for the global policies: one poisoned group skips the step.
+        grads_finite && !any_overflow
+    }
+
+    fn snapshot(&self) -> Vec<GroupState> {
+        self.names
+            .iter()
+            .zip(&self.scales)
+            .zip(&self.counters)
+            .map(|((name, &scale), &counter)| GroupState {
+                name: name.clone(),
+                scale,
+                counter,
+            })
+            .collect()
+    }
+
+    fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn overflows(&self) -> u64 {
+        self.overflows
+    }
+
+    fn growths(&self) -> u64 {
+        self.growths
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::spike_overflows;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("blocks[{i}]")).collect()
+    }
+
+    fn clean(count: u64, max_abs: f32) -> GroupStats {
+        GroupStats { count, max_abs, underflow: 0, overflow: 0, finite: true }
+    }
+
+    fn cfg(init: f32, period: u32) -> ScalingConfig {
+        ScalingConfig { init_scale: init, period, ..Default::default() }
+    }
+
+    #[test]
+    fn per_group_backoff_leaves_others_untouched() {
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 4), AdaptiveTuning::default(), names(3));
+        let stats = vec![
+            clean(10, 0.1),
+            GroupStats { count: 10, max_abs: 0.1, underflow: 0, overflow: 2, finite: true },
+            clean(10, 0.1),
+        ];
+        assert!(!p.adjust(true, &stats)); // overflow anywhere skips
+        assert_eq!(p.scale_of(0), 1024.0);
+        assert_eq!(p.scale_of(1), 512.0);
+        assert_eq!(p.scale_of(2), 1024.0);
+        assert_eq!(p.skips_of(1), 1);
+        assert_eq!(p.skips_of(0), 0);
+    }
+
+    #[test]
+    fn growth_after_period_per_group() {
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 3), AdaptiveTuning::default(), names(2));
+        let stats = vec![clean(10, 0.1), clean(10, 0.1)];
+        for _ in 0..3 {
+            assert!(p.adjust(true, &stats));
+        }
+        assert_eq!(p.scale_of(0), 2048.0);
+        assert_eq!(p.scale_of(1), 2048.0);
+        assert_eq!(p.growths(), 2);
+    }
+
+    #[test]
+    fn headroom_gate_blocks_regrowth_after_spike() {
+        // A group that once produced |g| = 64 must never be re-grown
+        // into a scale where 64 overflows: 512·2·64 = 65536 >
+        // 0.5·65520.
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 2), AdaptiveTuning::default(), names(2));
+        let spike = GroupStats {
+            count: 10,
+            max_abs: 64.0,
+            underflow: 0,
+            overflow: 1,
+            finite: true,
+        };
+        assert!(!p.adjust(true, &[spike, clean(10, 1e-3)]));
+        assert_eq!(p.scale_of(0), 512.0);
+        // Many clean steps: group 1 (tiny gradients — the gate never
+        // binds below the cap) grows to the cap, group 0 stays pinned
+        // at 512 by the headroom gate's memory of the 64.0 spike.
+        let stats = vec![clean(10, 0.5), clean(10, 1e-3)];
+        for _ in 0..100 {
+            assert!(p.adjust(true, &stats));
+        }
+        assert_eq!(p.scale_of(0), 512.0);
+        assert_eq!(p.scale_of(1), 16_777_216.0);
+        // And 64 indeed no longer overflows at 512 while it does at
+        // 1024 — the gate is doing real work.
+        assert!(!spike_overflows(64.0, 512.0));
+        assert!(spike_overflows(64.0, 1024.0));
+    }
+
+    #[test]
+    fn underflow_pressure_shortens_the_period() {
+        let mut p =
+            AdaptivePolicy::new(cfg(2.0, 8), AdaptiveTuning::default(), names(1));
+        // 10% of elements flushing ⇒ fast period = 8/4 = 2.
+        let pressured = GroupStats {
+            count: 100,
+            max_abs: 1e-6,
+            underflow: 10,
+            overflow: 0,
+            finite: true,
+        };
+        assert!(p.adjust(true, &[pressured]));
+        assert!(p.adjust(true, &[pressured]));
+        assert_eq!(p.scale_of(0), 4.0, "grew after 2 steps, not 8");
+        // Without pressure the same schedule would still be counting.
+        let mut q =
+            AdaptivePolicy::new(cfg(2.0, 8), AdaptiveTuning::default(), names(1));
+        assert!(q.adjust(true, &[clean(100, 1e-6)]));
+        assert!(q.adjust(true, &[clean(100, 1e-6)]));
+        assert_eq!(q.scale_of(0), 2.0);
+    }
+
+    #[test]
+    fn graph_scale_is_min_group_scale() {
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 4), AdaptiveTuning::default(), names(2));
+        assert_eq!(p.graph_scale(), 1024.0);
+        let stats = vec![
+            GroupStats { count: 1, max_abs: 0.1, underflow: 0, overflow: 1, finite: true },
+            clean(1, 0.1),
+        ];
+        p.adjust(true, &stats);
+        assert_eq!(p.graph_scale(), 512.0);
+    }
+
+    #[test]
+    fn nonfinite_group_backs_off_and_skips() {
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 4), AdaptiveTuning::default(), names(1));
+        let poisoned = GroupStats {
+            count: 10,
+            max_abs: 0.1,
+            underflow: 0,
+            overflow: 0,
+            finite: false,
+        };
+        assert!(!p.adjust(false, &[poisoned]));
+        assert_eq!(p.scale_of(0), 512.0);
+        assert_eq!(p.skips_of(0), 1);
+        assert_eq!(p.overflows(), 1);
+    }
+
+    #[test]
+    fn snapshot_round_trips_exactly() {
+        let mut p =
+            AdaptivePolicy::new(cfg(1024.0, 3), AdaptiveTuning::default(), names(3));
+        let stats = vec![
+            clean(10, 0.5),
+            GroupStats { count: 10, max_abs: 2.0, underflow: 0, overflow: 1, finite: true },
+            clean(10, 0.1),
+        ];
+        p.adjust(true, &stats);
+        p.adjust(true, &[clean(10, 0.5), clean(10, 2.0), clean(10, 0.1)]);
+        let snap = p.snapshot();
+        let q = AdaptivePolicy::restore(
+            cfg(1024.0, 3),
+            AdaptiveTuning::default(),
+            names(3),
+            &snap,
+        )
+        .unwrap();
+        for g in 0..3 {
+            assert_eq!(q.scale_of(g), p.scale_of(g));
+            assert_eq!(q.counter_of(g), p.counter_of(g));
+        }
+    }
+
+    #[test]
+    fn v1_single_group_record_fans_out() {
+        let saved = vec![GroupState {
+            name: "global".to_string(),
+            scale: 256.0,
+            counter: 7,
+        }];
+        let p = AdaptivePolicy::restore(
+            cfg(1024.0, 3),
+            AdaptiveTuning::default(),
+            names(4),
+            &saved,
+        )
+        .unwrap();
+        for g in 0..4 {
+            assert_eq!(p.scale_of(g), 256.0);
+            assert_eq!(p.counter_of(g), 7);
+        }
+    }
+
+    #[test]
+    fn mismatched_record_is_rejected() {
+        let saved = vec![
+            GroupState { name: "a".into(), scale: 1.0, counter: 0 },
+            GroupState { name: "b".into(), scale: 1.0, counter: 0 },
+        ];
+        let err = AdaptivePolicy::restore(
+            cfg(1024.0, 3),
+            AdaptiveTuning::default(),
+            names(2),
+            &saved,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("different model layout"), "{err}");
+    }
+}

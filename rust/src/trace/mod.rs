@@ -126,9 +126,12 @@ pub enum SpanKind {
     UnscaleScan,
     /// Trainer phase: optimizer update. `a`=step index.
     Optim,
-    /// Instant: the loss scale moved.  `a`=old scale (f32 bits),
-    /// `b`=new scale (f32 bits), `c`=reason (0 overflow backoff,
-    /// 1 periodic growth).
+    /// Instant: a loss scale moved.  `a`=old scale (f32 bits),
+    /// `b`=new scale (f32 bits), `c`=`grew | (group_idx << 1)` —
+    /// bit 0 is the reason (0 overflow backoff, 1 periodic growth),
+    /// the rest is the scaling-policy group index (0 for the global
+    /// policies, so their emitted values are unchanged; the adaptive
+    /// policy emits one instant per layer group whose scale moved).
     LossScale,
 }
 
@@ -171,7 +174,7 @@ impl SpanKind {
             | SpanKind::Backward
             | SpanKind::UnscaleScan
             | SpanKind::Optim => ["step", "_", "_"],
-            SpanKind::LossScale => ["old_bits", "new_bits", "grew"],
+            SpanKind::LossScale => ["old_bits", "new_bits", "grew_group"],
         }
     }
 

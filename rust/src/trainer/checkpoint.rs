@@ -1,21 +1,36 @@
 //! Checkpointing — own binary format (no serde offline).
 //!
-//! Layout (little-endian):
+//! Schema v2 layout (little-endian):
 //!
 //! ```text
-//! magic "MPXCKPT1" | u64 step | u32 leaf_count
+//! magic "MPXCKPT2" | u64 step
+//! u32 group_count
+//! per group: u32 name_len | name utf8 | u32 scale_bits (f32) |
+//!            u32 counter
+//! u32 leaf_count
 //! per leaf: u32 name_len | name utf8 | u8 dtype | u32 rank |
 //!           u64 dims[rank] | u64 byte_len | bytes
 //! ```
 //!
-//! Leaves are the fused trainer's state [`Value`]s in manifest order.
-//! Save and restore are symmetric across every manifest dtype —
-//! `Value` already stores native-layout bytes, so serialization is a
-//! straight copy and mixed-precision state round-trips bitwise on
-//! either runtime backend.
-//! Restore validates name, dtype and shape against the target
-//! manifest so stale checkpoints fail loudly instead of silently
-//! reshaping.
+//! v2 adds the versioned **scaler record**: per-group `(name, scale,
+//! counter)` so the adaptive policy's per-layer scales survive a
+//! restart ([`crate::scaling::GroupState`]).  Global policies write a
+//! single `"global"` group.
+//!
+//! v1 (`MPXCKPT1`) had no scaler section — [`load`] still accepts it
+//! and *migrates*: if the leaf set carries the fused trainer's
+//! `scaling.loss_scaling` / `scaling.counter` scalars, they become a
+//! single-group record (which [`crate::scaling::restore_policy`] fans
+//! out to every group when resuming an adaptive run); otherwise the
+//! record is empty and the policy starts fresh.
+//!
+//! Leaves are the trainer's state [`Value`]s in manifest order.  Save
+//! and restore are symmetric across every manifest dtype — `Value`
+//! already stores native-layout bytes, so serialization is a straight
+//! copy and mixed-precision state round-trips bitwise on either
+//! runtime backend.  Restore validates name, dtype and shape against
+//! the target manifest so stale checkpoints fail loudly instead of
+//! silently reshaping.
 
 use std::io::{Read, Write};
 
@@ -23,9 +38,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::hostkernel::BufferPool;
 use crate::pytree::{DType, LeafSpec};
-use crate::runtime::{lit_from_bytes, literal_bytes_into, Value};
+use crate::runtime::{
+    lit_from_bytes, literal_bytes_into, read_scalar_f32, read_scalar_i32,
+    Value,
+};
+use crate::scaling::GroupState;
 
-const MAGIC: &[u8; 8] = b"MPXCKPT1";
+const MAGIC_V1: &[u8; 8] = b"MPXCKPT1";
+const MAGIC_V2: &[u8; 8] = b"MPXCKPT2";
 
 fn dtype_code(d: DType) -> u8 {
     match d {
@@ -54,12 +74,14 @@ fn dtype_from_code(c: u8) -> Result<DType> {
     })
 }
 
-/// Save state leaves to `path`.
+/// Save state leaves plus the per-group scaler record to `path`
+/// (schema v2, atomic tmp+rename).
 pub fn save(
     path: &str,
     step: u64,
     specs: &[LeafSpec],
     leaves: &[Value],
+    scaler: &[GroupState],
 ) -> Result<()> {
     if specs.len() != leaves.len() {
         bail!("save: {} specs vs {} leaves", specs.len(), leaves.len());
@@ -75,8 +97,16 @@ pub fn save(
             std::fs::File::create(&tmp)
                 .with_context(|| format!("create {tmp}"))?,
         );
-        f.write_all(MAGIC)?;
+        f.write_all(MAGIC_V2)?;
         f.write_all(&step.to_le_bytes())?;
+        f.write_all(&(scaler.len() as u32).to_le_bytes())?;
+        for g in scaler {
+            let name = g.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&g.scale.to_bits().to_le_bytes())?;
+            f.write_all(&g.counter.to_le_bytes())?;
+        }
         f.write_all(&(specs.len() as u32).to_le_bytes())?;
         // One pooled staging buffer cycles through every leaf, so the
         // periodic checkpoint stops allocating per leaf per save.
@@ -102,17 +132,44 @@ pub fn save(
     Ok(())
 }
 
-/// Restore: returns `(step, leaves)` validated against `specs`.
-pub fn load(path: &str, specs: &[LeafSpec]) -> Result<(u64, Vec<Value>)> {
+/// Restore: returns `(step, leaves, scaler record)` validated against
+/// `specs`.  Accepts both schema versions; a v1 file yields a
+/// migrated record (see the module docs).
+pub fn load(
+    path: &str,
+    specs: &[LeafSpec],
+) -> Result<(u64, Vec<Value>, Vec<GroupState>)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {path}"))?,
     );
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let v2 = &magic == MAGIC_V2;
+    if !v2 && &magic != MAGIC_V1 {
         bail!("{path}: not an MPX checkpoint");
     }
     let step = read_u64(&mut f)?;
+
+    let mut scaler = Vec::new();
+    if v2 {
+        let groups = read_u32(&mut f)? as usize;
+        if groups > 65_536 {
+            bail!("{path}: implausible scaler group count {groups}");
+        }
+        for _ in 0..groups {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("{path}: implausible group name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("group name utf8")?;
+            let scale = f32::from_bits(read_u32(&mut f)?);
+            let counter = read_u32(&mut f)?;
+            scaler.push(GroupState { name, scale, counter });
+        }
+    }
+
     let count = read_u32(&mut f)? as usize;
     if count != specs.len() {
         bail!("{path}: {count} leaves, expected {}", specs.len());
@@ -152,7 +209,34 @@ pub fn load(path: &str, specs: &[LeafSpec]) -> Result<(u64, Vec<Value>)> {
         f.read_exact(&mut bytes)?;
         leaves.push(lit_from_bytes(spec, &bytes)?);
     }
-    Ok((step, leaves))
+
+    if !v2 {
+        scaler = migrate_v1_scaler(specs, &leaves)?;
+    }
+    Ok((step, leaves, scaler))
+}
+
+/// The v1 → v2 migration: synthesize a single-group record from the
+/// fused trainer's in-graph scaler state if the leaf set carries it.
+fn migrate_v1_scaler(
+    specs: &[LeafSpec],
+    leaves: &[Value],
+) -> Result<Vec<GroupState>> {
+    let find = |name: &str| {
+        specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| &leaves[i])
+    };
+    let (Some(scale), Some(counter)) =
+        (find("scaling.loss_scaling"), find("scaling.counter"))
+    else {
+        return Ok(Vec::new());
+    };
+    let scale = read_scalar_f32(scale).context("v1 scaling.loss_scaling")?;
+    let counter =
+        read_scalar_i32(counter).context("v1 scaling.counter")? as u32;
+    Ok(vec![GroupState { name: "global".to_string(), scale, counter }])
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -165,4 +249,146 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{lit_f32, lit_scalar_f32, lit_scalar_i32, read_f32};
+
+    fn specs() -> Vec<LeafSpec> {
+        vec![
+            LeafSpec {
+                name: "params.w".to_string(),
+                dtype: DType::F32,
+                shape: vec![2, 2],
+                group: "params".to_string(),
+                trainable: true,
+            },
+            LeafSpec {
+                name: "scaling.loss_scaling".to_string(),
+                dtype: DType::F32,
+                shape: vec![],
+                group: "scaling".to_string(),
+                trainable: false,
+            },
+            LeafSpec {
+                name: "scaling.counter".to_string(),
+                dtype: DType::S32,
+                shape: vec![],
+                group: "scaling".to_string(),
+                trainable: false,
+            },
+        ]
+    }
+
+    fn leaves() -> Vec<Value> {
+        vec![
+            lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+            lit_scalar_f32(8192.0),
+            lit_scalar_i32(41),
+        ]
+    }
+
+    /// Hand-written v1 writer — the old on-disk format, byte for
+    /// byte, so the migration path is tested against the real thing
+    /// rather than against `save`.
+    fn write_v1(path: &str, step: u64, specs: &[LeafSpec], leaves: &[Value]) {
+        let mut out: Vec<u8> = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
+        out.extend_from_slice(&step.to_le_bytes());
+        out.extend_from_slice(&(specs.len() as u32).to_le_bytes());
+        for (spec, lit) in specs.iter().zip(leaves) {
+            let name = spec.name.as_bytes();
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name);
+            out.push(dtype_code(spec.dtype));
+            out.extend_from_slice(&(spec.shape.len() as u32).to_le_bytes());
+            for &d in &spec.shape {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            let mut bytes = Vec::new();
+            literal_bytes_into(lit, &mut bytes).unwrap();
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(&bytes);
+        }
+        std::fs::write(path, out).unwrap();
+    }
+
+    fn tmp_path(name: &str) -> String {
+        let dir = std::env::temp_dir().join("mpx_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn v2_round_trips_scaler_record_and_leaves() {
+        let path = tmp_path("v2_roundtrip.ckpt");
+        let record = vec![
+            GroupState { name: "blocks[0]".into(), scale: 512.0, counter: 3 },
+            GroupState { name: "head".into(), scale: 32768.0, counter: 0 },
+        ];
+        save(&path, 17, &specs(), &leaves(), &record).unwrap();
+        let (step, loaded, scaler) = load(&path, &specs()).unwrap();
+        assert_eq!(step, 17);
+        assert_eq!(scaler, record);
+        assert_eq!(read_f32(&loaded[0]).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(read_scalar_f32(&loaded[1]).unwrap(), 8192.0);
+        assert_eq!(read_scalar_i32(&loaded[2]).unwrap(), 41);
+    }
+
+    #[test]
+    fn v2_empty_scaler_record_is_fine() {
+        let path = tmp_path("v2_empty_record.ckpt");
+        save(&path, 5, &specs(), &leaves(), &[]).unwrap();
+        let (step, _, scaler) = load(&path, &specs()).unwrap();
+        assert_eq!(step, 5);
+        assert!(scaler.is_empty());
+    }
+
+    #[test]
+    fn v1_checkpoint_migrates_scaling_leaves_to_a_global_record() {
+        let path = tmp_path("v1_migrate.ckpt");
+        write_v1(&path, 9, &specs(), &leaves());
+        let (step, loaded, scaler) = load(&path, &specs()).unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(
+            scaler,
+            vec![GroupState {
+                name: "global".to_string(),
+                scale: 8192.0,
+                counter: 41,
+            }]
+        );
+    }
+
+    #[test]
+    fn v1_without_scaling_leaves_yields_empty_record() {
+        let path = tmp_path("v1_no_scaling.ckpt");
+        let specs = vec![specs()[0].clone()];
+        let leaves = vec![leaves()[0].clone()];
+        write_v1(&path, 2, &specs, &leaves);
+        let (step, _, scaler) = load(&path, &specs).unwrap();
+        assert_eq!(step, 2);
+        assert!(scaler.is_empty());
+    }
+
+    #[test]
+    fn stale_manifest_fails_loudly() {
+        let path = tmp_path("stale.ckpt");
+        save(&path, 1, &specs(), &leaves(), &[]).unwrap();
+        let mut wrong = specs();
+        wrong[0].shape = vec![4];
+        let err = load(&path, &wrong).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn garbage_magic_is_rejected() {
+        let path = tmp_path("garbage.ckpt");
+        std::fs::write(&path, b"NOTMPX00rest").unwrap();
+        let err = load(&path, &specs()).unwrap_err().to_string();
+        assert!(err.contains("not an MPX checkpoint"), "{err}");
+    }
 }

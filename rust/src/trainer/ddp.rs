@@ -5,8 +5,12 @@
 //! ```text
 //!   masters (f32, host) ──► per-shard param literals (replicated)
 //!   shard s: grads_exe(params, scale, batch_s) ─► (grads_s, loss_s, finite_s)
-//!   all_reduce_mean(grads) ── AND(finite) ── LossScaler.adjust
-//!   finite ⇒ AdamW.update(masters, ḡ)       (else skip, paper §2.1 6a)
+//!            + per-group census (underflow/overflow/max|g|) at each
+//!              group's scale, via the fused hostkernel scan
+//!   all_reduce_group_stats ── AND(finite) ── ScalingPolicy.adjust
+//!   applied ⇒ [adaptive: per-group scale → ] all_reduce_mean
+//!             [ → unscale] → AdamW.update(masters, ḡ)
+//!   (else skip, paper §2.1 6a)
 //! ```
 //!
 //! Shards run on OS threads over the one shared compiled executable
@@ -15,26 +19,40 @@
 //! per-call state on the stack).
 //! The all-reduce is a deterministic tree ([`crate::collective`]), the
 //! optimizer is Rust AdamW over fp32 masters ([`crate::optim`]), and
-//! the scale adjustment is the Rust [`LossScaler`] — together the
-//! exact decomposition a real multi-accelerator MPX deployment uses.
+//! scale control is a [`ScalingPolicy`] — the trainer owns it
+//! host-side, so per-layer policies ([`crate::scaling::adaptive`])
+//! work even though the compiled graph takes a single scalar scale:
+//! every shard's per-group statistics are merged by the deterministic
+//! stats all-reduce, so every rank computes identical per-group
+//! scales.  Under the adaptive policy the gradient comms are staged at
+//! each group's scale (power-of-two multiplies through the
+//! [`crate::hostkernel::reduce`] batch kernels — exact, no per-element
+//! scalar path), emulating per-layer-scaled f16 transport.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collective::{all_reduce_finite, all_reduce_mean, mean_loss};
+use crate::collective::{
+    all_reduce_finite, all_reduce_group_stats, all_reduce_mean, mean_loss,
+};
 use crate::config::TrainConfig;
 use crate::data::SyntheticDataset;
-use crate::hostkernel::scan::stats_tensors;
+use crate::hostkernel::reduce::scale_in_place;
+use crate::hostkernel::scan::{scaled_f16_census, stats_tensors, StatsAcc};
 use crate::metrics::{RunMetrics, StepRecord};
 use crate::optim::{AdamW, AdamWConfig};
-use crate::pytree::DType;
+use crate::pytree::{DType, LeafSpec};
 use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, read_f32,
-    read_scalar_f32, read_scalar_pred, Artifact, ArtifactStore,
+    read_scalar_f32, read_scalar_i32, read_scalar_pred, Artifact,
+    ArtifactStore, Value,
 };
-use crate::scaling::LossScaler;
+use crate::scaling::{
+    build_policy, derive_groups, restore_policy, spike_overflows, GroupStats,
+    OverflowInjector, PolicyKind, ScalingPolicy, ScalingSpec,
+};
 use crate::serve::clock::{Clock, WallClock};
 use crate::trace::{SpanKind, Tracer};
 
@@ -44,7 +62,15 @@ pub struct DataParallelTrainer {
     pub masters: Vec<Vec<f32>>,
     master_shapes: Vec<Vec<usize>>,
     optimizer: AdamW,
-    pub scaler: LossScaler,
+    /// The scaling controller (dynamic / pinned / adaptive).
+    pub policy: Box<dyn ScalingPolicy>,
+    spec: ScalingSpec,
+    /// Per-layer leaf groups derived from the grads manifest
+    /// (first-appearance order — identical on every rank).
+    groups: Vec<String>,
+    /// grads output leaf index → group index.
+    leaf_group: Vec<usize>,
+    injector: Option<OverflowInjector>,
     pub step_index: u64,
     pub config: TrainConfig,
     num_shards: usize,
@@ -59,6 +85,7 @@ impl DataParallelTrainer {
         if config.shards == 0 {
             bail!("shards must be ≥ 1");
         }
+        let spec = config.scaling_spec()?;
         let init = store.load(&config.init_artifact())?;
         let grads_artifact = store.load(&config.grads_artifact())?;
         let gm = &grads_artifact.manifest;
@@ -100,7 +127,11 @@ impl DataParallelTrainer {
             },
             &sizes,
         );
-        let scaler = LossScaler::new(config.precision.scaling_config());
+
+        let grange = gm.output_group("grads");
+        let (groups, leaf_group) =
+            derive_groups(gm.outputs[grange].iter().map(|s| s.name.as_str()));
+        let policy = build_policy(&spec, &groups);
 
         let clock = Arc::new(WallClock::new());
         let tracer = Tracer::from_config(
@@ -112,7 +143,11 @@ impl DataParallelTrainer {
             masters,
             master_shapes,
             optimizer,
-            scaler,
+            policy,
+            spec,
+            groups,
+            leaf_group,
+            injector: None,
             step_index: 0,
             num_shards: config.shards,
             config,
@@ -130,6 +165,45 @@ impl DataParallelTrainer {
         &self.grads_artifact.manifest
     }
 
+    /// The scalar scale the compiled graph sees this step.
+    pub fn loss_scale(&self) -> f32 {
+        self.policy.graph_scale()
+    }
+
+    /// The derived per-layer group names (stats/index order).
+    pub fn groups(&self) -> &[String] {
+        &self.groups
+    }
+
+    /// Per-policy-group `(name, scale, skipped)` rows for the
+    /// Prometheus export ([`crate::metrics::train_prometheus`]).
+    pub fn scaling_rows(&self) -> Vec<(String, f32, u64)> {
+        self.policy
+            .groups()
+            .iter()
+            .enumerate()
+            .map(|(g, name)| {
+                (name.clone(), self.policy.scale_of(g), self.policy.skips_of(g))
+            })
+            .collect()
+    }
+
+    /// Install a deterministic overflow schedule (tests / benches).
+    /// A [`OverflowInjector::GroupSpike`] must name a derived group.
+    pub fn set_injector(&mut self, inj: OverflowInjector) -> Result<()> {
+        if let OverflowInjector::GroupSpike { group, .. } = &inj {
+            if !self.groups.iter().any(|g| g == group) {
+                bail!(
+                    "injector targets unknown group {group:?}; model derives \
+                     {:?}",
+                    self.groups
+                );
+            }
+        }
+        self.injector = Some(inj);
+        Ok(())
+    }
+
     /// One data-parallel step over global batch index `index`.
     pub fn step(&mut self, dataset: &SyntheticDataset) -> Result<StepRecord> {
         let t0 = Instant::now();
@@ -139,7 +213,16 @@ impl DataParallelTrainer {
             .batch
             .context("grads artifact missing batch meta")?;
         let global_batch = per_shard_batch * self.num_shards;
-        let scale = self.scaler.scale();
+        let scale = self.policy.graph_scale();
+        // Per-group scales at step entry: the census asks "would this
+        // gradient survive f16 at the scale its group runs at?".
+        let group_scales: Vec<f32> =
+            (0..self.groups.len()).map(|g| self.policy.scale_of(g)).collect();
+        // Policy-group scales (for the trace diff after adjust; the
+        // global policies expose one pseudo-group).
+        let policy_scales: Vec<f32> = (0..self.policy.groups().len())
+            .map(|g| self.policy.scale_of(g))
+            .collect();
 
         let grange = gm.output_group("grads");
         let loss_idx = gm
@@ -155,11 +238,15 @@ impl DataParallelTrainer {
         let masters = &self.masters;
         let shapes = &self.master_shapes;
         let artifact = &self.grads_artifact;
+        let leaf_group = &self.leaf_group;
+        let scales = &group_scales;
+        let num_groups = self.groups.len();
         let index = self.step_index;
         let seed = self.config.seed;
         let n = self.num_shards;
 
-        let shard_results: Vec<Result<(Vec<Vec<f32>>, f32, bool)>> =
+        type ShardOut = (Vec<Vec<f32>>, f32, bool, Vec<GroupStats>);
+        let shard_results: Vec<Result<ShardOut>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..n)
                     .map(|s| {
@@ -209,7 +296,39 @@ impl DataParallelTrainer {
                             let loss = read_scalar_f32(&out[loss_idx])?;
                             let finite =
                                 read_scalar_pred(&out[finite_idx])?;
-                            Ok((grads, loss, finite))
+
+                            // Per-group census over this shard's
+                            // gradients: one fused stats pass + the
+                            // scaled-f16 range census per leaf, at the
+                            // leaf's group scale.
+                            let mut accs: Vec<StatsAcc> = (0..num_groups)
+                                .map(|_| StatsAcc::default())
+                                .collect();
+                            let mut under = vec![0u64; num_groups];
+                            let mut over = vec![0u64; num_groups];
+                            for (i, buf) in grads.iter().enumerate() {
+                                let g = leaf_group[i];
+                                accs[g].feed(buf);
+                                let (u, o) =
+                                    scaled_f16_census(buf, scales[g]);
+                                under[g] += u;
+                                over[g] += o;
+                            }
+                            let stats: Vec<GroupStats> = accs
+                                .into_iter()
+                                .enumerate()
+                                .map(|(g, a)| {
+                                    let s = a.finish();
+                                    GroupStats {
+                                        count: s.count as u64,
+                                        max_abs: s.max_abs,
+                                        underflow: under[g],
+                                        overflow: over[g],
+                                        finite: s.finite,
+                                    }
+                                })
+                                .collect();
+                            Ok((grads, loss, finite, stats))
                         })
                     })
                     .collect();
@@ -222,22 +341,75 @@ impl DataParallelTrainer {
         let mut grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
         let mut losses = Vec::with_capacity(n);
         let mut finites = Vec::with_capacity(n);
+        let mut shard_stats: Vec<Vec<GroupStats>> = Vec::with_capacity(n);
         for r in shard_results {
-            let (g, l, f) = r?;
+            let (g, l, f, st) = r?;
             grads.push(g);
             losses.push(l);
             finites.push(f);
+            shard_stats.push(st);
         }
+
+        // -- merge statistics (every rank computes the same view) -------
+        let mut merged = all_reduce_group_stats(&shard_stats);
+        let step = self.step_index + 1;
+        let mut grads_finite = all_reduce_finite(&finites);
+        // Injected spikes land on the coordinator's merged view —
+        // every rank would fold the identical plan, so determinism
+        // holds.  A spike overflows only if the *targeted group's*
+        // scale pushes it past f16 saturation (scale-conditioned:
+        // this is what separates adaptive from global dynamic under a
+        // recurring spike).
+        if let Some(inj) = &mut self.injector {
+            for (g, magnitude) in inj.spikes(self.step_index, &self.groups) {
+                merged[g].count += 1;
+                if magnitude.is_finite() {
+                    if magnitude > merged[g].max_abs {
+                        merged[g].max_abs = magnitude;
+                    }
+                    if spike_overflows(magnitude, group_scales[g]) {
+                        merged[g].overflow += 1;
+                        grads_finite = false;
+                    }
+                } else {
+                    merged[g].finite = false;
+                    grads_finite = false;
+                }
+            }
+        }
+
+        // -- advance the policy (decides whether the step applies) ------
+        let applied = self.policy.adjust(grads_finite, &merged);
 
         // -- reduce + update --------------------------------------------
         // Non-finite shard gradients may contain inf/nan; the finite
         // flag already tells us, and the mean would poison masters, so
-        // gate the reduce+update on global finiteness (paper §2.1 6a).
-        let step = self.step_index + 1;
+        // gate the reduce+update on global finiteness (paper §2.1 6a —
+        // plus, under adaptive, any group's census overflow).
         let reduce_start = self.clock.now();
-        let grads_finite = all_reduce_finite(&finites);
-        if grads_finite {
+        if applied {
+            // Under the adaptive policy the reduction is staged at
+            // each group's scale (per-layer-scaled f16 transport,
+            // emulated): scale every shard's group-g leaves by S_g,
+            // tree-reduce, unscale the result.  Scales are powers of
+            // two, so the round-trip is exact and the reduced
+            // gradient is bit-identical to the unstaged path — but it
+            // goes through the batch `scale_in_place` kernels, never
+            // a per-element scalar loop.
+            let staged = self.policy.kind() == PolicyKind::Adaptive;
+            if staged {
+                for shard in grads.iter_mut() {
+                    for (i, buf) in shard.iter_mut().enumerate() {
+                        scale_in_place(buf, group_scales[leaf_group[i]]);
+                    }
+                }
+            }
             all_reduce_mean(&mut grads);
+            if staged {
+                for (i, buf) in grads[0].iter_mut().enumerate() {
+                    scale_in_place(buf, 1.0 / group_scales[leaf_group[i]]);
+                }
+            }
             let log_every = self.config.log_every.max(1);
             if (self.step_index + 1) % log_every == 0 {
                 // Gradient health in one read-only fused traversal of
@@ -278,7 +450,7 @@ impl DataParallelTrainer {
                 );
             }
         } else {
-            // Overflow step: one fused scan per poisoned shard says
+            // Skipped step: one fused scan per poisoned shard says
             // *which* shard blew up and how — the §2.1 loss-scaling
             // diagnostic (the buffers are discarded afterwards).
             for (shard, g) in grads.iter().enumerate() {
@@ -302,26 +474,28 @@ impl DataParallelTrainer {
                 );
             }
         }
-        let applied = self.scaler.adjust(grads_finite);
-        debug_assert_eq!(applied, grads_finite);
-        let new_scale = self.scaler.scale();
         if let Some(t) = &self.tracer {
-            // `scale` is the pre-adjust value read at the top of step.
-            if new_scale != scale {
-                t.instant(
-                    SpanKind::LossScale,
-                    t.now(),
-                    scale.to_bits() as u64,
-                    new_scale.to_bits() as u64,
-                    (new_scale > scale) as u64,
-                );
+            // One instant per policy group whose scale moved; `c`
+            // packs `grew | (group_idx << 1)`, so the global policies
+            // (group 0) emit exactly the values they always did.
+            for (g, &old) in policy_scales.iter().enumerate() {
+                let new = self.policy.scale_of(g);
+                if new != old {
+                    t.instant(
+                        SpanKind::LossScale,
+                        t.now(),
+                        old.to_bits() as u64,
+                        new.to_bits() as u64,
+                        (new > old) as u64 | ((g as u64) << 1),
+                    );
+                }
             }
             t.record(
                 SpanKind::TrainStep,
                 span_start,
                 t.now(),
                 step,
-                grads_finite as u64,
+                applied as u64,
                 0,
             );
         }
@@ -330,8 +504,8 @@ impl DataParallelTrainer {
         Ok(StepRecord {
             step: self.step_index,
             loss: mean_loss(&losses),
-            grads_finite,
-            loss_scale: self.scaler.scale(),
+            grads_finite: applied,
+            loss_scale: self.policy.graph_scale(),
             step_time: t0.elapsed(),
         })
     }
@@ -358,6 +532,94 @@ impl DataParallelTrainer {
             }
             metrics.record(rec)?;
         }
+        Ok(())
+    }
+
+    // -- checkpointing ---------------------------------------------------
+    //
+    // The DDP trainer's persistent state is host-side (the fused
+    // trainer's lives in artifact leaves): masters, AdamW moments +
+    // step, and the policy's per-group scaler record.  Masters and
+    // moments serialize as synthetic f32 leaves named after the
+    // grads-manifest params; the scaler record is the checkpoint
+    // schema v2 section.
+
+    fn checkpoint_specs(&self) -> Vec<LeafSpec> {
+        let gm = &self.grads_artifact.manifest;
+        let prange = gm.input_group("params");
+        let mut specs = Vec::with_capacity(3 * self.masters.len() + 1);
+        for spec in &gm.inputs[prange.clone()] {
+            specs.push(spec.clone());
+        }
+        for prefix in ["opt.mu", "opt.nu"] {
+            for spec in &gm.inputs[prange.clone()] {
+                let bare =
+                    spec.name.strip_prefix("params.").unwrap_or(&spec.name);
+                specs.push(LeafSpec {
+                    name: format!("{prefix}.{bare}"),
+                    dtype: DType::F32,
+                    shape: spec.shape.clone(),
+                    group: "opt".to_string(),
+                    trainable: false,
+                });
+            }
+        }
+        specs.push(LeafSpec {
+            name: "opt_state.t".to_string(),
+            dtype: DType::S32,
+            shape: vec![],
+            group: "opt_state".to_string(),
+            trainable: false,
+        });
+        specs
+    }
+
+    /// Save masters + optimizer + scaler record (schema v2).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let specs = self.checkpoint_specs();
+        let (opt_step, mu, nu) = self.optimizer.state();
+        let mut leaves: Vec<Value> =
+            Vec::with_capacity(3 * self.masters.len() + 1);
+        for (buf, shape) in self.masters.iter().zip(&self.master_shapes) {
+            leaves.push(lit_f32(shape, buf)?);
+        }
+        for moments in [mu, nu] {
+            for (buf, shape) in moments.iter().zip(&self.master_shapes) {
+                leaves.push(lit_f32(shape, buf)?);
+            }
+        }
+        leaves.push(lit_scalar_i32(opt_step as i32));
+        super::checkpoint::save(
+            path,
+            self.step_index,
+            &specs,
+            &leaves,
+            &self.policy.snapshot(),
+        )
+    }
+
+    /// Resume from a checkpoint written by [`save_checkpoint`] (or a
+    /// v1 file, whose global scaler record fans out per group when
+    /// the configured policy is adaptive).
+    ///
+    /// [`save_checkpoint`]: DataParallelTrainer::save_checkpoint
+    pub fn resume(&mut self, path: &str) -> Result<()> {
+        let specs = self.checkpoint_specs();
+        let (step, leaves, scaler) = super::checkpoint::load(path, &specs)?;
+        let np = self.masters.len();
+        for (i, buf) in self.masters.iter_mut().enumerate() {
+            *buf = read_f32(&leaves[i])?;
+        }
+        let mu = (0..np)
+            .map(|i| read_f32(&leaves[np + i]))
+            .collect::<Result<Vec<_>>>()?;
+        let nu = (0..np)
+            .map(|i| read_f32(&leaves[2 * np + i]))
+            .collect::<Result<Vec<_>>>()?;
+        let opt_step = read_scalar_i32(&leaves[3 * np])? as u64;
+        self.optimizer.set_state(opt_step, mu, nu);
+        self.policy = restore_policy(&self.spec, &self.groups, &scaler)?;
+        self.step_index = step;
         Ok(())
     }
 }

@@ -44,7 +44,25 @@ pub struct FusedTrainer {
 
 impl FusedTrainer {
     /// Load artifacts and run the in-graph initializer.
+    ///
+    /// The scaling state machine is baked into the compiled step at
+    /// AOT time, so the configured policy must be exactly what the
+    /// graph implements — anything else (an `adaptive` policy, tweaked
+    /// dynamic knobs) is refused here with a pointer at `train-ddp`,
+    /// which owns its policy host-side, rather than silently running
+    /// the artifact's built-in machine under a different name.
     pub fn new(store: &mut ArtifactStore, config: TrainConfig) -> Result<Self> {
+        let spec = config.scaling_spec()?;
+        if !spec.matches_compiled(config.precision.is_f16()) {
+            bail!(
+                "the fused step artifact for precision \"{}\" implements \
+                 only its compiled-in scaling machine; the configured \
+                 policy \"{}\" cannot run in-graph — use `mpx train-ddp`, \
+                 which owns the scaling policy host-side",
+                config.precision.tag(),
+                spec.kind.tag(),
+            );
+        }
         let init = store.load(&config.init_artifact())?;
         let step_artifact = store.load(&config.step_artifact())?;
 

@@ -1,0 +1,234 @@
+//! Adaptive per-layer loss scaling, end to end over the real
+//! `vit_tiny` artifacts: the acceptance run from the issue.  A
+//! deterministic injector lands a recurring gradient spike in one
+//! layer group; the per-layer adaptive policy must finish with
+//! strictly fewer skipped steps than the global dynamic policy — and
+//! train at least as well — because it backs the spiked group off
+//! once and pins it there (headroom gate), while global dynamic
+//! re-grows into the spike every period.
+//!
+//! No sleeps, no randomness outside the seeded dataset/injector: both
+//! runs are pure functions of (seed, schedule).
+
+use mpx::config::{model_preset, Precision, TrainConfig};
+use mpx::data::SyntheticDataset;
+use mpx::metrics::RunMetrics;
+use mpx::scaling::{
+    AdaptiveTuning, OverflowInjector, PolicyKind, ScalingConfig,
+    ScalingPolicy, ScalingSpec,
+};
+use mpx::trainer::DataParallelTrainer;
+
+mod common;
+use common::store;
+
+/// Short growth period so both policies cycle their state machines
+/// many times inside a ~90-step run.
+fn spec(kind: PolicyKind) -> ScalingSpec {
+    ScalingSpec {
+        kind,
+        base: ScalingConfig { period: 5, ..Default::default() },
+        tuning: AdaptiveTuning::default(),
+    }
+}
+
+fn config(kind: PolicyKind) -> TrainConfig {
+    TrainConfig {
+        model: "vit_tiny".into(),
+        precision: Precision::MixedF16,
+        batch: 8,
+        shards: 2,
+        seed: 3,
+        log_every: 10_000,
+        scaling: Some(spec(kind)),
+        ..Default::default()
+    }
+}
+
+/// Spike |g| = 64 in `blocks[0]` every 5 steps.  Scale-conditioned:
+/// overflows while the group's scale is ≥ 1024 (64·1024 ≥ 65520),
+/// harmless at ≤ 512.
+fn injector() -> OverflowInjector {
+    OverflowInjector::GroupSpike {
+        group: "blocks[0]".into(),
+        steps: (0..90).step_by(5).collect(),
+        magnitude: 64.0,
+    }
+}
+
+#[test]
+fn adaptive_outruns_global_dynamic_under_recurring_spike() {
+    let Some(mut store) = store() else { return };
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+    let steps = 90;
+
+    let mut dynamic =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Dynamic))
+            .unwrap();
+    dynamic.set_injector(injector()).unwrap();
+    let mut md = RunMetrics::new();
+    dynamic.run(&dataset, steps, &mut md).unwrap();
+
+    let mut adaptive =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Adaptive))
+            .unwrap();
+    adaptive.set_injector(injector()).unwrap();
+    let mut ma = RunMetrics::new();
+    adaptive.run(&dataset, steps, &mut ma).unwrap();
+
+    // The headline: strictly fewer skipped steps.  Dynamic descends
+    // 32768 → 512 (6 skips) and then re-grows into the spike every
+    // other interval; adaptive pays the descent once and converges.
+    assert!(
+        ma.skipped_steps() < md.skipped_steps(),
+        "adaptive skipped {} vs dynamic {}",
+        ma.skipped_steps(),
+        md.skipped_steps()
+    );
+    // And it trains at least as well (more applied optimizer steps).
+    let la = ma.recent_loss(10).unwrap();
+    let ld = md.recent_loss(10).unwrap();
+    assert!(la.is_finite() && ld.is_finite());
+    assert!(
+        la <= ld + 0.05 * ld.abs().max(1.0),
+        "adaptive final loss {la} worse than dynamic {ld}"
+    );
+    // The targeted group ended below the spike-overflow boundary; the
+    // graph scale follows the most constrained group.
+    let b0 = adaptive
+        .groups()
+        .iter()
+        .position(|g| g == "blocks[0]")
+        .unwrap();
+    assert!(
+        adaptive.policy.scale_of(b0) <= 512.0,
+        "spiked group at {}",
+        adaptive.policy.scale_of(b0)
+    );
+    assert!(adaptive.loss_scale() <= adaptive.policy.scale_of(b0));
+    // Dynamic's single global scale was dragged down for every layer.
+    assert_eq!(dynamic.policy.groups().len(), 1);
+}
+
+#[test]
+fn injector_rejects_unknown_group() {
+    let Some(mut store) = store() else { return };
+    let mut t =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Adaptive))
+            .unwrap();
+    let err = t
+        .set_injector(OverflowInjector::GroupSpike {
+            group: "no_such_layer".into(),
+            steps: vec![0],
+            magnitude: 64.0,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown group"), "{err}");
+    // The derived groups are real layer names.
+    assert!(t.groups().iter().any(|g| g.starts_with("blocks")), "{:?}", t.groups());
+}
+
+#[test]
+fn ddp_checkpoint_roundtrip_resumes_bit_identically() {
+    // Schema v2 round-trip through the adaptive policy: masters,
+    // AdamW moments, and the per-group scaler record all restore, and
+    // the resumed trajectory is bit-identical to the uninterrupted one.
+    let Some(mut store) = store() else { return };
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+
+    let dir = std::env::temp_dir().join("mpx_adaptive_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    let path = path.to_str().unwrap().to_string();
+
+    let mut t =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Adaptive))
+            .unwrap();
+    let mut m = RunMetrics::new();
+    t.run(&dataset, 10, &mut m).unwrap();
+    t.save_checkpoint(&path).unwrap();
+    let saved_rows = t.scaling_rows();
+
+    // continue the original
+    let mut m1 = RunMetrics::new();
+    t.run(&dataset, 5, &mut m1).unwrap();
+
+    // restore into a fresh trainer and continue
+    let mut t2 =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Adaptive))
+            .unwrap();
+    t2.resume(&path).unwrap();
+    assert_eq!(t2.step_index, 10);
+    assert_eq!(t2.scaling_rows().len(), saved_rows.len());
+    for ((name, scale, _), (name2, scale2, _)) in
+        saved_rows.iter().zip(t2.scaling_rows())
+    {
+        assert_eq!(*name, name2);
+        assert_eq!(scale.to_bits(), scale2.to_bits(), "scale for {name}");
+    }
+    for (a, b) in t.masters.iter().zip(&t2.masters) {
+        // t has advanced 5 steps past the checkpoint; compare t2
+        // against the checkpointed state indirectly by replaying.
+        assert_eq!(a.len(), b.len());
+    }
+    let mut m2 = RunMetrics::new();
+    t2.run(&dataset, 5, &mut m2).unwrap();
+    for (a, b) in m1.records.iter().zip(&m2.records) {
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "resume diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.loss_scale.to_bits(), b.loss_scale.to_bits());
+        assert_eq!(a.grads_finite, b.grads_finite);
+    }
+    for (a, b) in t.masters.iter().zip(&t2.masters) {
+        assert_eq!(a, b, "master weights diverged after resume");
+    }
+}
+
+#[test]
+fn global_scaler_record_fans_out_into_adaptive_on_resume() {
+    // The v1-migration path exercised through the trainer: a
+    // checkpoint holding a single global scaler record (what a v1
+    // file migrates to, and what the dynamic policy writes) resumes
+    // into an adaptive run by fanning the global scale out to every
+    // layer group.
+    let Some(mut store) = store() else { return };
+    let preset = model_preset("vit_tiny").unwrap();
+    let dataset = SyntheticDataset::new(&preset, 3);
+
+    let dir = std::env::temp_dir().join("mpx_adaptive_ckpt_fanout");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    let path = path.to_str().unwrap().to_string();
+
+    let mut dynamic =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Dynamic))
+            .unwrap();
+    let mut m = RunMetrics::new();
+    dynamic.run(&dataset, 8, &mut m).unwrap();
+    let global_scale = dynamic.loss_scale();
+    dynamic.save_checkpoint(&path).unwrap();
+
+    let mut adaptive =
+        DataParallelTrainer::new(&mut store, config(PolicyKind::Adaptive))
+            .unwrap();
+    adaptive.resume(&path).unwrap();
+    assert_eq!(adaptive.step_index, 8);
+    assert!(adaptive.policy.groups().len() > 1);
+    for g in 0..adaptive.policy.groups().len() {
+        assert_eq!(
+            adaptive.policy.scale_of(g).to_bits(),
+            global_scale.to_bits(),
+            "group {g} did not inherit the global scale"
+        );
+    }
+    // And it keeps training from there.
+    let mut m2 = RunMetrics::new();
+    adaptive.run(&dataset, 3, &mut m2).unwrap();
+    assert!(m2.records.iter().all(|r| r.loss.is_finite()));
+}

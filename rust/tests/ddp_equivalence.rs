@@ -104,7 +104,7 @@ fn fp32_ddp_never_skips() {
     let mut m = RunMetrics::new();
     t.run(&dataset, 10, &mut m).unwrap();
     assert_eq!(m.skipped_steps(), 0);
-    assert_eq!(t.scaler.scale(), 1.0);
+    assert_eq!(t.loss_scale(), 1.0);
 }
 
 #[test]
@@ -125,6 +125,6 @@ fn scaler_recovers_after_natural_overflow() {
     assert!(m.records.iter().all(|r| r.loss.is_finite()));
     assert!(m.recent_loss(5).unwrap() < m.records[0].loss * 0.6);
     if m.skipped_steps() > 0 {
-        assert!(t.scaler.scale() < 32768.0);
+        assert!(t.loss_scale() < 32768.0);
     }
 }

@@ -167,7 +167,7 @@ fn checkpoint_roundtrip_resumes_identically() {
     let path = path.to_str().unwrap().to_string();
     let specs =
         trainer.manifest().inputs[..trainer.state().len()].to_vec();
-    checkpoint::save(&path, trainer.step_index, &specs, trainer.state())
+    checkpoint::save(&path, trainer.step_index, &specs, trainer.state(), &[])
         .unwrap();
 
     // continue original
@@ -176,7 +176,7 @@ fn checkpoint_roundtrip_resumes_identically() {
 
     // restore into a fresh trainer and continue — identical losses
     let mut trainer2 = FusedTrainer::new(&mut store, cfg).unwrap();
-    let (step, leaves) = checkpoint::load(&path, &specs).unwrap();
+    let (step, leaves, _scaler) = checkpoint::load(&path, &specs).unwrap();
     trainer2.set_state(leaves).unwrap();
     trainer2.step_index = step;
     let mut m2 = RunMetrics::new();
@@ -198,7 +198,7 @@ fn checkpoint_rejects_wrong_manifest() {
     let dir = std::env::temp_dir().join("mpx_ckpt_test2");
     let path = dir.join("t.ckpt");
     let path = path.to_str().unwrap().to_string();
-    checkpoint::save(&path, 1, &specs, trainer.state()).unwrap();
+    checkpoint::save(&path, 1, &specs, trainer.state(), &[]).unwrap();
 
     let mut wrong = specs.clone();
     wrong[0].shape = vec![99, 99];
